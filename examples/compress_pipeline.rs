@@ -1,0 +1,52 @@
+//! The full compression pipeline on a trained model: SVD-LLM vs MPIFA vs
+//! the Table 5 ablation arms, at one density.
+//!
+//! ```bash
+//! PIFA_FAST=1 cargo run --release --example compress_pipeline
+//! ```
+//!
+//! Trains (or loads the cached) tiny-s stand-in, compresses it with each
+//! method at 60% density, and prints perplexities + achieved densities —
+//! a one-screen miniature of Tables 2/5.
+
+use pifa::bench::experiments::{
+    compress_with_method, ensure_trained_model, test_ppl, wiki_dataset, Method,
+};
+
+fn main() -> anyhow::Result<()> {
+    let data = wiki_dataset();
+    let model = ensure_trained_model("tiny-s")?;
+    let base = test_ppl(&model, &data);
+    println!("tiny-s dense: test ppl {base:.3}\n");
+    println!(
+        "{:<10} {:>10} {:>10} {:>8} {:>9}",
+        "method", "ppl", "gap", "density", "seconds"
+    );
+
+    let density = 0.6;
+    for method in [
+        Method::Svd,
+        Method::Asvd,
+        Method::SvdLlmW,
+        Method::SvdLlmWU,
+        Method::WPlusM,
+        Method::Mpifa,
+    ] {
+        let t0 = std::time::Instant::now();
+        let compressed = compress_with_method(&model, &data, method, density)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let ppl = test_ppl(&compressed, &data);
+        println!(
+            "{:<10} {:>10.3} {:>10.3} {:>8.3} {:>8.1}s",
+            method.name(),
+            ppl,
+            ppl - base,
+            compressed.density(),
+            secs
+        );
+    }
+    println!(
+        "\nExpected ordering (paper Tables 2/5): SVD >> ASVD >= W >= W+U > W+M > MPIFA"
+    );
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Perf probe (EXPERIMENTS.md §Perf): measures the L3 GEMM roofline on
+//! this machine and the PJRT dispatch overhead that bounds the serving
+//! path at tiny-model scale.
+//!
+//! ```bash
+//! cargo run --release --example perf_probe
+//! ```
+
+use pifa::bench::harness::bench_fn;
+use pifa::linalg::{matmul, matmul_nt, Mat, Rng};
+use pifa::pifa::{pivoting_factorization, rank_for_density_pifa, PivotStrategy};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(777);
+    println!("== L3 GEMM roofline (f32, 1 thread unless auto-par kicks in) ==");
+    for &d in &[128usize, 256, 512, 1024] {
+        let a: Mat<f32> = Mat::randn(d, d, &mut rng);
+        let b: Mat<f32> = Mat::randn(d, d, &mut rng);
+        let r = bench_fn(&format!("gemm{d}"), 2, 7, || {
+            let _ = matmul(&a, &b);
+        });
+        let gflops = 2.0 * (d as f64).powi(3) / r.median_secs() / 1e9;
+        println!("  {d:>5}x{d:<5} {:>9.2} ms   {gflops:>6.2} GFLOP/s", r.median_ms());
+    }
+
+    println!("\n== PIFA layer vs dense layer (d=1024, tokens=128, rho=0.55) ==");
+    let d = 1024;
+    let tkn = 128;
+    let x: Mat<f32> = Mat::randn(tkn, d, &mut rng);
+    let w: Mat<f32> = Mat::randn(d, d, &mut rng);
+    let t_dense = bench_fn("dense", 2, 7, || {
+        let _ = matmul_nt(&x, &w);
+    });
+    let r = rank_for_density_pifa(d, d, 0.55);
+    let wl: Mat<f32> = Mat::rand_low_rank(d, d, r, &mut rng);
+    let layer = pivoting_factorization(&wl, r, PivotStrategy::QrColumnPivot)?;
+    let t_pifa = bench_fn("pifa", 2, 7, || {
+        let _ = layer.apply_rows(&x);
+    });
+    println!(
+        "  dense {:.2} ms | PIFA {:.2} ms | speedup {:.2}x (FLOP-ideal {:.2}x)",
+        t_dense.median_ms(),
+        t_pifa.median_ms(),
+        t_dense.median_secs() / t_pifa.median_secs(),
+        (2.0 * (d * d) as f64) / (2.0 * r as f64 * (2 * d - r) as f64)
+    );
+
+    // PJRT dispatch overhead: smallest artifact, repeated execution.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        println!("\n== PJRT dispatch overhead (layer_dense_d256_t256) ==");
+        let mut engine = pifa::runtime::Engine::new(&dir)?;
+        let x = vec![0.1f32; 256 * 256];
+        let w = vec![0.1f32; 256 * 256];
+        let args = vec![
+            pifa::runtime::loader::literal_f32(&x, &[256, 256])?,
+            pifa::runtime::loader::literal_f32(&w, &[256, 256])?,
+        ];
+        let r = bench_fn("pjrt", 3, 15, || {
+            let _ = engine.run("layer_dense_d256_t256", &args).unwrap();
+        });
+        let flops = 2.0 * 256f64 * 256.0 * 256.0;
+        println!(
+            "  per-call {:.3} ms ({:.2} GFLOP/s incl. host<->device copies)",
+            r.median_ms(),
+            flops / r.median_secs() / 1e9
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Train the tiny-s stand-in from scratch and log the loss curve
+//! (the training half of the end-to-end validation; the curve is recorded
+//! in EXPERIMENTS.md).
+//!
+//! ```bash
+//! cargo run --release --example train_tiny [-- steps]
+//! ```
+
+use pifa::bench::experiments::{wiki_dataset, SEQ_LEN};
+use pifa::data::batch::Split;
+use pifa::data::corpus::unigram_ppl;
+use pifa::eval::ppl::perplexity;
+use pifa::linalg::Rng;
+use pifa::model::config::ModelConfig;
+use pifa::model::transformer::Transformer;
+use pifa::train::trainer::{train, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let data = wiki_dataset();
+    let cfg = ModelConfig::tiny_s();
+    let mut rng = Rng::new(42);
+    let mut model = Transformer::new_random(&cfg, &mut rng);
+    println!(
+        "training {} ({} params, seq {}) for {steps} steps",
+        cfg.name,
+        cfg.param_count(),
+        SEQ_LEN
+    );
+    let ppl0 = perplexity(&model, &data, Split::Val);
+    println!("initial val ppl: {ppl0:.1}");
+
+    let tc = TrainConfig { steps, log_every: 25, ..TrainConfig::default() };
+    let report = train(&mut model, &data, &tc);
+
+    let ppl1 = perplexity(&model, &data, Split::Test);
+    let uni = unigram_ppl(&data.tokens, cfg.vocab);
+    println!("\nloss curve (step, batch loss):");
+    for (s, l) in &report.losses {
+        println!("  {s:>5}  {l:.4}");
+    }
+    // Persist the curve for EXPERIMENTS.md.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir).ok();
+    let csv: String = std::iter::once("step,loss".to_string())
+        .chain(report.losses.iter().map(|(s, l)| format!("{s},{l}")))
+        .collect::<Vec<_>>()
+        .join("\n");
+    std::fs::write(dir.join("train_loss_tiny_s.csv"), csv)?;
+    println!(
+        "\nfinal: test ppl {ppl1:.2} (unigram baseline {uni:.1}), {:.1}s total",
+        report.elapsed_secs
+    );
+    anyhow::ensure!(ppl1 < uni, "model must beat the unigram baseline");
+    println!("wrote results/train_loss_tiny_s.csv");
+    Ok(())
+}

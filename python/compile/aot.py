@@ -1,0 +1,198 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs into ``artifacts/``:
+  * ``<name>.hlo.txt``  — one per artifact
+  * ``manifest.txt``    — machine-readable index (parsed by
+    ``rust/src/runtime/manifest.rs``): model configs, parameter order,
+    input/output shapes. Plain text, line-oriented, no JSON dependency.
+
+Run once per build (``make artifacts``); python never runs at serving time.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default HLO printer elides big
+    # literals as "{...}", which the text parser then silently zeroes —
+    # the RoPE tables and causal mask are such constants.
+    return comp.as_hlo_text(True)
+
+
+def dtype_tag(x) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(x.dtype)]
+
+
+class Manifest:
+    def __init__(self):
+        self.lines = []
+
+    def add(self, line: str):
+        self.lines.append(line)
+
+    def write(self, path: str):
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def lower_model_artifact(man: Manifest, outdir: str, preset: str, flavour: str,
+                         density: float, phase: str, batch: int, seq: int):
+    cfg = M.PRESETS[preset]
+    plan = M.make_plan(cfg, flavour, density)
+    params = M.example_params(cfg, plan)
+    spec = M.param_spec(cfg, plan)
+
+    if phase == "prefill":
+        fn = M.make_prefill(cfg, plan, batch, seq)
+        tokens = jnp.zeros((batch, seq), jnp.int32)
+        extra = [("tokens", tokens)]
+    else:
+        fn = M.make_decode(cfg, plan, batch)
+        kv_k = jnp.zeros((cfg.n_layers, batch, cfg.max_seq, cfg.dim), jnp.float32)
+        kv_v = jnp.zeros_like(kv_k)
+        tokens = jnp.zeros((batch,), jnp.int32)
+        pos = jnp.zeros((), jnp.int32)
+        extra = [("kv_k", kv_k), ("kv_v", kv_v), ("tokens", tokens), ("pos", pos)]
+
+    args = list(params) + [a for _, a in extra]
+    lowered = jax.jit(fn).lower(*args)
+    hlo = to_hlo_text(lowered)
+    name = f"{preset}_{flavour}{'' if flavour == 'dense' else f'{int(density * 100)}'}_{phase}_b{batch}"
+    if phase == "prefill":
+        name += f"_t{seq}"
+    path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(hlo)
+
+    man.add(f"artifact {name}")
+    man.add(
+        f"model {preset} vocab {cfg.vocab} dim {cfg.dim} layers {cfg.n_layers} "
+        f"heads {cfg.n_heads} ffn {cfg.ffn_hidden} maxseq {cfg.max_seq}"
+    )
+    man.add(f"flavour {flavour} density {density}")
+    man.add(f"phase {phase} batch {batch} seq {seq if phase == 'prefill' else 1}")
+    for (pname, shape, dt) in spec:
+        man.add(f"param {pname} {dt} {' '.join(str(d) for d in shape)}")
+    for ename, arr in extra:
+        man.add(f"input {ename} {dtype_tag(arr)} {' '.join(str(d) for d in arr.shape)}")
+    man.add("end")
+    print(f"  wrote {path} ({len(hlo)} chars)")
+
+
+def lower_layer_bench(man: Manifest, outdir: str, kind: str, d: int, tokens: int,
+                      density: float):
+    """Single-layer microbench graphs for Figure 7 / Table 6 CPU timings."""
+    if kind == "dense":
+        w = jnp.zeros((d, d), jnp.float32)
+        fn = lambda x, w: (jnp.matmul(x, w.T),)
+        args = [jnp.zeros((tokens, d), jnp.float32), w]
+        inputs = [("x", args[0]), ("w", args[1])]
+    elif kind == "lowrank":
+        r = M.rank_lowrank(d, d, density)
+        u = jnp.zeros((d, r), jnp.float32)
+        vt = jnp.zeros((r, d), jnp.float32)
+        fn = lambda x, u, vt: (jnp.matmul(jnp.matmul(x, vt.T), u.T),)
+        args = [jnp.zeros((tokens, d), jnp.float32), u, vt]
+        inputs = [("x", args[0]), ("u", u), ("vt", vt)]
+    elif kind == "pifa":
+        r = M.rank_pifa(d, d, density)
+        w_p = jnp.zeros((r, d), jnp.float32)
+        c = jnp.zeros((d - r, r), jnp.float32)
+        inv = jnp.zeros((d,), jnp.int32)
+
+        def fn(x, w_p, c, inv):
+            y_p = jnp.matmul(x, w_p.T)
+            y_np = jnp.matmul(y_p, c.T)
+            y = jnp.concatenate([y_p, y_np], axis=-1)
+            return (jnp.take(y, inv, axis=-1),)
+
+        args = [jnp.zeros((tokens, d), jnp.float32), w_p, c, inv]
+        inputs = [("x", args[0]), ("w_p", w_p), ("c", c), ("inv_perm", inv)]
+    else:
+        raise ValueError(kind)
+
+    lowered = jax.jit(fn).lower(*args)
+    hlo = to_hlo_text(lowered)
+    name = f"layer_{kind}_d{d}_t{tokens}"
+    if kind != "dense":
+        name += f"_rho{int(density * 100)}"
+    path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(hlo)
+    man.add(f"artifact {name}")
+    man.add(f"layerbench {kind} d {d} tokens {tokens} density {density}")
+    for ename, arr in inputs:
+        man.add(f"input {ename} {dtype_tag(arr)} {' '.join(str(dd) for dd in arr.shape)}")
+    man.add("end")
+    print(f"  wrote {path} ({len(hlo)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="only the artifacts the tests need")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    man = Manifest()
+
+    print("[aot] lowering model artifacts")
+    model_grid = [
+        # (preset, flavour, density, phase, batch, seq)
+        ("tiny-s", "dense", 0.0, "prefill", 1, 64),
+        ("tiny-s", "dense", 0.0, "decode", 1, 0),
+        ("tiny-s", "pifa", 0.55, "prefill", 1, 64),
+        ("tiny-s", "pifa", 0.55, "decode", 1, 0),
+        ("tiny-s", "lowrank", 0.55, "decode", 1, 0),
+    ]
+    if not args.fast:
+        model_grid += [
+            ("tiny-s", "dense", 0.0, "decode", 8, 0),
+            ("tiny-s", "pifa", 0.55, "decode", 8, 0),
+            ("tiny-s", "lowrank", 0.55, "prefill", 1, 64),
+            ("tiny-l", "dense", 0.0, "prefill", 1, 64),
+            ("tiny-l", "dense", 0.0, "decode", 1, 0),
+            ("tiny-l", "pifa", 0.55, "prefill", 1, 64),
+            ("tiny-l", "pifa", 0.55, "decode", 1, 0),
+            ("tiny-l", "dense", 0.0, "decode", 8, 0),
+            ("tiny-l", "pifa", 0.55, "decode", 8, 0),
+        ]
+    for row in model_grid:
+        lower_model_artifact(man, args.out, *row)
+
+    print("[aot] lowering layer microbenches")
+    bench_grid = [("dense", 0.0), ("lowrank", 0.55), ("pifa", 0.55)]
+    dims = [256, 512] if args.fast else [256, 512, 1024, 2048]
+    for d in dims:
+        for kind, rho in bench_grid:
+            lower_layer_bench(man, args.out, kind, d, 256, rho)
+    # Figure 7 rank sweep at a fixed dim.
+    if not args.fast:
+        for rho in [0.3, 0.5, 0.7, 0.9]:
+            lower_layer_bench(man, args.out, "pifa", 1024, 256, rho)
+            lower_layer_bench(man, args.out, "lowrank", 1024, 256, rho)
+
+    man.write(os.path.join(args.out, "manifest.txt"))
+    print(f"[aot] manifest: {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,142 @@
+"""L1 — Pallas kernels for the paper's compute hot-spot.
+
+Two kernels:
+
+* :func:`matmul` — a tiled, K-accumulating matmul. Block shapes are chosen
+  for the TPU MXU (multiples of 128 when the problem allows; see
+  DESIGN.md §Hardware-Adaptation) with a VMEM f32 accumulator scratch.
+* :func:`pifa_forward` — the PIFA layer (paper Algorithm 2): two
+  back-to-back tiled GEMMs (``Y_p = X W_p^T`` then ``Y_np = Y_p C^T``)
+  plus a permutation epilogue that interleaves pivot / non-pivot output
+  channels. The GEMMs run as Pallas kernels; the gather epilogue lowers
+  to a single XLA gather fused into the surrounding graph.
+
+All kernels run ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute. Correctness is asserted
+against ``ref.py``; TPU performance is *estimated* from the BlockSpec
+VMEM footprint (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles; shrunk when the problem is smaller.
+DEF_BM = 128
+DEF_BN = 128
+DEF_BK = 128
+
+
+def _block(dim, pref):
+    """Largest divisor of ``dim`` that is <= pref (keeps grids exact)."""
+    b = min(pref, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+# The scratch-shape API moved across JAX versions; resolve it once.
+def _vmem(shape, dtype):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover - fallback for older layouts
+        return pl.VMEM(shape, dtype)  # type: ignore[attr-defined]
+
+
+def matmul(x, w, *, bm=DEF_BM, bn=DEF_BN, bk=DEF_BK):
+    """Tiled Pallas matmul ``x @ w`` with f32 VMEM accumulation.
+
+    Shapes: x (M, K), w (K, N) -> (M, N). Block sizes are clipped to exact
+    divisors of each dim so the grid tiles the problem exactly.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul: inner dims {k} != {k2}"
+    bm = _block(m, bm)
+    bn = _block(n, bn)
+    bk = _block(k, bk)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[_vmem((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w)
+
+
+def linear_dense(x, w):
+    """Dense linear ``y = x @ w.T`` via the Pallas matmul."""
+    return matmul(x, w.T)
+
+
+def linear_lowrank(x, u, vt):
+    """Low-rank linear ``y = (x @ vt.T) @ u.T`` via two Pallas matmuls."""
+    z = matmul(x, vt.T)
+    return matmul(z, u.T)
+
+
+def pifa_forward(x, w_p, c, inv_perm):
+    """PIFA layer forward (Algorithm 2): two Pallas GEMMs + gather epilogue.
+
+    Args:
+      x: (b, n) activations.
+      w_p: (r, n) pivot rows.
+      c: (m - r, r) coefficients.
+      inv_perm: (m,) int32 gather indices into concat([y_p, y_np], -1).
+
+    Returns:
+      (b, m) output.
+    """
+    y_p = matmul(x, w_p.T)        # (b, r)      2 b r n FLOPs
+    y_np = matmul(y_p, c.T)       # (b, m - r)  2 b r (m - r) FLOPs
+    y_cat = jnp.concatenate([y_p, y_np], axis=-1)
+    # Permutation epilogue: one gather, fused by XLA into the consumer.
+    return jnp.take(y_cat, inv_perm, axis=-1)
+
+
+def vmem_bytes(bm, bn, bk, dtype_bytes=4):
+    """VMEM footprint of one grid step of the matmul kernel (perf model).
+
+    x-tile + w-tile + out-tile + f32 accumulator.
+    """
+    return (bm * bk + bk * bn) * dtype_bytes + bm * bn * dtype_bytes + bm * bn * 4
+
+
+def mxu_utilization_estimate(m, n, k, bm=DEF_BM, bn=DEF_BN, bk=DEF_BK):
+    """Fraction of MXU-aligned work: how much of each tile dimension is a
+    multiple of the 128-wide systolic array (perf model for DESIGN.md §7)."""
+    bm = _block(m, bm)
+    bn = _block(n, bn)
+    bk = _block(k, bk)
+    def frac(b):
+        return min(b, 128) / 128.0
+    return frac(bm) * frac(bn) * frac(bk)

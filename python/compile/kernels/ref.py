@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (``python/tests/test_kernels.py``) sweeps shapes/dtypes with
+hypothesis and asserts allclose between the kernel (interpret=True) and
+these functions.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain ``x @ w`` with float32 accumulation."""
+    out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def linear_dense_ref(x, w):
+    """Transformer-layout dense linear: ``y = x @ w.T`` (w is (m, n))."""
+    return matmul_ref(x, w.T)
+
+
+def linear_lowrank_ref(x, u, vt):
+    """Low-rank linear: ``y = x @ (u @ vt).T = (x @ vt.T) @ u.T``."""
+    z = matmul_ref(x, vt.T)
+    return matmul_ref(z, u.T)
+
+
+def pifa_ref(x, w_p, c, inv_perm):
+    """PIFA layer (paper Algorithm 2) in transformer layout.
+
+    Args:
+      x: (b, n) input.
+      w_p: (r, n) pivot-row matrix.
+      c: (m - r, r) coefficient matrix.
+      inv_perm: (m,) int32; output column i reads
+        ``concat([y_p, y_np])[inv_perm[i]]``.
+
+    Returns:
+      (b, m) output equal to ``x @ W'.T`` for the reconstructed W'.
+    """
+    y_p = matmul_ref(x, w_p.T)            # (b, r)
+    y_np = matmul_ref(y_p, c.T)           # (b, m - r)
+    y_cat = jnp.concatenate([y_p, y_np], axis=-1)
+    return jnp.take(y_cat, inv_perm, axis=-1)
+
+
+def pifa_reconstruct_ref(w_p, c, inv_perm):
+    """Materialize W' (m, n) from PIFA components — test helper."""
+    w_cat = jnp.concatenate([w_p, jnp.matmul(c, w_p)], axis=0)
+    return jnp.take(w_cat, inv_perm, axis=0)

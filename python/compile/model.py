@@ -1,0 +1,312 @@
+"""L2 — the tiny-LLaMA forward in JAX, calling the L1 Pallas kernels.
+
+Mirrors ``rust/src/model/transformer.rs`` exactly (RMSNorm -> RoPE causal
+attention -> residual -> RMSNorm -> SwiGLU -> residual); parity is asserted
+end-to-end by the Rust integration test that compares PJRT output with the
+Rust-native forward on the same weights.
+
+Every linear runs in one of three flavours:
+
+* ``dense``   — params (w,)
+* ``lowrank`` — params (u, vt)
+* ``pifa``    — params (w_p, c, inv_perm)  [the paper's layer]
+
+A *plan* assigns a flavour + rank to every prunable module; parameter
+order is canonical (embed, head, final_norm, then per block: attn_norm,
+mlp_norm, q, k, v, o, gate, up, down) and recorded in the artifact
+manifest so the Rust runtime can feed buffers positionally.
+"""
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import pallas_kernels as pk
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    vocab: int
+    dim: int
+    n_layers: int
+    n_heads: int
+    ffn_hidden: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+
+# The four stand-in presets — keep in lockstep with rust config.rs.
+PRESETS = {
+    "tiny-s": ModelCfg("tiny-s", 512, 64, 2, 4, 128, 128),
+    "tiny-m": ModelCfg("tiny-m", 512, 96, 3, 6, 192, 128),
+    "tiny-l": ModelCfg("tiny-l", 512, 128, 4, 8, 256, 128),
+    "tiny-xl": ModelCfg("tiny-xl", 512, 96, 3, 6, 192, 128),
+}
+
+MODULES = ["q", "k", "v", "o", "gate", "up", "down"]
+
+
+def module_dims(cfg: ModelCfg, kind: str) -> Tuple[int, int]:
+    d, h = cfg.dim, cfg.ffn_hidden
+    if kind in ("q", "k", "v", "o"):
+        return d, d
+    if kind in ("gate", "up"):
+        return h, d
+    return d, h  # down
+
+
+def rank_lowrank(m, n, rho):
+    r = round(rho * m * n / (m + n))
+    return max(1, min(r, min(m, n)))
+
+
+def rank_pifa(m, n, rho):
+    b = m + n + 1
+    c = rho * m * n
+    disc = max(b * b - 4.0 * c, 0.0) ** 0.5
+    r = round((b - disc) / 2.0)
+    return max(1, min(r, min(m, n)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModulePlan:
+    kind: str        # q|k|v|o|gate|up|down
+    flavour: str     # dense|lowrank|pifa
+    rank: int        # 0 for dense
+
+
+def make_plan(cfg: ModelCfg, flavour: str, density: float) -> List[List[ModulePlan]]:
+    """Uniform-density plan: one ModulePlan per (layer, module)."""
+    plan = []
+    for _ in range(cfg.n_layers):
+        layer_plan = []
+        for kind in MODULES:
+            m, n = module_dims(cfg, kind)
+            if flavour == "dense":
+                layer_plan.append(ModulePlan(kind, "dense", 0))
+            elif flavour == "lowrank":
+                layer_plan.append(ModulePlan(kind, "lowrank", rank_lowrank(m, n, density)))
+            elif flavour == "pifa":
+                layer_plan.append(ModulePlan(kind, "pifa", rank_pifa(m, n, density)))
+            else:
+                raise ValueError(f"unknown flavour {flavour}")
+        plan.append(layer_plan)
+    return plan
+
+
+def param_spec(cfg: ModelCfg, plan) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """Canonical (name, shape, dtype) list for the artifact manifest."""
+    spec = [
+        ("embed", (cfg.vocab, cfg.dim), "f32"),
+        ("head", (cfg.vocab, cfg.dim), "f32"),
+        ("final_norm", (cfg.dim,), "f32"),
+    ]
+    for li, layer_plan in enumerate(plan):
+        spec.append((f"l{li}.attn_norm", (cfg.dim,), "f32"))
+        spec.append((f"l{li}.mlp_norm", (cfg.dim,), "f32"))
+        for mp in layer_plan:
+            m, n = module_dims(cfg, mp.kind)
+            base = f"l{li}.{mp.kind}"
+            if mp.flavour == "dense":
+                spec.append((f"{base}.w", (m, n), "f32"))
+            elif mp.flavour == "lowrank":
+                spec.append((f"{base}.u", (m, mp.rank), "f32"))
+                spec.append((f"{base}.vt", (mp.rank, n), "f32"))
+            else:  # pifa
+                spec.append((f"{base}.w_p", (mp.rank, n), "f32"))
+                spec.append((f"{base}.c", (m - mp.rank, mp.rank), "f32"))
+                spec.append((f"{base}.inv_perm", (m,), "i32"))
+    return spec
+
+
+def _apply_linear(mp: ModulePlan, params, idx, x2d):
+    """Apply one linear to (tokens, n) activations; returns (y2d, new idx)."""
+    if mp.flavour == "dense":
+        w = params[idx]
+        return pk.linear_dense(x2d, w), idx + 1
+    if mp.flavour == "lowrank":
+        u, vt = params[idx], params[idx + 1]
+        return pk.linear_lowrank(x2d, u, vt), idx + 2
+    w_p, c, inv_perm = params[idx], params[idx + 1], params[idx + 2]
+    return pk.pifa_forward(x2d, w_p, c, inv_perm), idx + 3
+
+
+def _rmsnorm(x, g, eps):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def _rope_tables(cfg: ModelCfg):
+    hd = cfg.dim // cfg.n_heads
+    half = hd // 2
+    pos = jnp.arange(cfg.max_seq, dtype=jnp.float32)[:, None]
+    freq = 1.0 / (cfg.rope_theta ** (2.0 * jnp.arange(half, dtype=jnp.float32) / hd))
+    ang = pos * freq[None, :]
+    return jnp.cos(ang), jnp.sin(ang)  # (max_seq, half)
+
+
+def _rope_apply(x, cos, sin):
+    """x: (..., T, hd) with position == index along T (offset via slicing)."""
+    a = x[..., 0::2]
+    b = x[..., 1::2]
+    ra = a * cos - b * sin
+    rb = a * sin + b * cos
+    return jnp.stack([ra, rb], axis=-1).reshape(x.shape)
+
+
+def _attention(q, k, v, n_heads, causal_mask):
+    """q,k,v: (B, T, d) post-projection; returns mix (B, T, d)."""
+    bsz, t, d = q.shape
+    hd = d // n_heads
+    qh = q.reshape(bsz, t, n_heads, hd).transpose(0, 2, 1, 3)  # (B,H,T,hd)
+    kh = k.reshape(bsz, t, n_heads, hd).transpose(0, 2, 1, 3)
+    vh = v.reshape(bsz, t, n_heads, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(hd))
+    scores = jnp.where(causal_mask[None, None, :t, :t], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    mix = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return mix.transpose(0, 2, 1, 3).reshape(bsz, t, d)
+
+
+def make_prefill(cfg: ModelCfg, plan, batch: int, seq: int):
+    """Build fn(params..., tokens (B,T) i32) -> (logits, kv_k, kv_v).
+
+    kv caches are returned padded to (L, B, max_seq, d) so decode can
+    continue from position `seq`.
+    """
+    cos_t, sin_t = _rope_tables(cfg)
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    hd = cfg.dim // cfg.n_heads
+
+    def fwd(params, tokens):
+        h = jnp.take(params[0], tokens, axis=0)  # (B, T, d)
+        idx = 3  # embed, head, final_norm consumed positionally
+        kv_k = []
+        kv_v = []
+        for li in range(cfg.n_layers):
+            attn_norm = params[idx]
+            mlp_norm = params[idx + 1]
+            idx += 2
+            x = _rmsnorm(h, attn_norm, cfg.norm_eps)
+            x2 = x.reshape(-1, cfg.dim)
+            q, idx = _apply_linear(plan[li][0], params, idx, x2)
+            k, idx = _apply_linear(plan[li][1], params, idx, x2)
+            v, idx = _apply_linear(plan[li][2], params, idx, x2)
+            q = q.reshape(batch, seq, cfg.dim)
+            k = k.reshape(batch, seq, cfg.dim)
+            v = v.reshape(batch, seq, cfg.dim)
+            # RoPE per head.
+            cos = cos_t[:seq, :][None, :, None, :]  # (1,T,1,half)
+            sin = sin_t[:seq, :][None, :, None, :]
+            qh = q.reshape(batch, seq, cfg.n_heads, hd)
+            kh = k.reshape(batch, seq, cfg.n_heads, hd)
+            qh = _rope_apply(qh, cos, sin).reshape(batch, seq, cfg.dim)
+            kh = _rope_apply(kh, cos, sin).reshape(batch, seq, cfg.dim)
+            mix = _attention(qh, kh, v, cfg.n_heads, mask)
+            o, idx = _apply_linear(plan[li][3], params, idx, mix.reshape(-1, cfg.dim))
+            h = h + o.reshape(batch, seq, cfg.dim)
+            x = _rmsnorm(h, mlp_norm, cfg.norm_eps)
+            x2 = x.reshape(-1, cfg.dim)
+            g, idx = _apply_linear(plan[li][4], params, idx, x2)
+            u, idx = _apply_linear(plan[li][5], params, idx, x2)
+            a = jax.nn.silu(g) * u
+            dn, idx = _apply_linear(plan[li][6], params, idx, a)
+            h = h + dn.reshape(batch, seq, cfg.dim)
+            # Pad caches to max_seq for the decode graph.
+            pad = cfg.max_seq - seq
+            kv_k.append(jnp.pad(kh, ((0, 0), (0, pad), (0, 0))))
+            kv_v.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0))))
+        xf = _rmsnorm(h, params[2], cfg.norm_eps)
+        logits = jnp.einsum("btd,vd->btv", xf, params[1])
+        return logits, jnp.stack(kv_k), jnp.stack(kv_v)
+
+    def fn(*args):
+        *params, tokens = args
+        return fwd(list(params), tokens)
+
+    return fn
+
+
+def make_decode(cfg: ModelCfg, plan, batch: int):
+    """Build fn(params..., kv_k (L,B,S,d), kv_v, tokens (B,) i32, pos () i32)
+    -> (logits (B,vocab), kv_k', kv_v')."""
+    cos_t, sin_t = _rope_tables(cfg)
+    hd = cfg.dim // cfg.n_heads
+    s_max = cfg.max_seq
+
+    def fwd(params, kv_k, kv_v, tokens, pos):
+        h = jnp.take(params[0], tokens, axis=0)  # (B, d)
+        idx = 3
+        new_k = []
+        new_v = []
+        positions = jnp.arange(s_max)
+        for li in range(cfg.n_layers):
+            attn_norm = params[idx]
+            mlp_norm = params[idx + 1]
+            idx += 2
+            x = _rmsnorm(h, attn_norm, cfg.norm_eps)
+            q, idx = _apply_linear(plan[li][0], params, idx, x)
+            k, idx = _apply_linear(plan[li][1], params, idx, x)
+            v, idx = _apply_linear(plan[li][2], params, idx, x)
+            # RoPE at position `pos`.
+            cos = jax.lax.dynamic_slice_in_dim(cos_t, pos, 1, 0)[None, :, None, :]
+            sin = jax.lax.dynamic_slice_in_dim(sin_t, pos, 1, 0)[None, :, None, :]
+            qh = _rope_apply(q.reshape(batch, 1, cfg.n_heads, hd), cos, sin)
+            kh = _rope_apply(k.reshape(batch, 1, cfg.n_heads, hd), cos, sin)
+            qh = qh.reshape(batch, cfg.dim)
+            kh = kh.reshape(batch, cfg.dim)
+            # Insert into the cache at `pos`.
+            kk = jax.lax.dynamic_update_slice(kv_k[li], kh[:, None, :], (0, pos, 0))
+            vv = jax.lax.dynamic_update_slice(kv_v[li], v[:, None, :], (0, pos, 0))
+            new_k.append(kk)
+            new_v.append(vv)
+            # Attention of the single query over positions <= pos.
+            qv = qh.reshape(batch, cfg.n_heads, hd)
+            kv = kk.reshape(batch, s_max, cfg.n_heads, hd)
+            vvh = vv.reshape(batch, s_max, cfg.n_heads, hd)
+            scores = jnp.einsum("bhd,bshd->bhs", qv, kv) / jnp.sqrt(float(hd))
+            mask = positions[None, None, :] <= pos
+            scores = jnp.where(mask, scores, -jnp.inf)
+            probs = jax.nn.softmax(scores, axis=-1)
+            mix = jnp.einsum("bhs,bshd->bhd", probs, vvh).reshape(batch, cfg.dim)
+            o, idx = _apply_linear(plan[li][3], params, idx, mix)
+            h = h + o
+            x = _rmsnorm(h, mlp_norm, cfg.norm_eps)
+            g, idx = _apply_linear(plan[li][4], params, idx, x)
+            u, idx = _apply_linear(plan[li][5], params, idx, x)
+            a = jax.nn.silu(g) * u
+            dn, idx = _apply_linear(plan[li][6], params, idx, a)
+            h = h + dn
+        xf = _rmsnorm(h, params[2], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", xf, params[1])
+        return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+    def fn(*args):
+        n_params = len(param_spec(cfg, plan))
+        params = list(args[:n_params])
+        kv_k, kv_v, tokens, pos = args[n_params:]
+        return fwd(params, kv_k, kv_v, tokens, pos)
+
+    return fn
+
+
+def example_params(cfg: ModelCfg, plan, seed=0):
+    """Random parameters matching the canonical spec (tests / lowering)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape, dtype in param_spec(cfg, plan):
+        if dtype == "i32":
+            m = shape[0]
+            out.append(jnp.array(rng.permutation(m).astype(np.int32)))
+        elif name.endswith("norm"):
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            out.append(jnp.array(rng.standard_normal(shape).astype(np.float32) * 0.05))
+    return out

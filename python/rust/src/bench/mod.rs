@@ -1,0 +1,9 @@
+//! Criterion-less benchmark harness (criterion is not in the offline crate
+//! set): warmup + N timed samples, reporting median / p10 / p90, plus
+//! table-printing helpers shared by `rust/benches/*`.
+
+pub mod harness;
+pub mod tables;
+
+pub use harness::{bench_fn, BenchResult};
+pub use tables::TablePrinter;

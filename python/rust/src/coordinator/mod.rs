@@ -1,0 +1,19 @@
+//! Serving coordinator (Table 7's end-to-end path).
+//!
+//! * [`request`] — request/response types and per-request metrics.
+//! * [`batcher`] — dynamic batcher: groups queued requests up to the
+//!   artifact batch size within a wait budget.
+//! * [`engine`] — the generation engine: prefill + batched KV-cache decode
+//!   over [`crate::runtime::ModelRunner`], plus the no-KV re-prefill mode
+//!   the paper contrasts (Table 7 "Use KV Cache" rows).
+//! * [`server`] — worker-thread server with an mpsc front door + metrics.
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use engine::{GenerationEngine, GenerationMode};
+pub use request::{GenRequest, GenResponse, ServeMetrics};
+pub use server::Server;

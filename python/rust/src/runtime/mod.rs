@@ -1,0 +1,20 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here: the Rust binary is self-contained once
+//! `make artifacts` has populated `artifacts/`.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.txt` (artifact index,
+//!   canonical parameter order, input shapes).
+//! * [`loader`] — PJRT client + HLO-text compile cache.
+//! * [`exec`] — `ModelRunner`: binds a checkpointed
+//!   [`crate::model::Transformer`] to an artifact's parameter order and
+//!   drives prefill / KV-cache decode.
+
+pub mod exec;
+pub mod loader;
+pub mod manifest;
+
+pub use exec::{weights_to_literals, ModelRunner};
+pub use loader::Engine;
+pub use manifest::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};

@@ -1,0 +1,54 @@
+"""AOT lowering smoke tests: HLO text is produced and the manifest grammar
+is consistent with the parameter spec."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_roundtrippable():
+    fn = lambda x, y: (jnp.matmul(x, y) + 1.0,)
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "parameter" in text.lower()
+
+
+def test_model_artifact_lowering(tmp_path):
+    man = aot.Manifest()
+    aot.lower_model_artifact(man, str(tmp_path), "tiny-s", "pifa", 0.55, "decode", 1, 0)
+    files = os.listdir(tmp_path)
+    assert any(f.endswith(".hlo.txt") for f in files)
+    text = "\n".join(man.lines)
+    assert "artifact tiny-s_pifa55_decode_b1" in text
+    assert "input kv_k" in text
+    assert "input pos" in text
+    # Parameter lines match the spec count.
+    cfg = M.PRESETS["tiny-s"]
+    plan = M.make_plan(cfg, "pifa", 0.55)
+    n_params = len(M.param_spec(cfg, plan))
+    assert sum(1 for l in man.lines if l.startswith("param ")) == n_params
+
+
+def test_layer_bench_lowering(tmp_path):
+    man = aot.Manifest()
+    for kind in ["dense", "lowrank", "pifa"]:
+        aot.lower_layer_bench(man, str(tmp_path), kind, 64, 32, 0.55)
+    assert len([f for f in os.listdir(tmp_path) if f.endswith(".hlo.txt")]) == 3
+    assert any(l.startswith("layerbench pifa") for l in man.lines)
+
+
+def test_manifest_write_read(tmp_path):
+    man = aot.Manifest()
+    man.add("artifact x")
+    man.add("end")
+    p = tmp_path / "manifest.txt"
+    man.write(str(p))
+    assert p.read_text() == "artifact x\nend\n"

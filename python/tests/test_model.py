@@ -1,0 +1,133 @@
+"""L2 correctness: the JAX model — flavour equivalence and KV-cache parity."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelCfg("t", 64, 32, 2, 2, 48, 16)
+
+
+def _run_prefill(flavour, density, tokens, seed=3):
+    plan = M.make_plan(CFG, flavour, density)
+    params = M.example_params(CFG, plan, seed=seed)
+    fn = M.make_prefill(CFG, plan, tokens.shape[0], tokens.shape[1])
+    return fn(*params, tokens), params, plan
+
+
+def test_prefill_shapes():
+    tokens = jnp.zeros((2, 8), jnp.int32)
+    (logits, kk, vv), _, _ = _run_prefill("dense", 0.0, tokens)
+    assert logits.shape == (2, 8, CFG.vocab)
+    assert kk.shape == (CFG.n_layers, 2, CFG.max_seq, CFG.dim)
+    assert vv.shape == kk.shape
+
+
+@pytest.mark.parametrize("flavour,density", [("dense", 0.0), ("lowrank", 0.5), ("pifa", 0.5)])
+def test_decode_matches_prefill(flavour, density):
+    B, T = 1, 10
+    rng = np.random.default_rng(11)
+    tokens = jnp.array(rng.integers(0, CFG.vocab, (B, T)), jnp.int32)
+    plan = M.make_plan(CFG, flavour, density)
+    params = M.example_params(CFG, plan, seed=7)
+    prefill = M.make_prefill(CFG, plan, B, T)
+    logits_full, _, _ = prefill(*params, tokens)
+
+    decode = M.make_decode(CFG, plan, B)
+    kk = jnp.zeros((CFG.n_layers, B, CFG.max_seq, CFG.dim))
+    vv = jnp.zeros_like(kk)
+    lg = None
+    for t in range(T):
+        lg, kk, vv = decode(*params, kk, vv, tokens[:, t], jnp.int32(t))
+    np.testing.assert_allclose(
+        np.array(lg[0]), np.array(logits_full[0, -1]), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_prefill_kv_continues_into_decode():
+    """Prefill T tokens, then decode one more; must equal full prefill of T+1."""
+    B, T = 1, 6
+    rng = np.random.default_rng(13)
+    toks = rng.integers(0, CFG.vocab, (B, T + 1))
+    plan = M.make_plan(CFG, "dense", 0.0)
+    params = M.example_params(CFG, plan, seed=5)
+
+    prefill_t = M.make_prefill(CFG, plan, B, T)
+    _, kk, vv = prefill_t(*params, jnp.array(toks[:, :T], jnp.int32))
+    decode = M.make_decode(CFG, plan, B)
+    lg, _, _ = decode(*params, kk, vv, jnp.array(toks[:, T], jnp.int32), jnp.int32(T))
+
+    prefill_t1 = M.make_prefill(CFG, plan, B, T + 1)
+    logits_full, _, _ = prefill_t1(*params, jnp.array(toks, jnp.int32))
+    np.testing.assert_allclose(
+        np.array(lg[0]), np.array(logits_full[0, -1]), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_pifa_flavour_equals_dense_with_reconstructed_weights():
+    """Build PIFA params from exact low-rank dense weights: logits must match
+    the dense flavour run with W' = reconstruct(pifa params)."""
+    B, T = 1, 5
+    rng = np.random.default_rng(17)
+    tokens = jnp.array(rng.integers(0, CFG.vocab, (B, T)), jnp.int32)
+
+    plan_p = M.make_plan(CFG, "pifa", 0.5)
+    params_p = M.example_params(CFG, plan_p, seed=23)
+
+    # Build the dense twin by reconstructing every module.
+    plan_d = M.make_plan(CFG, "dense", 0.0)
+    from compile.kernels.ref import pifa_reconstruct_ref
+
+    params_d = []
+    idx = 0
+    spec_p = M.param_spec(CFG, plan_p)
+    i = 0
+    while i < len(spec_p):
+        name = spec_p[i][0]
+        if name.endswith(".w_p"):
+            w_p, c, inv = params_p[i], params_p[i + 1], params_p[i + 2]
+            params_d.append(pifa_reconstruct_ref(w_p, c, inv))
+            i += 3
+        else:
+            params_d.append(params_p[i])
+            i += 1
+        idx += 1
+    fn_p = M.make_prefill(CFG, plan_p, B, T)
+    fn_d = M.make_prefill(CFG, plan_d, B, T)
+    lg_p, _, _ = fn_p(*params_p, tokens)
+    lg_d, _, _ = fn_d(*params_d, tokens)
+    np.testing.assert_allclose(np.array(lg_p), np.array(lg_d), rtol=1e-3, atol=1e-3)
+
+
+def test_causality():
+    B, T = 1, 8
+    rng = np.random.default_rng(29)
+    t1 = rng.integers(0, CFG.vocab, (B, T))
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 7) % CFG.vocab
+    (l1, _, _), params, plan = _run_prefill("dense", 0.0, jnp.array(t1, jnp.int32))
+    fn = M.make_prefill(CFG, plan, B, T)
+    l2, _, _ = fn(*params, jnp.array(t2, jnp.int32))
+    np.testing.assert_allclose(
+        np.array(l1[0, : T - 1]), np.array(l2[0, : T - 1]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_param_spec_counts():
+    plan = M.make_plan(CFG, "pifa", 0.5)
+    spec = M.param_spec(CFG, plan)
+    # 3 globals + per layer (2 norms + 7 modules x 3 tensors).
+    assert len(spec) == 3 + CFG.n_layers * (2 + 7 * 3)
+    plan_d = M.make_plan(CFG, "dense", 0.0)
+    assert len(M.param_spec(CFG, plan_d)) == 3 + CFG.n_layers * (2 + 7)
+
+
+def test_rank_formulas_match_rust():
+    # Spot values mirrored in rust/src/pifa/costs.rs tests.
+    assert M.rank_lowrank(256, 256, 0.5) == 64
+    r = M.rank_pifa(256, 256, 0.5)
+    # Density round-trip within 2%.
+    dens = (r * (512 - r) + r) / (256 * 256)
+    assert abs(dens - 0.5) < 0.02
+    assert M.rank_pifa(256, 256, 0.5) > M.rank_lowrank(256, 256, 0.5)

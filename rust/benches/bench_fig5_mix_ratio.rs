@@ -1,0 +1,7 @@
+//! `cargo bench` target regenerating the paper's fig5 (see DESIGN.md §4).
+//! Thin wrapper over `pifa::bench::tablegen`; set PIFA_FAST=1 for a
+//! trimmed grid, PIFA_FULL=1 for the full four-model lineup.
+
+fn main() {
+    pifa::bench::tablegen::run("fig5").expect("fig5 generation failed");
+}

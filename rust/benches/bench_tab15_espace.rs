@@ -1,0 +1,7 @@
+//! `cargo bench` target regenerating the paper's tab15 (see DESIGN.md §4).
+//! Thin wrapper over `pifa::bench::tablegen`; set PIFA_FAST=1 for a
+//! trimmed grid, PIFA_FULL=1 for the full four-model lineup.
+
+fn main() {
+    pifa::bench::tablegen::run("tab15").expect("tab15 generation failed");
+}

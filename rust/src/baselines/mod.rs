@@ -1,0 +1,23 @@
+//! Every comparator in the paper's evaluation.
+//!
+//! * [`prune`] — low-rank pruning algorithms that plug into the MPIFA
+//!   walk's prune slot: vanilla SVD, ASVD (activation-aware), SVD-LLM
+//!   (re-exported), and the four ESPACE projection variants (Table 15).
+//! * [`semistructured`] — 2:4 one-shot pruning: Magnitude, Wanda, RIA
+//!   (Tables 3/4).
+//! * [`structured`] — LLM-Pruner-style structured channel/head pruning
+//!   (Tables 10–12).
+//! * [`owl`] — OWL outlier-weighted layer-wise density allocation.
+//! * [`ns`] — MPIFA_NS non-uniform density construction (Appendix B.2).
+
+pub mod ns;
+pub mod owl;
+pub mod prune;
+pub mod semistructured;
+pub mod structured;
+
+pub use ns::mpifa_ns_config;
+pub use owl::owl_layer_densities;
+pub use prune::{prune_low_rank, EspaceVariant, PruneAlgo};
+pub use semistructured::{compress_model_24, Score24};
+pub use structured::{structured_prune_model, StructuredConfig};

@@ -1,0 +1,125 @@
+//! MPIFA_NS — non-uniform sparsity (paper Appendix B.2).
+//!
+//! Two density axes combined multiplicatively:
+//!
+//! * **Type Density** — attention modules are less sensitive than MLP
+//!   modules (ASVD's observation), so attention density is searched in
+//!   `{G, G - 0.1}`; MLP density is then solved so the global density
+//!   stays `G`.
+//! * **Layer Density** — OWL's outlier-weighted layerwise allocation.
+//!
+//! `Module Density = Type x Layer / Global` (clamped to (0, 1]).
+
+use super::owl::owl_layer_densities;
+use crate::compress::mpifa::CompressConfig;
+use crate::model::transformer::{ModuleKind, Transformer};
+
+/// Parameters in attention vs MLP modules per block.
+fn type_param_split(model: &Transformer) -> (usize, usize) {
+    let d = model.cfg.dim;
+    let h = model.cfg.ffn_hidden;
+    (4 * d * d, 3 * d * h)
+}
+
+/// Solve the MLP density so the block-global density equals `global`
+/// given the attention density.
+fn mlp_density_for(model: &Transformer, global: f64, attn_density: f64) -> f64 {
+    let (pa, pm) = type_param_split(model);
+    let total = (pa + pm) as f64;
+    ((global * total - attn_density * pa as f64) / pm as f64).clamp(0.05, 1.0)
+}
+
+/// Build the MPIFA_NS config: type-density split + OWL layer densities.
+///
+/// `attn_minus` selects the searched attention density: `false` → `G`,
+/// `true` → `G - 0.1` (the paper searches both and keeps the better; the
+/// benches do that search explicitly).
+pub fn mpifa_ns_config(
+    model: &Transformer,
+    calib: &[Vec<usize>],
+    global: f64,
+    attn_minus: bool,
+) -> CompressConfig {
+    let attn_density = if attn_minus { (global - 0.1).max(0.05) } else { global };
+    let mlp_density = mlp_density_for(model, global, attn_density);
+    let layer_dens = owl_layer_densities(model, calib, global);
+
+    let mut cfg = CompressConfig::mpifa(global);
+    for (layer, &ld) in layer_dens.iter().enumerate() {
+        for kind in ModuleKind::ALL {
+            let type_d = if kind.is_attention() { attn_density } else { mlp_density };
+            let module_d = (type_d * ld / global).clamp(0.05, 1.0);
+            cfg.module_density.insert((layer, kind), module_d);
+        }
+    }
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::model::config::ModelConfig;
+    use crate::model::transformer::Transformer;
+
+    fn model() -> Transformer {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 64,
+            dim: 16,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 32,
+            max_seq: 16,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(331);
+        Transformer::new_random(&cfg, &mut rng)
+    }
+
+    fn calib() -> Vec<Vec<usize>> {
+        (0..2).map(|i| (0..10).map(|j| (i * 13 + j * 3) % 64).collect()).collect()
+    }
+
+    #[test]
+    fn global_density_preserved() {
+        let m = model();
+        for attn_minus in [false, true] {
+            let cfg = mpifa_ns_config(&m, &calib(), 0.55, attn_minus);
+            // Parameter-weighted mean of module densities == global.
+            let d = m.cfg.dim;
+            let h = m.cfg.ffn_hidden;
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for ((_, kind), &rho) in cfg.module_density.iter() {
+                let params = match kind {
+                    ModuleKind::Down => (d * h) as f64,
+                    ModuleKind::Gate | ModuleKind::Up => (h * d) as f64,
+                    _ => (d * d) as f64,
+                };
+                num += rho * params;
+                den += params;
+            }
+            let mean = num / den;
+            assert!((mean - 0.55).abs() < 0.03, "attn_minus={attn_minus}: mean {mean}");
+        }
+    }
+
+    #[test]
+    fn attn_minus_shifts_budget_to_mlp() {
+        let m = model();
+        let cfg = mpifa_ns_config(&m, &calib(), 0.5, true);
+        let attn_d = cfg.module_density[&(0, ModuleKind::Q)];
+        let mlp_d = cfg.module_density[&(0, ModuleKind::Gate)];
+        assert!(mlp_d > attn_d, "MLP should get more density: attn {attn_d} mlp {mlp_d}");
+    }
+
+    #[test]
+    fn every_module_has_density() {
+        let m = model();
+        let cfg = mpifa_ns_config(&m, &calib(), 0.6, false);
+        assert_eq!(cfg.module_density.len(), 2 * 7);
+        assert!(cfg.module_density.values().all(|&v| v > 0.0 && v <= 1.0));
+    }
+}

@@ -1,0 +1,129 @@
+//! OWL (Outlier Weighed Layerwise sparsity, Yin et al.) — layer-wise
+//! density allocation from activation-outlier distribution.
+//!
+//! OWL's observation: layers whose activations carry more outliers are
+//! more sensitive to pruning and should keep more parameters. We compute,
+//! per layer, the fraction of block-input activations whose magnitude
+//! exceeds `OUTLIER_M x` the layer mean, then tilt per-layer densities
+//! toward outlier-heavy layers while keeping the global density fixed.
+
+use crate::model::ops;
+use crate::model::transformer::Transformer;
+
+/// Outlier threshold multiplier (OWL uses M in [3, 10]; 5 is its default).
+const OUTLIER_M: f64 = 5.0;
+/// Maximum deviation of a layer's density from the global target (OWL's
+/// lambda; keeps allocations sane at extreme densities).
+const MAX_SHIFT: f64 = 0.08;
+
+/// Per-layer outlier ratios of block-input activations.
+pub fn layer_outlier_ratios(model: &Transformer, calib: &[Vec<usize>]) -> Vec<f64> {
+    let l = model.cfg.n_layers;
+    let mut ratios = vec![0f64; l];
+    let mut counts = vec![0usize; l];
+    for tokens in calib {
+        let mut h = model.embed_tokens(tokens);
+        for (li, block) in model.blocks.iter().enumerate() {
+            // Outlier statistic on the block input (pre-norm), like OWL.
+            let abs: Vec<f64> = h.as_slice().iter().map(|v| v.abs() as f64).collect();
+            let mean = abs.iter().sum::<f64>() / abs.len().max(1) as f64;
+            let outliers = abs.iter().filter(|&&v| v > OUTLIER_M * mean).count();
+            ratios[li] += outliers as f64 / abs.len().max(1) as f64;
+            counts[li] += 1;
+            h = crate::model::transformer::block_forward(
+                block,
+                &h,
+                &model.rope,
+                model.cfg.n_heads,
+                model.cfg.norm_eps,
+                None,
+            );
+            let _ = ops::silu(0.0); // keep ops linked for doc example
+        }
+    }
+    for (r, c) in ratios.iter_mut().zip(counts.iter()) {
+        *r /= (*c).max(1) as f64;
+    }
+    ratios
+}
+
+/// OWL layer densities: tilt `global` by normalized outlier ratio, clamp
+/// to `global ± MAX_SHIFT`, then renormalize so the parameter-weighted
+/// mean density equals `global` exactly.
+pub fn owl_layer_densities(model: &Transformer, calib: &[Vec<usize>], global: f64) -> Vec<f64> {
+    let ratios = layer_outlier_ratios(model, calib);
+    let l = ratios.len();
+    let mean_r = ratios.iter().sum::<f64>() / l.max(1) as f64;
+    let mut dens: Vec<f64> = ratios
+        .iter()
+        .map(|&r| {
+            let tilt = if mean_r > 1e-12 { (r - mean_r) / mean_r } else { 0.0 };
+            (global + MAX_SHIFT * tilt.clamp(-1.0, 1.0)).clamp(0.05, 1.0)
+        })
+        .collect();
+    // Renormalize to preserve the global density (all layers have equal
+    // prunable parameter counts in our models).
+    let mean_d = dens.iter().sum::<f64>() / l.max(1) as f64;
+    if mean_d > 1e-12 {
+        let scale = global / mean_d;
+        for d in dens.iter_mut() {
+            *d = (*d * scale).clamp(0.05, 1.0);
+        }
+    }
+    dens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::model::config::ModelConfig;
+
+    fn model() -> Transformer {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 64,
+            dim: 16,
+            n_layers: 3,
+            n_heads: 2,
+            ffn_hidden: 24,
+            max_seq: 16,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(321);
+        Transformer::new_random(&cfg, &mut rng)
+    }
+
+    fn calib() -> Vec<Vec<usize>> {
+        (0..3).map(|i| (0..10).map(|j| (i * 11 + j * 5) % 64).collect()).collect()
+    }
+
+    #[test]
+    fn ratios_have_layer_count() {
+        let m = model();
+        let r = layer_outlier_ratios(&m, &calib());
+        assert_eq!(r.len(), 3);
+        assert!(r.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn densities_preserve_global_mean() {
+        let m = model();
+        for global in [0.4, 0.55, 0.7] {
+            let d = owl_layer_densities(&m, &calib(), global);
+            let mean = d.iter().sum::<f64>() / d.len() as f64;
+            assert!((mean - global).abs() < 0.02, "global {global} -> mean {mean}");
+            assert!(d.iter().all(|&v| v > 0.0 && v <= 1.0));
+        }
+    }
+
+    #[test]
+    fn densities_bounded_shift() {
+        let m = model();
+        let d = owl_layer_densities(&m, &calib(), 0.5);
+        for &v in &d {
+            assert!((v - 0.5).abs() <= MAX_SHIFT + 0.05, "density {v} shifted too far");
+        }
+    }
+}

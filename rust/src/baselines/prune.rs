@@ -1,0 +1,294 @@
+//! Low-rank pruning algorithms — the prune slot of the MPIFA walk.
+//!
+//! All take `(W, accumulated X X^T, rank)` and return `(U, V^T)`:
+//!
+//! * [`PruneAlgo::VanillaSvd`] — plain truncated SVD of `W`.
+//! * [`PruneAlgo::Asvd`] — activation-aware SVD (Yuan et al. 2023):
+//!   scale input channels by `rms_j^alpha` before truncating, so channels
+//!   that carry large activations keep more fidelity.
+//! * [`PruneAlgo::SvdLlm`] — truncation-aware data whitening
+//!   (`crate::compress::whiten`).
+//! * [`PruneAlgo::Espace`] — ESPACE's activation-space projections
+//!   (Sakr & Khailany): `W x ≈ (W P)(P^T x)` with `P` chosen per variant.
+//!   The NL-MSE variants are excluded as in the paper (Appendix G: they
+//!   require backprop).
+
+use crate::compress::recon::DualFlowAccum;
+use crate::compress::whiten::svdllm_prune;
+use crate::linalg::{self, Mat};
+use anyhow::Result;
+
+/// ESPACE projection variants (paper Appendix G / Table 15).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EspaceVariant {
+    /// Eigenvectors of the raw activation Gram `X X^T`.
+    Mse,
+    /// Eigenvectors of the channel-normalized Gram.
+    MseNorm,
+    /// Output-aware: weights the Gram by `W^T W` before the eigenbasis.
+    GoMse,
+    /// Output-aware + channel normalization.
+    GoMseNorm,
+}
+
+/// Which low-rank pruning algorithm produces the initial `U V^T`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PruneAlgo {
+    SvdLlm,
+    VanillaSvd,
+    Asvd { alpha: f64 },
+    Espace(EspaceVariant),
+}
+
+/// Run the selected pruning algorithm.
+pub fn prune_low_rank(
+    algo: &PruneAlgo,
+    w: &Mat<f64>,
+    accum: &DualFlowAccum,
+    r: usize,
+) -> Result<(Mat<f64>, Mat<f64>)> {
+    match algo {
+        PruneAlgo::SvdLlm => svdllm_prune(w, &accum.xxt, r),
+        PruneAlgo::VanillaSvd => Ok(linalg::svd(w).truncate(r)),
+        PruneAlgo::Asvd { alpha } => asvd_prune(w, accum, r, *alpha),
+        PruneAlgo::Espace(v) => espace_prune(w, accum, r, *v),
+    }
+}
+
+/// Channel RMS magnitudes from the accumulated Gram diagonal.
+fn channel_rms(accum: &DualFlowAccum) -> Vec<f64> {
+    let n = accum.xxt.rows();
+    let t = accum.tokens.max(1) as f64;
+    (0..n).map(|j| (accum.xxt[(j, j)] / t).sqrt().max(1e-12)).collect()
+}
+
+/// ASVD: truncate `SVD(W D)` with `D = diag(rms^alpha)`, un-scale `V^T`.
+fn asvd_prune(w: &Mat<f64>, accum: &DualFlowAccum, r: usize, alpha: f64) -> Result<(Mat<f64>, Mat<f64>)> {
+    let n = w.cols();
+    let d: Vec<f64> = channel_rms(accum).iter().map(|v| v.powf(alpha)).collect();
+    let mut wd = w.clone();
+    for i in 0..w.rows() {
+        let row = wd.row_mut(i);
+        for j in 0..n {
+            row[j] *= d[j];
+        }
+    }
+    let (u, mut vt) = linalg::svd(&wd).truncate(r);
+    for i in 0..vt.rows() {
+        let row = vt.row_mut(i);
+        for j in 0..n {
+            row[j] /= d[j];
+        }
+    }
+    Ok((u, vt))
+}
+
+/// ESPACE: choose an orthonormal projection `P (n x r)` of the activation
+/// space, then `U = W P`, `V^T = P^T` (optionally conjugated by the
+/// channel scaling for the NORM variants).
+fn espace_prune(
+    w: &Mat<f64>,
+    accum: &DualFlowAccum,
+    r: usize,
+    variant: EspaceVariant,
+) -> Result<(Mat<f64>, Mat<f64>)> {
+    let n = w.cols();
+    let normalize = matches!(variant, EspaceVariant::MseNorm | EspaceVariant::GoMseNorm);
+    let output_aware = matches!(variant, EspaceVariant::GoMse | EspaceVariant::GoMseNorm);
+
+    // Optionally conjugate the Gram by D^{-1/2} (channel normalization).
+    let rms = channel_rms(accum);
+    let scale: Vec<f64> = if normalize { rms.iter().map(|v| 1.0 / v.sqrt()).collect() } else { vec![1.0; n] };
+    let mut g = accum.xxt.clone();
+    for i in 0..n {
+        for j in 0..n {
+            g[(i, j)] *= scale[i] * scale[j];
+        }
+    }
+
+    // Output-aware weighting: symmetrized 0.5 (G B + B G) with B = W^T W
+    // (in the scaled space). This folds the layer's output sensitivity
+    // into the projection choice — the "GO" step.
+    let m_sym = if output_aware {
+        // W in the scaled input space: W D^{1/2} equivalent is W ./ scale
+        // (since x_scaled = D^{1/2} x and we project x_scaled).
+        let mut ws = w.clone();
+        for i in 0..w.rows() {
+            let row = ws.row_mut(i);
+            for j in 0..n {
+                row[j] /= scale[j].max(1e-300);
+            }
+        }
+        let b = linalg::matmul_tn(&ws, &ws); // n x n
+        let gb = linalg::matmul(&g, &b);
+        let bg = linalg::matmul(&b, &g);
+        let mut m = gb.add_mat(&bg);
+        m.scale_inplace(0.5);
+        m
+    } else {
+        g
+    };
+
+    // Top-r eigenvectors via SVD of the symmetric matrix.
+    let f = linalg::svd(&m_sym);
+    let mut p = Mat::zeros(n, r);
+    for i in 0..n {
+        for j in 0..r {
+            p[(i, j)] = f.u[(i, j)];
+        }
+    }
+    // Orthonormality safeguard (SVD of a symmetric PSD matrix gives an
+    // orthonormal U, but the GO symmetrization can be indefinite; re-
+    // orthonormalize via pivoted QR of P).
+    let qr = linalg::qr_column_pivot(&p);
+    let mut q = Mat::eye(n);
+    qr.apply_qt(&mut q);
+    let q = q.transpose();
+    let mut p_ortho = Mat::zeros(n, r);
+    for i in 0..n {
+        for j in 0..r {
+            p_ortho[(i, j)] = q[(i, j)];
+        }
+    }
+
+    // Projection in the (possibly scaled) space:
+    // W x = (W D^{-1/2}) (D^{1/2} x) ≈ (W D^{-1/2} P)(P^T D^{1/2} x).
+    let u = {
+        let mut ws = w.clone();
+        for i in 0..w.rows() {
+            let row = ws.row_mut(i);
+            for j in 0..n {
+                row[j] /= scale[j].max(1e-300);
+            }
+        }
+        linalg::matmul(&ws, &p_ortho)
+    };
+    let mut vt = p_ortho.transpose(); // r x n
+    for i in 0..r {
+        let row = vt.row_mut(i);
+        for j in 0..n {
+            row[j] *= scale[j];
+        }
+    }
+    Ok((u, vt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_nt, Rng};
+
+    fn setup(m: usize, n: usize, t: usize, seed: u64) -> (Mat<f64>, DualFlowAccum) {
+        let mut rng = Rng::new(seed);
+        let w: Mat<f64> = Mat::randn(m, n, &mut rng);
+        // Anisotropic activations.
+        let mut x: Mat<f64> = Mat::randn(n, t, &mut rng);
+        for j in 0..n {
+            let s = 1.0 + 4.0 * (j as f64 / n as f64);
+            for c in 0..t {
+                x[(j, c)] *= s;
+            }
+        }
+        let mut acc = DualFlowAccum::new(n);
+        acc.add_sample(&x, &x);
+        (w, acc)
+    }
+
+    fn weighted_err(w: &Mat<f64>, u: &Mat<f64>, vt: &Mat<f64>, acc: &DualFlowAccum) -> f64 {
+        crate::compress::whiten::weighted_error(w, u, vt, &acc.xxt)
+    }
+
+    #[test]
+    fn all_algorithms_produce_right_shapes() {
+        let (w, acc) = setup(18, 14, 60, 301);
+        for algo in [
+            PruneAlgo::SvdLlm,
+            PruneAlgo::VanillaSvd,
+            PruneAlgo::Asvd { alpha: 0.5 },
+            PruneAlgo::Espace(EspaceVariant::Mse),
+            PruneAlgo::Espace(EspaceVariant::MseNorm),
+            PruneAlgo::Espace(EspaceVariant::GoMse),
+            PruneAlgo::Espace(EspaceVariant::GoMseNorm),
+        ] {
+            let (u, vt) = prune_low_rank(&algo, &w, &acc, 5).unwrap();
+            assert_eq!(u.shape(), (18, 5), "{algo:?}");
+            assert_eq!(vt.shape(), (5, 14), "{algo:?}");
+            assert!(u.all_finite() && vt.all_finite(), "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn asvd_beats_vanilla_on_weighted_error() {
+        let (w, acc) = setup(20, 16, 100, 302);
+        let r = 5;
+        let (u_v, vt_v) = prune_low_rank(&PruneAlgo::VanillaSvd, &w, &acc, r).unwrap();
+        let (u_a, vt_a) = prune_low_rank(&PruneAlgo::Asvd { alpha: 0.5 }, &w, &acc, r).unwrap();
+        let e_v = weighted_err(&w, &u_v, &vt_v, &acc);
+        let e_a = weighted_err(&w, &u_a, &vt_a, &acc);
+        assert!(e_a < e_v, "ASVD ({e_a}) should beat vanilla ({e_v}) on activation error");
+    }
+
+    #[test]
+    fn svdllm_beats_asvd_on_weighted_error() {
+        // Whitening is the optimal activation-weighted truncation.
+        let (w, acc) = setup(20, 16, 100, 303);
+        let r = 5;
+        let (u_a, vt_a) = prune_low_rank(&PruneAlgo::Asvd { alpha: 0.5 }, &w, &acc, r).unwrap();
+        let (u_s, vt_s) = prune_low_rank(&PruneAlgo::SvdLlm, &w, &acc, r).unwrap();
+        let e_a = weighted_err(&w, &u_a, &vt_a, &acc);
+        let e_s = weighted_err(&w, &u_s, &vt_s, &acc);
+        assert!(e_s <= e_a * 1.0001, "SVD-LLM ({e_s}) should beat ASVD ({e_a})");
+    }
+
+    #[test]
+    fn espace_go_beats_plain_mse() {
+        // The Table 15 ordering: output-aware projections beat pure
+        // activation-MSE projections on the *output* error.
+        let (w, acc) = setup(24, 18, 120, 304);
+        let r = 6;
+        let (u_m, vt_m) = prune_low_rank(&PruneAlgo::Espace(EspaceVariant::Mse), &w, &acc, r).unwrap();
+        let (u_g, vt_g) =
+            prune_low_rank(&PruneAlgo::Espace(EspaceVariant::GoMse), &w, &acc, r).unwrap();
+        let e_m = weighted_err(&w, &u_m, &vt_m, &acc);
+        let e_g = weighted_err(&w, &u_g, &vt_g, &acc);
+        assert!(e_g <= e_m * 1.0001, "GO-MSE ({e_g}) should beat MSE ({e_m})");
+    }
+
+    #[test]
+    fn espace_projection_is_exact_on_projected_inputs() {
+        // For inputs already inside span(P), the factorization is exact.
+        let (w, acc) = setup(12, 10, 80, 305);
+        let (u, vt) = prune_low_rank(&PruneAlgo::Espace(EspaceVariant::Mse), &w, &acc, 10).unwrap();
+        // Full rank r = n: exact reconstruction.
+        let rec = matmul(&u, &vt);
+        assert!(rec.rel_fro_err(&w) < 1e-8, "err {}", rec.rel_fro_err(&w));
+    }
+
+    #[test]
+    fn full_rank_recovery_all_algos() {
+        let (w, acc) = setup(10, 10, 50, 306);
+        for algo in [
+            PruneAlgo::SvdLlm,
+            PruneAlgo::VanillaSvd,
+            PruneAlgo::Asvd { alpha: 0.5 },
+        ] {
+            let (u, vt) = prune_low_rank(&algo, &w, &acc, 10).unwrap();
+            let rec = matmul(&u, &vt);
+            assert!(rec.rel_fro_err(&w) < 1e-7, "{algo:?}: {}", rec.rel_fro_err(&w));
+        }
+    }
+
+    #[test]
+    fn channel_rms_matches_direct() {
+        let mut rng = Rng::new(307);
+        let x: Mat<f64> = Mat::randn(6, 40, &mut rng);
+        let mut acc = DualFlowAccum::new(6);
+        acc.add_sample(&x, &x);
+        let rms = channel_rms(&acc);
+        let xxt = matmul_nt(&x, &x);
+        for j in 0..6 {
+            let direct = (xxt[(j, j)] / 40.0).sqrt();
+            assert!((rms[j] - direct).abs() < 1e-10);
+        }
+    }
+}

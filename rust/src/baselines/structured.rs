@@ -1,0 +1,257 @@
+//! LLM-Pruner-style structured pruning (Appendix E, Tables 10–12).
+//!
+//! Removes whole attention heads and whole MLP hidden channels, producing
+//! a genuinely *smaller dense* model (tensor shapes shrink — the property
+//! that makes structured pruning GPU-friendly at any density, and also
+//! what makes it lose more accuracy than finer-grained methods).
+//!
+//! Importance criteria (activation-weighted weight norms, the
+//! retraining-free flavour of LLM-Pruner's Taylor criterion):
+//! * channel `c`: `||gate_row_c|| * ||up_row_c|| * ||down_col_c|| * act_c`
+//! * head `h`: sum of q/k/v row-block norms + o column-block norm.
+
+use crate::linalg::Mat;
+use crate::model::ops;
+use crate::model::transformer::Transformer;
+use crate::model::LinearRepr;
+use anyhow::{ensure, Result};
+
+/// Structured pruning configuration.
+#[derive(Clone, Debug)]
+pub struct StructuredConfig {
+    /// Target density over prunable parameters.
+    pub density: f64,
+}
+
+fn row_norm(w: &Mat<f32>, i: usize) -> f64 {
+    w.row(i).iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt()
+}
+
+fn col_norm(w: &Mat<f32>, j: usize) -> f64 {
+    (0..w.rows()).map(|i| (w[(i, j)] as f64).powi(2)).sum::<f64>().sqrt()
+}
+
+/// Mean |activation| per MLP hidden channel, from calibration.
+fn channel_activity(model: &Transformer, calib: &[Vec<usize>], layer: usize) -> Vec<f64> {
+    let h = model.cfg.ffn_hidden;
+    let mut act = vec![0f64; h];
+    let mut count = 0usize;
+    for tokens in calib {
+        let mut hh = model.embed_tokens(tokens);
+        for (li, block) in model.blocks.iter().enumerate() {
+            // Advance through attention to tap the true MLP input.
+            let mid = {
+                let (x_attn, _) = ops::rmsnorm(&hh, &block.attn_norm, model.cfg.norm_eps);
+                let q = block.attn.wq.forward(&x_attn);
+                let k = block.attn.wk.forward(&x_attn);
+                let v = block.attn.wv.forward(&x_attn);
+                let (mix, _, _) = crate::model::transformer::attention_mix(
+                    &q,
+                    &k,
+                    &v,
+                    &model.rope,
+                    model.cfg.n_heads,
+                    0,
+                    None,
+                );
+                hh.add_mat(&block.attn.wo.forward(&mix))
+            };
+            let (x_mlp, _) = ops::rmsnorm(&mid, &block.mlp_norm, model.cfg.norm_eps);
+            let g = block.mlp.gate.forward(&x_mlp);
+            let u = block.mlp.up.forward(&x_mlp);
+            if li == layer {
+                for t in 0..g.rows() {
+                    for c in 0..h {
+                        act[c] += (ops::silu(g[(t, c)]) * u[(t, c)]).abs() as f64;
+                    }
+                }
+                count += g.rows();
+            }
+            let mut a = g.clone();
+            for (av, (gv, uv)) in a
+                .as_mut_slice()
+                .iter_mut()
+                .zip(g.as_slice().iter().zip(u.as_slice().iter()))
+            {
+                *av = ops::silu(*gv) * *uv;
+            }
+            hh = mid.add_mat(&block.mlp.down.forward(&a));
+        }
+    }
+    for v in act.iter_mut() {
+        *v /= count.max(1) as f64;
+    }
+    act
+}
+
+/// Structured-prune the model: returns a smaller dense model.
+pub fn structured_prune_model(
+    model: &Transformer,
+    calib: &[Vec<usize>],
+    cfg: &StructuredConfig,
+) -> Result<Transformer> {
+    let d = model.cfg.dim;
+    let nh = model.cfg.n_heads;
+    let hd = d / nh;
+    let ffn = model.cfg.ffn_hidden;
+    let rho = cfg.density;
+    ensure!((0.05..=1.0).contains(&rho), "structured: bad density {rho}");
+
+    // Head/channel budgets: heads are coarse, so round heads first and
+    // solve channels to land the global density exactly.
+    let keep_heads = ((nh as f64 * rho).round() as usize).clamp(1, nh);
+    let pa = 4 * d * d;
+    let pm = 3 * d * ffn;
+    let target = rho * (pa + pm) as f64;
+    let attn_kept = pa as f64 * keep_heads as f64 / nh as f64;
+    let keep_ch = (((target - attn_kept) / (3 * d) as f64).round() as usize).clamp(1, ffn);
+
+    let mut out = model.clone();
+    out.cfg.n_heads = keep_heads;
+    out.cfg.ffn_hidden = keep_ch;
+    out.cfg.name = format!("{}-structured{:.0}", model.cfg.name, rho * 100.0);
+
+    for (li, block) in model.blocks.iter().enumerate() {
+        let wq = block.attn.wq.to_dense();
+        let wk = block.attn.wk.to_dense();
+        let wv = block.attn.wv.to_dense();
+        let wo = block.attn.wo.to_dense();
+        // Head importance.
+        let mut head_scores: Vec<(f64, usize)> = (0..nh)
+            .map(|hi| {
+                let mut s = 0.0;
+                for r in hi * hd..(hi + 1) * hd {
+                    s += row_norm(&wq, r) + row_norm(&wk, r) + row_norm(&wv, r);
+                    s += col_norm(&wo, r);
+                }
+                (s, hi)
+            })
+            .collect();
+        head_scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut kept: Vec<usize> = head_scores[..keep_heads].iter().map(|&(_, h)| h).collect();
+        kept.sort_unstable();
+        let rows: Vec<usize> = kept.iter().flat_map(|&h| h * hd..(h + 1) * hd).collect();
+
+        let b = &mut out.blocks[li];
+        b.attn.wq = LinearRepr::Dense(wq.select_rows(&rows));
+        b.attn.wk = LinearRepr::Dense(wk.select_rows(&rows));
+        b.attn.wv = LinearRepr::Dense(wv.select_rows(&rows));
+        b.attn.wo = LinearRepr::Dense(wo.select_cols(&rows));
+
+        // MLP channel importance.
+        let act = channel_activity(model, calib, li);
+        let wg = block.mlp.gate.to_dense();
+        let wu = block.mlp.up.to_dense();
+        let wd = block.mlp.down.to_dense();
+        let mut ch_scores: Vec<(f64, usize)> = (0..ffn)
+            .map(|c| {
+                let s = row_norm(&wg, c) * row_norm(&wu, c) * col_norm(&wd, c) * (act[c] + 1e-9);
+                (s, c)
+            })
+            .collect();
+        ch_scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut keep_cols: Vec<usize> = ch_scores[..keep_ch].iter().map(|&(_, c)| c).collect();
+        keep_cols.sort_unstable();
+        b.mlp.gate = LinearRepr::Dense(wg.select_rows(&keep_cols));
+        b.mlp.up = LinearRepr::Dense(wu.select_rows(&keep_cols));
+        b.mlp.down = LinearRepr::Dense(wd.select_cols(&keep_cols));
+    }
+    Ok(out)
+}
+
+/// Structured density actually achieved (for reporting).
+pub fn achieved_density(pruned: &Transformer, original: &Transformer) -> f64 {
+    pruned.prunable_params() as f64 / original.cfg.prunable_param_count() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::model::config::ModelConfig;
+
+    fn model() -> Transformer {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 64,
+            dim: 32,
+            n_layers: 2,
+            n_heads: 4,
+            ffn_hidden: 48,
+            max_seq: 16,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(341);
+        Transformer::new_random(&cfg, &mut rng)
+    }
+
+    fn calib() -> Vec<Vec<usize>> {
+        (0..2).map(|i| (0..10).map(|j| (i * 17 + j * 3) % 64).collect()).collect()
+    }
+
+    #[test]
+    fn density_is_hit() {
+        let m = model();
+        for rho in [0.55, 0.7] {
+            let p = structured_prune_model(&m, &calib(), &StructuredConfig { density: rho }).unwrap();
+            let got = achieved_density(&p, &m);
+            assert!((got - rho).abs() < 0.06, "target {rho} got {got}");
+        }
+    }
+
+    #[test]
+    fn pruned_model_still_runs() {
+        let m = model();
+        let p = structured_prune_model(&m, &calib(), &StructuredConfig { density: 0.55 }).unwrap();
+        let logits = p.forward(&[1, 5, 9, 2], None);
+        assert_eq!(logits.shape(), (4, 64));
+        assert!(logits.all_finite());
+    }
+
+    #[test]
+    fn decode_path_works_after_head_pruning() {
+        let m = model();
+        let p = structured_prune_model(&m, &calib(), &StructuredConfig { density: 0.55 }).unwrap();
+        // Full-forward vs KV-decode parity on the pruned model.
+        let tokens = [3usize, 7, 11, 2];
+        let full = p.forward(&tokens, None);
+        let mut cache = crate::model::transformer::KvCache::new(&p.cfg);
+        let mut last = Mat::zeros(1, 64);
+        for &t in &tokens {
+            last = p.decode_step(t, &mut cache);
+        }
+        let ti = tokens.len() - 1;
+        for j in 0..64 {
+            assert!(
+                (full[(ti, j)] - last[(0, j)]).abs() < 1e-3,
+                "pruned decode mismatch at {j}"
+            );
+        }
+    }
+
+    #[test]
+    fn keeps_important_channels() {
+        // Boost one channel's weights hugely; it must survive.
+        let mut m = model();
+        if let LinearRepr::Dense(w) = &mut m.blocks[0].mlp.gate {
+            for j in 0..w.cols() {
+                w[(7, j)] *= 50.0;
+            }
+        }
+        if let LinearRepr::Dense(w) = &mut m.blocks[0].mlp.up {
+            for j in 0..w.cols() {
+                w[(7, j)] *= 50.0;
+            }
+        }
+        let p = structured_prune_model(&m, &calib(), &StructuredConfig { density: 0.5 }).unwrap();
+        // Channel 7's gate row (large values) must appear among kept rows.
+        let wg = p.blocks[0].mlp.gate.to_dense();
+        let max_row_norm = (0..wg.rows()).map(|i| row_norm(&wg, i)).fold(0.0, f64::max);
+        let orig7 = row_norm(&m.blocks[0].mlp.gate.to_dense(), 7);
+        assert!(
+            (max_row_norm - orig7).abs() / orig7 < 1e-6,
+            "boosted channel was pruned"
+        );
+    }
+}

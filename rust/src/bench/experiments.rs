@@ -1,0 +1,300 @@
+//! Shared experiment plumbing for the paper-reproduction benches, the CLI
+//! `tables` subcommand, and the examples: train-once-cached models, the
+//! unified compression-method enum, and PPL evaluation over both corpora.
+
+use crate::baselines::prune::{EspaceVariant, PruneAlgo};
+use crate::baselines::semistructured::{compress_model_24, Score24};
+use crate::baselines::structured::{structured_prune_model, StructuredConfig};
+use crate::baselines::ns::mpifa_ns_config;
+use crate::compress::mpifa::{mpifa_compress_model, CompressConfig};
+use crate::data::batch::{Split, TokenDataset};
+use crate::data::corpus::{generate_corpus, Flavour};
+use crate::data::vocab::Vocab;
+use crate::eval::ppl::perplexity;
+use crate::linalg::Rng;
+use crate::model::config::ModelConfig;
+use crate::model::serialize::{load_checkpoint, save_checkpoint};
+use crate::model::transformer::Transformer;
+use crate::train::trainer::{train, TrainConfig};
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Corpus size used across experiments.
+pub const CORPUS_TOKENS: usize = 60_000;
+/// Sequence length for training/eval (stand-in for the paper's 2048).
+pub const SEQ_LEN: usize = 64;
+
+/// `PIFA_FAST=1` trims the experiment grids (CI-speed runs).
+pub fn fast_mode() -> bool {
+    std::env::var("PIFA_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Models included in table runs: `PIFA_FULL=1` runs the whole lineup,
+/// the default keeps the two smallest (single-core budget), fast mode one.
+pub fn model_names() -> Vec<&'static str> {
+    if fast_mode() {
+        vec!["tiny-s"]
+    } else if std::env::var("PIFA_FULL").map(|v| v == "1").unwrap_or(false) {
+        vec!["tiny-s", "tiny-m", "tiny-l", "tiny-xl"]
+    } else {
+        vec!["tiny-s", "tiny-m"]
+    }
+}
+
+/// The densities of Table 2/5/8/9.
+pub fn density_grid() -> Vec<f64> {
+    if fast_mode() {
+        vec![0.8, 0.5]
+    } else {
+        vec![0.9, 0.8, 0.7, 0.6, 0.5, 0.4]
+    }
+}
+
+/// Where trained checkpoints are cached.
+pub fn checkpoint_dir() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("checkpoints");
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+/// The wiki-flavour dataset (calibration + main eval).
+pub fn wiki_dataset() -> TokenDataset {
+    let v = Vocab::new();
+    TokenDataset::new(generate_corpus(&v, Flavour::Wiki, CORPUS_TOKENS, 2024), SEQ_LEN)
+}
+
+/// The c4-flavour dataset (Table 8 transfer eval).
+pub fn c4_dataset() -> TokenDataset {
+    let v = Vocab::new();
+    TokenDataset::new(generate_corpus(&v, Flavour::C4, CORPUS_TOKENS, 4202), SEQ_LEN)
+}
+
+/// Training budget per preset; tiny-xl trains ~3x longer than tiny-m (the
+/// LLaMA3 stand-in mechanism — better-trained weights are less redundant).
+pub fn train_config_for(name: &str) -> TrainConfig {
+    let steps = match name {
+        "tiny-s" => 900,
+        "tiny-m" => 900,
+        "tiny-l" => 900,
+        "tiny-xl" => 2400, // ~3x tiny-m: the LLaMA3 "better-trained" effect
+        _ => 200,
+    };
+    let steps = if fast_mode() { steps / 4 } else { steps };
+    TrainConfig {
+        steps,
+        batch: 4,
+        peak_lr: 3e-3,
+        warmup: steps / 15 + 1,
+        grad_clip: 1.0,
+        seed: 1234,
+        log_every: 50,
+    }
+}
+
+/// Train (or load the cached checkpoint of) a stand-in model.
+pub fn ensure_trained_model(name: &str) -> Result<Transformer> {
+    let path = checkpoint_dir().join(format!("{name}{}.ckpt", if fast_mode() { "-fast" } else { "" }));
+    if path.exists() {
+        return load_checkpoint(&path);
+    }
+    let cfg = ModelConfig::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model preset {name}"))?;
+    let mut rng = Rng::new(0xA11CE ^ name.len() as u64);
+    let mut model = Transformer::new_random(&cfg, &mut rng);
+    let data = wiki_dataset();
+    let tc = train_config_for(name);
+    eprintln!("[experiments] training {name} for {} steps (cached at {})", tc.steps, path.display());
+    train(&mut model, &data, &tc);
+    save_checkpoint(&model, &path)?;
+    Ok(model)
+}
+
+/// Every compression method in the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// Vanilla truncated SVD.
+    Svd,
+    /// Activation-aware SVD.
+    Asvd,
+    /// SVD-LLM (best of pruning-only and full-batch recon, like the paper).
+    SvdLlm,
+    /// SVD-LLM pruning only (Table 5 "W").
+    SvdLlmW,
+    /// SVD-LLM + full-batch reconstruction (Table 5 "W + U").
+    SvdLlmWU,
+    /// Our reconstruction without PIFA (Table 5 "W + M").
+    WPlusM,
+    /// Full MPIFA.
+    Mpifa,
+    /// MPIFA with non-uniform sparsity (Appendix B.2).
+    MpifaNs,
+    /// 2:4 one-shot baselines.
+    Magnitude24,
+    Wanda24,
+    Ria24,
+    /// LLM-Pruner structured.
+    LlmPruner,
+    /// ESPACE pruning variants (optionally + PIFA/M via `espace_combo`).
+    Espace(EspaceVariant),
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Svd => "SVD".into(),
+            Method::Asvd => "ASVD".into(),
+            Method::SvdLlm => "SVD-LLM".into(),
+            Method::SvdLlmW => "W".into(),
+            Method::SvdLlmWU => "W+U".into(),
+            Method::WPlusM => "W+M".into(),
+            Method::Mpifa => "MPIFA".into(),
+            Method::MpifaNs => "MPIFA_NS".into(),
+            Method::Magnitude24 => "Magnitude 2:4".into(),
+            Method::Wanda24 => "Wanda 2:4".into(),
+            Method::Ria24 => "RIA 2:4".into(),
+            Method::LlmPruner => "LLM-Pruner".into(),
+            Method::Espace(v) => format!("ESPACE ({v:?})"),
+        }
+    }
+}
+
+/// Calibration sample counts (paper: 128 for MPIFA, 512 for MPIFA_NS;
+/// scaled to the tiny models).
+pub fn calib_count(method: Method) -> usize {
+    let base = match method {
+        Method::MpifaNs => 64,
+        _ => 32,
+    };
+    if fast_mode() {
+        base / 4
+    } else {
+        base
+    }
+}
+
+/// Compress `model` with the given method at `density`.
+pub fn compress_with_method(
+    model: &Transformer,
+    data: &TokenDataset,
+    method: Method,
+    density: f64,
+) -> Result<Transformer> {
+    let calib = data.calibration_windows(calib_count(method), 77);
+    let compressed = match method {
+        Method::Svd => {
+            let mut cfg = CompressConfig::w_only(density);
+            cfg.prune = PruneAlgo::VanillaSvd;
+            mpifa_compress_model(model, &calib, &cfg)?.0
+        }
+        Method::Asvd => {
+            let mut cfg = CompressConfig::w_only(density);
+            cfg.prune = PruneAlgo::Asvd { alpha: 0.5 };
+            mpifa_compress_model(model, &calib, &cfg)?.0
+        }
+        Method::SvdLlm => {
+            // The paper reports the better of the two SVD-LLM versions per
+            // density; reproduce that selection on validation PPL.
+            let (w, _) = mpifa_compress_model(model, &calib, &CompressConfig::w_only(density))?;
+            let (wu, _) = mpifa_compress_model(model, &calib, &CompressConfig::w_plus_u(density))?;
+            let p_w = perplexity(&w, data, Split::Val);
+            let p_wu = perplexity(&wu, data, Split::Val);
+            if p_w <= p_wu {
+                w
+            } else {
+                wu
+            }
+        }
+        Method::SvdLlmW => mpifa_compress_model(model, &calib, &CompressConfig::w_only(density))?.0,
+        Method::SvdLlmWU => {
+            mpifa_compress_model(model, &calib, &CompressConfig::w_plus_u(density))?.0
+        }
+        Method::WPlusM => mpifa_compress_model(model, &calib, &CompressConfig::w_plus_m(density))?.0,
+        Method::Mpifa => mpifa_compress_model(model, &calib, &CompressConfig::mpifa(density))?.0,
+        Method::MpifaNs => {
+            // Search attention density in {G, G-0.1} on validation PPL
+            // (Appendix B.2's Type Density search).
+            let cfg_a = mpifa_ns_config(model, &calib, density, false);
+            let cfg_b = mpifa_ns_config(model, &calib, density, true);
+            let (a, _) = mpifa_compress_model(model, &calib, &cfg_a)?;
+            let (b, _) = mpifa_compress_model(model, &calib, &cfg_b)?;
+            if perplexity(&a, data, Split::Val) <= perplexity(&b, data, Split::Val) {
+                a
+            } else {
+                b
+            }
+        }
+        Method::Magnitude24 => compress_model_24(model, &calib, Score24::Magnitude),
+        Method::Wanda24 => compress_model_24(model, &calib, Score24::Wanda),
+        Method::Ria24 => compress_model_24(model, &calib, Score24::Ria { a: 0.5 }),
+        Method::LlmPruner => {
+            structured_prune_model(model, &calib, &StructuredConfig { density })?
+        }
+        Method::Espace(v) => {
+            let mut cfg = CompressConfig::w_only(density);
+            cfg.prune = PruneAlgo::Espace(v);
+            mpifa_compress_model(model, &calib, &cfg)?.0
+        }
+    };
+    Ok(compressed)
+}
+
+/// ESPACE combos for Table 15: X, X+PIFA, X+M, X+MPIFA.
+pub fn espace_combo(
+    model: &Transformer,
+    data: &TokenDataset,
+    variant: EspaceVariant,
+    density: f64,
+    with_m: bool,
+    with_pifa: bool,
+) -> Result<Transformer> {
+    let calib = data.calibration_windows(calib_count(Method::Mpifa), 77);
+    let mut cfg = if with_m {
+        CompressConfig::w_plus_m(density)
+    } else {
+        CompressConfig::w_only(density)
+    };
+    cfg.prune = PruneAlgo::Espace(variant);
+    cfg.apply_pifa = with_pifa;
+    Ok(mpifa_compress_model(model, &calib, &cfg)?.0)
+}
+
+/// Test perplexity of a model on a dataset.
+pub fn test_ppl(model: &Transformer, data: &TokenDataset) -> f64 {
+    perplexity(model, data, Split::Test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_are_sane() {
+        assert!(!model_names().is_empty());
+        let d = density_grid();
+        assert!(d.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn method_names_unique() {
+        let methods = [
+            Method::Svd,
+            Method::Asvd,
+            Method::SvdLlm,
+            Method::Mpifa,
+            Method::MpifaNs,
+            Method::Wanda24,
+            Method::LlmPruner,
+            Method::Espace(EspaceVariant::Mse),
+        ];
+        let names: std::collections::HashSet<String> =
+            methods.iter().map(|m| m.name()).collect();
+        assert_eq!(names.len(), methods.len());
+    }
+
+    #[test]
+    fn datasets_differ_by_flavour() {
+        let w = wiki_dataset();
+        let c = c4_dataset();
+        assert_ne!(w.tokens[..200], c.tokens[..200]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Minimal measurement harness: warmup, fixed sample count, robust stats.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    fn sorted(&self) -> Vec<f64> {
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// Median seconds.
+    pub fn median_secs(&self) -> f64 {
+        let v = self.sorted();
+        v[v.len() / 2]
+    }
+
+    pub fn p10_secs(&self) -> f64 {
+        let v = self.sorted();
+        v[(v.len() as f64 * 0.1) as usize]
+    }
+
+    pub fn p90_secs(&self) -> f64 {
+        let v = self.sorted();
+        v[((v.len() as f64 * 0.9) as usize).min(v.len() - 1)]
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        self.median_secs() * 1e3
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_secs() * 1e6
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `samples` measured runs.
+/// `f` must do its full work per call (return values are dropped).
+pub fn bench_fn(name: &str, warmup: usize, samples: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), samples: out }
+}
+
+/// Time a single long-running call (for end-to-end runs where repetition
+/// is too expensive); returns the duration.
+pub fn time_once(f: impl FnOnce()) -> Duration {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let r = BenchResult {
+            name: "t".into(),
+            samples: vec![5.0, 1.0, 3.0, 2.0, 4.0],
+        };
+        assert_eq!(r.median_secs(), 3.0);
+        assert!(r.p10_secs() <= r.median_secs());
+        assert!(r.median_secs() <= r.p90_secs());
+    }
+
+    #[test]
+    fn bench_runs_expected_count() {
+        let mut calls = 0;
+        let r = bench_fn("count", 2, 5, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.median_secs() >= 0.0);
+    }
+
+    #[test]
+    fn time_once_positive() {
+        let d = time_once(|| std::thread::sleep(Duration::from_millis(2)));
+        assert!(d.as_millis() >= 2);
+    }
+}

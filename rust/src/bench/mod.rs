@@ -1,0 +1,10 @@
+//! Criterion-less benchmark harness (criterion is not in the offline crate
+//! set) plus the shared experiment plumbing and the per-table generators.
+
+pub mod experiments;
+pub mod harness;
+pub mod tablegen;
+pub mod tables;
+
+pub use harness::{bench_fn, BenchResult};
+pub use tables::TablePrinter;

@@ -1,0 +1,836 @@
+//! Generators that regenerate every table and figure of the paper's
+//! evaluation (the per-experiment index lives in DESIGN.md §4).
+//!
+//! Each generator prints the paper-shaped table and also writes it under
+//! `results/` so EXPERIMENTS.md can quote runs verbatim. The `cargo bench`
+//! targets in `rust/benches/` are thin wrappers over these functions, and
+//! `pifa tables <id>` runs them from the CLI.
+
+use super::experiments::*;
+use super::harness::bench_fn;
+use super::tables::{fmt_ppl, fmt_speedup, TablePrinter};
+use crate::baselines::prune::EspaceVariant;
+use crate::compress::mpifa::{mpifa_compress_model, CompressConfig, ReconMode, ReconTarget};
+use crate::data::batch::Split;
+use crate::eval::ppl::perplexity;
+use crate::eval::tasks::{mean_accuracy, run_task_suite};
+use crate::linalg::Mat;
+use crate::pifa;
+use crate::sparse24::device_model::{layer_timing, speedup_vs_dense, AmpereModel, KernelKind};
+use anyhow::Result;
+use std::path::PathBuf;
+
+fn results_dir() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+fn emit(id: &str, table: &TablePrinter) {
+    table.print();
+    let path = results_dir().join(format!("{id}.txt"));
+    if let Err(e) = std::fs::write(&path, table.render()) {
+        eprintln!("[tablegen] could not write {}: {e}", path.display());
+    }
+}
+
+/// Figure 1: parameter-count ratio curves (analytic).
+pub fn fig1_params() -> Result<()> {
+    let d = 4096usize;
+    let mut t = TablePrinter::new(
+        "Figure 1 — parameter ratio vs r/d (square d x d; dense = 1.0)",
+        &["r/d", "low-rank r(m+n)", "PIFA r(m+n)-r^2+r"],
+    );
+    for i in 1..=10 {
+        let frac = i as f64 / 10.0;
+        let r = ((d as f64) * frac) as usize;
+        t.row(&[
+            format!("{frac:.1}"),
+            format!("{:.3}", pifa::density_of_lowrank_rank(d, d, r)),
+            format!("{:.3}", pifa::density_of_pifa_rank(d, d, r)),
+        ]);
+    }
+    emit("fig1_params", &t);
+    Ok(())
+}
+
+/// Figure 3: LU vs QR vs PIFA non-trivial parameter structure.
+pub fn fig3_structure() -> Result<()> {
+    let (m, n) = (4096usize, 4096usize);
+    let mut t = TablePrinter::new(
+        "Figure 3 — factorization structure at rank r (4096 x 4096)",
+        &["r/d", "LU nontrivial", "QR nontrivial", "PIFA nontrivial", "PIFA rectangular"],
+    );
+    for frac in [0.25, 0.5, 0.75] {
+        let r = ((m as f64) * frac) as usize;
+        let lu = pifa::costs::lu_structure(m, n, r);
+        let qr = pifa::costs::qr_structure(m, n, r);
+        let pf = pifa::costs::pifa_structure(m, n, r);
+        t.row(&[
+            format!("{frac:.2}"),
+            format!("{}", lu.nontrivial),
+            format!("{}", qr.nontrivial),
+            format!("{}", pf.nontrivial),
+            format!("{}", pf.rectangular),
+        ]);
+    }
+    emit("fig3_structure", &t);
+    Ok(())
+}
+
+/// Tables 2 + 8: PPL x density for the low-rank methods, on both corpora.
+pub fn tab2_tab8() -> Result<()> {
+    let methods = [Method::Svd, Method::Asvd, Method::SvdLlm, Method::Mpifa];
+    let densities = density_grid();
+    let wiki = wiki_dataset();
+    let c4 = c4_dataset();
+
+    let mut head: Vec<String> = vec!["Model".into(), "Method".into(), "100%".into()];
+    head.extend(densities.iter().map(|d| format!("{:.0}%", d * 100.0)));
+    let head_refs: Vec<&str> = head.iter().map(String::as_str).collect();
+    let mut t2 = TablePrinter::new("Table 2 — wiki PPL at parameter densities", &head_refs);
+    let mut t8 = TablePrinter::new("Table 8 — c4 PPL at parameter densities", &head_refs);
+
+    for name in model_names() {
+        let model = ensure_trained_model(name)?;
+        let base_w = test_ppl(&model, &wiki);
+        let base_c = perplexity(&model, &c4, Split::Test);
+        for method in methods {
+            let mut row_w = vec![name.to_string(), method.name(), fmt_ppl(base_w)];
+            let mut row_c = vec![name.to_string(), method.name(), fmt_ppl(base_c)];
+            for &rho in &densities {
+                let compressed = compress_with_method(&model, &wiki, method, rho)?;
+                row_w.push(fmt_ppl(test_ppl(&compressed, &wiki)));
+                row_c.push(fmt_ppl(perplexity(&compressed, &c4, Split::Test)));
+                eprintln!("[tab2] {name} {} rho={rho} done", method.name());
+            }
+            t2.row(&row_w);
+            t8.row(&row_c);
+        }
+    }
+    emit("tab2_ppl", &t2);
+    emit("tab8_c4", &t8);
+    Ok(())
+}
+
+/// Table 3: PPL vs 2:4 semi-structured at matched memory (55% density).
+pub fn tab3_semistructured() -> Result<()> {
+    let wiki = wiki_dataset();
+    let mut t = TablePrinter::new(
+        "Table 3 — PPL vs 2:4 at matched memory (55% density)",
+        &["Method", "tiny-s (7B)", "tiny-m (13B)"],
+    );
+    let methods = [
+        Method::Magnitude24,
+        Method::Wanda24,
+        Method::Ria24,
+        Method::Svd,
+        Method::Asvd,
+        Method::SvdLlm,
+        Method::MpifaNs,
+    ];
+    let names = if fast_mode() { vec!["tiny-s"] } else { vec!["tiny-s", "tiny-m"] };
+    let mut cols: Vec<Vec<String>> = vec![Vec::new(); methods.len() + 1];
+    cols[0] = vec!["Dense".to_string()];
+    for name in &names {
+        let model = ensure_trained_model(name)?;
+        cols[0].push(fmt_ppl(test_ppl(&model, &wiki)));
+    }
+    for (mi, method) in methods.iter().enumerate() {
+        cols[mi + 1].push(method.name());
+        for name in &names {
+            let model = ensure_trained_model(name)?;
+            let density = if matches!(method, Method::Magnitude24 | Method::Wanda24 | Method::Ria24)
+            {
+                0.5 // 2:4 is fixed at 50% weights (0.5625 memory w/ metadata)
+            } else {
+                0.55
+            };
+            let compressed = compress_with_method(&model, &wiki, *method, density)?;
+            cols[mi + 1].push(fmt_ppl(test_ppl(&compressed, &wiki)));
+            eprintln!("[tab3] {name} {} done", method.name());
+        }
+    }
+    for col in cols {
+        let mut row = col;
+        while row.len() < 3 {
+            row.push("-".into());
+        }
+        t.row(&row);
+    }
+    emit("tab3_semistructured", &t);
+    Ok(())
+}
+
+/// Table 4: PPL after fine-tuning the compressed models.
+pub fn tab4_finetune() -> Result<()> {
+    use crate::train::finetune::{finetune_compressed, FinetuneConfig};
+    let wiki = wiki_dataset();
+    let name = "tiny-s";
+    let model = ensure_trained_model(name)?;
+    let mut t = TablePrinter::new(
+        "Table 4 — PPL after fine-tuning (tiny-s)",
+        &["Method", "PPL before FT", "PPL after FT"],
+    );
+    t.row(&["Dense".into(), fmt_ppl(test_ppl(&model, &wiki)), "-".into()]);
+    let methods = [
+        (Method::Magnitude24, 0.5),
+        (Method::Wanda24, 0.5),
+        (Method::Ria24, 0.5),
+        (Method::Svd, 0.55),
+        (Method::Asvd, 0.55),
+        (Method::SvdLlm, 0.55),
+        (Method::MpifaNs, 0.55),
+    ];
+    let ft = FinetuneConfig {
+        steps: if fast_mode() { 30 } else { 120 },
+        batch: 4,
+        peak_lr: 3e-4,
+        seed: 5,
+    };
+    for (method, rho) in methods {
+        let mut compressed = compress_with_method(&model, &wiki, method, rho)?;
+        let before = test_ppl(&compressed, &wiki);
+        finetune_compressed(&mut compressed, &wiki, &ft);
+        let after = test_ppl(&compressed, &wiki);
+        eprintln!("[tab4] {} {before:.2} -> {after:.2}", method.name());
+        t.row(&[method.name(), fmt_ppl(before), fmt_ppl(after)]);
+    }
+    emit("tab4_finetune", &t);
+    Ok(())
+}
+
+/// Table 5: ablation W / W+U / W+M / W+M+PIFA across densities.
+pub fn tab5_ablation() -> Result<()> {
+    let wiki = wiki_dataset();
+    let densities = density_grid();
+    let mut head: Vec<String> = vec!["Model".into(), "Method".into(), "100%".into()];
+    head.extend(densities.iter().map(|d| format!("{:.0}%", d * 100.0)));
+    let head_refs: Vec<&str> = head.iter().map(String::as_str).collect();
+    let mut t = TablePrinter::new("Table 5 — ablation: W / W+U / W+M / MPIFA", &head_refs);
+    let arms = [Method::SvdLlmW, Method::SvdLlmWU, Method::WPlusM, Method::Mpifa];
+    for name in model_names() {
+        let model = ensure_trained_model(name)?;
+        let base = test_ppl(&model, &wiki);
+        for method in arms {
+            let mut row = vec![name.to_string(), method.name(), fmt_ppl(base)];
+            for &rho in &densities {
+                let compressed = compress_with_method(&model, &wiki, method, rho)?;
+                row.push(fmt_ppl(test_ppl(&compressed, &wiki)));
+                eprintln!("[tab5] {name} {} rho={rho} done", method.name());
+            }
+            t.row(&row);
+        }
+    }
+    emit("tab5_ablation", &t);
+    Ok(())
+}
+
+/// Figure 5: PPL vs mix ratio lambda at 50% density.
+pub fn fig5_mix_ratio() -> Result<()> {
+    let wiki = wiki_dataset();
+    // tiny-m at a harsh density: error accumulation needs depth and real
+    // degradation before the dense-flow correction has anything to fix.
+    let name = if fast_mode() { "tiny-s" } else { "tiny-m" };
+    let model = ensure_trained_model(name)?;
+    let calib = wiki.calibration_windows(calib_count(Method::Mpifa), 77);
+    let mut t = TablePrinter::new(
+        "Figure 5 — PPL vs mix ratio lambda (density 0.35)",
+        &["lambda", "PPL"],
+    );
+    let lambdas = if fast_mode() {
+        vec![0.0, 0.25, 1.0]
+    } else {
+        vec![0.0, 0.125, 0.25, 0.375, 0.5, 0.75, 1.0]
+    };
+    for lam in lambdas {
+        let mut cfg = CompressConfig::mpifa(0.35);
+        cfg.recon = ReconMode::Online { target: ReconTarget::Both, lambda: lam };
+        let (compressed, _) = mpifa_compress_model(&model, &calib, &cfg)?;
+        let ppl = test_ppl(&compressed, &wiki);
+        eprintln!("[fig5] lambda={lam} ppl={ppl:.2}");
+        t.row(&[format!("{lam:.3}"), fmt_ppl(ppl)]);
+    }
+    emit("fig5_mix_ratio", &t);
+    Ok(())
+}
+
+/// Figure 6: PPL vs calibration sample count, for U / V^T / both.
+pub fn fig6_calib_size() -> Result<()> {
+    let wiki = wiki_dataset();
+    let name = if fast_mode() { "tiny-s" } else { "tiny-m" };
+    let model = ensure_trained_model(name)?;
+    let sizes = if fast_mode() { vec![4usize, 16] } else { vec![2usize, 4, 8, 16, 32, 64] };
+    let mut t = TablePrinter::new(
+        "Figure 6 — PPL vs calibration samples (density 0.35)",
+        &["samples", "recon U", "recon V^T", "recon both"],
+    );
+    for &n in &sizes {
+        let calib = wiki.calibration_windows(n, 77);
+        let mut row = vec![format!("{n}")];
+        for target in [ReconTarget::UOnly, ReconTarget::VtOnly, ReconTarget::Both] {
+            let mut cfg = CompressConfig::mpifa(0.35);
+            cfg.recon = ReconMode::Online { target, lambda: 0.25 };
+            let (compressed, _) = mpifa_compress_model(&model, &calib, &cfg)?;
+            row.push(fmt_ppl(test_ppl(&compressed, &wiki)));
+        }
+        eprintln!("[fig6] n={n} done");
+        t.row(&row);
+    }
+    emit("fig6_calib_size", &t);
+    Ok(())
+}
+
+/// Figure 8: condition numbers vs calibration size (first-layer q module).
+pub fn fig8_condition() -> Result<()> {
+    let wiki = wiki_dataset();
+    let model = ensure_trained_model("tiny-s")?;
+    let w = model.module(0, crate::model::transformer::ModuleKind::Q).to_dense().cast::<f64>();
+    let r = pifa::rank_for_density_pifa(w.rows(), w.cols(), 0.5);
+    // First-layer inputs = RMSNorm(embed(tokens)).
+    let windows = wiki.calibration_windows(64, 99);
+    let calib: Vec<Mat<f64>> = windows
+        .iter()
+        .map(|toks| {
+            let h = model.embed_tokens(toks);
+            let (x, _) = crate::model::ops::rmsnorm(&h, &model.blocks[0].attn_norm, model.cfg.norm_eps);
+            x.transpose().cast::<f64>()
+        })
+        .collect();
+    let sizes = [2usize, 4, 8, 16, 32, 64];
+    let pts = crate::eval::cond::condition_study(&w, &calib, r, &sizes);
+    let mut t = TablePrinter::new(
+        "Figure 8 — condition numbers vs calibration samples (tiny-s layer 0 q)",
+        &["samples", "cond(V^T XX^T V) [Eq.5]", "cond(XX^T) [Eq.8]"],
+    );
+    for p in pts {
+        t.row(&[
+            format!("{}", p.samples),
+            format!("{:.3e}", p.cond_u_solve),
+            format!("{:.3e}", p.cond_v_solve),
+        ]);
+    }
+    emit("fig8_condition", &t);
+    Ok(())
+}
+
+/// Table 9: zero-shot probe accuracy across densities.
+pub fn tab9_zeroshot() -> Result<()> {
+    let wiki = wiki_dataset();
+    let v = crate::data::vocab::Vocab::new();
+    let model = ensure_trained_model("tiny-s")?;
+    let methods = [Method::Svd, Method::Asvd, Method::SvdLlm, Method::Mpifa];
+    let densities = if fast_mode() { vec![0.5] } else { vec![0.9, 0.7, 0.5] };
+    let n_items = if fast_mode() { 20 } else { 60 };
+
+    let mut head = vec!["Density".to_string(), "Method".to_string()];
+    let dense_results = run_task_suite(&model, &v, n_items, 7);
+    for r in &dense_results {
+        head.push(r.name.to_string());
+    }
+    head.push("Mean".into());
+    let head_refs: Vec<&str> = head.iter().map(String::as_str).collect();
+    let mut t = TablePrinter::new("Table 9 — zero-shot probe accuracy (tiny-s)", &head_refs);
+    let mut dense_row = vec!["100%".to_string(), "Dense".to_string()];
+    for r in &dense_results {
+        dense_row.push(format!("{:.1}", r.accuracy * 100.0));
+    }
+    dense_row.push(format!("{:.1}", mean_accuracy(&dense_results) * 100.0));
+    t.row(&dense_row);
+
+    for &rho in &densities {
+        for method in methods {
+            let compressed = compress_with_method(&model, &wiki, method, rho)?;
+            let results = run_task_suite(&compressed, &v, n_items, 7);
+            let mut row = vec![format!("{:.0}%", rho * 100.0), method.name()];
+            for r in &results {
+                row.push(format!("{:.1}", r.accuracy * 100.0));
+            }
+            row.push(format!("{:.1}", mean_accuracy(&results) * 100.0));
+            eprintln!("[tab9] rho={rho} {} done", method.name());
+            t.row(&row);
+        }
+    }
+    emit("tab9_zeroshot", &t);
+    Ok(())
+}
+
+/// Table 6 + Figure 4: layerwise speedup/memory vs 2:4 across dims.
+///
+/// Two complementary reproductions: (a) the analytic Ampere device model
+/// at the paper's dims, (b) *measured* CPU wall-clock via the PJRT layer
+/// artifacts and the Rust-native kernels at scaled dims.
+pub fn tab6_layerwise() -> Result<()> {
+    // (a) Analytic Ampere model at paper scale.
+    let dims = [32768usize, 16384, 8192, 4096];
+    let tokens = 2048 * 32;
+    let mut t = TablePrinter::new(
+        "Table 6a — Ampere device model: speedup vs dense (seq 2048, batch 32, fp16)",
+        &["GPU", "Kernel", "32768", "16384", "8192", "4096"],
+    );
+    for gpu in [AmpereModel::A6000, AmpereModel::A100] {
+        for (kname, kernel) in [
+            ("2:4 (cuSPARSELt)", KernelKind::Sparse24CuSparseLt),
+            ("2:4 (CUTLASS)", KernelKind::Sparse24Cutlass),
+            ("PIFA 55%", KernelKind::Pifa { density: 0.55 }),
+        ] {
+            let mut row = vec![format!("{gpu:?}"), kname.to_string()];
+            for &d in &dims {
+                row.push(fmt_speedup(speedup_vs_dense(gpu, kernel, d, tokens)));
+            }
+            t.row(&row);
+        }
+    }
+    emit("tab6a_device_model", &t);
+
+    let mut tm = TablePrinter::new(
+        "Table 6b — device-model memory ratio vs dense",
+        &["Kernel", "32768", "16384", "8192", "4096"],
+    );
+    for (kname, kernel) in [
+        ("2:4", KernelKind::Sparse24Cutlass),
+        ("PIFA 55%", KernelKind::Pifa { density: 0.55 }),
+    ] {
+        let mut row = vec![kname.to_string()];
+        for &d in &dims {
+            row.push(format!("{:.3}", layer_timing(AmpereModel::A6000, kernel, d, tokens).mem_ratio));
+        }
+        tm.row(&row);
+    }
+    emit("tab6b_device_memory", &tm);
+
+    // (b) Measured CPU wall-clock via PJRT artifacts (scaled dims).
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        let mut engine = crate::runtime::Engine::new(&dir)?;
+        let cpu_dims = if fast_mode() { vec![256usize, 512] } else { vec![256usize, 512, 1024, 2048] };
+        let mut tc = TablePrinter::new(
+            "Table 6c — measured CPU (PJRT/XLA) layer speedup vs dense, tokens=256 fp32",
+            &["Kernel", "d=256", "d=512", "d=1024", "d=2048"],
+        );
+        let mut rows: Vec<Vec<String>> = vec![
+            vec!["dense (ms)".into()],
+            vec!["lowrank 55%".into()],
+            vec!["PIFA 55%".into()],
+        ];
+        for &d in &cpu_dims {
+            let tkn = 256;
+            let time_art = |engine: &mut crate::runtime::Engine, name: &str, args: &[xla::Literal]| {
+                let samples = if fast_mode() { 3 } else { 7 };
+                let r = bench_fn(name, 2, samples, || {
+                    let _ = engine.run(name, args).unwrap();
+                });
+                r.median_secs()
+            };
+            // dense
+            let x = vec![0.5f32; tkn * d];
+            let w = vec![0.5f32; d * d];
+            let args_d = vec![
+                crate::runtime::loader::literal_f32(&x, &[tkn, d])?,
+                crate::runtime::loader::literal_f32(&w, &[d, d])?,
+            ];
+            let td = time_art(&mut engine, &format!("layer_dense_d{d}_t256"), &args_d);
+            rows[0].push(format!("{:.2}", td * 1e3));
+            // lowrank
+            let r_lr = pifa::rank_for_density_lowrank(d, d, 0.55);
+            let args_l = vec![
+                crate::runtime::loader::literal_f32(&x, &[tkn, d])?,
+                crate::runtime::loader::literal_f32(&vec![0.5f32; d * r_lr], &[d, r_lr])?,
+                crate::runtime::loader::literal_f32(&vec![0.5f32; r_lr * d], &[r_lr, d])?,
+            ];
+            let tl = time_art(&mut engine, &format!("layer_lowrank_d{d}_t256_rho55"), &args_l);
+            rows[1].push(format!("{:.2}x", td / tl));
+            // pifa
+            let r_pf = pifa::rank_for_density_pifa(d, d, 0.55);
+            let inv: Vec<i32> = (0..d as i32).collect();
+            let args_p = vec![
+                crate::runtime::loader::literal_f32(&x, &[tkn, d])?,
+                crate::runtime::loader::literal_f32(&vec![0.5f32; r_pf * d], &[r_pf, d])?,
+                crate::runtime::loader::literal_f32(&vec![0.1f32; (d - r_pf) * r_pf], &[d - r_pf, r_pf])?,
+                crate::runtime::loader::literal_i32(&inv, &[d])?,
+            ];
+            let tp = time_art(&mut engine, &format!("layer_pifa_d{d}_t256_rho55"), &args_p);
+            rows[2].push(format!("{:.2}x", td / tp));
+            eprintln!("[tab6c] d={d}: dense {:.2}ms lowrank {:.2}x pifa {:.2}x", td * 1e3, td / tl, td / tp);
+        }
+        for mut row in rows {
+            while row.len() < 5 {
+                row.push("-".into());
+            }
+            tc.row(&row);
+        }
+        emit("tab6c_cpu_measured", &tc);
+    } else {
+        eprintln!("[tab6] artifacts missing; run `make artifacts` for the measured half");
+    }
+    Ok(())
+}
+
+/// Figure 7: PIFA layer efficiency vs rank (memory + runtime).
+pub fn fig7_rank_sweep() -> Result<()> {
+    let d = 1024usize;
+    let mut t = TablePrinter::new(
+        "Figure 7 — layer memory + measured time vs density (d=1024, tokens=256)",
+        &["density", "lowrank mem", "PIFA mem", "lowrank time", "PIFA time", "PIFA speedup vs dense"],
+    );
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let have = dir.join("manifest.txt").exists();
+    let mut engine = if have { Some(crate::runtime::Engine::new(&dir)?) } else { None };
+    let tkn = 256;
+    let x = vec![0.5f32; tkn * d];
+    // dense baseline
+    let mut t_dense = f64::NAN;
+    if let Some(eng) = engine.as_mut() {
+        if eng.manifest.get(&format!("layer_dense_d{d}_t256")).is_ok() {
+            let args = vec![
+                crate::runtime::loader::literal_f32(&x, &[tkn, d])?,
+                crate::runtime::loader::literal_f32(&vec![0.5f32; d * d], &[d, d])?,
+            ];
+            t_dense = bench_fn("dense", 2, 5, || {
+                let _ = eng.run(&format!("layer_dense_d{d}_t256"), &args).unwrap();
+            })
+            .median_secs();
+        }
+    }
+    for rho in [0.3, 0.5, 0.7, 0.9] {
+        let r_lr = pifa::rank_for_density_lowrank(d, d, rho);
+        let r_pf = pifa::rank_for_density_pifa(d, d, rho);
+        let mem_lr = pifa::density_of_lowrank_rank(d, d, r_lr);
+        let mem_pf = pifa::density_of_pifa_rank(d, d, r_pf);
+        let (mut tl, mut tp) = (f64::NAN, f64::NAN);
+        if let Some(eng) = engine.as_mut() {
+            let lname = format!("layer_lowrank_d{d}_t256_rho{}", (rho * 100.0) as usize);
+            let pname = format!("layer_pifa_d{d}_t256_rho{}", (rho * 100.0) as usize);
+            if eng.manifest.get(&lname).is_ok() {
+                let args = vec![
+                    crate::runtime::loader::literal_f32(&x, &[tkn, d])?,
+                    crate::runtime::loader::literal_f32(&vec![0.5f32; d * r_lr], &[d, r_lr])?,
+                    crate::runtime::loader::literal_f32(&vec![0.5f32; r_lr * d], &[r_lr, d])?,
+                ];
+                tl = bench_fn("lr", 1, 5, || {
+                    let _ = eng.run(&lname, &args).unwrap();
+                })
+                .median_secs();
+            }
+            if eng.manifest.get(&pname).is_ok() {
+                let inv: Vec<i32> = (0..d as i32).collect();
+                let args = vec![
+                    crate::runtime::loader::literal_f32(&x, &[tkn, d])?,
+                    crate::runtime::loader::literal_f32(&vec![0.5f32; r_pf * d], &[r_pf, d])?,
+                    crate::runtime::loader::literal_f32(&vec![0.1f32; (d - r_pf) * r_pf], &[d - r_pf, r_pf])?,
+                    crate::runtime::loader::literal_i32(&inv, &[d])?,
+                ];
+                tp = bench_fn("pf", 1, 5, || {
+                    let _ = eng.run(&pname, &args).unwrap();
+                })
+                .median_secs();
+            }
+        }
+        t.row(&[
+            format!("{rho:.1}"),
+            format!("{mem_lr:.3}"),
+            format!("{mem_pf:.3}"),
+            if tl.is_nan() { "-".into() } else { format!("{:.2} ms", tl * 1e3) },
+            if tp.is_nan() { "-".into() } else { format!("{:.2} ms", tp * 1e3) },
+            if tp.is_nan() || t_dense.is_nan() {
+                "-".into()
+            } else {
+                format!("{:.2}x", t_dense / tp)
+            },
+        ]);
+        eprintln!("[fig7] rho={rho} done");
+    }
+    emit("fig7_rank_sweep", &t);
+    Ok(())
+}
+
+/// Table 7: end-to-end serving throughput + memory.
+pub fn tab7_e2e() -> Result<()> {
+    use crate::coordinator::{GenerationEngine, GenerationMode};
+    use crate::runtime::{Engine, ModelRunner};
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("[tab7] artifacts missing; run `make artifacts`");
+        return Ok(());
+    }
+    let name = "tiny-s";
+    let wiki = wiki_dataset();
+    let model = ensure_trained_model(name)?;
+    let mpifa = compress_with_method(&model, &wiki, Method::Mpifa, 0.55)?;
+    let sparse = compress_with_method(&model, &wiki, Method::Wanda24, 0.5)?;
+
+    let mut t = TablePrinter::new(
+        "Table 7 — end-to-end serving (tiny-s, PJRT CPU; 2:4 = Rust-native kernel)",
+        &["Variant", "KV cache", "tok/s", "weights MB (fp16)"],
+    );
+
+    let max_new = if fast_mode() { 8 } else { 24 };
+    let n_prompts = if fast_mode() { 2 } else { 6 };
+    let prompts: Vec<Vec<usize>> = (0..n_prompts).map(|i| vec![5 + i, 17, 42, 3]).collect();
+
+    let serve = |variant: &str,
+                     served: &crate::model::transformer::Transformer,
+                     prefill: String,
+                     decode: String,
+                     mode: GenerationMode|
+     -> Result<f64> {
+        let mut pjrt = Engine::new(&dir)?;
+        let runner = ModelRunner::new(&mut pjrt, served, &prefill, &decode)?;
+        let gen = GenerationEngine::new(runner, mode);
+        let mut toks = 0usize;
+        let mut secs = 0f64;
+        for p in &prompts {
+            let (outs, dur) = gen.generate_batch(&mut pjrt, &[p.clone()], max_new)?;
+            toks += outs.iter().map(|o| o.len()).sum::<usize>();
+            secs += dur.as_secs_f64();
+        }
+        let tput = toks as f64 / secs;
+        eprintln!("[tab7] {variant}: {tput:.1} tok/s");
+        Ok(tput)
+    };
+
+    for (variant, served, flav) in [
+        ("Dense", &model, "dense"),
+        ("MPIFA 55%", &mpifa, "pifa55"),
+    ] {
+        let prefill = format!("{name}_{flav}_prefill_b1_t64");
+        let decode = format!("{name}_{flav}_decode_b1");
+        let kv = serve(variant, served, prefill.clone(), decode.clone(), GenerationMode::KvCache)?;
+        let nokv = serve(variant, served, prefill, decode, GenerationMode::NoKvCache)?;
+        let mem = served.memory_bytes_fp16() as f64 / 1e6;
+        t.row(&[variant.into(), "Yes".into(), format!("{kv:.1}"), format!("{mem:.2}")]);
+        t.row(&[variant.into(), "No".into(), format!("{nokv:.1}"), format!("{mem:.2}")]);
+    }
+
+    // 2:4 via the Rust-native kernel (no PJRT 2:4 kernel exists — the
+    // analogue of torch.sparse's unsupported ops; the PJRT row reproduces
+    // the paper's Error). Native rows are measured against a native dense
+    // baseline — PJRT and native loops have different dispatch overheads
+    // at tiny-model scale, so the two groups are not cross-comparable.
+    {
+        let native_tput = |m: &crate::model::transformer::Transformer| {
+            let t0 = std::time::Instant::now();
+            let mut toks = 0usize;
+            for p in &prompts {
+                toks += m.generate(p, max_new).len();
+            }
+            toks as f64 / t0.elapsed().as_secs_f64()
+        };
+        let td = native_tput(&model);
+        let ts = native_tput(&sparse);
+        t.row(&[
+            "Dense (native loop)".into(),
+            "Yes".into(),
+            format!("{td:.1}"),
+            format!("{:.2}", model.memory_bytes_fp16() as f64 / 1e6),
+        ]);
+        let mem = sparse.memory_bytes_fp16() as f64 / 1e6;
+        t.row(&[
+            "2:4 Wanda (native loop)".into(),
+            "Yes".into(),
+            format!("{ts:.1} ({:.2}x vs native dense)", ts / td),
+            format!("{mem:.2}"),
+        ]);
+        t.row(&[
+            "2:4 (PJRT)".into(),
+            "Yes/No".into(),
+            "Error (no sparse kernel)".into(),
+            format!("{mem:.2}"),
+        ]);
+    }
+    emit("tab7_e2e", &t);
+    Ok(())
+}
+
+/// Tables 10-12: LLM-Pruner structured baseline.
+pub fn tab10_llmpruner() -> Result<()> {
+    let wiki = wiki_dataset();
+    let model = ensure_trained_model("tiny-s")?;
+    let densities = density_grid();
+    let mut head: Vec<String> = vec!["Method".into(), "100%".into()];
+    head.extend(densities.iter().map(|d| format!("{:.0}%", d * 100.0)));
+    let head_refs: Vec<&str> = head.iter().map(String::as_str).collect();
+    let mut t = TablePrinter::new("Table 10 — LLM-Pruner vs MPIFA PPL (tiny-s)", &head_refs);
+    let base = test_ppl(&model, &wiki);
+    for method in [Method::LlmPruner, Method::Mpifa] {
+        let mut row = vec![method.name(), fmt_ppl(base)];
+        for &rho in &densities {
+            let c = compress_with_method(&model, &wiki, method, rho)?;
+            row.push(fmt_ppl(test_ppl(&c, &wiki)));
+            eprintln!("[tab10] {} rho={rho} done", method.name());
+        }
+        t.row(&row);
+    }
+    emit("tab10_llmpruner_ppl", &t);
+
+    // Tables 11/12: layer speed + memory, Rust-native kernels.
+    let mut t11 = TablePrinter::new(
+        "Table 11/12 — layer speedup & memory vs dense (Rust-native, d=512, tokens=128)",
+        &["Method (density)", "speedup", "memory ratio"],
+    );
+    let d = 512usize;
+    let tkn = 128usize;
+    let mut rng = crate::linalg::Rng::new(4242);
+    let x: Mat<f32> = Mat::randn(tkn, d, &mut rng);
+    let w: Mat<f32> = Mat::randn(d, d, &mut rng);
+    let samples = if fast_mode() { 3 } else { 9 };
+    let t_dense = bench_fn("dense", 2, samples, || {
+        let _ = crate::linalg::matmul_nt(&x, &w);
+    })
+    .median_secs();
+    for rho in [0.55, 0.7] {
+        // PIFA layer at rho.
+        let r = pifa::rank_for_density_pifa(d, d, rho);
+        let wl: Mat<f32> = Mat::rand_low_rank(d, d, r, &mut rng);
+        let layer = pifa::pivoting_factorization(&wl, r, pifa::PivotStrategy::QrColumnPivot)?;
+        let t_p = bench_fn("pifa", 2, samples, || {
+            let _ = layer.apply_rows(&x);
+        })
+        .median_secs();
+        t11.row(&[
+            format!("PIFA ({rho})"),
+            format!("{:.2}x", t_dense / t_p),
+            format!("{:.3}", layer.density()),
+        ]);
+        // LLM-Pruner structured = smaller dense GEMM.
+        let keep = ((d as f64) * rho) as usize;
+        let ws: Mat<f32> = Mat::randn(keep, d, &mut rng);
+        let t_s = bench_fn("structured", 2, samples, || {
+            let _ = crate::linalg::matmul_nt(&x, &ws);
+        })
+        .median_secs();
+        t11.row(&[
+            format!("LLM-Pruner ({rho})"),
+            format!("{:.2}x", t_dense / t_s),
+            format!("{rho:.3}"),
+        ]);
+        eprintln!("[tab11] rho={rho} done");
+    }
+    emit("tab11_12_llmpruner_layer", &t11);
+    Ok(())
+}
+
+/// Tables 13/14: compression time + peak working set.
+pub fn tab13_cost() -> Result<()> {
+    let wiki = wiki_dataset();
+    let mut t = TablePrinter::new(
+        "Tables 13/14 — compression wall-clock and peak working set",
+        &["Model", "Method", "seconds", "peak MB"],
+    );
+    let names = if fast_mode() { vec!["tiny-s"] } else { vec!["tiny-s", "tiny-m"] };
+    for name in names {
+        let model = ensure_trained_model(name)?;
+        let calib = wiki.calibration_windows(calib_count(Method::Mpifa), 77);
+        for (label, cfg) in [
+            ("ASVD", {
+                let mut c = CompressConfig::w_only(0.5);
+                c.prune = crate::baselines::prune::PruneAlgo::Asvd { alpha: 0.5 };
+                c
+            }),
+            ("SVD-LLM (W)", CompressConfig::w_only(0.5)),
+            ("M (recon only)", CompressConfig::w_plus_m(0.5)),
+            ("MPIFA", CompressConfig::mpifa(0.5)),
+        ] {
+            let (_, metrics) = mpifa_compress_model(&model, &calib, &cfg)?;
+            let (secs, peak) = metrics.finish();
+            eprintln!("[tab13] {name} {label}: {secs:.2}s peak {:.1} MB", peak as f64 / 1e6);
+            t.row(&[
+                name.to_string(),
+                label.to_string(),
+                format!("{secs:.2}"),
+                format!("{:.1}", peak as f64 / 1e6),
+            ]);
+        }
+    }
+    emit("tab13_14_cost", &t);
+    Ok(())
+}
+
+/// Table 15: PIFA and M on top of ESPACE variants at 50% density.
+pub fn tab15_espace() -> Result<()> {
+    let wiki = wiki_dataset();
+    let model = ensure_trained_model("tiny-s")?;
+    let mut t = TablePrinter::new(
+        "Table 15 — PPL at 50% density: X / X+PIFA / X+M / X+MPIFA (tiny-s)",
+        &["Pruning (X)", "X", "X+PIFA", "X+M", "X+MPIFA"],
+    );
+    let variants: Vec<(String, Option<EspaceVariant>)> = vec![
+        ("SVD-LLM (W)".into(), None),
+        ("ESPACE (MSE)".into(), Some(EspaceVariant::Mse)),
+        ("ESPACE (MSE-NORM)".into(), Some(EspaceVariant::MseNorm)),
+        ("ESPACE (GO-MSE)".into(), Some(EspaceVariant::GoMse)),
+        ("ESPACE (GO-MSE-NORM)".into(), Some(EspaceVariant::GoMseNorm)),
+    ];
+    let rho = 0.5;
+    for (label, var) in variants {
+        if fast_mode() && label.contains("NORM") {
+            continue;
+        }
+        let combos = [(false, false), (false, true), (true, false), (true, true)];
+        let mut row = vec![label.clone()];
+        for (with_m, with_pifa) in combos {
+            let compressed = match var {
+                Some(v) => espace_combo(&model, &wiki, v, rho, with_m, with_pifa)?,
+                None => {
+                    let calib = wiki.calibration_windows(calib_count(Method::Mpifa), 77);
+                    let mut cfg = if with_m {
+                        CompressConfig::w_plus_m(rho)
+                    } else {
+                        CompressConfig::w_only(rho)
+                    };
+                    cfg.apply_pifa = with_pifa;
+                    mpifa_compress_model(&model, &calib, &cfg)?.0
+                }
+            };
+            row.push(fmt_ppl(test_ppl(&compressed, &wiki)));
+        }
+        eprintln!("[tab15] {label} done");
+        t.row(&row);
+    }
+    emit("tab15_espace", &t);
+    Ok(())
+}
+
+/// Dispatch: run one named experiment, or all of them.
+pub fn run(which: &str) -> Result<()> {
+    let all: Vec<(&str, fn() -> Result<()>)> = vec![
+        ("fig1", fig1_params),
+        ("fig3", fig3_structure),
+        ("tab2", tab2_tab8),
+        ("tab3", tab3_semistructured),
+        ("tab4", tab4_finetune),
+        ("tab5", tab5_ablation),
+        ("fig5", fig5_mix_ratio),
+        ("fig6", fig6_calib_size),
+        ("tab6", tab6_layerwise),
+        ("fig7", fig7_rank_sweep),
+        ("tab7", tab7_e2e),
+        ("fig8", fig8_condition),
+        ("tab9", tab9_zeroshot),
+        ("tab10", tab10_llmpruner),
+        ("tab13", tab13_cost),
+        ("tab15", tab15_espace),
+    ];
+    if which == "all" {
+        for (name, f) in &all {
+            eprintln!("\n[tablegen] ===== {name} =====");
+            f()?;
+        }
+        return Ok(());
+    }
+    // Aliases: tab8 is produced by tab2's generator, tab11/12 by tab10's,
+    // tab14 by tab13's, fig4 by tab6's.
+    let which = match which {
+        "tab8" => "tab2",
+        "tab11" | "tab12" => "tab10",
+        "tab14" => "tab13",
+        "fig4" => "tab6",
+        w => w,
+    };
+    for (name, f) in &all {
+        if *name == which {
+            return f();
+        }
+    }
+    anyhow::bail!("unknown experiment '{which}' (try: fig1 fig3 fig5-8, tab2-15, all)")
+}

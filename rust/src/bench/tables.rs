@@ -1,0 +1,124 @@
+//! Aligned-table printing for the paper-reproduction benches.
+
+/// Collects rows and prints an aligned ASCII table with a caption tying it
+/// back to the paper's table/figure number.
+pub struct TablePrinter {
+    caption: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(caption: &str, header: &[&str]) -> Self {
+        Self {
+            caption: caption.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Render to a string (and also used by `print`).
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.caption));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for i in 0..ncol {
+                s.push_str(&format!("{:<w$} | ", cells[i], w = widths[i]));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 3 * ncol + 1;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a float with sensible precision for PPL-style tables.
+pub fn fmt_ppl(v: f64) -> String {
+    if !v.is_finite() {
+        "inf".to_string()
+    } else if v >= 1000.0 {
+        format!("{v:.0}")
+    } else if v >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+/// Format a speedup ratio like the paper ("1.95x").
+pub fn fmt_speedup(v: Option<f64>) -> String {
+    match v {
+        Some(s) => format!("{s:.2}x"),
+        None => "Error".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TablePrinter::new("Table X", &["Method", "PPL"]);
+        t.row_strs(&["MPIFA", "12.77"]);
+        t.row_strs(&["SVD-LLM", "27.19"]);
+        let s = t.render();
+        assert!(s.contains("Table X"));
+        assert!(s.contains("| MPIFA"));
+        assert!(s.contains("| SVD-LLM"));
+        // Columns aligned: both data rows have the same pipe positions.
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        let pipe_pos = |l: &str| l.match_indices('|').map(|(i, _)| i).collect::<Vec<_>>();
+        assert_eq!(pipe_pos(lines[1]), pipe_pos(lines[2]));
+    }
+
+    #[test]
+    fn ppl_formatting() {
+        assert_eq!(fmt_ppl(5.472), "5.47");
+        assert_eq!(fmt_ppl(221.63), "221.6");
+        assert_eq!(fmt_ppl(26040.0), "26040");
+        assert_eq!(fmt_ppl(f64::INFINITY), "inf");
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(fmt_speedup(Some(1.949)), "1.95x");
+        assert_eq!(fmt_speedup(None), "Error");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_bad_rows() {
+        let mut t = TablePrinter::new("x", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+}

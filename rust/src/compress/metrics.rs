@@ -1,0 +1,136 @@
+//! Compression-run instrumentation for Tables 13 (time) and 14 (peak
+//! memory during compression).
+//!
+//! Peak memory is tracked *logically*: the compression pipeline registers
+//! its live major allocations (activation flows, Gram accumulators, the
+//! layer being compressed) so the number reflects the algorithm's working
+//! set — the quantity the paper's Table 14 compares — rather than allocator
+//! noise.
+
+use std::time::Instant;
+
+/// Tracks wall-clock and logical peak working-set bytes of one
+/// compression run.
+#[derive(Debug)]
+pub struct CompressionMetrics {
+    start: Instant,
+    current_bytes: usize,
+    pub peak_bytes: usize,
+    /// Per-phase wall-clock (label, seconds).
+    pub phases: Vec<(String, f64)>,
+    phase_start: Option<(String, Instant)>,
+}
+
+impl Default for CompressionMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CompressionMetrics {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            current_bytes: 0,
+            peak_bytes: 0,
+            phases: Vec::new(),
+            phase_start: None,
+        }
+    }
+
+    /// Register an allocation of `bytes` in the working set.
+    pub fn alloc(&mut self, bytes: usize) {
+        self.current_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes);
+    }
+
+    /// Release `bytes` from the working set.
+    pub fn free(&mut self, bytes: usize) {
+        self.current_bytes = self.current_bytes.saturating_sub(bytes);
+    }
+
+    /// Begin a named phase (ends any open phase).
+    pub fn begin_phase(&mut self, label: &str) {
+        self.end_phase();
+        self.phase_start = Some((label.to_string(), Instant::now()));
+    }
+
+    /// Close the currently open phase.
+    pub fn end_phase(&mut self) {
+        if let Some((label, t0)) = self.phase_start.take() {
+            self.phases.push((label, t0.elapsed().as_secs_f64()));
+        }
+    }
+
+    /// Total elapsed seconds since construction.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Finish: close phases and return (total seconds, peak bytes).
+    pub fn finish(mut self) -> (f64, usize) {
+        self.end_phase();
+        (self.elapsed_secs(), self.peak_bytes)
+    }
+}
+
+/// Bytes of an `r x c` f32 matrix (helper for logical accounting).
+pub fn mat_bytes_f32(r: usize, c: usize) -> usize {
+    r * c * 4
+}
+
+/// Bytes of an `r x c` f64 matrix.
+pub fn mat_bytes_f64(r: usize, c: usize) -> usize {
+    r * c * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut m = CompressionMetrics::new();
+        m.alloc(100);
+        m.alloc(50);
+        m.free(120);
+        m.alloc(30);
+        assert_eq!(m.peak_bytes, 150);
+    }
+
+    #[test]
+    fn free_saturates() {
+        let mut m = CompressionMetrics::new();
+        m.alloc(10);
+        m.free(100);
+        m.alloc(5);
+        assert_eq!(m.peak_bytes, 10);
+    }
+
+    #[test]
+    fn phases_record() {
+        let mut m = CompressionMetrics::new();
+        m.begin_phase("whiten");
+        m.begin_phase("recon");
+        m.end_phase();
+        assert_eq!(m.phases.len(), 2);
+        assert_eq!(m.phases[0].0, "whiten");
+        assert_eq!(m.phases[1].0, "recon");
+    }
+
+    #[test]
+    fn finish_returns_totals() {
+        let mut m = CompressionMetrics::new();
+        m.alloc(64);
+        m.begin_phase("p");
+        let (secs, peak) = m.finish();
+        assert!(secs >= 0.0);
+        assert_eq!(peak, 64);
+    }
+
+    #[test]
+    fn byte_helpers() {
+        assert_eq!(mat_bytes_f32(2, 3), 24);
+        assert_eq!(mat_bytes_f64(2, 3), 48);
+    }
+}

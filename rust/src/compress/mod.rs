@@ -1,0 +1,21 @@
+//! Low-rank compression pipeline (paper §4 + Algorithm 3).
+//!
+//! * [`whiten`] — SVD-LLM truncation-aware data whitening ("W" in the
+//!   ablations): `S = chol(X X^T)`, truncate `SVD(W S)`, un-whiten.
+//! * [`recon`] — reconstruction: the original full-batch update ("U"), and
+//!   our **Online Error-Accumulation-Minimization Reconstruction ("M")**
+//!   with dual data flows, mix ratio λ, and the Eq. 9 ridge.
+//! * [`mpifa`] — the end-to-end MPIFA driver (Algorithm 3): walks a
+//!   [`crate::model::Transformer`] module-by-module, maintaining dense and
+//!   compressed activation flows, compressing each linear in place, then
+//!   applying PIFA.
+//! * [`metrics`] — wall-clock + peak-memory instrumentation for Tables 13/14.
+
+pub mod metrics;
+pub mod mpifa;
+pub mod recon;
+pub mod whiten;
+
+pub use mpifa::{mpifa_compress_model, CompressConfig, ReconTarget};
+pub use recon::{full_batch_reconstruct, reconstruct_u, reconstruct_vt, DualFlowAccum};
+pub use whiten::svdllm_prune;

@@ -1,0 +1,438 @@
+//! The end-to-end model compression walk (Algorithm 3 generalized to all
+//! low-rank pruning flavours).
+//!
+//! The driver keeps **two activation flows** per calibration sample while
+//! walking the model front to back:
+//!
+//! * the *dense* flow `X_o` — produced by the original weights, and
+//! * the *compressed* flow `X_u` — produced by the already-compressed
+//!   prefix of the model.
+//!
+//! Modules are compressed in data order within each block
+//! (`q,k,v → o → gate,up → down`), so every module sees exactly the
+//! degraded input it will see at inference (`X_u`), while M's mixed target
+//! `Y_t = λ W X_o + (1-λ) W X_u` (Eq. 7) re-aligns it with the dense flow —
+//! the paper's error-accumulation fix. With `ReconMode::None` /
+//! `FullBatch` the same walk reproduces the "W" and "W + U" ablation arms
+//! (Table 5), and `PruneAlgo` swaps in vanilla SVD / ASVD / ESPACE
+//! (Tables 2, 15).
+
+use crate::baselines::prune::{prune_low_rank, PruneAlgo};
+use crate::compress::metrics::CompressionMetrics;
+use crate::compress::recon::{full_batch_reconstruct, reconstruct_u, reconstruct_vt, DualFlowAccum};
+use crate::linalg::Mat;
+use crate::model::ops::{self};
+use crate::model::transformer::{attention_mix, ModuleKind, Transformer};
+use crate::model::LinearRepr;
+use crate::pifa::{pivoting_factorization, PivotStrategy};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// Which factors M reconstructs (Figure 6 compares these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReconTarget {
+    UOnly,
+    VtOnly,
+    Both,
+}
+
+/// Reconstruction mode — the Table 5 ablation axis.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReconMode {
+    /// "W": pruning only.
+    None,
+    /// "W + U": SVD-LLM's full-batch Eq. 4 on the degraded flow, capped at
+    /// `max_samples` (the paper's 16-sample GPU-memory ceiling).
+    FullBatch { max_samples: usize },
+    /// "W + M": the online dual-flow reconstruction.
+    Online { target: ReconTarget, lambda: f64 },
+}
+
+/// End-to-end compression configuration (Algorithm 3 parameters).
+#[derive(Clone, Debug)]
+pub struct CompressConfig {
+    /// Global parameter density over prunable modules.
+    pub density: f64,
+    /// Pruning algorithm producing the initial `U V^T`.
+    pub prune: PruneAlgo,
+    /// Reconstruction mode.
+    pub recon: ReconMode,
+    /// Eq. 9 ridge coefficient.
+    pub alpha: f64,
+    /// Re-represent each low-rank result as a PIFA layer (spending the
+    /// savings on extra rank at equal density).
+    pub apply_pifa: bool,
+    /// Per-module density overrides (MPIFA_NS); falls back to `density`.
+    pub module_density: HashMap<(usize, ModuleKind), f64>,
+}
+
+impl CompressConfig {
+    /// The paper's MPIFA defaults (λ=0.25, α=1e-3, both factors, PIFA on).
+    pub fn mpifa(density: f64) -> Self {
+        Self {
+            density,
+            prune: PruneAlgo::SvdLlm,
+            recon: ReconMode::Online { target: ReconTarget::Both, lambda: 0.25 },
+            alpha: 1e-3,
+            apply_pifa: true,
+            module_density: HashMap::new(),
+        }
+    }
+
+    /// Ablation arms of Table 5.
+    pub fn w_only(density: f64) -> Self {
+        Self { recon: ReconMode::None, apply_pifa: false, ..Self::mpifa(density) }
+    }
+
+    pub fn w_plus_u(density: f64) -> Self {
+        Self {
+            recon: ReconMode::FullBatch { max_samples: 16 },
+            apply_pifa: false,
+            ..Self::mpifa(density)
+        }
+    }
+
+    pub fn w_plus_m(density: f64) -> Self {
+        Self { apply_pifa: false, ..Self::mpifa(density) }
+    }
+
+    fn density_for(&self, layer: usize, kind: ModuleKind) -> f64 {
+        *self.module_density.get(&(layer, kind)).unwrap_or(&self.density)
+    }
+}
+
+/// State carried per calibration sample.
+struct Flows {
+    /// Dense-flow hidden states (T x d), one per sample.
+    h_o: Vec<Mat<f32>>,
+    /// Compressed-flow hidden states.
+    h_u: Vec<Mat<f32>>,
+}
+
+/// Compress `dense` into a new model; `calib` holds token windows.
+pub fn mpifa_compress_model(
+    dense: &Transformer,
+    calib: &[Vec<usize>],
+    cfg: &CompressConfig,
+) -> Result<(Transformer, CompressionMetrics)> {
+    let mut metrics = CompressionMetrics::new();
+    let mut compressed = dense.clone();
+    let eps = dense.cfg.norm_eps;
+    let n_heads = dense.cfg.n_heads;
+
+    metrics.begin_phase("embed");
+    let mut flows = Flows {
+        h_o: calib.iter().map(|t| dense.embed_tokens(t)).collect(),
+        h_u: calib.iter().map(|t| dense.embed_tokens(t)).collect(),
+    };
+    for h in &flows.h_o {
+        metrics.alloc(h.rows() * h.cols() * 8);
+    }
+
+    for layer in 0..dense.cfg.n_layers {
+        metrics.begin_phase(&format!("layer{layer}"));
+        // ---- Group 1: q, k, v (shared input = normed block input) ----
+        let x_o: Vec<Mat<f32>> = flows
+            .h_o
+            .iter()
+            .map(|h| ops::rmsnorm(h, &dense.blocks[layer].attn_norm, eps).0)
+            .collect();
+        let x_u: Vec<Mat<f32>> = flows
+            .h_u
+            .iter()
+            .map(|h| ops::rmsnorm(h, &compressed.blocks[layer].attn_norm, eps).0)
+            .collect();
+        for kind in [ModuleKind::Q, ModuleKind::K, ModuleKind::V] {
+            compress_module(dense, &mut compressed, layer, kind, &x_o, &x_u, cfg, &mut metrics)?;
+        }
+
+        // ---- Group 2: o (input = attention mix) ----
+        let mix_o: Vec<Mat<f32>> = x_o
+            .iter()
+            .map(|x| {
+                let b = &dense.blocks[layer];
+                let q = b.attn.wq.forward(x);
+                let k = b.attn.wk.forward(x);
+                let v = b.attn.wv.forward(x);
+                attention_mix(&q, &k, &v, &dense.rope, n_heads, 0, None).0
+            })
+            .collect();
+        let mix_u: Vec<Mat<f32>> = x_u
+            .iter()
+            .map(|x| {
+                let b = &compressed.blocks[layer];
+                let q = b.attn.wq.forward(x);
+                let k = b.attn.wk.forward(x);
+                let v = b.attn.wv.forward(x);
+                attention_mix(&q, &k, &v, &compressed.rope, n_heads, 0, None).0
+            })
+            .collect();
+        compress_module(dense, &mut compressed, layer, ModuleKind::O, &mix_o, &mix_u, cfg, &mut metrics)?;
+
+        // Advance residual stream past attention.
+        for (h, m) in flows.h_o.iter_mut().zip(mix_o.iter()) {
+            *h = h.add_mat(&dense.blocks[layer].attn.wo.forward(m));
+        }
+        for (h, m) in flows.h_u.iter_mut().zip(mix_u.iter()) {
+            *h = h.add_mat(&compressed.blocks[layer].attn.wo.forward(m));
+        }
+
+        // ---- Group 3: gate, up (shared input = normed mid stream) ----
+        let x2_o: Vec<Mat<f32>> = flows
+            .h_o
+            .iter()
+            .map(|h| ops::rmsnorm(h, &dense.blocks[layer].mlp_norm, eps).0)
+            .collect();
+        let x2_u: Vec<Mat<f32>> = flows
+            .h_u
+            .iter()
+            .map(|h| ops::rmsnorm(h, &compressed.blocks[layer].mlp_norm, eps).0)
+            .collect();
+        for kind in [ModuleKind::Gate, ModuleKind::Up] {
+            compress_module(dense, &mut compressed, layer, kind, &x2_o, &x2_u, cfg, &mut metrics)?;
+        }
+
+        // ---- Group 4: down (input = SwiGLU activation) ----
+        let swiglu = |gate: &LinearRepr, up: &LinearRepr, x: &Mat<f32>| -> Mat<f32> {
+            let g = gate.forward(x);
+            let u = up.forward(x);
+            let mut a = g.clone();
+            for (av, (gv, uv)) in a
+                .as_mut_slice()
+                .iter_mut()
+                .zip(g.as_slice().iter().zip(u.as_slice().iter()))
+            {
+                *av = ops::silu(*gv) * *uv;
+            }
+            a
+        };
+        let a_o: Vec<Mat<f32>> = x2_o
+            .iter()
+            .map(|x| swiglu(&dense.blocks[layer].mlp.gate, &dense.blocks[layer].mlp.up, x))
+            .collect();
+        let a_u: Vec<Mat<f32>> = x2_u
+            .iter()
+            .map(|x| swiglu(&compressed.blocks[layer].mlp.gate, &compressed.blocks[layer].mlp.up, x))
+            .collect();
+        compress_module(dense, &mut compressed, layer, ModuleKind::Down, &a_o, &a_u, cfg, &mut metrics)?;
+
+        // Advance residual stream past the MLP.
+        for (h, a) in flows.h_o.iter_mut().zip(a_o.iter()) {
+            *h = h.add_mat(&dense.blocks[layer].mlp.down.forward(a));
+        }
+        for (h, a) in flows.h_u.iter_mut().zip(a_u.iter()) {
+            *h = h.add_mat(&compressed.blocks[layer].mlp.down.forward(a));
+        }
+    }
+    metrics.end_phase();
+    Ok((compressed, metrics))
+}
+
+/// Compress one module given its per-sample inputs under both flows.
+#[allow(clippy::too_many_arguments)]
+fn compress_module(
+    dense: &Transformer,
+    compressed: &mut Transformer,
+    layer: usize,
+    kind: ModuleKind,
+    x_o: &[Mat<f32>],
+    x_u: &[Mat<f32>],
+    cfg: &CompressConfig,
+    metrics: &mut CompressionMetrics,
+) -> Result<()> {
+    let w32 = dense.module(layer, kind).to_dense();
+    let (m, n) = w32.shape();
+    let w = w32.cast::<f64>();
+    let rho = cfg.density_for(layer, kind);
+
+    // Density -> rank: PIFA affords extra rank at equal density.
+    let r = if cfg.apply_pifa {
+        crate::pifa::rank_for_density_pifa(m, n, rho)
+    } else {
+        crate::pifa::rank_for_density_lowrank(m, n, rho)
+    };
+
+    // Online accumulation over samples (constant memory in sample count).
+    let mut accum = DualFlowAccum::new(n);
+    metrics.alloc(2 * n * n * 8);
+    for (xo, xu) in x_o.iter().zip(x_u.iter()) {
+        // Activations are (T x n); the paper's layout is columns = tokens.
+        let xo64 = xo.transpose().cast::<f64>();
+        let xu64 = xu.transpose().cast::<f64>();
+        accum.add_sample(&xo64, &xu64);
+    }
+
+    // Prune to low-rank factors.
+    let (u0, vt0) = prune_low_rank(&cfg.prune, &w, &accum, r)
+        .with_context(|| format!("prune failed at layer {layer} {}", kind.name()))?;
+
+    // Reconstruct.
+    let (u, vt) = match cfg.recon {
+        ReconMode::None => (u0, vt0),
+        ReconMode::FullBatch { max_samples } => {
+            // Degraded-flow-only Eq. 4, capped sample count.
+            let take = max_samples.min(x_u.len());
+            let total_t: usize = x_u.iter().take(take).map(|x| x.rows()).sum();
+            let mut xcat = Mat::zeros(n, total_t);
+            let mut col = 0;
+            for xu in x_u.iter().take(take) {
+                let xt = xu.transpose().cast::<f64>();
+                xcat.set_block(0, col, &xt);
+                col += xt.cols();
+            }
+            metrics.alloc(n * total_t * 8);
+            let u = full_batch_reconstruct(&w, &vt0, &xcat)?;
+            metrics.free(n * total_t * 8);
+            (u, vt0)
+        }
+        ReconMode::Online { target, lambda } => match target {
+            ReconTarget::UOnly => {
+                let u = reconstruct_u(&w, &vt0, &accum, lambda)?;
+                (u, vt0)
+            }
+            ReconTarget::VtOnly => {
+                let vt = reconstruct_vt(&w, &u0, &accum, lambda, cfg.alpha)?;
+                (u0, vt)
+            }
+            ReconTarget::Both => {
+                let u = reconstruct_u(&w, &vt0, &accum, lambda)?;
+                let vt = reconstruct_vt(&w, &u, &accum, lambda, cfg.alpha)?;
+                (u, vt)
+            }
+        },
+    };
+    metrics.free(2 * n * n * 8);
+
+    // Install the compressed representation.
+    let repr = if cfg.apply_pifa {
+        let w_prime = crate::linalg::matmul(&u, &vt);
+        let layer_p = pivoting_factorization(&w_prime, r, PivotStrategy::QrColumnPivot)
+            .with_context(|| format!("PIFA failed at layer {layer} {}", kind.name()))?;
+        LinearRepr::Pifa(layer_p.cast::<f32>())
+    } else {
+        LinearRepr::LowRank { u: u.cast(), vt: vt.cast() }
+    };
+    *compressed.module_mut(layer, kind) = repr;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batch::{Split, TokenDataset};
+    use crate::data::corpus::{generate_corpus, Flavour};
+    use crate::data::vocab::Vocab;
+    use crate::eval::ppl::perplexity;
+    use crate::linalg::Rng;
+    use crate::model::config::ModelConfig;
+    use crate::train::trainer::{train, TrainConfig};
+
+    /// Shared trained tiny model + data for the compression tests (train
+    /// once per test binary; it is the slow part).
+    pub(crate) fn trained() -> (&'static Transformer, &'static TokenDataset) {
+        use std::sync::OnceLock;
+        static CELL: OnceLock<(Transformer, TokenDataset)> = OnceLock::new();
+        let (m, d) = CELL.get_or_init(|| {
+            let v = Vocab::new();
+            let tokens = generate_corpus(&v, Flavour::Wiki, 24_000, 77);
+            let data = TokenDataset::new(tokens, 32);
+            let cfg = ModelConfig {
+                name: "t".into(),
+                vocab: 512,
+                dim: 32,
+                n_layers: 2,
+                n_heads: 2,
+                ffn_hidden: 48,
+                max_seq: 32,
+                rope_theta: 10000.0,
+                norm_eps: 1e-5,
+            };
+            let mut rng = Rng::new(261);
+            let mut model = Transformer::new_random(&cfg, &mut rng);
+            let tc = TrainConfig {
+                steps: 150,
+                batch: 2,
+                peak_lr: 5e-3,
+                warmup: 15,
+                grad_clip: 1.0,
+                seed: 9,
+                log_every: 0,
+            };
+            train(&mut model, &data, &tc);
+            (model, data)
+        });
+        (m, d)
+    }
+
+    #[test]
+    fn mpifa_compresses_to_target_density() {
+        let (model, data) = trained();
+        let calib = data.calibration_windows(16, 1);
+        let cfg = CompressConfig::mpifa(0.6);
+        let (compressed, _) = mpifa_compress_model(model, &calib, &cfg).unwrap();
+        let d = compressed.density();
+        assert!((d - 0.6).abs() < 0.08, "density {d} vs target 0.6");
+        // All modules are PIFA now.
+        assert_eq!(compressed.module(0, ModuleKind::Q).kind_name(), "pifa");
+        assert_eq!(compressed.module(1, ModuleKind::Down).kind_name(), "pifa");
+    }
+
+    #[test]
+    fn ppl_ordering_w_vs_m_vs_mpifa() {
+        // The Table 5 ordering at a harsh density: W-only >= W+M >= ...
+        // and compressed models stay usable (finite, bounded blowup).
+        let (model, data) = trained();
+        let calib = data.calibration_windows(24, 2);
+        let base_ppl = perplexity(model, data, Split::Test);
+
+        let (m_w, _) = mpifa_compress_model(model, &calib, &CompressConfig::w_only(0.6)).unwrap();
+        let (m_m, _) = mpifa_compress_model(model, &calib, &CompressConfig::w_plus_m(0.6)).unwrap();
+        let (m_mp, _) = mpifa_compress_model(model, &calib, &CompressConfig::mpifa(0.6)).unwrap();
+
+        let p_w = perplexity(&m_w, data, Split::Test);
+        let p_m = perplexity(&m_m, data, Split::Test);
+        let p_mp = perplexity(&m_mp, data, Split::Test);
+        eprintln!("base {base_ppl:.2} | W {p_w:.2} | W+M {p_m:.2} | MPIFA {p_mp:.2}");
+        assert!(p_w.is_finite() && p_m.is_finite() && p_mp.is_finite());
+        // M must improve on prune-only; MPIFA must improve on W+M (extra
+        // rank at equal density).
+        assert!(p_m <= p_w * 1.02, "W+M ({p_m}) worse than W ({p_w})");
+        assert!(p_mp <= p_m * 1.02, "MPIFA ({p_mp}) worse than W+M ({p_m})");
+        // And compression should cost something vs dense.
+        assert!(p_mp >= base_ppl * 0.98);
+    }
+
+    #[test]
+    fn high_density_is_near_lossless() {
+        let (model, data) = trained();
+        let calib = data.calibration_windows(16, 3);
+        let base_ppl = perplexity(model, data, Split::Test);
+        let (m, _) = mpifa_compress_model(model, &calib, &CompressConfig::mpifa(0.95)).unwrap();
+        let p = perplexity(&m, data, Split::Test);
+        assert!(
+            p < base_ppl * 1.25,
+            "0.95 density should barely hurt: {base_ppl:.2} -> {p:.2}"
+        );
+    }
+
+    #[test]
+    fn module_density_overrides_apply() {
+        let (model, data) = trained();
+        let calib = data.calibration_windows(8, 4);
+        let mut cfg = CompressConfig::mpifa(0.5);
+        cfg.module_density.insert((0, ModuleKind::Q), 0.9);
+        let (compressed, _) = mpifa_compress_model(model, &calib, &cfg).unwrap();
+        let q_params = compressed.module(0, ModuleKind::Q).param_count();
+        let k_params = compressed.module(0, ModuleKind::K).param_count();
+        assert!(q_params > k_params, "override should give Q more params");
+    }
+
+    #[test]
+    fn metrics_are_recorded() {
+        let (model, data) = trained();
+        let calib = data.calibration_windows(4, 5);
+        let (_, metrics) = mpifa_compress_model(model, &calib, &CompressConfig::mpifa(0.7)).unwrap();
+        assert!(metrics.peak_bytes > 0);
+        assert!(metrics.phases.len() >= model.cfg.n_layers);
+    }
+}

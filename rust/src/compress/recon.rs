@@ -1,0 +1,275 @@
+//! Reconstruction of the low-rank factors (paper §4).
+//!
+//! Two flavours:
+//!
+//! * [`full_batch_reconstruct`] — SVD-LLM's original Eq. 4 update
+//!   (`U = W X D^T (D D^T)^{-1}`, `D = V^T X`): needs the whole calibration
+//!   batch in memory and uses only the degraded (low-rank) data flow. Kept
+//!   as the "W + U" ablation arm (Table 5).
+//! * **M** — Online Error-Accumulation-Minimization Reconstruction:
+//!   [`DualFlowAccum`] accumulates `X X^T` and `X_o X_u^T` one sample at a
+//!   time (constant memory in the number of samples, Eq. 5), then
+//!   [`reconstruct_u`] / [`reconstruct_vt`] apply the closed forms with the
+//!   mixed target `Y_t = λ W X_o + (1-λ) W X_u` (Eq. 7) and the Eq. 9 ridge.
+
+use crate::linalg::{self, Mat};
+use anyhow::{Context, Result};
+
+/// Online accumulator for the dual-data-flow Gram matrices.
+///
+/// Per calibration sample `i` with dense-flow input `x_o^i` and
+/// compressed-flow input `x_u^i` (both `n x t_i`):
+///
+/// * `xxt  += x_u^i x_u^i^T`  (= `A_uu`, the `X X^T` of Eq. 5)
+/// * `a_ou += x_o^i x_u^i^T`
+///
+/// Memory is `2 n^2` regardless of sample count — the paper's fix for the
+/// 16-sample full-batch ceiling.
+pub struct DualFlowAccum {
+    pub xxt: Mat<f64>,
+    pub a_ou: Mat<f64>,
+    pub tokens: usize,
+    pub samples: usize,
+}
+
+impl DualFlowAccum {
+    pub fn new(n: usize) -> Self {
+        Self { xxt: Mat::zeros(n, n), a_ou: Mat::zeros(n, n), tokens: 0, samples: 0 }
+    }
+
+    /// Accumulate one calibration sample (columns are token activations).
+    pub fn add_sample(&mut self, x_o: &Mat<f64>, x_u: &Mat<f64>) {
+        assert_eq!(x_o.shape(), x_u.shape(), "DualFlowAccum: flow shape mismatch");
+        assert_eq!(x_o.rows(), self.xxt.rows(), "DualFlowAccum: dim mismatch");
+        let uu = linalg::matmul_nt(x_u, x_u);
+        let ou = linalg::matmul_nt(x_o, x_u);
+        self.xxt = self.xxt.add_mat(&uu);
+        self.a_ou = self.a_ou.add_mat(&ou);
+        self.tokens += x_u.cols();
+        self.samples += 1;
+    }
+
+    /// Single-flow convenience (dense == compressed), e.g. the first layer.
+    pub fn add_sample_single(&mut self, x: &Mat<f64>) {
+        let uu = linalg::matmul_nt(x, x);
+        self.xxt = self.xxt.add_mat(&uu);
+        self.a_ou = self.a_ou.add_mat(&uu);
+        self.tokens += x.cols();
+        self.samples += 1;
+    }
+
+    /// The mixed-target Gram `λ A_ou + (1-λ) A_uu` (Eq. 7 folded into the
+    /// accumulators; `Y_t X^T = W * mixed_gram`).
+    pub fn mixed_gram(&self, lambda: f64) -> Mat<f64> {
+        let mut g = self.a_ou.clone();
+        g.scale_inplace(lambda);
+        g.axpy(1.0 - lambda, &self.xxt)
+    }
+}
+
+/// SVD-LLM's full-batch reconstruction (Eq. 4):
+/// `U_r = W X D^T (D D^T)^{-1}` with `D = V^T X`. Only sees the degraded
+/// flow `x` and requires it in memory — the "U" ablation arm.
+pub fn full_batch_reconstruct(w: &Mat<f64>, vt: &Mat<f64>, x: &Mat<f64>) -> Result<Mat<f64>> {
+    let d = linalg::matmul(vt, x); // r x T
+    let ddt = linalg::matmul_nt(&d, &d); // r x r
+    let wxdt = linalg::matmul_nt(&linalg::matmul(w, x), &d); // m x r
+    // U = wxdt * (ddt)^{-1}: solve ddt^T Z = wxdt^T -> U = Z^T (ddt symmetric).
+    let z = linalg::chol_solve(&ddt, &wxdt.transpose())
+        .or_else(|_| linalg::ridge_solve_spd(&ddt, ddt.max_abs().max(1e-300) * 1e-10, &wxdt.transpose()))
+        .context("full_batch_reconstruct: D D^T solve failed")?;
+    Ok(z.transpose())
+}
+
+/// Eq. 5 with the mixed target (Algorithm 3 line 5):
+/// `U_r = (Y_t X^T) V (V^T (X X^T) V)^{-1}`.
+pub fn reconstruct_u(
+    w: &Mat<f64>,
+    vt: &Mat<f64>,
+    accum: &DualFlowAccum,
+    lambda: f64,
+) -> Result<Mat<f64>> {
+    let v = vt.transpose(); // n x r
+    let yt_xt = linalg::matmul(w, &accum.mixed_gram(lambda)); // m x n
+    let m1 = linalg::matmul(&yt_xt, &v); // m x r
+    let xxt_v = linalg::matmul(&accum.xxt, &v); // n x r
+    let g = linalg::matmul_tn(&v, &xxt_v); // r x r, SPD for full-rank V/X
+    let z = linalg::chol_solve(&g, &m1.transpose())
+        .or_else(|_| linalg::ridge_solve_spd(&g, g.max_abs().max(1e-300) * 1e-10, &m1.transpose()))
+        .context("reconstruct_u: V^T XX^T V solve failed")?;
+    Ok(z.transpose())
+}
+
+/// Eq. 8 with the Eq. 9 ridge (Algorithm 3 line 6):
+/// `V_r^T = (U^T U)^{-1} U^T (Y_t X^T + α W) (X X^T + α I)^{-1}`.
+pub fn reconstruct_vt(
+    w: &Mat<f64>,
+    u: &Mat<f64>,
+    accum: &DualFlowAccum,
+    lambda: f64,
+    alpha: f64,
+) -> Result<Mat<f64>> {
+    let yt_xt = linalg::matmul(w, &accum.mixed_gram(lambda)); // m x n
+    let rhs = yt_xt.axpy(alpha, w); // Y_t X^T + α W
+    // Right factor: rhs * (XX^T + αI)^{-1}  — solve (XX^T + αI) Z = rhs^T.
+    let z = linalg::ridge_solve_spd(&accum.xxt, alpha.max(1e-12), &rhs.transpose())
+        .context("reconstruct_vt: XX^T + αI solve failed")?;
+    let right = z.transpose(); // m x n
+    // Left factor: (U^T U)^{-1} U^T right == lstsq(U, right).
+    linalg::lstsq(u, &right).context("reconstruct_vt: U least-squares failed")
+}
+
+/// Data-flow error `||W X_ref - U V^T X_u||_F` evaluated from explicit
+/// sample matrices (test/diagnostic helper).
+pub fn flow_error(
+    w: &Mat<f64>,
+    u: &Mat<f64>,
+    vt: &Mat<f64>,
+    x_ref: &Mat<f64>,
+    x_u: &Mat<f64>,
+) -> f64 {
+    let target = linalg::matmul(w, x_ref);
+    let approx = linalg::matmul(u, &linalg::matmul(vt, x_u));
+    target.fro_dist(&approx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::whiten::svdllm_prune;
+    use crate::linalg::{matmul, matmul_nt, Rng};
+
+    fn setup(m: usize, n: usize, tokens: usize, seed: u64) -> (Mat<f64>, Mat<f64>, Mat<f64>) {
+        let mut rng = Rng::new(seed);
+        let w: Mat<f64> = Mat::randn(m, n, &mut rng);
+        let x: Mat<f64> = Mat::randn(n, tokens, &mut rng);
+        let xxt = matmul_nt(&x, &x);
+        (w, x, xxt)
+    }
+
+    #[test]
+    fn accumulator_matches_batch_grams() {
+        let mut rng = Rng::new(121);
+        let n = 10;
+        let mut acc = DualFlowAccum::new(n);
+        let mut xs_o = Vec::new();
+        let mut xs_u = Vec::new();
+        for _ in 0..5 {
+            let xo: Mat<f64> = Mat::randn(n, 7, &mut rng);
+            let xu: Mat<f64> = Mat::randn(n, 7, &mut rng);
+            acc.add_sample(&xo, &xu);
+            xs_o.push(xo);
+            xs_u.push(xu);
+        }
+        // Batch equivalents.
+        let mut xxt = Mat::zeros(n, n);
+        let mut aou = Mat::zeros(n, n);
+        for (xo, xu) in xs_o.iter().zip(xs_u.iter()) {
+            xxt = xxt.add_mat(&matmul_nt(xu, xu));
+            aou = aou.add_mat(&matmul_nt(xo, xu));
+        }
+        assert!(acc.xxt.rel_fro_err(&xxt) < 1e-12);
+        assert!(acc.a_ou.rel_fro_err(&aou) < 1e-12);
+        assert_eq!(acc.tokens, 35);
+        assert_eq!(acc.samples, 5);
+    }
+
+    #[test]
+    fn online_u_equals_full_batch_when_flows_match() {
+        // With X_o == X_u and λ arbitrary, Eq. 5 must reproduce Eq. 4.
+        let (w, x, xxt) = setup(12, 10, 50, 122);
+        let (_, vt) = svdllm_prune(&w, &xxt, 4).unwrap();
+        let u_batch = full_batch_reconstruct(&w, &vt, &x).unwrap();
+
+        let mut acc = DualFlowAccum::new(10);
+        // Feed in two chunks to exercise online accumulation.
+        let x1 = x.block(0, 10, 0, 25);
+        let x2 = x.block(0, 10, 25, 50);
+        acc.add_sample(&x1, &x1);
+        acc.add_sample(&x2, &x2);
+        let u_online = reconstruct_u(&w, &vt, &acc, 0.7).unwrap();
+        assert!(u_online.rel_fro_err(&u_batch) < 1e-8, "err={}", u_online.rel_fro_err(&u_batch));
+    }
+
+    #[test]
+    fn reconstruction_reduces_flow_error() {
+        // After whitening-prune, the U update must not increase the
+        // calibration error ||W X - U V^T X||_F.
+        let (w, x, xxt) = setup(16, 12, 80, 123);
+        let (u0, vt) = svdllm_prune(&w, &xxt, 4).unwrap();
+        let mut acc = DualFlowAccum::new(12);
+        acc.add_sample(&x, &x);
+        let u1 = reconstruct_u(&w, &vt, &acc, 0.0).unwrap();
+        let e0 = flow_error(&w, &u0, &vt, &x, &x);
+        let e1 = flow_error(&w, &u1, &vt, &x, &x);
+        assert!(e1 <= e0 * 1.0001, "recon worsened: {e0} -> {e1}");
+    }
+
+    #[test]
+    fn vt_reconstruction_further_reduces_error() {
+        let (w, x, xxt) = setup(16, 12, 80, 124);
+        let (_, vt0) = svdllm_prune(&w, &xxt, 4).unwrap();
+        let mut acc = DualFlowAccum::new(12);
+        acc.add_sample(&x, &x);
+        let u1 = reconstruct_u(&w, &vt0, &acc, 0.0).unwrap();
+        let e_u_only = flow_error(&w, &u1, &vt0, &x, &x);
+        let vt1 = reconstruct_vt(&w, &u1, &acc, 0.0, 1e-3).unwrap();
+        let e_both = flow_error(&w, &u1, &vt1, &x, &x);
+        assert!(e_both <= e_u_only * 1.01, "V^T recon worsened: {e_u_only} -> {e_both}");
+    }
+
+    #[test]
+    fn dual_flow_targets_dense_output() {
+        // When X_u is a corrupted version of X_o, λ=1 aligns U V^T X_u with
+        // W X_o better than λ=0 does (error-accumulation correction).
+        let mut rng = Rng::new(125);
+        let (m, n, t) = (14, 10, 120);
+        let w: Mat<f64> = Mat::randn(m, n, &mut rng);
+        let x_o: Mat<f64> = Mat::randn(n, t, &mut rng);
+        let noise: Mat<f64> = Mat::randn(n, t, &mut rng);
+        let x_u = x_o.axpy(0.3, &noise); // degraded flow
+        let xxt = matmul_nt(&x_u, &x_u);
+        let (_, vt) = svdllm_prune(&w, &xxt, 5).unwrap();
+
+        let mut acc = DualFlowAccum::new(n);
+        acc.add_sample(&x_o, &x_u);
+        let u_l0 = reconstruct_u(&w, &vt, &acc, 0.0).unwrap();
+        let u_l1 = reconstruct_u(&w, &vt, &acc, 1.0).unwrap();
+        let e_l0 = flow_error(&w, &u_l0, &vt, &x_o, &x_u);
+        let e_l1 = flow_error(&w, &u_l1, &vt, &x_o, &x_u);
+        assert!(e_l1 < e_l0, "λ=1 should align with dense flow: {e_l1} vs {e_l0}");
+    }
+
+    #[test]
+    fn ridge_rescues_singular_xxt() {
+        // Tokens < dims -> singular XX^T; Eq. 9's α must keep V^T finite.
+        let mut rng = Rng::new(126);
+        let (m, n) = (8, 20);
+        let w: Mat<f64> = Mat::randn(m, n, &mut rng);
+        let x: Mat<f64> = Mat::randn(n, 6, &mut rng);
+        let xxt = matmul_nt(&x, &x);
+        let (u, vt) = svdllm_prune(&w, &xxt, 3).unwrap();
+        let mut acc = DualFlowAccum::new(n);
+        acc.add_sample(&x, &x);
+        let u1 = reconstruct_u(&w, &vt, &acc, 0.25).unwrap();
+        let vt1 = reconstruct_vt(&w, &u1, &acc, 0.25, 1e-3).unwrap();
+        assert!(vt1.all_finite(), "V^T has NaNs");
+        assert!(u.all_finite() && u1.all_finite());
+    }
+
+    #[test]
+    fn exact_low_rank_weight_recovered() {
+        // If W itself has rank r, prune+recon at rank r is lossless on the
+        // calibration flow.
+        let mut rng = Rng::new(127);
+        let w: Mat<f64> = Mat::rand_low_rank(12, 10, 3, &mut rng);
+        let x: Mat<f64> = Mat::randn(10, 60, &mut rng);
+        let xxt = matmul_nt(&x, &x);
+        let (_u, vt) = svdllm_prune(&w, &xxt, 3).unwrap();
+        let mut acc = DualFlowAccum::new(10);
+        acc.add_sample(&x, &x);
+        let u1 = reconstruct_u(&w, &vt, &acc, 0.25).unwrap();
+        let rec = matmul(&u1, &vt);
+        assert!(rec.rel_fro_err(&w) < 1e-7, "err={}", rec.rel_fro_err(&w));
+    }
+}

@@ -1,0 +1,110 @@
+//! Dynamic batcher: groups queued requests into batches of the decode
+//! artifact's static batch size, waiting up to `max_wait` to fill a batch
+//! (the standard continuous-serving trade-off between latency and
+//! occupancy).
+
+use super::request::GenRequest;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batcher policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Target batch size (the decode artifact's static batch).
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before a partial batch ships.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// FIFO queue + batch formation.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<GenRequest>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, mut req: GenRequest) {
+        if req.arrived.is_none() {
+            req.arrived = Some(Instant::now());
+        }
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch be formed *now*? Either the queue can fill a batch,
+    /// or the oldest request has waited past the budget.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.cfg.max_batch {
+            return true;
+        }
+        match self.queue.front().and_then(|r| r.arrived) {
+            Some(t0) => now.duration_since(t0) >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Pop up to `max_batch` requests.
+    pub fn take_batch(&mut self) -> Vec<GenRequest> {
+        let n = self.queue.len().min(self.cfg.max_batch);
+        self.queue.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> GenRequest {
+        GenRequest::new(id, vec![1, 2], 4)
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(60) });
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        assert!(b.ready(Instant::now()));
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn partial_batch_ships_after_wait() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(req(0));
+        assert!(!b.ready(Instant::now()));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch().len(), 1);
+    }
+
+    #[test]
+    fn empty_is_never_ready() {
+        let b = Batcher::new(BatcherConfig::default());
+        assert!(!b.ready(Instant::now()));
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,102 @@
+//! Request/response types and serving metrics.
+
+use std::time::{Duration, Instant};
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    pub max_new: usize,
+    /// Enqueue timestamp (set by the server).
+    pub arrived: Option<Instant>,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt: Vec<usize>, max_new: usize) -> Self {
+        Self { id, prompt, max_new, arrived: None }
+    }
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<usize>,
+    /// Queue wait + execution.
+    pub latency: Duration,
+    /// Execution only.
+    pub exec_time: Duration,
+}
+
+/// Aggregated serving metrics (Table 7's throughput column).
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    pub tokens_generated: usize,
+    pub total_exec_secs: f64,
+    pub batches: usize,
+    latencies_ms: Vec<f64>,
+}
+
+impl ServeMetrics {
+    pub fn record(&mut self, resp: &GenResponse) {
+        self.requests += 1;
+        self.tokens_generated += resp.tokens.len();
+        self.latencies_ms.push(resp.latency.as_secs_f64() * 1000.0);
+    }
+
+    pub fn record_batch(&mut self, exec: Duration) {
+        self.batches += 1;
+        self.total_exec_secs += exec.as_secs_f64();
+    }
+
+    /// Tokens per second of wall execution time.
+    pub fn throughput(&self) -> f64 {
+        if self.total_exec_secs <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.total_exec_secs
+    }
+
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        v[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_aggregate() {
+        let mut m = ServeMetrics::default();
+        for i in 0..4 {
+            m.record(&GenResponse {
+                id: i,
+                tokens: vec![1, 2, 3],
+                latency: Duration::from_millis(10 * (i + 1)),
+                exec_time: Duration::from_millis(5),
+            });
+        }
+        m.record_batch(Duration::from_secs_f64(0.5));
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.tokens_generated, 12);
+        assert!((m.throughput() - 24.0).abs() < 1e-9);
+        assert!((m.latency_percentile_ms(0.0) - 10.0).abs() < 1e-9);
+        assert!((m.latency_percentile_ms(1.0) - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.latency_percentile_ms(0.5), 0.0);
+    }
+}

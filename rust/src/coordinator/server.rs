@@ -1,0 +1,199 @@
+//! Worker-thread server: clients submit [`GenRequest`]s through a channel;
+//! a single worker owns the PJRT engine (executables are not Sync in the
+//! underlying C API), forms batches, runs generation, and returns
+//! [`GenResponse`]s. Metrics feed Table 7.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::engine::GenerationEngine;
+use super::request::{GenRequest, GenResponse, ServeMetrics};
+use crate::runtime::Engine;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+enum Msg {
+    Request(GenRequest, mpsc::Sender<GenResponse>),
+    Shutdown(mpsc::Sender<ServeMetrics>),
+}
+
+/// Handle to a running server worker.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the worker. PJRT handles are not `Send` (raw C pointers), so
+    /// the worker *builds* its own engine from the factory closure — the
+    /// factory captures only plain data (paths, model weights, names).
+    pub fn spawn(
+        factory: impl FnOnce() -> Result<(Engine, GenerationEngine)> + Send + 'static,
+        cfg: BatcherConfig,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::spawn(move || {
+            let (mut pjrt, gen) = match factory() {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("[server] engine construction failed: {e:#}");
+                    return;
+                }
+            };
+            let mut batcher = Batcher::new(cfg.clone());
+            let mut waiters: HashMap<u64, mpsc::Sender<GenResponse>> = HashMap::new();
+            let mut metrics = ServeMetrics::default();
+            loop {
+                // Drain the channel (non-blocking if we hold work).
+                let msg = if batcher.is_empty() {
+                    match rx.recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => break,
+                    }
+                } else {
+                    rx.try_recv().ok()
+                };
+                match msg {
+                    Some(Msg::Request(req, reply)) => {
+                        waiters.insert(req.id, reply);
+                        batcher.push(req);
+                        continue;
+                    }
+                    Some(Msg::Shutdown(reply)) => {
+                        // Flush remaining work before shutdown.
+                        while !batcher.is_empty() {
+                            run_one_batch(&mut pjrt, &gen, &mut batcher, &mut waiters, &mut metrics);
+                        }
+                        let _ = reply.send(metrics.clone());
+                        break;
+                    }
+                    None => {}
+                }
+                if batcher.ready(Instant::now()) || !batcher.is_empty() {
+                    run_one_batch(&mut pjrt, &gen, &mut batcher, &mut waiters, &mut metrics);
+                }
+            }
+        });
+        Self { tx, worker: Some(worker) }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: GenRequest) -> Result<mpsc::Receiver<GenResponse>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request(req, tx))
+            .map_err(|_| anyhow::anyhow!("server worker gone"))?;
+        Ok(rx)
+    }
+
+    /// Drain, stop the worker, and return final metrics.
+    pub fn shutdown(mut self) -> Result<ServeMetrics> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Shutdown(tx))
+            .map_err(|_| anyhow::anyhow!("server worker gone"))?;
+        let metrics = rx.recv()?;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        Ok(metrics)
+    }
+}
+
+fn run_one_batch(
+    pjrt: &mut Engine,
+    gen: &GenerationEngine,
+    batcher: &mut Batcher,
+    waiters: &mut HashMap<u64, mpsc::Sender<GenResponse>>,
+    metrics: &mut ServeMetrics,
+) {
+    let batch = batcher.take_batch();
+    if batch.is_empty() {
+        return;
+    }
+    // Group by (prompt length, max_new) — decode shares positions.
+    let mut groups: HashMap<(usize, usize), Vec<GenRequest>> = HashMap::new();
+    for r in batch {
+        groups.entry((r.prompt.len(), r.max_new)).or_default().push(r);
+    }
+    for ((_, max_new), reqs) in groups {
+        for chunk in reqs.chunks(gen.runner.batch.max(1)) {
+            let prompts: Vec<Vec<usize>> = chunk.iter().map(|r| r.prompt.clone()).collect();
+            let t0 = Instant::now();
+            match gen.generate_batch(pjrt, &prompts, max_new) {
+                Ok((outs, exec)) => {
+                    metrics.record_batch(exec);
+                    for (req, tokens) in chunk.iter().zip(outs) {
+                        let latency = req.arrived.map(|a| a.elapsed()).unwrap_or_else(|| t0.elapsed());
+                        let resp = GenResponse { id: req.id, tokens, latency, exec_time: exec };
+                        metrics.record(&resp);
+                        if let Some(w) = waiters.remove(&req.id) {
+                            let _ = w.send(resp);
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[server] batch failed: {e:#}");
+                    for req in chunk {
+                        waiters.remove(&req.id);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::GenerationMode;
+    use crate::linalg::Rng;
+    use crate::model::config::ModelConfig;
+    use crate::model::transformer::Transformer;
+    use crate::runtime::exec::ModelRunner;
+    use std::path::Path;
+
+    fn artifact_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn serves_concurrent_requests() {
+        if !artifact_dir().join("tiny-s_dense_prefill_b1_t64.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let server = Server::spawn(
+            || {
+                let mut pjrt = Engine::new(&artifact_dir())?;
+                let cfg = ModelConfig::tiny_s();
+                let mut rng = Rng::new(421);
+                let model = Transformer::new_random(&cfg, &mut rng);
+                let runner = ModelRunner::new(
+                    &mut pjrt,
+                    &model,
+                    "tiny-s_dense_prefill_b1_t64",
+                    "tiny-s_dense_decode_b1",
+                )?;
+                let gen = GenerationEngine::new(runner, GenerationMode::KvCache);
+                Ok((pjrt, gen))
+            },
+            BatcherConfig::default(),
+        );
+
+        let mut rxs = Vec::new();
+        for i in 0..4u64 {
+            let req = GenRequest::new(i, vec![1 + i as usize, 7, 3], 4);
+            rxs.push((i, server.submit(req).unwrap()));
+        }
+        for (i, rx) in rxs {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            assert_eq!(resp.id, i);
+            assert_eq!(resp.tokens.len(), 4);
+        }
+        let metrics = server.shutdown().unwrap();
+        assert_eq!(metrics.requests, 4);
+        assert_eq!(metrics.tokens_generated, 16);
+        assert!(metrics.throughput() > 0.0);
+    }
+}

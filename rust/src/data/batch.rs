@@ -1,0 +1,121 @@
+//! Windowed datasets over token streams.
+
+use crate::linalg::Rng;
+
+/// A token stream with train/val/test splits and window sampling.
+pub struct TokenDataset {
+    pub tokens: Vec<usize>,
+    pub seq_len: usize,
+    train_end: usize,
+    val_end: usize,
+}
+
+impl TokenDataset {
+    /// Split fractions: 80% train / 10% val / 10% test.
+    pub fn new(tokens: Vec<usize>, seq_len: usize) -> Self {
+        let n = tokens.len();
+        assert!(n > seq_len * 4, "dataset too small for seq_len {seq_len}");
+        let train_end = n * 8 / 10;
+        let val_end = n * 9 / 10;
+        Self { tokens, seq_len, train_end, val_end }
+    }
+
+    /// Random training window: `(input, target)` of length `seq_len`.
+    pub fn sample_train(&self, rng: &mut Rng) -> (Vec<usize>, Vec<usize>) {
+        let max_start = self.train_end - self.seq_len - 1;
+        let s = rng.below(max_start);
+        let input = self.tokens[s..s + self.seq_len].to_vec();
+        let target = self.tokens[s + 1..s + self.seq_len + 1].to_vec();
+        (input, target)
+    }
+
+    /// All non-overlapping evaluation windows from the given split.
+    pub fn eval_windows(&self, split: Split) -> Vec<(Vec<usize>, Vec<usize>)> {
+        let (lo, hi) = match split {
+            Split::Train => (0, self.train_end),
+            Split::Val => (self.train_end, self.val_end),
+            Split::Test => (self.val_end, self.tokens.len()),
+        };
+        sequential_windows(&self.tokens[lo..hi], self.seq_len)
+    }
+
+    /// Calibration windows: the paper draws calibration samples from the
+    /// training distribution; deterministic per seed.
+    pub fn calibration_windows(&self, n: usize, seed: u64) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(seed ^ 0xCA11B);
+        (0..n).map(|_| self.sample_train(&mut rng).0).collect()
+    }
+}
+
+/// Which split to read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+/// Non-overlapping `(input, target)` windows over a token slice.
+pub fn sequential_windows(tokens: &[usize], seq_len: usize) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let mut out = Vec::new();
+    let mut s = 0;
+    while s + seq_len + 1 <= tokens.len() {
+        out.push((
+            tokens[s..s + seq_len].to_vec(),
+            tokens[s + 1..s + seq_len + 1].to_vec(),
+        ));
+        s += seq_len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> TokenDataset {
+        TokenDataset::new((0..10_000).map(|i| i % 97).collect(), 32)
+    }
+
+    #[test]
+    fn sample_shapes_and_shift() {
+        let d = ds();
+        let mut rng = Rng::new(191);
+        let (x, y) = d.sample_train(&mut rng);
+        assert_eq!(x.len(), 32);
+        assert_eq!(y.len(), 32);
+        // Target is input shifted by one.
+        assert_eq!(&x[1..], &y[..31]);
+    }
+
+    #[test]
+    fn splits_are_disjoint_and_ordered() {
+        let d = ds();
+        let train = d.eval_windows(Split::Train);
+        let val = d.eval_windows(Split::Val);
+        let test = d.eval_windows(Split::Test);
+        assert!(!train.is_empty() && !val.is_empty() && !test.is_empty());
+        // Train windows only touch the first 80%.
+        assert!(train.len() * 32 <= 8000 + 32);
+    }
+
+    #[test]
+    fn calibration_deterministic() {
+        let d = ds();
+        let a = d.calibration_windows(5, 42);
+        let b = d.calibration_windows(5, 42);
+        assert_eq!(a, b);
+        let c = d.calibration_windows(5, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sequential_windows_cover() {
+        let toks: Vec<usize> = (0..100).collect();
+        let w = sequential_windows(&toks, 10);
+        assert_eq!(w.len(), 9); // 9 windows of 10 (+1 target lookahead)
+        assert_eq!(w[0].0[0], 0);
+        assert_eq!(w[1].0[0], 10);
+        assert_eq!(w[0].1[9], 10);
+    }
+}

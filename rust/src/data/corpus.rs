@@ -1,0 +1,204 @@
+//! Stochastic topic-grammar corpus generator.
+
+use super::vocab::{Vocab, BOS, EOS, N_VERBS};
+use crate::linalg::Rng;
+
+/// Corpus flavour (domain), see module docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavour {
+    /// WikiText2 stand-in: calibration + main evaluation distribution.
+    Wiki,
+    /// C4 stand-in: shifted topic prior + looser templates (Table 8).
+    C4,
+}
+
+struct FlavourParams {
+    /// Per-topic prior weights.
+    topic_prior: Vec<f64>,
+    /// Probability the next sentence keeps the current topic.
+    topic_sticky: f64,
+    /// Probability of plural subject.
+    p_plural: f64,
+    /// Probability of an adjective before a noun.
+    p_adj: f64,
+    /// Probability of an adverbial tail ("very quite also ...").
+    p_tail: f64,
+    /// Probability of comma-joined second clause.
+    p_clause: f64,
+}
+
+fn params(f: Flavour) -> FlavourParams {
+    match f {
+        Flavour::Wiki => FlavourParams {
+            topic_prior: vec![4.0, 3.0, 2.5, 2.0, 1.0, 0.8, 0.5, 0.2],
+            topic_sticky: 0.85,
+            p_plural: 0.35,
+            p_adj: 0.45,
+            p_tail: 0.20,
+            p_clause: 0.35,
+        },
+        Flavour::C4 => FlavourParams {
+            topic_prior: vec![0.3, 0.6, 1.0, 1.2, 2.0, 2.6, 3.2, 4.0],
+            topic_sticky: 0.55,
+            p_plural: 0.55,
+            p_adj: 0.25,
+            p_tail: 0.45,
+            p_clause: 0.15,
+        },
+    }
+}
+
+/// Verb usage is topic-biased: verbs near `topic * stride` are likelier.
+fn topic_verb(rng: &mut Rng, topic: usize) -> usize {
+    let stride = N_VERBS / super::vocab::N_TOPICS;
+    if rng.uniform() < 0.7 {
+        topic * stride + rng.below(stride)
+    } else {
+        rng.below(N_VERBS)
+    }
+}
+
+/// Append one sentence in `topic` to `out`.
+fn gen_sentence(v: &Vocab, rng: &mut Rng, p: &FlavourParams, topic: usize, out: &mut Vec<usize>) {
+    let plural = rng.uniform() < p.p_plural;
+    // Subject NP.
+    out.push(v.id(if plural {
+        ["some", "the"][rng.below(2)]
+    } else {
+        ["the", "a", "this", "every", "that"][rng.below(5)]
+    }));
+    if rng.uniform() < p.p_adj {
+        out.push(v.adjective(rng.below(super::vocab::N_ADJ)));
+    }
+    let subj = rng.below(super::vocab::NOUNS_PER_TOPIC);
+    out.push(v.noun(topic, subj, plural));
+    // Verb agreeing in number — the agreement signal probes learn.
+    out.push(v.verb(topic_verb(rng, topic), plural));
+    // Object NP (same topic most of the time — topical coherence).
+    let obj_topic = if rng.uniform() < 0.8 { topic } else { rng.below(super::vocab::N_TOPICS) };
+    out.push(v.id(["the", "a", "some"][rng.below(3)]));
+    if rng.uniform() < p.p_adj * 0.6 {
+        out.push(v.adjective(rng.below(super::vocab::N_ADJ)));
+    }
+    out.push(v.noun(obj_topic, rng.below(super::vocab::NOUNS_PER_TOPIC), rng.uniform() < 0.3));
+    // Optional prepositional / adverbial tail.
+    if rng.uniform() < p.p_tail {
+        out.push(v.id(["in", "on", "with", "of", "to"][rng.below(5)]));
+        out.push(v.id(["the", "a"][rng.below(2)]));
+        out.push(v.noun(topic, rng.below(super::vocab::NOUNS_PER_TOPIC), false));
+    }
+    // Optional second clause.
+    if rng.uniform() < p.p_clause {
+        out.push(v.id(","));
+        out.push(v.id(["and", "but", "then"][rng.below(3)]));
+        out.push(v.id(if plural { "some" } else { "the" }));
+        out.push(v.noun(topic, rng.below(super::vocab::NOUNS_PER_TOPIC), plural));
+        out.push(v.verb(topic_verb(rng, topic), plural));
+        out.push(v.id(["also", "now", "here", "very", "quite"][rng.below(5)]));
+    }
+    out.push(v.id("."));
+}
+
+/// Generate `n_tokens` tokens of the given flavour.
+pub fn generate_corpus(v: &Vocab, flavour: Flavour, n_tokens: usize, seed: u64) -> Vec<usize> {
+    let p = params(flavour);
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let mut out = Vec::with_capacity(n_tokens + 64);
+    let mut topic = rng.categorical(&p.topic_prior);
+    out.push(BOS);
+    while out.len() < n_tokens {
+        if rng.uniform() > p.topic_sticky {
+            topic = rng.categorical(&p.topic_prior);
+        }
+        gen_sentence(v, &mut rng, &p, topic, &mut out);
+        // Paragraph break occasionally.
+        if rng.uniform() < 0.08 {
+            out.push(EOS);
+            out.push(BOS);
+        }
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+/// Unigram log-perplexity of a token stream — the "no-model" baseline our
+/// trained models must beat decisively for PPL comparisons to carry
+/// signal.
+pub fn unigram_ppl(tokens: &[usize], vocab_size: usize) -> f64 {
+    let mut counts = vec![1.0f64; vocab_size]; // add-one smoothing
+    for &t in tokens {
+        counts[t] += 1.0;
+    }
+    let total: f64 = counts.iter().sum();
+    let mut ll = 0.0;
+    for &t in tokens {
+        ll += (counts[t] / total).ln();
+    }
+    (-ll / tokens.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_length() {
+        let v = Vocab::new();
+        let c = generate_corpus(&v, Flavour::Wiki, 5000, 1);
+        assert_eq!(c.len(), 5000);
+        assert!(c.iter().all(|&t| t < v.len()));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let v = Vocab::new();
+        let a = generate_corpus(&v, Flavour::Wiki, 2000, 7);
+        let b = generate_corpus(&v, Flavour::Wiki, 2000, 7);
+        assert_eq!(a, b);
+        let c = generate_corpus(&v, Flavour::Wiki, 2000, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn flavours_have_shifted_distributions() {
+        let v = Vocab::new();
+        let wiki = generate_corpus(&v, Flavour::Wiki, 30_000, 3);
+        let c4 = generate_corpus(&v, Flavour::C4, 30_000, 3);
+        // Topic-0 nouns should be much more common in wiki than c4.
+        let in_topic0 = |t: usize| {
+            (t >= v.nouns_sing.0 && t < v.nouns_sing.0 + super::super::vocab::NOUNS_PER_TOPIC)
+                || (t >= v.nouns_plur.0 && t < v.nouns_plur.0 + super::super::vocab::NOUNS_PER_TOPIC)
+        };
+        let w0 = wiki.iter().filter(|&&t| in_topic0(t)).count() as f64 / wiki.len() as f64;
+        let c0 = c4.iter().filter(|&&t| in_topic0(t)).count() as f64 / c4.len() as f64;
+        assert!(w0 > 2.0 * c0, "topic shift missing: wiki {w0} vs c4 {c0}");
+    }
+
+    #[test]
+    fn agreement_holds() {
+        // After a plural subject noun, the next verb must be plural.
+        let v = Vocab::new();
+        let c = generate_corpus(&v, Flavour::Wiki, 20_000, 5);
+        let mut checked = 0;
+        for w in c.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let a_plur_noun = a >= v.nouns_plur.0 && a < v.nouns_plur.1;
+            let b_verb_sing = b >= v.verbs_sing.0 && b < v.verbs_sing.1;
+            let b_verb_plur = b >= v.verbs_plur.0 && b < v.verbs_plur.1;
+            if a_plur_noun && (b_verb_sing || b_verb_plur) {
+                assert!(b_verb_plur, "agreement violation at {}", v.decode(w));
+                checked += 1;
+            }
+        }
+        assert!(checked > 50, "too few agreement contexts: {checked}");
+    }
+
+    #[test]
+    fn unigram_ppl_sane() {
+        let v = Vocab::new();
+        let c = generate_corpus(&v, Flavour::Wiki, 20_000, 9);
+        let ppl = unigram_ppl(&c, v.len());
+        // Far below uniform (=vocab size) but far above 1.
+        assert!(ppl > 20.0 && ppl < 300.0, "unigram ppl {ppl}");
+    }
+}

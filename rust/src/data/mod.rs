@@ -1,0 +1,22 @@
+//! Synthetic corpora + tokenizer + batching (DESIGN.md §1: the stand-ins
+//! for WikiText2 and C4).
+//!
+//! The corpus generator is a stochastic topic grammar: sentences are drawn
+//! from part-of-speech templates with topic-clustered content words,
+//! number agreement, and collocations — enough structure that a tiny
+//! transformer learns a sharply non-trivial distribution (dense PPL well
+//! below unigram PPL), so compression-induced degradation is measurable.
+//!
+//! Two flavours with a genuine domain shift between them:
+//! * [`Flavour::Wiki`] — the calibration + main evaluation distribution
+//!   (stand-in for WikiText2): formal templates, sticky topics.
+//! * [`Flavour::C4`] — the transfer evaluation (stand-in for C4, Table 8):
+//!   different topic prior, looser templates, noisier punctuation.
+
+pub mod batch;
+pub mod corpus;
+pub mod vocab;
+
+pub use batch::{sequential_windows, TokenDataset};
+pub use corpus::{generate_corpus, Flavour};
+pub use vocab::Vocab;

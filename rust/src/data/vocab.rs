@@ -1,0 +1,176 @@
+//! Word-level vocabulary shared by both corpus flavours.
+//!
+//! Words are generated from syllable templates so the serving examples
+//! produce readable-ish text without shipping a word list.
+
+use std::collections::HashMap;
+
+pub const PAD: usize = 0;
+pub const BOS: usize = 1;
+pub const EOS: usize = 2;
+pub const UNK: usize = 3;
+
+/// Number of topics in the content-word clusters.
+pub const N_TOPICS: usize = 8;
+/// Content nouns per topic.
+pub const NOUNS_PER_TOPIC: usize = 20;
+/// Verbs (shared across topics, but with topic-biased usage).
+pub const N_VERBS: usize = 48;
+/// Adjectives.
+pub const N_ADJ: usize = 36;
+
+const SYL_A: [&str; 12] =
+    ["ba", "re", "mo", "ti", "ka", "su", "ne", "lo", "da", "vi", "pu", "ze"];
+const SYL_B: [&str; 10] = ["lan", "mir", "tok", "ver", "nis", "gal", "rup", "sen", "dor", "fex"];
+
+/// The fixed vocabulary: specials, function words, then generated content
+/// words. Total stays below 512 (the model vocab).
+pub struct Vocab {
+    words: Vec<String>,
+    index: HashMap<String, usize>,
+    /// id ranges: [start, end) for each class
+    pub nouns_sing: (usize, usize),
+    pub nouns_plur: (usize, usize),
+    pub verbs_sing: (usize, usize),
+    pub verbs_plur: (usize, usize),
+    pub adjectives: (usize, usize),
+}
+
+fn gen_word(i: usize, suffix: &str) -> String {
+    let a = SYL_A[i % SYL_A.len()];
+    let b = SYL_B[(i / SYL_A.len()) % SYL_B.len()];
+    let c = SYL_A[(i / (SYL_A.len() * SYL_B.len())) % SYL_A.len()];
+    format!("{a}{b}{c}{suffix}")
+}
+
+impl Default for Vocab {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Vocab {
+    pub fn new() -> Self {
+        let mut words: Vec<String> = vec!["<pad>", "<bos>", "<eos>", "<unk>"]
+            .into_iter()
+            .map(String::from)
+            .collect();
+        // Function words + punctuation (fixed list).
+        for w in [
+            "the", "a", "some", "every", "this", "that", "and", "or", "but", "of", "in", "on",
+            "with", "to", "also", "very", "quite", "then", "now", "here", ".", ",", ";",
+        ] {
+            words.push(w.to_string());
+        }
+        let n_nouns = N_TOPICS * NOUNS_PER_TOPIC;
+        let nouns_sing = (words.len(), words.len() + n_nouns);
+        for i in 0..n_nouns {
+            words.push(gen_word(i, ""));
+        }
+        let nouns_plur = (words.len(), words.len() + n_nouns);
+        for i in 0..n_nouns {
+            words.push(gen_word(i, "s"));
+        }
+        let verbs_sing = (words.len(), words.len() + N_VERBS);
+        for i in 0..N_VERBS {
+            words.push(gen_word(i + 1000, "es"));
+        }
+        let verbs_plur = (words.len(), words.len() + N_VERBS);
+        for i in 0..N_VERBS {
+            words.push(gen_word(i + 1000, "e"));
+        }
+        let adjectives = (words.len(), words.len() + N_ADJ);
+        for i in 0..N_ADJ {
+            words.push(gen_word(i + 2000, "ish"));
+        }
+        assert!(words.len() <= 512, "vocab overflow: {}", words.len());
+        let index = words.iter().cloned().enumerate().map(|(i, w)| (w, i)).collect();
+        Self { words, index, nouns_sing, nouns_plur, verbs_sing, verbs_plur, adjectives }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn id(&self, w: &str) -> usize {
+        *self.index.get(w).unwrap_or(&UNK)
+    }
+
+    pub fn word(&self, id: usize) -> &str {
+        self.words.get(id).map(|s| s.as_str()).unwrap_or("<unk>")
+    }
+
+    /// Singular noun id for (topic, k).
+    pub fn noun(&self, topic: usize, k: usize, plural: bool) -> usize {
+        let base = if plural { self.nouns_plur.0 } else { self.nouns_sing.0 };
+        base + topic * NOUNS_PER_TOPIC + (k % NOUNS_PER_TOPIC)
+    }
+
+    pub fn verb(&self, k: usize, plural: bool) -> usize {
+        let base = if plural { self.verbs_plur.0 } else { self.verbs_sing.0 };
+        base + (k % N_VERBS)
+    }
+
+    pub fn adjective(&self, k: usize) -> usize {
+        self.adjectives.0 + (k % N_ADJ)
+    }
+
+    pub fn decode(&self, ids: &[usize]) -> String {
+        ids.iter().map(|&i| self.word(i)).collect::<Vec<_>>().join(" ")
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<usize> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_model_vocab() {
+        let v = Vocab::new();
+        assert!(v.len() <= 512);
+        assert!(v.len() > 400, "vocab suspiciously small: {}", v.len());
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let v = Vocab::new();
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..v.len() {
+            assert!(seen.insert(v.word(i).to_string()), "dup word {}", v.word(i));
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = Vocab::new();
+        let ids = vec![v.noun(2, 5, false), v.verb(3, false), v.id(".")];
+        let text = v.decode(&ids);
+        assert_eq!(v.encode(&text), ids);
+    }
+
+    #[test]
+    fn class_ranges_disjoint() {
+        let v = Vocab::new();
+        let ranges = [v.nouns_sing, v.nouns_plur, v.verbs_sing, v.verbs_plur, v.adjectives];
+        for (i, a) in ranges.iter().enumerate() {
+            assert!(a.0 < a.1);
+            for b in ranges.iter().skip(i + 1) {
+                assert!(a.1 <= b.0 || b.1 <= a.0, "overlap {a:?} {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let v = Vocab::new();
+        assert_eq!(v.id("zzzznotaword"), UNK);
+    }
+}

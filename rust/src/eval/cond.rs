@@ -1,0 +1,99 @@
+//! Conditioning study (Figure 8): condition numbers of `V^T X X^T V`
+//! (Eq. 5, the U-reconstruction solve) and `X X^T` (Eq. 8, the
+//! V^T-reconstruction solve) as a function of calibration sample count.
+
+use crate::compress::recon::DualFlowAccum;
+use crate::compress::whiten::svdllm_prune;
+use crate::linalg::{self, Mat};
+
+/// One row of the Figure 8 data: sample count and the two condition
+/// numbers.
+#[derive(Clone, Debug)]
+pub struct CondPoint {
+    pub samples: usize,
+    /// cond(V^T X X^T V) — inverted when reconstructing U.
+    pub cond_u_solve: f64,
+    /// cond(X X^T) — inverted when reconstructing V^T.
+    pub cond_v_solve: f64,
+}
+
+/// Compute condition numbers for growing calibration prefixes.
+///
+/// `w` is the (first-layer) weight being pruned, `calib` the per-sample
+/// input activations (each `n x t`), `rank` the truncation rank, and
+/// `sizes` the sample counts to probe.
+pub fn condition_study(
+    w: &Mat<f64>,
+    calib: &[Mat<f64>],
+    rank: usize,
+    sizes: &[usize],
+) -> Vec<CondPoint> {
+    let n = w.cols();
+    let mut out = Vec::new();
+    for &sz in sizes {
+        let sz = sz.min(calib.len());
+        let mut acc = DualFlowAccum::new(n);
+        for x in calib.iter().take(sz) {
+            acc.add_sample_single(x);
+        }
+        let cond_v = linalg::condition_number_2(&acc.xxt);
+        let cond_u = match svdllm_prune(w, &acc.xxt, rank) {
+            Ok((_, vt)) => {
+                let v = vt.transpose();
+                let xxt_v = linalg::matmul(&acc.xxt, &v);
+                let g = linalg::matmul_tn(&v, &xxt_v);
+                linalg::condition_number_2(&g)
+            }
+            Err(_) => f64::INFINITY,
+        };
+        out.push(CondPoint { samples: sz, cond_u_solve: cond_u, cond_v_solve: cond_v });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    #[test]
+    fn condition_improves_with_samples() {
+        // Figure 8's effect: more calibration samples -> smaller condition
+        // numbers for both solves.
+        let mut rng = Rng::new(251);
+        let n = 24;
+        let w: Mat<f64> = Mat::randn(16, n, &mut rng);
+        // Correlated activations (low-dim latent + noise) like real layers.
+        let basis: Mat<f64> = Mat::randn(n, 6, &mut rng);
+        let calib: Vec<Mat<f64>> = (0..64)
+            .map(|_| {
+                let z: Mat<f64> = Mat::randn(6, 8, &mut rng);
+                let noise: Mat<f64> = Mat::randn(n, 8, &mut rng);
+                linalg::matmul(&basis, &z).axpy(0.05, &noise)
+            })
+            .collect();
+        let pts = condition_study(&w, &calib, 8, &[4, 16, 64]);
+        assert_eq!(pts.len(), 3);
+        assert!(
+            pts[2].cond_v_solve < pts[0].cond_v_solve,
+            "cond(XX^T) should fall: {:?}",
+            pts.iter().map(|p| p.cond_v_solve).collect::<Vec<_>>()
+        );
+        assert!(
+            pts[2].cond_u_solve <= pts[0].cond_u_solve * 1.5,
+            "cond(V^T XX^T V) should not blow up"
+        );
+        assert!(pts[2].cond_u_solve.is_finite());
+    }
+
+    #[test]
+    fn few_samples_are_singular_or_worse() {
+        let mut rng = Rng::new(252);
+        let n = 16;
+        let w: Mat<f64> = Mat::randn(8, n, &mut rng);
+        let calib: Vec<Mat<f64>> = (0..8).map(|_| Mat::randn(n, 1, &mut rng)).collect();
+        // 2 samples x 1 token < n dims: XX^T singular -> huge/infinite cond.
+        let pts = condition_study(&w, &calib, 4, &[2, 8]);
+        assert!(pts[0].cond_v_solve > 1e12 || pts[0].cond_v_solve.is_infinite());
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation harnesses: perplexity, the zero-shot probe suite (the
+//! SuperGLUE stand-in, Table 9), and the conditioning study (Figure 8).
+
+pub mod cond;
+pub mod ppl;
+pub mod tasks;
+
+pub use cond::condition_study;
+pub use ppl::{perplexity, perplexity_on_windows};
+pub use tasks::{run_task_suite, TaskResult};

@@ -1,0 +1,89 @@
+//! Perplexity evaluation — the paper's primary metric (Tables 2/3/4/5/8/10).
+
+use crate::data::batch::{Split, TokenDataset};
+use crate::model::ops::cross_entropy;
+use crate::model::transformer::Transformer;
+
+/// Perplexity over explicit `(input, target)` windows.
+pub fn perplexity_on_windows(model: &Transformer, windows: &[(Vec<usize>, Vec<usize>)]) -> f64 {
+    assert!(!windows.is_empty(), "perplexity: no windows");
+    let mut nll = 0f64;
+    let mut count = 0usize;
+    for (x, y) in windows {
+        let logits = model.forward(x, None);
+        let (mean_loss, _) = cross_entropy(&logits, y);
+        nll += mean_loss as f64 * y.len() as f64;
+        count += y.len();
+    }
+    (nll / count as f64).exp()
+}
+
+/// Perplexity on a dataset split.
+pub fn perplexity(model: &Transformer, data: &TokenDataset, split: Split) -> f64 {
+    perplexity_on_windows(model, &data.eval_windows(split))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{generate_corpus, unigram_ppl, Flavour};
+    use crate::data::vocab::Vocab;
+    use crate::linalg::Rng;
+    use crate::model::config::ModelConfig;
+
+    fn setup() -> (Transformer, TokenDataset) {
+        let v = Vocab::new();
+        let tokens = generate_corpus(&v, Flavour::Wiki, 12_000, 31);
+        let data = TokenDataset::new(tokens, 24);
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 512,
+            dim: 32,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 48,
+            max_seq: 24,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(231);
+        (Transformer::new_random(&cfg, &mut rng), data)
+    }
+
+    #[test]
+    fn random_model_near_uniform() {
+        let (model, data) = setup();
+        let ppl = perplexity(&model, &data, Split::Test);
+        // An untrained model should be around vocab-size perplexity.
+        assert!(ppl > 100.0 && ppl < 2000.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn training_beats_unigram() {
+        let (mut model, data) = setup();
+        let tc = crate::train::trainer::TrainConfig {
+            steps: 150,
+            batch: 2,
+            peak_lr: 5e-3,
+            warmup: 15,
+            grad_clip: 1.0,
+            seed: 5,
+            log_every: 0,
+        };
+        crate::train::trainer::train(&mut model, &data, &tc);
+        let ppl = perplexity(&model, &data, Split::Test);
+        let uni = unigram_ppl(&data.tokens, 512);
+        assert!(
+            ppl < uni,
+            "trained model ({ppl:.1}) must beat unigram ({uni:.1})"
+        );
+    }
+
+    #[test]
+    fn ppl_deterministic() {
+        let (model, data) = setup();
+        let a = perplexity(&model, &data, Split::Val);
+        let b = perplexity(&model, &data, Split::Val);
+        assert_eq!(a, b);
+    }
+}

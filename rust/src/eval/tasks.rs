@@ -1,0 +1,214 @@
+//! Zero-shot probe-task suite — the SuperGLUE stand-in (Table 9,
+//! DESIGN.md §1 substitution).
+//!
+//! Eight tasks, each a two-way forced choice scored by comparing the
+//! model's next-token logits for a correct vs an incorrect continuation
+//! (the same ranking protocol lm-evaluation-harness uses for multiple
+//! choice). Contexts are drawn from held-out grammar text, so the dense
+//! model scores well above chance and compression-induced degradation is
+//! measurable per task.
+
+use crate::data::corpus::{generate_corpus, Flavour};
+use crate::data::vocab::{Vocab, N_TOPICS, NOUNS_PER_TOPIC, N_VERBS};
+use crate::linalg::Rng;
+use crate::model::transformer::Transformer;
+
+/// Accuracy of one probe task.
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub name: &'static str,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// One forced-choice item: context tokens, correct and wrong next token.
+struct Item {
+    context: Vec<usize>,
+    correct: usize,
+    wrong: usize,
+}
+
+fn score_items(model: &Transformer, items: &[Item]) -> f64 {
+    let mut hits = 0usize;
+    for it in items {
+        let logits = model.forward(&it.context, None);
+        let last = logits.row(logits.rows() - 1);
+        if last[it.correct] > last[it.wrong] {
+            hits += 1;
+        }
+    }
+    hits as f64 / items.len().max(1) as f64
+}
+
+/// Build all eight tasks' items from a fresh evaluation stream.
+fn build_items(v: &Vocab, n_per_task: usize, seed: u64) -> Vec<(&'static str, Vec<Item>)> {
+    let corpus = generate_corpus(v, Flavour::Wiki, 60_000, seed ^ 0x7A5C);
+    let mut rng = Rng::new(seed ^ 0x9b1);
+    let ctx_len = 24usize;
+
+    let in_range = |t: usize, r: (usize, usize)| t >= r.0 && t < r.1;
+    let mut agreement = Vec::new();
+    let mut determiner = Vec::new();
+    let mut topic_noun = Vec::new();
+    let mut topic_verb = Vec::new();
+    let mut sentence_end = Vec::new();
+    let mut clause = Vec::new();
+    let mut induction = Vec::new();
+    let mut adjective = Vec::new();
+
+    for i in ctx_len..corpus.len() - 1 {
+        let t = corpus[i]; // the "gold" next token for context ..i
+        let prev = corpus[i - 1];
+        let context = corpus[i - ctx_len..i].to_vec();
+
+        // 1. Subject-verb agreement: gold verb after a noun.
+        if agreement.len() < n_per_task
+            && (in_range(t, v.verbs_plur) || in_range(t, v.verbs_sing))
+            && (in_range(prev, v.nouns_plur) || in_range(prev, v.nouns_sing))
+        {
+            let plural = in_range(t, v.verbs_plur);
+            let k = if plural { t - v.verbs_plur.0 } else { t - v.verbs_sing.0 };
+            let wrong = if plural { v.verbs_sing.0 + k } else { v.verbs_plur.0 + k };
+            agreement.push(Item { context: context.clone(), correct: t, wrong });
+        }
+
+        // 2. Determiner licensing: after "the"/"a", content word beats verb.
+        if determiner.len() < n_per_task
+            && (prev == v.id("the") || prev == v.id("a"))
+            && (in_range(t, v.nouns_sing) || in_range(t, v.nouns_plur) || in_range(t, v.adjectives))
+        {
+            let wrong = v.verb(rng.below(N_VERBS), false);
+            determiner.push(Item { context: context.clone(), correct: t, wrong });
+        }
+
+        // 3. Topic coherence (nouns): gold noun vs a noun from the rarest
+        // topic not equal to the gold topic.
+        if topic_noun.len() < n_per_task && in_range(t, v.nouns_sing) {
+            let topic = (t - v.nouns_sing.0) / NOUNS_PER_TOPIC;
+            let far_topic = (topic + N_TOPICS / 2) % N_TOPICS;
+            let wrong = v.noun(far_topic, rng.below(NOUNS_PER_TOPIC), false);
+            topic_noun.push(Item { context: context.clone(), correct: t, wrong });
+        }
+
+        // 4. Topic-biased verbs: gold verb vs verb from a far topic block.
+        if topic_verb.len() < n_per_task && in_range(t, v.verbs_sing) {
+            let k = t - v.verbs_sing.0;
+            let stride = N_VERBS / N_TOPICS;
+            let far = (k + N_VERBS / 2) % N_VERBS;
+            if k / stride != far / stride {
+                topic_verb.push(Item {
+                    context: context.clone(),
+                    correct: t,
+                    wrong: v.verbs_sing.0 + far,
+                });
+            }
+        }
+
+        // 5. Sentence end: gold "." vs ",".
+        if sentence_end.len() < n_per_task && t == v.id(".") {
+            sentence_end.push(Item { context: context.clone(), correct: t, wrong: v.id(",") });
+        }
+
+        // 6. Clause connector: after ",", connector beats noun.
+        if clause.len() < n_per_task
+            && prev == v.id(",")
+            && (t == v.id("and") || t == v.id("but") || t == v.id("then"))
+        {
+            let wrong = v.noun(rng.below(N_TOPICS), rng.below(NOUNS_PER_TOPIC), false);
+            clause.push(Item { context: context.clone(), correct: t, wrong });
+        }
+
+        // 7. Induction: the bigram (prev, t) already appeared in context.
+        if induction.len() < n_per_task {
+            let mut seen = false;
+            for w in context.windows(2) {
+                if w[0] == prev && w[1] == t {
+                    seen = true;
+                    break;
+                }
+            }
+            if seen && (in_range(t, v.nouns_sing) || in_range(t, v.nouns_plur)) {
+                let wrong = v.noun(rng.below(N_TOPICS), rng.below(NOUNS_PER_TOPIC), false);
+                if wrong != t {
+                    induction.push(Item { context: context.clone(), correct: t, wrong });
+                }
+            }
+        }
+
+        // 8. Adjective position: after an adjective comes a noun, not ".".
+        if adjective.len() < n_per_task
+            && in_range(prev, v.adjectives)
+            && (in_range(t, v.nouns_sing) || in_range(t, v.nouns_plur))
+        {
+            adjective.push(Item { context, correct: t, wrong: v.id(".") });
+        }
+    }
+
+    vec![
+        ("Agreement", agreement),
+        ("Determiner", determiner),
+        ("TopicNoun", topic_noun),
+        ("TopicVerb", topic_verb),
+        ("SentEnd", sentence_end),
+        ("Clause", clause),
+        ("Induction", induction),
+        ("AdjNoun", adjective),
+    ]
+}
+
+/// Run the full suite; returns per-task results plus the mean row the
+/// paper's Table 9 reports.
+pub fn run_task_suite(model: &Transformer, v: &Vocab, n_per_task: usize, seed: u64) -> Vec<TaskResult> {
+    let mut out = Vec::new();
+    for (name, items) in build_items(v, n_per_task, seed) {
+        let accuracy = score_items(model, &items);
+        out.push(TaskResult { name, accuracy, n: items.len() });
+    }
+    out
+}
+
+/// Mean accuracy across tasks (Table 9's "Mean" column).
+pub fn mean_accuracy(results: &[TaskResult]) -> f64 {
+    results.iter().map(|r| r.accuracy).sum::<f64>() / results.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn items_are_built_for_every_task() {
+        let v = Vocab::new();
+        let items = build_items(&v, 40, 41);
+        assert_eq!(items.len(), 8);
+        for (name, its) in &items {
+            assert!(its.len() >= 20, "task {name} only built {} items", its.len());
+            for it in its {
+                assert_ne!(it.correct, it.wrong, "{name}: degenerate item");
+                assert_eq!(it.context.len(), 24);
+            }
+        }
+    }
+
+    #[test]
+    fn random_model_near_chance() {
+        let v = Vocab::new();
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 512,
+            dim: 32,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 48,
+            max_seq: 32,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = crate::linalg::Rng::new(241);
+        let model = Transformer::new_random(&cfg, &mut rng);
+        let results = run_task_suite(&model, &v, 30, 42);
+        let mean = mean_accuracy(&results);
+        assert!(mean > 0.2 && mean < 0.8, "untrained mean acc {mean}");
+    }
+}

@@ -1,0 +1,36 @@
+//! # pifa — Pivoting Factorization (ICML 2025) reproduction
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *Pivoting
+//! Factorization: A Compact Meta Low-Rank Representation of Sparsity for
+//! Efficient Inference in Large Language Models* (Zhao, Zhang, Cannistraci).
+//!
+//! Layer map (see DESIGN.md):
+//! * [`linalg`] — from-scratch dense linear algebra (GEMM, pivoted QR, LU,
+//!   Cholesky, Jacobi SVD, solvers, RNG).
+//! * [`pifa`] — the paper's core contribution: Pivoting Factorization
+//!   (Algorithm 1), the PIFA layer (Algorithm 2), and cost accounting.
+//! * [`compress`] — SVD-LLM whitening + the Online
+//!   Error-Accumulation-Minimization Reconstruction (M) + the end-to-end
+//!   MPIFA driver (Algorithm 3).
+//! * [`baselines`] — every comparator in the paper's evaluation.
+//! * [`sparse24`] — 2:4 semi-structured sparsity substrate.
+//! * [`model`] / [`train`] / [`data`] / [`eval`] — the tiny-LLaMA stand-in
+//!   models, trainer, synthetic corpora and evaluation harnesses.
+//! * [`runtime`] / [`coordinator`] — PJRT artifact execution + the serving
+//!   coordinator (router, batcher, scheduler).
+//! * [`bench`] — the criterion-less benchmark harness used by
+//!   `rust/benches/*` to regenerate every paper table/figure.
+
+pub mod linalg;
+pub mod pifa;
+// modules enabled incrementally as they land
+pub mod compress;
+pub mod baselines;
+pub mod sparse24;
+pub mod model;
+pub mod train;
+pub mod data;
+pub mod eval;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;

@@ -1,0 +1,120 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+//!
+//! Used by: SVD-LLM's truncation-aware whitening (`S = chol(X X^T)`), the
+//! ridge-regularized reconstruction solves of M (Eq. 5/8/9), and PIFA's
+//! coefficient solve (`C = W_np W_p^T (W_p W_p^T)^{-1}` — the Gram matrix is
+//! SPD when the pivot rows are independent).
+
+use super::mat::Mat;
+use super::scalar::Scalar;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L L^T`.
+///
+/// Fails if `A` is not (numerically) positive definite.
+pub fn cholesky<T: Scalar>(a: &Mat<T>) -> Result<Mat<T>> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "cholesky: matrix must be square");
+    let mut l: Mat<T> = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // Accumulate in f64 regardless of T — the compression math is
+            // sensitive to cancellation here (ill-conditioned X X^T).
+            let mut sum = a[(i, j)].to_f64();
+            for k in 0..j {
+                sum -= l[(i, k)].to_f64() * l[(j, k)].to_f64();
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("cholesky: not positive definite at pivot {i} (d={sum:.3e})");
+                }
+                l[(i, j)] = T::from_f64(sum.sqrt());
+            } else {
+                l[(i, j)] = T::from_f64(sum / l[(j, j)].to_f64());
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A X = B` with `A` SPD, via Cholesky.
+pub fn chol_solve<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Result<Mat<T>> {
+    let l = cholesky(a)?;
+    let y = super::solve::solve_lower_tri(&l, b);
+    Ok(super::solve::solve_upper_tri_from_lower_t(&l, &y))
+}
+
+/// Inverse of an SPD matrix via Cholesky.
+pub fn chol_inverse<T: Scalar>(a: &Mat<T>) -> Result<Mat<T>> {
+    let n = a.rows();
+    chol_solve(a, &Mat::eye(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_nt};
+    use crate::linalg::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat<f64> {
+        let a: Mat<f64> = Mat::randn(n, n + 4, rng);
+        let mut g = matmul_nt(&a, &a);
+        g.add_diag(0.1);
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::new(41);
+        let a = random_spd(9, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let llt = matmul_nt(&l, &l);
+        assert!(llt.rel_fro_err(&a) < 1e-12);
+    }
+
+    #[test]
+    fn factor_is_lower_triangular() {
+        let mut rng = Rng::new(42);
+        let a = random_spd(6, &mut rng);
+        let l = cholesky(&a).unwrap();
+        for i in 0..6 {
+            for j in i + 1..6 {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_truth() {
+        let mut rng = Rng::new(43);
+        let a = random_spd(12, &mut rng);
+        let x_true: Mat<f64> = Mat::randn(12, 5, &mut rng);
+        let b = matmul(&a, &x_true);
+        let x = chol_solve(&a, &b).unwrap();
+        assert!(x.rel_fro_err(&x_true) < 1e-9);
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let mut rng = Rng::new(44);
+        let a = random_spd(8, &mut rng);
+        let ainv = chol_inverse(&a).unwrap();
+        assert!(matmul(&a, &ainv).rel_fro_err(&Mat::eye(8)) < 1e-9);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a: Mat<f64> = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eig -1, 3
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn f32_path_works() {
+        let mut rng = Rng::new(45);
+        let a64 = random_spd(7, &mut rng);
+        let a32: Mat<f32> = a64.cast();
+        let l = cholesky(&a32).unwrap();
+        let llt = matmul_nt(&l, &l);
+        assert!(llt.rel_fro_err(&a32) < 1e-5);
+    }
+}

@@ -1,0 +1,280 @@
+//! Blocked, multi-threaded GEMM — the L3 hot path.
+//!
+//! Row-major `C = A * B` with cache blocking over K and N and
+//! `std::thread::scope` parallelism over row bands of C (no rayon in the
+//! offline crate set). The inner loops are written in `ikj` order so both
+//! the B panel and the C row stream sequentially, letting LLVM
+//! auto-vectorize the `mul_add` chain.
+//!
+//! Perf notes (EXPERIMENTS.md §Perf has the measured iteration log):
+//! * KC=256 keeps an A-row slice plus a B panel inside L2.
+//! * 4-way j-unrolling in `kernel_band` was worth ~1.6x over the naive
+//!   triple loop; further unrolling showed <5% and was reverted.
+//! * Threads are spawned only above a FLOP threshold; small matrices (the
+//!   per-token decode GEMVs) stay single-threaded to avoid spawn overhead.
+
+use super::mat::Mat;
+use super::scalar::Scalar;
+
+/// K-dimension cache block.
+const KC: usize = 256;
+/// Minimum FLOPs before threads are worth spawning.
+const PAR_THRESHOLD: usize = 1 << 22;
+
+/// `C = A * B`.
+pub fn matmul<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C = A * B` into a preallocated output (zeroed first).
+pub fn matmul_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "matmul: inner dim mismatch {}x{} * {}x{}", m, k, k2, n);
+    assert_eq!(c.shape(), (m, n), "matmul: output shape mismatch");
+    for v in c.as_mut_slice().iter_mut() {
+        *v = T::ZERO;
+    }
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let flops = 2 * m * n * k;
+    let nthreads = if flops >= PAR_THRESHOLD {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(m.max(1))
+    } else {
+        1
+    };
+    if nthreads <= 1 {
+        kernel_band(a.as_slice(), b.as_slice(), c.as_mut_slice(), 0, m, k, n);
+        return;
+    }
+    let band = m.div_ceil(nthreads);
+    let a_s = a.as_slice();
+    let b_s = b.as_slice();
+    // Split C into disjoint row bands; each thread owns one band.
+    let mut bands: Vec<&mut [T]> = Vec::with_capacity(nthreads);
+    let mut rest = c.as_mut_slice();
+    let mut starts = Vec::with_capacity(nthreads);
+    let mut row = 0;
+    while row < m {
+        let rows_here = band.min(m - row);
+        let (head, tail) = rest.split_at_mut(rows_here * n);
+        bands.push(head);
+        starts.push(row);
+        rest = tail;
+        row += rows_here;
+    }
+    std::thread::scope(|s| {
+        for (band_c, &r0) in bands.into_iter().zip(starts.iter()) {
+            let rows_here = band_c.len() / n;
+            s.spawn(move || {
+                kernel_band_local(a_s, b_s, band_c, r0, rows_here, k, n);
+            });
+        }
+    });
+}
+
+/// Compute rows `[r0, r0+rows)` of C (C slice covers the whole matrix).
+fn kernel_band<T: Scalar>(a: &[T], b: &[T], c: &mut [T], r0: usize, rows: usize, k: usize, n: usize) {
+    let c_band = &mut c[r0 * n..(r0 + rows) * n];
+    kernel_band_local(a, b, c_band, r0, rows, k, n);
+}
+
+/// Same, but C slice starts at the band (thread-owned storage).
+fn kernel_band_local<T: Scalar>(
+    a: &[T],
+    b: &[T],
+    c_band: &mut [T],
+    r0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    for kb in (0..k).step_by(KC) {
+        let kmax = (kb + KC).min(k);
+        for i in 0..rows {
+            let arow = &a[(r0 + i) * k..(r0 + i + 1) * k];
+            let crow = &mut c_band[i * n..(i + 1) * n];
+            // Two k-steps per pass: doubles the ILP of the axpy chain and
+            // halves the C-row traffic. (Measured ladder in EXPERIMENTS.md
+            // §Perf: the original per-k zero-skip branch was the real
+            // vectorization killer — removing it was a ~5x win; widening
+            // to 4 k-steps regressed ~30% from register pressure and was
+            // reverted.)
+            let mut kk = kb;
+            while kk + 2 <= kmax {
+                let a0 = arow[kk];
+                let a1 = arow[kk + 1];
+                let b0 = &b[kk * n..kk * n + n];
+                let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
+                for ((cv, &v0), &v1) in crow.iter_mut().zip(b0).zip(b1) {
+                    *cv = *cv + v0 * a0 + v1 * a1;
+                }
+                kk += 2;
+            }
+            if kk < kmax {
+                let a0 = arow[kk];
+                let b0 = &b[kk * n..kk * n + n];
+                for (cv, &v0) in crow.iter_mut().zip(b0) {
+                    *cv = v0.mul_add_s(a0, *cv);
+                }
+            }
+        }
+    }
+}
+
+/// `C = A * B^T` — rows-dot-rows; used for `X X^T` / `Y X^T` accumulators
+/// where both operands are stored row-major with samples in rows.
+pub fn matmul_nt<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let (m, k) = a.shape();
+    let (n, k2) = b.shape();
+    assert_eq!(k, k2, "matmul_nt: inner dim mismatch");
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let flops = 2 * m * n * k;
+    let nthreads = if flops >= PAR_THRESHOLD {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(m.max(1))
+    } else {
+        1
+    };
+    let a_s = a.as_slice();
+    let b_s = b.as_slice();
+    let band = m.div_ceil(nthreads);
+    let mut bands: Vec<(usize, &mut [T])> = Vec::new();
+    let mut rest = c.as_mut_slice();
+    let mut row = 0;
+    while row < m {
+        let rows_here = band.min(m - row);
+        let (head, tail) = rest.split_at_mut(rows_here * n);
+        bands.push((row, head));
+        rest = tail;
+        row += rows_here;
+    }
+    std::thread::scope(|s| {
+        for (r0, band_c) in bands {
+            let rows_here = band_c.len() / n;
+            s.spawn(move || {
+                for i in 0..rows_here {
+                    let arow = &a_s[(r0 + i) * k..(r0 + i + 1) * k];
+                    for j in 0..n {
+                        let brow = &b_s[j * k..(j + 1) * k];
+                        let mut acc0 = T::ZERO;
+                        let mut acc1 = T::ZERO;
+                        let mut kk = 0;
+                        while kk + 2 <= k {
+                            acc0 = arow[kk].mul_add_s(brow[kk], acc0);
+                            acc1 = arow[kk + 1].mul_add_s(brow[kk + 1], acc1);
+                            kk += 2;
+                        }
+                        if kk < k {
+                            acc0 = arow[kk].mul_add_s(brow[kk], acc0);
+                        }
+                        band_c[i * n + j] = acc0 + acc1;
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+/// `C = A^T * B` (via explicit transpose of A — A^T is reused across the
+/// full multiply so the copy amortizes).
+pub fn matmul_tn<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let at = a.transpose();
+    matmul(&at, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    fn naive<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = T::ZERO;
+                for kk in 0..k {
+                    acc += a[(i, kk)] * b[(kk, j)];
+                }
+                c[(i, j)] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn small_exact() {
+        let a: Mat<f64> = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b: Mat<f64> = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = matmul(&a, &b);
+        assert_eq!(c, Mat::from_rows(&[vec![19.0, 22.0], vec![43.0, 50.0]]));
+    }
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        let mut rng = Rng::new(5);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 64, 64), (31, 100, 57)] {
+            let a: Mat<f64> = Mat::randn(m, k, &mut rng);
+            let b: Mat<f64> = Mat::randn(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            let r = naive(&a, &b);
+            assert!(c.rel_fro_err(&r) < 1e-12, "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn parallel_path_matches() {
+        // Big enough to trip the threading threshold.
+        let mut rng = Rng::new(6);
+        let a: Mat<f32> = Mat::randn(200, 150, &mut rng);
+        let b: Mat<f32> = Mat::randn(150, 180, &mut rng);
+        let c = matmul(&a, &b);
+        let r = naive(&a, &b);
+        assert!(c.rel_fro_err(&r) < 1e-5);
+    }
+
+    #[test]
+    fn nt_and_tn_match() {
+        let mut rng = Rng::new(8);
+        let a: Mat<f64> = Mat::randn(23, 31, &mut rng);
+        let b: Mat<f64> = Mat::randn(19, 31, &mut rng);
+        let c = matmul_nt(&a, &b);
+        let r = matmul(&a, &b.transpose());
+        assert!(c.rel_fro_err(&r) < 1e-12);
+
+        let a2: Mat<f64> = Mat::randn(31, 23, &mut rng);
+        let b2: Mat<f64> = Mat::randn(31, 19, &mut rng);
+        let c2 = matmul_tn(&a2, &b2);
+        let r2 = matmul(&a2.transpose(), &b2);
+        assert!(c2.rel_fro_err(&r2) < 1e-12);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(9);
+        let a: Mat<f64> = Mat::randn(12, 12, &mut rng);
+        let i: Mat<f64> = Mat::eye(12);
+        assert!(matmul(&a, &i).rel_fro_err(&a) < 1e-14);
+        assert!(matmul(&i, &a).rel_fro_err(&a) < 1e-14);
+    }
+
+    #[test]
+    fn associativity_of_lowrank_product() {
+        // (U V) X == U (V X) — the identity PIFA exploits.
+        let mut rng = Rng::new(10);
+        let u: Mat<f64> = Mat::randn(16, 4, &mut rng);
+        let v: Mat<f64> = Mat::randn(4, 12, &mut rng);
+        let x: Mat<f64> = Mat::randn(12, 8, &mut rng);
+        let lhs = matmul(&matmul(&u, &v), &x);
+        let rhs = matmul(&u, &matmul(&v, &x));
+        assert!(lhs.rel_fro_err(&rhs) < 1e-12);
+    }
+}

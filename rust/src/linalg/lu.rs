@@ -1,0 +1,196 @@
+//! LU decomposition with partial pivoting.
+//!
+//! Used by (a) the general `inverse`, (b) Figure 3's structure comparison
+//! (LU vs QR vs PIFA parameter layout), and (c) as an alternative pivot-row
+//! selector for PIFA (`Algorithm 1` allows either LU or QR with pivoting).
+
+use super::mat::Mat;
+use super::scalar::Scalar;
+use anyhow::{bail, Result};
+
+/// Packed LU factorization with row pivoting: `P A = L U`.
+pub struct Lu<T: Scalar> {
+    /// L (unit lower, below diagonal) and U (upper) packed together.
+    pub lu: Mat<T>,
+    /// Row permutation: factored row `i` is original row `piv[i]`.
+    pub piv: Vec<usize>,
+    /// Number of row swaps (for determinant sign).
+    pub swaps: usize,
+}
+
+impl<T: Scalar> Lu<T> {
+    /// Determinant of the original (square) matrix.
+    pub fn det(&self) -> f64 {
+        let n = self.lu.rows();
+        let mut d = if self.swaps % 2 == 0 { 1.0 } else { -1.0 };
+        for i in 0..n {
+            d *= self.lu[(i, i)].to_f64();
+        }
+        d
+    }
+
+    /// Row-pivot order restricted to the first `r` pivots. For a rank-r
+    /// rectangular input this is the LU flavour of PIFA's pivot-row pick.
+    pub fn pivot_rows(&self, r: usize) -> Vec<usize> {
+        self.piv[..r.min(self.piv.len())].to_vec()
+    }
+}
+
+/// Factor a (possibly rectangular, m >= n expected for full pivoting depth)
+/// matrix with partial (row) pivoting.
+pub fn lu_decompose<T: Scalar>(a: &Mat<T>) -> Lu<T> {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    let mut lu = a.clone();
+    let mut piv: Vec<usize> = (0..m).collect();
+    let mut swaps = 0usize;
+
+    for j in 0..k {
+        // Find pivot row.
+        let mut p = j;
+        let mut maxv = lu[(j, j)].to_f64().abs();
+        for i in j + 1..m {
+            let v = lu[(i, j)].to_f64().abs();
+            if v > maxv {
+                maxv = v;
+                p = i;
+            }
+        }
+        if p != j {
+            for c in 0..n {
+                let tmp = lu[(j, c)];
+                lu[(j, c)] = lu[(p, c)];
+                lu[(p, c)] = tmp;
+            }
+            piv.swap(j, p);
+            swaps += 1;
+        }
+        let d = lu[(j, j)];
+        if d.to_f64().abs() < 1e-300 {
+            continue; // singular column; leave zeros
+        }
+        let dinv = d.recip();
+        for i in j + 1..m {
+            let l = lu[(i, j)] * dinv;
+            lu[(i, j)] = l;
+            if l == T::ZERO {
+                continue;
+            }
+            for c in j + 1..n {
+                let upd = lu[(i, c)] - l * lu[(j, c)];
+                lu[(i, c)] = upd;
+            }
+        }
+    }
+    Lu { lu, piv, swaps }
+}
+
+/// Solve `A X = B` for square non-singular A via LU.
+pub fn lu_solve<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Result<Mat<T>> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "lu_solve: A must be square");
+    assert_eq!(b.rows(), n, "lu_solve: rhs rows mismatch");
+    let f = lu_decompose(a);
+    for i in 0..n {
+        if f.lu[(i, i)].to_f64().abs() < 1e-300 {
+            bail!("lu_solve: singular matrix (zero pivot at {i})");
+        }
+    }
+    let nrhs = b.cols();
+    // Apply permutation to B.
+    let mut x = Mat::zeros(n, nrhs);
+    for i in 0..n {
+        x.row_mut(i).copy_from_slice(b.row(f.piv[i]));
+    }
+    // Forward: L y = P b (unit diagonal).
+    for i in 0..n {
+        for j in 0..i {
+            let l = f.lu[(i, j)];
+            if l == T::ZERO {
+                continue;
+            }
+            for c in 0..nrhs {
+                let upd = x[(i, c)] - l * x[(j, c)];
+                x[(i, c)] = upd;
+            }
+        }
+    }
+    // Backward: U x = y.
+    for i in (0..n).rev() {
+        let dinv = f.lu[(i, i)].recip();
+        for c in 0..nrhs {
+            let mut acc = x[(i, c)];
+            for j in i + 1..n {
+                acc -= f.lu[(i, j)] * x[(j, c)];
+            }
+            x[(i, c)] = acc * dinv;
+        }
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn factorization_reconstructs() {
+        let mut rng = Rng::new(31);
+        let a: Mat<f64> = Mat::randn(8, 8, &mut rng);
+        let f = lu_decompose(&a);
+        let n = 8;
+        let mut l: Mat<f64> = Mat::eye(n);
+        let mut u: Mat<f64> = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                if i > j {
+                    l[(i, j)] = f.lu[(i, j)];
+                } else {
+                    u[(i, j)] = f.lu[(i, j)];
+                }
+            }
+        }
+        let pa = a.select_rows(&f.piv);
+        assert!(matmul(&l, &u).rel_fro_err(&pa) < 1e-10);
+    }
+
+    #[test]
+    fn solve_matches() {
+        let mut rng = Rng::new(32);
+        let a: Mat<f64> = Mat::randn(10, 10, &mut rng);
+        let x_true: Mat<f64> = Mat::randn(10, 3, &mut rng);
+        let b = matmul(&a, &x_true);
+        let x = lu_solve(&a, &b).unwrap();
+        assert!(x.rel_fro_err(&x_true) < 1e-8);
+    }
+
+    #[test]
+    fn det_of_diagonal() {
+        let a: Mat<f64> = Mat::from_rows(&[vec![2.0, 0.0], vec![0.0, 3.0]]);
+        let f = lu_decompose(&a);
+        assert!((f.det() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_solve_errors() {
+        let a: Mat<f64> = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        let b: Mat<f64> = Mat::from_rows(&[vec![1.0], vec![2.0]]);
+        assert!(lu_solve(&a, &b).is_err());
+    }
+
+    #[test]
+    fn pivot_rows_span_low_rank() {
+        let mut rng = Rng::new(33);
+        let r = 4;
+        let a: Mat<f64> = Mat::rand_low_rank(15, 10, r, &mut rng);
+        let f = lu_decompose(&a);
+        let rows = f.pivot_rows(r);
+        assert_eq!(rows.len(), r);
+        // Selected rows are linearly independent.
+        let sub = a.select_rows(&rows);
+        let g = matmul(&sub, &sub.transpose());
+        assert!(crate::linalg::chol::cholesky(&g).is_ok());
+    }
+}

@@ -1,0 +1,456 @@
+//! Row-major dense matrix.
+
+use super::rng::Rng;
+use super::scalar::Scalar;
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Row-major dense matrix over a [`Scalar`] element type (default `f32`).
+///
+/// Storage is a flat `Vec<T>` of length `rows * cols`; element `(i, j)`
+/// lives at `data[i * cols + j]`.
+#[derive(Clone, PartialEq)]
+pub struct Mat<T: Scalar = f32> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Mat<T> {
+    /// Zero-filled `rows x cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![T::ZERO; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: T) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = T::ONE;
+        }
+        m
+    }
+
+    /// Build from a flat row-major vector (length must be `rows * cols`).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_vec: length mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from nested rows (for tests / small literals).
+    pub fn from_rows(rows: &[Vec<T>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "from_rows: ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    /// Standard-normal random matrix (Box–Muller over the local RNG).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = T::from_f64(rng.normal());
+        }
+        m
+    }
+
+    /// Uniform random matrix in `[lo, hi)`.
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f64, hi: f64, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = T::from_f64(lo + (hi - lo) * rng.uniform());
+        }
+        m
+    }
+
+    /// Random matrix with exactly rank `r`: product of `rows x r` and
+    /// `r x cols` Gaussian factors. The workhorse input for PIFA tests.
+    pub fn rand_low_rank(rows: usize, cols: usize, r: usize, rng: &mut Rng) -> Self {
+        let a = Self::randn(rows, r, rng);
+        let b = Self::randn(r, cols, rng);
+        super::gemm::matmul(&a, &b)
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<T> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Self {
+        let mut t = Self::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Gather the given rows into a new matrix (PIFA pivot extraction).
+    pub fn select_rows(&self, idx: &[usize]) -> Self {
+        let mut out = Self::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Gather the given columns into a new matrix.
+    pub fn select_cols(&self, idx: &[usize]) -> Self {
+        let mut out = Self::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            for (k, &j) in idx.iter().enumerate() {
+                out[(i, k)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Contiguous sub-block copy `[r0..r1) x [c0..c1)`.
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Self {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Self::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.row_mut(i - r0).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write `src` into the block starting at `(r0, c0)`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Self) {
+        assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols);
+        for i in 0..src.rows {
+            let dst = &mut self.data[(r0 + i) * self.cols + c0..(r0 + i) * self.cols + c0 + src.cols];
+            dst.copy_from_slice(src.row(i));
+        }
+    }
+
+    /// Vertically stack `self` on top of `other`.
+    pub fn vstack(&self, other: &Self) -> Self {
+        assert_eq!(self.cols, other.cols, "vstack: col mismatch");
+        let mut out = Self::zeros(self.rows + other.rows, self.cols);
+        out.data[..self.data.len()].copy_from_slice(&self.data);
+        out.data[self.data.len()..].copy_from_slice(&other.data);
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v.to_f64() * v.to_f64()).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().map(|v| v.to_f64().abs()).fold(0.0, f64::max)
+    }
+
+    /// `||self - other||_F`.
+    pub fn fro_dist(&self, other: &Self) -> f64 {
+        assert_eq!(self.shape(), other.shape(), "fro_dist: shape mismatch");
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| {
+                let d = a.to_f64() - b.to_f64();
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Relative Frobenius error `||self - other||_F / ||other||_F`.
+    pub fn rel_fro_err(&self, other: &Self) -> f64 {
+        let denom = other.fro_norm().max(1e-300);
+        self.fro_dist(other) / denom
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(T) -> T) -> Self {
+        let mut out = self.clone();
+        for v in out.data.iter_mut() {
+            *v = f(*v);
+        }
+        out
+    }
+
+    /// In-place scale by a scalar.
+    pub fn scale_inplace(&mut self, s: T) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// `self + other` (new matrix).
+    pub fn add_mat(&self, other: &Self) -> Self {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(other.data.iter()) {
+            *a += *b;
+        }
+        out
+    }
+
+    /// `self - other` (new matrix).
+    pub fn sub_mat(&self, other: &Self) -> Self {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(other.data.iter()) {
+            *a -= *b;
+        }
+        out
+    }
+
+    /// `self + alpha * other` (new matrix).
+    pub fn axpy(&self, alpha: T, other: &Self) -> Self {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(other.data.iter()) {
+            *a = b.mul_add_s(alpha, *a);
+        }
+        out
+    }
+
+    /// Add `alpha` to the diagonal in place (ridge / damping).
+    pub fn add_diag(&mut self, alpha: T) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += alpha;
+        }
+    }
+
+    /// Matrix-vector product `self * x`.
+    pub fn matvec(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.cols, "matvec: dim mismatch");
+        let mut y = vec![T::ZERO; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = T::ZERO;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc = a.mul_add_s(*b, acc);
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Precision conversion.
+    pub fn cast<U: Scalar>(&self) -> Mat<U> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| U::from_f64(v.to_f64())).collect(),
+        }
+    }
+
+    /// True if all entries are finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite_s())
+    }
+}
+
+impl<T: Scalar> Default for Mat<T> {
+    /// An empty 0x0 matrix (useful for cache structs built up lazily).
+    fn default() -> Self {
+        Mat::zeros(0, 0)
+    }
+}
+
+impl<T: Scalar> Index<(usize, usize)> for Mat<T> {
+    type Output = T;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl<T: Scalar> IndexMut<(usize, usize)> for Mat<T> {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl<T: Scalar> fmt::Debug for Mat<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self[(i, j)].to_f64())?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "..." } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_eye_full() {
+        let z: Mat<f64> = Mat::zeros(2, 3);
+        assert_eq!(z.shape(), (2, 3));
+        assert!(z.as_slice().iter().all(|&v| v == 0.0));
+        let e: Mat<f64> = Mat::eye(3);
+        assert_eq!(e[(1, 1)], 1.0);
+        assert_eq!(e[(0, 1)], 0.0);
+        let f: Mat<f32> = Mat::full(2, 2, 7.0);
+        assert_eq!(f[(1, 0)], 7.0);
+    }
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut m: Mat<f64> = Mat::zeros(3, 4);
+        m[(2, 1)] = 5.0;
+        assert_eq!(m[(2, 1)], 5.0);
+        assert_eq!(m.row(2)[1], 5.0);
+        assert_eq!(m.col(1)[2], 5.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(7);
+        let m: Mat<f64> = Mat::randn(13, 29, &mut rng);
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+        assert_eq!(m.transpose()[(5, 7)], m[(7, 5)]);
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let m: Mat<f64> = Mat::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 9.0],
+        ]);
+        let r = m.select_rows(&[2, 0]);
+        assert_eq!(r.row(0), &[7.0, 8.0, 9.0]);
+        assert_eq!(r.row(1), &[1.0, 2.0, 3.0]);
+        let c = m.select_cols(&[1]);
+        assert_eq!(c.col(0), vec![2.0, 5.0, 8.0]);
+    }
+
+    #[test]
+    fn block_ops() {
+        let m: Mat<f64> = Mat::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 9.0],
+        ]);
+        let b = m.block(1, 3, 0, 2);
+        assert_eq!(b.shape(), (2, 2));
+        assert_eq!(b[(0, 0)], 4.0);
+        let mut z: Mat<f64> = Mat::zeros(3, 3);
+        z.set_block(1, 1, &b);
+        assert_eq!(z[(1, 1)], 4.0);
+        assert_eq!(z[(2, 2)], 8.0);
+    }
+
+    #[test]
+    fn norms_and_arith() {
+        let a: Mat<f64> = Mat::from_rows(&[vec![3.0, 0.0], vec![0.0, 4.0]]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+        let b = a.map(|v| v * 2.0);
+        assert!((a.fro_dist(&b) - 5.0).abs() < 1e-12);
+        let c = a.add_mat(&a).sub_mat(&a);
+        assert_eq!(c, a);
+        let d = a.axpy(3.0, &a);
+        assert_eq!(d[(0, 0)], 12.0);
+    }
+
+    #[test]
+    fn matvec_correct() {
+        let a: Mat<f64> = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let y = a.matvec(&[1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn low_rank_has_rank() {
+        let mut rng = Rng::new(3);
+        let m: Mat<f64> = Mat::rand_low_rank(20, 16, 5, &mut rng);
+        let sv = super::super::svd::svd(&m).s;
+        let tol = sv[0] * 1e-9;
+        let numrank = sv.iter().filter(|&&s| s > tol).count();
+        assert_eq!(numrank, 5);
+    }
+
+    #[test]
+    fn cast_preserves_values() {
+        let a: Mat<f64> = Mat::from_rows(&[vec![1.5, -2.5]]);
+        let b: Mat<f32> = a.cast();
+        assert_eq!(b[(0, 1)], -2.5f32);
+    }
+
+    #[test]
+    fn vstack_works() {
+        let a: Mat<f64> = Mat::from_rows(&[vec![1.0, 2.0]]);
+        let b: Mat<f64> = Mat::from_rows(&[vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let v = a.vstack(&b);
+        assert_eq!(v.shape(), (3, 2));
+        assert_eq!(v[(2, 1)], 6.0);
+    }
+}

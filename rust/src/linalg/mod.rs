@@ -1,0 +1,39 @@
+//! From-scratch dense linear algebra substrate.
+//!
+//! No BLAS/LAPACK is available in the offline crate set, so this module
+//! implements everything the compression pipeline needs:
+//!
+//! * [`Mat`] — row-major dense matrix over f32/f64 ([`Scalar`]).
+//! * [`gemm`] — blocked, packed, multi-threaded matrix multiply (the L3 hot
+//!   path; see DESIGN.md §7).
+//! * [`qr`] — Householder QR with column pivoting (Businger–Golub), the
+//!   pivot-row selector of Pivoting Factorization (paper Algorithm 1).
+//! * [`lu`] — LU with partial pivoting + solves (used for Figure 3 and as a
+//!   pivot-selection alternative).
+//! * [`chol`] — Cholesky factorization / solves (whitening, ridge solves).
+//! * [`svd`] — one-sided Jacobi SVD (vanilla SVD pruning, SVD-LLM, ASVD).
+//! * [`solve`] — triangular / least-squares / ridge solvers, inverses,
+//!   condition numbers (Figure 8).
+//! * [`rng`] — splitmix64/xoshiro random numbers (no `rand` offline).
+
+pub mod chol;
+pub mod gemm;
+pub mod lu;
+pub mod mat;
+pub mod qr;
+pub mod rng;
+pub mod scalar;
+pub mod solve;
+pub mod svd;
+
+pub use chol::{cholesky, chol_solve, chol_inverse};
+pub use gemm::{matmul, matmul_into, matmul_tn, matmul_nt};
+pub use lu::{lu_decompose, lu_solve, Lu};
+pub use mat::Mat;
+pub use qr::{qr_column_pivot, PivotedQr};
+pub use rng::Rng;
+pub use scalar::Scalar;
+pub use solve::{
+    condition_number_2, inverse, lstsq, ridge_solve_spd, solve_lower_tri, solve_upper_tri,
+};
+pub use svd::{svd, Svd};

@@ -1,0 +1,267 @@
+//! Householder QR with column pivoting (Businger & Golub 1971).
+//!
+//! This is the pivot selector of Pivoting Factorization (paper §3.2,
+//! Algorithm 1 step 1): applied to `W'^T`, the chosen pivot *columns* of
+//! `W'^T` are the pivot *rows* of `W'` — the greedy max-residual-norm
+//! ordering picks a well-conditioned spanning subset of rank-r rows.
+
+use super::mat::Mat;
+use super::scalar::Scalar;
+
+/// Result of a column-pivoted QR: `A P = Q R`.
+pub struct PivotedQr<T: Scalar> {
+    /// Packed factorization: R in the upper triangle, Householder vectors
+    /// below the diagonal (LAPACK `geqp3` layout).
+    pub qr: Mat<T>,
+    /// Householder scalar coefficients.
+    pub tau: Vec<T>,
+    /// Column permutation: factored column `j` is original column `perm[j]`.
+    pub perm: Vec<usize>,
+    /// Diagonal of R (pivot magnitudes, non-increasing in magnitude).
+    pub rdiag: Vec<T>,
+}
+
+impl<T: Scalar> PivotedQr<T> {
+    /// Numerical rank: number of |r_ii| above `tol * |r_00|`.
+    pub fn rank(&self, rel_tol: f64) -> usize {
+        if self.rdiag.is_empty() {
+            return 0;
+        }
+        let r0 = self.rdiag[0].to_f64().abs();
+        if r0 == 0.0 {
+            return 0;
+        }
+        self.rdiag
+            .iter()
+            .take_while(|d| d.to_f64().abs() > rel_tol * r0)
+            .count()
+    }
+
+    /// The first `r` pivot column indices (in pivot order).
+    pub fn pivots(&self, r: usize) -> Vec<usize> {
+        self.perm[..r.min(self.perm.len())].to_vec()
+    }
+
+    /// Extract the explicit `R` factor (k x n upper-triangular, k = min(m,n)).
+    pub fn r_factor(&self) -> Mat<T> {
+        let (m, n) = self.qr.shape();
+        let k = m.min(n);
+        let mut r = Mat::zeros(k, n);
+        for i in 0..k {
+            for j in i..n {
+                r[(i, j)] = self.qr[(i, j)];
+            }
+        }
+        r
+    }
+
+    /// Apply `Q^T` to a matrix (multi-RHS), in place.
+    pub fn apply_qt(&self, b: &mut Mat<T>) {
+        let (m, n) = self.qr.shape();
+        let k = m.min(n);
+        assert_eq!(b.rows(), m, "apply_qt: row mismatch");
+        let nrhs = b.cols();
+        for j in 0..k {
+            let tau = self.tau[j];
+            if tau == T::ZERO {
+                continue;
+            }
+            // v = [1, qr[j+1..m, j]]
+            for c in 0..nrhs {
+                let mut dot = b[(j, c)];
+                for i in j + 1..m {
+                    dot += self.qr[(i, j)] * b[(i, c)];
+                }
+                let w = tau * dot;
+                b[(j, c)] -= w;
+                for i in j + 1..m {
+                    let vij = self.qr[(i, j)];
+                    b[(i, c)] = b[(i, c)] - vij * w;
+                }
+            }
+        }
+    }
+}
+
+/// Column-pivoted Householder QR of `a`.
+///
+/// Column norms are down-dated incrementally and recomputed when cancelled
+/// (the standard `geqp3` safeguard), so pivot selection stays reliable on
+/// near-rank-deficient inputs — exactly the regime PIFA lives in.
+pub fn qr_column_pivot<T: Scalar>(a: &Mat<T>) -> PivotedQr<T> {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    let mut qr = a.clone();
+    let mut tau = vec![T::ZERO; k];
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut rdiag = vec![T::ZERO; k];
+
+    // Column norms (current) and reference norms (for recompute check).
+    let mut cnorm: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| qr[(i, j)].to_f64().powi(2)).sum::<f64>().sqrt())
+        .collect();
+    let mut cnorm_ref = cnorm.clone();
+
+    for step in 0..k {
+        // Pivot: column with max residual norm among [step..n).
+        let (pj, _) = cnorm[step..n]
+            .iter()
+            .enumerate()
+            .fold((0usize, -1.0f64), |(bi, bv), (i, &v)| if v > bv { (i, v) } else { (bi, bv) });
+        let pj = pj + step;
+        if pj != step {
+            for i in 0..m {
+                let tmp = qr[(i, step)];
+                qr[(i, step)] = qr[(i, pj)];
+                qr[(i, pj)] = tmp;
+            }
+            perm.swap(step, pj);
+            cnorm.swap(step, pj);
+            cnorm_ref.swap(step, pj);
+        }
+
+        // Householder vector for column `step`, rows [step..m).
+        let mut norm_x = 0.0f64;
+        for i in step..m {
+            norm_x = norm_x.hypot(qr[(i, step)].to_f64());
+        }
+        if norm_x == 0.0 {
+            tau[step] = T::ZERO;
+            rdiag[step] = T::ZERO;
+            continue;
+        }
+        let alpha = qr[(step, step)].to_f64();
+        let beta = if alpha >= 0.0 { -norm_x } else { norm_x };
+        let t = (beta - alpha) / beta;
+        let scale = 1.0 / (alpha - beta);
+        for i in step + 1..m {
+            qr[(i, step)] = T::from_f64(qr[(i, step)].to_f64() * scale);
+        }
+        qr[(step, step)] = T::from_f64(beta);
+        tau[step] = T::from_f64(t);
+        rdiag[step] = T::from_f64(beta);
+
+        // Apply reflector to the trailing columns.
+        for j in step + 1..n {
+            let mut dot = qr[(step, j)].to_f64();
+            for i in step + 1..m {
+                dot += qr[(i, step)].to_f64() * qr[(i, j)].to_f64();
+            }
+            let w = t * dot;
+            qr[(step, j)] = T::from_f64(qr[(step, j)].to_f64() - w);
+            for i in step + 1..m {
+                let upd = qr[(i, j)].to_f64() - qr[(i, step)].to_f64() * w;
+                qr[(i, j)] = T::from_f64(upd);
+            }
+        }
+
+        // Down-date column norms; recompute when cancellation is severe.
+        for j in step + 1..n {
+            if cnorm[j] == 0.0 {
+                continue;
+            }
+            let rij = qr[(step, j)].to_f64();
+            let tmp = 1.0 - (rij / cnorm[j]).powi(2);
+            let tmp = tmp.max(0.0);
+            let check = tmp * (cnorm[j] / cnorm_ref[j]).powi(2);
+            if check <= 1e-14 {
+                // Recompute from scratch.
+                let mut s = 0.0f64;
+                for i in step + 1..m {
+                    s = s.hypot(qr[(i, j)].to_f64());
+                }
+                cnorm[j] = s;
+                cnorm_ref[j] = s;
+            } else {
+                cnorm[j] *= tmp.sqrt();
+            }
+        }
+    }
+
+    PivotedQr { qr, tau, perm, rdiag }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::linalg::rng::Rng;
+
+    /// Rebuild Q explicitly by applying Q^T to the identity and transposing.
+    fn q_explicit(f: &PivotedQr<f64>, m: usize) -> Mat<f64> {
+        let mut qt = Mat::eye(m);
+        f.apply_qt(&mut qt);
+        qt.transpose()
+    }
+
+    #[test]
+    fn reconstructs_ap_eq_qr() {
+        let mut rng = Rng::new(21);
+        for &(m, n) in &[(8, 8), (12, 7), (7, 12)] {
+            let a: Mat<f64> = Mat::randn(m, n, &mut rng);
+            let f = qr_column_pivot(&a);
+            let q = q_explicit(&f, m);
+            let r = f.r_factor();
+            // Q (m x m) * R (k x n) needs padding of R to m rows.
+            let mut r_full = Mat::zeros(m, n);
+            r_full.set_block(0, 0, &r);
+            let qr_prod = matmul(&q, &r_full);
+            let ap = a.select_cols(&f.perm);
+            assert!(qr_prod.rel_fro_err(&ap) < 1e-10, "shape ({m},{n})");
+        }
+    }
+
+    #[test]
+    fn q_is_orthogonal() {
+        let mut rng = Rng::new(22);
+        let a: Mat<f64> = Mat::randn(10, 6, &mut rng);
+        let f = qr_column_pivot(&a);
+        let q = q_explicit(&f, 10);
+        let qtq = matmul(&q.transpose(), &q);
+        assert!(qtq.rel_fro_err(&Mat::eye(10)) < 1e-10);
+    }
+
+    #[test]
+    fn rdiag_nonincreasing() {
+        let mut rng = Rng::new(23);
+        let a: Mat<f64> = Mat::rand_low_rank(20, 15, 6, &mut rng);
+        let f = qr_column_pivot(&a);
+        for w in f.rdiag.windows(2) {
+            assert!(w[0].abs() >= w[1].abs() - 1e-9, "rdiag not sorted: {:?}", f.rdiag);
+        }
+    }
+
+    #[test]
+    fn rank_detection_on_low_rank() {
+        let mut rng = Rng::new(24);
+        for &r in &[1usize, 3, 8] {
+            let a: Mat<f64> = Mat::rand_low_rank(24, 18, r, &mut rng);
+            let f = qr_column_pivot(&a);
+            assert_eq!(f.rank(1e-8), r, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn pivots_are_independent_columns() {
+        // The r pivot columns must span the column space: solving for the
+        // rest via the pivots must reconstruct exactly.
+        let mut rng = Rng::new(25);
+        let r = 5;
+        let a: Mat<f64> = Mat::rand_low_rank(16, 20, r, &mut rng);
+        let f = qr_column_pivot(&a);
+        let piv = f.pivots(r);
+        assert_eq!(piv.len(), r);
+        let ap = a.select_cols(&piv); // 16 x r, full column rank
+        // Gram matrix must be invertible.
+        let g = matmul(&ap.transpose(), &ap);
+        let chol = crate::linalg::chol::cholesky(&g);
+        assert!(chol.is_ok(), "pivot columns not independent");
+    }
+
+    #[test]
+    fn zero_matrix_rank_zero() {
+        let a: Mat<f64> = Mat::zeros(5, 5);
+        let f = qr_column_pivot(&a);
+        assert_eq!(f.rank(1e-10), 0);
+    }
+}

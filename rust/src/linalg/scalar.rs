@@ -1,0 +1,162 @@
+//! Minimal float abstraction so the substrate serves both the f32 model
+//! path and the f64 compression path without duplication.
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Floating-point element type for [`crate::linalg::Mat`].
+pub trait Scalar:
+    Copy
+    + Clone
+    + Debug
+    + Display
+    + PartialOrd
+    + PartialEq
+    + Default
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Machine epsilon.
+    const EPS: Self;
+
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn recip(self) -> Self;
+    fn max_s(self, other: Self) -> Self;
+    fn min_s(self, other: Self) -> Self;
+    fn hypot_s(self, other: Self) -> Self;
+    fn is_finite_s(self) -> bool;
+    /// Fused or plain multiply-add; the GEMM microkernel is written against
+    /// this so both precisions share it.
+    #[inline(always)]
+    fn mul_add_s(self, a: Self, b: Self) -> Self {
+        self * a + b
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPS: Self = f32::EPSILON;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline(always)]
+    fn recip(self) -> Self {
+        1.0 / self
+    }
+    #[inline(always)]
+    fn max_s(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    #[inline(always)]
+    fn min_s(self, other: Self) -> Self {
+        f32::min(self, other)
+    }
+    #[inline(always)]
+    fn hypot_s(self, other: Self) -> Self {
+        f32::hypot(self, other)
+    }
+    #[inline(always)]
+    fn is_finite_s(self) -> bool {
+        f32::is_finite(self)
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPS: Self = f64::EPSILON;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline(always)]
+    fn recip(self) -> Self {
+        1.0 / self
+    }
+    #[inline(always)]
+    fn max_s(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    #[inline(always)]
+    fn min_s(self, other: Self) -> Self {
+        f64::min(self, other)
+    }
+    #[inline(always)]
+    fn hypot_s(self, other: Self) -> Self {
+        f64::hypot(self, other)
+    }
+    #[inline(always)]
+    fn is_finite_s(self) -> bool {
+        f64::is_finite(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        assert_eq!(f32::from_f64(1.5).to_f64(), 1.5);
+        assert_eq!(f32::ONE + f32::ONE, 2.0);
+    }
+
+    #[test]
+    fn f64_ops() {
+        assert_eq!(f64::from_f64(-2.0).abs(), 2.0);
+        assert!((2.0f64.sqrt() * 2.0f64.sqrt() - 2.0).abs() < 1e-12);
+        assert_eq!(3.0f64.max_s(4.0), 4.0);
+        assert_eq!(3.0f64.min_s(4.0), 3.0);
+    }
+
+    #[test]
+    fn mul_add_matches() {
+        let r = 2.0f64.mul_add_s(3.0, 4.0);
+        assert_eq!(r, 10.0);
+    }
+}

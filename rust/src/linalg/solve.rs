@@ -1,0 +1,212 @@
+//! Triangular / least-squares / ridge solvers and condition numbers.
+
+use super::chol::cholesky;
+use super::lu::lu_solve;
+use super::mat::Mat;
+use super::scalar::Scalar;
+use super::svd::svd;
+use anyhow::Result;
+
+/// Solve `L X = B` with `L` lower-triangular (multi-RHS).
+pub fn solve_lower_tri<T: Scalar>(l: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    let nrhs = b.cols();
+    let mut x = b.clone();
+    for i in 0..n {
+        let dinv = l[(i, i)].recip();
+        for c in 0..nrhs {
+            let mut acc = x[(i, c)];
+            for j in 0..i {
+                acc -= l[(i, j)] * x[(j, c)];
+            }
+            x[(i, c)] = acc * dinv;
+        }
+    }
+    x
+}
+
+/// Solve `U X = B` with `U` upper-triangular (multi-RHS).
+pub fn solve_upper_tri<T: Scalar>(u: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let n = u.rows();
+    assert_eq!(u.cols(), n);
+    assert_eq!(b.rows(), n);
+    let nrhs = b.cols();
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let dinv = u[(i, i)].recip();
+        for c in 0..nrhs {
+            let mut acc = x[(i, c)];
+            for j in i + 1..n {
+                acc -= u[(i, j)] * x[(j, c)];
+            }
+            x[(i, c)] = acc * dinv;
+        }
+    }
+    x
+}
+
+/// Solve `L^T X = B` given lower-triangular `L` (i.e. upper solve with L^T
+/// without materializing the transpose).
+pub fn solve_upper_tri_from_lower_t<T: Scalar>(l: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let n = l.rows();
+    let nrhs = b.cols();
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let dinv = l[(i, i)].recip();
+        for c in 0..nrhs {
+            let mut acc = x[(i, c)];
+            for j in i + 1..n {
+                // (L^T)[i, j] = L[j, i]
+                acc -= l[(j, i)] * x[(j, c)];
+            }
+            x[(i, c)] = acc * dinv;
+        }
+    }
+    x
+}
+
+/// General inverse via LU (square, non-singular).
+pub fn inverse<T: Scalar>(a: &Mat<T>) -> Result<Mat<T>> {
+    lu_solve(a, &Mat::eye(a.rows()))
+}
+
+/// Least squares `min_X ||A X - B||_F` for full-column-rank `A` via the
+/// normal equations with a Cholesky solve; falls back to a tiny ridge when
+/// the Gram matrix is numerically semidefinite (the paper's Eq. 9 move).
+pub fn lstsq<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Result<Mat<T>> {
+    let g = super::gemm::matmul_tn(a, a);
+    let atb = super::gemm::matmul_tn(a, b);
+    match super::chol::chol_solve(&g, &atb) {
+        Ok(x) => Ok(x),
+        Err(_) => {
+            let mut g2 = g;
+            let scale = T::from_f64(g2.max_abs().max(1e-12) * 1e-10);
+            g2.add_diag(scale);
+            super::chol::chol_solve(&g2, &atb)
+        }
+    }
+}
+
+/// Ridge solve for SPD systems: `(A + alpha I)^{-1} B`.
+pub fn ridge_solve_spd<T: Scalar>(a: &Mat<T>, alpha: f64, b: &Mat<T>) -> Result<Mat<T>> {
+    let mut a2 = a.clone();
+    a2.add_diag(T::from_f64(alpha));
+    super::chol::chol_solve(&a2, b)
+}
+
+/// Spectral (2-norm) condition number via SVD — Figure 8's metric.
+pub fn condition_number_2<T: Scalar>(a: &Mat<T>) -> f64 {
+    let s = svd(a).s;
+    if s.is_empty() {
+        return f64::INFINITY;
+    }
+    let smax = s[0];
+    let smin = *s.last().unwrap();
+    if smin <= 0.0 {
+        f64::INFINITY
+    } else {
+        smax / smin
+    }
+}
+
+/// Guard: verify Cholesky succeeds (used by tests & callers that want a
+/// cheap SPD check without unwrapping).
+pub fn is_spd<T: Scalar>(a: &Mat<T>) -> bool {
+    cholesky(a).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_nt};
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn lower_tri_solve() {
+        let l: Mat<f64> = Mat::from_rows(&[vec![2.0, 0.0], vec![1.0, 3.0]]);
+        let b: Mat<f64> = Mat::from_rows(&[vec![4.0], vec![11.0]]);
+        let x = solve_lower_tri(&l, &b);
+        assert!((x[(0, 0)] - 2.0).abs() < 1e-12);
+        assert!((x[(1, 0)] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn upper_tri_solve() {
+        let u: Mat<f64> = Mat::from_rows(&[vec![2.0, 1.0], vec![0.0, 3.0]]);
+        let x_true: Mat<f64> = Mat::from_rows(&[vec![1.0], vec![2.0]]);
+        let b = matmul(&u, &x_true);
+        let x = solve_upper_tri(&u, &b);
+        assert!(x.rel_fro_err(&x_true) < 1e-12);
+    }
+
+    #[test]
+    fn lower_t_solve_matches_transpose() {
+        let mut rng = Rng::new(51);
+        let a: Mat<f64> = Mat::randn(6, 10, &mut rng);
+        let mut g = matmul_nt(&a, &a);
+        g.add_diag(0.5);
+        let l = crate::linalg::chol::cholesky(&g).unwrap();
+        let b: Mat<f64> = Mat::randn(6, 3, &mut rng);
+        let x1 = solve_upper_tri_from_lower_t(&l, &b);
+        let x2 = solve_upper_tri(&l.transpose(), &b);
+        assert!(x1.rel_fro_err(&x2) < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(52);
+        let a: Mat<f64> = Mat::randn(9, 9, &mut rng);
+        let ainv = inverse(&a).unwrap();
+        assert!(matmul(&a, &ainv).rel_fro_err(&Mat::eye(9)) < 1e-8);
+    }
+
+    #[test]
+    fn lstsq_exact_when_consistent() {
+        let mut rng = Rng::new(53);
+        let a: Mat<f64> = Mat::randn(20, 6, &mut rng);
+        let x_true: Mat<f64> = Mat::randn(6, 4, &mut rng);
+        let b = matmul(&a, &x_true);
+        let x = lstsq(&a, &b).unwrap();
+        assert!(x.rel_fro_err(&x_true) < 1e-8);
+    }
+
+    #[test]
+    fn lstsq_minimizes_residual() {
+        // Perturbed RHS: solution must satisfy normal equations A^T(Ax-b)=0.
+        let mut rng = Rng::new(54);
+        let a: Mat<f64> = Mat::randn(30, 5, &mut rng);
+        let b: Mat<f64> = Mat::randn(30, 2, &mut rng);
+        let x = lstsq(&a, &b).unwrap();
+        let resid = matmul(&a, &x).sub_mat(&b);
+        let ntr = crate::linalg::gemm::matmul_tn(&a, &resid);
+        assert!(ntr.max_abs() < 1e-8, "normal eq residual {}", ntr.max_abs());
+    }
+
+    #[test]
+    fn ridge_shrinks_solution() {
+        let mut rng = Rng::new(55);
+        let a: Mat<f64> = Mat::randn(8, 12, &mut rng);
+        let g = matmul_nt(&a, &a);
+        let b: Mat<f64> = Mat::randn(8, 1, &mut rng);
+        let x0 = ridge_solve_spd(&g, 1e-6, &b).unwrap();
+        let x1 = ridge_solve_spd(&g, 1e3, &b).unwrap();
+        assert!(x1.fro_norm() < x0.fro_norm());
+    }
+
+    #[test]
+    fn condition_number_of_identity() {
+        let i: Mat<f64> = Mat::eye(5);
+        let c = condition_number_2(&i);
+        assert!((c - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn condition_number_scales() {
+        let mut d: Mat<f64> = Mat::eye(4);
+        d[(0, 0)] = 100.0;
+        let c = condition_number_2(&d);
+        assert!((c - 100.0).abs() < 1e-3);
+    }
+}

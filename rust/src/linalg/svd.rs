@@ -1,0 +1,291 @@
+//! Singular value decomposition via one-sided Jacobi rotations.
+//!
+//! One-sided Jacobi is slower than Golub–Kahan for huge matrices but is
+//! simple, unconditionally stable, and computes small singular values to
+//! high relative accuracy — which matters here because every low-rank
+//! pruning baseline (vanilla SVD, ASVD, SVD-LLM whitening) truncates the
+//! spectrum, and Figure 8's condition numbers probe the tiny end of it.
+//!
+//! The decomposition is `A = U diag(s) V^T` with `U (m x k)`, `s` sorted
+//! descending, `V^T (k x n)`, `k = min(m, n)`. Internally the work happens
+//! on `A^T` stored row-major (so "columns of A" are contiguous) in f64.
+
+use super::mat::Mat;
+use super::scalar::Scalar;
+
+/// SVD result: `a ≈ u * diag(s) * vt`.
+pub struct Svd<T: Scalar> {
+    pub u: Mat<T>,
+    /// Singular values, descending, always f64.
+    pub s: Vec<f64>,
+    pub vt: Mat<T>,
+}
+
+impl<T: Scalar> Svd<T> {
+    /// Rank-r truncation folded into factors: `U_r = u[:, :r] * diag(s[:r])`,
+    /// `Vt_r = vt[:r, :]` — the paper's `U = B_r E_r`, `V^T = A_r^T` (§3.1).
+    pub fn truncate(&self, r: usize) -> (Mat<T>, Mat<T>) {
+        let m = self.u.rows();
+        let n = self.vt.cols();
+        let r = r.min(self.s.len());
+        let mut u_r = Mat::zeros(m, r);
+        for i in 0..m {
+            for j in 0..r {
+                u_r[(i, j)] = T::from_f64(self.u[(i, j)].to_f64() * self.s[j]);
+            }
+        }
+        let mut vt_r = Mat::zeros(r, n);
+        for i in 0..r {
+            vt_r.row_mut(i).copy_from_slice(self.vt.row(i));
+        }
+        (u_r, vt_r)
+    }
+
+    /// Reconstruct the (possibly truncated) matrix product.
+    pub fn reconstruct(&self, r: usize) -> Mat<T> {
+        let (u_r, vt_r) = self.truncate(r);
+        super::gemm::matmul(&u_r, &vt_r)
+    }
+
+    /// Numerical rank at relative tolerance.
+    pub fn rank(&self, rel_tol: f64) -> usize {
+        if self.s.is_empty() || self.s[0] <= 0.0 {
+            return 0;
+        }
+        let t = self.s[0] * rel_tol;
+        self.s.iter().take_while(|&&v| v > t).count()
+    }
+}
+
+/// Compute the thin SVD of `a`.
+pub fn svd<T: Scalar>(a: &Mat<T>) -> Svd<T> {
+    let (m, n) = a.shape();
+    if m >= n {
+        svd_tall(&a.cast::<f64>()).cast_out()
+    } else {
+        // SVD of A^T, then swap roles: A = U S V^T  <=>  A^T = V S U^T.
+        let t = svd_tall(&a.transpose().cast::<f64>());
+        Svd { u: t.vt.transpose().cast(), s: t.s, vt: t.u.transpose().cast() }
+    }
+}
+
+struct SvdF64 {
+    u: Mat<f64>,
+    s: Vec<f64>,
+    vt: Mat<f64>,
+}
+
+impl SvdF64 {
+    fn cast_out<T: Scalar>(self) -> Svd<T> {
+        Svd { u: self.u.cast(), s: self.s, vt: self.vt.cast() }
+    }
+}
+
+/// One-sided Jacobi on a tall (m >= n) f64 matrix.
+fn svd_tall(a: &Mat<f64>) -> SvdF64 {
+    let (m, n) = a.shape();
+    debug_assert!(m >= n);
+    // Work on A^T: row i of `w` is column i of A (contiguous).
+    let mut w = a.transpose();
+    // V accumulator (n x n), rows are v-columns (also transposed layout).
+    let mut v = Mat::<f64>::eye(n);
+
+    let tol = 1e-13;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                // Split borrows of rows p and q.
+                let (alpha, beta, gamma) = {
+                    let wp = w.row(p);
+                    let wq = w.row(q);
+                    let mut alpha = 0.0;
+                    let mut beta = 0.0;
+                    let mut gamma = 0.0;
+                    for i in 0..m {
+                        alpha += wp[i] * wp[i];
+                        beta += wq[i] * wq[i];
+                        gamma += wp[i] * wq[i];
+                    }
+                    (alpha, beta, gamma)
+                };
+                if alpha * beta == 0.0 {
+                    continue;
+                }
+                let limit = gamma.abs() / (alpha * beta).sqrt();
+                if limit <= tol {
+                    continue;
+                }
+                off = off.max(limit);
+                // Jacobi rotation zeroing the (p,q) inner product.
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate_rows(&mut w, p, q, c, s);
+                rotate_rows(&mut v, p, q, c, s);
+            }
+        }
+        if off <= tol {
+            break;
+        }
+    }
+
+    // Singular values = row norms of w; U columns = normalized rows of w.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|i| w.row(i).iter().map(|v| v * v).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Mat::<f64>::zeros(m, n);
+    let mut s = Vec::with_capacity(n);
+    let mut vt = Mat::<f64>::zeros(n, n);
+    for (k, &idx) in order.iter().enumerate() {
+        let nm = norms[idx];
+        s.push(nm);
+        if nm > 0.0 {
+            let inv = 1.0 / nm;
+            for i in 0..m {
+                u[(i, k)] = w.row(idx)[i] * inv;
+            }
+        }
+        // v rows are V^T's... v is stored with row j = column j of V, i.e.
+        // v.row(idx) is the right-singular vector; V^T row k = that vector.
+        vt.row_mut(k).copy_from_slice(v.row(idx));
+    }
+    SvdF64 { u, s, vt }
+}
+
+#[inline]
+fn rotate_rows(w: &mut Mat<f64>, p: usize, q: usize, c: f64, s: f64) {
+    let cols = w.cols();
+    let (pr, qr) = if p < q {
+        let (head, tail) = w.as_mut_slice().split_at_mut(q * cols);
+        (&mut head[p * cols..(p + 1) * cols], &mut tail[..cols])
+    } else {
+        unreachable!("rotate_rows requires p < q")
+    };
+    for i in 0..cols {
+        let wp = pr[i];
+        let wq = qr[i];
+        pr[i] = c * wp - s * wq;
+        qr[i] = s * wp + c * wq;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::linalg::rng::Rng;
+
+    fn check_svd(a: &Mat<f64>, tol: f64) {
+        let f = svd(a);
+        let k = a.rows().min(a.cols());
+        assert_eq!(f.u.shape(), (a.rows(), k));
+        assert_eq!(f.s.len(), k);
+        assert_eq!(f.vt.shape(), (k, a.cols()));
+        // Reconstruction.
+        let rec = f.reconstruct(k);
+        assert!(rec.rel_fro_err(a) < tol, "reconstruction err {}", rec.rel_fro_err(a));
+        // Orthonormal factors.
+        let utu = matmul_tn(&f.u, &f.u);
+        assert!(utu.rel_fro_err(&Mat::eye(k)) < tol, "U not orthonormal");
+        let vvt = matmul(&f.vt, &f.vt.transpose());
+        assert!(vvt.rel_fro_err(&Mat::eye(k)) < tol, "V not orthonormal");
+        // Descending singular values.
+        for w in f.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn square_random() {
+        let mut rng = Rng::new(61);
+        let a: Mat<f64> = Mat::randn(12, 12, &mut rng);
+        check_svd(&a, 1e-9);
+    }
+
+    #[test]
+    fn tall_random() {
+        let mut rng = Rng::new(62);
+        let a: Mat<f64> = Mat::randn(20, 8, &mut rng);
+        check_svd(&a, 1e-9);
+    }
+
+    #[test]
+    fn wide_random() {
+        let mut rng = Rng::new(63);
+        let a: Mat<f64> = Mat::randn(8, 20, &mut rng);
+        check_svd(&a, 1e-9);
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2, 1) embedded in a rotation-free matrix.
+        let a: Mat<f64> = Mat::from_rows(&[
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ]);
+        let f = svd(&a);
+        assert!((f.s[0] - 3.0).abs() < 1e-10);
+        assert!((f.s[1] - 2.0).abs() < 1e-10);
+        assert!((f.s[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn low_rank_detected() {
+        let mut rng = Rng::new(64);
+        let a: Mat<f64> = Mat::rand_low_rank(25, 18, 7, &mut rng);
+        let f = svd(&a);
+        assert_eq!(f.rank(1e-9), 7);
+    }
+
+    #[test]
+    fn truncation_is_best_approx_ordering() {
+        // Truncation error must decrease with rank (Eckart–Young monotone).
+        let mut rng = Rng::new(65);
+        let a: Mat<f64> = Mat::randn(16, 16, &mut rng);
+        let f = svd(&a);
+        let mut last = f64::INFINITY;
+        for r in [2, 4, 8, 12, 16] {
+            let err = f.reconstruct(r).fro_dist(&a);
+            assert!(err <= last + 1e-9, "err not monotone at r={r}");
+            last = err;
+        }
+    }
+
+    #[test]
+    fn truncate_matches_manual() {
+        let mut rng = Rng::new(66);
+        let a: Mat<f64> = Mat::randn(10, 6, &mut rng);
+        let f = svd(&a);
+        let (u_r, vt_r) = f.truncate(3);
+        assert_eq!(u_r.shape(), (10, 3));
+        assert_eq!(vt_r.shape(), (3, 6));
+        // Frobenius error of rank-3 approx equals sqrt(sum of dropped s^2).
+        let err = matmul(&u_r, &vt_r).fro_dist(&a);
+        let expect = (f.s[3..].iter().map(|s| s * s).sum::<f64>()).sqrt();
+        assert!((err - expect).abs() < 1e-8, "err={err} expect={expect}");
+    }
+
+    #[test]
+    fn f32_input_works() {
+        let mut rng = Rng::new(67);
+        let a: Mat<f32> = Mat::randn(9, 7, &mut rng);
+        let f = svd(&a);
+        let rec = f.reconstruct(7);
+        assert!(rec.rel_fro_err(&a) < 1e-5);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a: Mat<f64> = Mat::zeros(4, 3);
+        let f = svd(&a);
+        assert!(f.s.iter().all(|&s| s == 0.0));
+        assert_eq!(f.rank(1e-10), 0);
+    }
+}

@@ -1,0 +1,244 @@
+//! `pifa` — CLI for the PIFA/MPIFA reproduction.
+//!
+//! Subcommands (hand-rolled parsing; no clap in the offline crate set):
+//!
+//! ```text
+//! pifa train    --model tiny-s [--out PATH]
+//! pifa compress --model tiny-s --method mpifa --density 0.55 [--out PATH]
+//! pifa eval     --ckpt PATH [--corpus wiki|c4]
+//! pifa generate --ckpt PATH --prompt "the banlanba ..." [--max-new N]
+//! pifa serve    --model tiny-s --flavour dense|pifa [--requests N] [--no-kv]
+//! pifa tables   <fig1|tab2|tab3|...|all>   (same generators as cargo bench)
+//! pifa info     — artifact + platform diagnostics
+//! ```
+
+use anyhow::{bail, Context, Result};
+use pifa::bench::experiments::{
+    self, compress_with_method, ensure_trained_model, test_ppl, Method,
+};
+use pifa::coordinator::{BatcherConfig, GenRequest, GenerationEngine, GenerationMode, Server};
+use pifa::data::vocab::Vocab;
+use pifa::model::serialize::{load_checkpoint, save_checkpoint};
+use pifa::runtime::{Engine, ModelRunner};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "1".to_string()
+            };
+            out.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    out
+}
+
+fn artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn method_by_name(name: &str) -> Result<Method> {
+    use pifa::baselines::prune::EspaceVariant as E;
+    Ok(match name {
+        "svd" => Method::Svd,
+        "asvd" => Method::Asvd,
+        "svdllm" | "svd-llm" => Method::SvdLlm,
+        "w" => Method::SvdLlmW,
+        "w+u" => Method::SvdLlmWU,
+        "w+m" => Method::WPlusM,
+        "mpifa" => Method::Mpifa,
+        "mpifa-ns" | "mpifans" => Method::MpifaNs,
+        "magnitude24" => Method::Magnitude24,
+        "wanda24" => Method::Wanda24,
+        "ria24" => Method::Ria24,
+        "llm-pruner" | "llmpruner" => Method::LlmPruner,
+        "espace-mse" => Method::Espace(E::Mse),
+        "espace-mse-norm" => Method::Espace(E::MseNorm),
+        "espace-go-mse" => Method::Espace(E::GoMse),
+        "espace-go-mse-norm" => Method::Espace(E::GoMseNorm),
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("model").map(String::as_str).unwrap_or("tiny-s");
+    let model = ensure_trained_model(name)?;
+    if let Some(out) = flags.get("out") {
+        save_checkpoint(&model, Path::new(out))?;
+        println!("saved {out}");
+    }
+    let data = experiments::wiki_dataset();
+    println!("{name}: test ppl {:.3}", test_ppl(&model, &data));
+    Ok(())
+}
+
+fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("model").map(String::as_str).unwrap_or("tiny-s");
+    let method = method_by_name(flags.get("method").map(String::as_str).unwrap_or("mpifa"))?;
+    let density: f64 = flags.get("density").map(String::as_str).unwrap_or("0.55").parse()?;
+    let model = ensure_trained_model(name)?;
+    let data = experiments::wiki_dataset();
+    let base = test_ppl(&model, &data);
+    let t0 = std::time::Instant::now();
+    let compressed = compress_with_method(&model, &data, method, density)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let ppl = test_ppl(&compressed, &data);
+    println!(
+        "{name} {} @ density {density}: ppl {base:.3} -> {ppl:.3} (achieved density {:.3}, {secs:.1}s)",
+        method.name(),
+        compressed.density()
+    );
+    if let Some(out) = flags.get("out") {
+        save_checkpoint(&compressed, Path::new(out))?;
+        println!("saved {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
+    let ckpt = flags.get("ckpt").context("--ckpt required")?;
+    let model = load_checkpoint(Path::new(ckpt))?;
+    let corpus = flags.get("corpus").map(String::as_str).unwrap_or("wiki");
+    let data = match corpus {
+        "wiki" => experiments::wiki_dataset(),
+        "c4" => experiments::c4_dataset(),
+        other => bail!("unknown corpus {other}"),
+    };
+    println!(
+        "{}: {corpus} test ppl {:.3} (density {:.3})",
+        model.cfg.name,
+        test_ppl(&model, &data),
+        model.density()
+    );
+    Ok(())
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
+    let ckpt = flags.get("ckpt").context("--ckpt required")?;
+    let model = load_checkpoint(Path::new(ckpt))?;
+    let v = Vocab::new();
+    let prompt_text = flags.get("prompt").context("--prompt required")?;
+    let prompt = v.encode(prompt_text);
+    let max_new: usize = flags.get("max-new").map(String::as_str).unwrap_or("16").parse()?;
+    let out = model.generate(&prompt, max_new);
+    println!("{} {}", prompt_text, v.decode(&out));
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("model").map(String::as_str).unwrap_or("tiny-s");
+    let flavour = flags.get("flavour").map(String::as_str).unwrap_or("dense");
+    let n_requests: usize = flags.get("requests").map(String::as_str).unwrap_or("8").parse()?;
+    let max_new: usize = flags.get("max-new").map(String::as_str).unwrap_or("16").parse()?;
+    let use_kv = !flags.contains_key("no-kv");
+
+    let model = ensure_trained_model(name)?;
+    let (prefill, decode, served) = match flavour {
+        "dense" => (
+            format!("{name}_dense_prefill_b1_t64"),
+            format!("{name}_dense_decode_b1"),
+            model.clone(),
+        ),
+        "pifa" => {
+            let data = experiments::wiki_dataset();
+            let compressed = compress_with_method(&model, &data, Method::Mpifa, 0.55)?;
+            (
+                format!("{name}_pifa55_prefill_b1_t64"),
+                format!("{name}_pifa55_decode_b1"),
+                compressed,
+            )
+        }
+        other => bail!("unknown flavour {other}"),
+    };
+    let mode = if use_kv { GenerationMode::KvCache } else { GenerationMode::NoKvCache };
+    let served_mem = served.memory_bytes_fp16();
+    let server = Server::spawn(
+        move || {
+            let mut pjrt = Engine::new(&artifact_dir())?;
+            println!("PJRT platform: {}", pjrt.platform());
+            let runner = ModelRunner::new(&mut pjrt, &served, &prefill, &decode)?;
+            Ok((pjrt, GenerationEngine::new(runner, mode)))
+        },
+        BatcherConfig::default(),
+    );
+
+    let v = Vocab::new();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests as u64 {
+        let prompt = vec![v.id("the"), v.noun((i as usize) % 8, 3, false), v.verb(2, false)];
+        rxs.push(server.submit(GenRequest::new(i, prompt, max_new))?);
+    }
+    for rx in rxs {
+        let resp = rx.recv()?;
+        println!(
+            "req {}: {} ({} tokens, {:.1} ms)",
+            resp.id,
+            v.decode(&resp.tokens),
+            resp.tokens.len(),
+            resp.latency.as_secs_f64() * 1e3
+        );
+    }
+    let metrics = server.shutdown()?;
+    println!(
+        "served {} requests | throughput {:.1} tok/s | p50 {:.1} ms | p95 {:.1} ms | weights {:.2} MB (fp16)",
+        metrics.requests,
+        metrics.throughput(),
+        metrics.latency_percentile_ms(0.5),
+        metrics.latency_percentile_ms(0.95),
+        served_mem as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = artifact_dir();
+    println!("artifact dir: {}", dir.display());
+    match Engine::new(&dir) {
+        Ok(eng) => {
+            println!("PJRT platform: {}", eng.platform());
+            let mut names: Vec<_> = eng.manifest.artifacts.keys().collect();
+            names.sort();
+            println!("{} artifacts:", names.len());
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("engine unavailable ({e:#}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: pifa <train|compress|eval|generate|serve|tables|info> [--flags]\n\
+         see rust/src/main.rs docs for details"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "compress" => cmd_compress(&flags),
+        "eval" => cmd_eval(&flags),
+        "generate" => cmd_generate(&flags),
+        "serve" => cmd_serve(&flags),
+        "tables" => {
+            let which = args.get(1).map(String::as_str).unwrap_or("all");
+            pifa::bench::tablegen::run(which)
+        }
+        "info" => cmd_info(),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,464 @@
+//! Manual backpropagation through the tiny-LLaMA model.
+//!
+//! Works for every [`LinearRepr`] — this is how Table 4's fine-tuning of
+//! compressed models runs: low-rank / PIFA factors receive gradients
+//! directly (both passes are plain GEMMs), while 2:4 receives a masked
+//! dense gradient (the paper's point that semi-structured sparsity cannot
+//! accelerate the backward pass).
+
+use crate::linalg::{self, Mat};
+use crate::model::linear::LinearGrad;
+use crate::model::ops::{self};
+use crate::model::transformer::{Block, BlockCache, Transformer};
+
+/// Gradients for one block.
+pub struct BlockGrads {
+    pub wq: LinearGrad,
+    pub wk: LinearGrad,
+    pub wv: LinearGrad,
+    pub wo: LinearGrad,
+    pub gate: LinearGrad,
+    pub up: LinearGrad,
+    pub down: LinearGrad,
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+}
+
+/// Gradients for the whole model (one sample; accumulate across a batch
+/// with [`ModelGrads::add_assign`]).
+pub struct ModelGrads {
+    pub blocks: Vec<BlockGrads>,
+    pub embed: Mat<f32>,
+    pub head: Mat<f32>,
+    pub final_norm: Vec<f32>,
+}
+
+fn grad_add(a: &mut LinearGrad, b: &LinearGrad) {
+    match (a, b) {
+        (LinearGrad::Dense(x), LinearGrad::Dense(y)) => *x = x.add_mat(y),
+        (LinearGrad::LowRank { du, dvt }, LinearGrad::LowRank { du: du2, dvt: dvt2 }) => {
+            *du = du.add_mat(du2);
+            *dvt = dvt.add_mat(dvt2);
+        }
+        (LinearGrad::Pifa { dw_p, dc }, LinearGrad::Pifa { dw_p: p2, dc: c2 }) => {
+            *dw_p = dw_p.add_mat(p2);
+            *dc = dc.add_mat(c2);
+        }
+        (LinearGrad::Sparse24(x), LinearGrad::Sparse24(y)) => *x = x.add_mat(y),
+        _ => panic!("grad_add: representation mismatch"),
+    }
+}
+
+fn grad_scale(g: &mut LinearGrad, s: f32) {
+    match g {
+        LinearGrad::Dense(x) | LinearGrad::Sparse24(x) => x.scale_inplace(s),
+        LinearGrad::LowRank { du, dvt } => {
+            du.scale_inplace(s);
+            dvt.scale_inplace(s);
+        }
+        LinearGrad::Pifa { dw_p, dc } => {
+            dw_p.scale_inplace(s);
+            dc.scale_inplace(s);
+        }
+    }
+}
+
+impl ModelGrads {
+    /// Accumulate another sample's gradients.
+    pub fn add_assign(&mut self, other: &ModelGrads) {
+        for (a, b) in self.blocks.iter_mut().zip(other.blocks.iter()) {
+            grad_add(&mut a.wq, &b.wq);
+            grad_add(&mut a.wk, &b.wk);
+            grad_add(&mut a.wv, &b.wv);
+            grad_add(&mut a.wo, &b.wo);
+            grad_add(&mut a.gate, &b.gate);
+            grad_add(&mut a.up, &b.up);
+            grad_add(&mut a.down, &b.down);
+            for (x, y) in a.attn_norm.iter_mut().zip(b.attn_norm.iter()) {
+                *x += y;
+            }
+            for (x, y) in a.mlp_norm.iter_mut().zip(b.mlp_norm.iter()) {
+                *x += y;
+            }
+        }
+        self.embed = self.embed.add_mat(&other.embed);
+        self.head = self.head.add_mat(&other.head);
+        for (x, y) in self.final_norm.iter_mut().zip(other.final_norm.iter()) {
+            *x += y;
+        }
+    }
+
+    /// Scale all gradients (e.g. 1/batch).
+    pub fn scale(&mut self, s: f32) {
+        for b in self.blocks.iter_mut() {
+            grad_scale(&mut b.wq, s);
+            grad_scale(&mut b.wk, s);
+            grad_scale(&mut b.wv, s);
+            grad_scale(&mut b.wo, s);
+            grad_scale(&mut b.gate, s);
+            grad_scale(&mut b.up, s);
+            grad_scale(&mut b.down, s);
+            for x in b.attn_norm.iter_mut() {
+                *x *= s;
+            }
+            for x in b.mlp_norm.iter_mut() {
+                *x *= s;
+            }
+        }
+        self.embed.scale_inplace(s);
+        self.head.scale_inplace(s);
+        for x in self.final_norm.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// Global L2 norm over all gradients (for clipping).
+    pub fn global_norm(&self) -> f32 {
+        let mut acc = 0f64;
+        let mat = |m: &Mat<f32>| m.as_slice().iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+        let lin = |g: &LinearGrad| match g {
+            LinearGrad::Dense(x) | LinearGrad::Sparse24(x) => mat(x),
+            LinearGrad::LowRank { du, dvt } => mat(du) + mat(dvt),
+            LinearGrad::Pifa { dw_p, dc } => mat(dw_p) + mat(dc),
+        };
+        for b in &self.blocks {
+            acc += lin(&b.wq) + lin(&b.wk) + lin(&b.wv) + lin(&b.wo);
+            acc += lin(&b.gate) + lin(&b.up) + lin(&b.down);
+            acc += b.attn_norm.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+            acc += b.mlp_norm.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+        }
+        acc += mat(&self.embed) + mat(&self.head);
+        acc += self.final_norm.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+        (acc.sqrt()) as f32
+    }
+}
+
+/// Forward + backward for one sample; returns `(loss, grads)`.
+pub fn loss_and_grads(model: &Transformer, tokens: &[usize], targets: &[usize]) -> (f32, ModelGrads) {
+    let cfg = &model.cfg;
+    let mut caches: Vec<BlockCache> = (0..cfg.n_layers).map(|_| BlockCache::default()).collect();
+    let (logits, h_final, inv_rms_f) = model.forward_train(tokens, &mut caches);
+    let (loss, dlogits) = ops::cross_entropy(&logits, targets);
+
+    // Head: logits = x_f W_head^T.
+    let (xf, _) = ops::rmsnorm(&h_final, &model.final_norm, cfg.norm_eps);
+    let d_head = linalg::matmul_tn(&dlogits, &xf); // vocab x d
+    let dxf = linalg::matmul(&dlogits, &model.head); // T x d
+    let (mut dh, d_final_norm) = ops::rmsnorm_backward(&dxf, &h_final, &model.final_norm, &inv_rms_f);
+
+    // Blocks in reverse.
+    let mut block_grads: Vec<Option<BlockGrads>> = (0..cfg.n_layers).map(|_| None).collect();
+    for li in (0..cfg.n_layers).rev() {
+        let (dh_in, grads) = block_backward(&model.blocks[li], &caches[li], &dh, cfg.n_heads, model);
+        dh = dh_in;
+        block_grads[li] = Some(grads);
+    }
+
+    // Embedding scatter-add.
+    let mut d_embed = Mat::zeros(cfg.vocab, cfg.dim);
+    for (i, &t) in tokens.iter().enumerate() {
+        let src = dh.row(i).to_vec();
+        let dst = d_embed.row_mut(t);
+        for (d, s) in dst.iter_mut().zip(src.iter()) {
+            *d += s;
+        }
+    }
+
+    (
+        loss,
+        ModelGrads {
+            blocks: block_grads.into_iter().map(|g| g.unwrap()).collect(),
+            embed: d_embed,
+            head: d_head,
+            final_norm: d_final_norm,
+        },
+    )
+}
+
+/// Backward through one block given its forward cache and upstream `dh_out`.
+fn block_backward(
+    block: &Block,
+    cache: &BlockCache,
+    dh_out: &Mat<f32>,
+    n_heads: usize,
+    model: &Transformer,
+) -> (Mat<f32>, BlockGrads) {
+    let (t, d) = cache.h_in.shape();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    // --- MLP path ---
+    // h_out = h_mid + down(a)
+    let (da, g_down) = block.mlp.down.backward(&cache.a, dh_out);
+    // a = silu(g_pre) * u_act
+    let mut dg_pre = Mat::zeros(t, cache.g_pre.cols());
+    let mut du_act = Mat::zeros(t, cache.u_act.cols());
+    for i in 0..t * cache.g_pre.cols() {
+        let g = cache.g_pre.as_slice()[i];
+        let u = cache.u_act.as_slice()[i];
+        let dav = da.as_slice()[i];
+        dg_pre.as_mut_slice()[i] = dav * u * ops::silu_grad(g);
+        du_act.as_mut_slice()[i] = dav * ops::silu(g);
+    }
+    let (dx_mlp_g, g_gate) = block.mlp.gate.backward(&cache.x_mlp, &dg_pre);
+    let (dx_mlp_u, g_up) = block.mlp.up.backward(&cache.x_mlp, &du_act);
+    let dx_mlp = dx_mlp_g.add_mat(&dx_mlp_u);
+    let (dh_mid_from_norm, dg_mlp_norm) =
+        ops::rmsnorm_backward(&dx_mlp, &cache.h_mid, &block.mlp_norm, &cache.inv_rms_mlp);
+    let dh_mid = dh_out.add_mat(&dh_mid_from_norm);
+
+    // --- Attention path ---
+    // h_mid = h_in + wo(mix)
+    let (dmix, g_o) = block.attn.wo.backward(&cache.mix, &dh_mid);
+    let mut dq = Mat::zeros(t, d); // post-RoPE q grad
+    let mut dk = Mat::zeros(t, d);
+    let mut dv = Mat::zeros(t, d);
+    for h in 0..n_heads {
+        let p = &cache.probs[h]; // t x t
+        let dmix_h = dmix.block(0, t, h * hd, (h + 1) * hd);
+        let vh = cache.v.block(0, t, h * hd, (h + 1) * hd);
+        let qh = cache.q.block(0, t, h * hd, (h + 1) * hd);
+        let kh = cache.k.block(0, t, h * hd, (h + 1) * hd);
+        // mix_h = P V_h
+        let dp = linalg::matmul_nt(&dmix_h, &vh); // t x t
+        let dvh = linalg::matmul_tn(p, &dmix_h); // t x hd
+        let mut ds = ops::softmax_rows_backward(&dp, p); // t x t
+        ds.scale_inplace(scale);
+        // Masked (future) entries have p = 0 -> ds = 0 automatically.
+        let dqh = linalg::matmul(&ds, &kh); // t x hd
+        let dkh = linalg::matmul_tn(&ds, &qh); // t x hd
+        dq.set_block(0, h * hd, &dqh);
+        dk.set_block(0, h * hd, &dkh);
+        dv.set_block(0, h * hd, &dvh);
+    }
+    // RoPE backward per head (q and k were cached post-RoPE).
+    for h in 0..n_heads {
+        let mut dqh = dq.block(0, t, h * hd, (h + 1) * hd);
+        let mut dkh = dk.block(0, t, h * hd, (h + 1) * hd);
+        model.rope.apply_backward(&mut dqh, 0);
+        model.rope.apply_backward(&mut dkh, 0);
+        dq.set_block(0, h * hd, &dqh);
+        dk.set_block(0, h * hd, &dkh);
+    }
+    let (dx_q, g_q) = block.attn.wq.backward(&cache.x_attn, &dq);
+    let (dx_k, g_k) = block.attn.wk.backward(&cache.x_attn, &dk);
+    let (dx_v, g_v) = block.attn.wv.backward(&cache.x_attn, &dv);
+    let dx_attn = dx_q.add_mat(&dx_k).add_mat(&dx_v);
+    let (dh_in_from_norm, dg_attn_norm) =
+        ops::rmsnorm_backward(&dx_attn, &cache.h_in, &block.attn_norm, &cache.inv_rms_attn);
+    let dh_in = dh_mid.add_mat(&dh_in_from_norm);
+
+    (
+        dh_in,
+        BlockGrads {
+            wq: g_q,
+            wk: g_k,
+            wv: g_v,
+            wo: g_o,
+            gate: g_gate,
+            up: g_up,
+            down: g_down,
+            attn_norm: dg_attn_norm,
+            mlp_norm: dg_mlp_norm,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::model::config::ModelConfig;
+    use crate::model::linear::LinearRepr;
+
+    fn tiny_model(seed: u64) -> Transformer {
+        let cfg = ModelConfig {
+            name: "test".into(),
+            vocab: 24,
+            dim: 16,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 20,
+            max_seq: 12,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(seed);
+        Transformer::new_random(&cfg, &mut rng)
+    }
+
+    fn sample_loss(model: &Transformer, tokens: &[usize], targets: &[usize]) -> f32 {
+        let logits = model.forward(tokens, None);
+        ops::cross_entropy(&logits, targets).0
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut model = tiny_model(171);
+        let tokens = [1usize, 5, 9, 2, 7];
+        let targets = [5usize, 9, 2, 7, 3];
+        let (_, grads) = loss_and_grads(&model, &tokens, &targets);
+        let h = 2e-2f32;
+
+        // Check a weight inside each parameter family.
+        // 1. wq of block 0 (dense).
+        let analytic = match &grads.blocks[0].wq {
+            LinearGrad::Dense(g) => g[(3, 4)],
+            _ => unreachable!(),
+        };
+        let orig = match &model.blocks[0].attn.wq {
+            LinearRepr::Dense(w) => w[(3, 4)],
+            _ => unreachable!(),
+        };
+        let set = |model: &mut Transformer, v: f32| {
+            if let LinearRepr::Dense(w) = &mut model.blocks[0].attn.wq {
+                w[(3, 4)] = v;
+            }
+        };
+        set(&mut model, orig + h);
+        let lp = sample_loss(&model, &tokens, &targets);
+        set(&mut model, orig - h);
+        let lm = sample_loss(&model, &tokens, &targets);
+        set(&mut model, orig);
+        let num = (lp - lm) / (2.0 * h);
+        assert!(
+            (num - analytic).abs() < 5e-3_f32.max(0.2 * num.abs()),
+            "wq fd {num} vs analytic {analytic}"
+        );
+
+        // 2. down-proj of block 1.
+        let analytic = match &grads.blocks[1].down {
+            LinearGrad::Dense(g) => g[(2, 6)],
+            _ => unreachable!(),
+        };
+        let orig = match &model.blocks[1].mlp.down {
+            LinearRepr::Dense(w) => w[(2, 6)],
+            _ => unreachable!(),
+        };
+        let set = |model: &mut Transformer, v: f32| {
+            if let LinearRepr::Dense(w) = &mut model.blocks[1].mlp.down {
+                w[(2, 6)] = v;
+            }
+        };
+        set(&mut model, orig + h);
+        let lp = sample_loss(&model, &tokens, &targets);
+        set(&mut model, orig - h);
+        let lm = sample_loss(&model, &tokens, &targets);
+        set(&mut model, orig);
+        let num = (lp - lm) / (2.0 * h);
+        assert!(
+            (num - analytic).abs() < 5e-3_f32.max(0.2 * num.abs()),
+            "down fd {num} vs analytic {analytic}"
+        );
+
+        // 3. embedding row of a used token.
+        let analytic = grads.embed[(1, 3)];
+        let orig = model.embed[(1, 3)];
+        model.embed[(1, 3)] = orig + h;
+        let lp = sample_loss(&model, &tokens, &targets);
+        model.embed[(1, 3)] = orig - h;
+        let lm = sample_loss(&model, &tokens, &targets);
+        model.embed[(1, 3)] = orig;
+        let num = (lp - lm) / (2.0 * h);
+        assert!(
+            (num - analytic).abs() < 5e-3_f32.max(0.2 * num.abs()),
+            "embed fd {num} vs analytic {analytic}"
+        );
+
+        // 4. attn_norm gain.
+        let analytic = grads.blocks[0].attn_norm[2];
+        let orig = model.blocks[0].attn_norm[2];
+        model.blocks[0].attn_norm[2] = orig + h;
+        let lp = sample_loss(&model, &tokens, &targets);
+        model.blocks[0].attn_norm[2] = orig - h;
+        let lm = sample_loss(&model, &tokens, &targets);
+        model.blocks[0].attn_norm[2] = orig;
+        let num = (lp - lm) / (2.0 * h);
+        assert!(
+            (num - analytic).abs() < 5e-3_f32.max(0.2 * num.abs()),
+            "attn_norm fd {num} vs analytic {analytic}"
+        );
+
+        // 5. head weight.
+        let analytic = grads.head[(4, 5)];
+        let orig = model.head[(4, 5)];
+        model.head[(4, 5)] = orig + h;
+        let lp = sample_loss(&model, &tokens, &targets);
+        model.head[(4, 5)] = orig - h;
+        let lm = sample_loss(&model, &tokens, &targets);
+        model.head[(4, 5)] = orig;
+        let num = (lp - lm) / (2.0 * h);
+        assert!(
+            (num - analytic).abs() < 5e-3_f32.max(0.2 * num.abs()),
+            "head fd {num} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn grads_accumulate_and_scale() {
+        let model = tiny_model(172);
+        let (l1, mut g1) = loss_and_grads(&model, &[1, 2, 3], &[2, 3, 4]);
+        let (l2, g2) = loss_and_grads(&model, &[4, 5, 6], &[5, 6, 7]);
+        assert!(l1.is_finite() && l2.is_finite());
+        let n_before = g1.global_norm();
+        g1.add_assign(&g2);
+        g1.scale(0.5);
+        let n_after = g1.global_norm();
+        assert!(n_after > 0.0 && n_after.is_finite());
+        assert!(n_before > 0.0);
+    }
+
+    #[test]
+    fn sgd_step_reduces_loss() {
+        let mut model = tiny_model(173);
+        let tokens = [1usize, 5, 9, 2, 7, 11];
+        let targets = [5usize, 9, 2, 7, 11, 3];
+        let (l0, grads) = loss_and_grads(&model, &tokens, &targets);
+        // Tiny SGD step on every dense linear.
+        let lr = 0.05f32;
+        for (b, g) in model.blocks.iter_mut().zip(grads.blocks.iter()) {
+            b.attn.wq.apply_grad(&g.wq, lr);
+            b.attn.wk.apply_grad(&g.wk, lr);
+            b.attn.wv.apply_grad(&g.wv, lr);
+            b.attn.wo.apply_grad(&g.wo, lr);
+            b.mlp.gate.apply_grad(&g.gate, lr);
+            b.mlp.up.apply_grad(&g.up, lr);
+            b.mlp.down.apply_grad(&g.down, lr);
+        }
+        let l1 = sample_loss(&model, &tokens, &targets);
+        assert!(l1 < l0, "SGD step failed to reduce loss: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn finetune_grads_flow_through_compressed_reprs() {
+        // Replace a module with low-rank + PIFA and verify a step reduces
+        // loss through the mixed model (Table 4's mechanism).
+        let mut model = tiny_model(174);
+        let mut rng = Rng::new(175);
+        let d = model.cfg.dim;
+        // Low-rank-ify block 0 wq.
+        let w0 = model.blocks[0].attn.wq.to_dense();
+        let f = crate::linalg::svd(&w0);
+        let (u, vt) = f.truncate(d / 2);
+        model.blocks[0].attn.wq = LinearRepr::LowRank { u, vt };
+        // PIFA-ify block 1 gate.
+        let wg = model.blocks[1].mlp.gate.to_dense();
+        let fg = crate::linalg::svd(&wg);
+        let r = d / 2;
+        let wg_lr = fg.reconstruct(r);
+        let layer =
+            crate::pifa::pivoting_factorization(&wg_lr, r, crate::pifa::PivotStrategy::QrColumnPivot)
+                .unwrap();
+        model.blocks[1].mlp.gate = LinearRepr::Pifa(layer);
+        let _ = &mut rng;
+
+        let tokens = [2usize, 4, 8, 3, 9];
+        let targets = [4usize, 8, 3, 9, 1];
+        let (l0, grads) = loss_and_grads(&model, &tokens, &targets);
+        let lr = 0.05f32;
+        model.blocks[0].attn.wq.apply_grad(&grads.blocks[0].wq, lr);
+        model.blocks[1].mlp.gate.apply_grad(&grads.blocks[1].gate, lr);
+        let l1 = sample_loss(&model, &tokens, &targets);
+        assert!(l1 < l0, "fine-tune step failed: {l0} -> {l1}");
+    }
+}

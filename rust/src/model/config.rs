@@ -1,0 +1,175 @@
+//! Model hyperparameters and the four stand-in presets.
+//!
+//! The presets mirror the paper's model lineup in *relative* terms
+//! (DESIGN.md §1): `tiny-s/m/l` stand in for LLaMA2-7B/13B/70B (same
+//! architecture, growing depth/width) and `tiny-xl` for LLaMA3-8B (the
+//! same trick LLaMA3 pulls: a much larger vocabulary for its size, which
+//! is exactly why low-rank pruning hurts it more — Table 2's LLaMA3 rows).
+
+/// Hyperparameters of one tiny-LLaMA model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// SwiGLU hidden width.
+    pub ffn_hidden: usize,
+    /// Maximum sequence length (RoPE table size, KV-cache capacity).
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f32,
+}
+
+impl ModelConfig {
+    /// Head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// Total parameter count of the dense model.
+    pub fn param_count(&self) -> usize {
+        let d = self.dim;
+        let h = self.ffn_hidden;
+        let per_block = 4 * d * d + 3 * d * h + 2 * d; // attn + mlp + 2 norms
+        self.vocab * d        // embedding
+            + self.n_layers * per_block
+            + d                // final norm
+            + self.vocab * d   // lm head
+    }
+
+    /// Parameters inside prunable linear modules only (q,k,v,o,gate,up,down)
+    /// — the denominator of the paper's "density".
+    pub fn prunable_param_count(&self) -> usize {
+        let d = self.dim;
+        let h = self.ffn_hidden;
+        self.n_layers * (4 * d * d + 3 * d * h)
+    }
+
+    /// Stand-in for LLaMA2-7B.
+    pub fn tiny_s() -> Self {
+        Self {
+            name: "tiny-s".into(),
+            vocab: 512,
+            dim: 64,
+            n_layers: 2,
+            n_heads: 4,
+            ffn_hidden: 128,
+            max_seq: 128,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// Stand-in for LLaMA2-13B.
+    pub fn tiny_m() -> Self {
+        Self {
+            name: "tiny-m".into(),
+            vocab: 512,
+            dim: 96,
+            n_layers: 3,
+            n_heads: 6,
+            ffn_hidden: 192,
+            max_seq: 128,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// Stand-in for LLaMA2-70B.
+    pub fn tiny_l() -> Self {
+        Self {
+            name: "tiny-l".into(),
+            vocab: 512,
+            dim: 128,
+            n_layers: 4,
+            n_heads: 8,
+            ffn_hidden: 256,
+            max_seq: 128,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// Stand-in for LLaMA3-8B: the same architecture as tiny-m but
+    /// pre-trained ~3x longer (the training recipe lives in the `train`
+    /// CLI). Better-trained weights carry less redundancy, reproducing
+    /// LLaMA3's higher sensitivity to low-rank pruning (Table 2).
+    pub fn tiny_xl() -> Self {
+        Self {
+            name: "tiny-xl".into(),
+            vocab: 512,
+            dim: 96,
+            n_layers: 3,
+            n_heads: 6,
+            ffn_hidden: 192,
+            max_seq: 128,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// Look a preset up by name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "tiny-s" => Some(Self::tiny_s()),
+            "tiny-m" => Some(Self::tiny_m()),
+            "tiny-l" => Some(Self::tiny_l()),
+            "tiny-xl" => Some(Self::tiny_xl()),
+            _ => None,
+        }
+    }
+
+    /// All four presets in paper-table order (7B, 13B, 70B, LLaMA3-8B).
+    pub fn lineup() -> Vec<Self> {
+        vec![Self::tiny_s(), Self::tiny_m(), Self::tiny_l(), Self::tiny_xl()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dim_divides() {
+        for cfg in ModelConfig::lineup() {
+            assert_eq!(cfg.dim % cfg.n_heads, 0, "{}", cfg.name);
+            assert!(cfg.head_dim() % 2 == 0, "RoPE needs even head_dim in {}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn sizes_grow_along_lineup() {
+        let s = ModelConfig::tiny_s().param_count();
+        let m = ModelConfig::tiny_m().param_count();
+        let l = ModelConfig::tiny_l().param_count();
+        assert!(s < m && m < l);
+    }
+
+    #[test]
+    fn xl_mirrors_m_architecture() {
+        // tiny-xl differs from tiny-m only by name (and training budget,
+        // which lives in the trainer) — the LLaMA3 stand-in mechanism.
+        let m = ModelConfig::tiny_m();
+        let xl = ModelConfig::tiny_xl();
+        assert_eq!(m.dim, xl.dim);
+        assert_eq!(m.n_layers, xl.n_layers);
+        assert_ne!(m.name, xl.name);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for cfg in ModelConfig::lineup() {
+            assert_eq!(ModelConfig::by_name(&cfg.name), Some(cfg.clone()));
+        }
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn prunable_smaller_than_total() {
+        for cfg in ModelConfig::lineup() {
+            assert!(cfg.prunable_param_count() < cfg.param_count());
+        }
+    }
+}

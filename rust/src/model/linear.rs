@@ -1,0 +1,388 @@
+//! The pluggable linear layer: one weight matrix in any of the paper's
+//! representations, with forward and backward in the transformer layout
+//! (`Y = X W^T`, tokens in rows).
+//!
+//! The backward pass works for every representation — the paper's Table 4
+//! point that low-rank/PIFA layers accelerate *both* passes (their factors
+//! are plain dense GEMM operands), while 2:4 cannot accelerate backward
+//! (the transposed weight violates the 2:4 pattern; we fine-tune it as a
+//! masked dense matrix).
+
+use crate::linalg::{self, Mat};
+use crate::pifa::PifaLayer;
+use crate::sparse24::Sparse24Mat;
+
+/// One linear module's weights in some representation. Logical shape is
+/// always `W (m x n)` acting as `Y = X W^T`.
+#[derive(Clone)]
+pub enum LinearRepr {
+    /// Plain dense weight.
+    Dense(Mat<f32>),
+    /// Low-rank `W ≈ U V^T` (`U: m x r`, `V^T: r x n`).
+    LowRank { u: Mat<f32>, vt: Mat<f32> },
+    /// Pivoting Factorization (lossless re-representation of a low-rank W).
+    Pifa(PifaLayer<f32>),
+    /// 2:4 semi-structured sparse.
+    Sparse24(Sparse24Mat),
+}
+
+/// Gradients matching a [`LinearRepr`].
+pub enum LinearGrad {
+    Dense(Mat<f32>),
+    LowRank { du: Mat<f32>, dvt: Mat<f32> },
+    Pifa { dw_p: Mat<f32>, dc: Mat<f32> },
+    /// Dense-shaped gradient already masked to the 2:4 pattern.
+    Sparse24(Mat<f32>),
+}
+
+impl LinearRepr {
+    /// Output dim `m`.
+    pub fn out_dim(&self) -> usize {
+        match self {
+            LinearRepr::Dense(w) => w.rows(),
+            LinearRepr::LowRank { u, .. } => u.rows(),
+            LinearRepr::Pifa(p) => p.m,
+            LinearRepr::Sparse24(s) => s.m,
+        }
+    }
+
+    /// Input dim `n`.
+    pub fn in_dim(&self) -> usize {
+        match self {
+            LinearRepr::Dense(w) => w.cols(),
+            LinearRepr::LowRank { vt, .. } => vt.cols(),
+            LinearRepr::Pifa(p) => p.n,
+            LinearRepr::Sparse24(s) => s.n,
+        }
+    }
+
+    /// Stored float parameters.
+    pub fn param_count(&self) -> usize {
+        match self {
+            LinearRepr::Dense(w) => w.rows() * w.cols(),
+            LinearRepr::LowRank { u, vt } => u.rows() * u.cols() + vt.rows() * vt.cols(),
+            LinearRepr::Pifa(p) => p.param_count(),
+            LinearRepr::Sparse24(s) => s.value_count(),
+        }
+    }
+
+    /// fp16-accounted storage bytes (Table 7's memory column).
+    pub fn memory_bytes_fp16(&self) -> usize {
+        match self {
+            LinearRepr::Sparse24(s) => s.memory_bytes_fp16(),
+            LinearRepr::Pifa(p) => p.param_count() * 2 + p.rank() * 4, // + i32 indices
+            other => other.param_count() * 2,
+        }
+    }
+
+    /// Forward: `Y = X W^T` with `X (b x n)`.
+    pub fn forward(&self, x: &Mat<f32>) -> Mat<f32> {
+        match self {
+            LinearRepr::Dense(w) => linalg::matmul_nt(x, w),
+            LinearRepr::LowRank { u, vt } => {
+                let z = linalg::matmul_nt(x, vt); // b x r  (X V)
+                linalg::matmul_nt(&z, u) // b x m  (X V U^T)
+            }
+            LinearRepr::Pifa(p) => p.apply_rows(x),
+            LinearRepr::Sparse24(s) => s.apply_rows(x),
+        }
+    }
+
+    /// Backward: given cached input `x` and upstream `dy`, return
+    /// `(dx, grads)`.
+    pub fn backward(&self, x: &Mat<f32>, dy: &Mat<f32>) -> (Mat<f32>, LinearGrad) {
+        match self {
+            LinearRepr::Dense(w) => {
+                let dw = linalg::matmul_tn(dy, x); // m x n
+                let dx = linalg::matmul(dy, w); // b x n
+                (dx, LinearGrad::Dense(dw))
+            }
+            LinearRepr::LowRank { u, vt } => {
+                // Y = X V U^T; Z = X V.
+                let z = linalg::matmul_nt(x, vt); // b x r
+                let dz = linalg::matmul(dy, u); // b x r
+                let du = linalg::matmul_tn(dy, &z); // m x r
+                let dvt = linalg::matmul_tn(&dz, x); // r x n
+                let dx = linalg::matmul(&dz, vt); // b x n
+                (dx, LinearGrad::LowRank { du, dvt })
+            }
+            LinearRepr::Pifa(p) => {
+                // Y_p = X W_p^T (b x r); Y_np = Y_p C^T; scatter by pivots.
+                let y_p = linalg::matmul_nt(x, &p.w_p);
+                let b = x.rows();
+                let r = p.rank();
+                // Gather upstream grads back out of the scattered output.
+                let mut dy_p = Mat::zeros(b, r);
+                let mut dy_np = Mat::zeros(b, p.m - r);
+                for bi in 0..b {
+                    let dyr = dy.row(bi);
+                    for (k, &i) in p.pivots.iter().enumerate() {
+                        dy_p[(bi, k)] = dyr[i];
+                    }
+                    for (k, &i) in p.non_pivots.iter().enumerate() {
+                        dy_np[(bi, k)] = dyr[i];
+                    }
+                }
+                let dc = linalg::matmul_tn(&dy_np, &y_p); // (m-r) x r
+                // Total gradient reaching Y_p: direct + through C.
+                let dy_p_total = dy_p.add_mat(&linalg::matmul(&dy_np, &p.c));
+                let dw_p = linalg::matmul_tn(&dy_p_total, x); // r x n
+                let dx = linalg::matmul(&dy_p_total, &p.w_p); // b x n
+                (dx, LinearGrad::Pifa { dw_p, dc })
+            }
+            LinearRepr::Sparse24(s) => {
+                let w = s.to_dense();
+                let mut dw = linalg::matmul_tn(dy, x);
+                // Mask the gradient to the 2:4 pattern (dropped weights stay 0).
+                for i in 0..w.rows() {
+                    for j in 0..w.cols() {
+                        if w[(i, j)] == 0.0 {
+                            dw[(i, j)] = 0.0;
+                        }
+                    }
+                }
+                let dx = linalg::matmul(dy, &w);
+                (dx, LinearGrad::Sparse24(dw))
+            }
+        }
+    }
+
+    /// SGD-style in-place update used by the fine-tuner (`Table 4`); the
+    /// Adam path lives in `crate::train` and goes through `params_mut`.
+    pub fn apply_grad(&mut self, grad: &LinearGrad, lr: f32) {
+        match (self, grad) {
+            (LinearRepr::Dense(w), LinearGrad::Dense(dw)) => {
+                for (p, g) in w.as_mut_slice().iter_mut().zip(dw.as_slice()) {
+                    *p -= lr * g;
+                }
+            }
+            (LinearRepr::LowRank { u, vt }, LinearGrad::LowRank { du, dvt }) => {
+                for (p, g) in u.as_mut_slice().iter_mut().zip(du.as_slice()) {
+                    *p -= lr * g;
+                }
+                for (p, g) in vt.as_mut_slice().iter_mut().zip(dvt.as_slice()) {
+                    *p -= lr * g;
+                }
+            }
+            (LinearRepr::Pifa(p), LinearGrad::Pifa { dw_p, dc }) => {
+                for (pp, g) in p.w_p.as_mut_slice().iter_mut().zip(dw_p.as_slice()) {
+                    *pp -= lr * g;
+                }
+                for (pp, g) in p.c.as_mut_slice().iter_mut().zip(dc.as_slice()) {
+                    *pp -= lr * g;
+                }
+            }
+            (LinearRepr::Sparse24(s), LinearGrad::Sparse24(dw)) => {
+                // Update kept values through dense round-trip (fine-tuning
+                // path only; never on the inference hot path).
+                let mut w = s.to_dense();
+                let mask: Vec<bool> = w.as_slice().iter().map(|&v| v != 0.0).collect();
+                for ((p, g), &keep) in
+                    w.as_mut_slice().iter_mut().zip(dw.as_slice()).zip(mask.iter())
+                {
+                    if keep {
+                        *p -= lr * g;
+                    }
+                }
+                *s = Sparse24Mat::pack(&w, &mask);
+            }
+            _ => panic!("LinearRepr::apply_grad: representation/gradient mismatch"),
+        }
+    }
+
+    /// Materialize the (effective) dense weight — diagnostics only.
+    pub fn to_dense(&self) -> Mat<f32> {
+        match self {
+            LinearRepr::Dense(w) => w.clone(),
+            LinearRepr::LowRank { u, vt } => linalg::matmul(u, vt),
+            LinearRepr::Pifa(p) => p.reconstruct(),
+            LinearRepr::Sparse24(s) => s.to_dense(),
+        }
+    }
+
+    /// Short tag for logs/tables.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            LinearRepr::Dense(_) => "dense",
+            LinearRepr::LowRank { .. } => "lowrank",
+            LinearRepr::Pifa(_) => "pifa",
+            LinearRepr::Sparse24(_) => "sparse24",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::pifa::{pivoting_factorization, PivotStrategy};
+
+    fn reprs_for_test(seed: u64) -> Vec<(LinearRepr, Mat<f32>)> {
+        let mut rng = Rng::new(seed);
+        let w_dense: Mat<f32> = Mat::randn(12, 16, &mut rng);
+        let u: Mat<f32> = Mat::randn(12, 4, &mut rng);
+        let vt: Mat<f32> = Mat::randn(4, 16, &mut rng);
+        let w_lr = linalg::matmul(&u, &vt);
+        let pifa = pivoting_factorization(&w_lr, 4, PivotStrategy::QrColumnPivot).unwrap();
+        let sp = Sparse24Mat::pack_magnitude(&w_dense);
+        vec![
+            (LinearRepr::Dense(w_dense.clone()), w_dense.clone()),
+            (LinearRepr::LowRank { u: u.clone(), vt: vt.clone() }, w_lr.clone()),
+            (LinearRepr::Pifa(pifa), w_lr),
+            (LinearRepr::Sparse24(sp.clone()), sp.to_dense()),
+        ]
+    }
+
+    #[test]
+    fn forward_matches_effective_dense() {
+        let mut rng = Rng::new(151);
+        let x: Mat<f32> = Mat::randn(5, 16, &mut rng);
+        for (repr, w_eff) in reprs_for_test(150) {
+            let y = repr.forward(&x);
+            let y_ref = linalg::matmul_nt(&x, &w_eff);
+            assert!(
+                y.rel_fro_err(&y_ref) < 1e-4,
+                "{} forward mismatch {}",
+                repr.kind_name(),
+                y.rel_fro_err(&y_ref)
+            );
+        }
+    }
+
+    #[test]
+    fn backward_dx_matches_dense_math() {
+        let mut rng = Rng::new(152);
+        let x: Mat<f32> = Mat::randn(6, 16, &mut rng);
+        let dy: Mat<f32> = Mat::randn(6, 12, &mut rng);
+        for (repr, w_eff) in reprs_for_test(153) {
+            let (dx, _) = repr.backward(&x, &dy);
+            let dx_ref = linalg::matmul(&dy, &w_eff);
+            assert!(
+                dx.rel_fro_err(&dx_ref) < 1e-4,
+                "{} dx mismatch {}",
+                repr.kind_name(),
+                dx.rel_fro_err(&dx_ref)
+            );
+        }
+    }
+
+    #[test]
+    fn param_grads_fd_check() {
+        // Scalar objective L = sum(Y .* R) with random fixed R; finite
+        // difference a single parameter per representation.
+        let mut rng = Rng::new(154);
+        let x: Mat<f32> = Mat::randn(4, 16, &mut rng);
+        let r_w: Mat<f32> = Mat::randn(4, 12, &mut rng);
+        let objective = |repr: &LinearRepr| -> f32 {
+            repr.forward(&x)
+                .as_slice()
+                .iter()
+                .zip(r_w.as_slice())
+                .map(|(a, b)| a * b)
+                .sum()
+        };
+        let h = 1e-2f32;
+        for (repr, _) in reprs_for_test(155) {
+            let (_, grad) = repr.backward(&x, &r_w);
+            match (&repr, &grad) {
+                (LinearRepr::Dense(w), LinearGrad::Dense(dw)) => {
+                    let mut wp = w.clone();
+                    wp[(2, 3)] += h;
+                    let mut wm = w.clone();
+                    wm[(2, 3)] -= h;
+                    let num = (objective(&LinearRepr::Dense(wp))
+                        - objective(&LinearRepr::Dense(wm)))
+                        / (2.0 * h);
+                    assert!((num - dw[(2, 3)]).abs() < 2e-2, "dense fd {num} vs {}", dw[(2, 3)]);
+                }
+                (LinearRepr::LowRank { u, vt }, LinearGrad::LowRank { du, dvt }) => {
+                    let mut up = u.clone();
+                    up[(1, 2)] += h;
+                    let mut um = u.clone();
+                    um[(1, 2)] -= h;
+                    let num = (objective(&LinearRepr::LowRank { u: up, vt: vt.clone() })
+                        - objective(&LinearRepr::LowRank { u: um, vt: vt.clone() }))
+                        / (2.0 * h);
+                    assert!((num - du[(1, 2)]).abs() < 5e-2, "du fd {num} vs {}", du[(1, 2)]);
+                    let mut vp = vt.clone();
+                    vp[(2, 5)] += h;
+                    let mut vm = vt.clone();
+                    vm[(2, 5)] -= h;
+                    let num = (objective(&LinearRepr::LowRank { u: u.clone(), vt: vp })
+                        - objective(&LinearRepr::LowRank { u: u.clone(), vt: vm }))
+                        / (2.0 * h);
+                    assert!((num - dvt[(2, 5)]).abs() < 5e-2, "dvt fd {num} vs {}", dvt[(2, 5)]);
+                }
+                (LinearRepr::Pifa(p), LinearGrad::Pifa { dw_p, dc }) => {
+                    let mut pp = p.clone();
+                    pp.w_p[(1, 3)] += h;
+                    let mut pm = p.clone();
+                    pm.w_p[(1, 3)] -= h;
+                    let num = (objective(&LinearRepr::Pifa(pp))
+                        - objective(&LinearRepr::Pifa(pm)))
+                        / (2.0 * h);
+                    assert!((num - dw_p[(1, 3)]).abs() < 5e-2, "dw_p fd {num} vs {}", dw_p[(1, 3)]);
+                    let mut pc = p.clone();
+                    pc.c[(2, 1)] += h;
+                    let mut mc = p.clone();
+                    mc.c[(2, 1)] -= h;
+                    let num = (objective(&LinearRepr::Pifa(pc))
+                        - objective(&LinearRepr::Pifa(mc)))
+                        / (2.0 * h);
+                    assert!((num - dc[(2, 1)]).abs() < 5e-2, "dc fd {num} vs {}", dc[(2, 1)]);
+                }
+                (LinearRepr::Sparse24(_), LinearGrad::Sparse24(dw)) => {
+                    // Gradient respects the mask.
+                    let w = repr.to_dense();
+                    for i in 0..w.rows() {
+                        for j in 0..w.cols() {
+                            if w[(i, j)] == 0.0 {
+                                assert_eq!(dw[(i, j)], 0.0);
+                            }
+                        }
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn apply_grad_reduces_objective() {
+        // One SGD step against the gradient must reduce L = 0.5||Y||^2.
+        let mut rng = Rng::new(156);
+        let x: Mat<f32> = Mat::randn(4, 16, &mut rng);
+        for (mut repr, _) in reprs_for_test(157) {
+            let y = repr.forward(&x);
+            let l0: f32 = 0.5 * y.as_slice().iter().map(|v| v * v).sum::<f32>();
+            let (_, grad) = repr.backward(&x, &y);
+            repr.apply_grad(&grad, 1e-3);
+            let y1 = repr.forward(&x);
+            let l1: f32 = 0.5 * y1.as_slice().iter().map(|v| v * v).sum::<f32>();
+            assert!(l1 < l0, "{}: {l0} -> {l1}", repr.kind_name());
+        }
+    }
+
+    #[test]
+    fn memory_accounting_ordering() {
+        // At ~0.5 density, pifa memory < lowrank memory < dense memory.
+        let mut rng = Rng::new(158);
+        let d = 64;
+        let r = crate::pifa::rank_for_density_lowrank(d, d, 0.5);
+        let u: Mat<f32> = Mat::randn(d, r, &mut rng);
+        let vt: Mat<f32> = Mat::randn(r, d, &mut rng);
+        let w_lr = linalg::matmul(&u, &vt);
+        let r_pifa = crate::pifa::rank_for_density_pifa(d, d, 0.5);
+        // PIFA at the same density affords a higher rank; build from a
+        // rank-r_pifa matrix.
+        let w2: Mat<f32> = Mat::rand_low_rank(d, d, r_pifa, &mut rng);
+        let pifa = pivoting_factorization(&w2, r_pifa, PivotStrategy::QrColumnPivot).unwrap();
+        let dense = LinearRepr::Dense(w_lr.clone());
+        let lowrank = LinearRepr::LowRank { u, vt };
+        let pf = LinearRepr::Pifa(pifa);
+        assert!(lowrank.memory_bytes_fp16() < dense.memory_bytes_fp16());
+        // Equal-density check: both ~0.5 of dense.
+        let ratio_pf = pf.memory_bytes_fp16() as f64 / dense.memory_bytes_fp16() as f64;
+        assert!((ratio_pf - 0.5).abs() < 0.1, "pifa ratio {ratio_pf}");
+    }
+}

@@ -1,0 +1,30 @@
+//! Tiny-LLaMA transformer in pure Rust — the stand-in for the LLaMA2/3
+//! checkpoints the paper compresses (DESIGN.md §1 substitution table).
+//!
+//! Architecture: token embedding → N x (RMSNorm → multi-head causal
+//! attention with RoPE → residual → RMSNorm → SwiGLU MLP → residual) →
+//! final RMSNorm → LM head. Exactly the module set the paper prunes
+//! (`q,k,v,o,gate,up,down` linears per block).
+//!
+//! Every linear is a [`LinearRepr`] so a model can mix dense, low-rank
+//! (`U V^T`), PIFA, and 2:4 representations module-by-module — which is
+//! what MPIFA_NS's non-uniform density needs.
+//!
+//! * [`config`] — model hyperparameters + the four stand-in presets.
+//! * [`linear`] — the pluggable linear-layer representation (fwd + bwd).
+//! * [`ops`] — RMSNorm / RoPE / softmax / SiLU forward & backward.
+//! * [`transformer`] — forward pass (training, calibration-capture, and
+//!   KV-cache decode variants).
+//! * [`backward`] — manual backprop for training and fine-tuning.
+//! * [`serialize`] — checkpoint format (own binary container).
+
+pub mod backward;
+pub mod config;
+pub mod linear;
+pub mod ops;
+pub mod serialize;
+pub mod transformer;
+
+pub use config::ModelConfig;
+pub use linear::{LinearGrad, LinearRepr};
+pub use transformer::{Block, KvCache, ModuleKind, Transformer};

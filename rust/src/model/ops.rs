@@ -1,0 +1,385 @@
+//! Elementwise / normalization / positional ops with manual backward
+//! passes. All activations are `Mat<f32>` with tokens in rows.
+
+use crate::linalg::Mat;
+
+/// RMSNorm forward: `y_t = x_t / rms(x_t) * g`, returns `(y, inv_rms)`
+/// where `inv_rms[t] = 1 / sqrt(mean(x_t^2) + eps)` is cached for backward.
+pub fn rmsnorm(x: &Mat<f32>, g: &[f32], eps: f32) -> (Mat<f32>, Vec<f32>) {
+    let (t, d) = x.shape();
+    assert_eq!(g.len(), d);
+    let mut y = Mat::zeros(t, d);
+    let mut inv_rms = vec![0f32; t];
+    for i in 0..t {
+        let row = x.row(i);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let ir = 1.0 / (ms + eps).sqrt();
+        inv_rms[i] = ir;
+        let yrow = y.row_mut(i);
+        for j in 0..d {
+            yrow[j] = row[j] * ir * g[j];
+        }
+    }
+    (y, inv_rms)
+}
+
+/// RMSNorm backward. Given upstream `dy`, cached input `x`, gain `g`, and
+/// `inv_rms`, returns `(dx, dg)`.
+pub fn rmsnorm_backward(
+    dy: &Mat<f32>,
+    x: &Mat<f32>,
+    g: &[f32],
+    inv_rms: &[f32],
+) -> (Mat<f32>, Vec<f32>) {
+    let (t, d) = x.shape();
+    let mut dx = Mat::zeros(t, d);
+    let mut dg = vec![0f32; d];
+    for i in 0..t {
+        let ir = inv_rms[i];
+        let xr = x.row(i);
+        let dyr = dy.row(i);
+        // dg_j += dy_j * x_j * ir
+        for j in 0..d {
+            dg[j] += dyr[j] * xr[j] * ir;
+        }
+        // dx = ir * (g .* dy) - ir^3/d * (sum_k g_k dy_k x_k) * x
+        let dot: f32 = (0..d).map(|j| g[j] * dyr[j] * xr[j]).sum();
+        let coef = ir * ir * ir / d as f32 * dot;
+        let dxr = dx.row_mut(i);
+        for j in 0..d {
+            dxr[j] = ir * g[j] * dyr[j] - coef * xr[j];
+        }
+    }
+    (dx, dg)
+}
+
+/// SiLU forward: `silu(x) = x * sigmoid(x)`.
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// d silu / dx.
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Row-wise softmax in place, with optional causal masking already applied
+/// by the caller (set masked logits to `f32::NEG_INFINITY`).
+pub fn softmax_rows(x: &mut Mat<f32>) {
+    let (t, n) = x.shape();
+    for i in 0..t {
+        let row = x.row_mut(i);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+        let _ = n;
+    }
+}
+
+/// Softmax backward for row-wise softmax: `dx = p .* (dy - sum(dy .* p))`.
+pub fn softmax_rows_backward(dy: &Mat<f32>, p: &Mat<f32>) -> Mat<f32> {
+    let (t, n) = p.shape();
+    let mut dx = Mat::zeros(t, n);
+    for i in 0..t {
+        let pr = p.row(i);
+        let dyr = dy.row(i);
+        let dot: f32 = pr.iter().zip(dyr.iter()).map(|(a, b)| a * b).sum();
+        let dxr = dx.row_mut(i);
+        for j in 0..n {
+            dxr[j] = pr[j] * (dyr[j] - dot);
+        }
+    }
+    dx
+}
+
+/// Precomputed RoPE rotation table.
+#[derive(Clone)]
+pub struct RopeTable {
+    /// `cos[pos][i]`, `sin[pos][i]` for i in 0..head_dim/2.
+    pub cos: Mat<f32>,
+    pub sin: Mat<f32>,
+    pub head_dim: usize,
+}
+
+impl RopeTable {
+    pub fn new(max_seq: usize, head_dim: usize, theta: f64) -> Self {
+        assert_eq!(head_dim % 2, 0);
+        let half = head_dim / 2;
+        let mut cos = Mat::zeros(max_seq, half);
+        let mut sin = Mat::zeros(max_seq, half);
+        for p in 0..max_seq {
+            for i in 0..half {
+                let freq = 1.0 / theta.powf(2.0 * i as f64 / head_dim as f64);
+                let ang = p as f64 * freq;
+                cos[(p, i)] = ang.cos() as f32;
+                sin[(p, i)] = ang.sin() as f32;
+            }
+        }
+        Self { cos, sin, head_dim }
+    }
+
+    /// Rotate one head-slice `q (T x head_dim)` in place, where row `t`
+    /// corresponds to absolute position `pos0 + t`.
+    pub fn apply(&self, q: &mut Mat<f32>, pos0: usize) {
+        let (t, hd) = q.shape();
+        assert_eq!(hd, self.head_dim);
+        let half = hd / 2;
+        for ti in 0..t {
+            let p = pos0 + ti;
+            let row = q.row_mut(ti);
+            for i in 0..half {
+                let (c, s) = (self.cos[(p, i)], self.sin[(p, i)]);
+                let (a, b) = (row[2 * i], row[2 * i + 1]);
+                row[2 * i] = a * c - b * s;
+                row[2 * i + 1] = a * s + b * c;
+            }
+        }
+    }
+
+    /// Backward = rotation by the negative angle (rotations are
+    /// orthogonal, so the adjoint is the inverse rotation).
+    pub fn apply_backward(&self, dq: &mut Mat<f32>, pos0: usize) {
+        let (t, hd) = dq.shape();
+        let half = hd / 2;
+        for ti in 0..t {
+            let p = pos0 + ti;
+            let row = dq.row_mut(ti);
+            for i in 0..half {
+                let (c, s) = (self.cos[(p, i)], self.sin[(p, i)]);
+                let (a, b) = (row[2 * i], row[2 * i + 1]);
+                row[2 * i] = a * c + b * s;
+                row[2 * i + 1] = -a * s + b * c;
+            }
+        }
+    }
+}
+
+/// Cross-entropy over logits `(T x vocab)` with integer targets.
+/// Returns `(mean_loss, dlogits)` where `dlogits` is already divided by T.
+pub fn cross_entropy(logits: &Mat<f32>, targets: &[usize]) -> (f32, Mat<f32>) {
+    let (t, v) = logits.shape();
+    assert_eq!(targets.len(), t);
+    let mut dlogits = Mat::zeros(t, v);
+    let mut loss = 0f64;
+    for i in 0..t {
+        let row = logits.row(i);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f64;
+        for &x in row {
+            sum += ((x - max) as f64).exp();
+        }
+        let lse = (sum.ln() as f32) + max;
+        loss += (lse - row[targets[i]]) as f64;
+        let drow = dlogits.row_mut(i);
+        let inv_t = 1.0 / t as f32;
+        for j in 0..v {
+            let p = ((row[j] - lse) as f64).exp() as f32;
+            drow[j] = (p - if j == targets[i] { 1.0 } else { 0.0 }) * inv_t;
+        }
+    }
+    ((loss / t as f64) as f32, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    /// Central finite-difference check of a scalar function's gradient.
+    fn fd_check(
+        x0: &Mat<f32>,
+        f: &dyn Fn(&Mat<f32>) -> f32,
+        analytic: &Mat<f32>,
+        tol: f32,
+    ) {
+        let mut worst = 0f32;
+        let h = 1e-3f32;
+        for idx in [(0usize, 0usize), (0, 1), (1, 2), (2, 0)] {
+            if idx.0 >= x0.rows() || idx.1 >= x0.cols() {
+                continue;
+            }
+            let mut xp = x0.clone();
+            xp[idx] += h;
+            let mut xm = x0.clone();
+            xm[idx] -= h;
+            let num = (f(&xp) - f(&xm)) / (2.0 * h);
+            let diff = (num - analytic[idx]).abs();
+            let denom = num.abs().max(analytic[idx].abs()).max(1e-3);
+            worst = worst.max(diff / denom);
+        }
+        assert!(worst < tol, "fd mismatch {worst}");
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale_norm() {
+        let mut rng = Rng::new(141);
+        let x: Mat<f32> = Mat::randn(4, 16, &mut rng);
+        let g = vec![1.0f32; 16];
+        let (y, _) = rmsnorm(&x, &g, 1e-6);
+        for i in 0..4 {
+            let ms: f32 = y.row(i).iter().map(|v| v * v).sum::<f32>() / 16.0;
+            assert!((ms - 1.0).abs() < 1e-3, "row {i} rms {ms}");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_backward_fd() {
+        let mut rng = Rng::new(142);
+        let x: Mat<f32> = Mat::randn(3, 8, &mut rng);
+        let g: Vec<f32> = (0..8).map(|i| 0.5 + 0.1 * i as f32).collect();
+        let (y0, inv) = rmsnorm(&x, &g, 1e-6);
+        // Scalar objective: sum of 0.5*y^2 -> dy = y.
+        let dy = y0.clone();
+        let (dx, dg) = rmsnorm_backward(&dy, &x, &g, &inv);
+        let f = |xx: &Mat<f32>| -> f32 {
+            let (y, _) = rmsnorm(xx, &g, 1e-6);
+            0.5 * y.as_slice().iter().map(|v| v * v).sum::<f32>()
+        };
+        fd_check(&x, &f, &dx, 0.03);
+        // dg finite difference on g[0].
+        let h = 1e-3f32;
+        let mut gp = g.clone();
+        gp[0] += h;
+        let mut gm = g.clone();
+        gm[0] -= h;
+        let fp = {
+            let (y, _) = rmsnorm(&x, &gp, 1e-6);
+            0.5 * y.as_slice().iter().map(|v| v * v).sum::<f32>()
+        };
+        let fm = {
+            let (y, _) = rmsnorm(&x, &gm, 1e-6);
+            0.5 * y.as_slice().iter().map(|v| v * v).sum::<f32>()
+        };
+        let num = (fp - fm) / (2.0 * h);
+        assert!((num - dg[0]).abs() / num.abs().max(1e-3) < 0.03, "dg fd {num} vs {}", dg[0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(143);
+        let mut x: Mat<f32> = Mat::randn(5, 9, &mut rng);
+        softmax_rows(&mut x);
+        for i in 0..5 {
+            let s: f32 = x.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_handles_neg_infinity_mask() {
+        let mut x: Mat<f32> = Mat::from_rows(&[vec![1.0, f32::NEG_INFINITY, 2.0]]);
+        softmax_rows(&mut x);
+        assert_eq!(x[(0, 1)], 0.0);
+        assert!((x.row(0).iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_backward_fd() {
+        let mut rng = Rng::new(144);
+        let x: Mat<f32> = Mat::randn(3, 6, &mut rng);
+        let mut p = x.clone();
+        softmax_rows(&mut p);
+        // Objective: weighted sum w.p with fixed random w -> dy = w.
+        let w: Mat<f32> = Mat::randn(3, 6, &mut rng);
+        let dx = softmax_rows_backward(&w, &p);
+        let f = |xx: &Mat<f32>| -> f32 {
+            let mut pp = xx.clone();
+            softmax_rows(&mut pp);
+            pp.as_slice().iter().zip(w.as_slice()).map(|(a, b)| a * b).sum()
+        };
+        fd_check(&x, &f, &dx, 0.03);
+    }
+
+    #[test]
+    fn silu_values_and_grad() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!(silu(10.0) > 9.9);
+        let h = 1e-3f32;
+        for &x in &[-2.0f32, -0.5, 0.0, 1.0, 3.0] {
+            let num = (silu(x + h) - silu(x - h)) / (2.0 * h);
+            assert!((num - silu_grad(x)).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_inverts() {
+        let table = RopeTable::new(32, 8, 10000.0);
+        let mut rng = Rng::new(145);
+        let q0: Mat<f32> = Mat::randn(5, 8, &mut rng);
+        let mut q = q0.clone();
+        table.apply(&mut q, 3);
+        // Norm preserved per row.
+        for i in 0..5 {
+            let n0: f32 = q0.row(i).iter().map(|v| v * v).sum();
+            let n1: f32 = q.row(i).iter().map(|v| v * v).sum();
+            assert!((n0 - n1).abs() < 1e-3);
+        }
+        // apply_backward inverts apply.
+        table.apply_backward(&mut q, 3);
+        assert!(q.rel_fro_err(&q0) < 1e-5);
+    }
+
+    #[test]
+    fn rope_relative_property() {
+        // <rope(q,p1), rope(k,p2)> depends only on p1 - p2.
+        let table = RopeTable::new(64, 8, 10000.0);
+        let mut rng = Rng::new(146);
+        let q: Mat<f32> = Mat::randn(1, 8, &mut rng);
+        let k: Mat<f32> = Mat::randn(1, 8, &mut rng);
+        let dot_at = |p1: usize, p2: usize| -> f32 {
+            let mut qq = q.clone();
+            let mut kk = k.clone();
+            table.apply(&mut qq, p1);
+            table.apply(&mut kk, p2);
+            qq.row(0).iter().zip(kk.row(0)).map(|(a, b)| a * b).sum()
+        };
+        let d1 = dot_at(5, 2);
+        let d2 = dot_at(25, 22);
+        assert!((d1 - d2).abs() < 1e-3, "{d1} vs {d2}");
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        let v = 16;
+        let logits: Mat<f32> = Mat::zeros(4, v);
+        let targets = vec![0usize, 5, 9, 15];
+        let (loss, dl) = cross_entropy(&logits, &targets);
+        assert!((loss - (v as f32).ln()).abs() < 1e-5);
+        // Gradient rows sum to ~0.
+        for i in 0..4 {
+            let s: f32 = dl.row(i).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cross_entropy_gradient_fd() {
+        let mut rng = Rng::new(147);
+        let logits: Mat<f32> = Mat::randn(3, 7, &mut rng);
+        let targets = vec![2usize, 0, 6];
+        let (_, dl) = cross_entropy(&logits, &targets);
+        let f = |xx: &Mat<f32>| cross_entropy(xx, &targets).0;
+        // Reuse the local fd helper logic inline for a couple entries.
+        let h = 1e-3f32;
+        for idx in [(0usize, 2usize), (1, 1), (2, 6)] {
+            let mut xp = logits.clone();
+            xp[idx] += h;
+            let mut xm = logits.clone();
+            xm[idx] -= h;
+            let num = (f(&xp) - f(&xm)) / (2.0 * h);
+            assert!(
+                (num - dl[idx]).abs() < 2e-3,
+                "fd {num} vs analytic {} at {idx:?}",
+                dl[idx]
+            );
+        }
+    }
+}

@@ -1,0 +1,326 @@
+//! Checkpoint (de)serialization — a small self-describing binary container
+//! (no serde in the offline crate set).
+//!
+//! Layout: magic `PIFACKPT`, u32 version, config block, then each tensor
+//! as `[tag u8][dims...][payload]`. All integers little-endian.
+
+use crate::linalg::Mat;
+use crate::model::config::ModelConfig;
+use crate::model::linear::LinearRepr;
+use crate::model::transformer::{Attention, Block, Mlp, Transformer};
+use crate::model::ops::RopeTable;
+use crate::pifa::PifaLayer;
+use crate::sparse24::Sparse24Mat;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PIFACKPT";
+const VERSION: u32 = 2;
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f64(w: &mut impl Write, v: f64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_str(w: &mut impl Write, s: &str) -> Result<()> {
+    w_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn w_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    for v in xs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn w_mat(w: &mut impl Write, m: &Mat<f32>) -> Result<()> {
+    w_u64(w, m.rows() as u64)?;
+    w_u64(w, m.cols() as u64)?;
+    for v in m.as_slice() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn r_str(r: &mut impl Read) -> Result<String> {
+    let n = r_u32(r)? as usize;
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+fn r_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = r_u64(r)? as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn r_mat(r: &mut impl Read) -> Result<Mat<f32>> {
+    let rows = r_u64(r)? as usize;
+    let cols = r_u64(r)? as usize;
+    let mut bytes = vec![0u8; rows * cols * 4];
+    r.read_exact(&mut bytes)?;
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+fn w_linear(w: &mut impl Write, l: &LinearRepr) -> Result<()> {
+    match l {
+        LinearRepr::Dense(m) => {
+            w.write_all(&[0u8])?;
+            w_mat(w, m)?;
+        }
+        LinearRepr::LowRank { u, vt } => {
+            w.write_all(&[1u8])?;
+            w_mat(w, u)?;
+            w_mat(w, vt)?;
+        }
+        LinearRepr::Pifa(p) => {
+            w.write_all(&[2u8])?;
+            w_u64(w, p.m as u64)?;
+            w_u64(w, p.n as u64)?;
+            w_u64(w, p.pivots.len() as u64)?;
+            for &i in &p.pivots {
+                w_u64(w, i as u64)?;
+            }
+            w_mat(w, &p.w_p)?;
+            w_mat(w, &p.c)?;
+        }
+        LinearRepr::Sparse24(s) => {
+            // Stored as masked dense (simple, round-trips exactly).
+            w.write_all(&[3u8])?;
+            w_mat(w, &s.to_dense())?;
+        }
+    }
+    Ok(())
+}
+
+fn r_linear(r: &mut impl Read) -> Result<LinearRepr> {
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    Ok(match tag[0] {
+        0 => LinearRepr::Dense(r_mat(r)?),
+        1 => {
+            let u = r_mat(r)?;
+            let vt = r_mat(r)?;
+            LinearRepr::LowRank { u, vt }
+        }
+        2 => {
+            let m = r_u64(r)? as usize;
+            let n = r_u64(r)? as usize;
+            let np = r_u64(r)? as usize;
+            let mut pivots = Vec::with_capacity(np);
+            for _ in 0..np {
+                pivots.push(r_u64(r)? as usize);
+            }
+            let w_p = r_mat(r)?;
+            let c = r_mat(r)?;
+            let mut is_p = vec![false; m];
+            for &i in &pivots {
+                is_p[i] = true;
+            }
+            let non_pivots = (0..m).filter(|&i| !is_p[i]).collect();
+            LinearRepr::Pifa(PifaLayer::new(m, n, pivots, non_pivots, w_p, c))
+        }
+        3 => {
+            let dense = r_mat(r)?;
+            let mask: Vec<bool> = dense.as_slice().iter().map(|&v| v != 0.0).collect();
+            LinearRepr::Sparse24(Sparse24Mat::pack(&dense, &mask))
+        }
+        t => bail!("unknown linear tag {t}"),
+    })
+}
+
+/// Save a model checkpoint.
+pub fn save_checkpoint(model: &Transformer, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create checkpoint {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION)?;
+    let c = &model.cfg;
+    w_str(&mut w, &c.name)?;
+    for v in [c.vocab, c.dim, c.n_layers, c.n_heads, c.ffn_hidden, c.max_seq] {
+        w_u64(&mut w, v as u64)?;
+    }
+    w_f64(&mut w, c.rope_theta)?;
+    w.write_all(&c.norm_eps.to_le_bytes())?;
+    w_mat(&mut w, &model.embed)?;
+    w_mat(&mut w, &model.head)?;
+    w_f32s(&mut w, &model.final_norm)?;
+    for b in &model.blocks {
+        w_f32s(&mut w, &b.attn_norm)?;
+        w_f32s(&mut w, &b.mlp_norm)?;
+        for l in [&b.attn.wq, &b.attn.wk, &b.attn.wv, &b.attn.wo, &b.mlp.gate, &b.mlp.up, &b.mlp.down]
+        {
+            w_linear(&mut w, l)?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a model checkpoint.
+pub fn load_checkpoint(path: &Path) -> Result<Transformer> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open checkpoint {}", path.display()))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a PIFA checkpoint: bad magic");
+    }
+    let version = r_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version} (expected {VERSION})");
+    }
+    let name = r_str(&mut r)?;
+    let vocab = r_u64(&mut r)? as usize;
+    let dim = r_u64(&mut r)? as usize;
+    let n_layers = r_u64(&mut r)? as usize;
+    let n_heads = r_u64(&mut r)? as usize;
+    let ffn_hidden = r_u64(&mut r)? as usize;
+    let max_seq = r_u64(&mut r)? as usize;
+    let rope_theta = r_f64(&mut r)?;
+    let mut eps_b = [0u8; 4];
+    r.read_exact(&mut eps_b)?;
+    let norm_eps = f32::from_le_bytes(eps_b);
+    let cfg = ModelConfig {
+        name,
+        vocab,
+        dim,
+        n_layers,
+        n_heads,
+        ffn_hidden,
+        max_seq,
+        rope_theta,
+        norm_eps,
+    };
+    let embed = r_mat(&mut r)?;
+    let head = r_mat(&mut r)?;
+    let final_norm = r_f32s(&mut r)?;
+    let mut blocks = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let attn_norm = r_f32s(&mut r)?;
+        let mlp_norm = r_f32s(&mut r)?;
+        let wq = r_linear(&mut r)?;
+        let wk = r_linear(&mut r)?;
+        let wv = r_linear(&mut r)?;
+        let wo = r_linear(&mut r)?;
+        let gate = r_linear(&mut r)?;
+        let up = r_linear(&mut r)?;
+        let down = r_linear(&mut r)?;
+        blocks.push(Block {
+            attn_norm,
+            attn: Attention { wq, wk, wv, wo },
+            mlp_norm,
+            mlp: Mlp { gate, up, down },
+        });
+    }
+    let rope = RopeTable::new(cfg.max_seq, cfg.dim / cfg.n_heads, cfg.rope_theta);
+    Ok(Transformer { cfg, embed, blocks, final_norm, head, rope })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("pifa_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn dense_roundtrip_exact() {
+        let cfg = ModelConfig::tiny_s();
+        let mut rng = Rng::new(181);
+        let model = Transformer::new_random(&cfg, &mut rng);
+        let path = tmpfile("dense.ckpt");
+        save_checkpoint(&model, &path).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.cfg, model.cfg);
+        assert_eq!(loaded.embed, model.embed);
+        let logits_a = model.forward(&[1, 2, 3], None);
+        let logits_b = loaded.forward(&[1, 2, 3], None);
+        assert_eq!(logits_a, logits_b);
+    }
+
+    #[test]
+    fn mixed_repr_roundtrip() {
+        let cfg = ModelConfig::tiny_s();
+        let mut rng = Rng::new(182);
+        let mut model = Transformer::new_random(&cfg, &mut rng);
+        // Convert modules into each representation.
+        let w = model.blocks[0].attn.wq.to_dense();
+        let f = crate::linalg::svd(&w);
+        let (u, vt) = f.truncate(8);
+        model.blocks[0].attn.wq = LinearRepr::LowRank { u, vt };
+        let wg = model.blocks[0].mlp.gate.to_dense();
+        let lr = crate::linalg::svd(&wg).reconstruct(8);
+        let p = crate::pifa::pivoting_factorization(&lr, 8, crate::pifa::PivotStrategy::QrColumnPivot)
+            .unwrap();
+        model.blocks[0].mlp.gate = LinearRepr::Pifa(p);
+        let wv = model.blocks[1].attn.wv.to_dense();
+        model.blocks[1].attn.wv = LinearRepr::Sparse24(Sparse24Mat::pack_magnitude(&wv));
+
+        let path = tmpfile("mixed.ckpt");
+        save_checkpoint(&model, &path).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let la = model.forward(&[4, 9, 2, 17], None);
+        let lb = loaded.forward(&[4, 9, 2, 17], None);
+        assert!(la.rel_fro_err(&lb) < 1e-6);
+        assert_eq!(loaded.blocks[0].attn.wq.kind_name(), "lowrank");
+        assert_eq!(loaded.blocks[0].mlp.gate.kind_name(), "pifa");
+        assert_eq!(loaded.blocks[1].attn.wv.kind_name(), "sparse24");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmpfile("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

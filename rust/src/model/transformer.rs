@@ -1,0 +1,668 @@
+//! The tiny-LLaMA transformer: forward pass with optional activation
+//! capture (for training backward and for the compression pipeline's dual
+//! data flows) and a KV-cache decode path for serving.
+//!
+//! All sequence activations are `Mat<f32>` with shape `(T, dim)`; batching
+//! is a loop over samples (sequences attend only within themselves).
+
+use crate::linalg::{self, Mat, Rng};
+use crate::model::config::ModelConfig;
+use crate::model::linear::LinearRepr;
+use crate::model::ops::{self, RopeTable};
+
+/// Identifies one prunable linear inside the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModuleKind {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+}
+
+impl ModuleKind {
+    pub const ALL: [ModuleKind; 7] = [
+        ModuleKind::Q,
+        ModuleKind::K,
+        ModuleKind::V,
+        ModuleKind::O,
+        ModuleKind::Gate,
+        ModuleKind::Up,
+        ModuleKind::Down,
+    ];
+
+    /// True for attention-side modules (MPIFA_NS's Type Density split).
+    pub fn is_attention(self) -> bool {
+        matches!(self, ModuleKind::Q | ModuleKind::K | ModuleKind::V | ModuleKind::O)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModuleKind::Q => "q",
+            ModuleKind::K => "k",
+            ModuleKind::V => "v",
+            ModuleKind::O => "o",
+            ModuleKind::Gate => "gate",
+            ModuleKind::Up => "up",
+            ModuleKind::Down => "down",
+        }
+    }
+}
+
+/// Multi-head attention weights.
+#[derive(Clone)]
+pub struct Attention {
+    pub wq: LinearRepr,
+    pub wk: LinearRepr,
+    pub wv: LinearRepr,
+    pub wo: LinearRepr,
+}
+
+/// SwiGLU MLP weights.
+#[derive(Clone)]
+pub struct Mlp {
+    pub gate: LinearRepr,
+    pub up: LinearRepr,
+    pub down: LinearRepr,
+}
+
+/// One transformer block.
+#[derive(Clone)]
+pub struct Block {
+    pub attn_norm: Vec<f32>,
+    pub attn: Attention,
+    pub mlp_norm: Vec<f32>,
+    pub mlp: Mlp,
+}
+
+/// Per-block forward cache (filled when training / capturing).
+#[derive(Default)]
+pub struct BlockCache {
+    pub h_in: Mat<f32>,
+    pub x_attn: Mat<f32>,
+    pub inv_rms_attn: Vec<f32>,
+    /// Post-RoPE Q/K and V, full (T x dim) with heads side by side.
+    pub q: Mat<f32>,
+    pub k: Mat<f32>,
+    pub v: Mat<f32>,
+    /// Per-head attention probabilities (T x T each).
+    pub probs: Vec<Mat<f32>>,
+    /// Attention mix (input to the O projection).
+    pub mix: Mat<f32>,
+    pub h_mid: Mat<f32>,
+    pub x_mlp: Mat<f32>,
+    pub inv_rms_mlp: Vec<f32>,
+    /// Pre-activation gate and up projections.
+    pub g_pre: Mat<f32>,
+    pub u_act: Mat<f32>,
+    /// SwiGLU output (input to the Down projection).
+    pub a: Mat<f32>,
+}
+
+/// KV cache for one sequence (all blocks).
+pub struct KvCache {
+    /// Per block: (K, V) of shape (capacity, dim); `len` rows are valid.
+    pub k: Vec<Mat<f32>>,
+    pub v: Vec<Mat<f32>>,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        Self {
+            k: (0..cfg.n_layers).map(|_| Mat::zeros(cfg.max_seq, cfg.dim)).collect(),
+            v: (0..cfg.n_layers).map(|_| Mat::zeros(cfg.max_seq, cfg.dim)).collect(),
+            len: 0,
+            capacity: cfg.max_seq,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// fp16-accounted bytes when full (Table 7 memory accounting).
+    pub fn memory_bytes_fp16(&self) -> usize {
+        self.k.iter().map(|m| m.rows() * m.cols() * 2).sum::<usize>() * 2
+    }
+}
+
+/// The full model.
+#[derive(Clone)]
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    /// Token embedding (vocab x dim).
+    pub embed: Mat<f32>,
+    pub blocks: Vec<Block>,
+    pub final_norm: Vec<f32>,
+    /// LM head (vocab x dim): logits = x_f W_head^T.
+    pub head: Mat<f32>,
+    pub rope: RopeTable,
+}
+
+impl Transformer {
+    /// Random initialization (scaled-normal, GPT-2 style residual scaling).
+    pub fn new_random(cfg: &ModelConfig, rng: &mut Rng) -> Self {
+        let d = cfg.dim;
+        let h = cfg.ffn_hidden;
+        let std_in = 1.0 / (d as f64).sqrt();
+        let resid_scale = 1.0 / (2.0 * cfg.n_layers as f64).sqrt();
+        let mk = |m: usize, n: usize, scale: f64, rng: &mut Rng| -> LinearRepr {
+            let mut w: Mat<f32> = Mat::randn(m, n, rng);
+            w.scale_inplace((std_in * scale) as f32);
+            LinearRepr::Dense(w)
+        };
+        let blocks = (0..cfg.n_layers)
+            .map(|_| Block {
+                attn_norm: vec![1.0; d],
+                attn: Attention {
+                    wq: mk(d, d, 1.0, rng),
+                    wk: mk(d, d, 1.0, rng),
+                    wv: mk(d, d, 1.0, rng),
+                    wo: mk(d, d, resid_scale, rng),
+                },
+                mlp_norm: vec![1.0; d],
+                mlp: Mlp {
+                    gate: mk(h, d, 1.0, rng),
+                    up: mk(h, d, 1.0, rng),
+                    down: mk(d, h, resid_scale, rng),
+                },
+            })
+            .collect();
+        let mut embed: Mat<f32> = Mat::randn(cfg.vocab, d, rng);
+        embed.scale_inplace(0.02);
+        let mut head: Mat<f32> = Mat::randn(cfg.vocab, d, rng);
+        head.scale_inplace(std_in as f32);
+        Self {
+            cfg: cfg.clone(),
+            embed,
+            blocks,
+            final_norm: vec![1.0; d],
+            head,
+            rope: RopeTable::new(cfg.max_seq, cfg.dim / cfg.n_heads, cfg.rope_theta),
+        }
+    }
+
+    /// Embed a token sequence.
+    pub fn embed_tokens(&self, tokens: &[usize]) -> Mat<f32> {
+        let mut h = Mat::zeros(tokens.len(), self.cfg.dim);
+        for (i, &t) in tokens.iter().enumerate() {
+            assert!(t < self.cfg.vocab, "token {t} out of vocab");
+            h.row_mut(i).copy_from_slice(self.embed.row(t));
+        }
+        h
+    }
+
+    /// Full forward: tokens → logits `(T x vocab)`. `caches`, if provided,
+    /// must have `n_layers` entries and is filled for backward.
+    pub fn forward(&self, tokens: &[usize], mut caches: Option<&mut Vec<BlockCache>>) -> Mat<f32> {
+        let mut h = self.embed_tokens(tokens);
+        for (li, block) in self.blocks.iter().enumerate() {
+            let cache = caches.as_mut().map(|c| &mut c[li]);
+            h = block_forward(block, &h, &self.rope, self.cfg.n_heads, self.cfg.norm_eps, cache);
+        }
+        let (xf, _) = ops::rmsnorm(&h, &self.final_norm, self.cfg.norm_eps);
+        linalg::matmul_nt(&xf, &self.head)
+    }
+
+    /// Forward returning both logits and the final hidden states + norms
+    /// cache (training path; see `backward.rs`).
+    pub fn forward_train(
+        &self,
+        tokens: &[usize],
+        caches: &mut Vec<BlockCache>,
+    ) -> (Mat<f32>, Mat<f32>, Vec<f32>) {
+        assert_eq!(caches.len(), self.cfg.n_layers);
+        let mut h = self.embed_tokens(tokens);
+        for (li, block) in self.blocks.iter().enumerate() {
+            h = block_forward(
+                block,
+                &h,
+                &self.rope,
+                self.cfg.n_heads,
+                self.cfg.norm_eps,
+                Some(&mut caches[li]),
+            );
+        }
+        let (xf, inv_rms_f) = ops::rmsnorm(&h, &self.final_norm, self.cfg.norm_eps);
+        let logits = linalg::matmul_nt(&xf, &self.head);
+        (logits, h, inv_rms_f)
+    }
+
+    /// Single-token decode step with KV cache; returns logits `(1 x vocab)`.
+    pub fn decode_step(&self, token: usize, cache: &mut KvCache) -> Mat<f32> {
+        assert!(cache.len < cache.capacity, "KV cache full");
+        let pos = cache.len;
+        let mut h = Mat::zeros(1, self.cfg.dim);
+        h.row_mut(0).copy_from_slice(self.embed.row(token));
+        for (li, block) in self.blocks.iter().enumerate() {
+            h = block_decode_step(
+                block,
+                &h,
+                &self.rope,
+                self.cfg.n_heads,
+                self.cfg.norm_eps,
+                &mut cache.k[li],
+                &mut cache.v[li],
+                pos,
+            );
+        }
+        cache.len += 1;
+        let (xf, _) = ops::rmsnorm(&h, &self.final_norm, self.cfg.norm_eps);
+        linalg::matmul_nt(&xf, &self.head)
+    }
+
+    /// Greedy generation (serving path reference implementation).
+    pub fn generate(&self, prompt: &[usize], max_new: usize) -> Vec<usize> {
+        let mut cache = KvCache::new(&self.cfg);
+        let mut logits = Mat::zeros(1, self.cfg.vocab);
+        for &t in prompt {
+            logits = self.decode_step(t, &mut cache);
+        }
+        let mut out = Vec::with_capacity(max_new);
+        let mut next = argmax(logits.row(0));
+        for _ in 0..max_new {
+            out.push(next);
+            if cache.len >= cache.capacity {
+                break;
+            }
+            logits = self.decode_step(next, &mut cache);
+            next = argmax(logits.row(0));
+        }
+        out
+    }
+
+    /// Sum of prunable-module parameters under current representations.
+    pub fn prunable_params(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| {
+                b.attn.wq.param_count()
+                    + b.attn.wk.param_count()
+                    + b.attn.wv.param_count()
+                    + b.attn.wo.param_count()
+                    + b.mlp.gate.param_count()
+                    + b.mlp.up.param_count()
+                    + b.mlp.down.param_count()
+            })
+            .sum()
+    }
+
+    /// Current global density over prunable parameters.
+    pub fn density(&self) -> f64 {
+        self.prunable_params() as f64 / self.cfg.prunable_param_count() as f64
+    }
+
+    /// fp16-accounted total weight memory (Table 7).
+    pub fn memory_bytes_fp16(&self) -> usize {
+        let mut total = (self.embed.rows() * self.embed.cols()
+            + self.head.rows() * self.head.cols()
+            + self.final_norm.len()) * 2;
+        for b in &self.blocks {
+            total += (b.attn_norm.len() + b.mlp_norm.len()) * 2;
+            for l in [&b.attn.wq, &b.attn.wk, &b.attn.wv, &b.attn.wo, &b.mlp.gate, &b.mlp.up, &b.mlp.down]
+            {
+                total += l.memory_bytes_fp16();
+            }
+        }
+        total
+    }
+
+    /// Borrow a module by (layer, kind).
+    pub fn module(&self, layer: usize, kind: ModuleKind) -> &LinearRepr {
+        let b = &self.blocks[layer];
+        match kind {
+            ModuleKind::Q => &b.attn.wq,
+            ModuleKind::K => &b.attn.wk,
+            ModuleKind::V => &b.attn.wv,
+            ModuleKind::O => &b.attn.wo,
+            ModuleKind::Gate => &b.mlp.gate,
+            ModuleKind::Up => &b.mlp.up,
+            ModuleKind::Down => &b.mlp.down,
+        }
+    }
+
+    /// Mutably borrow a module by (layer, kind).
+    pub fn module_mut(&mut self, layer: usize, kind: ModuleKind) -> &mut LinearRepr {
+        let b = &mut self.blocks[layer];
+        match kind {
+            ModuleKind::Q => &mut b.attn.wq,
+            ModuleKind::K => &mut b.attn.wk,
+            ModuleKind::V => &mut b.attn.wv,
+            ModuleKind::O => &mut b.attn.wo,
+            ModuleKind::Gate => &mut b.mlp.gate,
+            ModuleKind::Up => &mut b.mlp.up,
+            ModuleKind::Down => &mut b.mlp.down,
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Causal multi-head attention mix given already-projected (pre-RoPE)
+/// q, k, v; applies RoPE internally. Returns the mix (input of O-proj) and
+/// optionally per-head probabilities.
+pub fn attention_mix(
+    q_in: &Mat<f32>,
+    k_in: &Mat<f32>,
+    v: &Mat<f32>,
+    rope: &RopeTable,
+    n_heads: usize,
+    pos0: usize,
+    mut probs_out: Option<&mut Vec<Mat<f32>>>,
+) -> (Mat<f32>, Mat<f32>, Mat<f32>) {
+    let (t, d) = q_in.shape();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut q = q_in.clone();
+    let mut k = k_in.clone();
+    // RoPE per head slice.
+    for h in 0..n_heads {
+        let mut qh = q.block(0, t, h * hd, (h + 1) * hd);
+        let mut kh = k.block(0, t, h * hd, (h + 1) * hd);
+        rope.apply(&mut qh, pos0);
+        rope.apply(&mut kh, pos0);
+        q.set_block(0, h * hd, &qh);
+        k.set_block(0, h * hd, &kh);
+    }
+    let mut mix = Mat::zeros(t, d);
+    if let Some(p) = probs_out.as_mut() {
+        p.clear();
+    }
+    for h in 0..n_heads {
+        let qh = q.block(0, t, h * hd, (h + 1) * hd);
+        let kh = k.block(0, t, h * hd, (h + 1) * hd);
+        let vh = v.block(0, t, h * hd, (h + 1) * hd);
+        let mut scores = linalg::matmul_nt(&qh, &kh); // t x t
+        for i in 0..t {
+            let row = scores.row_mut(i);
+            for j in 0..t {
+                if j > i {
+                    row[j] = f32::NEG_INFINITY;
+                } else {
+                    row[j] *= scale;
+                }
+            }
+        }
+        ops::softmax_rows(&mut scores);
+        let mix_h = linalg::matmul(&scores, &vh); // t x hd
+        mix.set_block(0, h * hd, &mix_h);
+        if let Some(p) = probs_out.as_mut() {
+            p.push(scores);
+        }
+    }
+    (mix, q, k)
+}
+
+/// One block forward; fills `cache` if provided.
+pub fn block_forward(
+    block: &Block,
+    h_in: &Mat<f32>,
+    rope: &RopeTable,
+    n_heads: usize,
+    eps: f32,
+    cache: Option<&mut BlockCache>,
+) -> Mat<f32> {
+    let (x_attn, inv1) = ops::rmsnorm(h_in, &block.attn_norm, eps);
+    let q = block.attn.wq.forward(&x_attn);
+    let k = block.attn.wk.forward(&x_attn);
+    let v = block.attn.wv.forward(&x_attn);
+    let mut probs: Vec<Mat<f32>> = Vec::new();
+    let want_cache = cache.is_some();
+    let (mix, q_rot, k_rot) = attention_mix(
+        &q,
+        &k,
+        &v,
+        rope,
+        n_heads,
+        0,
+        if want_cache { Some(&mut probs) } else { None },
+    );
+    let attn_out = block.attn.wo.forward(&mix);
+    let h_mid = h_in.add_mat(&attn_out);
+
+    let (x_mlp, inv2) = ops::rmsnorm(&h_mid, &block.mlp_norm, eps);
+    let g_pre = block.mlp.gate.forward(&x_mlp);
+    let u_act = block.mlp.up.forward(&x_mlp);
+    let mut a = g_pre.clone();
+    for (av, (gv, uv)) in a
+        .as_mut_slice()
+        .iter_mut()
+        .zip(g_pre.as_slice().iter().zip(u_act.as_slice().iter()))
+    {
+        *av = ops::silu(*gv) * *uv;
+    }
+    let mlp_out = block.mlp.down.forward(&a);
+    let h_out = h_mid.add_mat(&mlp_out);
+
+    if let Some(c) = cache {
+        c.h_in = h_in.clone();
+        c.x_attn = x_attn;
+        c.inv_rms_attn = inv1;
+        c.q = q_rot;
+        c.k = k_rot;
+        c.v = v;
+        c.probs = probs;
+        c.mix = mix;
+        c.h_mid = h_mid.clone();
+        c.x_mlp = x_mlp;
+        c.inv_rms_mlp = inv2;
+        c.g_pre = g_pre;
+        c.u_act = u_act;
+        c.a = a;
+    }
+    h_out
+}
+
+/// One block decode step with KV cache (single new token at `pos`).
+#[allow(clippy::too_many_arguments)]
+fn block_decode_step(
+    block: &Block,
+    h_in: &Mat<f32>,
+    rope: &RopeTable,
+    n_heads: usize,
+    eps: f32,
+    k_cache: &mut Mat<f32>,
+    v_cache: &mut Mat<f32>,
+    pos: usize,
+) -> Mat<f32> {
+    let (x, _) = ops::rmsnorm(h_in, &block.attn_norm, eps);
+    let mut q = block.attn.wq.forward(&x); // 1 x dq (dq <= d if heads pruned)
+    let mut k = block.attn.wk.forward(&x);
+    let v = block.attn.wv.forward(&x);
+    // Head width from the projection output — structured pruning may have
+    // removed whole heads, so dq can be smaller than the residual dim.
+    let dq = q.cols();
+    let hd = dq / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    for h in 0..n_heads {
+        let mut qh = q.block(0, 1, h * hd, (h + 1) * hd);
+        let mut kh = k.block(0, 1, h * hd, (h + 1) * hd);
+        rope.apply(&mut qh, pos);
+        rope.apply(&mut kh, pos);
+        q.set_block(0, h * hd, &qh);
+        k.set_block(0, h * hd, &kh);
+    }
+    k_cache.row_mut(pos)[..dq].copy_from_slice(k.row(0));
+    v_cache.row_mut(pos)[..dq].copy_from_slice(v.row(0));
+
+    let mut mix = Mat::zeros(1, dq);
+    for h in 0..n_heads {
+        // scores over positions 0..=pos for this head.
+        let mut scores = vec![0f32; pos + 1];
+        let qh = &q.row(0)[h * hd..(h + 1) * hd];
+        for (p, score) in scores.iter_mut().enumerate() {
+            let kh = &k_cache.row(p)[h * hd..(h + 1) * hd];
+            *score = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+        }
+        // softmax
+        let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - max).exp();
+            sum += *s;
+        }
+        for s in scores.iter_mut() {
+            *s /= sum;
+        }
+        let out = &mut mix.row_mut(0)[h * hd..(h + 1) * hd];
+        for (p, &w) in scores.iter().enumerate() {
+            let vh = &v_cache.row(p)[h * hd..(h + 1) * hd];
+            for (o, vv) in out.iter_mut().zip(vh) {
+                *o += w * vv;
+            }
+        }
+    }
+    let attn_out = block.attn.wo.forward(&mix);
+    let h_mid = h_in.add_mat(&attn_out);
+    let (x2, _) = ops::rmsnorm(&h_mid, &block.mlp_norm, eps);
+    let g = block.mlp.gate.forward(&x2);
+    let u = block.mlp.up.forward(&x2);
+    let mut a = g.clone();
+    for (av, (gv, uv)) in a
+        .as_mut_slice()
+        .iter_mut()
+        .zip(g.as_slice().iter().zip(u.as_slice().iter()))
+    {
+        *av = ops::silu(*gv) * *uv;
+    }
+    let mlp_out = block.mlp.down.forward(&a);
+    h_mid.add_mat(&mlp_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (ModelConfig, Transformer) {
+        let cfg = ModelConfig {
+            name: "test".into(),
+            vocab: 32,
+            dim: 16,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 24,
+            max_seq: 16,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(161);
+        let model = Transformer::new_random(&cfg, &mut rng);
+        (cfg, model)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let (cfg, model) = tiny();
+        let tokens = [1usize, 5, 9, 2];
+        let logits = model.forward(&tokens, None);
+        assert_eq!(logits.shape(), (4, cfg.vocab));
+        assert!(logits.all_finite());
+    }
+
+    #[test]
+    fn causality() {
+        // Changing a future token must not affect earlier logits.
+        let (_, model) = tiny();
+        let t1 = [1usize, 2, 3, 4, 5];
+        let t2 = [1usize, 2, 3, 9, 9];
+        let l1 = model.forward(&t1, None);
+        let l2 = model.forward(&t2, None);
+        for i in 0..3 {
+            for j in 0..model.cfg.vocab {
+                assert!(
+                    (l1[(i, j)] - l2[(i, j)]).abs() < 1e-5,
+                    "position {i} leaked future info"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_matches_full_forward() {
+        // Greedy KV-cache decode logits must equal full-sequence forward
+        // logits at the last position.
+        let (_, model) = tiny();
+        let tokens = [3usize, 7, 11, 2, 9];
+        let full = model.forward(&tokens, None);
+        let mut cache = KvCache::new(&model.cfg);
+        let mut last = Mat::zeros(1, model.cfg.vocab);
+        for &t in &tokens {
+            last = model.decode_step(t, &mut cache);
+        }
+        let t = tokens.len() - 1;
+        for j in 0..model.cfg.vocab {
+            assert!(
+                (full[(t, j)] - last[(0, j)]).abs() < 1e-3,
+                "logit {j}: {} vs {}",
+                full[(t, j)],
+                last[(0, j)]
+            );
+        }
+    }
+
+    #[test]
+    fn cache_capture_matches_plain_forward() {
+        let (cfg, model) = tiny();
+        let tokens = [1usize, 2, 3, 4];
+        let plain = model.forward(&tokens, None);
+        let mut caches: Vec<BlockCache> = (0..cfg.n_layers).map(|_| BlockCache::default()).collect();
+        let with_cache = model.forward(&tokens, Some(&mut caches));
+        assert!(plain.rel_fro_err(&with_cache) < 1e-6);
+        // Caches are populated.
+        assert_eq!(caches[0].x_attn.shape(), (4, cfg.dim));
+        assert_eq!(caches[0].probs.len(), cfg.n_heads);
+        assert_eq!(caches[1].a.shape(), (4, cfg.ffn_hidden));
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let (_, model) = tiny();
+        let a = model.generate(&[1, 2, 3], 5);
+        let b = model.generate(&[1, 2, 3], 5);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+    }
+
+    #[test]
+    fn density_is_one_for_dense_model() {
+        let (_, model) = tiny();
+        assert!((model.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn module_accessors_cover_all() {
+        let (_, mut model) = tiny();
+        for kind in ModuleKind::ALL {
+            let m = model.module(0, kind).out_dim();
+            assert!(m > 0);
+            let _ = model.module_mut(0, kind);
+        }
+    }
+
+    #[test]
+    fn attention_probs_are_causal_distributions() {
+        let (cfg, model) = tiny();
+        let tokens = [1usize, 2, 3, 4, 5, 6];
+        let mut caches: Vec<BlockCache> = (0..cfg.n_layers).map(|_| BlockCache::default()).collect();
+        let _ = model.forward(&tokens, Some(&mut caches));
+        for p in &caches[0].probs {
+            for i in 0..6 {
+                let row_sum: f32 = p.row(i).iter().sum();
+                assert!((row_sum - 1.0).abs() < 1e-5);
+                for j in i + 1..6 {
+                    assert_eq!(p[(i, j)], 0.0, "future prob nonzero");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Parameter and FLOP accounting (§3.3), density↔rank mapping (DESIGN.md
+//! §5), and the Figure 3 structure comparison (LU / QR / PIFA non-trivial
+//! parameter layouts).
+
+/// Dense `m x n` parameter count.
+pub fn dense_params(m: usize, n: usize) -> usize {
+    m * n
+}
+
+/// Traditional low-rank `U V^T` parameter count: `r (m + n)`.
+pub fn lowrank_params(m: usize, n: usize, r: usize) -> usize {
+    let _ = n;
+    r * (m + n)
+}
+
+/// PIFA parameter count: `r(m + n) - r^2 + r` — `W_p` is `r x n`, `C` is
+/// `(m - r) x r`, plus the `r` pivot indices (§3.3).
+pub fn pifa_params(m: usize, n: usize, r: usize) -> usize {
+    r * n + (m - r) * r + r
+}
+
+/// Dense layer FLOPs for batch `b`: `2 m n b`.
+pub fn dense_flops(m: usize, n: usize, b: usize) -> usize {
+    2 * m * n * b
+}
+
+/// Low-rank layer FLOPs: `2 b r (m + n)`.
+pub fn lowrank_flops(m: usize, n: usize, r: usize, b: usize) -> usize {
+    2 * b * r * (m + n)
+}
+
+/// PIFA layer FLOPs: `2 b r (m + n - r)` (§3.3).
+pub fn pifa_flops(m: usize, n: usize, r: usize, b: usize) -> usize {
+    2 * b * r * (m + n - r)
+}
+
+/// Rank that a *low-rank* layer may use at parameter density `rho`:
+/// `r = rho * m n / (m + n)` (rounded, clamped to [1, min(m,n)]).
+pub fn rank_for_density_lowrank(m: usize, n: usize, rho: f64) -> usize {
+    let r = rho * (m * n) as f64 / (m + n) as f64;
+    (r.round() as usize).clamp(1, m.min(n))
+}
+
+/// Rank that a *PIFA* layer may use at density `rho`: the smaller root of
+/// `r^2 - r(m + n + 1) + rho m n = 0` (PIFA's savings are spent on extra
+/// rank — this is why W+M+PIFA beats W+M at equal density in Table 5).
+pub fn rank_for_density_pifa(m: usize, n: usize, rho: f64) -> usize {
+    let b = (m + n + 1) as f64;
+    let c = rho * (m * n) as f64;
+    let disc = (b * b - 4.0 * c).max(0.0).sqrt();
+    let r = (b - disc) / 2.0;
+    (r.round() as usize).clamp(1, m.min(n))
+}
+
+/// Density of a PIFA layer at rank `r`.
+pub fn density_of_pifa_rank(m: usize, n: usize, r: usize) -> f64 {
+    pifa_params(m, n, r) as f64 / dense_params(m, n) as f64
+}
+
+/// Density of a low-rank layer at rank `r`.
+pub fn density_of_lowrank_rank(m: usize, n: usize, r: usize) -> f64 {
+    lowrank_params(m, n, r) as f64 / dense_params(m, n) as f64
+}
+
+/// Figure 3: non-trivial parameter counts of rank-r factorizations of a
+/// (row-permuted) `m x n` rank-r matrix.
+///
+/// * LU keeps `r(m + n) - r^2 + r` non-trivial entries but distributes the
+///   `L` part as a trapezoid (unit diagonal preset) — bad for GPU tiling.
+/// * QR stores `Q (m x r)` dense + `R (r x n)` upper-trapezoid → more
+///   parameters and the R-triangle is still non-rectangular.
+/// * PIFA reorganizes into two dense rectangles `W_p (r x n)`, `C ((m-r) x r)`.
+#[derive(Clone, Copy, Debug)]
+pub struct StructureCounts {
+    pub nontrivial: usize,
+    /// Entries preset to 0 or 1 by the format (no storage needed).
+    pub trivial: usize,
+    /// True when all non-trivial entries form dense rectangles (GPU-friendly).
+    pub rectangular: bool,
+}
+
+/// LU factor layout of the permuted rank-r matrix: `L` is `m x r` unit
+/// lower-trapezoidal, `U` is `r x n` upper-trapezoidal.
+pub fn lu_structure(m: usize, n: usize, r: usize) -> StructureCounts {
+    // L: column j has (m - j - 1) sub-diagonal entries + unit diagonal.
+    let l_nontrivial: usize = (0..r).map(|j| m - j - 1).sum();
+    // U: row i has (n - i) entries from the diagonal right.
+    let u_nontrivial: usize = (0..r).map(|i| n - i).sum();
+    let trivial = r // unit diagonal of L
+        + (0..r).map(|i| i).sum::<usize>() // zeros below U's diagonal
+        + (0..r).map(|j| j).sum::<usize>(); // zeros above L's diagonal
+    StructureCounts {
+        nontrivial: l_nontrivial + u_nontrivial,
+        trivial,
+        rectangular: false,
+    }
+}
+
+/// QR layout: `Q (m x r)` dense, `R (r x n)` upper-trapezoidal.
+pub fn qr_structure(m: usize, n: usize, r: usize) -> StructureCounts {
+    let q = m * r;
+    let r_nontrivial: usize = (0..r).map(|i| n - i).sum();
+    StructureCounts { nontrivial: q + r_nontrivial, trivial: (0..r).map(|i| i).sum(), rectangular: false }
+}
+
+/// PIFA layout: `W_p (r x n)` and `C ((m-r) x r)`, both dense rectangles.
+pub fn pifa_structure(m: usize, n: usize, r: usize) -> StructureCounts {
+    StructureCounts { nontrivial: r * n + (m - r) * r, trivial: 0, rectangular: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pifa_always_cheaper_than_lowrank() {
+        for &(m, n) in &[(64usize, 64usize), (128, 32), (32, 128)] {
+            for r in 1..=m.min(n) {
+                assert!(pifa_params(m, n, r) < lowrank_params(m, n, r) + r + 1);
+                assert!(
+                    pifa_params(m, n, r) - r < lowrank_params(m, n, r),
+                    "float params must be strictly fewer"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pifa_always_cheaper_than_dense() {
+        // Eq. 3: (m - r)(n - r) > 0  =>  mn > r(m+n) - r^2.
+        for &(m, n) in &[(64usize, 64usize), (100, 40)] {
+            for r in 1..m.min(n) {
+                assert!(pifa_params(m, n, r) - r < dense_params(m, n));
+            }
+        }
+    }
+
+    #[test]
+    fn lowrank_exceeds_dense_above_half() {
+        // Figure 1: low-rank storage passes dense at r > mn/(m+n).
+        let (m, n) = (128usize, 128usize);
+        let r_cross = m * n / (m + n); // = 64
+        assert!(lowrank_params(m, n, r_cross + 8) > dense_params(m, n));
+        assert!(lowrank_params(m, n, r_cross - 8) < dense_params(m, n));
+    }
+
+    #[test]
+    fn paper_headline_savings_at_half_rank() {
+        // At r/d = 0.5 on square d x d: PIFA saves (r^2 - r) of r(m+n) —
+        // the paper reports 24.2% memory savings over low-rank at r = d/2.
+        let d = 8192usize;
+        let r = d / 2;
+        let lr = lowrank_params(d, d, r) as f64;
+        let pf = (pifa_params(d, d, r) - r) as f64; // exclude index
+        let saving = 1.0 - pf / lr;
+        assert!((saving - 0.25).abs() < 0.01, "saving={saving}"); // ~25% - 24.2% with idx overhead
+    }
+
+    #[test]
+    fn flops_ordering() {
+        let (m, n, b) = (512usize, 512usize, 8usize);
+        for r in [64usize, 128, 256] {
+            assert!(pifa_flops(m, n, r, b) < lowrank_flops(m, n, r, b));
+        }
+        // At r = n/2, PIFA flops < dense flops.
+        assert!(pifa_flops(m, n, 256, b) < dense_flops(m, n, b));
+    }
+
+    #[test]
+    fn density_rank_roundtrip_lowrank() {
+        let (m, n) = (256usize, 256usize);
+        for rho in [0.2, 0.4, 0.5, 0.8] {
+            let r = rank_for_density_lowrank(m, n, rho);
+            let got = density_of_lowrank_rank(m, n, r);
+            assert!((got - rho).abs() < 0.02, "rho={rho} got={got}");
+        }
+    }
+
+    #[test]
+    fn density_rank_roundtrip_pifa() {
+        let (m, n) = (256usize, 256usize);
+        for rho in [0.3, 0.5, 0.55, 0.7, 0.9] {
+            let r = rank_for_density_pifa(m, n, rho);
+            let got = density_of_pifa_rank(m, n, r);
+            assert!((got - rho).abs() < 0.02, "rho={rho} got={got}");
+        }
+    }
+
+    #[test]
+    fn pifa_rank_exceeds_lowrank_rank_at_same_density() {
+        // The mechanism behind Table 5's W+M+PIFA < W+M.
+        let (m, n) = (512usize, 512usize);
+        for rho in [0.4, 0.5, 0.6, 0.7] {
+            let r_lr = rank_for_density_lowrank(m, n, rho);
+            let r_pf = rank_for_density_pifa(m, n, rho);
+            assert!(r_pf > r_lr, "rho={rho}: pifa rank {r_pf} <= lowrank rank {r_lr}");
+        }
+    }
+
+    #[test]
+    fn fig3_lu_matches_pifa_count_qr_larger() {
+        // Paper Figure 3: LU has the same number of non-trivial parameters
+        // as PIFA, QR has more; only PIFA is rectangular.
+        let (m, n, r) = (64usize, 48usize, 16usize);
+        let lu = lu_structure(m, n, r);
+        let qr = qr_structure(m, n, r);
+        let pf = pifa_structure(m, n, r);
+        assert_eq!(lu.nontrivial, pf.nontrivial);
+        assert!(qr.nontrivial > pf.nontrivial);
+        assert!(pf.rectangular);
+        assert!(!lu.rectangular && !qr.rectangular);
+    }
+}

@@ -1,0 +1,223 @@
+//! Algorithm 2 — the PIFA inference layer.
+//!
+//! Stores `(I, W_p, C)` and computes `Y = W' X` without ever materializing
+//! `W'`:
+//!
+//! ```text
+//! Y_p  = W_p X            2 r n b   FLOPs
+//! Y_np = C  Y_p           2 r (m-r) b
+//! Y[I, :]   = Y_p
+//! Y[I^c, :] = Y_np        total: 2 b r (m + n - r)
+//! ```
+//!
+//! Two memory layouts are provided: `apply_cols` follows the paper's
+//! `X ∈ R^{n x b}` convention; `apply_rows` is the transformer-friendly
+//! `X ∈ R^{b x n} → Y = X W'^T ∈ R^{b x m}` used by `crate::model`.
+
+use crate::linalg::{self, Mat, Scalar};
+
+/// A factored PIFA layer: pivot indices, pivot-row matrix, coefficients.
+#[derive(Clone)]
+pub struct PifaLayer<T: Scalar = f32> {
+    /// Output dimension `m` of the original `W' (m x n)`.
+    pub m: usize,
+    /// Input dimension `n`.
+    pub n: usize,
+    /// Pivot-row indices `I` (length r, in pivot order).
+    pub pivots: Vec<usize>,
+    /// Non-pivot row indices `I^c` (length m - r, ascending).
+    pub non_pivots: Vec<usize>,
+    /// Pivot-row matrix `W_p (r x n)`.
+    pub w_p: Mat<T>,
+    /// Coefficient matrix `C ((m-r) x r)` with `W_np = C W_p`.
+    pub c: Mat<T>,
+}
+
+impl<T: Scalar> PifaLayer<T> {
+    pub fn new(
+        m: usize,
+        n: usize,
+        pivots: Vec<usize>,
+        non_pivots: Vec<usize>,
+        w_p: Mat<T>,
+        c: Mat<T>,
+    ) -> Self {
+        let r = pivots.len();
+        debug_assert_eq!(w_p.shape(), (r, n));
+        debug_assert_eq!(c.shape(), (m - r, r));
+        debug_assert_eq!(non_pivots.len(), m - r);
+        Self { m, n, pivots, non_pivots, w_p, c }
+    }
+
+    /// Rank of the factorization.
+    pub fn rank(&self) -> usize {
+        self.pivots.len()
+    }
+
+    /// Stored parameter count: `r(m + n) - r^2 + r` (§3.3), excluding the
+    /// (negligible) integer index vector.
+    pub fn param_count(&self) -> usize {
+        self.w_p.rows() * self.w_p.cols() + self.c.rows() * self.c.cols()
+    }
+
+    /// Density relative to the dense `m x n` matrix.
+    pub fn density(&self) -> f64 {
+        self.param_count() as f64 / (self.m * self.n) as f64
+    }
+
+    /// FLOPs for a batch of `b` columns (2 b r (m + n - r), §3.3).
+    pub fn flops(&self, b: usize) -> usize {
+        super::costs::pifa_flops(self.m, self.n, self.rank(), b)
+    }
+
+    /// Paper layout: `X (n x b) → Y (m x b)`.
+    pub fn apply_cols(&self, x: &Mat<T>) -> Mat<T> {
+        assert_eq!(x.rows(), self.n, "PifaLayer::apply_cols: input dim mismatch");
+        let b = x.cols();
+        let y_p = linalg::matmul(&self.w_p, x); // r x b
+        let y_np = linalg::matmul(&self.c, &y_p); // (m-r) x b
+        let mut y = Mat::zeros(self.m, b);
+        for (k, &i) in self.pivots.iter().enumerate() {
+            y.row_mut(i).copy_from_slice(y_p.row(k));
+        }
+        for (k, &i) in self.non_pivots.iter().enumerate() {
+            y.row_mut(i).copy_from_slice(y_np.row(k));
+        }
+        y
+    }
+
+    /// Transformer layout: `X (b x n) → Y = X W'^T (b x m)`.
+    ///
+    /// `Y_p = X W_p^T (b x r)`, `Y_np = Y_p C^T (b x (m-r))`, then the two
+    /// results are interleaved into the output columns by pivot index.
+    pub fn apply_rows(&self, x: &Mat<T>) -> Mat<T> {
+        assert_eq!(x.cols(), self.n, "PifaLayer::apply_rows: input dim mismatch");
+        let b = x.rows();
+        let y_p = linalg::matmul_nt(x, &self.w_p); // b x r
+        let y_np = linalg::matmul_nt(&y_p, &self.c); // b x (m-r)
+        let mut y = Mat::zeros(b, self.m);
+        for row in 0..b {
+            let yp_row = y_p.row(row);
+            let ynp_row = y_np.row(row);
+            let y_row = y.row_mut(row);
+            for (k, &i) in self.pivots.iter().enumerate() {
+                y_row[i] = yp_row[k];
+            }
+            for (k, &i) in self.non_pivots.iter().enumerate() {
+                y_row[i] = ynp_row[k];
+            }
+        }
+        y
+    }
+
+    /// Materialize `W'` (testing / export only — never on the hot path).
+    pub fn reconstruct(&self) -> Mat<T> {
+        let w_np = linalg::matmul(&self.c, &self.w_p);
+        let mut w = Mat::zeros(self.m, self.n);
+        for (k, &i) in self.pivots.iter().enumerate() {
+            w.row_mut(i).copy_from_slice(self.w_p.row(k));
+        }
+        for (k, &i) in self.non_pivots.iter().enumerate() {
+            w.row_mut(i).copy_from_slice(w_np.row(k));
+        }
+        w
+    }
+
+    /// Precision conversion.
+    pub fn cast<U: Scalar>(&self) -> PifaLayer<U> {
+        PifaLayer {
+            m: self.m,
+            n: self.n,
+            pivots: self.pivots.clone(),
+            non_pivots: self.non_pivots.clone(),
+            w_p: self.w_p.cast(),
+            c: self.c.cast(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::pifa::factorize::{pivoting_factorization, PivotStrategy};
+
+    fn make_layer(m: usize, n: usize, r: usize, seed: u64) -> (Mat<f64>, PifaLayer<f64>) {
+        let mut rng = Rng::new(seed);
+        let w: Mat<f64> = Mat::rand_low_rank(m, n, r, &mut rng);
+        let layer = pivoting_factorization(&w, r, PivotStrategy::QrColumnPivot).unwrap();
+        (w, layer)
+    }
+
+    #[test]
+    fn apply_cols_matches_dense() {
+        let (w, layer) = make_layer(24, 16, 6, 91);
+        let mut rng = Rng::new(92);
+        let x: Mat<f64> = Mat::randn(16, 5, &mut rng);
+        let y_dense = linalg::matmul(&w, &x);
+        let y_pifa = layer.apply_cols(&x);
+        assert!(y_pifa.rel_fro_err(&y_dense) < 1e-10);
+    }
+
+    #[test]
+    fn apply_rows_matches_dense() {
+        let (w, layer) = make_layer(24, 16, 6, 93);
+        let mut rng = Rng::new(94);
+        let x: Mat<f64> = Mat::randn(7, 16, &mut rng);
+        let y_dense = linalg::matmul_nt(&x, &w); // X W^T
+        let y_pifa = layer.apply_rows(&x);
+        assert!(y_pifa.rel_fro_err(&y_dense) < 1e-10);
+    }
+
+    #[test]
+    fn apply_layouts_agree() {
+        let (_, layer) = make_layer(20, 12, 4, 95);
+        let mut rng = Rng::new(96);
+        let x_cols: Mat<f64> = Mat::randn(12, 9, &mut rng);
+        let y1 = layer.apply_cols(&x_cols);
+        let y2 = layer.apply_rows(&x_cols.transpose()).transpose();
+        assert!(y1.rel_fro_err(&y2) < 1e-12);
+    }
+
+    #[test]
+    fn param_count_formula() {
+        let (_, layer) = make_layer(32, 24, 8, 97);
+        let (m, n, r) = (32usize, 24usize, 8usize);
+        assert_eq!(layer.param_count(), r * n + (m - r) * r);
+        assert_eq!(layer.param_count(), r * (m + n) - r * r);
+        // §3.3 formula includes +r for the index vector; param_count
+        // counts only float storage, costs::pifa_params adds the index.
+        assert_eq!(super::super::costs::pifa_params(m, n, r), r * (m + n) - r * r + r);
+    }
+
+    #[test]
+    fn density_below_one_for_any_valid_rank() {
+        for &(m, n) in &[(16usize, 16usize), (32, 8), (8, 32)] {
+            for r in 1..m.min(n) {
+                let mut rng = Rng::new(100 + r as u64);
+                let w: Mat<f64> = Mat::rand_low_rank(m, n, r, &mut rng);
+                let layer = pivoting_factorization(&w, r, PivotStrategy::QrColumnPivot).unwrap();
+                assert!(
+                    layer.density() < 1.0,
+                    "PIFA density must beat dense: ({m},{n},{r}) -> {}",
+                    layer.density()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flops_less_than_lowrank() {
+        let (_, layer) = make_layer(32, 32, 16, 98);
+        let b = 4;
+        assert!(layer.flops(b) < super::super::costs::lowrank_flops(32, 32, 16, b));
+    }
+
+    #[test]
+    fn cast_roundtrip_small_error() {
+        let (w, layer) = make_layer(16, 16, 4, 99);
+        let l32: PifaLayer<f32> = layer.cast();
+        let rec = l32.reconstruct().cast::<f64>();
+        assert!(rec.rel_fro_err(&w) < 1e-4);
+    }
+}

@@ -1,0 +1,19 @@
+//! Pivoting Factorization (PIFA) — the paper's core contribution (§3).
+//!
+//! * [`factorize`] — Algorithm 1: pivot-row selection (pivoted QR on `W'^T`,
+//!   or LU) + coefficient solve `W_np = C W_p`.
+//! * [`layer`] — Algorithm 2: the PIFA inference layer
+//!   (`Y_p = W_p X; Y_np = C Y_p; scatter`).
+//! * [`costs`] — exact parameter / FLOP accounting behind Figure 1,
+//!   Figure 3, and the density↔rank mapping (DESIGN.md §5).
+
+pub mod costs;
+pub mod factorize;
+pub mod layer;
+
+pub use costs::{
+    dense_flops, dense_params, density_of_lowrank_rank, density_of_pifa_rank, lowrank_flops,
+    lowrank_params, pifa_flops, pifa_params, rank_for_density_lowrank, rank_for_density_pifa,
+};
+pub use factorize::{pivoting_factorization, PivotStrategy};
+pub use layer::PifaLayer;

@@ -1,0 +1,378 @@
+//! Binds a Rust [`Transformer`] checkpoint to an AOT artifact and drives
+//! prefill / decode through PJRT.
+
+use super::loader::{literal_f32, literal_i32, Engine};
+use super::manifest::{ArtifactKind, TensorSpec};
+use crate::model::transformer::{ModuleKind, Transformer};
+use crate::model::LinearRepr;
+use anyhow::{bail, Context, Result};
+
+fn kind_of(tag: &str) -> Result<ModuleKind> {
+    Ok(match tag {
+        "q" => ModuleKind::Q,
+        "k" => ModuleKind::K,
+        "v" => ModuleKind::V,
+        "o" => ModuleKind::O,
+        "gate" => ModuleKind::Gate,
+        "up" => ModuleKind::Up,
+        "down" => ModuleKind::Down,
+        other => bail!("unknown module tag {other}"),
+    })
+}
+
+/// Convert a checkpointed model into the artifact's canonical parameter
+/// literals. Shapes are validated against the manifest — a mismatch means
+/// the model was compressed with a different density/flavour than the
+/// artifact was lowered for.
+pub fn weights_to_literals(model: &Transformer, params: &[TensorSpec]) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(params.len());
+    for spec in params {
+        let lit = tensor_for(model, spec)
+            .with_context(|| format!("building literal for param '{}'", spec.name))?;
+        out.push(lit);
+    }
+    Ok(out)
+}
+
+fn mat_literal(m: &crate::linalg::Mat<f32>, spec: &TensorSpec) -> Result<xla::Literal> {
+    let want: Vec<usize> = spec.dims.clone();
+    let got = vec![m.rows(), m.cols()];
+    if want != got {
+        bail!("shape mismatch: artifact wants {want:?}, model has {got:?}");
+    }
+    literal_f32(m.as_slice(), &spec.dims)
+}
+
+fn vec_literal(v: &[f32], spec: &TensorSpec) -> Result<xla::Literal> {
+    if spec.dims != vec![v.len()] {
+        bail!("shape mismatch: artifact wants {:?}, model has [{}]", spec.dims, v.len());
+    }
+    literal_f32(v, &spec.dims)
+}
+
+fn tensor_for(model: &Transformer, spec: &TensorSpec) -> Result<xla::Literal> {
+    let name = spec.name.as_str();
+    match name {
+        "embed" => return mat_literal(&model.embed, spec),
+        "head" => return mat_literal(&model.head, spec),
+        "final_norm" => return vec_literal(&model.final_norm, spec),
+        _ => {}
+    }
+    // l{i}.{field}[.{part}]
+    let rest = name.strip_prefix('l').context("param name must start with l")?;
+    let (layer_s, tail) = rest.split_once('.').context("missing layer dot")?;
+    let layer: usize = layer_s.parse().context("bad layer index")?;
+    if layer >= model.blocks.len() {
+        bail!("layer {layer} out of range");
+    }
+    match tail {
+        "attn_norm" => return vec_literal(&model.blocks[layer].attn_norm, spec),
+        "mlp_norm" => return vec_literal(&model.blocks[layer].mlp_norm, spec),
+        _ => {}
+    }
+    let (mod_tag, part) = tail.split_once('.').context("missing module part")?;
+    let kind = kind_of(mod_tag)?;
+    let repr = model.module(layer, kind);
+    match (repr, part) {
+        (LinearRepr::Dense(w), "w") => mat_literal(w, spec),
+        (LinearRepr::LowRank { u, .. }, "u") => mat_literal(u, spec),
+        (LinearRepr::LowRank { vt, .. }, "vt") => mat_literal(vt, spec),
+        (LinearRepr::Pifa(p), "w_p") => mat_literal(&p.w_p, spec),
+        (LinearRepr::Pifa(p), "c") => mat_literal(&p.c, spec),
+        (LinearRepr::Pifa(p), "inv_perm") => {
+            if spec.dims != vec![p.m] {
+                bail!("inv_perm shape mismatch");
+            }
+            // Output channel i reads concat([pivots, non_pivots]) position
+            // inv[i].
+            let mut inv = vec![0i32; p.m];
+            for (pos, &ch) in p.pivots.iter().chain(p.non_pivots.iter()).enumerate() {
+                inv[ch] = pos as i32;
+            }
+            literal_i32(&inv, &spec.dims)
+        }
+        (r, p) => bail!(
+            "model module l{layer}.{} is '{}' but artifact wants part '{p}'",
+            mod_tag,
+            r.kind_name()
+        ),
+    }
+}
+
+/// Drives one (model, artifact-pair) through PJRT: batch prefill + decode.
+pub struct ModelRunner {
+    pub prefill_name: String,
+    pub decode_name: String,
+    weights: Vec<xla::Literal>,
+    pub batch: usize,
+    pub prefill_seq: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub layers: usize,
+    pub dim: usize,
+}
+
+/// Opaque KV-cache state held between decode steps (host literals).
+pub struct KvState {
+    pub k: xla::Literal,
+    pub v: xla::Literal,
+    pub pos: usize,
+}
+
+impl ModelRunner {
+    /// Bind `model` to the given prefill/decode artifact pair.
+    pub fn new(
+        engine: &mut Engine,
+        model: &Transformer,
+        prefill_name: &str,
+        decode_name: &str,
+    ) -> Result<Self> {
+        let dspec = engine.manifest.get(decode_name)?.clone();
+        let (batch, max_seq, vocab, layers, dim) = match &dspec.kind {
+            ArtifactKind::Model { batch, max_seq, vocab, layers, dim, .. } => {
+                (*batch, *max_seq, *vocab, *layers, *dim)
+            }
+            _ => bail!("{decode_name} is not a model artifact"),
+        };
+        let pspec = engine.manifest.get(prefill_name)?.clone();
+        let prefill_seq = match &pspec.kind {
+            ArtifactKind::Model { seq, .. } => *seq,
+            _ => bail!("{prefill_name} is not a model artifact"),
+        };
+        // Weight order must agree between the two artifacts.
+        if pspec.params != dspec.params {
+            bail!("prefill/decode artifacts disagree on parameter spec");
+        }
+        let weights = weights_to_literals(model, &dspec.params)?;
+        // Warm the compile cache.
+        engine.executable(prefill_name)?;
+        engine.executable(decode_name)?;
+        Ok(Self {
+            prefill_name: prefill_name.to_string(),
+            decode_name: decode_name.to_string(),
+            weights,
+            batch,
+            prefill_seq,
+            max_seq,
+            vocab,
+            layers,
+            dim,
+        })
+    }
+
+    fn args_with_weights(&self, extra: Vec<xla::Literal>) -> Vec<xla::Literal> {
+        let mut args: Vec<xla::Literal> = self.weights.to_vec();
+        args.extend(extra);
+        args
+    }
+
+    /// Run prefill (batch 1 artifact) on one prompt, padded to the
+    /// artifact's static length. Returns (all-position logits, KvState).
+    pub fn prefill(&self, engine: &mut Engine, prompt: &[usize]) -> Result<(Vec<f32>, KvState)> {
+        if prompt.is_empty() || prompt.len() > self.prefill_seq {
+            bail!("prompt length {} not in 1..={}", prompt.len(), self.prefill_seq);
+        }
+        let mut toks = vec![0i32; self.prefill_seq];
+        for (i, &t) in prompt.iter().enumerate() {
+            toks[i] = t as i32;
+        }
+        let tokens = literal_i32(&toks, &[1, self.prefill_seq])?;
+        let out = engine.run(&self.prefill_name, &self.args_with_weights(vec![tokens]))?;
+        if out.len() != 3 {
+            bail!("prefill returned {} outputs, want 3", out.len());
+        }
+        let mut it = out.into_iter();
+        let logits = it.next().unwrap().to_vec::<f32>()?;
+        let k = it.next().unwrap();
+        let v = it.next().unwrap();
+        Ok((logits, KvState { k, v, pos: prompt.len() }))
+    }
+
+    /// Logits row for position `pos` out of a prefill result.
+    pub fn logits_at(&self, logits: &[f32], pos: usize) -> Vec<f32> {
+        logits[pos * self.vocab..(pos + 1) * self.vocab].to_vec()
+    }
+
+    /// One batched decode step. `tokens.len()` must equal the artifact
+    /// batch; all sequences share `state.pos`.
+    pub fn decode_step(
+        &self,
+        engine: &mut Engine,
+        state: KvState,
+        tokens: &[usize],
+    ) -> Result<(Vec<Vec<f32>>, KvState)> {
+        if tokens.len() != self.batch {
+            bail!("decode batch {} != artifact batch {}", tokens.len(), self.batch);
+        }
+        if state.pos >= self.max_seq {
+            bail!("KV cache full at pos {}", state.pos);
+        }
+        let tok: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        // NOTE: a device-resident-weights fast path via execute_b was
+        // measured and reverted — see EXPERIMENTS.md §Perf (intermittent
+        // size CHECK failures inside xla_extension 0.5.1's
+        // buffer_from_host_literal under repeated staging).
+        let args = self.args_with_weights(vec![
+            state.k,
+            state.v,
+            literal_i32(&tok, &[self.batch])?,
+            literal_i32(&[state.pos as i32], &[])?,
+        ]);
+        let out = engine.run(&self.decode_name, &args)?;
+        if out.len() != 3 {
+            bail!("decode returned {} outputs, want 3", out.len());
+        }
+        let mut it = out.into_iter();
+        let logits_flat = it.next().unwrap().to_vec::<f32>()?;
+        let k = it.next().unwrap();
+        let v = it.next().unwrap();
+        let logits = (0..self.batch)
+            .map(|b| logits_flat[b * self.vocab..(b + 1) * self.vocab].to_vec())
+            .collect();
+        Ok((logits, KvState { k, v, pos: state.pos + 1 }))
+    }
+
+    /// Fresh zeroed KV state (for decode-from-scratch generation).
+    pub fn empty_kv(&self) -> Result<KvState> {
+        let n = self.layers * self.batch * self.max_seq * self.dim;
+        let dims = [self.layers, self.batch, self.max_seq, self.dim];
+        Ok(KvState {
+            k: literal_f32(&vec![0f32; n], &dims)?,
+            v: literal_f32(&vec![0f32; n], &dims)?,
+            pos: 0,
+        })
+    }
+}
+
+/// Greedy argmax over a logits row.
+pub fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::model::config::ModelConfig;
+    use std::path::Path;
+
+    fn artifact_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have(name: &str) -> bool {
+        artifact_dir().join(format!("{name}.hlo.txt")).exists()
+    }
+
+    #[test]
+    fn inv_perm_is_inverse_of_pivot_order() {
+        let mut rng = Rng::new(401);
+        let w: crate::linalg::Mat<f32> = crate::linalg::Mat::rand_low_rank(12, 10, 4, &mut rng);
+        let p = crate::pifa::pivoting_factorization(&w, 4, crate::pifa::PivotStrategy::QrColumnPivot)
+            .unwrap();
+        let spec = TensorSpec { name: "l0.q.inv_perm".into(), dtype: "i32".into(), dims: vec![12] };
+        // Build a model with that module to exercise tensor_for.
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 16,
+            dim: 12,
+            n_layers: 1,
+            n_heads: 2,
+            ffn_hidden: 12,
+            max_seq: 8,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let model = crate::model::transformer::Transformer::new_random(&cfg, &mut rng);
+        // q is 10x10 in this config; swap in a 12-out PIFA for shape test
+        // only through direct call:
+        let _ = model;
+        // Direct check of the inverse construction:
+        let mut inv = vec![0usize; 12];
+        for (pos, &ch) in p.pivots.iter().chain(p.non_pivots.iter()).enumerate() {
+            inv[ch] = pos;
+        }
+        // concat(rows of W_p, rows of C W_p) indexed by inv == W.
+        let w_np = crate::linalg::matmul(&p.c, &p.w_p);
+        for ch in 0..12 {
+            let pos = inv[ch];
+            let row = if pos < 4 { p.w_p.row(pos) } else { w_np.row(pos - 4) };
+            for j in 0..10 {
+                assert!((row[j] - w[(ch, j)]).abs() < 1e-4);
+            }
+        }
+        let _ = spec;
+    }
+
+    #[test]
+    fn weights_to_literals_rejects_shape_mismatch() {
+        let cfg = ModelConfig::tiny_s();
+        let mut rng = Rng::new(402);
+        let model = crate::model::transformer::Transformer::new_random(&cfg, &mut rng);
+        let bad = TensorSpec { name: "embed".into(), dtype: "f32".into(), dims: vec![100, 64] };
+        assert!(weights_to_literals(&model, &[bad]).is_err());
+        let good = TensorSpec {
+            name: "embed".into(),
+            dtype: "f32".into(),
+            dims: vec![cfg.vocab, cfg.dim],
+        };
+        assert!(weights_to_literals(&model, &[good]).is_ok());
+    }
+
+    /// End-to-end L2/L3 parity: PJRT output of the dense artifact matches
+    /// the Rust-native forward on the same weights. The core cross-layer
+    /// correctness test of the whole stack.
+    #[test]
+    fn pjrt_matches_rust_native_forward() {
+        if !have("tiny-s_dense_prefill_b1_t64") {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut engine = Engine::new(&artifact_dir()).unwrap();
+        let cfg = ModelConfig::tiny_s();
+        let mut rng = Rng::new(403);
+        let model = crate::model::transformer::Transformer::new_random(&cfg, &mut rng);
+        let runner = ModelRunner::new(
+            &mut engine,
+            &model,
+            "tiny-s_dense_prefill_b1_t64",
+            "tiny-s_dense_decode_b1",
+        )
+        .unwrap();
+        let prompt = [5usize, 17, 100, 42, 3, 9, 7, 1];
+        let (logits, kv) = runner.prefill(&mut engine, &prompt).unwrap();
+        // Rust-native forward on the padded sequence (prefill pads to 64).
+        let mut padded = prompt.to_vec();
+        padded.resize(64, 0);
+        let native = model.forward(&padded, None);
+        let last = runner.logits_at(&logits, prompt.len() - 1);
+        for j in 0..cfg.vocab {
+            let a = last[j];
+            let b = native[(prompt.len() - 1, j)];
+            assert!(
+                (a - b).abs() < 2e-2_f32.max(b.abs() * 0.01),
+                "logit {j}: pjrt {a} vs native {b}"
+            );
+        }
+        // And one decode step continues correctly.
+        let next = argmax(&last);
+        let (dec_logits, _) = runner.decode_step(&mut engine, kv, &[next]).unwrap();
+        let mut seq = prompt.to_vec();
+        seq.push(next);
+        let mut padded2 = seq.clone();
+        padded2.resize(64, 0);
+        let native2 = model.forward(&padded2, None);
+        for j in 0..cfg.vocab {
+            let a = dec_logits[0][j];
+            let b = native2[(seq.len() - 1, j)];
+            assert!(
+                (a - b).abs() < 3e-2_f32.max(b.abs() * 0.02),
+                "decode logit {j}: pjrt {a} vs native {b}"
+            );
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! PJRT client + artifact compile cache.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile`) following /opt/xla-example/load_hlo. Compiled executables
+//! are cached per artifact name — compilation is the expensive step and the
+//! coordinator reuses one executable across all requests.
+
+use super::manifest::{ArtifactSpec, Manifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// PJRT engine: client + compile cache + manifest.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.get(name)?.clone();
+            let exe = self.compile_spec(&spec)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    fn compile_spec(&self, spec: &ArtifactSpec) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = spec
+            .hlo_path
+            .to_str()
+            .context("artifact path not utf-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parse HLO text {path_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile {}", spec.name))
+    }
+
+    /// Execute an artifact with positional literals; returns the flattened
+    /// tuple elements (aot.py lowers with return_tuple=True).
+    pub fn run(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("execute {name}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {name}"))?;
+        out.to_tuple().context("untuple result")
+    }
+
+    /// Execute with pre-staged device buffers (the serving fast path:
+    /// weights stay resident on the device across calls — EXPERIMENTS.md
+    /// §Perf). Returns the flattened tuple elements as host literals.
+    pub fn run_b(&mut self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("execute_b {name}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {name}"))?;
+        out.to_tuple().context("untuple result")
+    }
+
+    /// Stage a host literal onto the device.
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .context("buffer_from_host_literal")
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Build an f32 literal from a row-major matrix.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.is_empty() {
+        // Scalar: reshape to rank-0.
+        return lit.reshape(&[]).context("reshape scalar literal");
+    }
+    let d: Vec<i64> = dims.iter().map(|&v| v as i64).collect();
+    lit.reshape(&d).context("reshape literal")
+}
+
+/// Build an i32 literal.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.is_empty() {
+        return lit.reshape(&[]).context("reshape scalar literal");
+    }
+    let d: Vec<i64> = dims.iter().map(|&v| v as i64).collect();
+    lit.reshape(&d).context("reshape literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifact_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let s = literal_i32(&[7], &[]).unwrap();
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn engine_compiles_and_runs_layer_bench() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut eng = Engine::new(&artifact_dir()).unwrap();
+        assert!(eng.platform().to_lowercase().contains("cpu") || !eng.platform().is_empty());
+        // Find the smallest dense layer bench and run an identity check.
+        let name = "layer_dense_d256_t256";
+        if eng.manifest.get(name).is_err() {
+            return;
+        }
+        let d = 256;
+        let t = 256;
+        // x = I (padded), w = I  ->  y = x @ w^T = x.
+        let mut x = vec![0f32; t * d];
+        for i in 0..t.min(d) {
+            x[i * d + i] = 1.0;
+        }
+        let mut w = vec![0f32; d * d];
+        for i in 0..d {
+            w[i * d + i] = 1.0;
+        }
+        let args = vec![
+            literal_f32(&x, &[t, d]).unwrap(),
+            literal_f32(&w, &[d, d]).unwrap(),
+        ];
+        let out = eng.run(name, &args).unwrap();
+        assert_eq!(out.len(), 1);
+        let y = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(y.len(), t * d);
+        assert_eq!(y[0], 1.0);
+        assert_eq!(y[1], 0.0);
+        assert_eq!(eng.cached(), 1);
+        // Second run hits the cache.
+        let _ = eng.run(name, &args).unwrap();
+        assert_eq!(eng.cached(), 1);
+    }
+}

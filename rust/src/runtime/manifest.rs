@@ -1,0 +1,315 @@
+//! Parser for `artifacts/manifest.txt` (written by `python/compile/aot.py`).
+//!
+//! Line-oriented grammar (no JSON dependency offline):
+//!
+//! ```text
+//! artifact <name>
+//! model <preset> vocab <v> dim <d> layers <l> heads <h> ffn <f> maxseq <s>
+//! flavour <dense|lowrank|pifa> density <rho>
+//! phase <prefill|decode> batch <b> seq <t>
+//! param <name> <f32|i32> <dims...>          (repeated, canonical order)
+//! input <name> <f32|i32> <dims...>          (repeated, after params)
+//! end
+//! ```
+//! or, for layer microbenches:
+//! ```text
+//! artifact <name>
+//! layerbench <kind> d <d> tokens <t> density <rho>
+//! input ...
+//! end
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One named tensor (parameter or input).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// "f32" or "i32".
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// What kind of computation an artifact holds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArtifactKind {
+    Model {
+        preset: String,
+        vocab: usize,
+        dim: usize,
+        layers: usize,
+        heads: usize,
+        ffn: usize,
+        max_seq: usize,
+        flavour: String,
+        density: f64,
+        phase: String,
+        batch: usize,
+        seq: usize,
+    },
+    LayerBench {
+        kind: String,
+        d: usize,
+        tokens: usize,
+        density: f64,
+    },
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Model parameters in canonical feed order (empty for layer benches).
+    pub params: Vec<TensorSpec>,
+    /// Non-parameter inputs, fed after the params.
+    pub inputs: Vec<TensorSpec>,
+    /// Path to the `.hlo.txt`.
+    pub hlo_path: PathBuf,
+}
+
+/// The parsed manifest.
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn parse_tensor(rest: &[&str]) -> Result<TensorSpec> {
+    if rest.len() < 2 {
+        bail!("tensor line too short: {rest:?}");
+    }
+    let name = rest[0].to_string();
+    let dtype = rest[1].to_string();
+    if dtype != "f32" && dtype != "i32" {
+        bail!("unknown dtype {dtype}");
+    }
+    let dims = rest[2..]
+        .iter()
+        .map(|s| s.parse::<usize>().context("bad dim"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSpec { name, dtype, dims })
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut artifacts = HashMap::new();
+        let mut cur: Option<ArtifactSpec> = None;
+        let mut model_head: Option<(String, usize, usize, usize, usize, usize, usize)> = None;
+        let mut flavour: Option<(String, f64)> = None;
+
+        for (lineno, line) in text.lines().enumerate() {
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.is_empty() {
+                continue;
+            }
+            let ctx = || format!("manifest line {}: {line}", lineno + 1);
+            match toks[0] {
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("{}: nested artifact", ctx());
+                    }
+                    let name = toks[1].to_string();
+                    cur = Some(ArtifactSpec {
+                        hlo_path: dir.join(format!("{name}.hlo.txt")),
+                        name,
+                        kind: ArtifactKind::LayerBench {
+                            kind: String::new(),
+                            d: 0,
+                            tokens: 0,
+                            density: 0.0,
+                        },
+                        params: Vec::new(),
+                        inputs: Vec::new(),
+                    });
+                    model_head = None;
+                    flavour = None;
+                }
+                "model" => {
+                    model_head = Some((
+                        toks[1].to_string(),
+                        toks[3].parse()?,
+                        toks[5].parse()?,
+                        toks[7].parse()?,
+                        toks[9].parse()?,
+                        toks[11].parse()?,
+                        toks[13].parse()?,
+                    ));
+                }
+                "flavour" => {
+                    flavour = Some((toks[1].to_string(), toks[3].parse()?));
+                }
+                "phase" => {
+                    let (preset, vocab, dim, layers, heads, ffn, max_seq) =
+                        model_head.clone().with_context(ctx)?;
+                    let (fl, rho) = flavour.clone().with_context(ctx)?;
+                    let a = cur.as_mut().with_context(ctx)?;
+                    a.kind = ArtifactKind::Model {
+                        preset,
+                        vocab,
+                        dim,
+                        layers,
+                        heads,
+                        ffn,
+                        max_seq,
+                        flavour: fl,
+                        density: rho,
+                        phase: toks[1].to_string(),
+                        batch: toks[3].parse()?,
+                        seq: toks[5].parse()?,
+                    };
+                }
+                "layerbench" => {
+                    let a = cur.as_mut().with_context(ctx)?;
+                    a.kind = ArtifactKind::LayerBench {
+                        kind: toks[1].to_string(),
+                        d: toks[3].parse()?,
+                        tokens: toks[5].parse()?,
+                        density: toks[7].parse()?,
+                    };
+                }
+                "param" => {
+                    cur.as_mut().with_context(ctx)?.params.push(parse_tensor(&toks[1..])?);
+                }
+                "input" => {
+                    cur.as_mut().with_context(ctx)?.inputs.push(parse_tensor(&toks[1..])?);
+                }
+                "end" => {
+                    let a = cur.take().with_context(ctx)?;
+                    artifacts.insert(a.name.clone(), a);
+                }
+                other => bail!("{}: unknown directive {other}", ctx()),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest: unterminated artifact block");
+        }
+        Ok(Self { artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest ({} entries)", self.artifacts.len()))
+    }
+
+    /// All layer-bench artifacts, sorted by name.
+    pub fn layer_benches(&self) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<_> = self
+            .artifacts
+            .values()
+            .filter(|a| matches!(a.kind, ArtifactKind::LayerBench { .. }))
+            .collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact tiny-s_pifa55_decode_b1
+model tiny-s vocab 512 dim 64 layers 2 heads 4 ffn 128 maxseq 128
+flavour pifa density 0.55
+phase decode batch 1 seq 1
+param embed f32 512 64
+param head f32 512 64
+param final_norm f32 64
+param l0.q.w_p f32 24 64
+param l0.q.inv_perm i32 64
+input kv_k f32 2 1 128 64
+input tokens i32 1
+input pos i32
+end
+artifact layer_dense_d256_t256
+layerbench dense d 256 tokens 256 density 0.0
+input x f32 256 256
+input w f32 256 256
+end
+";
+
+    #[test]
+    fn parses_model_artifact() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let a = m.get("tiny-s_pifa55_decode_b1").unwrap();
+        match &a.kind {
+            ArtifactKind::Model { preset, dim, flavour, phase, batch, .. } => {
+                assert_eq!(preset, "tiny-s");
+                assert_eq!(*dim, 64);
+                assert_eq!(flavour, "pifa");
+                assert_eq!(phase, "decode");
+                assert_eq!(*batch, 1);
+            }
+            _ => panic!("wrong kind"),
+        }
+        assert_eq!(a.params.len(), 5);
+        assert_eq!(a.params[3].name, "l0.q.w_p");
+        assert_eq!(a.params[4].dtype, "i32");
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[2].dims.len(), 0); // scalar pos
+        assert!(a.hlo_path.ends_with("tiny-s_pifa55_decode_b1.hlo.txt"));
+    }
+
+    #[test]
+    fn parses_layer_bench() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let benches = m.layer_benches();
+        assert_eq!(benches.len(), 1);
+        match &benches[0].kind {
+            ArtifactKind::LayerBench { kind, d, tokens, .. } => {
+                assert_eq!(kind, "dense");
+                assert_eq!(*d, 256);
+                assert_eq!(*tokens, 256);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn element_count() {
+        let t = TensorSpec { name: "x".into(), dtype: "f32".into(), dims: vec![3, 4] };
+        assert_eq!(t.element_count(), 12);
+        let s = TensorSpec { name: "pos".into(), dtype: "i32".into(), dims: vec![] };
+        assert_eq!(s.element_count(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line\n", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("artifact a\nparam x f99 3\nend\n", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("artifact a\n", Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_lookup_fails() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+        }
+    }
+}

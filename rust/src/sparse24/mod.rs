@@ -1,0 +1,20 @@
+//! 2:4 semi-structured sparsity substrate (the paper's comparison target).
+//!
+//! NVIDIA's N:M scheme: in every group of 4 consecutive weights along the
+//! input dimension, exactly 2 are kept. Storage is the 50% surviving
+//! values plus a 2-bit column index per kept value — a 0.5625 memory ratio
+//! at fp16 (values `mn/2 * 2B` + metadata `mn/8 B` over `mn * 2B`), which
+//! is why the paper compares MPIFA at **0.55 density** (Tables 3/6/7).
+//!
+//! There is no sparse-tensor-core analogue on our hardware (or on TPUs —
+//! see DESIGN.md §2), so this module provides: the packed format, a CPU
+//! sparse GEMM that genuinely skips zeros, mask-selection from arbitrary
+//! importance scores (magnitude / Wanda / RIA plug in here), and the
+//! analytic Ampere device model used to reproduce the GPU columns of
+//! Tables 6/7.
+
+pub mod device_model;
+pub mod pack;
+
+pub use device_model::{AmpereModel, DeviceTiming};
+pub use pack::{Sparse24Mat, prune_mask_24};

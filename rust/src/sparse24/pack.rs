@@ -1,0 +1,242 @@
+//! Packed 2:4 storage and the CPU sparse GEMM.
+
+use crate::linalg::Mat;
+
+/// A 2:4 semi-structured sparse matrix (`m x n`, `n % 4 == 0`).
+///
+/// Per group of 4 input columns, 2 values survive. `values[row][g*2 + k]`
+/// holds the k-th survivor of group g; `meta` packs the two 2-bit column
+/// offsets of each group into one nibble (one byte per group for
+/// simplicity of access; the *accounted* metadata cost is the hardware's
+/// 2 bits per kept value — see [`Sparse24Mat::memory_bytes_fp16`]).
+#[derive(Clone)]
+pub struct Sparse24Mat {
+    pub m: usize,
+    pub n: usize,
+    /// Kept values, row-major: `m * n/2` entries.
+    values: Vec<f32>,
+    /// One byte per group (`m * n/4`): low 2 bits = first kept offset,
+    /// next 2 bits = second kept offset (offsets within the group, 0..4).
+    meta: Vec<u8>,
+}
+
+/// Compute the 2:4 keep-mask from an importance-score matrix: in every
+/// group of 4, keep the 2 highest-scoring entries. This is the shared
+/// selection core of magnitude / Wanda / RIA 2:4 pruning — they differ
+/// only in the score they feed in.
+pub fn prune_mask_24(scores: &Mat<f32>) -> Vec<bool> {
+    let (m, n) = scores.shape();
+    assert_eq!(n % 4, 0, "prune_mask_24: n must be a multiple of 4");
+    let mut mask = vec![false; m * n];
+    for i in 0..m {
+        let row = scores.row(i);
+        for g in 0..n / 4 {
+            let s = &row[g * 4..g * 4 + 4];
+            // Indices of the top-2 scores in the group.
+            let mut idx = [0usize, 1, 2, 3];
+            idx.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap_or(std::cmp::Ordering::Equal));
+            mask[i * n + g * 4 + idx[0]] = true;
+            mask[i * n + g * 4 + idx[1]] = true;
+        }
+    }
+    mask
+}
+
+impl Sparse24Mat {
+    /// Pack `w` keeping, per 4-group, the entries selected by `mask`
+    /// (exactly 2 per group, as produced by [`prune_mask_24`]).
+    pub fn pack(w: &Mat<f32>, mask: &[bool]) -> Self {
+        let (m, n) = w.shape();
+        assert_eq!(n % 4, 0, "Sparse24Mat: n must be a multiple of 4");
+        assert_eq!(mask.len(), m * n);
+        let groups = n / 4;
+        let mut values = Vec::with_capacity(m * n / 2);
+        let mut meta = Vec::with_capacity(m * groups);
+        for i in 0..m {
+            for g in 0..groups {
+                let mut offs = [0u8; 2];
+                let mut vals = [0f32; 2];
+                let mut k = 0;
+                for o in 0..4 {
+                    if mask[i * n + g * 4 + o] {
+                        assert!(k < 2, "Sparse24Mat: >2 kept in group ({i},{g})");
+                        offs[k] = o as u8;
+                        vals[k] = w[(i, g * 4 + o)];
+                        k += 1;
+                    }
+                }
+                assert_eq!(k, 2, "Sparse24Mat: <2 kept in group ({i},{g})");
+                values.push(vals[0]);
+                values.push(vals[1]);
+                meta.push(offs[0] | (offs[1] << 2));
+            }
+        }
+        Self { m, n, values, meta }
+    }
+
+    /// Pack using magnitude scores (the plain `Magnitude 2:4` baseline).
+    pub fn pack_magnitude(w: &Mat<f32>) -> Self {
+        let scores = w.map(|v| v.abs());
+        let mask = prune_mask_24(&scores);
+        Self::pack(w, &mask)
+    }
+
+    /// Materialize the masked dense matrix (testing / PPL evaluation).
+    pub fn to_dense(&self) -> Mat<f32> {
+        let mut w = Mat::zeros(self.m, self.n);
+        let groups = self.n / 4;
+        for i in 0..self.m {
+            for g in 0..groups {
+                let byte = self.meta[i * groups + g];
+                let o0 = (byte & 0b11) as usize;
+                let o1 = ((byte >> 2) & 0b11) as usize;
+                w[(i, g * 4 + o0)] = self.values[(i * groups + g) * 2];
+                w[(i, g * 4 + o1)] = self.values[(i * groups + g) * 2 + 1];
+            }
+        }
+        w
+    }
+
+    /// Transformer layout GEMM: `Y = X W^T` with `X (b x n)`, `Y (b x m)`.
+    /// Only the kept values are touched — half the MACs of dense.
+    pub fn apply_rows(&self, x: &Mat<f32>) -> Mat<f32> {
+        assert_eq!(x.cols(), self.n, "Sparse24Mat::apply_rows: dim mismatch");
+        let b = x.rows();
+        let groups = self.n / 4;
+        let mut y = Mat::zeros(b, self.m);
+        for bi in 0..b {
+            let xrow = x.row(bi);
+            let yrow = y.row_mut(bi);
+            for i in 0..self.m {
+                let mut acc = 0f32;
+                let vbase = (i * groups) * 2;
+                let mbase = i * groups;
+                for g in 0..groups {
+                    let byte = self.meta[mbase + g];
+                    let o0 = (byte & 0b11) as usize;
+                    let o1 = ((byte >> 2) & 0b11) as usize;
+                    let xg = &xrow[g * 4..g * 4 + 4];
+                    acc += self.values[vbase + g * 2] * xg[o0]
+                        + self.values[vbase + g * 2 + 1] * xg[o1];
+                }
+                yrow[i] = acc;
+            }
+        }
+        y
+    }
+
+    /// Paper layout: `Y = W X` with `X (n x b)`.
+    pub fn apply_cols(&self, x: &Mat<f32>) -> Mat<f32> {
+        self.apply_rows(&x.transpose()).transpose()
+    }
+
+    /// Stored float values (`m * n / 2`).
+    pub fn value_count(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Hardware-accounted memory at fp16: 2 bytes per value + 2 bits per
+    /// value of metadata — the 0.5625 ratio of Tables 6/7.
+    pub fn memory_bytes_fp16(&self) -> usize {
+        self.values.len() * 2 + self.values.len() / 4
+    }
+
+    /// Memory ratio vs the dense fp16 matrix.
+    pub fn memory_ratio_fp16(&self) -> f64 {
+        self.memory_bytes_fp16() as f64 / (self.m * self.n * 2) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_nt, Rng};
+
+    #[test]
+    fn mask_keeps_exactly_two_per_group() {
+        let mut rng = Rng::new(131);
+        let s: Mat<f32> = Mat::randn(6, 16, &mut rng);
+        let mask = prune_mask_24(&s);
+        for i in 0..6 {
+            for g in 0..4 {
+                let kept: usize =
+                    (0..4).filter(|&o| mask[i * 16 + g * 4 + o]).count();
+                assert_eq!(kept, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_keeps_top_scores() {
+        let s: Mat<f32> =
+            Mat::from_rows(&[vec![0.1, 0.9, 0.5, 0.2]]);
+        let mask = prune_mask_24(&s);
+        assert_eq!(mask, vec![false, true, true, false]);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(132);
+        let w: Mat<f32> = Mat::randn(8, 32, &mut rng);
+        let sp = Sparse24Mat::pack_magnitude(&w);
+        let dense = sp.to_dense();
+        // Every kept entry matches, every dropped entry is zero, and kept
+        // entries are the 2 largest |.| per group.
+        for i in 0..8 {
+            for g in 0..8 {
+                let orig: Vec<f32> = (0..4).map(|o| w[(i, g * 4 + o)]).collect();
+                let mut mags: Vec<(f32, usize)> =
+                    orig.iter().enumerate().map(|(o, v)| (v.abs(), o)).collect();
+                mags.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                let keep: Vec<usize> = vec![mags[0].1, mags[1].1];
+                for o in 0..4 {
+                    let d = dense[(i, g * 4 + o)];
+                    if keep.contains(&o) {
+                        assert_eq!(d, orig[o]);
+                    } else {
+                        assert_eq!(d, 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_gemm_matches_masked_dense() {
+        let mut rng = Rng::new(133);
+        let w: Mat<f32> = Mat::randn(12, 24, &mut rng);
+        let sp = Sparse24Mat::pack_magnitude(&w);
+        let dense = sp.to_dense();
+        let x: Mat<f32> = Mat::randn(5, 24, &mut rng);
+        let y_sparse = sp.apply_rows(&x);
+        let y_dense = matmul_nt(&x, &dense);
+        assert!(y_sparse.rel_fro_err(&y_dense) < 1e-5);
+    }
+
+    #[test]
+    fn apply_cols_layout() {
+        let mut rng = Rng::new(134);
+        let w: Mat<f32> = Mat::randn(8, 16, &mut rng);
+        let sp = Sparse24Mat::pack_magnitude(&w);
+        let x: Mat<f32> = Mat::randn(16, 3, &mut rng);
+        let y = sp.apply_cols(&x);
+        let y_ref = crate::linalg::matmul(&sp.to_dense(), &x);
+        assert!(y.rel_fro_err(&y_ref) < 1e-5);
+    }
+
+    #[test]
+    fn memory_ratio_is_09_16ths() {
+        let mut rng = Rng::new(135);
+        let w: Mat<f32> = Mat::randn(16, 64, &mut rng);
+        let sp = Sparse24Mat::pack_magnitude(&w);
+        assert_eq!(sp.value_count(), 16 * 64 / 2);
+        assert!((sp.memory_ratio_fp16() - 0.5625).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 4")]
+    fn rejects_bad_width() {
+        let w: Mat<f32> = Mat::zeros(2, 6);
+        let _ = Sparse24Mat::pack_magnitude(&w);
+    }
+}

@@ -1,0 +1,129 @@
+//! Fine-tuning after pruning (paper Table 4, Appendix B.3).
+//!
+//! Updates only the pruned parameters (low-rank / PIFA factors or masked
+//! 2:4 values); embeddings, norms, and the head stay fixed — matching the
+//! paper's setup. Works through any [`crate::model::LinearRepr`], which is
+//! the paper's point: low-rank/PIFA get true gradient steps in factored
+//! form (both passes accelerated), 2:4 only gets masked dense steps.
+
+use super::optimizer::{lr_schedule, Adam, ParamFilter};
+use crate::data::batch::TokenDataset;
+use crate::linalg::Rng;
+use crate::model::backward::loss_and_grads;
+use crate::model::transformer::Transformer;
+
+/// Fine-tuning configuration (paper: lr 3e-6, warmup 5%, linear decay; we
+/// scale the LR up for the tiny stand-ins).
+#[derive(Clone, Debug)]
+pub struct FinetuneConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub peak_lr: f32,
+    pub seed: u64,
+}
+
+impl Default for FinetuneConfig {
+    fn default() -> Self {
+        Self { steps: 120, batch: 4, peak_lr: 3e-4, seed: 0 }
+    }
+}
+
+/// Fine-tune a compressed model in place; returns (initial, final) mean
+/// batch loss.
+pub fn finetune_compressed(
+    model: &mut Transformer,
+    data: &TokenDataset,
+    cfg: &FinetuneConfig,
+) -> (f32, f32) {
+    let mut rng = Rng::new(cfg.seed ^ 0xF1DE);
+    let mut adam = Adam::new(cfg.peak_lr);
+    let warmup = (cfg.steps / 20).max(1);
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for step in 0..cfg.steps {
+        let mut batch_loss = 0f32;
+        let mut acc = None;
+        for _ in 0..cfg.batch {
+            let (x, y) = data.sample_train(&mut rng);
+            let (l, g) = loss_and_grads(model, &x, &y);
+            batch_loss += l;
+            match &mut acc {
+                None => acc = Some(g),
+                Some(a) => a.add_assign(&g),
+            }
+        }
+        let mut grads = acc.unwrap();
+        grads.scale(1.0 / cfg.batch as f32);
+        batch_loss /= cfg.batch as f32;
+        let gn = grads.global_norm();
+        if gn.is_finite() && gn > 1.0 {
+            grads.scale(1.0 / gn);
+        }
+        let lr = lr_schedule(step, cfg.steps, warmup, cfg.peak_lr);
+        adam.step(model, &grads, lr, ParamFilter::PrunedLinearsOnly);
+        if step == 0 {
+            first = batch_loss;
+        }
+        last = batch_loss;
+    }
+    (first, last)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{generate_corpus, Flavour};
+    use crate::data::vocab::Vocab;
+    use crate::linalg::svd;
+    use crate::model::config::ModelConfig;
+    use crate::model::linear::LinearRepr;
+    use crate::model::transformer::ModuleKind;
+
+    #[test]
+    fn finetune_improves_compressed_model() {
+        let v = Vocab::new();
+        let tokens = generate_corpus(&v, Flavour::Wiki, 15_000, 21);
+        let data = TokenDataset::new(tokens, 24);
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 512,
+            dim: 32,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 48,
+            max_seq: 24,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(221);
+        let mut model = Transformer::new_random(&cfg, &mut rng);
+        // Brief pre-train so compression has something to destroy.
+        let tc = super::super::trainer::TrainConfig {
+            steps: 25,
+            batch: 2,
+            peak_lr: 3e-3,
+            warmup: 5,
+            grad_clip: 1.0,
+            seed: 2,
+            log_every: 0,
+        };
+        super::super::trainer::train(&mut model, &data, &tc);
+
+        // Crude low-rank compression of every linear (rank = 50%).
+        for li in 0..cfg.n_layers {
+            for kind in ModuleKind::ALL {
+                let w = model.module(li, kind).to_dense();
+                let r = (w.rows().min(w.cols()) / 2).max(1);
+                let (u, vt) = svd(&w).truncate(r);
+                *model.module_mut(li, kind) = LinearRepr::LowRank { u, vt };
+            }
+        }
+        let embed_before = model.embed.clone();
+        let ft = FinetuneConfig { steps: 25, batch: 2, peak_lr: 1e-3, seed: 3 };
+        let (first, last) = finetune_compressed(&mut model, &data, &ft);
+        assert!(last < first, "fine-tuning made no progress: {first} -> {last}");
+        assert_eq!(model.embed, embed_before, "embeddings must stay fixed");
+        // Representation is still low-rank (not densified).
+        assert_eq!(model.module(0, ModuleKind::Q).kind_name(), "lowrank");
+    }
+}

@@ -1,0 +1,9 @@
+//! Training and fine-tuning (Adam, schedules, the Table 4 fine-tuner).
+
+pub mod finetune;
+pub mod optimizer;
+pub mod trainer;
+
+pub use finetune::{finetune_compressed, FinetuneConfig};
+pub use optimizer::{visit_param_grads, Adam, ParamFilter};
+pub use trainer::{train, TrainConfig, TrainReport};

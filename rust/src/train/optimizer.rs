@@ -1,0 +1,243 @@
+//! Adam optimizer over the model's (representation-agnostic) parameters.
+//!
+//! The offline crate set has no autodiff or optimizer crates; parameters
+//! are visited as flat `&mut [f32]` slices paired with gradient slices,
+//! each tensor identified by a stable index so Adam's moment buffers
+//! persist across steps.
+
+use crate::linalg::Mat;
+use crate::model::backward::ModelGrads;
+use crate::model::linear::{LinearGrad, LinearRepr};
+use crate::model::transformer::Transformer;
+use std::collections::HashMap;
+
+/// Which parameters an optimizer step touches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamFilter {
+    /// Everything (pre-training).
+    All,
+    /// Only the prunable block linears — the paper's fine-tuning setup
+    /// ("updates all pruned parameters ... while keeping other parameters,
+    /// such as embeddings, fixed").
+    PrunedLinearsOnly,
+}
+
+/// Visit `(tensor_id, param_slice, grad_slice)` for every parameter tensor
+/// selected by `filter`. Tensor ids are stable across calls for a given
+/// model structure.
+pub fn visit_param_grads(
+    model: &mut Transformer,
+    grads: &ModelGrads,
+    filter: ParamFilter,
+    f: &mut impl FnMut(usize, &mut [f32], &[f32]),
+) {
+    let mut id = 0usize;
+    let visit_mat = |id: &mut usize, p: &mut Mat<f32>, g: &Mat<f32>, on: bool, f: &mut dyn FnMut(usize, &mut [f32], &[f32])| {
+        if on {
+            debug_assert_eq!(p.shape(), g.shape());
+            f(*id, p.as_mut_slice(), g.as_slice());
+        }
+        *id += 1;
+    };
+    let all = filter == ParamFilter::All;
+
+    visit_mat(&mut id, &mut model.embed, &grads.embed, all, f);
+    visit_mat(&mut id, &mut model.head, &grads.head, all, f);
+    if all {
+        f(id, &mut model.final_norm, &grads.final_norm);
+    }
+    id += 1;
+
+    for (b, gb) in model.blocks.iter_mut().zip(grads.blocks.iter()) {
+        if all {
+            f(id, &mut b.attn_norm, &gb.attn_norm);
+        }
+        id += 1;
+        if all {
+            f(id, &mut b.mlp_norm, &gb.mlp_norm);
+        }
+        id += 1;
+        for (lin, gl) in [
+            (&mut b.attn.wq, &gb.wq),
+            (&mut b.attn.wk, &gb.wk),
+            (&mut b.attn.wv, &gb.wv),
+            (&mut b.attn.wo, &gb.wo),
+            (&mut b.mlp.gate, &gb.gate),
+            (&mut b.mlp.up, &gb.up),
+            (&mut b.mlp.down, &gb.down),
+        ] {
+            match (lin, gl) {
+                (LinearRepr::Dense(w), LinearGrad::Dense(g)) => {
+                    visit_mat(&mut id, w, g, true, f);
+                }
+                (LinearRepr::LowRank { u, vt }, LinearGrad::LowRank { du, dvt }) => {
+                    visit_mat(&mut id, u, du, true, f);
+                    visit_mat(&mut id, vt, dvt, true, f);
+                }
+                (LinearRepr::Pifa(p), LinearGrad::Pifa { dw_p, dc }) => {
+                    visit_mat(&mut id, &mut p.w_p, dw_p, true, f);
+                    visit_mat(&mut id, &mut p.c, dc, true, f);
+                }
+                (LinearRepr::Sparse24(s), LinearGrad::Sparse24(g)) => {
+                    // Dense round-trip: update kept values, re-pack.
+                    let mut w = s.to_dense();
+                    let mask: Vec<bool> = w.as_slice().iter().map(|&v| v != 0.0).collect();
+                    f(id, w.as_mut_slice(), g.as_slice());
+                    // Dropped entries must stay zero even if Adam moved them
+                    // (their grads are masked to 0, but moments could drift).
+                    for (v, &keep) in w.as_mut_slice().iter_mut().zip(mask.iter()) {
+                        if !keep {
+                            *v = 0.0;
+                        }
+                    }
+                    *s = crate::sparse24::Sparse24Mat::pack(&w, &mask);
+                    id += 1;
+                }
+                _ => panic!("visit_param_grads: repr/grad mismatch"),
+            }
+        }
+    }
+}
+
+/// Adam with decoupled weight decay (AdamW) and bias correction.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    step: u64,
+    moments: HashMap<usize, (Vec<f32>, Vec<f32>)>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            step: 0,
+            moments: HashMap::new(),
+        }
+    }
+
+    /// One optimizer step with the given (possibly scheduled) LR.
+    pub fn step(
+        &mut self,
+        model: &mut Transformer,
+        grads: &ModelGrads,
+        lr: f32,
+        filter: ParamFilter,
+    ) {
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        let (b1, b2, eps, wd) = (self.beta1, self.beta2, self.eps, self.weight_decay);
+        let moments = &mut self.moments;
+        visit_param_grads(model, grads, filter, &mut |tid, p, g| {
+            let (m, v) = moments
+                .entry(tid)
+                .or_insert_with(|| (vec![0f32; p.len()], vec![0f32; p.len()]));
+            assert_eq!(m.len(), p.len(), "tensor {tid} changed size");
+            for i in 0..p.len() {
+                m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                p[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * p[i]);
+            }
+        });
+    }
+}
+
+/// Linear warmup then cosine decay to 10% of peak.
+pub fn lr_schedule(step: usize, total: usize, warmup: usize, peak: f32) -> f32 {
+    if step < warmup {
+        return peak * (step + 1) as f32 / warmup as f32;
+    }
+    let p = (step - warmup) as f32 / (total - warmup).max(1) as f32;
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * p).cos());
+    peak * (0.1 + 0.9 * cos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::model::backward::loss_and_grads;
+    use crate::model::config::ModelConfig;
+
+    fn tiny_model(seed: u64) -> Transformer {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 24,
+            dim: 16,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 20,
+            max_seq: 12,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(seed);
+        Transformer::new_random(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn adam_reduces_loss_over_steps() {
+        let mut model = tiny_model(201);
+        let tokens = [1usize, 5, 9, 2, 7, 11, 4, 8];
+        let targets = [5usize, 9, 2, 7, 11, 4, 8, 3];
+        let mut adam = Adam::new(1e-2);
+        let (l0, _) = loss_and_grads(&model, &tokens, &targets);
+        let mut last = l0;
+        for _ in 0..20 {
+            let (l, g) = loss_and_grads(&model, &tokens, &targets);
+            adam.step(&mut model, &g, 1e-2, ParamFilter::All);
+            last = l;
+        }
+        assert!(last < l0 * 0.5, "Adam failed to fit: {l0} -> {last}");
+    }
+
+    #[test]
+    fn pruned_filter_freezes_embeddings() {
+        let mut model = tiny_model(202);
+        let embed_before = model.embed.clone();
+        let head_before = model.head.clone();
+        let wq_before = model.blocks[0].attn.wq.to_dense();
+        let (_, g) = loss_and_grads(&model, &[1, 2, 3, 4], &[2, 3, 4, 5]);
+        let mut adam = Adam::new(1e-2);
+        adam.step(&mut model, &g, 1e-2, ParamFilter::PrunedLinearsOnly);
+        assert_eq!(model.embed, embed_before, "embeddings must stay fixed");
+        assert_eq!(model.head, head_before, "head must stay fixed");
+        assert!(
+            model.blocks[0].attn.wq.to_dense().fro_dist(&wq_before) > 0.0,
+            "linears must move"
+        );
+    }
+
+    #[test]
+    fn schedule_shape() {
+        let peak = 1e-3;
+        assert!(lr_schedule(0, 100, 10, peak) < peak * 0.2);
+        assert!((lr_schedule(9, 100, 10, peak) - peak).abs() < 1e-9);
+        assert!(lr_schedule(99, 100, 10, peak) < peak * 0.2);
+        // Monotone decay after warmup.
+        assert!(lr_schedule(20, 100, 10, peak) > lr_schedule(60, 100, 10, peak));
+    }
+
+    #[test]
+    fn moments_persist_across_steps() {
+        let mut model = tiny_model(203);
+        let (_, g) = loss_and_grads(&model, &[1, 2, 3], &[2, 3, 4]);
+        let mut adam = Adam::new(1e-3);
+        adam.step(&mut model, &g, 1e-3, ParamFilter::All);
+        let n1 = adam.moments.len();
+        adam.step(&mut model, &g, 1e-3, ParamFilter::All);
+        assert_eq!(adam.moments.len(), n1, "moment buffers should be reused");
+        assert!(n1 > 0);
+    }
+}

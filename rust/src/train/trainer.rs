@@ -1,0 +1,135 @@
+//! Pre-training loop for the tiny stand-in models.
+
+use super::optimizer::{lr_schedule, Adam, ParamFilter};
+use crate::data::batch::TokenDataset;
+use crate::linalg::Rng;
+use crate::model::backward::loss_and_grads;
+use crate::model::transformer::Transformer;
+
+/// Training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub peak_lr: f32,
+    pub warmup: usize,
+    pub grad_clip: f32,
+    pub seed: u64,
+    /// Log every k steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 300,
+            batch: 4,
+            peak_lr: 3e-3,
+            warmup: 20,
+            grad_clip: 1.0,
+            seed: 0,
+            log_every: 25,
+        }
+    }
+}
+
+/// Loss-curve record of one run (EXPERIMENTS.md end-to-end validation).
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// (step, mean batch loss).
+    pub losses: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub elapsed_secs: f64,
+}
+
+/// Train `model` in place; returns the loss curve.
+pub fn train(model: &mut Transformer, data: &TokenDataset, cfg: &TrainConfig) -> TrainReport {
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(cfg.seed ^ 0x7EA1);
+    let mut adam = Adam::new(cfg.peak_lr);
+    let mut losses = Vec::new();
+    let mut final_loss = f32::NAN;
+    for step in 0..cfg.steps {
+        // Accumulate gradients over the batch.
+        let mut batch_loss = 0f32;
+        let mut acc = None;
+        for _ in 0..cfg.batch {
+            let (x, y) = data.sample_train(&mut rng);
+            let (l, g) = loss_and_grads(model, &x, &y);
+            batch_loss += l;
+            match &mut acc {
+                None => acc = Some(g),
+                Some(a) => a.add_assign(&g),
+            }
+        }
+        let mut grads = acc.unwrap();
+        grads.scale(1.0 / cfg.batch as f32);
+        batch_loss /= cfg.batch as f32;
+
+        // Global-norm clipping.
+        let gn = grads.global_norm();
+        if gn.is_finite() && gn > cfg.grad_clip {
+            grads.scale(cfg.grad_clip / gn);
+        }
+
+        let lr = lr_schedule(step, cfg.steps, cfg.warmup, cfg.peak_lr);
+        adam.step(model, &grads, lr, ParamFilter::All);
+
+        final_loss = batch_loss;
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            losses.push((step, batch_loss));
+            eprintln!(
+                "[train {}] step {step:>5} loss {batch_loss:.4} lr {lr:.2e} gnorm {gn:.3}",
+                model.cfg.name
+            );
+        } else if cfg.log_every == 0 && (step % 10 == 0 || step + 1 == cfg.steps) {
+            losses.push((step, batch_loss));
+        }
+    }
+    TrainReport { losses, final_loss, elapsed_secs: t0.elapsed().as_secs_f64() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{generate_corpus, Flavour};
+    use crate::data::vocab::Vocab;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn short_training_reduces_loss() {
+        let v = Vocab::new();
+        let tokens = generate_corpus(&v, Flavour::Wiki, 20_000, 11);
+        let data = TokenDataset::new(tokens, 32);
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 512,
+            dim: 32,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 48,
+            max_seq: 32,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(211);
+        let mut model = Transformer::new_random(&cfg, &mut rng);
+        let tc = TrainConfig {
+            steps: 30,
+            batch: 2,
+            peak_lr: 3e-3,
+            warmup: 5,
+            grad_clip: 1.0,
+            seed: 1,
+            log_every: 0,
+        };
+        let report = train(&mut model, &data, &tc);
+        let first = report.losses.first().unwrap().1;
+        assert!(
+            report.final_loss < first * 0.9,
+            "training made no progress: {first} -> {}",
+            report.final_loss
+        );
+        assert!(report.final_loss.is_finite());
+    }
+}

@@ -1,0 +1,244 @@
+//! Cross-module integration tests + seeded property tests.
+//!
+//! The offline crate set has no proptest, so properties are checked over
+//! seeded randomized sweeps (deterministic, wide coverage).
+
+use pifa::compress::mpifa::{mpifa_compress_model, CompressConfig};
+use pifa::data::batch::{Split, TokenDataset};
+use pifa::data::corpus::{generate_corpus, Flavour};
+use pifa::data::vocab::Vocab;
+use pifa::eval::ppl::perplexity;
+use pifa::linalg::{matmul, matmul_nt, Mat, Rng};
+use pifa::model::config::ModelConfig;
+use pifa::model::serialize::{load_checkpoint, save_checkpoint};
+use pifa::model::transformer::Transformer;
+use pifa::pifa::{pivoting_factorization, PivotStrategy};
+use pifa::sparse24::{prune_mask_24, Sparse24Mat};
+use pifa::train::trainer::{train, TrainConfig};
+
+/// Property: PIFA is lossless for every shape/rank combination.
+#[test]
+fn prop_pifa_lossless_sweep() {
+    let mut rng = Rng::new(9001);
+    for trial in 0..40 {
+        let m = 4 + rng.below(60);
+        let n = 4 + rng.below(60);
+        let rmax = m.min(n);
+        let r = 1 + rng.below(rmax);
+        let w: Mat<f64> = Mat::rand_low_rank(m, n, r, &mut rng);
+        let strat = if trial % 2 == 0 { PivotStrategy::QrColumnPivot } else { PivotStrategy::Lu };
+        let layer = pivoting_factorization(&w, r, strat)
+            .unwrap_or_else(|e| panic!("trial {trial} ({m},{n},{r}): {e}"));
+        let err = layer.reconstruct().rel_fro_err(&w);
+        assert!(err < 1e-6, "trial {trial} ({m},{n},{r},{strat:?}): err {err}");
+        // Parameter identity: r(m+n) - r^2.
+        assert_eq!(layer.param_count(), r * (m + n) - r * r);
+        // Inference equivalence on a random batch.
+        let x: Mat<f64> = Mat::randn(3, n, &mut rng);
+        let y_ref = matmul_nt(&x, &w);
+        assert!(layer.apply_rows(&x).rel_fro_err(&y_ref) < 1e-6);
+    }
+}
+
+/// Property: PIFA layer composes with the linear algebra identities the
+/// paper relies on — (U V) X == scatter(W_p X, C W_p X).
+#[test]
+fn prop_pifa_matches_factored_product() {
+    let mut rng = Rng::new(9002);
+    for _ in 0..20 {
+        let m = 8 + rng.below(40);
+        let n = 8 + rng.below(40);
+        let r = 1 + rng.below(m.min(n) / 2 + 1);
+        let u: Mat<f64> = Mat::randn(m, r, &mut rng);
+        let vt: Mat<f64> = Mat::randn(r, n, &mut rng);
+        let w = matmul(&u, &vt);
+        let layer = pivoting_factorization(&w, r, PivotStrategy::QrColumnPivot).unwrap();
+        let x: Mat<f64> = Mat::randn(n, 5, &mut rng);
+        let y1 = layer.apply_cols(&x);
+        let y2 = matmul(&u, &matmul(&vt, &x));
+        assert!(y1.rel_fro_err(&y2) < 1e-7);
+    }
+}
+
+/// Property: 2:4 packing invariants across random masks and widths.
+#[test]
+fn prop_sparse24_invariants() {
+    let mut rng = Rng::new(9003);
+    for _ in 0..25 {
+        let m = 1 + rng.below(24);
+        let n = 4 * (1 + rng.below(16));
+        let w: Mat<f32> = Mat::randn(m, n, &mut rng);
+        let scores: Mat<f32> = Mat::randn(m, n, &mut rng);
+        let mask = prune_mask_24(&scores);
+        let sp = Sparse24Mat::pack(&w, &mask);
+        assert_eq!(sp.value_count(), m * n / 2);
+        let dense = sp.to_dense();
+        // Exactly half the entries survive, and survivors match w.
+        let nnz = dense.as_slice().iter().filter(|&&v| v != 0.0).count();
+        assert!(nnz <= m * n / 2);
+        for i in 0..m {
+            for j in 0..n {
+                let d = dense[(i, j)];
+                if mask[i * n + j] {
+                    assert_eq!(d, w[(i, j)]);
+                }
+            }
+        }
+        // GEMM equivalence.
+        let x: Mat<f32> = Mat::randn(3, n, &mut rng);
+        assert!(sp.apply_rows(&x).rel_fro_err(&matmul_nt(&x, &dense)) < 1e-5);
+    }
+}
+
+/// Property: density→rank→density round trips within tolerance over a grid.
+#[test]
+fn prop_density_rank_roundtrip() {
+    let mut rng = Rng::new(9004);
+    for _ in 0..50 {
+        let m = 32 + rng.below(480);
+        let n = 32 + rng.below(480);
+        let rho = 0.2 + 0.7 * rng.uniform();
+        let r = pifa::pifa::rank_for_density_pifa(m, n, rho);
+        let got = pifa::pifa::density_of_pifa_rank(m, n, r);
+        assert!(
+            (got - rho).abs() < 0.05 || r == 1 || r == m.min(n),
+            "({m},{n},{rho:.3}) -> r={r} -> {got:.3}"
+        );
+    }
+}
+
+fn tiny_trained() -> (Transformer, TokenDataset) {
+    let v = Vocab::new();
+    let tokens = generate_corpus(&v, Flavour::Wiki, 20_000, 31337);
+    let data = TokenDataset::new(tokens, 24);
+    let cfg = ModelConfig {
+        name: "it".into(),
+        vocab: 512,
+        dim: 32,
+        n_layers: 2,
+        n_heads: 2,
+        ffn_hidden: 48,
+        max_seq: 24,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+    };
+    let mut rng = Rng::new(31338);
+    let mut model = Transformer::new_random(&cfg, &mut rng);
+    let tc = TrainConfig {
+        steps: 60,
+        batch: 2,
+        peak_lr: 5e-3,
+        warmup: 10,
+        grad_clip: 1.0,
+        seed: 3,
+        log_every: 0,
+    };
+    train(&mut model, &data, &tc);
+    (model, data)
+}
+
+/// Integration: train → compress → checkpoint round-trip → identical PPL.
+#[test]
+fn train_compress_save_load_roundtrip() {
+    let (model, data) = tiny_trained();
+    let calib = data.calibration_windows(8, 4);
+    let (compressed, _) = mpifa_compress_model(&model, &calib, &CompressConfig::mpifa(0.7)).unwrap();
+    let ppl_before = perplexity(&compressed, &data, Split::Test);
+
+    let path = std::env::temp_dir().join(format!("pifa_it_{}.ckpt", std::process::id()));
+    save_checkpoint(&compressed, &path).unwrap();
+    let loaded = load_checkpoint(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let ppl_after = perplexity(&loaded, &data, Split::Test);
+    assert!(
+        (ppl_before - ppl_after).abs() < 1e-6,
+        "checkpoint changed PPL: {ppl_before} vs {ppl_after}"
+    );
+    assert_eq!(loaded.density(), compressed.density());
+}
+
+/// Integration: density monotonicity — more parameters, no worse PPL
+/// (within noise) for MPIFA on a trained model.
+#[test]
+fn density_monotonicity() {
+    let (model, data) = tiny_trained();
+    let calib = data.calibration_windows(12, 5);
+    let (m_high, _) = mpifa_compress_model(&model, &calib, &CompressConfig::mpifa(0.9)).unwrap();
+    let (m_low, _) = mpifa_compress_model(&model, &calib, &CompressConfig::mpifa(0.45)).unwrap();
+    let p_high = perplexity(&m_high, &data, Split::Test);
+    let p_low = perplexity(&m_low, &data, Split::Test);
+    assert!(
+        p_high <= p_low * 1.05,
+        "0.9 density ({p_high}) should beat 0.45 density ({p_low})"
+    );
+}
+
+/// Integration: the whole PJRT path — checkpoint → ModelRunner → greedy
+/// generation == Rust-native generation (requires `make artifacts`).
+#[test]
+fn pjrt_generation_parity_with_native() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("tiny-s_dense_prefill_b1_t64.hlo.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use pifa::coordinator::{GenerationEngine, GenerationMode};
+    use pifa::runtime::{Engine, ModelRunner};
+    let cfg = ModelConfig::tiny_s();
+    let mut rng = Rng::new(9100);
+    let model = Transformer::new_random(&cfg, &mut rng);
+    let mut engine = Engine::new(&dir).unwrap();
+    let runner = ModelRunner::new(
+        &mut engine,
+        &model,
+        "tiny-s_dense_prefill_b1_t64",
+        "tiny-s_dense_decode_b1",
+    )
+    .unwrap();
+    let gen = GenerationEngine::new(runner, GenerationMode::KvCache);
+    let prompt = vec![2usize, 40, 7, 19];
+    let (outs, _) = gen.generate_batch(&mut engine, &[prompt.clone()], 8).unwrap();
+    assert_eq!(outs[0], model.generate(&prompt, 8));
+}
+
+/// Integration: PIFA-flavour PJRT artifact accepts an MPIFA-compressed
+/// model's weights and generates identically to the native forward.
+#[test]
+fn pjrt_pifa_artifact_serves_compressed_model() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("tiny-s_pifa55_prefill_b1_t64.hlo.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use pifa::runtime::{Engine, ModelRunner};
+    let v = Vocab::new();
+    let tokens = generate_corpus(&v, Flavour::Wiki, 20_000, 555);
+    let data = TokenDataset::new(tokens, 32);
+    let cfg = ModelConfig::tiny_s();
+    let mut rng = Rng::new(9200);
+    let model = Transformer::new_random(&cfg, &mut rng);
+    let calib = data.calibration_windows(8, 6);
+    let (compressed, _) = mpifa_compress_model(&model, &calib, &CompressConfig::mpifa(0.55)).unwrap();
+
+    let mut engine = Engine::new(&dir).unwrap();
+    let runner = ModelRunner::new(
+        &mut engine,
+        &compressed,
+        "tiny-s_pifa55_prefill_b1_t64",
+        "tiny-s_pifa55_decode_b1",
+    )
+    .unwrap();
+    let prompt = [3usize, 9, 27, 81];
+    let (logits, _) = runner.prefill(&mut engine, &prompt).unwrap();
+    let last = runner.logits_at(&logits, prompt.len() - 1);
+    let mut padded = prompt.to_vec();
+    padded.resize(64, 0);
+    let native = compressed.forward(&padded, None);
+    for j in 0..cfg.vocab {
+        let (a, b) = (last[j], native[(prompt.len() - 1, j)]);
+        assert!(
+            (a - b).abs() < 3e-2_f32.max(b.abs() * 0.02),
+            "pifa artifact logit {j}: {a} vs {b}"
+        );
+    }
+}
