@@ -1,5 +1,5 @@
-//! The full compression pipeline on a trained model: SVD-LLM vs MPIFA vs
-//! the Table 5 ablation arms, at one density.
+//! The full compression pipeline on a trained model: the registered
+//! method presets at one density, resolved by name through the registry.
 //!
 //! ```bash
 //! PIFA_FAST=1 cargo run --release --example compress_pipeline
@@ -7,11 +7,11 @@
 //!
 //! Trains (or loads the cached) tiny-s stand-in, compresses it with each
 //! method at 60% density, and prints perplexities + achieved densities —
-//! a one-screen miniature of Tables 2/5.
+//! a one-screen miniature of Tables 2/5 (plus the hybrid low-rank + 2:4
+//! preset, which is just one more registry entry).
 
-use pifa::bench::experiments::{
-    compress_with_method, ensure_trained_model, test_ppl, wiki_dataset, Method,
-};
+use pifa::bench::experiments::{ensure_trained_model, test_ppl, wiki_dataset};
+use pifa::compress::registry;
 
 fn main() -> anyhow::Result<()> {
     let data = wiki_dataset();
@@ -19,34 +19,29 @@ fn main() -> anyhow::Result<()> {
     let base = test_ppl(&model, &data);
     println!("tiny-s dense: test ppl {base:.3}\n");
     println!(
-        "{:<10} {:>10} {:>10} {:>8} {:>9}",
+        "{:<12} {:>10} {:>10} {:>8} {:>9}",
         "method", "ppl", "gap", "density", "seconds"
     );
 
     let density = 0.6;
-    for method in [
-        Method::Svd,
-        Method::Asvd,
-        Method::SvdLlmW,
-        Method::SvdLlmWU,
-        Method::WPlusM,
-        Method::Mpifa,
-    ] {
+    for method in ["svd", "asvd", "w", "w+u", "w+m", "mpifa", "lowrank-s24"] {
+        let compressor = registry::get(method)?;
         let t0 = std::time::Instant::now();
-        let compressed = compress_with_method(&model, &data, method, density)?;
+        let out = compressor.compress(&model, &data, density)?;
         let secs = t0.elapsed().as_secs_f64();
-        let ppl = test_ppl(&compressed, &data);
+        let ppl = test_ppl(&out.model, &data);
         println!(
-            "{:<10} {:>10.3} {:>10.3} {:>8.3} {:>8.1}s",
-            method.name(),
+            "{:<12} {:>10.3} {:>10.3} {:>8.3} {:>8.1}s",
+            compressor.label(),
             ppl,
             ppl - base,
-            compressed.density(),
+            out.model.density(),
             secs
         );
     }
     println!(
         "\nExpected ordering (paper Tables 2/5): SVD >> ASVD >= W >= W+U > W+M > MPIFA"
     );
+    println!("(methods available: {})", registry::names().join(", "));
     Ok(())
 }

@@ -8,7 +8,8 @@
 //! PIFA_FAST=1 cargo run --release --example serve_e2e
 //! ```
 
-use pifa::bench::experiments::{compress_with_method, ensure_trained_model, wiki_dataset, Method};
+use pifa::bench::experiments::{ensure_trained_model, wiki_dataset};
+use pifa::compress::registry;
 use pifa::coordinator::{BatcherConfig, GenRequest, GenerationEngine, GenerationMode, Server};
 use pifa::data::vocab::Vocab;
 use pifa::runtime::{Engine, ModelRunner};
@@ -24,7 +25,9 @@ fn main() -> anyhow::Result<()> {
     let data = wiki_dataset();
     let model = ensure_trained_model("tiny-s")?;
     println!("compressing tiny-s with MPIFA @ 0.55 density...");
-    let compressed = compress_with_method(&model, &data, Method::Mpifa, 0.55)?;
+    let out = registry::compress("mpifa", &model, &data, 0.55)?;
+    println!("pipeline: {}", out.spec.describe());
+    let compressed = out.model;
     println!(
         "weights: dense {:.2} MB -> MPIFA {:.2} MB (fp16-accounted)",
         model.memory_bytes_fp16() as f64 / 1e6,

@@ -1,12 +1,11 @@
 //! Shared experiment plumbing for the paper-reproduction benches, the CLI
-//! `tables` subcommand, and the examples: train-once-cached models, the
-//! unified compression-method enum, and PPL evaluation over both corpora.
+//! `tables` subcommand, and the examples: train-once-cached models and PPL
+//! evaluation over both corpora.
+//!
+//! Compression-method dispatch lives in [`crate::compress::registry`]; the
+//! helpers here only resolve names through it ([`compress_by_name`]).
 
-use crate::baselines::prune::{EspaceVariant, PruneAlgo};
-use crate::baselines::semistructured::{compress_model_24, Score24};
-use crate::baselines::structured::{structured_prune_model, StructuredConfig};
-use crate::baselines::ns::mpifa_ns_config;
-use crate::compress::mpifa::{mpifa_compress_model, CompressConfig};
+use crate::compress::registry;
 use crate::data::batch::{Split, TokenDataset};
 use crate::data::corpus::{generate_corpus, Flavour};
 use crate::data::vocab::Vocab;
@@ -24,9 +23,10 @@ pub const CORPUS_TOKENS: usize = 60_000;
 /// Sequence length for training/eval (stand-in for the paper's 2048).
 pub const SEQ_LEN: usize = 64;
 
-/// `PIFA_FAST=1` trims the experiment grids (CI-speed runs).
+/// `PIFA_FAST=1` trims the experiment grids (CI-speed runs). Single
+/// source of truth lives in the pipeline layer.
 pub fn fast_mode() -> bool {
-    std::env::var("PIFA_FAST").map(|v| v == "1").unwrap_or(false)
+    crate::compress::pipeline::fast_mode()
 }
 
 /// Models included in table runs: `PIFA_FULL=1` runs the whole lineup,
@@ -109,153 +109,21 @@ pub fn ensure_trained_model(name: &str) -> Result<Transformer> {
     Ok(model)
 }
 
-/// Every compression method in the paper's evaluation.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Method {
-    /// Vanilla truncated SVD.
-    Svd,
-    /// Activation-aware SVD.
-    Asvd,
-    /// SVD-LLM (best of pruning-only and full-batch recon, like the paper).
-    SvdLlm,
-    /// SVD-LLM pruning only (Table 5 "W").
-    SvdLlmW,
-    /// SVD-LLM + full-batch reconstruction (Table 5 "W + U").
-    SvdLlmWU,
-    /// Our reconstruction without PIFA (Table 5 "W + M").
-    WPlusM,
-    /// Full MPIFA.
-    Mpifa,
-    /// MPIFA with non-uniform sparsity (Appendix B.2).
-    MpifaNs,
-    /// 2:4 one-shot baselines.
-    Magnitude24,
-    Wanda24,
-    Ria24,
-    /// LLM-Pruner structured.
-    LlmPruner,
-    /// ESPACE pruning variants (optionally + PIFA/M via `espace_combo`).
-    Espace(EspaceVariant),
-}
-
-impl Method {
-    pub fn name(&self) -> String {
-        match self {
-            Method::Svd => "SVD".into(),
-            Method::Asvd => "ASVD".into(),
-            Method::SvdLlm => "SVD-LLM".into(),
-            Method::SvdLlmW => "W".into(),
-            Method::SvdLlmWU => "W+U".into(),
-            Method::WPlusM => "W+M".into(),
-            Method::Mpifa => "MPIFA".into(),
-            Method::MpifaNs => "MPIFA_NS".into(),
-            Method::Magnitude24 => "Magnitude 2:4".into(),
-            Method::Wanda24 => "Wanda 2:4".into(),
-            Method::Ria24 => "RIA 2:4".into(),
-            Method::LlmPruner => "LLM-Pruner".into(),
-            Method::Espace(v) => format!("ESPACE ({v:?})"),
-        }
-    }
-}
-
-/// Calibration sample counts (paper: 128 for MPIFA, 512 for MPIFA_NS;
-/// scaled to the tiny models).
-pub fn calib_count(method: Method) -> usize {
-    let base = match method {
-        Method::MpifaNs => 64,
-        _ => 32,
-    };
-    if fast_mode() {
-        base / 4
-    } else {
-        base
-    }
-}
-
-/// Compress `model` with the given method at `density`.
-pub fn compress_with_method(
+/// Compress `model` with the registry method `name` at `density`,
+/// returning just the model (tables don't need the provenance spec).
+pub fn compress_by_name(
     model: &Transformer,
     data: &TokenDataset,
-    method: Method,
+    name: &str,
     density: f64,
 ) -> Result<Transformer> {
-    let calib = data.calibration_windows(calib_count(method), 77);
-    let compressed = match method {
-        Method::Svd => {
-            let mut cfg = CompressConfig::w_only(density);
-            cfg.prune = PruneAlgo::VanillaSvd;
-            mpifa_compress_model(model, &calib, &cfg)?.0
-        }
-        Method::Asvd => {
-            let mut cfg = CompressConfig::w_only(density);
-            cfg.prune = PruneAlgo::Asvd { alpha: 0.5 };
-            mpifa_compress_model(model, &calib, &cfg)?.0
-        }
-        Method::SvdLlm => {
-            // The paper reports the better of the two SVD-LLM versions per
-            // density; reproduce that selection on validation PPL.
-            let (w, _) = mpifa_compress_model(model, &calib, &CompressConfig::w_only(density))?;
-            let (wu, _) = mpifa_compress_model(model, &calib, &CompressConfig::w_plus_u(density))?;
-            let p_w = perplexity(&w, data, Split::Val);
-            let p_wu = perplexity(&wu, data, Split::Val);
-            if p_w <= p_wu {
-                w
-            } else {
-                wu
-            }
-        }
-        Method::SvdLlmW => mpifa_compress_model(model, &calib, &CompressConfig::w_only(density))?.0,
-        Method::SvdLlmWU => {
-            mpifa_compress_model(model, &calib, &CompressConfig::w_plus_u(density))?.0
-        }
-        Method::WPlusM => mpifa_compress_model(model, &calib, &CompressConfig::w_plus_m(density))?.0,
-        Method::Mpifa => mpifa_compress_model(model, &calib, &CompressConfig::mpifa(density))?.0,
-        Method::MpifaNs => {
-            // Search attention density in {G, G-0.1} on validation PPL
-            // (Appendix B.2's Type Density search).
-            let cfg_a = mpifa_ns_config(model, &calib, density, false);
-            let cfg_b = mpifa_ns_config(model, &calib, density, true);
-            let (a, _) = mpifa_compress_model(model, &calib, &cfg_a)?;
-            let (b, _) = mpifa_compress_model(model, &calib, &cfg_b)?;
-            if perplexity(&a, data, Split::Val) <= perplexity(&b, data, Split::Val) {
-                a
-            } else {
-                b
-            }
-        }
-        Method::Magnitude24 => compress_model_24(model, &calib, Score24::Magnitude),
-        Method::Wanda24 => compress_model_24(model, &calib, Score24::Wanda),
-        Method::Ria24 => compress_model_24(model, &calib, Score24::Ria { a: 0.5 }),
-        Method::LlmPruner => {
-            structured_prune_model(model, &calib, &StructuredConfig { density })?
-        }
-        Method::Espace(v) => {
-            let mut cfg = CompressConfig::w_only(density);
-            cfg.prune = PruneAlgo::Espace(v);
-            mpifa_compress_model(model, &calib, &cfg)?.0
-        }
-    };
-    Ok(compressed)
+    Ok(registry::compress(name, model, data, density)?.model)
 }
 
-/// ESPACE combos for Table 15: X, X+PIFA, X+M, X+MPIFA.
-pub fn espace_combo(
-    model: &Transformer,
-    data: &TokenDataset,
-    variant: EspaceVariant,
-    density: f64,
-    with_m: bool,
-    with_pifa: bool,
-) -> Result<Transformer> {
-    let calib = data.calibration_windows(calib_count(Method::Mpifa), 77);
-    let mut cfg = if with_m {
-        CompressConfig::w_plus_m(density)
-    } else {
-        CompressConfig::w_only(density)
-    };
-    cfg.prune = PruneAlgo::Espace(variant);
-    cfg.apply_pifa = with_pifa;
-    Ok(mpifa_compress_model(model, &calib, &cfg)?.0)
+/// Display label of a registry method (panics on unknown names — table
+/// generators hardcode known presets).
+pub fn method_label(name: &str) -> &'static str {
+    registry::get(name).expect("known preset").label()
 }
 
 /// Test perplexity of a model on a dataset.
@@ -275,20 +143,16 @@ mod tests {
     }
 
     #[test]
-    fn method_names_unique() {
-        let methods = [
-            Method::Svd,
-            Method::Asvd,
-            Method::SvdLlm,
-            Method::Mpifa,
-            Method::MpifaNs,
-            Method::Wanda24,
-            Method::LlmPruner,
-            Method::Espace(EspaceVariant::Mse),
-        ];
-        let names: std::collections::HashSet<String> =
-            methods.iter().map(|m| m.name()).collect();
-        assert_eq!(names.len(), methods.len());
+    fn table_method_names_resolve() {
+        // Every preset the table generators reference must be registered.
+        for name in [
+            "svd", "asvd", "svdllm", "w", "w+u", "w+m", "mpifa", "mpifa-ns", "magnitude24",
+            "wanda24", "ria24", "llm-pruner", "espace-mse", "espace-mse-norm", "espace-go-mse",
+            "espace-go-mse-norm", "lowrank-s24",
+        ] {
+            assert!(registry::get(name).is_ok(), "unregistered preset {name}");
+            let _ = method_label(name);
+        }
     }
 
     #[test]

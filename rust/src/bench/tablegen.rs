@@ -5,17 +5,25 @@
 //! `results/` so EXPERIMENTS.md can quote runs verbatim. The `cargo bench`
 //! targets in `rust/benches/` are thin wrappers over these functions, and
 //! `pifa tables <id>` runs them from the CLI.
+//!
+//! Methods are resolved by name through [`crate::compress::registry`];
+//! ablation sweeps (Table 15, Figure 5) mutate a preset's
+//! [`PipelineSpec`] stages instead of calling bespoke combo helpers.
 
 use super::experiments::*;
 use super::harness::bench_fn;
 use super::tables::{fmt_ppl, fmt_speedup, TablePrinter};
-use crate::baselines::prune::EspaceVariant;
 use crate::compress::mpifa::{mpifa_compress_model, CompressConfig, ReconMode, ReconTarget};
+use crate::compress::pipeline::{
+    self, CalibrateStage, FactorizeStage, PipelineSpec, PruneStage, ReconStage, CALIB_SEED,
+};
+use crate::compress::registry;
 use crate::data::batch::Split;
 use crate::eval::ppl::perplexity;
 use crate::eval::tasks::{mean_accuracy, run_task_suite};
 use crate::linalg::Mat;
 use crate::pifa;
+use crate::pifa::PivotStrategy;
 use crate::sparse24::device_model::{layer_timing, speedup_vs_dense, AmpereModel, KernelKind};
 use anyhow::Result;
 use std::path::PathBuf;
@@ -32,6 +40,16 @@ fn emit(id: &str, table: &TablePrinter) {
     if let Err(e) = std::fs::write(&path, table.render()) {
         eprintln!("[tablegen] could not write {}: {e}", path.display());
     }
+}
+
+/// True when a preset is a fixed-density 2:4 one-shot (Tables 3/4 pin
+/// those at 0.5 while the low-rank rows run at matched memory).
+fn is_sparse24_preset(name: &str) -> bool {
+    registry::get(name)
+        .ok()
+        .and_then(|c| c.spec(0.55))
+        .map(|s| matches!(s.prune, PruneStage::SemiStructured(_)))
+        .unwrap_or(false)
 }
 
 /// Figure 1: parameter-count ratio curves (analytic).
@@ -80,7 +98,7 @@ pub fn fig3_structure() -> Result<()> {
 
 /// Tables 2 + 8: PPL x density for the low-rank methods, on both corpora.
 pub fn tab2_tab8() -> Result<()> {
-    let methods = [Method::Svd, Method::Asvd, Method::SvdLlm, Method::Mpifa];
+    let methods = ["svd", "asvd", "svdllm", "mpifa"];
     let densities = density_grid();
     let wiki = wiki_dataset();
     let c4 = c4_dataset();
@@ -96,13 +114,14 @@ pub fn tab2_tab8() -> Result<()> {
         let base_w = test_ppl(&model, &wiki);
         let base_c = perplexity(&model, &c4, Split::Test);
         for method in methods {
-            let mut row_w = vec![name.to_string(), method.name(), fmt_ppl(base_w)];
-            let mut row_c = vec![name.to_string(), method.name(), fmt_ppl(base_c)];
+            let label = method_label(method);
+            let mut row_w = vec![name.to_string(), label.to_string(), fmt_ppl(base_w)];
+            let mut row_c = vec![name.to_string(), label.to_string(), fmt_ppl(base_c)];
             for &rho in &densities {
-                let compressed = compress_with_method(&model, &wiki, method, rho)?;
+                let compressed = compress_by_name(&model, &wiki, method, rho)?;
                 row_w.push(fmt_ppl(test_ppl(&compressed, &wiki)));
                 row_c.push(fmt_ppl(perplexity(&compressed, &c4, Split::Test)));
-                eprintln!("[tab2] {name} {} rho={rho} done", method.name());
+                eprintln!("[tab2] {name} {label} rho={rho} done");
             }
             t2.row(&row_w);
             t8.row(&row_c);
@@ -114,6 +133,8 @@ pub fn tab2_tab8() -> Result<()> {
 }
 
 /// Table 3: PPL vs 2:4 semi-structured at matched memory (55% density).
+/// The `lowrank-s24` hybrid rides along — one registry entry, no new
+/// table code.
 pub fn tab3_semistructured() -> Result<()> {
     let wiki = wiki_dataset();
     let mut t = TablePrinter::new(
@@ -121,13 +142,14 @@ pub fn tab3_semistructured() -> Result<()> {
         &["Method", "tiny-s (7B)", "tiny-m (13B)"],
     );
     let methods = [
-        Method::Magnitude24,
-        Method::Wanda24,
-        Method::Ria24,
-        Method::Svd,
-        Method::Asvd,
-        Method::SvdLlm,
-        Method::MpifaNs,
+        "magnitude24",
+        "wanda24",
+        "ria24",
+        "svd",
+        "asvd",
+        "svdllm",
+        "mpifa-ns",
+        "lowrank-s24",
     ];
     let names = if fast_mode() { vec!["tiny-s"] } else { vec!["tiny-s", "tiny-m"] };
     let mut cols: Vec<Vec<String>> = vec![Vec::new(); methods.len() + 1];
@@ -137,18 +159,17 @@ pub fn tab3_semistructured() -> Result<()> {
         cols[0].push(fmt_ppl(test_ppl(&model, &wiki)));
     }
     for (mi, method) in methods.iter().enumerate() {
-        cols[mi + 1].push(method.name());
+        cols[mi + 1].push(method_label(method).to_string());
         for name in &names {
             let model = ensure_trained_model(name)?;
-            let density = if matches!(method, Method::Magnitude24 | Method::Wanda24 | Method::Ria24)
-            {
+            let density = if is_sparse24_preset(method) {
                 0.5 // 2:4 is fixed at 50% weights (0.5625 memory w/ metadata)
             } else {
                 0.55
             };
-            let compressed = compress_with_method(&model, &wiki, *method, density)?;
+            let compressed = compress_by_name(&model, &wiki, method, density)?;
             cols[mi + 1].push(fmt_ppl(test_ppl(&compressed, &wiki)));
-            eprintln!("[tab3] {name} {} done", method.name());
+            eprintln!("[tab3] {name} {} done", method_label(method));
         }
     }
     for col in cols {
@@ -174,13 +195,13 @@ pub fn tab4_finetune() -> Result<()> {
     );
     t.row(&["Dense".into(), fmt_ppl(test_ppl(&model, &wiki)), "-".into()]);
     let methods = [
-        (Method::Magnitude24, 0.5),
-        (Method::Wanda24, 0.5),
-        (Method::Ria24, 0.5),
-        (Method::Svd, 0.55),
-        (Method::Asvd, 0.55),
-        (Method::SvdLlm, 0.55),
-        (Method::MpifaNs, 0.55),
+        ("magnitude24", 0.5),
+        ("wanda24", 0.5),
+        ("ria24", 0.5),
+        ("svd", 0.55),
+        ("asvd", 0.55),
+        ("svdllm", 0.55),
+        ("mpifa-ns", 0.55),
     ];
     let ft = FinetuneConfig {
         steps: if fast_mode() { 30 } else { 120 },
@@ -189,12 +210,12 @@ pub fn tab4_finetune() -> Result<()> {
         seed: 5,
     };
     for (method, rho) in methods {
-        let mut compressed = compress_with_method(&model, &wiki, method, rho)?;
+        let mut compressed = compress_by_name(&model, &wiki, method, rho)?;
         let before = test_ppl(&compressed, &wiki);
         finetune_compressed(&mut compressed, &wiki, &ft);
         let after = test_ppl(&compressed, &wiki);
-        eprintln!("[tab4] {} {before:.2} -> {after:.2}", method.name());
-        t.row(&[method.name(), fmt_ppl(before), fmt_ppl(after)]);
+        eprintln!("[tab4] {} {before:.2} -> {after:.2}", method_label(method));
+        t.row(&[method_label(method).to_string(), fmt_ppl(before), fmt_ppl(after)]);
     }
     emit("tab4_finetune", &t);
     Ok(())
@@ -208,16 +229,17 @@ pub fn tab5_ablation() -> Result<()> {
     head.extend(densities.iter().map(|d| format!("{:.0}%", d * 100.0)));
     let head_refs: Vec<&str> = head.iter().map(String::as_str).collect();
     let mut t = TablePrinter::new("Table 5 — ablation: W / W+U / W+M / MPIFA", &head_refs);
-    let arms = [Method::SvdLlmW, Method::SvdLlmWU, Method::WPlusM, Method::Mpifa];
+    let arms = ["w", "w+u", "w+m", "mpifa"];
     for name in model_names() {
         let model = ensure_trained_model(name)?;
         let base = test_ppl(&model, &wiki);
         for method in arms {
-            let mut row = vec![name.to_string(), method.name(), fmt_ppl(base)];
+            let label = method_label(method);
+            let mut row = vec![name.to_string(), label.to_string(), fmt_ppl(base)];
             for &rho in &densities {
-                let compressed = compress_with_method(&model, &wiki, method, rho)?;
+                let compressed = compress_by_name(&model, &wiki, method, rho)?;
                 row.push(fmt_ppl(test_ppl(&compressed, &wiki)));
-                eprintln!("[tab5] {name} {} rho={rho} done", method.name());
+                eprintln!("[tab5] {name} {label} rho={rho} done");
             }
             t.row(&row);
         }
@@ -226,14 +248,15 @@ pub fn tab5_ablation() -> Result<()> {
     Ok(())
 }
 
-/// Figure 5: PPL vs mix ratio lambda at 50% density.
+/// Figure 5: PPL vs mix ratio lambda at 35% density — a stage sweep over
+/// the mpifa preset's spec.
 pub fn fig5_mix_ratio() -> Result<()> {
     let wiki = wiki_dataset();
     // tiny-m at a harsh density: error accumulation needs depth and real
     // degradation before the dense-flow correction has anything to fix.
     let name = if fast_mode() { "tiny-s" } else { "tiny-m" };
     let model = ensure_trained_model(name)?;
-    let calib = wiki.calibration_windows(calib_count(Method::Mpifa), 77);
+    let base_spec = registry::get("mpifa")?.spec(0.35).expect("mpifa is a pipeline preset");
     let mut t = TablePrinter::new(
         "Figure 5 — PPL vs mix ratio lambda (density 0.35)",
         &["lambda", "PPL"],
@@ -244,9 +267,9 @@ pub fn fig5_mix_ratio() -> Result<()> {
         vec![0.0, 0.125, 0.25, 0.375, 0.5, 0.75, 1.0]
     };
     for lam in lambdas {
-        let mut cfg = CompressConfig::mpifa(0.35);
-        cfg.recon = ReconMode::Online { target: ReconTarget::Both, lambda: lam };
-        let (compressed, _) = mpifa_compress_model(&model, &calib, &cfg)?;
+        let mut spec = base_spec.clone();
+        spec.recon = ReconStage::Online { target: ReconTarget::Both, lambda: lam, alpha: 1e-3 };
+        let compressed = pipeline::run(&spec, &model, &wiki)?;
         let ppl = test_ppl(&compressed, &wiki);
         eprintln!("[fig5] lambda={lam} ppl={ppl:.2}");
         t.row(&[format!("{lam:.3}"), fmt_ppl(ppl)]);
@@ -255,7 +278,8 @@ pub fn fig5_mix_ratio() -> Result<()> {
     Ok(())
 }
 
-/// Figure 6: PPL vs calibration sample count, for U / V^T / both.
+/// Figure 6: PPL vs calibration sample count, for U / V^T / both (engine
+/// level: explicit window counts, no fast-mode trimming).
 pub fn fig6_calib_size() -> Result<()> {
     let wiki = wiki_dataset();
     let name = if fast_mode() { "tiny-s" } else { "tiny-m" };
@@ -266,7 +290,7 @@ pub fn fig6_calib_size() -> Result<()> {
         &["samples", "recon U", "recon V^T", "recon both"],
     );
     for &n in &sizes {
-        let calib = wiki.calibration_windows(n, 77);
+        let calib = wiki.calibration_windows(n, CALIB_SEED);
         let mut row = vec![format!("{n}")];
         for target in [ReconTarget::UOnly, ReconTarget::VtOnly, ReconTarget::Both] {
             let mut cfg = CompressConfig::mpifa(0.35);
@@ -319,7 +343,7 @@ pub fn tab9_zeroshot() -> Result<()> {
     let wiki = wiki_dataset();
     let v = crate::data::vocab::Vocab::new();
     let model = ensure_trained_model("tiny-s")?;
-    let methods = [Method::Svd, Method::Asvd, Method::SvdLlm, Method::Mpifa];
+    let methods = ["svd", "asvd", "svdllm", "mpifa"];
     let densities = if fast_mode() { vec![0.5] } else { vec![0.9, 0.7, 0.5] };
     let n_items = if fast_mode() { 20 } else { 60 };
 
@@ -340,14 +364,14 @@ pub fn tab9_zeroshot() -> Result<()> {
 
     for &rho in &densities {
         for method in methods {
-            let compressed = compress_with_method(&model, &wiki, method, rho)?;
+            let compressed = compress_by_name(&model, &wiki, method, rho)?;
             let results = run_task_suite(&compressed, &v, n_items, 7);
-            let mut row = vec![format!("{:.0}%", rho * 100.0), method.name()];
+            let mut row = vec![format!("{:.0}%", rho * 100.0), method_label(method).to_string()];
             for r in &results {
                 row.push(format!("{:.1}", r.accuracy * 100.0));
             }
             row.push(format!("{:.1}", mean_accuracy(&results) * 100.0));
-            eprintln!("[tab9] rho={rho} {} done", method.name());
+            eprintln!("[tab9] rho={rho} {} done", method_label(method));
             t.row(&row);
         }
     }
@@ -544,7 +568,9 @@ pub fn fig7_rank_sweep() -> Result<()> {
     Ok(())
 }
 
-/// Table 7: end-to-end serving throughput + memory.
+/// Table 7: end-to-end serving throughput + memory. The compressed
+/// model's pipeline provenance is validated against the artifact manifest
+/// before serving.
 pub fn tab7_e2e() -> Result<()> {
     use crate::coordinator::{GenerationEngine, GenerationMode};
     use crate::runtime::{Engine, ModelRunner};
@@ -556,8 +582,18 @@ pub fn tab7_e2e() -> Result<()> {
     let name = "tiny-s";
     let wiki = wiki_dataset();
     let model = ensure_trained_model(name)?;
-    let mpifa = compress_with_method(&model, &wiki, Method::Mpifa, 0.55)?;
-    let sparse = compress_with_method(&model, &wiki, Method::Wanda24, 0.5)?;
+    let mpifa_out = registry::compress("mpifa", &model, &wiki, 0.55)?;
+    let sparse = compress_by_name(&model, &wiki, "wanda24", 0.5)?;
+
+    // Provenance gate: the pifa55 artifacts must match what we produced.
+    {
+        let manifest = crate::runtime::Manifest::load(&dir)?;
+        let prefill = manifest.get(&format!("{name}_pifa55_prefill_b1_t64"))?;
+        prefill
+            .kind
+            .validate_provenance(mpifa_out.spec.artifact_flavour(), mpifa_out.spec.density)?;
+    }
+    let mpifa = mpifa_out.model;
 
     let mut t = TablePrinter::new(
         "Table 7 — end-to-end serving (tiny-s, PJRT CPU; 2:4 = Rust-native kernel)",
@@ -652,12 +688,12 @@ pub fn tab10_llmpruner() -> Result<()> {
     let head_refs: Vec<&str> = head.iter().map(String::as_str).collect();
     let mut t = TablePrinter::new("Table 10 — LLM-Pruner vs MPIFA PPL (tiny-s)", &head_refs);
     let base = test_ppl(&model, &wiki);
-    for method in [Method::LlmPruner, Method::Mpifa] {
-        let mut row = vec![method.name(), fmt_ppl(base)];
+    for method in ["llm-pruner", "mpifa"] {
+        let mut row = vec![method_label(method).to_string(), fmt_ppl(base)];
         for &rho in &densities {
-            let c = compress_with_method(&model, &wiki, method, rho)?;
+            let c = compress_by_name(&model, &wiki, method, rho)?;
             row.push(fmt_ppl(test_ppl(&c, &wiki)));
-            eprintln!("[tab10] {} rho={rho} done", method.name());
+            eprintln!("[tab10] {} rho={rho} done", method_label(method));
         }
         t.row(&row);
     }
@@ -718,9 +754,10 @@ pub fn tab13_cost() -> Result<()> {
         &["Model", "Method", "seconds", "peak MB"],
     );
     let names = if fast_mode() { vec!["tiny-s"] } else { vec!["tiny-s", "tiny-m"] };
+    let calibrate = CalibrateStage::default();
     for name in names {
         let model = ensure_trained_model(name)?;
-        let calib = wiki.calibration_windows(calib_count(Method::Mpifa), 77);
+        let calib = wiki.calibration_windows(calibrate.samples, calibrate.seed);
         for (label, cfg) in [
             ("ASVD", {
                 let mut c = CompressConfig::w_only(0.5);
@@ -746,7 +783,8 @@ pub fn tab13_cost() -> Result<()> {
     Ok(())
 }
 
-/// Table 15: PIFA and M on top of ESPACE variants at 50% density.
+/// Table 15: PIFA and M on top of the pruning baselines at 50% density —
+/// pure stage composition on each preset's spec (no combo helpers).
 pub fn tab15_espace() -> Result<()> {
     let wiki = wiki_dataset();
     let model = ensure_trained_model("tiny-s")?;
@@ -754,34 +792,35 @@ pub fn tab15_espace() -> Result<()> {
         "Table 15 — PPL at 50% density: X / X+PIFA / X+M / X+MPIFA (tiny-s)",
         &["Pruning (X)", "X", "X+PIFA", "X+M", "X+MPIFA"],
     );
-    let variants: Vec<(String, Option<EspaceVariant>)> = vec![
-        ("SVD-LLM (W)".into(), None),
-        ("ESPACE (MSE)".into(), Some(EspaceVariant::Mse)),
-        ("ESPACE (MSE-NORM)".into(), Some(EspaceVariant::MseNorm)),
-        ("ESPACE (GO-MSE)".into(), Some(EspaceVariant::GoMse)),
-        ("ESPACE (GO-MSE-NORM)".into(), Some(EspaceVariant::GoMseNorm)),
+    let presets: Vec<(&str, &str)> = vec![
+        ("SVD-LLM (W)", "w"),
+        ("ESPACE (MSE)", "espace-mse"),
+        ("ESPACE (MSE-NORM)", "espace-mse-norm"),
+        ("ESPACE (GO-MSE)", "espace-go-mse"),
+        ("ESPACE (GO-MSE-NORM)", "espace-go-mse-norm"),
     ];
     let rho = 0.5;
-    for (label, var) in variants {
+    for (label, preset) in presets {
         if fast_mode() && label.contains("NORM") {
             continue;
         }
+        let base: PipelineSpec =
+            registry::get(preset)?.spec(rho).expect("pruning presets are pipelines");
         let combos = [(false, false), (false, true), (true, false), (true, true)];
-        let mut row = vec![label.clone()];
+        let mut row = vec![label.to_string()];
         for (with_m, with_pifa) in combos {
-            let compressed = match var {
-                Some(v) => espace_combo(&model, &wiki, v, rho, with_m, with_pifa)?,
-                None => {
-                    let calib = wiki.calibration_windows(calib_count(Method::Mpifa), 77);
-                    let mut cfg = if with_m {
-                        CompressConfig::w_plus_m(rho)
-                    } else {
-                        CompressConfig::w_only(rho)
-                    };
-                    cfg.apply_pifa = with_pifa;
-                    mpifa_compress_model(&model, &calib, &cfg)?.0
-                }
+            let mut spec = base.clone();
+            spec.recon = if with_m {
+                ReconStage::Online { target: ReconTarget::Both, lambda: 0.25, alpha: 1e-3 }
+            } else {
+                ReconStage::None
             };
+            spec.factorize = if with_pifa {
+                FactorizeStage::Pivot(PivotStrategy::QrColumnPivot)
+            } else {
+                FactorizeStage::None
+            };
+            let compressed = pipeline::run(&spec, &model, &wiki)?;
             row.push(fmt_ppl(test_ppl(&compressed, &wiki)));
         }
         eprintln!("[tab15] {label} done");

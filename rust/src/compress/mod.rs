@@ -9,13 +9,22 @@
 //!   [`crate::model::Transformer`] module-by-module, maintaining dense and
 //!   compressed activation flows, compressing each linear in place, then
 //!   applying PIFA.
+//! * [`pipeline`] — the staged `Calibrate → Prune → Reconstruct →
+//!   Factorize → Pack` pipeline description ([`pipeline::PipelineSpec`]),
+//!   its provenance text form, and the executor.
+//! * [`registry`] — the name-based method registry ([`registry::get`],
+//!   [`registry::names`]); every paper method is one registered preset.
 //! * [`metrics`] — wall-clock + peak-memory instrumentation for Tables 13/14.
 
 pub mod metrics;
 pub mod mpifa;
+pub mod pipeline;
 pub mod recon;
+pub mod registry;
 pub mod whiten;
 
-pub use mpifa::{mpifa_compress_model, CompressConfig, ReconTarget};
+pub use mpifa::{mpifa_compress_model, CompressConfig, PackMode, ReconTarget};
+pub use pipeline::{PipelineSpec, CALIB_SEED};
 pub use recon::{full_batch_reconstruct, reconstruct_u, reconstruct_vt, DualFlowAccum};
+pub use registry::{Compressor, CompressionOutput};
 pub use whiten::svdllm_prune;

@@ -25,7 +25,8 @@ use crate::model::ops::{self};
 use crate::model::transformer::{attention_mix, ModuleKind, Transformer};
 use crate::model::LinearRepr;
 use crate::pifa::{pivoting_factorization, PivotStrategy};
-use anyhow::{Context, Result};
+use crate::sparse24::{prune_mask_24, Sparse24Mat};
+use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
 /// Which factors M reconstructs (Figure 6 compares these).
@@ -48,6 +49,21 @@ pub enum ReconMode {
     Online { target: ReconTarget, lambda: f64 },
 }
 
+/// Optional packing of the per-module residual (the hybrid pipelines'
+/// `Pack` stage; LoSparse-style low-rank + sparse composition).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackMode {
+    /// No residual: the module stays pure low-rank / PIFA.
+    None,
+    /// Pack `W - U V^T` as 2:4 semi-structured, selecting survivors by a
+    /// Wanda-style saliency (`|R_ij| * rms_j`) from the accumulated
+    /// degraded-flow Gram diagonal — the statistics of the input the
+    /// packed layer actually sees at inference. The 2:4 part always keeps
+    /// `mn/2` values, so the low-rank factors are budgeted at
+    /// `density - 0.5`.
+    Sparse24Residual,
+}
+
 /// End-to-end compression configuration (Algorithm 3 parameters).
 #[derive(Clone, Debug)]
 pub struct CompressConfig {
@@ -62,6 +78,10 @@ pub struct CompressConfig {
     /// Re-represent each low-rank result as a PIFA layer (spending the
     /// savings on extra rank at equal density).
     pub apply_pifa: bool,
+    /// Pivot-row selection strategy when `apply_pifa` is set.
+    pub pivot: PivotStrategy,
+    /// Residual packing (hybrid low-rank + 2:4 pipelines).
+    pub pack: PackMode,
     /// Per-module density overrides (MPIFA_NS); falls back to `density`.
     pub module_density: HashMap<(usize, ModuleKind), f64>,
 }
@@ -75,6 +95,8 @@ impl CompressConfig {
             recon: ReconMode::Online { target: ReconTarget::Both, lambda: 0.25 },
             alpha: 1e-3,
             apply_pifa: true,
+            pivot: PivotStrategy::QrColumnPivot,
+            pack: PackMode::None,
             module_density: HashMap::new(),
         }
     }
@@ -245,11 +267,20 @@ fn compress_module(
     let w = w32.cast::<f64>();
     let rho = cfg.density_for(layer, kind);
 
-    // Density -> rank: PIFA affords extra rank at equal density.
-    let r = if cfg.apply_pifa {
-        crate::pifa::rank_for_density_pifa(m, n, rho)
-    } else {
-        crate::pifa::rank_for_density_lowrank(m, n, rho)
+    // Density -> rank: PIFA affords extra rank at equal density; a 2:4
+    // residual reserves mn/2 values, leaving `rho - 0.5` for the factors.
+    let r = match (cfg.apply_pifa, cfg.pack) {
+        (true, PackMode::Sparse24Residual) => {
+            bail!("PIFA factorization cannot be combined with a 2:4 residual pack")
+        }
+        (true, PackMode::None) => crate::pifa::rank_for_density_pifa(m, n, rho),
+        (false, PackMode::None) => crate::pifa::rank_for_density_lowrank(m, n, rho),
+        (false, PackMode::Sparse24Residual) => {
+            if rho <= 0.5 {
+                bail!("2:4 residual pack needs density > 0.5 (got {rho})");
+            }
+            crate::pifa::rank_for_density_lowrank(m, n, rho - 0.5)
+        }
     };
 
     // Online accumulation over samples (constant memory in sample count).
@@ -306,9 +337,28 @@ fn compress_module(
     // Install the compressed representation.
     let repr = if cfg.apply_pifa {
         let w_prime = crate::linalg::matmul(&u, &vt);
-        let layer_p = pivoting_factorization(&w_prime, r, PivotStrategy::QrColumnPivot)
+        let layer_p = pivoting_factorization(&w_prime, r, cfg.pivot)
             .with_context(|| format!("PIFA failed at layer {layer} {}", kind.name()))?;
         LinearRepr::Pifa(layer_p.cast::<f32>())
+    } else if cfg.pack == PackMode::Sparse24Residual {
+        // Hybrid: 2:4-pack the reconstruction residual with Wanda-style
+        // saliency from the degraded-flow Gram diagonal (`accum.xxt`
+        // accumulates X_u X_u^T — the layer's actual inference input).
+        let resid = w.sub_mat(&crate::linalg::matmul(&u, &vt));
+        let t = accum.tokens.max(1) as f64;
+        let rms: Vec<f64> =
+            (0..n).map(|j| (accum.xxt[(j, j)] / t).sqrt().max(1e-12)).collect();
+        let mut scores = Mat::zeros(m, n);
+        for i in 0..m {
+            let srow = scores.row_mut(i);
+            let rrow = resid.row(i);
+            for j in 0..n {
+                srow[j] = (rrow[j].abs() * rms[j]) as f32;
+            }
+        }
+        let mask = prune_mask_24(&scores);
+        let residual = Sparse24Mat::pack(&resid.cast::<f32>(), &mask);
+        LinearRepr::LowRankSparse { u: u.cast(), vt: vt.cast(), residual }
     } else {
         LinearRepr::LowRank { u: u.cast(), vt: vt.cast() }
     };
@@ -425,6 +475,28 @@ mod tests {
         let q_params = compressed.module(0, ModuleKind::Q).param_count();
         let k_params = compressed.module(0, ModuleKind::K).param_count();
         assert!(q_params > k_params, "override should give Q more params");
+    }
+
+    #[test]
+    fn hybrid_sparse24_residual_pack() {
+        let (model, data) = trained();
+        let calib = data.calibration_windows(8, 6);
+        let mut cfg = CompressConfig::w_plus_m(0.7);
+        cfg.pack = PackMode::Sparse24Residual;
+        let (compressed, _) = mpifa_compress_model(model, &calib, &cfg).unwrap();
+        assert_eq!(compressed.module(0, ModuleKind::Q).kind_name(), "lowrank+s24");
+        assert_eq!(compressed.module(1, ModuleKind::Down).kind_name(), "lowrank+s24");
+        let d = compressed.density();
+        assert!((d - 0.7).abs() < 0.1, "hybrid density {d} vs target 0.7");
+        assert!(perplexity(&compressed, data, Split::Test).is_finite());
+
+        // Contradictory stage combinations are engine errors too.
+        let mut bad = CompressConfig::mpifa(0.7);
+        bad.pack = PackMode::Sparse24Residual;
+        assert!(mpifa_compress_model(model, &calib, &bad).is_err());
+        let mut low = CompressConfig::w_plus_m(0.4);
+        low.pack = PackMode::Sparse24Residual;
+        assert!(mpifa_compress_model(model, &calib, &low).is_err());
     }
 
     #[test]

@@ -1,0 +1,687 @@
+//! The staged compression pipeline — the typed description of *how* a
+//! model gets compressed, separated from the engines that do the work.
+//!
+//! A [`PipelineSpec`] is five explicit stages:
+//!
+//! ```text
+//! Calibrate { samples, seed }
+//!   → Prune   (low-rank | structured | 2:4 semi-structured)  @ density
+//!   → Reconstruct (none | full-batch "U" | online dual-flow "M")
+//!   → Factorize   (none | PIFA pivot: QR / LU)
+//!   → Pack        (none | 2:4 residual)
+//! ```
+//!
+//! Every paper method is one such spec (registered by name in
+//! [`crate::compress::registry`]); hybrid methods — e.g. low-rank plus a
+//! 2:4 residual — are just a different stage combination, not new code
+//! paths. Specs serialize to a line-oriented text form that is embedded in
+//! checkpoints as provenance (see [`crate::model::serialize`]) and parsed
+//! back for artifact-compatibility checks (see [`crate::runtime`]).
+
+use crate::baselines::prune::{EspaceVariant, PruneAlgo};
+use crate::baselines::semistructured::{compress_model_24, Score24};
+use crate::baselines::structured::{structured_prune_model, StructuredConfig};
+use crate::compress::mpifa::{
+    mpifa_compress_model, CompressConfig, PackMode, ReconMode, ReconTarget,
+};
+use crate::data::batch::TokenDataset;
+use crate::model::transformer::{ModuleKind, Transformer};
+use crate::pifa::PivotStrategy;
+use anyhow::{bail, Context, Result};
+
+/// The calibration seed every preset shares (formerly a magic `77`
+/// repeated across the bench plumbing).
+pub const CALIB_SEED: u64 = 77;
+
+/// Default calibration sample count (paper: 128, scaled to the tiny
+/// stand-ins; MPIFA_NS doubles it).
+pub const DEFAULT_CALIB_SAMPLES: usize = 32;
+
+/// `PIFA_FAST=1` trims grids and calibration budgets (CI-speed runs).
+/// The single parser of that env var — `bench::experiments` delegates here.
+pub fn fast_mode() -> bool {
+    std::env::var("PIFA_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Stage 1: draw calibration windows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CalibrateStage {
+    pub samples: usize,
+    pub seed: u64,
+}
+
+impl Default for CalibrateStage {
+    fn default() -> Self {
+        Self::scaled(DEFAULT_CALIB_SAMPLES)
+    }
+}
+
+impl CalibrateStage {
+    /// A stage with the `PIFA_FAST` trim applied at *build* time, so the
+    /// spec (and therefore checkpoint provenance) records the sample
+    /// count that actually runs.
+    pub fn scaled(samples: usize) -> Self {
+        let samples = if fast_mode() { (samples / 4).max(1) } else { samples };
+        Self { samples, seed: CALIB_SEED }
+    }
+}
+
+/// Stage 2: what produces the initial compressed weights.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PruneStage {
+    /// Truncated low-rank factors `U V^T` via one of the SVD-family
+    /// algorithms (density → rank per module).
+    LowRank(PruneAlgo),
+    /// LLM-Pruner-style structured channel removal.
+    Structured,
+    /// One-shot 2:4 semi-structured mask (fixed 50% weight density).
+    SemiStructured(Score24),
+}
+
+/// Stage 3: reconstruction of the surviving factors.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReconStage {
+    None,
+    /// SVD-LLM's full-batch closed form ("U"), capped at `max_samples`.
+    FullBatch { max_samples: usize },
+    /// The online dual-flow error-accumulation-minimization ("M"),
+    /// with mix ratio `lambda` (Eq. 7) and ridge `alpha` (Eq. 9).
+    Online { target: ReconTarget, lambda: f64, alpha: f64 },
+}
+
+/// Stage 4: optional PIFA re-representation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FactorizeStage {
+    None,
+    Pivot(PivotStrategy),
+}
+
+/// Stage 5: optional residual packing (hybrid methods).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackStage {
+    None,
+    /// Pack `W - U V^T` as 2:4 (Wanda-saliency survivors).
+    Sparse24Residual,
+}
+
+/// One per-module density override (MPIFA_NS non-uniform sparsity).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModuleDensity {
+    pub layer: usize,
+    pub kind: ModuleKind,
+    pub density: f64,
+}
+
+/// A fully-specified compression pipeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineSpec {
+    /// The registry preset this spec came from (provenance label).
+    pub preset: String,
+    /// Global parameter density target.
+    pub density: f64,
+    pub calibrate: CalibrateStage,
+    pub prune: PruneStage,
+    pub recon: ReconStage,
+    pub factorize: FactorizeStage,
+    pub pack: PackStage,
+    /// Per-module density overrides, sorted by (layer, kind).
+    pub module_density: Vec<ModuleDensity>,
+}
+
+impl PipelineSpec {
+    /// A bare low-rank pipeline skeleton (no recon / factorize / pack).
+    pub fn low_rank(preset: &str, algo: PruneAlgo, density: f64) -> Self {
+        Self {
+            preset: preset.to_string(),
+            density,
+            calibrate: CalibrateStage::default(),
+            prune: PruneStage::LowRank(algo),
+            recon: ReconStage::None,
+            factorize: FactorizeStage::None,
+            pack: PackStage::None,
+            module_density: Vec::new(),
+        }
+    }
+
+    /// Check stage compatibility before running.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.density > 0.0 && self.density <= 1.0) {
+            bail!("density {} outside (0, 1]", self.density);
+        }
+        if self.calibrate.samples == 0 {
+            bail!("calibrate stage needs at least one sample");
+        }
+        match self.prune {
+            PruneStage::Structured | PruneStage::SemiStructured(_) => {
+                if self.recon != ReconStage::None {
+                    bail!("{:?} pruning does not support a reconstruction stage", self.prune);
+                }
+                if self.factorize != FactorizeStage::None {
+                    bail!("{:?} pruning does not support a factorize stage", self.prune);
+                }
+                if self.pack != PackStage::None {
+                    bail!("{:?} pruning packs implicitly; pack stage must be none", self.prune);
+                }
+                if matches!(self.prune, PruneStage::SemiStructured(_))
+                    && (self.density - 0.5).abs() > 1e-9
+                {
+                    bail!("2:4 semi-structured pruning is fixed at density 0.5");
+                }
+            }
+            PruneStage::LowRank(_) => {
+                if self.pack == PackStage::Sparse24Residual {
+                    if self.factorize != FactorizeStage::None {
+                        bail!("a 2:4 residual pack cannot be combined with PIFA factorization");
+                    }
+                    if self.density <= 0.5 {
+                        bail!(
+                            "a 2:4 residual keeps mn/2 values; density must exceed 0.5 (got {})",
+                            self.density
+                        );
+                    }
+                }
+            }
+        }
+        if let ReconStage::Online { lambda, alpha, .. } = self.recon {
+            if !(0.0..=1.0).contains(&lambda) {
+                bail!("mix ratio lambda {lambda} outside [0, 1]");
+            }
+            if alpha <= 0.0 {
+                bail!("ridge alpha must be positive (got {alpha})");
+            }
+        }
+        for m in &self.module_density {
+            if !(m.density > 0.0 && m.density <= 1.0) {
+                bail!("module density override {} outside (0, 1]", m.density);
+            }
+        }
+        Ok(())
+    }
+
+    /// The PJRT artifact flavour a model compressed by this spec matches
+    /// (see `artifacts/manifest.txt` and `python/compile/aot.py`).
+    pub fn artifact_flavour(&self) -> &'static str {
+        match (self.prune, self.factorize, self.pack) {
+            (PruneStage::SemiStructured(_), _, _) => "sparse24",
+            (PruneStage::Structured, _, _) => "dense",
+            (_, _, PackStage::Sparse24Residual) => "lowrank+s24",
+            (_, FactorizeStage::Pivot(_), _) => "pifa",
+            _ => "lowrank",
+        }
+    }
+
+    /// Lower a low-rank spec onto the Algorithm-3 engine config.
+    pub fn to_compress_config(&self) -> Result<CompressConfig> {
+        let algo = match self.prune {
+            PruneStage::LowRank(a) => a,
+            other => bail!("{other:?} pruning does not lower to CompressConfig"),
+        };
+        let mut cfg = CompressConfig::mpifa(self.density);
+        cfg.prune = algo;
+        cfg.apply_pifa = false;
+        cfg.pack = PackMode::None;
+        match self.recon {
+            ReconStage::None => cfg.recon = ReconMode::None,
+            ReconStage::FullBatch { max_samples } => {
+                cfg.recon = ReconMode::FullBatch { max_samples };
+            }
+            ReconStage::Online { target, lambda, alpha } => {
+                cfg.recon = ReconMode::Online { target, lambda };
+                cfg.alpha = alpha;
+            }
+        }
+        if let FactorizeStage::Pivot(strategy) = self.factorize {
+            cfg.apply_pifa = true;
+            cfg.pivot = strategy;
+        }
+        if self.pack == PackStage::Sparse24Residual {
+            cfg.pack = PackMode::Sparse24Residual;
+        }
+        cfg.module_density = self
+            .module_density
+            .iter()
+            .map(|m| ((m.layer, m.kind), m.density))
+            .collect();
+        Ok(cfg)
+    }
+
+    /// Recover a spec from an engine config (used by presets that search
+    /// configs at compress time, e.g. MPIFA_NS).
+    pub fn from_compress_config(
+        preset: &str,
+        calibrate: CalibrateStage,
+        cfg: &CompressConfig,
+    ) -> Self {
+        let recon = match cfg.recon {
+            ReconMode::None => ReconStage::None,
+            ReconMode::FullBatch { max_samples } => ReconStage::FullBatch { max_samples },
+            ReconMode::Online { target, lambda } => {
+                ReconStage::Online { target, lambda, alpha: cfg.alpha }
+            }
+        };
+        let mut module_density: Vec<ModuleDensity> = cfg
+            .module_density
+            .iter()
+            .map(|(&(layer, kind), &density)| ModuleDensity { layer, kind, density })
+            .collect();
+        module_density.sort_by_key(|m| (m.layer, m.kind.name()));
+        Self {
+            preset: preset.to_string(),
+            density: cfg.density,
+            calibrate,
+            prune: PruneStage::LowRank(cfg.prune),
+            recon,
+            factorize: if cfg.apply_pifa {
+                FactorizeStage::Pivot(cfg.pivot)
+            } else {
+                FactorizeStage::None
+            },
+            pack: if cfg.pack == PackMode::Sparse24Residual {
+                PackStage::Sparse24Residual
+            } else {
+                PackStage::None
+            },
+            module_density,
+        }
+    }
+
+    /// One-line human summary (CLI output).
+    pub fn describe(&self) -> String {
+        let prune = match self.prune {
+            PruneStage::LowRank(a) => format!("{a:?}").to_lowercase(),
+            PruneStage::Structured => "structured".into(),
+            PruneStage::SemiStructured(s) => format!("2:4 {s:?}").to_lowercase(),
+        };
+        let recon = match self.recon {
+            ReconStage::None => "none".into(),
+            ReconStage::FullBatch { max_samples } => format!("fullbatch({max_samples})"),
+            ReconStage::Online { target, lambda, .. } => {
+                format!("online({target:?}, lambda={lambda})").to_lowercase()
+            }
+        };
+        let fact = match self.factorize {
+            FactorizeStage::None => "none".into(),
+            FactorizeStage::Pivot(s) => format!("pifa({s:?})").to_lowercase(),
+        };
+        let pack = match self.pack {
+            PackStage::None => "none",
+            PackStage::Sparse24Residual => "2:4 residual",
+        };
+        format!(
+            "{} @ density {}: calibrate({}@{}) -> prune[{}] -> recon[{}] -> factorize[{}] -> pack[{}]",
+            self.preset, self.density, self.calibrate.samples, self.calibrate.seed,
+            prune, recon, fact, pack
+        )
+    }
+
+    /// Serialize to the line-oriented provenance text embedded in
+    /// checkpoints. `parse` round-trips it exactly.
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("pipeline v1\n");
+        out.push_str(&format!("preset {}\n", self.preset));
+        out.push_str(&format!("density {}\n", self.density));
+        out.push_str(&format!(
+            "calibrate samples {} seed {}\n",
+            self.calibrate.samples, self.calibrate.seed
+        ));
+        match self.prune {
+            PruneStage::LowRank(algo) => match algo {
+                PruneAlgo::VanillaSvd => out.push_str("prune lowrank vanilla-svd\n"),
+                PruneAlgo::SvdLlm => out.push_str("prune lowrank svdllm\n"),
+                PruneAlgo::Asvd { alpha } => {
+                    out.push_str(&format!("prune lowrank asvd {alpha}\n"))
+                }
+                PruneAlgo::Espace(v) => {
+                    out.push_str(&format!("prune lowrank espace {}\n", espace_token(v)))
+                }
+            },
+            PruneStage::Structured => out.push_str("prune structured\n"),
+            PruneStage::SemiStructured(score) => match score {
+                Score24::Magnitude => out.push_str("prune sparse24 magnitude\n"),
+                Score24::Wanda => out.push_str("prune sparse24 wanda\n"),
+                Score24::Ria { a } => out.push_str(&format!("prune sparse24 ria {a}\n")),
+            },
+        }
+        match self.recon {
+            ReconStage::None => out.push_str("recon none\n"),
+            ReconStage::FullBatch { max_samples } => {
+                out.push_str(&format!("recon fullbatch {max_samples}\n"))
+            }
+            ReconStage::Online { target, lambda, alpha } => {
+                let t = match target {
+                    ReconTarget::UOnly => "u",
+                    ReconTarget::VtOnly => "vt",
+                    ReconTarget::Both => "both",
+                };
+                out.push_str(&format!("recon online {t} lambda {lambda} alpha {alpha}\n"));
+            }
+        }
+        match self.factorize {
+            FactorizeStage::None => out.push_str("factorize none\n"),
+            FactorizeStage::Pivot(PivotStrategy::QrColumnPivot) => {
+                out.push_str("factorize pivot qr\n")
+            }
+            FactorizeStage::Pivot(PivotStrategy::Lu) => out.push_str("factorize pivot lu\n"),
+        }
+        match self.pack {
+            PackStage::None => out.push_str("pack none\n"),
+            PackStage::Sparse24Residual => out.push_str("pack sparse24-residual\n"),
+        }
+        for m in &self.module_density {
+            out.push_str(&format!("module {} {} {}\n", m.layer, m.kind.name(), m.density));
+        }
+        out.push_str("end\n");
+        out
+    }
+
+    /// Parse the provenance text form.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines().map(str::trim).filter(|l| !l.is_empty());
+        let header = lines.next().context("empty pipeline text")?;
+        if header != "pipeline v1" {
+            bail!("unsupported pipeline header '{header}'");
+        }
+        let mut preset: Option<String> = None;
+        let mut density: Option<f64> = None;
+        let mut calibrate = CalibrateStage::default();
+        let mut prune: Option<PruneStage> = None;
+        let mut recon = ReconStage::None;
+        let mut factorize = FactorizeStage::None;
+        let mut pack = PackStage::None;
+        let mut module_density = Vec::new();
+        let mut ended = false;
+        for line in lines {
+            if ended {
+                bail!("content after 'end' in pipeline text");
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("pipeline line: {line}");
+            match toks[0] {
+                "preset" => preset = Some(toks.get(1).with_context(ctx)?.to_string()),
+                "density" => {
+                    density = Some(toks.get(1).with_context(ctx)?.parse().with_context(ctx)?)
+                }
+                "calibrate" => {
+                    if toks.len() != 5 || toks[1] != "samples" || toks[3] != "seed" {
+                        bail!("{}", ctx());
+                    }
+                    calibrate = CalibrateStage {
+                        samples: toks[2].parse().with_context(ctx)?,
+                        seed: toks[4].parse().with_context(ctx)?,
+                    };
+                }
+                "prune" => {
+                    let stage = match *toks.get(1).with_context(ctx)? {
+                        "lowrank" => {
+                            let algo = match *toks.get(2).with_context(ctx)? {
+                                "vanilla-svd" => PruneAlgo::VanillaSvd,
+                                "svdllm" => PruneAlgo::SvdLlm,
+                                "asvd" => PruneAlgo::Asvd {
+                                    alpha: toks.get(3).with_context(ctx)?.parse().with_context(ctx)?,
+                                },
+                                "espace" => PruneAlgo::Espace(parse_espace_token(
+                                    toks.get(3).with_context(ctx)?,
+                                )?),
+                                other => bail!("unknown low-rank prune algo '{other}'"),
+                            };
+                            PruneStage::LowRank(algo)
+                        }
+                        "structured" => PruneStage::Structured,
+                        "sparse24" => {
+                            let score = match *toks.get(2).with_context(ctx)? {
+                                "magnitude" => Score24::Magnitude,
+                                "wanda" => Score24::Wanda,
+                                "ria" => Score24::Ria {
+                                    a: toks.get(3).with_context(ctx)?.parse().with_context(ctx)?,
+                                },
+                                other => bail!("unknown 2:4 score '{other}'"),
+                            };
+                            PruneStage::SemiStructured(score)
+                        }
+                        other => bail!("unknown prune stage '{other}'"),
+                    };
+                    prune = Some(stage);
+                }
+                "recon" => {
+                    recon = match *toks.get(1).with_context(ctx)? {
+                        "none" => ReconStage::None,
+                        "fullbatch" => ReconStage::FullBatch {
+                            max_samples: toks.get(2).with_context(ctx)?.parse().with_context(ctx)?,
+                        },
+                        "online" => {
+                            if toks.len() != 7 || toks[3] != "lambda" || toks[5] != "alpha" {
+                                bail!("{}", ctx());
+                            }
+                            let target = match toks[2] {
+                                "u" => ReconTarget::UOnly,
+                                "vt" => ReconTarget::VtOnly,
+                                "both" => ReconTarget::Both,
+                                other => bail!("unknown recon target '{other}'"),
+                            };
+                            ReconStage::Online {
+                                target,
+                                lambda: toks[4].parse().with_context(ctx)?,
+                                alpha: toks[6].parse().with_context(ctx)?,
+                            }
+                        }
+                        other => bail!("unknown recon stage '{other}'"),
+                    };
+                }
+                "factorize" => {
+                    factorize = match *toks.get(1).with_context(ctx)? {
+                        "none" => FactorizeStage::None,
+                        "pivot" => match *toks.get(2).with_context(ctx)? {
+                            "qr" => FactorizeStage::Pivot(PivotStrategy::QrColumnPivot),
+                            "lu" => FactorizeStage::Pivot(PivotStrategy::Lu),
+                            other => bail!("unknown pivot strategy '{other}'"),
+                        },
+                        other => bail!("unknown factorize stage '{other}'"),
+                    };
+                }
+                "pack" => {
+                    pack = match *toks.get(1).with_context(ctx)? {
+                        "none" => PackStage::None,
+                        "sparse24-residual" => PackStage::Sparse24Residual,
+                        other => bail!("unknown pack stage '{other}'"),
+                    };
+                }
+                "module" => {
+                    if toks.len() != 4 {
+                        bail!("{}", ctx());
+                    }
+                    let kind = match toks[2] {
+                        "q" => ModuleKind::Q,
+                        "k" => ModuleKind::K,
+                        "v" => ModuleKind::V,
+                        "o" => ModuleKind::O,
+                        "gate" => ModuleKind::Gate,
+                        "up" => ModuleKind::Up,
+                        "down" => ModuleKind::Down,
+                        other => bail!("unknown module kind '{other}'"),
+                    };
+                    module_density.push(ModuleDensity {
+                        layer: toks[1].parse().with_context(ctx)?,
+                        kind,
+                        density: toks[3].parse().with_context(ctx)?,
+                    });
+                }
+                "end" => ended = true,
+                other => bail!("unknown pipeline directive '{other}'"),
+            }
+        }
+        if !ended {
+            bail!("pipeline text missing 'end'");
+        }
+        Ok(Self {
+            preset: preset.context("pipeline text missing 'preset'")?,
+            density: density.context("pipeline text missing 'density'")?,
+            calibrate,
+            prune: prune.context("pipeline text missing 'prune'")?,
+            recon,
+            factorize,
+            pack,
+            module_density,
+        })
+    }
+}
+
+fn espace_token(v: EspaceVariant) -> &'static str {
+    match v {
+        EspaceVariant::Mse => "mse",
+        EspaceVariant::MseNorm => "mse-norm",
+        EspaceVariant::GoMse => "go-mse",
+        EspaceVariant::GoMseNorm => "go-mse-norm",
+    }
+}
+
+fn parse_espace_token(tok: &str) -> Result<EspaceVariant> {
+    Ok(match tok {
+        "mse" => EspaceVariant::Mse,
+        "mse-norm" => EspaceVariant::MseNorm,
+        "go-mse" => EspaceVariant::GoMse,
+        "go-mse-norm" => EspaceVariant::GoMseNorm,
+        other => bail!("unknown espace variant '{other}'"),
+    })
+}
+
+/// Execute a validated pipeline on a model.
+pub fn run(spec: &PipelineSpec, model: &Transformer, data: &TokenDataset) -> Result<Transformer> {
+    spec.validate()?;
+    let calib = data.calibration_windows(spec.calibrate.samples, spec.calibrate.seed);
+    match spec.prune {
+        PruneStage::SemiStructured(score) => Ok(compress_model_24(model, &calib, score)),
+        PruneStage::Structured => {
+            structured_prune_model(model, &calib, &StructuredConfig { density: spec.density })
+        }
+        PruneStage::LowRank(_) => {
+            let cfg = spec.to_compress_config()?;
+            Ok(mpifa_compress_model(model, &calib, &cfg)?.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mpifa_spec() -> PipelineSpec {
+        let mut s = PipelineSpec::low_rank("mpifa", PruneAlgo::SvdLlm, 0.55);
+        s.recon = ReconStage::Online { target: ReconTarget::Both, lambda: 0.25, alpha: 1e-3 };
+        s.factorize = FactorizeStage::Pivot(PivotStrategy::QrColumnPivot);
+        s
+    }
+
+    #[test]
+    fn text_roundtrip_all_stage_shapes() {
+        let mut specs = vec![
+            PipelineSpec::low_rank("svd", PruneAlgo::VanillaSvd, 0.6),
+            PipelineSpec::low_rank("asvd", PruneAlgo::Asvd { alpha: 0.5 }, 0.7),
+            PipelineSpec::low_rank("espace-go-mse", PruneAlgo::Espace(EspaceVariant::GoMse), 0.5),
+            mpifa_spec(),
+        ];
+        // Full-batch recon arm.
+        let mut wu = PipelineSpec::low_rank("w+u", PruneAlgo::SvdLlm, 0.5);
+        wu.recon = ReconStage::FullBatch { max_samples: 16 };
+        specs.push(wu);
+        // Structured + semi-structured.
+        let mut st = PipelineSpec::low_rank("llm-pruner", PruneAlgo::SvdLlm, 0.5);
+        st.prune = PruneStage::Structured;
+        specs.push(st);
+        let mut s24 = PipelineSpec::low_rank("wanda24", PruneAlgo::SvdLlm, 0.5);
+        s24.prune = PruneStage::SemiStructured(Score24::Ria { a: 0.5 });
+        specs.push(s24);
+        // Hybrid with module overrides.
+        let mut hy = PipelineSpec::low_rank("lowrank-s24", PruneAlgo::SvdLlm, 0.65);
+        hy.recon = ReconStage::Online { target: ReconTarget::UOnly, lambda: 0.125, alpha: 2e-3 };
+        hy.pack = PackStage::Sparse24Residual;
+        hy.module_density.push(ModuleDensity { layer: 0, kind: ModuleKind::Q, density: 0.9 });
+        hy.module_density.push(ModuleDensity { layer: 1, kind: ModuleKind::Down, density: 0.55 });
+        specs.push(hy);
+
+        for spec in specs {
+            let text = spec.to_text();
+            let back = PipelineSpec::parse(&text)
+                .unwrap_or_else(|e| panic!("parse failed for {}: {e:#}\n{text}", spec.preset));
+            assert_eq!(back, spec, "round-trip mismatch for {}", spec.preset);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(PipelineSpec::parse("").is_err());
+        assert!(PipelineSpec::parse("pipeline v2\nend\n").is_err());
+        assert!(PipelineSpec::parse("pipeline v1\npreset x\nend\n").is_err()); // missing fields
+        assert!(PipelineSpec::parse(&mpifa_spec().to_text().replace("end\n", "")).is_err());
+        assert!(PipelineSpec::parse(
+            "pipeline v1\npreset x\ndensity 0.5\nprune lowrank bogus\nend\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validation_rules() {
+        let mut s = mpifa_spec();
+        assert!(s.validate().is_ok());
+        s.density = 1.5;
+        assert!(s.validate().is_err());
+
+        // PIFA + residual pack is contradictory.
+        let mut s = mpifa_spec();
+        s.pack = PackStage::Sparse24Residual;
+        assert!(s.validate().is_err());
+
+        // Residual pack needs density > 0.5.
+        let mut s = PipelineSpec::low_rank("h", PruneAlgo::SvdLlm, 0.4);
+        s.pack = PackStage::Sparse24Residual;
+        assert!(s.validate().is_err());
+        s.density = 0.7;
+        assert!(s.validate().is_ok());
+
+        // 2:4 prune must sit at 0.5 with no downstream stages.
+        let mut s = PipelineSpec::low_rank("m24", PruneAlgo::SvdLlm, 0.5);
+        s.prune = PruneStage::SemiStructured(Score24::Magnitude);
+        assert!(s.validate().is_ok());
+        s.factorize = FactorizeStage::Pivot(PivotStrategy::Lu);
+        assert!(s.validate().is_err());
+
+        // Bad lambda.
+        let mut s = mpifa_spec();
+        s.recon = ReconStage::Online { target: ReconTarget::Both, lambda: 1.5, alpha: 1e-3 };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn flavour_mapping() {
+        assert_eq!(mpifa_spec().artifact_flavour(), "pifa");
+        assert_eq!(
+            PipelineSpec::low_rank("w", PruneAlgo::SvdLlm, 0.5).artifact_flavour(),
+            "lowrank"
+        );
+        let mut s24 = PipelineSpec::low_rank("x", PruneAlgo::SvdLlm, 0.5);
+        s24.prune = PruneStage::SemiStructured(Score24::Wanda);
+        assert_eq!(s24.artifact_flavour(), "sparse24");
+        let mut hy = PipelineSpec::low_rank("h", PruneAlgo::SvdLlm, 0.7);
+        hy.pack = PackStage::Sparse24Residual;
+        assert_eq!(hy.artifact_flavour(), "lowrank+s24");
+        let mut st = PipelineSpec::low_rank("p", PruneAlgo::SvdLlm, 0.5);
+        st.prune = PruneStage::Structured;
+        assert_eq!(st.artifact_flavour(), "dense");
+    }
+
+    #[test]
+    fn config_roundtrip_preserves_stages() {
+        let mut spec = mpifa_spec();
+        spec.module_density.push(ModuleDensity { layer: 1, kind: ModuleKind::Gate, density: 0.8 });
+        let cfg = spec.to_compress_config().unwrap();
+        assert!(cfg.apply_pifa);
+        assert_eq!(cfg.alpha, 1e-3);
+        let back = PipelineSpec::from_compress_config("mpifa", spec.calibrate, &cfg);
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn calib_seed_is_the_shared_constant() {
+        assert_eq!(CalibrateStage::default().seed, CALIB_SEED);
+        assert_eq!(CALIB_SEED, 77);
+    }
+}

@@ -11,7 +11,10 @@
 //!   (Algorithm 1), the PIFA layer (Algorithm 2), and cost accounting.
 //! * [`compress`] — SVD-LLM whitening + the Online
 //!   Error-Accumulation-Minimization Reconstruction (M) + the end-to-end
-//!   MPIFA driver (Algorithm 3).
+//!   MPIFA driver (Algorithm 3), fronted by the staged
+//!   [`compress::pipeline`] (Calibrate → Prune → Reconstruct → Factorize
+//!   → Pack) and the name-based [`compress::registry`] every consumer
+//!   dispatches through.
 //! * [`baselines`] — every comparator in the paper's evaluation.
 //! * [`sparse24`] — 2:4 semi-structured sparsity substrate.
 //! * [`model`] / [`train`] / [`data`] / [`eval`] — the tiny-LLaMA stand-in

@@ -5,21 +5,32 @@
 //! ```text
 //! pifa train    --model tiny-s [--out PATH]
 //! pifa compress --model tiny-s --method mpifa --density 0.55 [--out PATH]
-//! pifa eval     --ckpt PATH [--corpus wiki|c4]
+//!               [--recon none|fullbatch|online] [--lambda F]
+//!               [--pivot none|qr|lu] [--pack none|s24]
+//! pifa methods  — list registered compression methods
+//! pifa eval     --ckpt PATH [--corpus wiki|c4]   (prints provenance)
 //! pifa generate --ckpt PATH --prompt "the banlanba ..." [--max-new N]
-//! pifa serve    --model tiny-s --flavour dense|pifa [--requests N] [--no-kv]
+//! pifa serve    --model tiny-s --flavour dense|pifa [--method NAME]
+//!               [--requests N] [--no-kv]  (+ the compress stage overrides)
 //! pifa tables   <fig1|tab2|tab3|...|all>   (same generators as cargo bench)
 //! pifa info     — artifact + platform diagnostics
 //! ```
+//!
+//! Compression methods resolve through `pifa::compress::registry` — there
+//! is no method enum here. Stage overrides mutate the preset's
+//! `PipelineSpec` before it runs, and the final spec is embedded in saved
+//! checkpoints as provenance.
 
-use anyhow::{bail, Context, Result};
-use pifa::bench::experiments::{
-    self, compress_with_method, ensure_trained_model, test_ppl, Method,
-};
+use anyhow::{anyhow, bail, Context, Result};
+use pifa::bench::experiments::{self, ensure_trained_model, test_ppl};
+use pifa::compress::pipeline::{self, FactorizeStage, PackStage, PipelineSpec, ReconStage};
+use pifa::compress::registry::{self, CompressionOutput};
+use pifa::compress::ReconTarget;
 use pifa::coordinator::{BatcherConfig, GenRequest, GenerationEngine, GenerationMode, Server};
 use pifa::data::vocab::Vocab;
-use pifa::model::serialize::{load_checkpoint, save_checkpoint};
-use pifa::runtime::{Engine, ModelRunner};
+use pifa::model::serialize::{load_checkpoint, load_checkpoint_full, save_checkpoint_with_spec};
+use pifa::pifa::PivotStrategy;
+use pifa::runtime::{Engine, Manifest, ModelRunner};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -45,34 +56,78 @@ fn artifact_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn method_by_name(name: &str) -> Result<Method> {
-    use pifa::baselines::prune::EspaceVariant as E;
-    Ok(match name {
-        "svd" => Method::Svd,
-        "asvd" => Method::Asvd,
-        "svdllm" | "svd-llm" => Method::SvdLlm,
-        "w" => Method::SvdLlmW,
-        "w+u" => Method::SvdLlmWU,
-        "w+m" => Method::WPlusM,
-        "mpifa" => Method::Mpifa,
-        "mpifa-ns" | "mpifans" => Method::MpifaNs,
-        "magnitude24" => Method::Magnitude24,
-        "wanda24" => Method::Wanda24,
-        "ria24" => Method::Ria24,
-        "llm-pruner" | "llmpruner" => Method::LlmPruner,
-        "espace-mse" => Method::Espace(E::Mse),
-        "espace-mse-norm" => Method::Espace(E::MseNorm),
-        "espace-go-mse" => Method::Espace(E::GoMse),
-        "espace-go-mse-norm" => Method::Espace(E::GoMseNorm),
-        other => bail!("unknown method '{other}'"),
-    })
+/// True when any pipeline stage override flag is present.
+fn has_stage_overrides(flags: &HashMap<String, String>) -> bool {
+    ["recon", "lambda", "pivot", "pack"].iter().any(|k| flags.contains_key(*k))
+}
+
+/// Apply `--recon/--lambda/--pivot/--pack` onto a preset's spec.
+fn apply_stage_overrides(spec: &mut PipelineSpec, flags: &HashMap<String, String>) -> Result<()> {
+    if let Some(recon) = flags.get("recon") {
+        spec.recon = match recon.as_str() {
+            "none" => ReconStage::None,
+            "fullbatch" | "u" => ReconStage::FullBatch { max_samples: 16 },
+            "online" | "m" => {
+                ReconStage::Online { target: ReconTarget::Both, lambda: 0.25, alpha: 1e-3 }
+            }
+            other => bail!("unknown --recon '{other}' (none|fullbatch|online)"),
+        };
+    }
+    if let Some(lam) = flags.get("lambda") {
+        let lambda: f64 = lam.parse().context("--lambda must be a number")?;
+        match &mut spec.recon {
+            ReconStage::Online { lambda: l, .. } => *l = lambda,
+            other => bail!("--lambda only applies to online reconstruction (recon is {other:?})"),
+        }
+    }
+    if let Some(pivot) = flags.get("pivot") {
+        spec.factorize = match pivot.as_str() {
+            "none" => FactorizeStage::None,
+            "qr" => FactorizeStage::Pivot(PivotStrategy::QrColumnPivot),
+            "lu" => FactorizeStage::Pivot(PivotStrategy::Lu),
+            other => bail!("unknown --pivot '{other}' (none|qr|lu)"),
+        };
+    }
+    if let Some(pack) = flags.get("pack") {
+        spec.pack = match pack.as_str() {
+            "none" => PackStage::None,
+            "s24" | "sparse24-residual" => PackStage::Sparse24Residual,
+            other => bail!("unknown --pack '{other}' (none|s24)"),
+        };
+    }
+    spec.validate()
+}
+
+/// Resolve a method + overrides into a compressed model with its spec.
+fn compress_via_registry(
+    model: &pifa::model::transformer::Transformer,
+    data: &pifa::data::batch::TokenDataset,
+    method: &str,
+    density: f64,
+    flags: &HashMap<String, String>,
+) -> Result<CompressionOutput> {
+    let compressor = registry::get(method)?;
+    if has_stage_overrides(flags) {
+        let mut spec = compressor.spec(density).ok_or_else(|| {
+            anyhow!(
+                "preset '{}' selects among pipelines at compress time and does not accept \
+                 stage overrides",
+                compressor.name()
+            )
+        })?;
+        apply_stage_overrides(&mut spec, flags)?;
+        let compressed = pipeline::run(&spec, model, data)?;
+        Ok(CompressionOutput { model: compressed, spec })
+    } else {
+        compressor.compress(model, data, density)
+    }
 }
 
 fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     let name = flags.get("model").map(String::as_str).unwrap_or("tiny-s");
     let model = ensure_trained_model(name)?;
     if let Some(out) = flags.get("out") {
-        save_checkpoint(&model, Path::new(out))?;
+        pifa::model::serialize::save_checkpoint(&model, Path::new(out))?;
         println!("saved {out}");
     }
     let data = experiments::wiki_dataset();
@@ -82,36 +137,55 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
     let name = flags.get("model").map(String::as_str).unwrap_or("tiny-s");
-    let method = method_by_name(flags.get("method").map(String::as_str).unwrap_or("mpifa"))?;
+    let method = flags.get("method").map(String::as_str).unwrap_or("mpifa");
     let density: f64 = flags.get("density").map(String::as_str).unwrap_or("0.55").parse()?;
     let model = ensure_trained_model(name)?;
     let data = experiments::wiki_dataset();
     let base = test_ppl(&model, &data);
     let t0 = std::time::Instant::now();
-    let compressed = compress_with_method(&model, &data, method, density)?;
+    let output = compress_via_registry(&model, &data, method, density, flags)?;
     let secs = t0.elapsed().as_secs_f64();
-    let ppl = test_ppl(&compressed, &data);
+    let ppl = test_ppl(&output.model, &data);
+    println!("pipeline: {}", output.spec.describe());
     println!(
         "{name} {} @ density {density}: ppl {base:.3} -> {ppl:.3} (achieved density {:.3}, {secs:.1}s)",
-        method.name(),
-        compressed.density()
+        registry::get(method)?.label(),
+        output.model.density()
     );
     if let Some(out) = flags.get("out") {
-        save_checkpoint(&compressed, Path::new(out))?;
-        println!("saved {out}");
+        save_checkpoint_with_spec(&output.model, Path::new(out), Some(&output.spec.to_text()))?;
+        println!("saved {out} (with pipeline provenance)");
+    }
+    Ok(())
+}
+
+fn cmd_methods() -> Result<()> {
+    println!("registered compression methods:");
+    for c in registry::all() {
+        let aliases = if c.aliases().is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", c.aliases().join(", "))
+        };
+        println!("  {:<20} {:<18} {}{aliases}", c.name(), c.label(), c.summary());
     }
     Ok(())
 }
 
 fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
     let ckpt = flags.get("ckpt").context("--ckpt required")?;
-    let model = load_checkpoint(Path::new(ckpt))?;
+    let (model, provenance) = load_checkpoint_full(Path::new(ckpt))?;
     let corpus = flags.get("corpus").map(String::as_str).unwrap_or("wiki");
     let data = match corpus {
         "wiki" => experiments::wiki_dataset(),
         "c4" => experiments::c4_dataset(),
         other => bail!("unknown corpus {other}"),
     };
+    match provenance.as_deref().map(PipelineSpec::parse) {
+        Some(Ok(spec)) => println!("provenance: {}", spec.describe()),
+        Some(Err(e)) => println!("provenance: unreadable ({e:#})"),
+        None => println!("provenance: none recorded"),
+    }
     println!(
         "{}: {corpus} test ppl {:.3} (density {:.3})",
         model.cfg.name,
@@ -149,12 +223,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         ),
         "pifa" => {
             let data = experiments::wiki_dataset();
-            let compressed = compress_with_method(&model, &data, Method::Mpifa, 0.55)?;
-            (
-                format!("{name}_pifa55_prefill_b1_t64"),
-                format!("{name}_pifa55_decode_b1"),
-                compressed,
-            )
+            let method = flags.get("method").map(String::as_str).unwrap_or("mpifa");
+            let density: f64 =
+                flags.get("density").map(String::as_str).unwrap_or("0.55").parse()?;
+            let output = compress_via_registry(&model, &data, method, density, flags)?;
+            println!("pipeline: {}", output.spec.describe());
+            let prefill = format!("{name}_pifa55_prefill_b1_t64");
+            // Gate on artifact compatibility before spawning the server:
+            // the lowered artifact fixes flavour + density.
+            let manifest = Manifest::load(&artifact_dir())?;
+            manifest
+                .get(&prefill)?
+                .kind
+                .validate_provenance(output.spec.artifact_flavour(), output.spec.density)
+                .context("compressed model incompatible with the pifa55 artifacts")?;
+            (prefill, format!("{name}_pifa55_decode_b1"), output.model)
         }
         other => bail!("unknown flavour {other}"),
     };
@@ -218,7 +301,7 @@ fn cmd_info() -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: pifa <train|compress|eval|generate|serve|tables|info> [--flags]\n\
+        "usage: pifa <train|compress|methods|eval|generate|serve|tables|info> [--flags]\n\
          see rust/src/main.rs docs for details"
     );
     std::process::exit(2)
@@ -231,6 +314,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&flags),
         "compress" => cmd_compress(&flags),
+        "methods" => cmd_methods(),
         "eval" => cmd_eval(&flags),
         "generate" => cmd_generate(&flags),
         "serve" => cmd_serve(&flags),

@@ -45,6 +45,14 @@ fn grad_add(a: &mut LinearGrad, b: &LinearGrad) {
             *dc = dc.add_mat(c2);
         }
         (LinearGrad::Sparse24(x), LinearGrad::Sparse24(y)) => *x = x.add_mat(y),
+        (
+            LinearGrad::LowRankSparse { du, dvt, dres },
+            LinearGrad::LowRankSparse { du: du2, dvt: dvt2, dres: dres2 },
+        ) => {
+            *du = du.add_mat(du2);
+            *dvt = dvt.add_mat(dvt2);
+            *dres = dres.add_mat(dres2);
+        }
         _ => panic!("grad_add: representation mismatch"),
     }
 }
@@ -59,6 +67,11 @@ fn grad_scale(g: &mut LinearGrad, s: f32) {
         LinearGrad::Pifa { dw_p, dc } => {
             dw_p.scale_inplace(s);
             dc.scale_inplace(s);
+        }
+        LinearGrad::LowRankSparse { du, dvt, dres } => {
+            du.scale_inplace(s);
+            dvt.scale_inplace(s);
+            dres.scale_inplace(s);
         }
     }
 }
@@ -120,6 +133,7 @@ impl ModelGrads {
             LinearGrad::Dense(x) | LinearGrad::Sparse24(x) => mat(x),
             LinearGrad::LowRank { du, dvt } => mat(du) + mat(dvt),
             LinearGrad::Pifa { dw_p, dc } => mat(dw_p) + mat(dc),
+            LinearGrad::LowRankSparse { du, dvt, dres } => mat(du) + mat(dvt) + mat(dres),
         };
         for b in &self.blocks {
             acc += lin(&b.wq) + lin(&b.wk) + lin(&b.wv) + lin(&b.wo);

@@ -24,6 +24,11 @@ pub enum LinearRepr {
     Pifa(PifaLayer<f32>),
     /// 2:4 semi-structured sparse.
     Sparse24(Sparse24Mat),
+    /// Hybrid low-rank + 2:4 residual (LoSparse-style composition):
+    /// `W ≈ U V^T + R` with `R` semi-structured. The low-rank part carries
+    /// the principal subspace; the residual recovers salient outliers the
+    /// subspace misses.
+    LowRankSparse { u: Mat<f32>, vt: Mat<f32>, residual: Sparse24Mat },
 }
 
 /// Gradients matching a [`LinearRepr`].
@@ -33,6 +38,8 @@ pub enum LinearGrad {
     Pifa { dw_p: Mat<f32>, dc: Mat<f32> },
     /// Dense-shaped gradient already masked to the 2:4 pattern.
     Sparse24(Mat<f32>),
+    /// Factor gradients plus a masked dense residual gradient.
+    LowRankSparse { du: Mat<f32>, dvt: Mat<f32>, dres: Mat<f32> },
 }
 
 impl LinearRepr {
@@ -43,6 +50,7 @@ impl LinearRepr {
             LinearRepr::LowRank { u, .. } => u.rows(),
             LinearRepr::Pifa(p) => p.m,
             LinearRepr::Sparse24(s) => s.m,
+            LinearRepr::LowRankSparse { u, .. } => u.rows(),
         }
     }
 
@@ -53,6 +61,7 @@ impl LinearRepr {
             LinearRepr::LowRank { vt, .. } => vt.cols(),
             LinearRepr::Pifa(p) => p.n,
             LinearRepr::Sparse24(s) => s.n,
+            LinearRepr::LowRankSparse { vt, .. } => vt.cols(),
         }
     }
 
@@ -63,6 +72,9 @@ impl LinearRepr {
             LinearRepr::LowRank { u, vt } => u.rows() * u.cols() + vt.rows() * vt.cols(),
             LinearRepr::Pifa(p) => p.param_count(),
             LinearRepr::Sparse24(s) => s.value_count(),
+            LinearRepr::LowRankSparse { u, vt, residual } => {
+                u.rows() * u.cols() + vt.rows() * vt.cols() + residual.value_count()
+            }
         }
     }
 
@@ -71,6 +83,9 @@ impl LinearRepr {
         match self {
             LinearRepr::Sparse24(s) => s.memory_bytes_fp16(),
             LinearRepr::Pifa(p) => p.param_count() * 2 + p.rank() * 4, // + i32 indices
+            LinearRepr::LowRankSparse { u, vt, residual } => {
+                (u.rows() * u.cols() + vt.rows() * vt.cols()) * 2 + residual.memory_bytes_fp16()
+            }
             other => other.param_count() * 2,
         }
     }
@@ -85,6 +100,10 @@ impl LinearRepr {
             }
             LinearRepr::Pifa(p) => p.apply_rows(x),
             LinearRepr::Sparse24(s) => s.apply_rows(x),
+            LinearRepr::LowRankSparse { u, vt, residual } => {
+                let z = linalg::matmul_nt(x, vt); // b x r
+                linalg::matmul_nt(&z, u).add_mat(&residual.apply_rows(x))
+            }
         }
     }
 
@@ -133,16 +152,33 @@ impl LinearRepr {
             LinearRepr::Sparse24(s) => {
                 let w = s.to_dense();
                 let mut dw = linalg::matmul_tn(dy, x);
-                // Mask the gradient to the 2:4 pattern (dropped weights stay 0).
-                for i in 0..w.rows() {
-                    for j in 0..w.cols() {
-                        if w[(i, j)] == 0.0 {
-                            dw[(i, j)] = 0.0;
-                        }
+                // Mask the gradient to the packed 2:4 pattern (kept-but-zero
+                // values are live parameters, so use the metadata mask, not
+                // value != 0).
+                for (g, &keep) in dw.as_mut_slice().iter_mut().zip(s.keep_mask().iter()) {
+                    if !keep {
+                        *g = 0.0;
                     }
                 }
                 let dx = linalg::matmul(dy, &w);
                 (dx, LinearGrad::Sparse24(dw))
+            }
+            LinearRepr::LowRankSparse { u, vt, residual } => {
+                // Factored part exactly as LowRank.
+                let z = linalg::matmul_nt(x, vt); // b x r
+                let dz = linalg::matmul(dy, u); // b x r
+                let du = linalg::matmul_tn(dy, &z); // m x r
+                let dvt = linalg::matmul_tn(&dz, x); // r x n
+                // Residual part exactly as Sparse24 (metadata-masked dense).
+                let mut dres = linalg::matmul_tn(dy, x);
+                for (g, &keep) in dres.as_mut_slice().iter_mut().zip(residual.keep_mask().iter()) {
+                    if !keep {
+                        *g = 0.0;
+                    }
+                }
+                let dx =
+                    linalg::matmul(&dz, vt).add_mat(&linalg::matmul(dy, &residual.to_dense()));
+                (dx, LinearGrad::LowRankSparse { du, dvt, dres })
             }
         }
     }
@@ -173,18 +209,35 @@ impl LinearRepr {
                 }
             }
             (LinearRepr::Sparse24(s), LinearGrad::Sparse24(dw)) => {
-                // Update kept values through dense round-trip (fine-tuning
-                // path only; never on the inference hot path).
-                let mut w = s.to_dense();
-                let mask: Vec<bool> = w.as_slice().iter().map(|&v| v != 0.0).collect();
-                for ((p, g), &keep) in
-                    w.as_mut_slice().iter_mut().zip(dw.as_slice()).zip(mask.iter())
-                {
-                    if keep {
-                        *p -= lr * g;
+                s.update_dense(|w, mask| {
+                    for ((p, g), &keep) in
+                        w.as_mut_slice().iter_mut().zip(dw.as_slice()).zip(mask.iter())
+                    {
+                        if keep {
+                            *p -= lr * g;
+                        }
                     }
+                });
+            }
+            (
+                LinearRepr::LowRankSparse { u, vt, residual },
+                LinearGrad::LowRankSparse { du, dvt, dres },
+            ) => {
+                for (p, g) in u.as_mut_slice().iter_mut().zip(du.as_slice()) {
+                    *p -= lr * g;
                 }
-                *s = Sparse24Mat::pack(&w, &mask);
+                for (p, g) in vt.as_mut_slice().iter_mut().zip(dvt.as_slice()) {
+                    *p -= lr * g;
+                }
+                residual.update_dense(|w, mask| {
+                    for ((p, g), &keep) in
+                        w.as_mut_slice().iter_mut().zip(dres.as_slice()).zip(mask.iter())
+                    {
+                        if keep {
+                            *p -= lr * g;
+                        }
+                    }
+                });
             }
             _ => panic!("LinearRepr::apply_grad: representation/gradient mismatch"),
         }
@@ -197,6 +250,9 @@ impl LinearRepr {
             LinearRepr::LowRank { u, vt } => linalg::matmul(u, vt),
             LinearRepr::Pifa(p) => p.reconstruct(),
             LinearRepr::Sparse24(s) => s.to_dense(),
+            LinearRepr::LowRankSparse { u, vt, residual } => {
+                linalg::matmul(u, vt).add_mat(&residual.to_dense())
+            }
         }
     }
 
@@ -207,6 +263,7 @@ impl LinearRepr {
             LinearRepr::LowRank { .. } => "lowrank",
             LinearRepr::Pifa(_) => "pifa",
             LinearRepr::Sparse24(_) => "sparse24",
+            LinearRepr::LowRankSparse { .. } => "lowrank+s24",
         }
     }
 }
@@ -225,11 +282,14 @@ mod tests {
         let w_lr = linalg::matmul(&u, &vt);
         let pifa = pivoting_factorization(&w_lr, 4, PivotStrategy::QrColumnPivot).unwrap();
         let sp = Sparse24Mat::pack_magnitude(&w_dense);
+        let res = Sparse24Mat::pack_magnitude(&w_dense.sub_mat(&w_lr));
+        let w_hybrid = w_lr.add_mat(&res.to_dense());
         vec![
             (LinearRepr::Dense(w_dense.clone()), w_dense.clone()),
             (LinearRepr::LowRank { u: u.clone(), vt: vt.clone() }, w_lr.clone()),
-            (LinearRepr::Pifa(pifa), w_lr),
+            (LinearRepr::Pifa(pifa), w_lr.clone()),
             (LinearRepr::Sparse24(sp.clone()), sp.to_dense()),
+            (LinearRepr::LowRankSparse { u, vt, residual: res }, w_hybrid),
         ]
     }
 
@@ -338,6 +398,32 @@ mod tests {
                         for j in 0..w.cols() {
                             if w[(i, j)] == 0.0 {
                                 assert_eq!(dw[(i, j)], 0.0);
+                            }
+                        }
+                    }
+                }
+                (
+                    LinearRepr::LowRankSparse { u, vt, residual },
+                    LinearGrad::LowRankSparse { du, dres, .. },
+                ) => {
+                    // Factor gradient: finite-difference one entry of U.
+                    let mut up = u.clone();
+                    up[(1, 2)] += h;
+                    let mut um = u.clone();
+                    um[(1, 2)] -= h;
+                    let mk = |uu: Mat<f32>| LinearRepr::LowRankSparse {
+                        u: uu,
+                        vt: vt.clone(),
+                        residual: residual.clone(),
+                    };
+                    let num = (objective(&mk(up)) - objective(&mk(um))) / (2.0 * h);
+                    assert!((num - du[(1, 2)]).abs() < 5e-2, "hybrid du fd {num} vs {}", du[(1, 2)]);
+                    // Residual gradient respects the 2:4 mask.
+                    let r = residual.to_dense();
+                    for i in 0..r.rows() {
+                        for j in 0..r.cols() {
+                            if r[(i, j)] == 0.0 {
+                                assert_eq!(dres[(i, j)], 0.0);
                             }
                         }
                     }

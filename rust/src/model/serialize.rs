@@ -1,8 +1,11 @@
 //! Checkpoint (de)serialization — a small self-describing binary container
 //! (no serde in the offline crate set).
 //!
-//! Layout: magic `PIFACKPT`, u32 version, config block, then each tensor
-//! as `[tag u8][dims...][payload]`. All integers little-endian.
+//! Layout: magic `PIFACKPT`, u32 version, config block, provenance block
+//! (version >= 3: the producing pipeline's text form, see
+//! [`crate::compress::pipeline::PipelineSpec::to_text`]), then each tensor
+//! as `[tag u8][dims...][payload]`. All integers little-endian. Version 2
+//! checkpoints (no provenance block) still load.
 
 use crate::linalg::Mat;
 use crate::model::config::ModelConfig;
@@ -16,7 +19,9 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"PIFACKPT";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
+/// Oldest version `load_checkpoint` still reads (pre-provenance).
+const MIN_VERSION: u32 = 2;
 
 fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -103,6 +108,20 @@ fn r_mat(r: &mut impl Read) -> Result<Mat<f32>> {
     Ok(Mat::from_vec(rows, cols, data))
 }
 
+fn w_mask(w: &mut impl Write, mask: &[bool]) -> Result<()> {
+    w_u64(w, mask.len() as u64)?;
+    let bytes: Vec<u8> = mask.iter().map(|&b| b as u8).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn r_mask(r: &mut impl Read) -> Result<Vec<bool>> {
+    let n = r_u64(r)? as usize;
+    let mut bytes = vec![0u8; n];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.into_iter().map(|b| b != 0).collect())
+}
+
 fn w_linear(w: &mut impl Write, l: &LinearRepr) -> Result<()> {
     match l {
         LinearRepr::Dense(m) => {
@@ -126,9 +145,19 @@ fn w_linear(w: &mut impl Write, l: &LinearRepr) -> Result<()> {
             w_mat(w, &p.c)?;
         }
         LinearRepr::Sparse24(s) => {
-            // Stored as masked dense (simple, round-trips exactly).
-            w.write_all(&[3u8])?;
+            // Masked dense + the explicit keep-mask: kept-but-zero values
+            // must survive the round trip (tag 3 inferred the mask from
+            // nonzeros and could lose them).
+            w.write_all(&[5u8])?;
             w_mat(w, &s.to_dense())?;
+            w_mask(w, &s.keep_mask())?;
+        }
+        LinearRepr::LowRankSparse { u, vt, residual } => {
+            w.write_all(&[4u8])?;
+            w_mat(w, u)?;
+            w_mat(w, vt)?;
+            w_mat(w, &residual.to_dense())?;
+            w_mask(w, &residual.keep_mask())?;
         }
     }
     Ok(())
@@ -162,16 +191,39 @@ fn r_linear(r: &mut impl Read) -> Result<LinearRepr> {
             LinearRepr::Pifa(PifaLayer::new(m, n, pivots, non_pivots, w_p, c))
         }
         3 => {
+            // Legacy (v2) 2:4 payload: mask inferred from nonzeros.
             let dense = r_mat(r)?;
             let mask: Vec<bool> = dense.as_slice().iter().map(|&v| v != 0.0).collect();
+            LinearRepr::Sparse24(Sparse24Mat::pack(&dense, &mask))
+        }
+        4 => {
+            let u = r_mat(r)?;
+            let vt = r_mat(r)?;
+            let dense = r_mat(r)?;
+            let mask = r_mask(r)?;
+            LinearRepr::LowRankSparse { u, vt, residual: Sparse24Mat::pack(&dense, &mask) }
+        }
+        5 => {
+            let dense = r_mat(r)?;
+            let mask = r_mask(r)?;
             LinearRepr::Sparse24(Sparse24Mat::pack(&dense, &mask))
         }
         t => bail!("unknown linear tag {t}"),
     })
 }
 
-/// Save a model checkpoint.
+/// Save a model checkpoint without provenance.
 pub fn save_checkpoint(model: &Transformer, path: &Path) -> Result<()> {
+    save_checkpoint_with_spec(model, path, None)
+}
+
+/// Save a model checkpoint, optionally embedding the producing pipeline's
+/// provenance text (`PipelineSpec::to_text`).
+pub fn save_checkpoint_with_spec(
+    model: &Transformer,
+    path: &Path,
+    provenance: Option<&str>,
+) -> Result<()> {
     let file = std::fs::File::create(path)
         .with_context(|| format!("create checkpoint {}", path.display()))?;
     let mut w = std::io::BufWriter::new(file);
@@ -184,6 +236,17 @@ pub fn save_checkpoint(model: &Transformer, path: &Path) -> Result<()> {
     }
     w_f64(&mut w, c.rope_theta)?;
     w.write_all(&c.norm_eps.to_le_bytes())?;
+    // v3: the RoPE head dim is stored explicitly — structured pruning
+    // shrinks cfg.n_heads while keeping the per-head width, so it cannot
+    // be recomputed as dim / n_heads.
+    w_u64(&mut w, model.rope.head_dim as u64)?;
+    match provenance {
+        Some(text) => {
+            w.write_all(&[1u8])?;
+            w_str(&mut w, text)?;
+        }
+        None => w.write_all(&[0u8])?,
+    }
     w_mat(&mut w, &model.embed)?;
     w_mat(&mut w, &model.head)?;
     w_f32s(&mut w, &model.final_norm)?;
@@ -198,8 +261,14 @@ pub fn save_checkpoint(model: &Transformer, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load a model checkpoint.
+/// Load a model checkpoint (discarding any embedded provenance).
 pub fn load_checkpoint(path: &Path) -> Result<Transformer> {
+    load_checkpoint_full(path).map(|(model, _)| model)
+}
+
+/// Load a model checkpoint plus its embedded provenance text, if the
+/// checkpoint carries one (version >= 3).
+pub fn load_checkpoint_full(path: &Path) -> Result<(Transformer, Option<String>)> {
     let file = std::fs::File::open(path)
         .with_context(|| format!("open checkpoint {}", path.display()))?;
     let mut r = std::io::BufReader::new(file);
@@ -209,8 +278,8 @@ pub fn load_checkpoint(path: &Path) -> Result<Transformer> {
         bail!("not a PIFA checkpoint: bad magic");
     }
     let version = r_u32(&mut r)?;
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version} (expected {VERSION})");
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        bail!("unsupported checkpoint version {version} (supported: {MIN_VERSION}..={VERSION})");
     }
     let name = r_str(&mut r)?;
     let vocab = r_u64(&mut r)? as usize;
@@ -223,6 +292,15 @@ pub fn load_checkpoint(path: &Path) -> Result<Transformer> {
     let mut eps_b = [0u8; 4];
     r.read_exact(&mut eps_b)?;
     let norm_eps = f32::from_le_bytes(eps_b);
+    let (head_dim, provenance) = if version >= 3 {
+        let head_dim = r_u64(&mut r)? as usize;
+        let mut flag = [0u8; 1];
+        r.read_exact(&mut flag)?;
+        let prov = if flag[0] == 1 { Some(r_str(&mut r)?) } else { None };
+        (head_dim, prov)
+    } else {
+        (dim / n_heads, None)
+    };
     let cfg = ModelConfig {
         name,
         vocab,
@@ -255,8 +333,8 @@ pub fn load_checkpoint(path: &Path) -> Result<Transformer> {
             mlp: Mlp { gate, up, down },
         });
     }
-    let rope = RopeTable::new(cfg.max_seq, cfg.dim / cfg.n_heads, cfg.rope_theta);
-    Ok(Transformer { cfg, embed, blocks, final_norm, head, rope })
+    let rope = RopeTable::new(cfg.max_seq, head_dim, cfg.rope_theta);
+    Ok((Transformer { cfg, embed, blocks, final_norm, head, rope }, provenance))
 }
 
 #[cfg(test)]
@@ -322,5 +400,74 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load_checkpoint(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn provenance_roundtrip() {
+        let cfg = ModelConfig::tiny_s();
+        let mut rng = Rng::new(183);
+        let model = Transformer::new_random(&cfg, &mut rng);
+        let text = "pipeline v1\npreset mpifa\ndensity 0.55\nend\n";
+        let path = tmpfile("prov.ckpt");
+        save_checkpoint_with_spec(&model, &path, Some(text)).unwrap();
+        let (loaded, prov) = load_checkpoint_full(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(prov.as_deref(), Some(text));
+        assert_eq!(loaded.cfg, model.cfg);
+
+        // No-provenance saves load with None via both entry points.
+        let path2 = tmpfile("noprov.ckpt");
+        save_checkpoint(&model, &path2).unwrap();
+        let (_, prov2) = load_checkpoint_full(&path2).unwrap();
+        assert!(prov2.is_none());
+        assert!(load_checkpoint(&path2).is_ok());
+        std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn sparse24_kept_zero_value_survives_roundtrip() {
+        let cfg = ModelConfig::tiny_s();
+        let mut rng = Rng::new(185);
+        let mut model = Transformer::new_random(&cfg, &mut rng);
+        let mut w = model.blocks[0].attn.wv.to_dense();
+        // Force a kept-but-zero entry: keep the magnitude mask but zero
+        // one of its surviving values. The explicit-mask payload (tag 5)
+        // must preserve it; nonzero inference would drop it.
+        let mask = Sparse24Mat::pack_magnitude(&w).keep_mask();
+        let n = w.cols();
+        let idx = mask.iter().position(|&b| b).unwrap();
+        w[(idx / n, idx % n)] = 0.0;
+        model.blocks[0].attn.wv = LinearRepr::Sparse24(Sparse24Mat::pack(&w, &mask));
+
+        let path = tmpfile("zerokeep.ckpt");
+        save_checkpoint(&model, &path).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        match &loaded.blocks[0].attn.wv {
+            LinearRepr::Sparse24(s) => assert_eq!(s.keep_mask(), mask),
+            other => panic!("wrong repr {}", other.kind_name()),
+        }
+    }
+
+    #[test]
+    fn hybrid_repr_roundtrip() {
+        let cfg = ModelConfig::tiny_s();
+        let mut rng = Rng::new(184);
+        let mut model = Transformer::new_random(&cfg, &mut rng);
+        let w = model.blocks[0].attn.wk.to_dense();
+        let f = crate::linalg::svd(&w);
+        let (u, vt) = f.truncate(6);
+        let resid = Sparse24Mat::pack_magnitude(&w.sub_mat(&crate::linalg::matmul(&u, &vt)));
+        model.blocks[0].attn.wk = LinearRepr::LowRankSparse { u, vt, residual: resid };
+
+        let path = tmpfile("hybrid.ckpt");
+        save_checkpoint(&model, &path).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.blocks[0].attn.wk.kind_name(), "lowrank+s24");
+        let la = model.forward(&[1, 8, 3], None);
+        let lb = loaded.forward(&[1, 8, 3], None);
+        assert!(la.rel_fro_err(&lb) < 1e-6);
+        assert_eq!(loaded.blocks[0].attn.wk.param_count(), model.blocks[0].attn.wk.param_count());
     }
 }

@@ -63,6 +63,35 @@ pub enum ArtifactKind {
     },
 }
 
+impl ArtifactKind {
+    /// Validate that a model compressed with pipeline-`flavour`-shaped
+    /// output at `density` can be bound to this artifact (the lowering in
+    /// `python/compile/aot.py` fixes both per artifact). `flavour` is
+    /// `PipelineSpec::artifact_flavour()`; density is compared with a
+    /// small tolerance because ranks are rounded per module.
+    pub fn validate_provenance(&self, flavour: &str, density: f64) -> Result<()> {
+        match self {
+            ArtifactKind::Model { flavour: af, density: ad, .. } => {
+                if af != flavour {
+                    bail!(
+                        "artifact flavour '{af}' incompatible with pipeline output '{flavour}'"
+                    );
+                }
+                // Dense artifacts carry no density constraint.
+                if af != "dense" && (ad - density).abs() > 0.02 {
+                    bail!(
+                        "artifact lowered for density {ad} but pipeline produced {density}"
+                    );
+                }
+                Ok(())
+            }
+            ArtifactKind::LayerBench { .. } => {
+                bail!("layer-bench artifacts do not serve models")
+            }
+        }
+    }
+}
+
 /// One artifact entry.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
@@ -302,6 +331,21 @@ end
     fn missing_artifact_lookup_fails() {
         let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
         assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn provenance_validation() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let kind = &m.get("tiny-s_pifa55_decode_b1").unwrap().kind;
+        // Matching flavour + density passes (within rank-rounding slack).
+        assert!(kind.validate_provenance("pifa", 0.55).is_ok());
+        assert!(kind.validate_provenance("pifa", 0.56).is_ok());
+        // Wrong flavour or far-off density fails.
+        assert!(kind.validate_provenance("lowrank", 0.55).is_err());
+        assert!(kind.validate_provenance("pifa", 0.8).is_err());
+        // Layer benches never serve models.
+        let lb = &m.get("layer_dense_d256_t256").unwrap().kind;
+        assert!(lb.validate_provenance("pifa", 0.55).is_err());
     }
 
     #[test]

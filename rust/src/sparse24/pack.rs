@@ -81,6 +81,39 @@ impl Sparse24Mat {
         Self::pack(w, &mask)
     }
 
+    /// The exact keep-mask (from the packed metadata — independent of the
+    /// stored values, so kept-but-zero entries are reported correctly).
+    pub fn keep_mask(&self) -> Vec<bool> {
+        let groups = self.n / 4;
+        let mut mask = vec![false; self.m * self.n];
+        for i in 0..self.m {
+            for g in 0..groups {
+                let byte = self.meta[i * groups + g];
+                mask[i * self.n + g * 4 + (byte & 0b11) as usize] = true;
+                mask[i * self.n + g * 4 + ((byte >> 2) & 0b11) as usize] = true;
+            }
+        }
+        mask
+    }
+
+    /// Apply an update through the dense view while keeping the packed
+    /// pattern: `f` sees the dense matrix and the keep-mask (row-major,
+    /// `i * n + j`), entries outside the mask are re-zeroed afterwards,
+    /// and the matrix is re-packed with the *original* mask — so
+    /// kept-but-zero values stay live parameters (the fine-tuning path;
+    /// never on the inference hot path).
+    pub fn update_dense<F: FnOnce(&mut Mat<f32>, &[bool])>(&mut self, f: F) {
+        let mask = self.keep_mask();
+        let mut w = self.to_dense();
+        f(&mut w, &mask);
+        for (v, &keep) in w.as_mut_slice().iter_mut().zip(mask.iter()) {
+            if !keep {
+                *v = 0.0;
+            }
+        }
+        *self = Sparse24Mat::pack(&w, &mask);
+    }
+
     /// Materialize the masked dense matrix (testing / PPL evaluation).
     pub fn to_dense(&self) -> Mat<f32> {
         let mut w = Mat::zeros(self.m, self.n);
@@ -172,6 +205,29 @@ mod tests {
             Mat::from_rows(&[vec![0.1, 0.9, 0.5, 0.2]]);
         let mask = prune_mask_24(&s);
         assert_eq!(mask, vec![false, true, true, false]);
+    }
+
+    #[test]
+    fn keep_mask_and_update_preserve_kept_zeros() {
+        let mut rng = Rng::new(133);
+        let mut w: Mat<f32> = Mat::randn(4, 8, &mut rng);
+        let mask = prune_mask_24(&w.map(|v| v.abs()));
+        // Zero one kept value: it stays a live parameter.
+        let idx = mask.iter().position(|&b| b).unwrap();
+        w[(idx / 8, idx % 8)] = 0.0;
+        let mut sp = Sparse24Mat::pack(&w, &mask);
+        assert_eq!(sp.keep_mask(), mask, "metadata mask must ignore values");
+        // An update through the dense view can move it off zero without
+        // re-deriving the mask from nonzeros (which would panic).
+        sp.update_dense(|d, m| {
+            for (v, &keep) in d.as_mut_slice().iter_mut().zip(m.iter()) {
+                if keep {
+                    *v += 1.0;
+                }
+            }
+        });
+        assert_eq!(sp.keep_mask(), mask);
+        assert_eq!(sp.to_dense()[(idx / 8, idx % 8)], 1.0);
     }
 
     #[test]

@@ -78,19 +78,20 @@ pub fn visit_param_grads(
                     visit_mat(&mut id, &mut p.w_p, dw_p, true, f);
                     visit_mat(&mut id, &mut p.c, dc, true, f);
                 }
+                (
+                    LinearRepr::LowRankSparse { u, vt, residual },
+                    LinearGrad::LowRankSparse { du, dvt, dres },
+                ) => {
+                    visit_mat(&mut id, u, du, true, f);
+                    visit_mat(&mut id, vt, dvt, true, f);
+                    // Residual: dense round-trip; update_dense re-zeroes
+                    // dropped entries (Adam moments could drift them) and
+                    // re-packs with the metadata mask.
+                    residual.update_dense(|w, _mask| f(id, w.as_mut_slice(), dres.as_slice()));
+                    id += 1;
+                }
                 (LinearRepr::Sparse24(s), LinearGrad::Sparse24(g)) => {
-                    // Dense round-trip: update kept values, re-pack.
-                    let mut w = s.to_dense();
-                    let mask: Vec<bool> = w.as_slice().iter().map(|&v| v != 0.0).collect();
-                    f(id, w.as_mut_slice(), g.as_slice());
-                    // Dropped entries must stay zero even if Adam moved them
-                    // (their grads are masked to 0, but moments could drift).
-                    for (v, &keep) in w.as_mut_slice().iter_mut().zip(mask.iter()) {
-                        if !keep {
-                            *v = 0.0;
-                        }
-                    }
-                    *s = crate::sparse24::Sparse24Mat::pack(&w, &mask);
+                    s.update_dense(|w, _mask| f(id, w.as_mut_slice(), g.as_slice()));
                     id += 1;
                 }
                 _ => panic!("visit_param_grads: repr/grad mismatch"),

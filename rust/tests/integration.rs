@@ -4,6 +4,8 @@
 //! seeded randomized sweeps (deterministic, wide coverage).
 
 use pifa::compress::mpifa::{mpifa_compress_model, CompressConfig};
+use pifa::compress::pipeline::{PackStage, PipelineSpec, PruneStage};
+use pifa::compress::registry;
 use pifa::data::batch::{Split, TokenDataset};
 use pifa::data::corpus::{generate_corpus, Flavour};
 use pifa::data::vocab::Vocab;
@@ -155,6 +157,57 @@ fn train_compress_save_load_roundtrip() {
         "checkpoint changed PPL: {ppl_before} vs {ppl_after}"
     );
     assert_eq!(loaded.density(), compressed.density());
+}
+
+/// Pipeline API: every registered preset compresses a trained model,
+/// checkpoints with provenance, and round-trips to *identical* PPL with
+/// the restored `PipelineSpec` matching what ran.
+#[test]
+fn registry_presets_roundtrip_with_provenance() {
+    use pifa::model::serialize::{load_checkpoint_full, save_checkpoint_with_spec};
+
+    let (model, data) = tiny_trained();
+    for name in registry::names() {
+        let compressor = registry::get(name).unwrap();
+        // Pick a density the preset accepts: 2:4 one-shots are pinned at
+        // 0.5; a 2:4 residual pack needs > 0.5.
+        let density = match compressor.spec(0.6) {
+            Some(s) if matches!(s.prune, PruneStage::SemiStructured(_)) => 0.5,
+            Some(s) if s.pack == PackStage::Sparse24Residual => 0.7,
+            _ => 0.6,
+        };
+        let out = compressor
+            .compress(&model, &data, density)
+            .unwrap_or_else(|e| panic!("{name} failed to compress: {e:#}"));
+        assert_eq!(out.spec.density, density, "{name} spec density drifted");
+        let ppl_before = perplexity(&out.model, &data, Split::Test);
+        assert!(ppl_before.is_finite(), "{name} produced non-finite PPL");
+
+        let path = std::env::temp_dir().join(format!(
+            "pifa_preset_{}_{}.ckpt",
+            name.replace(|c: char| !c.is_alphanumeric(), "_"),
+            std::process::id()
+        ));
+        save_checkpoint_with_spec(&out.model, &path, Some(&out.spec.to_text())).unwrap();
+        let (loaded, provenance) = load_checkpoint_full(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        let ppl_after = perplexity(&loaded, &data, Split::Test);
+        assert!(
+            (ppl_before - ppl_after).abs() < 1e-6,
+            "{name}: checkpoint changed PPL {ppl_before} -> {ppl_after}"
+        );
+        let restored = PipelineSpec::parse(&provenance.expect("provenance missing")).unwrap();
+        assert_eq!(restored, out.spec, "{name}: provenance spec drifted through checkpoint");
+
+        // The hybrid preset must actually install hybrid modules.
+        if name == "lowrank-s24" {
+            use pifa::model::transformer::ModuleKind;
+            assert_eq!(loaded.module(0, ModuleKind::Q).kind_name(), "lowrank+s24");
+            let d = loaded.density();
+            assert!((d - density).abs() < 0.1, "hybrid density {d} vs target {density}");
+        }
+    }
 }
 
 /// Integration: density monotonicity — more parameters, no worse PPL

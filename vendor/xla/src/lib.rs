@@ -1,0 +1,255 @@
+//! Stub of the `xla` (xla_extension) bindings for the offline crate set.
+//!
+//! The host-side [`Literal`] type is a real implementation — shape-checked
+//! construction, reshape, readback — because the runtime layer and its
+//! tests use literals without a device. Everything that needs the native
+//! PJRT runtime ([`PjRtClient::cpu`], compile, execute) returns a clear
+//! [`Error`] instead, so binaries degrade gracefully on machines without
+//! the XLA shared library (`pifa info` prints the reason; artifact-backed
+//! tests skip themselves when `artifacts/` is absent).
+//!
+//! Swapping this stub for the real bindings is a one-line change in the
+//! workspace manifest; the API surface below matches what `pifa::runtime`
+//! calls.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error` so `anyhow` context
+/// attaches cleanly).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new<M: Into<String>>(msg: M) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error::new(format!(
+        "xla stub: {what} requires the native PJRT runtime (this build vendors the stub; \
+         link the real xla_extension bindings to execute artifacts)"
+    ))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized {
+    fn vec_literal(data: &[Self], dims: Vec<i64>) -> Literal;
+    fn extract(lit: &Literal) -> Result<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn vec_literal(data: &[Self], dims: Vec<i64>) -> Literal {
+        Literal::F32 { data: data.to_vec(), dims }
+    }
+    fn extract(lit: &Literal) -> Result<&[Self]> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data),
+            other => Err(Error::new(format!("literal is {}, wanted f32", other.type_name()))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn vec_literal(data: &[Self], dims: Vec<i64>) -> Literal {
+        Literal::I32 { data: data.to_vec(), dims }
+    }
+    fn extract(lit: &Literal) -> Result<&[Self]> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data),
+            other => Err(Error::new(format!("literal is {}, wanted i32", other.type_name()))),
+        }
+    }
+}
+
+/// A host tensor (or tuple of tensors) in row-major order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Literal::F32 { .. } => "f32",
+            Literal::I32 { .. } => "i32",
+            Literal::Tuple(_) => "tuple",
+        }
+    }
+
+    /// Rank-1 literal over a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::vec_literal(data, vec![data.len() as i64])
+    }
+
+    /// Number of scalar elements (tuples: sum over elements).
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+            Literal::Tuple(es) => es.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Reshape to `dims` (element count must match; `&[]` is a scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        match self {
+            Literal::Tuple(_) => Err(Error::new("cannot reshape a tuple literal")),
+            Literal::F32 { data, .. } => {
+                if data.len() as i64 != want {
+                    return Err(Error::new(format!(
+                        "reshape: {} elements into {dims:?}",
+                        data.len()
+                    )));
+                }
+                Ok(Literal::F32 { data: data.clone(), dims: dims.to_vec() })
+            }
+            Literal::I32 { data, .. } => {
+                if data.len() as i64 != want {
+                    return Err(Error::new(format!(
+                        "reshape: {} elements into {dims:?}",
+                        data.len()
+                    )));
+                }
+                Ok(Literal::I32 { data: data.clone(), dims: dims.to_vec() })
+            }
+        }
+    }
+
+    /// Copy the elements out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self).map(|s| s.to_vec())
+    }
+
+    /// First element (scalar readback).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let s = T::extract(self)?;
+        s.first().copied().ok_or_else(|| Error::new("empty literal"))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(es) => Ok(es),
+            other => Err(Error::new(format!(
+                "literal is {}, wanted tuple",
+                other.type_name()
+            ))),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the native runtime).
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        Err(unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation {}
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_literal"))
+    }
+}
+
+/// A compiled executable (stub: never constructible via the stub client).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+
+    pub fn execute_b<T: Borrow<PjRtBuffer>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+/// A device buffer (stub).
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_construct_reshape_readback() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        let s = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+        assert!(s.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn tuple_decomposition() {
+        let t = Literal::Tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32, 3])]);
+        assert_eq!(t.element_count(), 3);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1i32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_paths_report_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("stub"));
+    }
+}
