@@ -1,26 +1,72 @@
 //! End-to-end driver (DESIGN.md "End-to-end validation"): train a stand-in
-//! model, compress it with MPIFA, and serve batched requests through the
-//! full three-layer stack — Rust coordinator → PJRT-compiled HLO (lowered
-//! from the JAX/Pallas model) — reporting throughput, latency, and memory.
+//! model, compress it with MPIFA, and serve *mixed* traffic through the
+//! session scheduler — unequal prompt lengths and token budgets sharing
+//! decode iterations, per-token streaming, a mid-stream cancellation, and
+//! typed errors — reporting throughput, TTFT/ITL percentiles, and memory.
+//!
+//! Uses the PJRT backend when artifacts + the native runtime are
+//! available, otherwise the Rust-native backend (same scheduler, same
+//! protocol):
 //!
 //! ```bash
-//! make artifacts                       # once
+//! make artifacts                       # optional: enables the PJRT rows
 //! PIFA_FAST=1 cargo run --release --example serve_e2e
 //! ```
 
 use pifa::bench::experiments::{ensure_trained_model, wiki_dataset};
 use pifa::compress::registry;
-use pifa::coordinator::{BatcherConfig, GenRequest, GenerationEngine, GenerationMode, Server};
+use pifa::coordinator::{
+    DecodeBackend, Event, GenRequest, GenerationMode, NativeBackend, PjrtBackend, SamplingParams,
+    SchedulerConfig, Server, ServeError,
+};
 use pifa::data::vocab::Vocab;
+use pifa::model::transformer::Transformer;
 use pifa::runtime::{Engine, ModelRunner};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn spawn_server(
+    artifact_dir: &Path,
+    use_pjrt: bool,
+    served: &Transformer,
+    flavour: &str,
+    cfg: SchedulerConfig,
+) -> Server {
+    let model = served.clone();
+    if use_pjrt {
+        let dir = artifact_dir.to_path_buf();
+        let prefill = format!("tiny-s_{flavour}_prefill_b1_t64");
+        let decode = format!("tiny-s_{flavour}_decode_b1");
+        Server::spawn(
+            move || {
+                let mut pjrt = Engine::new(&dir)?;
+                let runner = ModelRunner::new(&mut pjrt, &model, &prefill, &decode)?;
+                Ok(Box::new(PjrtBackend::new(pjrt, runner, GenerationMode::KvCache))
+                    as Box<dyn DecodeBackend>)
+            },
+            cfg,
+        )
+    } else {
+        let lanes = cfg.max_batch;
+        Server::spawn(
+            move || {
+                Ok(Box::new(NativeBackend::new(model, GenerationMode::KvCache, lanes))
+                    as Box<dyn DecodeBackend>)
+            },
+            cfg,
+        )
+    }
+}
 
 fn main() -> anyhow::Result<()> {
-    let artifact_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    anyhow::ensure!(
-        artifact_dir.join("manifest.txt").exists(),
-        "run `make artifacts` first"
-    );
+    let artifact_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let use_pjrt = match Engine::new(&artifact_dir) {
+        Ok(_) => true,
+        Err(e) => {
+            println!("PJRT unavailable ({e:#}); using the Rust-native backend\n");
+            false
+        }
+    };
 
     let data = wiki_dataset();
     let model = ensure_trained_model("tiny-s")?;
@@ -29,57 +75,96 @@ fn main() -> anyhow::Result<()> {
     println!("pipeline: {}", out.spec.describe());
     let compressed = out.model;
     println!(
-        "weights: dense {:.2} MB -> MPIFA {:.2} MB (fp16-accounted)",
+        "weights: dense {:.2} MB -> MPIFA {:.2} MB (fp16-accounted)\n",
         model.memory_bytes_fp16() as f64 / 1e6,
         compressed.memory_bytes_fp16() as f64 / 1e6,
     );
 
     let v = Vocab::new();
-    for (label, served, flavour) in [
-        ("dense", model.clone(), "dense"),
-        ("MPIFA 55%", compressed.clone(), "pifa55"),
-    ] {
-        let dir = artifact_dir.clone();
-        let prefill = format!("tiny-s_{flavour}_prefill_b1_t64");
-        let decode = format!("tiny-s_{flavour}_decode_b1");
-        let served_clone = served.clone();
-        let server = Server::spawn(
-            move || {
-                let mut pjrt = Engine::new(&dir)?;
-                let runner = ModelRunner::new(&mut pjrt, &served_clone, &prefill, &decode)?;
-                Ok((pjrt, GenerationEngine::new(runner, GenerationMode::KvCache)))
-            },
-            BatcherConfig::default(),
-        );
+    let scfg = SchedulerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(3),
+        queue_cap: 32,
+    };
+    for (label, served, flavour) in
+        [("dense", &model, "dense"), ("MPIFA 55%", &compressed, "pifa55")]
+    {
+        let server = spawn_server(&artifact_dir, use_pjrt, served, flavour, scfg.clone());
+        // Mixed traffic: prompt lengths 3..=6 and budgets 8..=20 differ
+        // per request — the scheduler coalesces them iteration-level.
         let n_requests = 6u64;
-        let max_new = 16;
-        let mut rxs = Vec::new();
+        let mut handles = Vec::new();
         for i in 0..n_requests {
-            let prompt = vec![
+            let mut prompt = vec![
                 v.id("the"),
                 v.noun(i as usize % 8, 2 + i as usize, false),
                 v.verb(3, false),
-                v.id("the"),
             ];
-            rxs.push(server.submit(GenRequest::new(i, prompt, max_new))?);
+            for j in 0..(i as usize % 4) {
+                prompt.push(v.noun(j, 1, false));
+            }
+            let max_new = 8 + 2 * (i as usize % 7);
+            let req = GenRequest::new(i, prompt, max_new).with_sampling(SamplingParams {
+                temperature: if i % 2 == 0 { 0.0 } else { 0.7 },
+                top_k: 8,
+                seed: i,
+                stop_tokens: Vec::new(),
+            });
+            handles.push(server.submit(req)?);
         }
+
+        // Request 0 streams token-by-token; request 1 is cancelled
+        // mid-generation (its lane is reclaimed for queued work).
         let mut sample = String::new();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let resp = rx.recv()?;
-            if i == 0 {
-                sample = v.decode(&resp.tokens);
+        handles[1].cancel();
+        loop {
+            match handles[0].next()? {
+                Event::Token { token, .. } => {
+                    sample.push(' ');
+                    sample.push_str(&v.decode(&[token]));
+                }
+                Event::Done(stats) => {
+                    println!(
+                        "[{label}] req 0 streamed{sample} | ttft {:.1} ms | finish {:?}",
+                        stats.ttft.as_secs_f64() * 1e3,
+                        stats.finish
+                    );
+                    break;
+                }
+                Event::Error(e) => {
+                    println!("[{label}] req 0 failed: {e}");
+                    break;
+                }
+            }
+        }
+        let mut completed = 0usize;
+        let mut cancelled = 0usize;
+        for h in handles.iter().skip(1) {
+            match h.collect() {
+                Ok(_) => completed += 1,
+                Err(ServeError::Cancelled) => cancelled += 1,
+                Err(e) => println!("[{label}] req {} error: {e}", h.id),
             }
         }
         let metrics = server.shutdown()?;
         println!(
-            "[{label}] {} reqs | {:.1} tok/s | p50 {:.0} ms | p95 {:.0} ms | sample: \"{}\"",
+            "[{label}] {} reqs ({completed} collected, {cancelled} cancelled) | {:.1} tok/s | \
+             latency p50 {:.0} ms p95 {:.0} ms",
             metrics.requests,
             metrics.throughput(),
             metrics.latency_percentile_ms(0.5),
             metrics.latency_percentile_ms(0.95),
-            sample
+        );
+        println!(
+            "[{label}] ttft p50 {:.1} ms | itl p50/p95 {:.2}/{:.2} ms | peak lanes {} | \
+             occupancy p50 {:.0}%\n",
+            metrics.ttft_percentile_ms(0.5),
+            metrics.itl_percentile_ms(0.5),
+            metrics.itl_percentile_ms(0.95),
+            metrics.peak_active,
+            metrics.occupancy_percentile(0.5) * 100.0,
         );
     }
-    println!("\n(Table 7's shape: MPIFA serves faster than dense at ~57% of the weight memory.)");
+    println!("(Table 7's shape: MPIFA serves faster than dense at ~57% of the weight memory.)");
     Ok(())
 }

@@ -1,19 +1,26 @@
-//! Serving coordinator (Table 7's end-to-end path).
+//! Serving coordinator (Table 7's end-to-end path): generation sessions
+//! with iteration-level scheduling, token streaming, cancellation, and
+//! typed errors. DESIGN.md §6 documents the architecture.
 //!
-//! * [`request`] — request/response types and per-request metrics.
-//! * [`batcher`] — dynamic batcher: groups queued requests up to the
-//!   artifact batch size within a wait budget.
-//! * [`engine`] — the generation engine: prefill + batched KV-cache decode
-//!   over [`crate::runtime::ModelRunner`], plus the no-KV re-prefill mode
-//!   the paper contrasts (Table 7 "Use KV Cache" rows).
-//! * [`server`] — worker-thread server with an mpsc front door + metrics.
+//! * [`request`] — request/sampling types, the [`Event`] stream protocol,
+//!   the [`ServeError`] taxonomy, and [`ServeMetrics`].
+//! * [`engine`] — the [`DecodeBackend`] trait plus the PJRT and
+//!   Rust-native backends (the latter needs no artifacts), including the
+//!   no-KV re-prefill mode the paper contrasts (Table 7 "Use KV Cache").
+//! * [`scheduler`] — per-lane [`GenSession`] slots, bounded admission,
+//!   coalescing, deadline sweeps, and one-decode-step-per-iteration
+//!   continuous batching.
+//! * [`server`] — worker-thread server: `submit` returns a
+//!   [`StreamHandle`] of token events with mid-generation `cancel()`.
 
-pub mod batcher;
 pub mod engine;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig};
-pub use engine::{GenerationEngine, GenerationMode};
-pub use request::{GenRequest, GenResponse, ServeMetrics};
-pub use server::Server;
+pub use engine::{DecodeBackend, GenerationMode, NativeBackend, PjrtBackend, StepInput};
+pub use request::{
+    Event, FinishReason, GenRequest, GenStats, SamplingParams, ServeError, ServeMetrics,
+};
+pub use scheduler::{GenSession, Scheduler, SchedulerConfig};
+pub use server::{Server, StreamHandle};

@@ -1,57 +1,263 @@
-//! Request/response types and serving metrics.
+//! Session-serving request/response types: sampling parameters, the
+//! streaming event protocol, the typed error taxonomy, and serving
+//! metrics (DESIGN.md §6).
 
+use crate::linalg::Rng;
+use crate::runtime::exec::argmax;
+use std::fmt;
 use std::time::{Duration, Instant};
 
-/// A generation request.
+/// Per-request sampling policy. `temperature <= 0` is greedy argmax
+/// (the paper's Table 7 measurement mode); otherwise top-k softmax
+/// sampling at the given temperature, seeded per session.
+#[derive(Clone, Debug, Default)]
+pub struct SamplingParams {
+    /// `<= 0.0` selects greedy argmax.
+    pub temperature: f32,
+    /// Candidate pool size for sampling; `0` means the full vocabulary.
+    pub top_k: usize,
+    /// Session RNG seed (mixed with the request id by the scheduler).
+    pub seed: u64,
+    /// Generation stops after emitting any of these tokens (the emitted
+    /// stop token counts toward the output).
+    pub stop_tokens: Vec<usize>,
+}
+
+impl SamplingParams {
+    /// Greedy decoding, no stop tokens.
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    /// Pick the next token from a logits row under this policy. The
+    /// top-k pool is taken with a partial selection (O(V)), not a full
+    /// vocabulary sort — this sits on the per-token decode path.
+    pub fn pick(&self, logits: &[f32], rng: &mut Rng) -> usize {
+        if self.temperature <= 0.0 || logits.len() < 2 {
+            return argmax(logits);
+        }
+        let k = if self.top_k == 0 { logits.len() } else { self.top_k.min(logits.len()) };
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if k < idx.len() {
+            idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            idx.truncate(k);
+        }
+        // Normalize by the pool max for numerical stability (the pool is
+        // partitioned, not sorted).
+        let top = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max) as f64;
+        let t = self.temperature as f64;
+        let weights: Vec<f64> =
+            idx.iter().map(|&i| ((logits[i] as f64 - top) / t).exp()).collect();
+        idx[rng.categorical(&weights)]
+    }
+}
+
+/// A generation request submitted to [`crate::coordinator::Server`].
 #[derive(Clone, Debug)]
 pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<usize>,
     pub max_new: usize,
-    /// Enqueue timestamp (set by the server).
+    pub sampling: SamplingParams,
+    /// Budget from arrival; exceeded => [`ServeError::Timeout`].
+    pub deadline: Option<Duration>,
+    /// Enqueue timestamp (set by the scheduler on admission).
     pub arrived: Option<Instant>,
 }
 
 impl GenRequest {
     pub fn new(id: u64, prompt: Vec<usize>, max_new: usize) -> Self {
-        Self { id, prompt, max_new, arrived: None }
+        Self {
+            id,
+            prompt,
+            max_new,
+            sampling: SamplingParams::greedy(),
+            deadline: None,
+            arrived: None,
+        }
+    }
+
+    pub fn with_sampling(mut self, sampling: SamplingParams) -> Self {
+        self.sampling = sampling;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
     }
 }
 
-/// A completed generation.
-#[derive(Clone, Debug)]
-pub struct GenResponse {
-    pub id: u64,
-    pub tokens: Vec<usize>,
-    /// Queue wait + execution.
-    pub latency: Duration,
-    /// Execution only.
-    pub exec_time: Duration,
+/// Typed failure delivered to the waiting client as [`Event::Error`]
+/// (replacing the old `eprintln!` + silent waiter drop).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The admission queue is full; the request was never enqueued.
+    Overloaded { queue_cap: usize },
+    /// The backend failed (construction, prefill, or a decode step).
+    EngineFailure(String),
+    /// The client cancelled the request (queued or mid-generation).
+    Cancelled,
+    /// The request's deadline elapsed before completion.
+    Timeout,
 }
 
-/// Aggregated serving metrics (Table 7's throughput column).
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded { queue_cap } => {
+                write!(f, "server overloaded (queue cap {queue_cap})")
+            }
+            ServeError::EngineFailure(msg) => write!(f, "engine failure: {msg}"),
+            ServeError::Cancelled => write!(f, "request cancelled"),
+            ServeError::Timeout => write!(f, "request deadline exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Why a session finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated `max_new` tokens.
+    MaxTokens,
+    /// Emitted a configured stop token.
+    StopToken,
+    /// Hit the backend's sequence capacity (KV cache / prefill window).
+    CacheFull,
+}
+
+/// Per-request completion statistics, delivered with [`Event::Done`].
+#[derive(Clone, Debug)]
+pub struct GenStats {
+    pub id: u64,
+    /// All generated tokens, in order (also streamed as [`Event::Token`]).
+    pub tokens: Vec<usize>,
+    pub finish: FinishReason,
+    /// Arrival -> completion.
+    pub latency: Duration,
+    /// Arrival -> first token (queue wait + prefill).
+    pub ttft: Duration,
+}
+
+/// Streaming protocol: any number of `Token`s, then exactly one terminal
+/// `Done` or `Error`.
+#[derive(Clone, Debug)]
+pub enum Event {
+    Token { index: usize, token: usize },
+    Done(GenStats),
+    Error(ServeError),
+}
+
+/// Aggregated serving metrics (Table 7's throughput / latency columns).
+///
+/// Percentile vectors are sorted **once** by [`ServeMetrics::finalize`]
+/// (the server does this at shutdown); percentile accessors then index
+/// the sorted snapshot directly. Calling an accessor before `finalize`
+/// falls back to a sorted copy (correct but cold).
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
+    /// Requests admitted to the queue (excludes `rejected`).
     pub requests: usize,
+    /// Terminal outcome counters.
+    pub completed: usize,
+    pub cancelled: usize,
+    pub rejected: usize,
+    pub timeouts: usize,
+    pub errors: usize,
     pub tokens_generated: usize,
+    /// Engine wall time (prefills + decode iterations).
     pub total_exec_secs: f64,
+    /// Shared decode iterations (one per scheduler step over all lanes).
     pub batches: usize,
+    pub prefills: usize,
+    /// Highest number of simultaneously active lanes observed.
+    pub peak_active: usize,
     latencies_ms: Vec<f64>,
+    ttft_ms: Vec<f64>,
+    itl_ms: Vec<f64>,
+    queue_depth: Vec<f64>,
+    lane_occupancy: Vec<f64>,
+    finalized: bool,
+}
+
+fn pct_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let idx = ((v.len() as f64 - 1.0) * p.clamp(0.0, 1.0)).round() as usize;
+    v[idx.min(v.len() - 1)]
 }
 
 impl ServeMetrics {
-    pub fn record(&mut self, resp: &GenResponse) {
+    /// A request entered the admission queue.
+    pub fn record_admit(&mut self) {
         self.requests += 1;
-        self.tokens_generated += resp.tokens.len();
-        self.latencies_ms.push(resp.latency.as_secs_f64() * 1000.0);
     }
 
-    pub fn record_batch(&mut self, exec: Duration) {
-        self.batches += 1;
+    /// First token of a session (TTFT = arrival -> first token).
+    pub fn record_first_token(&mut self, ttft: Duration) {
+        self.tokens_generated += 1;
+        self.ttft_ms.push(ttft.as_secs_f64() * 1000.0);
+    }
+
+    /// A subsequent token; `gap` is the inter-token latency.
+    pub fn record_token(&mut self, gap: Duration) {
+        self.tokens_generated += 1;
+        self.itl_ms.push(gap.as_secs_f64() * 1000.0);
+    }
+
+    /// A session completed normally.
+    pub fn record_done(&mut self, stats: &GenStats) {
+        self.completed += 1;
+        self.latencies_ms.push(stats.latency.as_secs_f64() * 1000.0);
+    }
+
+    /// One prefill ran for `exec` engine time.
+    pub fn record_prefill(&mut self, exec: Duration) {
+        self.prefills += 1;
         self.total_exec_secs += exec.as_secs_f64();
     }
 
-    /// Tokens per second of wall execution time.
+    /// One shared decode iteration over `active` of `lanes` lanes, with
+    /// `queued` requests still waiting.
+    pub fn record_iteration(&mut self, exec: Duration, active: usize, lanes: usize, queued: usize) {
+        self.batches += 1;
+        self.total_exec_secs += exec.as_secs_f64();
+        self.peak_active = self.peak_active.max(active);
+        self.queue_depth.push(queued as f64);
+        if lanes > 0 {
+            self.lane_occupancy.push(active as f64 / lanes as f64);
+        }
+    }
+
+    /// Sort the percentile vectors once; accessors index directly after
+    /// this. The server calls it before returning metrics at shutdown.
+    pub fn finalize(&mut self) {
+        let cmp = |a: &f64, b: &f64| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal);
+        self.latencies_ms.sort_by(cmp);
+        self.ttft_ms.sort_by(cmp);
+        self.itl_ms.sort_by(cmp);
+        self.queue_depth.sort_by(cmp);
+        self.lane_occupancy.sort_by(cmp);
+        self.finalized = true;
+    }
+
+    fn pct(&self, v: &[f64], p: f64) -> f64 {
+        if self.finalized {
+            pct_sorted(v, p)
+        } else {
+            let cmp = |a: &f64, b: &f64| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal);
+            let mut s = v.to_vec();
+            s.sort_by(cmp);
+            pct_sorted(&s, p)
+        }
+    }
+
+    /// Tokens per second of engine wall time.
     pub fn throughput(&self) -> f64 {
         if self.total_exec_secs <= 0.0 {
             return 0.0;
@@ -59,14 +265,29 @@ impl ServeMetrics {
         self.tokens_generated as f64 / self.total_exec_secs
     }
 
+    /// End-to-end request latency percentile (ms).
     pub fn latency_percentile_ms(&self, p: f64) -> f64 {
-        if self.latencies_ms.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.latencies_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-        v[idx]
+        self.pct(&self.latencies_ms, p)
+    }
+
+    /// Time-to-first-token percentile (ms).
+    pub fn ttft_percentile_ms(&self, p: f64) -> f64 {
+        self.pct(&self.ttft_ms, p)
+    }
+
+    /// Inter-token latency percentile (ms).
+    pub fn itl_percentile_ms(&self, p: f64) -> f64 {
+        self.pct(&self.itl_ms, p)
+    }
+
+    /// Queue depth percentile (requests waiting, sampled per iteration).
+    pub fn queue_depth_percentile(&self, p: f64) -> f64 {
+        self.pct(&self.queue_depth, p)
+    }
+
+    /// Lane-occupancy percentile (active/lanes, sampled per iteration).
+    pub fn occupancy_percentile(&self, p: f64) -> f64 {
+        self.pct(&self.lane_occupancy, p)
     }
 }
 
@@ -74,23 +295,51 @@ impl ServeMetrics {
 mod tests {
     use super::*;
 
-    #[test]
-    fn metrics_aggregate() {
-        let mut m = ServeMetrics::default();
-        for i in 0..4 {
-            m.record(&GenResponse {
-                id: i,
-                tokens: vec![1, 2, 3],
-                latency: Duration::from_millis(10 * (i + 1)),
-                exec_time: Duration::from_millis(5),
-            });
+    fn stats(id: u64, n: usize, lat_ms: u64) -> GenStats {
+        GenStats {
+            id,
+            tokens: vec![1; n],
+            finish: FinishReason::MaxTokens,
+            latency: Duration::from_millis(lat_ms),
+            ttft: Duration::from_millis(lat_ms / 2),
         }
-        m.record_batch(Duration::from_secs_f64(0.5));
+    }
+
+    #[test]
+    fn metrics_aggregate_and_finalize() {
+        let mut m = ServeMetrics::default();
+        for i in 0..4u64 {
+            m.record_admit();
+            let s = stats(i, 3, 10 * (i + 1));
+            m.record_first_token(s.ttft);
+            m.record_token(Duration::from_millis(2));
+            m.record_token(Duration::from_millis(4));
+            m.record_done(&s);
+        }
+        m.record_prefill(Duration::from_secs_f64(0.1));
+        m.record_iteration(Duration::from_secs_f64(0.4), 2, 4, 1);
+        m.finalize();
         assert_eq!(m.requests, 4);
+        assert_eq!(m.completed, 4);
         assert_eq!(m.tokens_generated, 12);
         assert!((m.throughput() - 24.0).abs() < 1e-9);
         assert!((m.latency_percentile_ms(0.0) - 10.0).abs() < 1e-9);
         assert!((m.latency_percentile_ms(1.0) - 40.0).abs() < 1e-9);
+        assert!((m.itl_percentile_ms(1.0) - 4.0).abs() < 1e-9);
+        assert!(m.ttft_percentile_ms(0.5) > 0.0);
+        assert!((m.occupancy_percentile(0.5) - 0.5).abs() < 1e-9);
+        assert_eq!(m.peak_active, 2);
+    }
+
+    #[test]
+    fn percentiles_agree_before_and_after_finalize() {
+        let mut m = ServeMetrics::default();
+        for i in 0..7u64 {
+            m.record_done(&stats(i, 1, 7 * (i + 1)));
+        }
+        let before = m.latency_percentile_ms(0.5);
+        m.finalize();
+        assert!((before - m.latency_percentile_ms(0.5)).abs() < 1e-9);
     }
 
     #[test]
@@ -98,5 +347,38 @@ mod tests {
         let m = ServeMetrics::default();
         assert_eq!(m.throughput(), 0.0);
         assert_eq!(m.latency_percentile_ms(0.5), 0.0);
+        assert_eq!(m.ttft_percentile_ms(0.5), 0.0);
+        assert_eq!(m.itl_percentile_ms(0.5), 0.0);
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let sp = SamplingParams::greedy();
+        let mut rng = Rng::new(1);
+        assert_eq!(sp.pick(&[0.1, 2.0, -1.0, 0.5], &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_sampling_stays_in_pool() {
+        let sp = SamplingParams {
+            temperature: 0.8,
+            top_k: 2,
+            seed: 9,
+            stop_tokens: Vec::new(),
+        };
+        let mut rng = Rng::new(9);
+        let logits = [0.0f32, 5.0, 4.5, -2.0, 1.0];
+        for _ in 0..50 {
+            let t = sp.pick(&logits, &mut rng);
+            assert!(t == 1 || t == 2, "sampled {t} outside top-2 pool");
+        }
+    }
+
+    #[test]
+    fn serve_error_displays() {
+        assert!(ServeError::Overloaded { queue_cap: 3 }.to_string().contains("3"));
+        assert!(ServeError::EngineFailure("boom".into()).to_string().contains("boom"));
+        assert_eq!(ServeError::Cancelled.to_string(), "request cancelled");
+        assert!(ServeError::Timeout.to_string().contains("deadline"));
     }
 }

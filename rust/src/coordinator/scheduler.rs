@@ -1,0 +1,846 @@
+//! Iteration-level (continuous) scheduler: the session substrate behind
+//! [`crate::coordinator::Server`] (DESIGN.md §6).
+//!
+//! Requests are admitted from a bounded queue into per-lane
+//! [`GenSession`] slots. New sessions are prefilled individually; then
+//! every loop iteration advances *all* active lanes by one decode step,
+//! so requests with different prompt lengths and `max_new` share decode
+//! batches, and finished/cancelled sessions free their lane for the next
+//! queued request immediately — no whole-generation batching.
+//!
+//! Admission policy (the dispatch-loop fix): a *partial* wave on an idle
+//! scheduler waits up to `max_wait` for more arrivals to coalesce; a
+//! full wave, or a join while other lanes are already decoding, is
+//! admitted immediately.
+
+use super::engine::{DecodeBackend, StepInput};
+use super::request::{
+    Event, FinishReason, GenRequest, GenStats, SamplingParams, ServeError, ServeMetrics,
+};
+use crate::linalg::Rng;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Scheduler policy knobs (`pifa serve --max-batch/--max-wait-ms/--queue-cap`).
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Concurrent-session cap (clamped to the backend's lane count).
+    pub max_batch: usize,
+    /// Coalescing budget: how long a partial wave may wait on an idle
+    /// scheduler before shipping anyway.
+    pub max_wait: Duration,
+    /// Admission-queue bound; a full queue rejects with
+    /// [`ServeError::Overloaded`] instead of growing without bound.
+    pub queue_cap: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(5), queue_cap: 64 }
+    }
+}
+
+struct Queued {
+    req: GenRequest,
+    events: mpsc::Sender<Event>,
+}
+
+/// One in-flight generation bound to a backend lane.
+pub struct GenSession {
+    pub id: u64,
+    pub lane: usize,
+    prompt_len: usize,
+    /// prompt + generated tokens (generated tail streams as events).
+    seq: Vec<usize>,
+    max_new: usize,
+    sampling: SamplingParams,
+    arrived: Instant,
+    deadline: Option<Instant>,
+    first_token_at: Option<Instant>,
+    last_token_at: Instant,
+    rng: Rng,
+    events: mpsc::Sender<Event>,
+}
+
+impl GenSession {
+    fn generated_count(&self) -> usize {
+        self.seq.len() - self.prompt_len
+    }
+
+    fn generated(&self) -> &[usize] {
+        &self.seq[self.prompt_len..]
+    }
+
+    /// Append + stream one token; returns false when the client has
+    /// dropped its stream (treated as an implicit cancel). Undelivered
+    /// tokens are NOT recorded in the serving metrics — percentiles
+    /// describe served traffic only.
+    fn emit(&mut self, token: usize, metrics: &mut ServeMetrics) -> bool {
+        let now = Instant::now();
+        let index = self.generated_count();
+        self.seq.push(token);
+        let delivered = self.events.send(Event::Token { index, token }).is_ok();
+        if delivered {
+            if index == 0 {
+                self.first_token_at = Some(now);
+                metrics.record_first_token(now.duration_since(self.arrived));
+            } else {
+                metrics.record_token(now.duration_since(self.last_token_at));
+            }
+        }
+        self.last_token_at = now;
+        delivered
+    }
+
+    /// Terminal check after each emitted token. Stop tokens win over
+    /// `max_new`; `CacheFull` fires when the next step would overrun the
+    /// backend's sequence capacity.
+    fn finish_reason(&self, max_total: usize) -> Option<FinishReason> {
+        let last = *self.seq.last().expect("session has at least the prompt");
+        if self.sampling.stop_tokens.contains(&last) {
+            Some(FinishReason::StopToken)
+        } else if self.generated_count() >= self.max_new {
+            Some(FinishReason::MaxTokens)
+        } else if self.seq.len() > max_total {
+            Some(FinishReason::CacheFull)
+        } else {
+            None
+        }
+    }
+}
+
+fn finish_session(
+    sess: GenSession,
+    reason: FinishReason,
+    backend: &mut dyn DecodeBackend,
+    metrics: &mut ServeMetrics,
+) {
+    backend.release(sess.lane);
+    let now = Instant::now();
+    let stats = GenStats {
+        id: sess.id,
+        tokens: sess.generated().to_vec(),
+        finish: reason,
+        latency: now.duration_since(sess.arrived),
+        ttft: sess
+            .first_token_at
+            .map(|t| t.duration_since(sess.arrived))
+            .unwrap_or_default(),
+    };
+    metrics.record_done(&stats);
+    let _ = sess.events.send(Event::Done(stats));
+}
+
+/// Lane table + admission queue. Pure state machine: the server loop
+/// calls `submit`/`cancel` on message arrival and `sweep_deadlines` →
+/// `admit` → `step` once per iteration.
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    queue: VecDeque<Queued>,
+    lanes: Vec<Option<GenSession>>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig, backend_lanes: usize) -> Self {
+        let n = cfg.max_batch.min(backend_lanes).max(1);
+        Self { cfg, queue: VecDeque::new(), lanes: (0..n).map(|_| None).collect() }
+    }
+
+    pub fn has_active(&self) -> bool {
+        self.lanes.iter().any(|l| l.is_some())
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Nothing queued and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && !self.has_active()
+    }
+
+    fn free_lane(&self) -> Option<usize> {
+        self.lanes.iter().position(|l| l.is_none())
+    }
+
+    fn free_lane_count(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_none()).count()
+    }
+
+    /// Queue-cap admission check: a full queue rejects immediately with
+    /// a typed error instead of unbounded buffering.
+    pub fn submit(
+        &mut self,
+        mut req: GenRequest,
+        events: mpsc::Sender<Event>,
+        metrics: &mut ServeMetrics,
+    ) {
+        if self.queue.len() >= self.cfg.queue_cap {
+            metrics.rejected += 1;
+            let _ = events
+                .send(Event::Error(ServeError::Overloaded { queue_cap: self.cfg.queue_cap }));
+            return;
+        }
+        if req.arrived.is_none() {
+            req.arrived = Some(Instant::now());
+        }
+        metrics.record_admit();
+        self.queue.push_back(Queued { req, events });
+    }
+
+    /// Cancel a queued or in-flight request; an in-flight cancel frees
+    /// the lane for the next admission immediately.
+    pub fn cancel(&mut self, id: u64, backend: &mut dyn DecodeBackend, metrics: &mut ServeMetrics) {
+        if let Some(i) = self.queue.iter().position(|q| q.req.id == id) {
+            if let Some(q) = self.queue.remove(i) {
+                metrics.cancelled += 1;
+                let _ = q.events.send(Event::Error(ServeError::Cancelled));
+            }
+            return;
+        }
+        for lane in 0..self.lanes.len() {
+            if self.lanes[lane].as_ref().is_some_and(|s| s.id == id) {
+                let sess = self.lanes[lane].take().expect("checked above");
+                backend.release(lane);
+                metrics.cancelled += 1;
+                let _ = sess.events.send(Event::Error(ServeError::Cancelled));
+                return;
+            }
+        }
+    }
+
+    /// Expire queued and in-flight requests whose deadline has passed.
+    pub fn sweep_deadlines(
+        &mut self,
+        now: Instant,
+        backend: &mut dyn DecodeBackend,
+        metrics: &mut ServeMetrics,
+    ) {
+        let mut i = 0;
+        while i < self.queue.len() {
+            let expired = match (self.queue[i].req.deadline, self.queue[i].req.arrived) {
+                (Some(d), Some(a)) => now.duration_since(a) >= d,
+                _ => false,
+            };
+            if expired {
+                if let Some(q) = self.queue.remove(i) {
+                    metrics.timeouts += 1;
+                    let _ = q.events.send(Event::Error(ServeError::Timeout));
+                }
+            } else {
+                i += 1;
+            }
+        }
+        for lane in 0..self.lanes.len() {
+            let expired = self.lanes[lane]
+                .as_ref()
+                .is_some_and(|s| s.deadline.is_some_and(|d| now >= d));
+            if expired {
+                let sess = self.lanes[lane].take().expect("checked above");
+                backend.release(lane);
+                metrics.timeouts += 1;
+                let _ = sess.events.send(Event::Error(ServeError::Timeout));
+            }
+        }
+    }
+
+    /// Should the queue open an admission wave *now*? (See module docs
+    /// for the coalescing policy.)
+    fn admission_due(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        if self.has_active() {
+            return true;
+        }
+        if self.queue.len() >= self.free_lane_count() {
+            return true;
+        }
+        match self.queue.front().and_then(|q| q.req.arrived) {
+            Some(t0) => now.duration_since(t0) >= self.cfg.max_wait,
+            None => true,
+        }
+    }
+
+    /// How long the server may sleep (queue non-empty, nothing active)
+    /// before it must wake: the oldest request's coalescing budget, or
+    /// the earliest queued deadline — whichever comes first. Without the
+    /// deadline bound a request with a short deadline would sit out the
+    /// whole `max_wait` before its Timeout could be delivered.
+    pub fn time_to_admission(&self, now: Instant) -> Duration {
+        let coalesce = match self.queue.front().and_then(|q| q.req.arrived) {
+            Some(t0) => (t0 + self.cfg.max_wait).saturating_duration_since(now),
+            None => Duration::ZERO,
+        };
+        let deadline = self
+            .queue
+            .iter()
+            .filter_map(|q| match (q.req.deadline, q.req.arrived) {
+                (Some(d), Some(a)) => Some((a + d).saturating_duration_since(now)),
+                _ => None,
+            })
+            .min();
+        match deadline {
+            Some(d) => coalesce.min(d),
+            None => coalesce,
+        }
+    }
+
+    /// Admit queued requests into free lanes (prefilling each) if the
+    /// wave is due.
+    pub fn admit(
+        &mut self,
+        now: Instant,
+        backend: &mut dyn DecodeBackend,
+        metrics: &mut ServeMetrics,
+    ) {
+        if !self.admission_due(now) {
+            return;
+        }
+        self.admit_now(backend, metrics);
+    }
+
+    /// Admission that ignores the coalescing budget (shutdown drain).
+    pub fn admit_now(&mut self, backend: &mut dyn DecodeBackend, metrics: &mut ServeMetrics) {
+        while let Some(lane) = self.free_lane() {
+            let Some(q) = self.queue.pop_front() else { break };
+            self.start_session(lane, q, backend, metrics);
+        }
+    }
+
+    fn start_session(
+        &mut self,
+        lane: usize,
+        q: Queued,
+        backend: &mut dyn DecodeBackend,
+        metrics: &mut ServeMetrics,
+    ) {
+        let Queued { req, events } = q;
+        let arrived = req.arrived.unwrap_or_else(Instant::now);
+        if req.max_new == 0 {
+            // Nothing requested: complete with zero tokens (matching the
+            // pre-session API) instead of emitting an unasked-for token.
+            let stats = GenStats {
+                id: req.id,
+                tokens: Vec::new(),
+                finish: FinishReason::MaxTokens,
+                latency: arrived.elapsed(),
+                ttft: Duration::ZERO,
+            };
+            metrics.record_done(&stats);
+            let _ = events.send(Event::Done(stats));
+            return;
+        }
+        if req.prompt.is_empty()
+            || req.prompt.len() > backend.max_prompt()
+            || req.prompt.len() >= backend.max_seq()
+        {
+            metrics.errors += 1;
+            let _ = events.send(Event::Error(ServeError::EngineFailure(format!(
+                "prompt length {} unsupported (max prompt {}, max seq {})",
+                req.prompt.len(),
+                backend.max_prompt(),
+                backend.max_seq()
+            ))));
+            return;
+        }
+        let t0 = Instant::now();
+        match backend.prefill(lane, &req.prompt) {
+            Ok(logits) => {
+                metrics.record_prefill(t0.elapsed());
+                let mut rng =
+                    Rng::new(req.sampling.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let first = req.sampling.pick(&logits, &mut rng);
+                let prompt_len = req.prompt.len();
+                let mut sess = GenSession {
+                    id: req.id,
+                    lane,
+                    prompt_len,
+                    seq: req.prompt,
+                    max_new: req.max_new,
+                    sampling: req.sampling,
+                    arrived,
+                    deadline: req.deadline.map(|d| arrived + d),
+                    first_token_at: None,
+                    last_token_at: t0,
+                    rng,
+                    events,
+                };
+                if !sess.emit(first, metrics) {
+                    // Client hung up before the first token: implicit cancel.
+                    backend.release(lane);
+                    metrics.cancelled += 1;
+                    return;
+                }
+                if let Some(reason) = sess.finish_reason(backend.max_seq()) {
+                    finish_session(sess, reason, backend, metrics);
+                } else {
+                    self.lanes[lane] = Some(sess);
+                }
+            }
+            Err(e) => {
+                metrics.errors += 1;
+                backend.release(lane);
+                let _ = events.send(Event::Error(ServeError::EngineFailure(format!(
+                    "prefill failed: {e:#}"
+                ))));
+            }
+        }
+    }
+
+    /// One shared decode iteration: advance every active lane by one
+    /// token. A backend error fails *all* in-flight sessions with
+    /// [`ServeError::EngineFailure`] (engine state is unknown) — clients
+    /// are told, never silently dropped.
+    pub fn step(&mut self, backend: &mut dyn DecodeBackend, metrics: &mut ServeMetrics) {
+        let active: Vec<usize> =
+            (0..self.lanes.len()).filter(|&l| self.lanes[l].is_some()).collect();
+        if active.is_empty() {
+            return;
+        }
+        let inputs: Vec<StepInput<'_>> = active
+            .iter()
+            .map(|&l| {
+                let s = self.lanes[l].as_ref().expect("active lane");
+                StepInput { lane: l, token: *s.seq.last().expect("non-empty"), seq: &s.seq }
+            })
+            .collect();
+        let t0 = Instant::now();
+        let result = backend.step(&inputs);
+        drop(inputs);
+        let elapsed = t0.elapsed();
+        let rows = match result {
+            Ok(rows) if rows.len() == active.len() => rows,
+            Ok(rows) => {
+                self.fail_active(
+                    &active,
+                    format!("backend returned {} rows for {} lanes", rows.len(), active.len()),
+                    backend,
+                    metrics,
+                );
+                return;
+            }
+            Err(e) => {
+                self.fail_active(&active, format!("decode step failed: {e:#}"), backend, metrics);
+                return;
+            }
+        };
+        // Only successful iterations count as shared decode batches (a
+        // failed step produced no tokens; `errors` records it instead).
+        metrics.record_iteration(elapsed, active.len(), self.lanes.len(), self.queue.len());
+        for (row, &lane) in rows.iter().zip(active.iter()) {
+            let sess = self.lanes[lane].as_mut().expect("active lane");
+            let tok = sess.sampling.pick(row, &mut sess.rng);
+            if !sess.emit(tok, metrics) {
+                // Client hung up mid-stream: implicit cancel frees the lane.
+                self.lanes[lane] = None;
+                backend.release(lane);
+                metrics.cancelled += 1;
+                continue;
+            }
+            let reason = self.lanes[lane]
+                .as_ref()
+                .expect("active lane")
+                .finish_reason(backend.max_seq());
+            if let Some(reason) = reason {
+                let sess = self.lanes[lane].take().expect("active lane");
+                finish_session(sess, reason, backend, metrics);
+            }
+        }
+    }
+
+    fn fail_active(
+        &mut self,
+        active: &[usize],
+        msg: String,
+        backend: &mut dyn DecodeBackend,
+        metrics: &mut ServeMetrics,
+    ) {
+        for &lane in active {
+            if let Some(sess) = self.lanes[lane].take() {
+                backend.release(lane);
+                metrics.errors += 1;
+                let _ = sess.events.send(Event::Error(ServeError::EngineFailure(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    /// Deterministic scripted backend: next token for a sequence is
+    /// `(sum(seq) + len(seq)) % vocab`; records every call.
+    struct MockBackend {
+        lanes: usize,
+        max_seq: usize,
+        vocab: usize,
+        prefills: Vec<(usize, Vec<usize>)>,
+        steps: Vec<Vec<usize>>,
+        released: Vec<usize>,
+        fail_prefill: bool,
+        fail_step_after: Option<usize>,
+    }
+
+    impl MockBackend {
+        fn new(lanes: usize) -> Self {
+            Self {
+                lanes,
+                max_seq: 64,
+                vocab: 8,
+                prefills: Vec::new(),
+                steps: Vec::new(),
+                released: Vec::new(),
+                fail_prefill: false,
+                fail_step_after: None,
+            }
+        }
+
+        fn next_token(&self, seq: &[usize]) -> usize {
+            (seq.iter().sum::<usize>() + seq.len()) % self.vocab
+        }
+
+        fn logits_for(&self, seq: &[usize]) -> Vec<f32> {
+            let mut row = vec![0f32; self.vocab];
+            row[self.next_token(seq)] = 1.0;
+            row
+        }
+    }
+
+    impl DecodeBackend for MockBackend {
+        fn lanes(&self) -> usize {
+            self.lanes
+        }
+
+        fn max_seq(&self) -> usize {
+            self.max_seq
+        }
+
+        fn prefill(&mut self, lane: usize, prompt: &[usize]) -> anyhow::Result<Vec<f32>> {
+            if self.fail_prefill {
+                bail!("mock prefill failure");
+            }
+            self.prefills.push((lane, prompt.to_vec()));
+            Ok(self.logits_for(prompt))
+        }
+
+        fn step(&mut self, inputs: &[StepInput<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
+            if let Some(n) = self.fail_step_after {
+                if self.steps.len() >= n {
+                    bail!("mock step failure");
+                }
+            }
+            self.steps.push(inputs.iter().map(|i| i.lane).collect());
+            Ok(inputs.iter().map(|i| self.logits_for(i.seq)).collect())
+        }
+
+        fn release(&mut self, lane: usize) {
+            self.released.push(lane);
+        }
+    }
+
+    fn drain(rx: &mpsc::Receiver<Event>) -> Vec<Event> {
+        rx.try_iter().collect()
+    }
+
+    fn tokens_of(events: &[Event]) -> Vec<usize> {
+        events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn done_of(events: &[Event]) -> Option<GenStats> {
+        events.iter().find_map(|e| match e {
+            Event::Done(s) => Some(s.clone()),
+            _ => None,
+        })
+    }
+
+    fn cfg(max_batch: usize, max_wait: Duration, queue_cap: usize) -> SchedulerConfig {
+        SchedulerConfig { max_batch, max_wait, queue_cap }
+    }
+
+    #[test]
+    fn unequal_prompts_share_decode_iterations() {
+        let mut be = MockBackend::new(2);
+        let mut sched = Scheduler::new(cfg(2, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (ta, ra) = mpsc::channel();
+        let (tb, rb) = mpsc::channel();
+        // Different prompt lengths AND different max_new.
+        sched.submit(GenRequest::new(1, vec![1, 2], 4), ta, &mut m);
+        sched.submit(GenRequest::new(2, vec![3, 1, 2, 1, 0], 2), tb, &mut m);
+        let now = Instant::now();
+        sched.admit(now, &mut be, &mut m);
+        assert_eq!(be.prefills.len(), 2);
+        for _ in 0..4 {
+            sched.step(&mut be, &mut m);
+        }
+        // Iteration 1 is shared by both lanes; once B hits max_new=2 it
+        // leaves and A continues alone.
+        assert_eq!(be.steps[0], vec![0, 1]);
+        assert_eq!(be.steps[1], vec![0]);
+        assert_eq!(be.steps[2], vec![0]);
+        assert_eq!(be.steps.len(), 3, "A done after 3 steps; iteration 4 is a no-op");
+        let ea = drain(&ra);
+        let eb = drain(&rb);
+        let sa = done_of(&ea).expect("A Done");
+        let sb = done_of(&eb).expect("B Done");
+        assert_eq!(sa.tokens.len(), 4);
+        assert_eq!(sb.tokens.len(), 2);
+        assert_eq!(tokens_of(&ea), sa.tokens, "streamed tokens match Done stats");
+        assert_eq!(sa.finish, FinishReason::MaxTokens);
+        // Token-level determinism against the mock's script.
+        let mut seq = vec![1usize, 2];
+        for _ in 0..4 {
+            let t = be.next_token(&seq);
+            seq.push(t);
+        }
+        assert_eq!(sa.tokens, &seq[2..]);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.tokens_generated, 6);
+        assert_eq!(m.peak_active, 2);
+        assert!(be.released.contains(&0) && be.released.contains(&1));
+    }
+
+    #[test]
+    fn queue_cap_admission_returns_overloaded() {
+        let mut be = MockBackend::new(1);
+        let mut sched = Scheduler::new(cfg(1, Duration::from_secs(60), 2), be.lanes());
+        let mut m = ServeMetrics::default();
+        let mut rxs = Vec::new();
+        for i in 0..3u64 {
+            let (tx, rx) = mpsc::channel();
+            sched.submit(GenRequest::new(i, vec![1, 2], 4), tx, &mut m);
+            rxs.push(rx);
+        }
+        assert_eq!(sched.queue_len(), 2);
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.requests, 2);
+        let last = drain(&rxs[2]);
+        assert!(
+            matches!(last.first(), Some(Event::Error(ServeError::Overloaded { queue_cap: 2 }))),
+            "third submit must be rejected with Overloaded, got {last:?}"
+        );
+    }
+
+    #[test]
+    fn cancel_frees_lane_for_queued_request() {
+        let mut be = MockBackend::new(1);
+        let mut sched = Scheduler::new(cfg(1, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (ta, ra) = mpsc::channel();
+        let (tc, rc) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1, 2], 30), ta, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        sched.step(&mut be, &mut m);
+        // C waits: the single lane is occupied by A.
+        sched.submit(GenRequest::new(2, vec![4, 4, 4], 2), tc, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert_eq!(be.prefills.len(), 1, "no free lane for C yet");
+        // Cancel A mid-generation: lane 0 is released and C claims it.
+        sched.cancel(1, &mut be, &mut m);
+        assert_eq!(be.released, vec![0]);
+        let ea = drain(&ra);
+        assert!(ea.iter().any(|e| matches!(e, Event::Error(ServeError::Cancelled))));
+        assert!(tokens_of(&ea).len() >= 2, "A streamed tokens before the cancel");
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert_eq!(be.prefills.len(), 2);
+        assert_eq!(be.prefills[1], (0, vec![4, 4, 4]), "C reuses A's freed lane");
+        sched.step(&mut be, &mut m);
+        let ec = drain(&rc);
+        assert!(done_of(&ec).is_some(), "C completes on the reclaimed lane");
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn cancel_of_queued_request_reports_cancelled() {
+        let mut be = MockBackend::new(1);
+        let mut sched = Scheduler::new(cfg(1, Duration::from_secs(60), 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (tx, rx) = mpsc::channel();
+        sched.submit(GenRequest::new(7, vec![1], 4), tx, &mut m);
+        sched.cancel(7, &mut be, &mut m);
+        assert_eq!(sched.queue_len(), 0);
+        assert!(matches!(
+            drain(&rx).first(),
+            Some(Event::Error(ServeError::Cancelled))
+        ));
+    }
+
+    #[test]
+    fn stop_token_finishes_early_and_frees_lane() {
+        let mut be = MockBackend::new(1);
+        let mut sched = Scheduler::new(cfg(1, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        // Script the stop at the second generated token.
+        let prompt = vec![1usize, 2];
+        let t0 = be.next_token(&prompt); // first token (from prefill logits)
+        let t1 = be.next_token(&[1, 2, t0]);
+        let (tx, rx) = mpsc::channel();
+        let req = GenRequest::new(1, prompt, 30).with_sampling(SamplingParams {
+            stop_tokens: vec![t1],
+            ..SamplingParams::greedy()
+        });
+        sched.submit(req, tx, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        for _ in 0..3 {
+            sched.step(&mut be, &mut m);
+        }
+        let ev = drain(&rx);
+        let stats = done_of(&ev).expect("Done");
+        assert_eq!(stats.finish, FinishReason::StopToken);
+        assert_eq!(stats.tokens, vec![t0, t1], "stop token is emitted, then ends");
+        assert_eq!(be.steps.len(), 1, "lane freed well before max_new");
+        assert_eq!(be.released, vec![0]);
+    }
+
+    #[test]
+    fn lone_partial_wave_waits_for_max_wait() {
+        let mut be = MockBackend::new(4);
+        let wait = Duration::from_millis(50);
+        let mut sched = Scheduler::new(cfg(4, wait, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (tx, _rx) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1, 2], 4), tx, &mut m);
+        let now = Instant::now();
+        // Regression for the old `ready() || !is_empty()` dispatch bug:
+        // a lone sub-max_wait request must NOT ship immediately...
+        sched.admit(now, &mut be, &mut m);
+        assert!(be.prefills.is_empty(), "partial wave admitted before max_wait");
+        assert!(sched.time_to_admission(now) > Duration::ZERO);
+        // ...but ships once the budget expires (no sleeping: pass a
+        // future `now`).
+        sched.admit(now + wait + Duration::from_millis(1), &mut be, &mut m);
+        assert_eq!(be.prefills.len(), 1);
+    }
+
+    #[test]
+    fn full_wave_and_inflight_joins_do_not_wait() {
+        let mut be = MockBackend::new(2);
+        let mut sched = Scheduler::new(cfg(2, Duration::from_secs(60), 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (ta, _ra) = mpsc::channel();
+        let (tb, _rb) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1], 8), ta, &mut m);
+        sched.submit(GenRequest::new(2, vec![2], 8), tb, &mut m);
+        // Queue fills every free lane: admitted with no wait.
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert_eq!(be.prefills.len(), 2);
+        // One finishes; a late arrival joins the still-active batch
+        // immediately (no coalescing delay while decode is running).
+        sched.cancel(1, &mut be, &mut m);
+        let (tc, _rc) = mpsc::channel();
+        sched.submit(GenRequest::new(3, vec![3], 8), tc, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert_eq!(be.prefills.len(), 3, "join of an in-flight batch must not wait");
+    }
+
+    #[test]
+    fn deadline_times_out_queued_and_active_requests() {
+        let mut be = MockBackend::new(1);
+        let mut sched = Scheduler::new(cfg(1, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        // Active session with a deadline.
+        let (ta, ra) = mpsc::channel();
+        sched.submit(
+            GenRequest::new(1, vec![1, 2], 30).with_deadline(Duration::from_millis(5)),
+            ta,
+            &mut m,
+        );
+        let now = Instant::now();
+        sched.admit(now, &mut be, &mut m);
+        // Queued request with an already-expired (zero) deadline.
+        let (tb, rb) = mpsc::channel();
+        sched.submit(GenRequest::new(2, vec![3], 30).with_deadline(Duration::ZERO), tb, &mut m);
+        sched.sweep_deadlines(now + Duration::from_millis(6), &mut be, &mut m);
+        assert!(drain(&ra).iter().any(|e| matches!(e, Event::Error(ServeError::Timeout))));
+        assert!(drain(&rb).iter().any(|e| matches!(e, Event::Error(ServeError::Timeout))));
+        assert_eq!(m.timeouts, 2);
+        assert_eq!(be.released, vec![0], "timed-out session frees its lane");
+        assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn prefill_failure_delivers_engine_failure() {
+        let mut be = MockBackend::new(1);
+        be.fail_prefill = true;
+        let mut sched = Scheduler::new(cfg(1, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (tx, rx) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1, 2], 4), tx, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        let ev = drain(&rx);
+        assert!(
+            matches!(ev.first(), Some(Event::Error(ServeError::EngineFailure(_)))),
+            "client must receive a typed engine failure, got {ev:?}"
+        );
+        assert_eq!(m.errors, 1);
+        assert!(sched.is_idle(), "failed admission must not leak the lane");
+    }
+
+    #[test]
+    fn step_failure_fails_all_active_sessions() {
+        let mut be = MockBackend::new(2);
+        be.fail_step_after = Some(0);
+        let mut sched = Scheduler::new(cfg(2, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (ta, ra) = mpsc::channel();
+        let (tb, rb) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1, 2], 8), ta, &mut m);
+        sched.submit(GenRequest::new(2, vec![3], 8), tb, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        sched.step(&mut be, &mut m);
+        for rx in [&ra, &rb] {
+            let ev = drain(rx);
+            assert!(
+                ev.iter().any(|e| matches!(e, Event::Error(ServeError::EngineFailure(_)))),
+                "every in-flight client hears about the failure (no silent drop)"
+            );
+        }
+        assert_eq!(m.errors, 2);
+        assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn max_new_zero_completes_with_no_tokens() {
+        let mut be = MockBackend::new(1);
+        let mut sched = Scheduler::new(cfg(1, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (tx, rx) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1, 2], 0), tx, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        let ev = drain(&rx);
+        let stats = done_of(&ev).expect("Done");
+        assert!(stats.tokens.is_empty(), "max_new=0 must not emit tokens");
+        assert!(tokens_of(&ev).is_empty());
+        assert!(be.prefills.is_empty(), "no lane work for an empty budget");
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.tokens_generated, 0);
+        assert!(sched.is_idle());
+    }
+
+    #[test]
+    fn oversized_prompt_is_a_typed_error() {
+        let mut be = MockBackend::new(1);
+        let mut sched = Scheduler::new(cfg(1, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (tx, rx) = mpsc::channel();
+        let long = vec![1usize; be.max_seq + 5];
+        sched.submit(GenRequest::new(1, long, 4), tx, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert!(matches!(
+            drain(&rx).first(),
+            Some(Event::Error(ServeError::EngineFailure(_)))
+        ));
+        assert!(sched.is_idle());
+    }
+}

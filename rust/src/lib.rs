@@ -20,7 +20,8 @@
 //! * [`model`] / [`train`] / [`data`] / [`eval`] — the tiny-LLaMA stand-in
 //!   models, trainer, synthetic corpora and evaluation harnesses.
 //! * [`runtime`] / [`coordinator`] — PJRT artifact execution + the serving
-//!   coordinator (router, batcher, scheduler).
+//!   coordinator (generation sessions, iteration-level scheduler,
+//!   streaming server).
 //! * [`bench`] — the criterion-less benchmark harness used by
 //!   `rust/benches/*` to regenerate every paper table/figure.
 

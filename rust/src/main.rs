@@ -11,7 +11,11 @@
 //! pifa eval     --ckpt PATH [--corpus wiki|c4]   (prints provenance)
 //! pifa generate --ckpt PATH --prompt "the banlanba ..." [--max-new N]
 //! pifa serve    --model tiny-s --flavour dense|pifa [--method NAME]
-//!               [--requests N] [--no-kv]  (+ the compress stage overrides)
+//!               [--requests N] [--no-kv] [--native]
+//!               [--max-batch N] [--max-wait-ms MS] [--queue-cap N]
+//!               [--temperature F] [--top-k N]
+//!               (+ the compress stage overrides; falls back to the
+//!               Rust-native backend when PJRT/artifacts are absent)
 //! pifa tables   <fig1|tab2|tab3|...|all>   (same generators as cargo bench)
 //! pifa info     — artifact + platform diagnostics
 //! ```
@@ -26,7 +30,10 @@ use pifa::bench::experiments::{self, ensure_trained_model, test_ppl};
 use pifa::compress::pipeline::{self, FactorizeStage, PackStage, PipelineSpec, ReconStage};
 use pifa::compress::registry::{self, CompressionOutput};
 use pifa::compress::ReconTarget;
-use pifa::coordinator::{BatcherConfig, GenRequest, GenerationEngine, GenerationMode, Server};
+use pifa::coordinator::{
+    DecodeBackend, Event, GenRequest, GenerationMode, NativeBackend, PjrtBackend, SamplingParams,
+    SchedulerConfig, Server,
+};
 use pifa::data::vocab::Vocab;
 use pifa::model::serialize::{load_checkpoint, load_checkpoint_full, save_checkpoint_with_spec};
 use pifa::pifa::PivotStrategy;
@@ -210,9 +217,28 @@ fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let name = flags.get("model").map(String::as_str).unwrap_or("tiny-s");
     let flavour = flags.get("flavour").map(String::as_str).unwrap_or("dense");
-    let n_requests: usize = flags.get("requests").map(String::as_str).unwrap_or("8").parse()?;
+    let n_requests: usize =
+        flags.get("requests").map(String::as_str).unwrap_or("8").parse::<usize>()?.max(1);
     let max_new: usize = flags.get("max-new").map(String::as_str).unwrap_or("16").parse()?;
     let use_kv = !flags.contains_key("no-kv");
+    // Scheduler knobs (DESIGN.md §6).
+    let max_batch: usize = flags.get("max-batch").map(String::as_str).unwrap_or("4").parse()?;
+    let max_wait_ms: u64 = flags.get("max-wait-ms").map(String::as_str).unwrap_or("5").parse()?;
+    let queue_cap: usize = flags.get("queue-cap").map(String::as_str).unwrap_or("64").parse()?;
+    // Sampling knobs (greedy by default).
+    let temperature: f32 = flags.get("temperature").map(String::as_str).unwrap_or("0").parse()?;
+    let top_k: usize = flags.get("top-k").map(String::as_str).unwrap_or("0").parse()?;
+
+    // Backend selection: PJRT when the runtime + artifacts are usable,
+    // otherwise the Rust-native backend (same scheduler, no artifacts).
+    let native = flags.contains_key("native")
+        || match Engine::new(&artifact_dir()) {
+            Ok(_) => false,
+            Err(e) => {
+                println!("PJRT unavailable ({e:#}); serving via the Rust-native backend");
+                true
+            }
+        };
 
     let model = ensure_trained_model(name)?;
     let (prefill, decode, served) = match flavour {
@@ -229,53 +255,108 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             let output = compress_via_registry(&model, &data, method, density, flags)?;
             println!("pipeline: {}", output.spec.describe());
             let prefill = format!("{name}_pifa55_prefill_b1_t64");
-            // Gate on artifact compatibility before spawning the server:
-            // the lowered artifact fixes flavour + density.
-            let manifest = Manifest::load(&artifact_dir())?;
-            manifest
-                .get(&prefill)?
-                .kind
-                .validate_provenance(output.spec.artifact_flavour(), output.spec.density)
-                .context("compressed model incompatible with the pifa55 artifacts")?;
+            if !native {
+                // Gate on artifact compatibility before spawning the
+                // server: the lowered artifact fixes flavour + density.
+                let manifest = Manifest::load(&artifact_dir())?;
+                manifest
+                    .get(&prefill)?
+                    .kind
+                    .validate_provenance(output.spec.artifact_flavour(), output.spec.density)
+                    .context("compressed model incompatible with the pifa55 artifacts")?;
+            }
             (prefill, format!("{name}_pifa55_decode_b1"), output.model)
         }
         other => bail!("unknown flavour {other}"),
     };
     let mode = if use_kv { GenerationMode::KvCache } else { GenerationMode::NoKvCache };
     let served_mem = served.memory_bytes_fp16();
-    let server = Server::spawn(
-        move || {
-            let mut pjrt = Engine::new(&artifact_dir())?;
-            println!("PJRT platform: {}", pjrt.platform());
-            let runner = ModelRunner::new(&mut pjrt, &served, &prefill, &decode)?;
-            Ok((pjrt, GenerationEngine::new(runner, mode)))
-        },
-        BatcherConfig::default(),
-    );
+    let scfg = SchedulerConfig {
+        max_batch,
+        max_wait: std::time::Duration::from_millis(max_wait_ms),
+        queue_cap,
+    };
+    let server = if native {
+        let served = served.clone();
+        Server::spawn(
+            move || {
+                Ok(Box::new(NativeBackend::new(served, mode, max_batch))
+                    as Box<dyn DecodeBackend>)
+            },
+            scfg,
+        )
+    } else {
+        let served = served.clone();
+        Server::spawn(
+            move || {
+                let mut pjrt = Engine::new(&artifact_dir())?;
+                println!("PJRT platform: {}", pjrt.platform());
+                let runner = ModelRunner::new(&mut pjrt, &served, &prefill, &decode)?;
+                Ok(Box::new(PjrtBackend::new(pjrt, runner, mode)) as Box<dyn DecodeBackend>)
+            },
+            scfg,
+        )
+    };
 
     let v = Vocab::new();
-    let mut rxs = Vec::new();
+    let sampling = SamplingParams { temperature, top_k, seed: 7, stop_tokens: Vec::new() };
+    let mut handles = Vec::new();
     for i in 0..n_requests as u64 {
-        let prompt = vec![v.id("the"), v.noun((i as usize) % 8, 3, false), v.verb(2, false)];
-        rxs.push(server.submit(GenRequest::new(i, prompt, max_new))?);
+        // Mixed traffic: prompt lengths and budgets vary per request.
+        let mut prompt = vec![v.id("the"), v.noun((i as usize) % 8, 3, false), v.verb(2, false)];
+        if i % 2 == 0 {
+            prompt.push(v.id("the"));
+        }
+        let req = GenRequest::new(i, prompt, max_new.saturating_sub(i as usize % 2).max(1))
+            .with_sampling(sampling.clone());
+        handles.push(server.submit(req)?);
     }
-    for rx in rxs {
-        let resp = rx.recv()?;
-        println!(
-            "req {}: {} ({} tokens, {:.1} ms)",
-            resp.id,
-            v.decode(&resp.tokens),
-            resp.tokens.len(),
-            resp.latency.as_secs_f64() * 1e3
-        );
+    // Stream the first request token-by-token; collect the rest.
+    let first_stats = loop {
+        match handles[0].next()? {
+            Event::Token { token, .. } => {
+                println!("req 0 [stream] += {}", v.decode(&[token]));
+            }
+            Event::Done(stats) => break stats,
+            Event::Error(e) => return Err(e.into()),
+        }
+    };
+    println!(
+        "req 0: \"{}\" ({} tokens, ttft {:.1} ms, finish {:?})",
+        v.decode(&first_stats.tokens),
+        first_stats.tokens.len(),
+        first_stats.ttft.as_secs_f64() * 1e3,
+        first_stats.finish,
+    );
+    for h in handles.iter().skip(1) {
+        match h.collect() {
+            Ok(stats) => println!(
+                "req {}: {} ({} tokens, {:.1} ms)",
+                stats.id,
+                v.decode(&stats.tokens),
+                stats.tokens.len(),
+                stats.latency.as_secs_f64() * 1e3
+            ),
+            Err(e) => println!("req {}: error: {e}", h.id),
+        }
     }
     let metrics = server.shutdown()?;
     println!(
-        "served {} requests | throughput {:.1} tok/s | p50 {:.1} ms | p95 {:.1} ms | weights {:.2} MB (fp16)",
+        "served {}/{} requests | throughput {:.1} tok/s | latency p50 {:.1} ms p95 {:.1} ms",
+        metrics.completed,
         metrics.requests,
         metrics.throughput(),
         metrics.latency_percentile_ms(0.5),
         metrics.latency_percentile_ms(0.95),
+    );
+    println!(
+        "ttft p50 {:.1} ms p95 {:.1} ms | itl p50 {:.2} ms p95 {:.2} ms | queue p95 {:.1} | occupancy p50 {:.0}% | weights {:.2} MB (fp16)",
+        metrics.ttft_percentile_ms(0.5),
+        metrics.ttft_percentile_ms(0.95),
+        metrics.itl_percentile_ms(0.5),
+        metrics.itl_percentile_ms(0.95),
+        metrics.queue_depth_percentile(0.95),
+        metrics.occupancy_percentile(0.5) * 100.0,
         served_mem as f64 / 1e6,
     );
     Ok(())

@@ -232,15 +232,144 @@ impl ModelRunner {
         Ok((logits, KvState { k, v, pos: state.pos + 1 }))
     }
 
-    /// Fresh zeroed KV state (for decode-from-scratch generation).
-    pub fn empty_kv(&self) -> Result<KvState> {
-        let n = self.layers * self.batch * self.max_seq * self.dim;
-        let dims = [self.layers, self.batch, self.max_seq, self.dim];
-        Ok(KvState {
-            k: literal_f32(&vec![0f32; n], &dims)?,
-            v: literal_f32(&vec![0f32; n], &dims)?,
-            pos: 0,
-        })
+    /// Per-lane KV store sized for this runner's decode artifact.
+    pub fn lane_kv(&self) -> LaneKv {
+        LaneKv::new(self.layers, self.batch, self.max_seq, self.dim)
+    }
+}
+
+/// Per-lane view over the merged `(L, B, S, d)` decode KV cache.
+///
+/// The decode artifact is lowered for a static batch `B`; continuous
+/// batching needs each batch row ("lane") to carry an independent
+/// session. `LaneKv` keeps the merged cache as host buffers so one lane
+/// can be written (prefill), advanced (decode absorb), or reset
+/// (cancel / finish) without touching the other lanes' state.
+pub struct LaneKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Per-lane sequence position (tokens currently cached).
+    pub pos: Vec<usize>,
+    layers: usize,
+    lanes: usize,
+    max_seq: usize,
+    dim: usize,
+}
+
+impl LaneKv {
+    pub fn new(layers: usize, lanes: usize, max_seq: usize, dim: usize) -> Self {
+        let n = layers * lanes * max_seq * dim;
+        Self {
+            k: vec![0f32; n],
+            v: vec![0f32; n],
+            pos: vec![0; lanes],
+            layers,
+            lanes,
+            max_seq,
+            dim,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Start offset of `(layer, lane, seq_pos)` in the merged buffer.
+    fn offset(&self, layer: usize, lane: usize, seq_pos: usize) -> usize {
+        ((layer * self.lanes + lane) * self.max_seq + seq_pos) * self.dim
+    }
+
+    /// Install a single-sequence `(L, 1, S, d)` prefill cache (the layout
+    /// [`ModelRunner::prefill`] returns) into one lane of the merged
+    /// cache, and set that lane's position.
+    pub fn write_lane(&mut self, lane: usize, k_seq: &[f32], v_seq: &[f32], pos: usize) -> Result<()> {
+        if lane >= self.lanes {
+            bail!("lane {lane} out of range (lanes {})", self.lanes);
+        }
+        let stride = self.max_seq * self.dim;
+        let want = self.layers * stride;
+        if k_seq.len() != want || v_seq.len() != want {
+            bail!(
+                "per-lane cache has {} elements, artifact wants {want} (L*S*d)",
+                k_seq.len()
+            );
+        }
+        if pos > self.max_seq {
+            bail!("lane position {pos} exceeds max_seq {}", self.max_seq);
+        }
+        for li in 0..self.layers {
+            let src = li * stride..(li + 1) * stride;
+            let dst = self.offset(li, lane, 0);
+            self.k[dst..dst + stride].copy_from_slice(&k_seq[src.clone()]);
+            self.v[dst..dst + stride].copy_from_slice(&v_seq[src]);
+        }
+        self.pos[lane] = pos;
+        Ok(())
+    }
+
+    /// Zero one lane and reset its position (session finished/cancelled);
+    /// the other lanes are untouched.
+    pub fn reset_lane(&mut self, lane: usize) {
+        if lane >= self.lanes {
+            return;
+        }
+        let stride = self.max_seq * self.dim;
+        for li in 0..self.layers {
+            let dst = self.offset(li, lane, 0);
+            self.k[dst..dst + stride].fill(0.0);
+            self.v[dst..dst + stride].fill(0.0);
+        }
+        self.pos[lane] = 0;
+    }
+
+    /// After a decode step at shared position `pos`, copy back the newly
+    /// written KV rows for exactly the given lanes (the artifact writes a
+    /// row for *every* batch slot; inactive lanes must not be absorbed)
+    /// and advance their positions.
+    pub fn absorb_step(
+        &mut self,
+        active_lanes: &[usize],
+        k_new: &xla::Literal,
+        v_new: &xla::Literal,
+        pos: usize,
+    ) -> Result<()> {
+        if pos >= self.max_seq {
+            bail!("absorb position {pos} exceeds max_seq {}", self.max_seq);
+        }
+        let kv = k_new.to_vec::<f32>()?;
+        let vv = v_new.to_vec::<f32>()?;
+        let want = self.layers * self.lanes * self.max_seq * self.dim;
+        if kv.len() != want || vv.len() != want {
+            bail!("decode KV output has {} elements, want {want}", kv.len());
+        }
+        for &lane in active_lanes {
+            if lane >= self.lanes {
+                bail!("lane {lane} out of range (lanes {})", self.lanes);
+            }
+            for li in 0..self.layers {
+                let at = self.offset(li, lane, pos);
+                self.k[at..at + self.dim].copy_from_slice(&kv[at..at + self.dim]);
+                self.v[at..at + self.dim].copy_from_slice(&vv[at..at + self.dim]);
+            }
+            self.pos[lane] = pos + 1;
+        }
+        Ok(())
+    }
+
+    /// Merged K cache as a `(L, B, S, d)` literal for the decode artifact.
+    pub fn k_literal(&self) -> Result<xla::Literal> {
+        literal_f32(&self.k, &[self.layers, self.lanes, self.max_seq, self.dim])
+    }
+
+    /// Merged V cache as a `(L, B, S, d)` literal for the decode artifact.
+    pub fn v_literal(&self) -> Result<xla::Literal> {
+        literal_f32(&self.v, &[self.layers, self.lanes, self.max_seq, self.dim])
+    }
+
+    /// Host K row `(layer, lane, seq_pos)` — test/diagnostic accessor.
+    pub fn k_row(&self, layer: usize, lane: usize, seq_pos: usize) -> &[f32] {
+        let at = self.offset(layer, lane, seq_pos);
+        &self.k[at..at + self.dim]
     }
 }
 
@@ -306,6 +435,86 @@ mod tests {
             }
         }
         let _ = spec;
+    }
+
+    /// Build an (L,1,S,d) per-sequence cache whose element at
+    /// (li, t, j) is `base + li*100 + t*10 + j`.
+    fn seq_cache(layers: usize, s: usize, d: usize, base: f32) -> Vec<f32> {
+        (0..layers * s * d)
+            .map(|idx| {
+                let (li, rem) = (idx / (s * d), idx % (s * d));
+                base + (li * 100 + (rem / d) * 10 + rem % d) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lane_kv_write_matches_legacy_merge_layout() {
+        let (l, b, s, d) = (2usize, 3usize, 4usize, 2usize);
+        let mut kv = LaneKv::new(l, b, s, d);
+        let k0 = seq_cache(l, s, d, 1000.0);
+        let k2 = seq_cache(l, s, d, 9000.0);
+        kv.write_lane(0, &k0, &k0, 3).unwrap();
+        kv.write_lane(2, &k2, &k2, 1).unwrap();
+        assert_eq!(kv.pos, vec![3, 0, 1]);
+        // Reference: the merge loop the old GenerationEngine::run_kv used.
+        let stride = s * d;
+        let mut want = vec![0f32; l * b * stride];
+        for li in 0..l {
+            for (lane, src) in [(0usize, &k0), (2usize, &k2)] {
+                let dst = (li * b + lane) * stride;
+                want[dst..dst + stride].copy_from_slice(&src[li * stride..(li + 1) * stride]);
+            }
+        }
+        assert_eq!(kv.k_literal().unwrap().to_vec::<f32>().unwrap(), want);
+        assert_eq!(kv.v_literal().unwrap().to_vec::<f32>().unwrap(), want);
+    }
+
+    #[test]
+    fn lane_kv_reset_clears_only_that_lane() {
+        let (l, b, s, d) = (2usize, 2usize, 3usize, 2usize);
+        let mut kv = LaneKv::new(l, b, s, d);
+        let c0 = seq_cache(l, s, d, 100.0);
+        let c1 = seq_cache(l, s, d, 500.0);
+        kv.write_lane(0, &c0, &c0, 2).unwrap();
+        kv.write_lane(1, &c1, &c1, 3).unwrap();
+        kv.reset_lane(0);
+        assert_eq!(kv.pos, vec![0, 3]);
+        assert!(kv.k_row(0, 0, 0).iter().all(|&x| x == 0.0));
+        assert_eq!(kv.k_row(0, 1, 0), &c1[0..d]);
+        // Re-prefetching the freed lane works without disturbing lane 1.
+        kv.write_lane(0, &c0, &c0, 1).unwrap();
+        assert_eq!(kv.k_row(1, 1, 2), &c1[(s + 2) * d..(s + 3) * d]);
+    }
+
+    #[test]
+    fn lane_kv_absorb_updates_only_active_lanes() {
+        let (l, b, s, d) = (1usize, 2usize, 3usize, 2usize);
+        let mut kv = LaneKv::new(l, b, s, d);
+        let c = seq_cache(l, s, d, 0.0);
+        kv.write_lane(0, &c, &c, 1).unwrap();
+        kv.write_lane(1, &c, &c, 1).unwrap();
+        // Fake decode output: every element 7.0 (the artifact writes all
+        // batch rows at `pos`, active or not).
+        let full = vec![7.0f32; l * b * s * d];
+        let lit = literal_f32(&full, &[l, b, s, d]).unwrap();
+        kv.absorb_step(&[1], &lit, &lit, 1).unwrap();
+        assert_eq!(kv.pos, vec![1, 2]);
+        // Lane 1 absorbed the row at pos=1; lane 0 kept its old value.
+        assert_eq!(kv.k_row(0, 1, 1), &[7.0, 7.0]);
+        assert_eq!(kv.k_row(0, 0, 1), &c[d..2 * d]);
+    }
+
+    #[test]
+    fn lane_kv_rejects_bad_shapes() {
+        let mut kv = LaneKv::new(1, 2, 3, 2);
+        assert!(kv.write_lane(5, &[0.0; 6], &[0.0; 6], 0).is_err());
+        assert!(kv.write_lane(0, &[0.0; 4], &[0.0; 4], 0).is_err());
+        let ok = vec![0.0f32; 6];
+        assert!(kv.write_lane(0, &ok, &ok, 9).is_err());
+        let lit = literal_f32(&[0.0f32; 12], &[1, 2, 3, 2]).unwrap();
+        assert!(kv.absorb_step(&[0], &lit, &lit, 7).is_err());
+        assert!(kv.absorb_step(&[9], &lit, &lit, 0).is_err());
     }
 
     #[test]

@@ -15,6 +15,6 @@ pub mod exec;
 pub mod loader;
 pub mod manifest;
 
-pub use exec::{weights_to_literals, ModelRunner};
+pub use exec::{weights_to_literals, LaneKv, ModelRunner};
 pub use loader::Engine;
 pub use manifest::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};

@@ -226,32 +226,66 @@ fn density_monotonicity() {
     );
 }
 
-/// Integration: the whole PJRT path — checkpoint → ModelRunner → greedy
-/// generation == Rust-native generation (requires `make artifacts`).
+/// Integration: the serving stack end to end — scheduler + streaming
+/// server over the native backend (always runs; no artifacts needed),
+/// then the same stack over the PJRT backend when artifacts exist.
 #[test]
-fn pjrt_generation_parity_with_native() {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("tiny-s_dense_prefill_b1_t64.hlo.txt").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
-    use pifa::coordinator::{GenerationEngine, GenerationMode};
+fn serving_stack_parity_with_native_generate() {
+    use pifa::coordinator::{
+        DecodeBackend, GenRequest, GenerationMode, NativeBackend, PjrtBackend, SchedulerConfig,
+        Server,
+    };
     use pifa::runtime::{Engine, ModelRunner};
+    use std::time::Duration;
     let cfg = ModelConfig::tiny_s();
     let mut rng = Rng::new(9100);
     let model = Transformer::new_random(&cfg, &mut rng);
-    let mut engine = Engine::new(&dir).unwrap();
-    let runner = ModelRunner::new(
-        &mut engine,
-        &model,
-        "tiny-s_dense_prefill_b1_t64",
-        "tiny-s_dense_decode_b1",
-    )
-    .unwrap();
-    let gen = GenerationEngine::new(runner, GenerationMode::KvCache);
     let prompt = vec![2usize, 40, 7, 19];
-    let (outs, _) = gen.generate_batch(&mut engine, &[prompt.clone()], 8).unwrap();
-    assert_eq!(outs[0], model.generate(&prompt, 8));
+    let want = model.generate(&prompt, 8);
+
+    // Native backend: the serve path CI always exercises.
+    let m2 = model.clone();
+    let server = Server::spawn(
+        move || {
+            Ok(Box::new(NativeBackend::new(m2, GenerationMode::KvCache, 2))
+                as Box<dyn DecodeBackend>)
+        },
+        SchedulerConfig::default(),
+    );
+    let h = server.submit(GenRequest::new(0, prompt.clone(), 8)).unwrap();
+    let stats = h.collect_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!(stats.tokens, want, "scheduler+native backend diverged from model.generate");
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.completed, 1);
+
+    // PJRT backend: artifact-gated with an explicit skip.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("tiny-s_dense_prefill_b1_t64.hlo.txt").exists() {
+        eprintln!(
+            "SKIP serving_stack_parity_with_native_generate/pjrt: artifacts absent \
+             (run `make artifacts`); the native-backend serving path was verified above"
+        );
+        return;
+    }
+    let m3 = model.clone();
+    let server = Server::spawn(
+        move || {
+            let mut pjrt = Engine::new(&dir)?;
+            let runner = ModelRunner::new(
+                &mut pjrt,
+                &m3,
+                "tiny-s_dense_prefill_b1_t64",
+                "tiny-s_dense_decode_b1",
+            )?;
+            Ok(Box::new(PjrtBackend::new(pjrt, runner, GenerationMode::KvCache))
+                as Box<dyn DecodeBackend>)
+        },
+        SchedulerConfig::default(),
+    );
+    let h = server.submit(GenRequest::new(1, prompt.clone(), 8)).unwrap();
+    let stats = h.collect_timeout(Duration::from_secs(120)).unwrap();
+    assert_eq!(stats.tokens, want, "scheduler+PJRT backend diverged from model.generate");
+    server.shutdown().unwrap();
 }
 
 /// Integration: PIFA-flavour PJRT artifact accepts an MPIFA-compressed
