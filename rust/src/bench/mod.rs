@@ -3,6 +3,7 @@
 
 pub mod experiments;
 pub mod harness;
+pub mod kernels;
 pub mod tablegen;
 pub mod tables;
 

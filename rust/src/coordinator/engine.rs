@@ -18,11 +18,14 @@
 //! when the sparse kernel cannot run the cache ops (Table 7's
 //! "Use KV Cache: No" rows).
 
+use crate::linalg::Mat;
 use crate::model::transformer::{KvCache, Transformer};
-use crate::runtime::exec::{KvState, LaneKv, ModelRunner};
+use crate::runtime::exec::{literal_f32_view, KvState, LaneKv, ModelRunner};
+use crate::runtime::kernels::pool;
 use crate::runtime::Engine;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 /// Whether decode reuses the KV cache (Table 7's "Use KV Cache" axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -79,8 +82,16 @@ pub struct NativeBackend {
     caches: Vec<Option<KvCache>>,
 }
 
+/// Per-lane step job (token + owned cache) handed to a pool job.
+type LaneJob = Mutex<Option<(usize, KvCache)>>;
+/// Per-lane step result (logits + the cache handed back).
+type LaneDone = Mutex<Option<(Mat<f32>, KvCache)>>;
+
 impl NativeBackend {
     pub fn new(model: Transformer, mode: GenerationMode, lanes: usize) -> Self {
+        // Spawn the kernel pool now so the first decode token does not
+        // pay the worker start-up cost.
+        pool::prewarm();
         Self { model, mode, caches: (0..lanes.max(1)).map(|_| None).collect() }
     }
 }
@@ -118,33 +129,95 @@ impl DecodeBackend for NativeBackend {
         }
     }
 
+    /// Lanes are independent, so one shared iteration can fan the
+    /// per-lane work across the kernel pool (the kernels inside a pool
+    /// job run inline — nested pool calls do not re-enter). KV-cache
+    /// decode steps are single-token GEMVs, usually below the banding
+    /// threshold, so lane-level parallelism is the only parallelism
+    /// available and is always used; no-KV steps are prefill-sized
+    /// forwards whose inner GEMMs band across the pool themselves, so
+    /// lanes fan out only when there are at least as many of them as
+    /// pool slots. All validation happens up front so the parallel
+    /// section is infallible.
     fn step(&mut self, inputs: &[StepInput<'_>]) -> Result<Vec<Vec<f32>>> {
-        let mut out = Vec::with_capacity(inputs.len());
-        for inp in inputs {
-            match self.mode {
-                GenerationMode::KvCache => {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        match self.mode {
+            GenerationMode::KvCache => {
+                let mut seen = vec![false; self.caches.len()];
+                for inp in inputs {
                     let cache = self
                         .caches
-                        .get_mut(inp.lane)
-                        .and_then(Option::as_mut)
+                        .get(inp.lane)
+                        .and_then(Option::as_ref)
                         .with_context(|| format!("lane {} has no prefilled cache", inp.lane))?;
                     if cache.len >= cache.capacity {
                         bail!("lane {} KV cache full at {}", inp.lane, cache.len);
                     }
-                    let logits = self.model.decode_step(inp.token, cache);
+                    if seen[inp.lane] {
+                        bail!("lane {} appears twice in one iteration", inp.lane);
+                    }
+                    seen[inp.lane] = true;
+                }
+                // Move each lane's cache into its job slot; jobs own it for
+                // the duration of the scope and hand it back with the
+                // logits.
+                let jobs: Vec<LaneJob> = inputs
+                    .iter()
+                    .map(|inp| Mutex::new(Some((inp.token, self.caches[inp.lane].take().unwrap()))))
+                    .collect();
+                let done: Vec<LaneDone> = inputs.iter().map(|_| Mutex::new(None)).collect();
+                let model = &self.model;
+                pool::scope_run(inputs.len(), |i| {
+                    let (token, mut cache) = jobs[i].lock().unwrap().take().unwrap();
+                    let logits = model.decode_step(token, &mut cache);
+                    *done[i].lock().unwrap() = Some((logits, cache));
+                });
+                let mut out = Vec::with_capacity(inputs.len());
+                for (inp, slot) in inputs.iter().zip(done) {
+                    let (logits, cache) =
+                        slot.into_inner().unwrap().context("lane step produced no result")?;
+                    self.caches[inp.lane] = Some(cache);
                     out.push(logits.row(0).to_vec());
                 }
-                GenerationMode::NoKvCache => {
+                Ok(out)
+            }
+            GenerationMode::NoKvCache => {
+                for inp in inputs {
                     if inp.seq.is_empty() || inp.seq.len() > self.model.cfg.max_seq {
                         bail!("sequence length {} exceeds max_seq", inp.seq.len());
                     }
-                    // Full re-prefill every step — the no-cache cost.
-                    let logits = self.model.forward(inp.seq, None);
-                    out.push(logits.row(inp.seq.len() - 1).to_vec());
                 }
+                // Full re-prefill every step — the no-cache cost. Each
+                // lane's forward is prefill-sized, so its inner GEMMs can
+                // use the whole pool; fanning lanes out would serialize
+                // them (nested pool calls run inline). Only go
+                // lane-parallel when there are enough lanes to cover the
+                // machine on their own.
+                let done: Vec<Mutex<Option<Mat<f32>>>> =
+                    inputs.iter().map(|_| Mutex::new(None)).collect();
+                let model = &self.model;
+                if inputs.len() >= pool::max_parallelism() {
+                    pool::scope_run(inputs.len(), |i| {
+                        *done[i].lock().unwrap() = Some(model.forward(inputs[i].seq, None));
+                    });
+                } else {
+                    for (inp, slot) in inputs.iter().zip(done.iter()) {
+                        *slot.lock().unwrap() = Some(model.forward(inp.seq, None));
+                    }
+                }
+                inputs
+                    .iter()
+                    .zip(done)
+                    .map(|(inp, slot)| {
+                        let logits =
+                            slot.into_inner().unwrap().context("lane step produced no result")?;
+                        Ok(logits.row(inp.seq.len() - 1).to_vec())
+                    })
+                    .collect()
             }
         }
-        Ok(out)
     }
 
     fn release(&mut self, lane: usize) {
@@ -200,9 +273,10 @@ impl DecodeBackend for PjrtBackend {
         }
         let (logits, kvs) = self.runner.prefill(&mut self.pjrt, prompt)?;
         if self.mode == GenerationMode::KvCache {
-            let k = kvs.k.to_vec::<f32>()?;
-            let v = kvs.v.to_vec::<f32>()?;
-            self.kv.write_lane(lane, &k, &v, prompt.len())?;
+            // Borrowed views: no full-cache copies on the claim path.
+            let k = literal_f32_view(&kvs.k)?;
+            let v = literal_f32_view(&kvs.v)?;
+            self.kv.write_lane(lane, k, v, prompt.len())?;
         }
         Ok(self.runner.logits_at(&logits, prompt.len() - 1))
     }

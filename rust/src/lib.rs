@@ -19,9 +19,10 @@
 //! * [`sparse24`] — 2:4 semi-structured sparsity substrate.
 //! * [`model`] / [`train`] / [`data`] / [`eval`] — the tiny-LLaMA stand-in
 //!   models, trainer, synthetic corpora and evaluation harnesses.
-//! * [`runtime`] / [`coordinator`] — PJRT artifact execution + the serving
-//!   coordinator (generation sessions, iteration-level scheduler,
-//!   streaming server).
+//! * [`runtime`] / [`coordinator`] — PJRT artifact execution, the kernel
+//!   layer (`runtime::kernels`: persistent thread pool + structure-aware
+//!   decode fast paths, DESIGN.md §7) + the serving coordinator
+//!   (generation sessions, iteration-level scheduler, streaming server).
 //! * [`bench`] — the criterion-less benchmark harness used by
 //!   `rust/benches/*` to regenerate every paper table/figure.
 

@@ -1,88 +1,65 @@
 //! Blocked, multi-threaded GEMM — the L3 hot path.
 //!
-//! Row-major `C = A * B` with cache blocking over K and N and
-//! `std::thread::scope` parallelism over row bands of C (no rayon in the
-//! offline crate set). The inner loops are written in `ikj` order so both
-//! the B panel and the C row stream sequentially, letting LLVM
-//! auto-vectorize the `mul_add` chain.
+//! Row-major `C = A * B` with cache blocking over K and N, parallelized
+//! over row bands of C on the persistent kernel pool
+//! (`crate::runtime::kernels::pool` — no rayon in the offline crate set,
+//! and no per-call thread spawns since the kernel-layer refactor). The
+//! inner loops are written in `ikj` order so both the B panel and the C
+//! row stream sequentially, letting LLVM auto-vectorize the `mul_add`
+//! chain.
 //!
-//! Perf notes (EXPERIMENTS.md §Perf has the measured iteration log):
-//! * KC=256 keeps an A-row slice plus a B panel inside L2.
-//! * 4-way j-unrolling in `kernel_band` was worth ~1.6x over the naive
-//!   triple loop; further unrolling showed <5% and was reverted.
-//! * Threads are spawned only above a FLOP threshold; small matrices (the
-//!   per-token decode GEMVs) stay single-threaded to avoid spawn overhead.
+//! Decode-shaped calls (`matmul_nt` with ≤ 4 batch rows) dispatch to the
+//! GEMV kernels in `crate::runtime::kernels::gemv` instead of banding
+//! over the (tiny) batch axis. Dispatch rules and the measured perf
+//! ladder live in DESIGN.md §7.
 
 use super::mat::Mat;
 use super::scalar::Scalar;
+use crate::runtime::kernels;
+use crate::runtime::kernels::pool::SendPtr;
 
 /// K-dimension cache block.
 const KC: usize = 256;
-/// Minimum FLOPs before threads are worth spawning.
-const PAR_THRESHOLD: usize = 1 << 22;
 
 /// `C = A * B`.
 pub fn matmul<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
     let mut c = Mat::zeros(a.rows(), b.cols());
-    matmul_into(a, b, &mut c);
+    // Fresh zeros: skip matmul_into's clearing pass.
+    matmul_into_acc(a, b, &mut c);
     c
 }
 
-/// `C = A * B` into a preallocated output (zeroed first).
+/// `C = A * B` into a preallocated output (cleared first). Callers that
+/// already hold a fresh `Mat::zeros` should use [`matmul_into_acc`] to
+/// skip the redundant clearing pass.
 pub fn matmul_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
+    assert_eq!(c.shape(), (a.rows(), b.cols()), "matmul: output shape mismatch");
+    c.as_mut_slice().fill(T::ZERO);
+    matmul_into_acc(a, b, c);
+}
+
+/// `C += A * B` — the accumulate variant. The inner kernel is additive
+/// anyway, so this is the primitive; [`matmul_into`] is clear-then-add.
+pub fn matmul_into_acc<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
     assert_eq!(k, k2, "matmul: inner dim mismatch {}x{} * {}x{}", m, k, k2, n);
     assert_eq!(c.shape(), (m, n), "matmul: output shape mismatch");
-    for v in c.as_mut_slice().iter_mut() {
-        *v = T::ZERO;
-    }
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let flops = 2 * m * n * k;
-    let nthreads = if flops >= PAR_THRESHOLD {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(m.max(1))
-    } else {
-        1
-    };
-    if nthreads <= 1 {
-        kernel_band(a.as_slice(), b.as_slice(), c.as_mut_slice(), 0, m, k, n);
-        return;
-    }
-    let band = m.div_ceil(nthreads);
     let a_s = a.as_slice();
     let b_s = b.as_slice();
-    // Split C into disjoint row bands; each thread owns one band.
-    let mut bands: Vec<&mut [T]> = Vec::with_capacity(nthreads);
-    let mut rest = c.as_mut_slice();
-    let mut starts = Vec::with_capacity(nthreads);
-    let mut row = 0;
-    while row < m {
-        let rows_here = band.min(m - row);
-        let (head, tail) = rest.split_at_mut(rows_here * n);
-        bands.push(head);
-        starts.push(row);
-        rest = tail;
-        row += rows_here;
-    }
-    std::thread::scope(|s| {
-        for (band_c, &r0) in bands.into_iter().zip(starts.iter()) {
-            let rows_here = band_c.len() / n;
-            s.spawn(move || {
-                kernel_band_local(a_s, b_s, band_c, r0, rows_here, k, n);
-            });
-        }
+    let c_ptr = SendPtr::new(c.as_mut_slice().as_mut_ptr());
+    kernels::scope_chunks(m, 2 * m * n * k, |r0, r1| {
+        // SAFETY: scope_chunks hands out disjoint in-bounds row bands of
+        // C, and C outlives the scope.
+        let c_band = unsafe { c_ptr.slice_mut(r0 * n, (r1 - r0) * n) };
+        kernel_band_local(a_s, b_s, c_band, r0, r1 - r0, k, n);
     });
 }
 
-/// Compute rows `[r0, r0+rows)` of C (C slice covers the whole matrix).
-fn kernel_band<T: Scalar>(a: &[T], b: &[T], c: &mut [T], r0: usize, rows: usize, k: usize, n: usize) {
-    let c_band = &mut c[r0 * n..(r0 + rows) * n];
-    kernel_band_local(a, b, c_band, r0, rows, k, n);
-}
-
-/// Same, but C slice starts at the band (thread-owned storage).
+/// Accumulate rows `[r0, r0+rows)` of C (C slice starts at the band).
 fn kernel_band_local<T: Scalar>(
     a: &[T],
     b: &[T],
@@ -98,8 +75,8 @@ fn kernel_band_local<T: Scalar>(
             let arow = &a[(r0 + i) * k..(r0 + i + 1) * k];
             let crow = &mut c_band[i * n..(i + 1) * n];
             // Two k-steps per pass: doubles the ILP of the axpy chain and
-            // halves the C-row traffic. (Measured ladder in EXPERIMENTS.md
-            // §Perf: the original per-k zero-skip branch was the real
+            // halves the C-row traffic. (Measured ladder in DESIGN.md §7:
+            // the original per-k zero-skip branch was the real
             // vectorization killer — removing it was a ~5x win; widening
             // to 4 k-steps regressed ~30% from register pressure and was
             // reverted.)
@@ -126,57 +103,44 @@ fn kernel_band_local<T: Scalar>(
 }
 
 /// `C = A * B^T` — rows-dot-rows; used for `X X^T` / `Y X^T` accumulators
-/// where both operands are stored row-major with samples in rows.
+/// where both operands are stored row-major with samples in rows, and —
+/// with A as the activation matrix — for every `Y = X W^T` forward.
+/// Decode-shaped calls (≤ 4 rows of A) take the GEMV fast path.
 pub fn matmul_nt<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
     let (m, k) = a.shape();
     let (n, k2) = b.shape();
     assert_eq!(k, k2, "matmul_nt: inner dim mismatch");
+    if m <= kernels::DECODE_BATCH_MAX {
+        return kernels::gemv::skinny_nt(a, b);
+    }
     let mut c = Mat::zeros(m, n);
     if m == 0 || n == 0 || k == 0 {
         return c;
     }
-    let flops = 2 * m * n * k;
-    let nthreads = if flops >= PAR_THRESHOLD {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(m.max(1))
-    } else {
-        1
-    };
     let a_s = a.as_slice();
     let b_s = b.as_slice();
-    let band = m.div_ceil(nthreads);
-    let mut bands: Vec<(usize, &mut [T])> = Vec::new();
-    let mut rest = c.as_mut_slice();
-    let mut row = 0;
-    while row < m {
-        let rows_here = band.min(m - row);
-        let (head, tail) = rest.split_at_mut(rows_here * n);
-        bands.push((row, head));
-        rest = tail;
-        row += rows_here;
-    }
-    std::thread::scope(|s| {
-        for (r0, band_c) in bands {
-            let rows_here = band_c.len() / n;
-            s.spawn(move || {
-                for i in 0..rows_here {
-                    let arow = &a_s[(r0 + i) * k..(r0 + i + 1) * k];
-                    for j in 0..n {
-                        let brow = &b_s[j * k..(j + 1) * k];
-                        let mut acc0 = T::ZERO;
-                        let mut acc1 = T::ZERO;
-                        let mut kk = 0;
-                        while kk + 2 <= k {
-                            acc0 = arow[kk].mul_add_s(brow[kk], acc0);
-                            acc1 = arow[kk + 1].mul_add_s(brow[kk + 1], acc1);
-                            kk += 2;
-                        }
-                        if kk < k {
-                            acc0 = arow[kk].mul_add_s(brow[kk], acc0);
-                        }
-                        band_c[i * n + j] = acc0 + acc1;
-                    }
+    let c_ptr = SendPtr::new(c.as_mut_slice().as_mut_ptr());
+    kernels::scope_chunks(m, 2 * m * n * k, |r0, r1| {
+        let rows = r1 - r0;
+        // SAFETY: disjoint row bands, in bounds, C outlives the scope.
+        let band_c = unsafe { c_ptr.slice_mut(r0 * n, rows * n) };
+        for i in 0..rows {
+            let arow = &a_s[(r0 + i) * k..(r0 + i + 1) * k];
+            for j in 0..n {
+                let brow = &b_s[j * k..(j + 1) * k];
+                let mut acc0 = T::ZERO;
+                let mut acc1 = T::ZERO;
+                let mut kk = 0;
+                while kk + 2 <= k {
+                    acc0 = arow[kk].mul_add_s(brow[kk], acc0);
+                    acc1 = arow[kk + 1].mul_add_s(brow[kk + 1], acc1);
+                    kk += 2;
                 }
-            });
+                if kk < k {
+                    acc0 = arow[kk].mul_add_s(brow[kk], acc0);
+                }
+                band_c[i * n + j] = acc0 + acc1;
+            }
         }
     });
     c
@@ -232,13 +196,38 @@ mod tests {
 
     #[test]
     fn parallel_path_matches() {
-        // Big enough to trip the threading threshold.
+        // Big enough to trip the pool threshold.
         let mut rng = Rng::new(6);
         let a: Mat<f32> = Mat::randn(200, 150, &mut rng);
         let b: Mat<f32> = Mat::randn(150, 180, &mut rng);
         let c = matmul(&a, &b);
         let r = naive(&a, &b);
         assert!(c.rel_fro_err(&r) < 1e-5);
+    }
+
+    #[test]
+    fn into_clears_and_acc_accumulates() {
+        // The regression pair for the matmul_into/matmul_into_acc split:
+        // `into` must give A*B regardless of what C held; `acc` must add
+        // onto it.
+        let mut rng = Rng::new(7);
+        let a: Mat<f64> = Mat::randn(9, 13, &mut rng);
+        let b: Mat<f64> = Mat::randn(13, 11, &mut rng);
+        let prod = naive(&a, &b);
+
+        let mut c = Mat::full(9, 11, 5.0);
+        matmul_into(&a, &b, &mut c);
+        assert!(c.rel_fro_err(&prod) < 1e-12, "into must clear stale C");
+
+        let bias: Mat<f64> = Mat::randn(9, 11, &mut rng);
+        let mut c2 = bias.clone();
+        matmul_into_acc(&a, &b, &mut c2);
+        assert!(c2.rel_fro_err(&bias.add_mat(&prod)) < 1e-12, "acc must accumulate");
+
+        // Fresh zeros through acc (the matmul() path) equals into.
+        let mut c3 = Mat::zeros(9, 11);
+        matmul_into_acc(&a, &b, &mut c3);
+        assert!(c3.rel_fro_err(&prod) < 1e-12);
     }
 
     #[test]
@@ -255,6 +244,19 @@ mod tests {
         let c2 = matmul_tn(&a2, &b2);
         let r2 = matmul(&a2.transpose(), &b2);
         assert!(c2.rel_fro_err(&r2) < 1e-12);
+    }
+
+    #[test]
+    fn nt_decode_batches_match_generic() {
+        // The skinny dispatch (m <= 4) against the same math via matmul.
+        let mut rng = Rng::new(11);
+        for m in 1..=6 {
+            let a: Mat<f64> = Mat::randn(m, 40, &mut rng);
+            let b: Mat<f64> = Mat::randn(25, 40, &mut rng);
+            let c = matmul_nt(&a, &b);
+            let r = matmul(&a, &b.transpose());
+            assert!(c.rel_fro_err(&r) < 1e-12, "batch {m}");
+        }
     }
 
     #[test]

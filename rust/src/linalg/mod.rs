@@ -15,6 +15,12 @@
 //! * [`solve`] — triangular / least-squares / ridge solvers, inverses,
 //!   condition numbers (Figure 8).
 //! * [`rng`] — splitmix64/xoshiro random numbers (no `rand` offline).
+//!
+//! Layering note: [`gemm`] deliberately borrows the process-wide kernel
+//! pool and decode dispatch from `crate::runtime::kernels` — an upward
+//! module reference, accepted so there is exactly one pool (and one
+//! dispatch policy) for the whole process; the runtime layer owns that
+//! policy (DESIGN.md §7).
 
 pub mod chol;
 pub mod gemm;
@@ -27,7 +33,7 @@ pub mod solve;
 pub mod svd;
 
 pub use chol::{cholesky, chol_solve, chol_inverse};
-pub use gemm::{matmul, matmul_into, matmul_tn, matmul_nt};
+pub use gemm::{matmul, matmul_into, matmul_into_acc, matmul_tn, matmul_nt};
 pub use lu::{lu_decompose, lu_solve, Lu};
 pub use mat::Mat;
 pub use qr::{qr_column_pivot, PivotedQr};

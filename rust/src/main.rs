@@ -17,6 +17,11 @@
 //!               (+ the compress stage overrides; falls back to the
 //!               Rust-native backend when PJRT/artifacts are absent)
 //! pifa tables   <fig1|tab2|tab3|...|all>   (same generators as cargo bench)
+//! pifa bench-kernels [--smoke] [--out PATH]
+//!               — decode-path kernel microbench (dense vs low-rank vs
+//!               PIFA vs 2:4 vs hybrid across an (m, n, batch) grid);
+//!               writes BENCH_kernels.json. --smoke runs the CI grid and
+//!               fails unless the PIFA-vs-lowrank ratio is positive.
 //! pifa info     — artifact + platform diagnostics
 //! ```
 //!
@@ -380,9 +385,19 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench_kernels(flags: &HashMap<String, String>) -> Result<()> {
+    let smoke = flags.contains_key("smoke");
+    let out = flags
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(pifa::bench::kernels::default_out);
+    pifa::bench::kernels::run_cli(smoke, &out)
+}
+
 fn usage() -> ! {
     eprintln!(
-        "usage: pifa <train|compress|methods|eval|generate|serve|tables|info> [--flags]\n\
+        "usage: pifa <train|compress|methods|eval|generate|serve|tables|bench-kernels|info> \
+         [--flags]\n\
          see rust/src/main.rs docs for details"
     );
     std::process::exit(2)
@@ -403,6 +418,7 @@ fn main() -> Result<()> {
             let which = args.get(1).map(String::as_str).unwrap_or("all");
             pifa::bench::tablegen::run(which)
         }
+        "bench-kernels" => cmd_bench_kernels(&flags),
         "info" => cmd_info(),
         _ => usage(),
     }

@@ -7,6 +7,14 @@
 //! are plain dense GEMM operands), while 2:4 cannot accelerate backward
 //! (the transposed weight violates the 2:4 pattern; we fine-tune it as a
 //! masked dense matrix).
+//!
+//! Decode-time forwards (batch ≤ `runtime::kernels::DECODE_BATCH_MAX`)
+//! dispatch to the structure-aware fast paths underneath each arm:
+//! `matmul_nt` takes the GEMV kernel, `PifaLayer::apply_rows` the fused
+//! one-pass apply, and `Sparse24Mat::apply_rows` the packed mat-vec — so
+//! every representation the serving scheduler steps gets its decode
+//! kernel without the model layer knowing about batch sizes
+//! (DESIGN.md §7).
 
 use crate::linalg::{self, Mat};
 use crate::pifa::PifaLayer;
@@ -306,6 +314,30 @@ mod tests {
                 repr.kind_name(),
                 y.rel_fro_err(&y_ref)
             );
+        }
+    }
+
+    #[test]
+    fn decode_batches_match_effective_dense() {
+        // The decode fast paths (b <= 4) and the generic paths (b > 4)
+        // must agree with the effective dense weight for every
+        // representation — the end-to-end differential guard over the
+        // kernel dispatch boundary.
+        let mut rng = Rng::new(159);
+        for b in 1..=6 {
+            let x: Mat<f32> = Mat::randn(b, 16, &mut rng);
+            for (repr, w_eff) in reprs_for_test(160) {
+                let y = repr.forward(&x);
+                // Reference through plain matmul so the comparison does
+                // not itself ride the batch-dispatched nt fast path.
+                let y_ref = linalg::matmul(&x, &w_eff.transpose());
+                assert!(
+                    y.rel_fro_err(&y_ref) < 1e-4,
+                    "{} b={b} mismatch {}",
+                    repr.kind_name(),
+                    y.rel_fro_err(&y_ref)
+                );
+            }
         }
     }
 

@@ -13,6 +13,8 @@
 //! Two memory layouts are provided: `apply_cols` follows the paper's
 //! `X ∈ R^{n x b}` convention; `apply_rows` is the transformer-friendly
 //! `X ∈ R^{b x n} → Y = X W'^T ∈ R^{b x m}` used by `crate::model`.
+//! `apply_rows` dispatches decode-sized batches to the fused one-pass
+//! kernel in `crate::runtime::kernels::fused` (DESIGN.md §7).
 
 use crate::linalg::{self, Mat, Scalar};
 
@@ -88,9 +90,26 @@ impl<T: Scalar> PifaLayer<T> {
 
     /// Transformer layout: `X (b x n) → Y = X W'^T (b x m)`.
     ///
-    /// `Y_p = X W_p^T (b x r)`, `Y_np = Y_p C^T (b x (m-r))`, then the two
-    /// results are interleaved into the output columns by pivot index.
+    /// Decode batches (`b <=` [`kernels::DECODE_BATCH_MAX`]) take the
+    /// fused one-pass kernel ([`kernels::fused::pifa_apply_rows_fused`]);
+    /// larger batches run the unfused two-GEMM path. Both are
+    /// differentially tested against each other and against the dense
+    /// reference.
+    ///
+    /// [`kernels::DECODE_BATCH_MAX`]: crate::runtime::kernels::DECODE_BATCH_MAX
+    /// [`kernels::fused::pifa_apply_rows_fused`]: crate::runtime::kernels::fused::pifa_apply_rows_fused
     pub fn apply_rows(&self, x: &Mat<T>) -> Mat<T> {
+        if x.rows() <= crate::runtime::kernels::DECODE_BATCH_MAX {
+            return crate::runtime::kernels::fused::pifa_apply_rows_fused(self, x);
+        }
+        self.apply_rows_unfused(x)
+    }
+
+    /// The generic two-GEMM apply: `Y_p = X W_p^T (b x r)`,
+    /// `Y_np = Y_p C^T (b x (m-r))`, then the two results are interleaved
+    /// into the output columns by pivot index. Kept callable as the
+    /// reference the fused kernel is differentially tested against.
+    pub fn apply_rows_unfused(&self, x: &Mat<T>) -> Mat<T> {
         assert_eq!(x.cols(), self.n, "PifaLayer::apply_rows: input dim mismatch");
         let b = x.rows();
         let y_p = linalg::matmul_nt(x, &self.w_p); // b x r
@@ -167,6 +186,18 @@ mod tests {
         let y_dense = linalg::matmul_nt(&x, &w); // X W^T
         let y_pifa = layer.apply_rows(&x);
         assert!(y_pifa.rel_fro_err(&y_dense) < 1e-10);
+    }
+
+    #[test]
+    fn fused_and_unfused_agree_across_the_dispatch_boundary() {
+        let (_, layer) = make_layer(24, 16, 6, 101);
+        let mut rng = Rng::new(102);
+        for b in 1..=6 {
+            let x: Mat<f64> = Mat::randn(b, 16, &mut rng);
+            let y = layer.apply_rows(&x); // b <= 4 dispatches to the fused kernel
+            let y_ref = layer.apply_rows_unfused(&x);
+            assert!(y.rel_fro_err(&y_ref) < 1e-11, "b={b}: {}", y.rel_fro_err(&y_ref));
+        }
     }
 
     #[test]

@@ -7,6 +7,14 @@ use crate::model::transformer::{ModuleKind, Transformer};
 use crate::model::LinearRepr;
 use anyhow::{bail, Context, Result};
 
+/// Borrow a literal's f32 host data without copying. With the vendored
+/// host-side stub this is a zero-copy view; the borrow is isolated in
+/// this one helper so a swap to real device-resident bindings only has
+/// to reintroduce a `to_vec` readback here.
+pub(crate) fn literal_f32_view(lit: &xla::Literal) -> Result<&[f32]> {
+    <f32 as xla::NativeType>::extract(lit).context("borrowing f32 literal data")
+}
+
 fn kind_of(tag: &str) -> Result<ModuleKind> {
     Ok(match tag {
         "q" => ModuleKind::Q,
@@ -336,8 +344,10 @@ impl LaneKv {
         if pos >= self.max_seq {
             bail!("absorb position {pos} exceeds max_seq {}", self.max_seq);
         }
-        let kv = k_new.to_vec::<f32>()?;
-        let vv = v_new.to_vec::<f32>()?;
+        // Borrowed views of the decode output: the per-step cost is the
+        // L * d row copies below, not two full-cache materializations.
+        let kv = literal_f32_view(k_new)?;
+        let vv = literal_f32_view(v_new)?;
         let want = self.layers * self.lanes * self.max_seq * self.dim;
         if kv.len() != want || vv.len() != want {
             bail!("decode KV output has {} elements, want {want}", kv.len());

@@ -1,0 +1,149 @@
+//! Fused PIFA decode apply.
+//!
+//! The generic `PifaLayer::apply_rows_unfused` runs two library GEMMs and
+//! then scatters, allocating two intermediate `Mat`s (`Y_p`, `Y_np`) and
+//! touching the output twice. At decode batch sizes that overhead is the
+//! same order as the math. The fused kernel makes one pass:
+//!
+//! ```text
+//! phase 1:  y_p[k]            = <w_p[k], x>      and   Y[pivot[k]]   = y_p[k]
+//! phase 2:  Y[non_pivot[k']]  = <c[k'], y_p>
+//! ```
+//!
+//! The only scratch is the `b x r` `y_p` buffer (needed by phase 2 — it
+//! *is* the PIFA trick: non-pivot rows are linear combinations of pivot
+//! outputs). Both phases chunk their long axis (`r`, then `m - r`)
+//! across the shared pool; phase 2 starts only after phase 1's scope
+//! completes, which is exactly the data dependency.
+
+use super::gemv::dot;
+use super::pool::SendPtr;
+use crate::linalg::{Mat, Scalar};
+use crate::pifa::PifaLayer;
+
+/// Transformer-layout fused apply: `X (b x n) -> Y = X W'^T (b x m)`.
+/// Works for any batch; the dispatch in [`PifaLayer::apply_rows`] uses it
+/// for decode batches (`b <= DECODE_BATCH_MAX`).
+pub fn pifa_apply_rows_fused<T: Scalar>(layer: &PifaLayer<T>, x: &Mat<T>) -> Mat<T> {
+    assert_eq!(x.cols(), layer.n, "pifa_apply_rows_fused: input dim mismatch");
+    let b = x.rows();
+    let m = layer.m;
+    let r = layer.rank();
+    let mut y = Mat::zeros(b, m);
+    if b == 0 || m == 0 || r == 0 {
+        return y;
+    }
+    let xrows: Vec<&[T]> = (0..b).map(|bi| x.row(bi)).collect();
+    let mut y_p = vec![T::ZERO; b * r];
+
+    // Phase 1: pivot-row dots, scattered into Y as they are produced.
+    {
+        let y_ptr = SendPtr::new(y.as_mut_slice().as_mut_ptr());
+        let yp_ptr = SendPtr::new(y_p.as_mut_ptr());
+        super::scope_chunks(r, 2 * b * r * layer.n, |k0, k1| {
+            for k in k0..k1 {
+                let wrow = layer.w_p.row(k);
+                let piv = layer.pivots[k];
+                for (bi, xrow) in xrows.iter().enumerate() {
+                    let v = dot(wrow, xrow);
+                    // SAFETY: pivot indices are unique and each chunk owns
+                    // a disjoint k-range, so every (bi, k) / (bi, piv)
+                    // element is written by exactly one job.
+                    unsafe {
+                        yp_ptr.write(bi * r + k, v);
+                        y_ptr.write(bi * m + piv, v);
+                    }
+                }
+            }
+        });
+    }
+
+    // Phase 2: non-pivot rows combine the completed y_p.
+    {
+        let nnp = layer.non_pivots.len();
+        let y_ptr = SendPtr::new(y.as_mut_slice().as_mut_ptr());
+        super::scope_chunks(nnp, 2 * b * nnp * r, |k0, k1| {
+            for k in k0..k1 {
+                let crow = layer.c.row(k);
+                let np = layer.non_pivots[k];
+                for bi in 0..b {
+                    let v = dot(crow, &y_p[bi * r..(bi + 1) * r]);
+                    // SAFETY: non-pivot indices are unique and disjoint
+                    // from pivot indices; chunks own disjoint k-ranges.
+                    unsafe { y_ptr.write(bi * m + np, v) };
+                }
+            }
+        });
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{self, Rng};
+    use crate::pifa::{pivoting_factorization, PivotStrategy};
+
+    fn layer_for(m: usize, n: usize, r: usize, seed: u64) -> (Mat<f64>, PifaLayer<f64>) {
+        let mut rng = Rng::new(seed);
+        let w: Mat<f64> = Mat::rand_low_rank(m, n, r, &mut rng);
+        (w.clone(), pivoting_factorization(&w, r, PivotStrategy::QrColumnPivot).unwrap())
+    }
+
+    #[test]
+    fn fused_matches_unfused_and_dense() {
+        let mut rng = Rng::new(611);
+        for &(m, n, r) in &[(8usize, 8usize, 1usize), (24, 16, 6), (16, 24, 8), (30, 30, 15)] {
+            let (w, layer) = layer_for(m, n, r, 612 + m as u64);
+            for b in 1..=6 {
+                let x: Mat<f64> = Mat::randn(b, n, &mut rng);
+                let fused = pifa_apply_rows_fused(&layer, &x);
+                let unfused = layer.apply_rows_unfused(&x);
+                assert!(
+                    fused.rel_fro_err(&unfused) < 1e-11,
+                    "({m},{n},{r}) b={b}: {}",
+                    fused.rel_fro_err(&unfused)
+                );
+                let dense = linalg::matmul_nt(&x, &w);
+                assert!(fused.rel_fro_err(&dense) < 1e-9, "({m},{n},{r}) b={b} vs dense");
+            }
+        }
+    }
+
+    #[test]
+    fn full_rank_layer_has_no_phase_two() {
+        // r = m: every output element comes from phase 1's scatter.
+        let (w, layer) = layer_for(10, 12, 10, 613);
+        let mut rng = Rng::new(614);
+        let x: Mat<f64> = Mat::randn(2, 12, &mut rng);
+        let y = pifa_apply_rows_fused(&layer, &x);
+        assert!(y.rel_fro_err(&linalg::matmul_nt(&x, &w)) < 1e-10);
+    }
+
+    #[test]
+    fn large_layer_trips_the_pool_and_still_matches() {
+        // Synthetic layer (random permutation + factors): phase 1 costs
+        // 2 * 4 * 512 * 1024 = 2^22 flops, so both phases chunk across
+        // the pool. The kernel only reads the storage layout, so a valid
+        // factorization is not needed to differentially test it.
+        let mut rng = Rng::new(615);
+        let (m, n, r) = (1024usize, 1024usize, 512usize);
+        let mut idx: Vec<usize> = (0..m).collect();
+        rng.shuffle(&mut idx);
+        let pivots = idx[..r].to_vec();
+        let mut non_pivots = idx[r..].to_vec();
+        non_pivots.sort_unstable();
+        let layer: PifaLayer<f64> = PifaLayer::new(
+            m,
+            n,
+            pivots,
+            non_pivots,
+            Mat::randn(r, n, &mut rng),
+            Mat::randn(m - r, r, &mut rng),
+        );
+        let x: Mat<f64> = Mat::randn(4, n, &mut rng);
+        let fused = pifa_apply_rows_fused(&layer, &x);
+        let unfused = layer.apply_rows_unfused(&x);
+        assert!(fused.rel_fro_err(&unfused) < 1e-10, "{}", fused.rel_fro_err(&unfused));
+    }
+}

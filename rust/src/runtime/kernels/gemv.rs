@@ -1,0 +1,155 @@
+//! GEMV / skinny-matmul decode kernels.
+//!
+//! The decode hot path computes `Y = X W^T` with `X (b x n)` for
+//! `b <= DECODE_BATCH_MAX` (one token per active lane). The blocked GEMM
+//! in `linalg::gemm` is shaped for calibration-time matrices: it bands
+//! over the *batch* rows of `Y`, so at `b = 1` it cannot parallelize at
+//! all and its K-blocking buys nothing. The kernels here flip the loop
+//! structure: iterate over the rows of `W` (the long axis), keep up to
+//! `DECODE_BATCH_MAX` accumulators live so each `W` row is streamed once
+//! for the whole micro-batch, and split the `W` rows across the shared
+//! pool above the FLOP threshold.
+
+use super::pool::SendPtr;
+use super::DECODE_BATCH_MAX;
+use crate::linalg::{Mat, Scalar};
+
+/// Four-accumulator dot product (the scalar core of every decode kernel;
+/// the independent chains let LLVM vectorize the `mul_add` stream).
+#[inline]
+pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
+    debug_assert_eq!(a.len(), b.len());
+    let len = a.len();
+    let mut acc0 = T::ZERO;
+    let mut acc1 = T::ZERO;
+    let mut acc2 = T::ZERO;
+    let mut acc3 = T::ZERO;
+    let mut i = 0;
+    while i + 4 <= len {
+        acc0 = a[i].mul_add_s(b[i], acc0);
+        acc1 = a[i + 1].mul_add_s(b[i + 1], acc1);
+        acc2 = a[i + 2].mul_add_s(b[i + 2], acc2);
+        acc3 = a[i + 3].mul_add_s(b[i + 3], acc3);
+        i += 4;
+    }
+    while i < len {
+        acc0 = a[i].mul_add_s(b[i], acc0);
+        i += 1;
+    }
+    (acc0 + acc1) + (acc2 + acc3)
+}
+
+/// Skinny `C = A B^T` with `A (b x k)`, `B (n x k)`, `b <= DECODE_BATCH_MAX`:
+/// the batch-`b` GEMV. Each row of `B` is streamed once against all `b`
+/// rows of `A`; rows of `B` are chunked across the pool.
+pub fn skinny_nt<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let (bm, k) = a.shape();
+    let (n, k2) = b.shape();
+    assert_eq!(k, k2, "skinny_nt: inner dim mismatch {bm}x{k} * {n}x{k2}");
+    // Hard assert: the accumulator array below holds DECODE_BATCH_MAX
+    // lanes, so a larger batch would silently drop rows in release.
+    assert!(bm <= DECODE_BATCH_MAX, "skinny_nt: batch {bm} exceeds {DECODE_BATCH_MAX}");
+    let mut c = Mat::zeros(bm, n);
+    if bm == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let b_s = b.as_slice();
+    let arows: Vec<&[T]> = (0..bm).map(|bi| a.row(bi)).collect();
+    let c_ptr = SendPtr::new(c.as_mut_slice().as_mut_ptr());
+    super::scope_chunks(n, 2 * bm * n * k, |j0, j1| {
+        if bm == 1 {
+            let arow = arows[0];
+            for j in j0..j1 {
+                let brow = &b_s[j * k..(j + 1) * k];
+                // SAFETY: each chunk owns columns [j0, j1) exclusively.
+                unsafe { c_ptr.write(j, dot(arow, brow)) };
+            }
+        } else {
+            for j in j0..j1 {
+                let brow = &b_s[j * k..(j + 1) * k];
+                let mut acc = [T::ZERO; DECODE_BATCH_MAX];
+                for (kk, &bv) in brow.iter().enumerate() {
+                    for (ac, arow) in acc.iter_mut().zip(arows.iter()) {
+                        *ac = arow[kk].mul_add_s(bv, *ac);
+                    }
+                }
+                for (bi, ac) in acc.iter().enumerate().take(bm) {
+                    // SAFETY: disjoint (bi, j) elements per chunk.
+                    unsafe { c_ptr.write(bi * n + j, *ac) };
+                }
+            }
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn naive_nt(a: &Mat<f64>, b: &Mat<f64>) -> Mat<f64> {
+        let (m, k) = a.shape();
+        let n = b.rows();
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a[(i, kk)] * b[(j, kk)];
+                }
+                c[(i, j)] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(601);
+        for len in [0usize, 1, 3, 4, 7, 64, 129] {
+            let a: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-10, "len={len}");
+        }
+    }
+
+    #[test]
+    fn skinny_matches_naive_all_batches() {
+        let mut rng = Rng::new(602);
+        for bm in 1..=DECODE_BATCH_MAX {
+            for &(n, k) in &[(1usize, 1usize), (5, 9), (33, 17), (128, 64)] {
+                let a: Mat<f64> = Mat::randn(bm, k, &mut rng);
+                let b: Mat<f64> = Mat::randn(n, k, &mut rng);
+                let c = skinny_nt(&a, &b);
+                assert!(c.rel_fro_err(&naive_nt(&a, &b)) < 1e-12, "b={bm} ({n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn skinny_parallel_chunks_match() {
+        // Big enough to trip the pool threshold at batch 1.
+        let mut rng = Rng::new(603);
+        let a: Mat<f64> = Mat::randn(1, 2048, &mut rng);
+        let b: Mat<f64> = Mat::randn(1200, 2048, &mut rng);
+        let c = skinny_nt(&a, &b);
+        assert!(c.rel_fro_err(&naive_nt(&a, &b)) < 1e-11);
+    }
+
+    #[test]
+    fn empty_dims_are_fine() {
+        let a: Mat<f64> = Mat::zeros(1, 0);
+        let b: Mat<f64> = Mat::zeros(7, 0);
+        assert_eq!(skinny_nt(&a, &b), Mat::zeros(1, 7));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn rejects_oversized_batch_even_in_release() {
+        let a: Mat<f64> = Mat::zeros(DECODE_BATCH_MAX + 1, 3);
+        let b: Mat<f64> = Mat::zeros(4, 3);
+        let _ = skinny_nt(&a, &b);
+    }
+}

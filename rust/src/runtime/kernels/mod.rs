@@ -1,0 +1,110 @@
+//! `runtime::kernels` — structure-aware decode fast paths (DESIGN.md §7).
+//!
+//! Every `LinearRepr` forward funnels through `linalg::gemm` for
+//! calibration-time shapes, but the serving scheduler spends its decode
+//! iterations at batch ≤ [`DECODE_BATCH_MAX`], where the blocked GEMM is
+//! the wrong shape (it parallelizes over batch rows) and per-call thread
+//! spawns dominate. This subsystem provides:
+//!
+//! * [`pool`] — a persistent scoped thread pool shared by *all* kernels
+//!   (the old per-`matmul` `thread::scope` spawns are gone).
+//! * [`gemv`] — batch-≤-4 `Y = X W^T` kernels that stream the long axis
+//!   and keep one accumulator per lane ([`gemv::skinny_nt`]).
+//! * [`fused`] — the one-pass PIFA apply
+//!   ([`fused::pifa_apply_rows_fused`]): pivot dots scatter straight
+//!   into `Y`, non-pivot rows combine the `y_p` scratch, no intermediate
+//!   `Mat` allocations.
+//! * the packed 2:4 decode mat-vec lives with its storage in
+//!   [`crate::sparse24::Sparse24Mat::matvec`] (it needs the private
+//!   values/meta layout); dispatch is documented here because it follows
+//!   the same rules.
+//!
+//! ## Dispatch rules
+//!
+//! | call                          | condition                  | path                  |
+//! |-------------------------------|----------------------------|-----------------------|
+//! | `linalg::matmul_nt(x, w)`     | `x.rows() <= 4`            | `gemv::skinny_nt`     |
+//! | `linalg::matmul*`             | `2mnk >= 2^22` flops       | pool-banded GEMM      |
+//! | `linalg::matmul*`             | below threshold            | single-thread blocked |
+//! | `PifaLayer::apply_rows`       | `x.rows() <= 4`            | fused one-pass apply  |
+//! | `Sparse24Mat::apply_rows`     | `x.rows() <= 4`            | packed decode mat-vec |
+//!
+//! Every fast path is differentially tested against the generic path it
+//! replaces (`rust/tests/kernel_differential.rs` + the module tests
+//! here); refactors cannot silently diverge.
+
+pub mod fused;
+pub mod gemv;
+pub mod pool;
+
+/// Largest micro-batch the decode kernels specialize for. The serving
+/// scheduler coalesces at most a handful of same-position lanes per
+/// iteration; beyond this the blocked GEMM wins again.
+pub const DECODE_BATCH_MAX: usize = 4;
+
+/// Minimum FLOPs before splitting a kernel across the pool (shared with
+/// `linalg::gemm`; below this the queue push costs more than it buys).
+pub const PAR_FLOP_THRESHOLD: usize = 1 << 22;
+
+/// Number of pool chunks for `units` independent work items costing
+/// `flops` in total: 1 below the threshold, else capped by both the
+/// pool's parallelism and the unit count.
+pub fn par_chunks(units: usize, flops: usize) -> usize {
+    if flops < PAR_FLOP_THRESHOLD || units <= 1 {
+        1
+    } else {
+        pool::max_parallelism().min(units).max(1)
+    }
+}
+
+/// Run `f(lo, hi)` over contiguous chunks of `[0, len)`, sized for the
+/// pool when `flops` crosses [`PAR_FLOP_THRESHOLD`] (one inline chunk
+/// otherwise). Every kernel's banding goes through here so the
+/// disjointness argument for raw-pointer output writes — chunks never
+/// overlap and cover the range exactly once — lives in one audited
+/// place.
+pub fn scope_chunks(len: usize, flops: usize, f: impl Fn(usize, usize) + Sync) {
+    if len == 0 {
+        return;
+    }
+    let chunk = len.div_ceil(par_chunks(len, flops));
+    pool::scope_run(len.div_ceil(chunk), |ci| {
+        let lo = ci * chunk;
+        f(lo, (lo + chunk).min(len));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_respects_threshold_and_units() {
+        assert_eq!(par_chunks(100, PAR_FLOP_THRESHOLD - 1), 1);
+        assert_eq!(par_chunks(1, usize::MAX), 1);
+        assert_eq!(par_chunks(0, usize::MAX), 1);
+        let c = par_chunks(1000, PAR_FLOP_THRESHOLD);
+        assert!(c >= 1 && c <= 1000);
+        assert!(c <= pool::max_parallelism());
+    }
+
+    #[test]
+    fn scope_chunks_covers_range_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for &(len, flops) in
+            &[(0usize, usize::MAX), (1, 0), (7, 0), (100, PAR_FLOP_THRESHOLD), (1000, usize::MAX)]
+        {
+            let hits: Vec<AtomicUsize> = (0..len).map(|_| AtomicUsize::new(0)).collect();
+            scope_chunks(len, flops, |lo, hi| {
+                assert!(lo < hi && hi <= len, "bad chunk [{lo}, {hi}) of {len}");
+                for h in &hits[lo..hi] {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "({len}, {flops}): range not covered exactly once"
+            );
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Persistent scoped thread pool — the shared execution substrate of the
+//! kernel layer (DESIGN.md §7).
+//!
+//! The old `linalg::gemm` spawned fresh `std::thread::scope` threads on
+//! every call above the FLOP threshold; at decode time that meant a
+//! spawn/join round-trip per token per layer. This pool spawns its
+//! workers once (lazily, on first use) and keeps them parked on a
+//! condvar, so a parallel kernel call costs a queue push + wakeup.
+//!
+//! Semantics of [`scope_run`]`(n, f)`:
+//!
+//! * `f(i)` is executed exactly once for every `i in 0..n`, possibly in
+//!   parallel; the call returns only after all `n` jobs finished — so
+//!   `f` may borrow from the caller's stack (a *scoped* pool).
+//! * The submitting thread participates in the work, and nested calls
+//!   from inside a job run inline on the current thread. Kernels can
+//!   therefore call each other freely without deadlocking the pool or
+//!   oversubscribing the machine.
+//! * `PIFA_THREADS=k` caps total parallelism (submitter + workers) at
+//!   `k`; `PIFA_THREADS=1` forces every kernel single-threaded (useful
+//!   for bit-stable A/B timing). The default is
+//!   `std::thread::available_parallelism()`.
+//!
+//! A panic inside a job is caught on the worker, the remaining jobs
+//! still run, and the panic is re-raised on the submitting thread once
+//! the scope completes (so tests see the original assertion message).
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Copyable raw pointer that may cross the job boundary. Kernels use it
+/// to hand each job a disjoint slice of one output buffer.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        SendPtr(p)
+    }
+
+    /// Write `v` at element offset `idx`.
+    ///
+    /// # Safety
+    /// `idx` must be in bounds of the allocation behind the pointer, the
+    /// allocation must outlive the enclosing [`scope_run`], and no other
+    /// thread may access the same element concurrently.
+    #[inline(always)]
+    pub unsafe fn write(self, idx: usize, v: T) {
+        *self.0.add(idx) = v;
+    }
+
+    /// Mutable sub-slice `[off, off + len)` of the allocation.
+    ///
+    /// # Safety
+    /// The range must be in bounds, the allocation must outlive the
+    /// enclosing [`scope_run`], and no other thread may touch an
+    /// overlapping range concurrently.
+    #[inline(always)]
+    pub unsafe fn slice_mut<'a>(self, off: usize, len: usize) -> &'a mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(off), len)
+    }
+}
+
+/// Raw job closure with the borrow lifetime erased. Sound because
+/// [`Pool::run`] joins every job before returning.
+type TaskFn = *const (dyn Fn(usize) + Sync);
+
+struct Task {
+    f: TaskFn,
+    n: usize,
+    /// Next unclaimed job index.
+    next: AtomicUsize,
+    /// Jobs not yet completed.
+    pending: AtomicUsize,
+    /// First panic payload from any job, re-raised on the submitter.
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `f` points at a `Sync` closure that the submitting thread keeps
+// alive (and borrowed) until `pending` reaches zero.
+unsafe impl Send for Task {}
+unsafe impl Sync for Task {}
+
+impl Task {
+    /// Claim and run jobs until none are left; signal the submitter when
+    /// the last job completes.
+    fn run_to_completion(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                return;
+            }
+            let f = unsafe { &*self.f };
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut slot = self.panic_payload.lock().unwrap();
+                slot.get_or_insert(payload);
+            }
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut d = self.done.lock().unwrap();
+                *d = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> TaskFn {
+    // Lifetime-erasing cast; see the `Task` safety comment.
+    unsafe { std::mem::transmute::<*const (dyn Fn(usize) + Sync + 'a), TaskFn>(f) }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Task>>>,
+    work_cv: Condvar,
+}
+
+/// The persistent pool: spawned once, shared by every kernel call.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+thread_local! {
+    /// True while the current thread is executing a pool job (worker or
+    /// participating submitter); nested `scope_run` calls go inline.
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        IN_POOL_JOB.with(|c| c.set(true));
+        task.run_to_completion();
+        IN_POOL_JOB.with(|c| c.set(false));
+    }
+}
+
+impl Pool {
+    /// Run `f(0..n)`, returning when all jobs completed. Runs inline when
+    /// the pool has no workers, `n <= 1`, or the caller is itself a pool
+    /// job (nested parallelism).
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if self.workers == 0 || n == 1 || IN_POOL_JOB.with(|c| c.get()) {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let task = Arc::new(Task {
+            f: erase(f),
+            n,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n),
+            panic_payload: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        // One queue entry per worker that could usefully join; a popped
+        // entry whose task is already fully claimed is a cheap no-op.
+        let entries = self.workers.min(n);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..entries {
+                q.push_back(task.clone());
+            }
+        }
+        if entries == 1 {
+            self.shared.work_cv.notify_one();
+        } else {
+            self.shared.work_cv.notify_all();
+        }
+        // Participate, then wait out any straggler workers.
+        IN_POOL_JOB.with(|c| c.set(true));
+        task.run_to_completion();
+        IN_POOL_JOB.with(|c| c.set(false));
+        let mut d = task.done.lock().unwrap();
+        while !*d {
+            d = task.done_cv.wait(d).unwrap();
+        }
+        drop(d);
+        if let Some(payload) = task.panic_payload.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide pool (spawned on first use).
+pub fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let total = std::env::var("PIFA_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+            });
+        // The submitter participates, so spawn one fewer worker.
+        let workers = total.saturating_sub(1);
+        let shared =
+            Arc::new(Shared { queue: Mutex::new(VecDeque::new()), work_cv: Condvar::new() });
+        for i in 0..workers {
+            let s = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("pifa-kernel-{i}"))
+                .spawn(move || worker_loop(s))
+                .expect("kernels::pool: failed to spawn worker");
+        }
+        Pool { shared, workers }
+    })
+}
+
+/// Run `f(i)` for every `i in 0..n` on the shared pool (see module docs).
+pub fn scope_run(n: usize, f: impl Fn(usize) + Sync) {
+    pool().run(n, &f);
+}
+
+/// Maximum useful parallelism: the participating submitter + workers.
+pub fn max_parallelism() -> usize {
+    pool().workers + 1
+}
+
+/// Force the pool into existence (backends call this at construction so
+/// the first decode token does not pay the spawn cost).
+pub fn prewarm() {
+    let _ = pool();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        for n in [0usize, 1, 2, 7, 64, 257] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            scope_run(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn jobs_can_borrow_and_write_disjoint_output() {
+        let mut out = vec![0usize; 100];
+        let ptr = SendPtr::new(out.as_mut_ptr());
+        scope_run(100, |i| unsafe { ptr.write(i, i * i) });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i * i));
+    }
+
+    #[test]
+    fn nested_calls_run_inline_without_deadlock() {
+        let mut out = vec![0usize; 16 * 8];
+        let ptr = SendPtr::new(out.as_mut_ptr());
+        scope_run(16, |i| {
+            // Inner scope must not wait on the (possibly busy) pool.
+            scope_run(8, |j| unsafe { ptr.write(i * 8 + j, i + j) });
+        });
+        for i in 0..16 {
+            for j in 0..8 {
+                assert_eq!(out[i * 8 + j], i + j);
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_do_not_interfere() {
+        let sums: Vec<usize> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|t| {
+                    s.spawn(move || {
+                        let n = 50 + t;
+                        let acc: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                        scope_run(n, |i| {
+                            acc[i].store(i + 1, Ordering::Relaxed);
+                        });
+                        acc.iter().map(|a| a.load(Ordering::Relaxed)).sum::<usize>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (t, got) in sums.iter().enumerate() {
+            let n = 50 + t;
+            assert_eq!(*got, n * (n + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn job_panic_propagates_to_submitter() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            scope_run(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // The pool stays usable afterwards.
+        let hit = AtomicUsize::new(0);
+        scope_run(4, |_| {
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn parallelism_reports_at_least_one() {
+        assert!(max_parallelism() >= 1);
+        prewarm();
+    }
+}

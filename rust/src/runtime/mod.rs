@@ -10,8 +10,12 @@
 //! * [`exec`] — `ModelRunner`: binds a checkpointed
 //!   [`crate::model::Transformer`] to an artifact's parameter order and
 //!   drives prefill / KV-cache decode.
+//! * [`kernels`] — structure-aware decode fast paths for the Rust-native
+//!   execution layer: the persistent kernel thread pool, batch-≤-4 GEMV,
+//!   and the fused PIFA apply (DESIGN.md §7).
 
 pub mod exec;
+pub mod kernels;
 pub mod loader;
 pub mod manifest;
 

@@ -1,6 +1,11 @@
 //! Packed 2:4 storage and the CPU sparse GEMM.
+//!
+//! The decode fast path (`apply_rows` at batch ≤ 4, [`Sparse24Mat::matvec`])
+//! walks the packed values/meta arrays directly — no densification — and
+//! chunks output rows across the kernel pool (DESIGN.md §7).
 
 use crate::linalg::Mat;
+use crate::runtime::kernels::{self, pool::SendPtr};
 
 /// A 2:4 semi-structured sparse matrix (`m x n`, `n % 4 == 0`).
 ///
@@ -131,8 +136,21 @@ impl Sparse24Mat {
     }
 
     /// Transformer layout GEMM: `Y = X W^T` with `X (b x n)`, `Y (b x m)`.
-    /// Only the kept values are touched — half the MACs of dense.
+    /// Only the kept values are touched — half the MACs of dense. Decode
+    /// batches (`b <= 4`) take the packed mat-vec fast path that decodes
+    /// each group's metadata nibble once for the whole micro-batch and
+    /// splits the output rows across the kernel pool; larger batches run
+    /// the generic loop ([`Self::apply_rows_ref`]).
     pub fn apply_rows(&self, x: &Mat<f32>) -> Mat<f32> {
+        if x.rows() <= kernels::DECODE_BATCH_MAX {
+            return self.apply_rows_decode(x);
+        }
+        self.apply_rows_ref(x)
+    }
+
+    /// The generic batched loop — the reference the decode fast path is
+    /// differentially tested against.
+    pub fn apply_rows_ref(&self, x: &Mat<f32>) -> Mat<f32> {
         assert_eq!(x.cols(), self.n, "Sparse24Mat::apply_rows: dim mismatch");
         let b = x.rows();
         let groups = self.n / 4;
@@ -155,6 +173,80 @@ impl Sparse24Mat {
                 yrow[i] = acc;
             }
         }
+        y
+    }
+
+    /// Packed dot of row `i` against `x` (two accumulator chains; the
+    /// scalar core of the decode path — walks values/meta directly, no
+    /// densification).
+    #[inline]
+    fn row_dot_packed(&self, i: usize, x: &[f32]) -> f32 {
+        let groups = self.n / 4;
+        let vals = &self.values[i * groups * 2..(i + 1) * groups * 2];
+        let metas = &self.meta[i * groups..(i + 1) * groups];
+        let mut a0 = 0f32;
+        let mut a1 = 0f32;
+        for (g, &byte) in metas.iter().enumerate() {
+            let base = g * 4;
+            a0 += vals[g * 2] * x[base + (byte & 0b11) as usize];
+            a1 += vals[g * 2 + 1] * x[base + ((byte >> 2) & 0b11) as usize];
+        }
+        a0 + a1
+    }
+
+    /// Batch-1 packed mat-vec `y = W x` — the decode hot path, chunked
+    /// over output rows on the kernel pool.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n, "Sparse24Mat::matvec: dim mismatch");
+        let mut y = vec![0f32; self.m];
+        if self.m == 0 {
+            return y;
+        }
+        let y_ptr = SendPtr::new(y.as_mut_ptr());
+        kernels::scope_chunks(self.m, self.m * self.n, |i0, i1| {
+            for i in i0..i1 {
+                // SAFETY: chunks own disjoint row ranges of y.
+                unsafe { y_ptr.write(i, self.row_dot_packed(i, x)) };
+            }
+        });
+        y
+    }
+
+    /// Decode-batch apply (`b <= 4`): metadata decoded once per group for
+    /// the whole micro-batch, output rows chunked across the pool.
+    fn apply_rows_decode(&self, x: &Mat<f32>) -> Mat<f32> {
+        assert_eq!(x.cols(), self.n, "Sparse24Mat::apply_rows: dim mismatch");
+        let b = x.rows();
+        if b == 1 {
+            return Mat::from_vec(1, self.m, self.matvec(x.row(0)));
+        }
+        let groups = self.n / 4;
+        let mut y = Mat::zeros(b, self.m);
+        if b == 0 || self.m == 0 {
+            return y;
+        }
+        let xrows: Vec<&[f32]> = (0..b).map(|bi| x.row(bi)).collect();
+        let y_ptr = SendPtr::new(y.as_mut_slice().as_mut_ptr());
+        kernels::scope_chunks(self.m, b * self.m * self.n, |i0, i1| {
+            for i in i0..i1 {
+                let vals = &self.values[i * groups * 2..(i + 1) * groups * 2];
+                let metas = &self.meta[i * groups..(i + 1) * groups];
+                let mut acc = [0f32; kernels::DECODE_BATCH_MAX];
+                for (g, &byte) in metas.iter().enumerate() {
+                    let o0 = g * 4 + (byte & 0b11) as usize;
+                    let o1 = g * 4 + ((byte >> 2) & 0b11) as usize;
+                    let v0 = vals[g * 2];
+                    let v1 = vals[g * 2 + 1];
+                    for (ac, xrow) in acc.iter_mut().zip(xrows.iter()) {
+                        *ac += v0 * xrow[o0] + v1 * xrow[o1];
+                    }
+                }
+                for (bi, ac) in acc.iter().enumerate().take(b) {
+                    // SAFETY: disjoint (bi, i) elements per chunk.
+                    unsafe { y_ptr.write(bi * self.m + i, *ac) };
+                }
+            }
+        });
         y
     }
 
@@ -267,6 +359,38 @@ mod tests {
         let y_sparse = sp.apply_rows(&x);
         let y_dense = matmul_nt(&x, &dense);
         assert!(y_sparse.rel_fro_err(&y_dense) < 1e-5);
+    }
+
+    #[test]
+    fn decode_fast_path_matches_generic() {
+        let mut rng = Rng::new(136);
+        for &(m, n) in &[(1usize, 4usize), (7, 16), (33, 64), (12, 128)] {
+            let w: Mat<f32> = Mat::randn(m, n, &mut rng);
+            let sp = Sparse24Mat::pack_magnitude(&w);
+            for b in 1..=6 {
+                let x: Mat<f32> = Mat::randn(b, n, &mut rng);
+                let fast = sp.apply_rows(&x); // b <= 4 dispatches to the packed path
+                let generic = sp.apply_rows_ref(&x);
+                assert!(
+                    fast.rel_fro_err(&generic) < 1e-5,
+                    "({m},{n}) b={b}: {}",
+                    fast.rel_fro_err(&generic)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense_reference() {
+        let mut rng = Rng::new(137);
+        let w: Mat<f32> = Mat::randn(19, 32, &mut rng);
+        let sp = Sparse24Mat::pack_magnitude(&w);
+        let x: Mat<f32> = Mat::randn(1, 32, &mut rng);
+        let y = sp.matvec(x.row(0));
+        let y_ref = matmul_nt(&x, &sp.to_dense());
+        for (a, b) in y.iter().zip(y_ref.row(0)) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
     }
 
     #[test]

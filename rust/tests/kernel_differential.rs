@@ -1,0 +1,215 @@
+//! Differential tests: every decode fast path in `runtime::kernels`
+//! against the generic path it replaces, over seeded random sweeps —
+//! the guard that kernel refactors cannot silently diverge. Run in CI in
+//! both debug and `--release` (vectorization bugs only show up with
+//! optimizations on).
+
+use pifa::linalg::{
+    matmul, matmul_into, matmul_into_acc, matmul_nt, Mat, Rng,
+};
+use pifa::model::LinearRepr;
+use pifa::pifa::{pivoting_factorization, PivotStrategy};
+use pifa::runtime::kernels::fused::pifa_apply_rows_fused;
+use pifa::runtime::kernels::gemv::{dot, skinny_nt};
+use pifa::runtime::kernels::pool;
+use pifa::sparse24::Sparse24Mat;
+
+fn naive_nt(a: &Mat<f64>, b: &Mat<f64>) -> Mat<f64> {
+    let (m, k) = a.shape();
+    let n = b.rows();
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for kk in 0..k {
+                acc += a[(i, kk)] * b[(j, kk)];
+            }
+            c[(i, j)] = acc;
+        }
+    }
+    c
+}
+
+/// GEMV / skinny dispatch: `matmul_nt` at decode batches must match the
+/// naive triple loop, and the dispatch boundary (batch 4 → 5) must be
+/// seamless.
+#[test]
+fn diff_gemv_vs_generic_sweep() {
+    let mut rng = Rng::new(51_001);
+    for trial in 0..25 {
+        let b = 1 + rng.below(6); // straddles DECODE_BATCH_MAX = 4
+        let k = 1 + rng.below(200);
+        let n = 1 + rng.below(150);
+        let a: Mat<f64> = Mat::randn(b, k, &mut rng);
+        let w: Mat<f64> = Mat::randn(n, k, &mut rng);
+        let fast = matmul_nt(&a, &w);
+        let want = naive_nt(&a, &w);
+        assert!(
+            fast.rel_fro_err(&want) < 1e-11,
+            "trial {trial} b={b} k={k} n={n}: {}",
+            fast.rel_fro_err(&want)
+        );
+        // The explicit kernel agrees too (not just via dispatch).
+        if b <= 4 {
+            assert!(skinny_nt(&a, &w).rel_fro_err(&want) < 1e-11, "trial {trial} skinny");
+        }
+    }
+}
+
+/// The scalar dot core against a plain summation.
+#[test]
+fn diff_dot_vs_plain_sum() {
+    let mut rng = Rng::new(51_002);
+    for len in 0..40 {
+        let a: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+        let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - want).abs() < 1e-9 * (1.0 + want.abs()), "len {len}");
+    }
+}
+
+/// Fused PIFA apply against the unfused two-GEMM reference, across
+/// shapes, ranks, and batch sizes on both sides of the dispatch cut.
+#[test]
+fn diff_fused_pifa_vs_unfused_sweep() {
+    let mut rng = Rng::new(51_003);
+    for trial in 0..15 {
+        let m = 4 + rng.below(40);
+        let n = 4 + rng.below(40);
+        let r = 1 + rng.below(m.min(n));
+        let w: Mat<f64> = Mat::rand_low_rank(m, n, r, &mut rng);
+        let layer = pivoting_factorization(&w, r, PivotStrategy::QrColumnPivot)
+            .unwrap_or_else(|e| panic!("trial {trial} ({m},{n},{r}): {e}"));
+        for b in [1usize, 2, 4, 7] {
+            let x: Mat<f64> = Mat::randn(b, n, &mut rng);
+            let fused = pifa_apply_rows_fused(&layer, &x);
+            let unfused = layer.apply_rows_unfused(&x);
+            assert!(
+                fused.rel_fro_err(&unfused) < 1e-10,
+                "trial {trial} ({m},{n},{r}) b={b}: {}",
+                fused.rel_fro_err(&unfused)
+            );
+            // And the public dispatch entry point agrees with both.
+            assert!(layer.apply_rows(&x).rel_fro_err(&unfused) < 1e-10);
+        }
+    }
+}
+
+/// Packed 2:4 decode mat-vec against the generic batched loop and the
+/// masked-dense reference.
+#[test]
+fn diff_sparse24_decode_vs_generic_sweep() {
+    let mut rng = Rng::new(51_004);
+    for trial in 0..15 {
+        let m = 1 + rng.below(50);
+        let n = 4 * (1 + rng.below(30));
+        let w: Mat<f32> = Mat::randn(m, n, &mut rng);
+        let sp = Sparse24Mat::pack_magnitude(&w);
+        for b in [1usize, 3, 4, 6] {
+            let x: Mat<f32> = Mat::randn(b, n, &mut rng);
+            let fast = sp.apply_rows(&x);
+            let generic = sp.apply_rows_ref(&x);
+            assert!(
+                fast.rel_fro_err(&generic) < 1e-5,
+                "trial {trial} ({m},{n}) b={b}: {}",
+                fast.rel_fro_err(&generic)
+            );
+        }
+        // matvec == row 0 of the dense product.
+        let x1: Mat<f32> = Mat::randn(1, n, &mut rng);
+        let y = sp.matvec(x1.row(0));
+        let dense = sp.to_dense();
+        let want = matmul(&x1, &dense.transpose());
+        for (j, (a, b)) in y.iter().zip(want.row(0)).enumerate() {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "trial {trial} col {j}: {a} vs {b}");
+        }
+    }
+}
+
+/// `matmul_into` must clear stale output; `matmul_into_acc` must
+/// accumulate — the regression pair for the zeroing-pass split.
+#[test]
+fn diff_matmul_into_vs_acc_semantics() {
+    let mut rng = Rng::new(51_005);
+    for _ in 0..10 {
+        let m = 1 + rng.below(30);
+        let k = 1 + rng.below(30);
+        let n = 1 + rng.below(30);
+        let a: Mat<f64> = Mat::randn(m, k, &mut rng);
+        let b: Mat<f64> = Mat::randn(k, n, &mut rng);
+        let prod = matmul(&a, &b);
+
+        let stale: Mat<f64> = Mat::randn(m, n, &mut rng);
+        let mut c_into = stale.clone();
+        matmul_into(&a, &b, &mut c_into);
+        assert!(c_into.rel_fro_err(&prod) < 1e-12, "into must ignore stale contents");
+
+        let mut c_acc = stale.clone();
+        matmul_into_acc(&a, &b, &mut c_acc);
+        assert!(
+            c_acc.rel_fro_err(&stale.add_mat(&prod)) < 1e-12,
+            "acc must add onto existing contents"
+        );
+    }
+}
+
+/// Whole-forward differential: every `LinearRepr` through the public
+/// `forward` (which rides the dispatch) against its effective dense
+/// weight, at batches on both sides of the decode cut.
+#[test]
+fn diff_linear_forward_vs_effective_dense() {
+    let mut rng = Rng::new(51_006);
+    let m = 16;
+    let n = 24;
+    let r = 5;
+    let w_dense: Mat<f32> = Mat::randn(m, n, &mut rng);
+    let u: Mat<f32> = Mat::randn(m, r, &mut rng);
+    let vt: Mat<f32> = Mat::randn(r, n, &mut rng);
+    let w_lr = matmul(&u, &vt);
+    let pifa_layer = pivoting_factorization(&w_lr, r, PivotStrategy::QrColumnPivot).unwrap();
+    let sp = Sparse24Mat::pack_magnitude(&w_dense);
+    let res = Sparse24Mat::pack_magnitude(&w_dense.sub_mat(&w_lr));
+    let cases: Vec<(LinearRepr, Mat<f32>)> = vec![
+        (LinearRepr::Dense(w_dense.clone()), w_dense.clone()),
+        (LinearRepr::LowRank { u: u.clone(), vt: vt.clone() }, w_lr.clone()),
+        (LinearRepr::Pifa(pifa_layer), w_lr.clone()),
+        (LinearRepr::Sparse24(sp.clone()), sp.to_dense()),
+        (
+            LinearRepr::LowRankSparse { u, vt, residual: res.clone() },
+            w_lr.add_mat(&res.to_dense()),
+        ),
+    ];
+    for b in 1..=6 {
+        let x: Mat<f32> = Mat::randn(b, n, &mut rng);
+        for (repr, w_eff) in &cases {
+            let y = repr.forward(&x);
+            let want = matmul(&x, &w_eff.transpose());
+            assert!(
+                y.rel_fro_err(&want) < 1e-4,
+                "{} b={b}: {}",
+                repr.kind_name(),
+                y.rel_fro_err(&want)
+            );
+        }
+    }
+}
+
+/// Pool sanity under load: a large banded matmul (many chunks) from
+/// several submitter threads at once, against the naive reference.
+#[test]
+fn diff_pool_banded_matmul_under_concurrency() {
+    pool::prewarm();
+    let mut rng = Rng::new(51_007);
+    // 2 * 256^3 ≈ 33M flops — comfortably above the banding threshold.
+    let a: Mat<f64> = Mat::randn(256, 256, &mut rng);
+    let b: Mat<f64> = Mat::randn(256, 256, &mut rng);
+    // Naive reference via transposed nt: naive_nt(a, bᵀ) == a·b.
+    let want = naive_nt(&a, &b.transpose());
+    let results: Vec<Mat<f64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4).map(|_| s.spawn(|| matmul(&a, &b))).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for c in results {
+        assert!(c.rel_fro_err(&want) < 1e-11);
+    }
+}

@@ -1,0 +1,193 @@
+//! Seeded randomized invariant tests for the `linalg` decompositions.
+//!
+//! No proptest in the offline crate set, so properties are swept over
+//! ~20 deterministic random shapes per decomposition — generic, tall,
+//! wide, and rank-deficient — using `linalg::rng::Rng` with fixed seeds.
+//! These are the structural identities (`PA = LU`, `QᵀQ = I`,
+//! `A = U Σ Vᵀ` with ordered spectrum) the PIFA pipeline silently leans
+//! on; the per-module unit tests only spot-check them.
+
+use pifa::linalg::{
+    lu_decompose, matmul, matmul_nt, matmul_tn, qr_column_pivot, svd, Mat, Rng,
+};
+
+/// 20 shapes per decomposition: every 4th tall, every 4th wide, every
+/// 3rd rank-deficient (built as an explicit low-rank product).
+fn test_matrices(seed: u64) -> Vec<(String, Mat<f64>)> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for t in 0..20usize {
+        let (m, n) = match t % 4 {
+            0 => (2 + rng.below(30), 2 + rng.below(30)),
+            1 => (10 + rng.below(30), 1 + rng.below(8)), // tall
+            2 => (1 + rng.below(8), 10 + rng.below(30)), // wide
+            _ => {
+                let d = 2 + rng.below(24);
+                (d, d) // square
+            }
+        };
+        if t % 3 == 2 {
+            let r = 1 + rng.below(m.min(n));
+            let w = Mat::rand_low_rank(m, n, r, &mut rng);
+            out.push((format!("trial {t}: {m}x{n} rank {r}"), w));
+        } else {
+            out.push((format!("trial {t}: {m}x{n} full"), Mat::randn(m, n, &mut rng)));
+        }
+    }
+    out
+}
+
+fn assert_permutation(perm: &[usize], len: usize, tag: &str) {
+    assert_eq!(perm.len(), len, "{tag}: permutation length");
+    let mut seen = vec![false; len];
+    for &p in perm {
+        assert!(p < len, "{tag}: index {p} out of range");
+        assert!(!seen[p], "{tag}: duplicate index {p}");
+        seen[p] = true;
+    }
+}
+
+/// `PA = LU`: pivots are a valid permutation, L is unit-lower, U is
+/// upper, and the product reconstructs the row-permuted input.
+#[test]
+fn lu_factors_reconstruct_with_valid_pivots() {
+    for (tag, a) in test_matrices(41_001) {
+        let (m, n) = a.shape();
+        let k = m.min(n);
+        let f = lu_decompose(&a);
+        assert_permutation(&f.piv, m, &tag);
+
+        // Unpack L (m x k, unit diagonal) and U (k x n, upper).
+        let mut l = Mat::<f64>::zeros(m, k);
+        let mut u = Mat::<f64>::zeros(k, n);
+        for i in 0..m {
+            for j in 0..k.min(i) {
+                l[(i, j)] = f.lu[(i, j)];
+            }
+            if i < k {
+                l[(i, i)] = 1.0;
+            }
+        }
+        for i in 0..k {
+            for j in i..n {
+                u[(i, j)] = f.lu[(i, j)];
+            }
+        }
+        // Partial pivoting bounds |L| <= 1 wherever a pivot was taken.
+        for i in 0..m {
+            for j in 0..k.min(i) {
+                assert!(l[(i, j)].abs() <= 1.0 + 1e-9, "{tag}: |l[{i},{j}]| = {}", l[(i, j)]);
+            }
+        }
+        let pa = a.select_rows(&f.piv);
+        let rec = matmul(&l, &u);
+        assert!(
+            rec.rel_fro_err(&pa) < 1e-8,
+            "{tag}: ||LU - PA||/||PA|| = {}",
+            rec.rel_fro_err(&pa)
+        );
+    }
+}
+
+/// Column-pivoted QR: perm is a permutation, Q is orthogonal
+/// (`QᵀQ = I`), `Qᵀ(AP)` is upper-triangular and equals R, and the
+/// pivot diagonal is non-increasing in magnitude.
+#[test]
+fn qr_orthogonality_and_factor_reconstruction() {
+    for (tag, a) in test_matrices(41_002) {
+        let (m, n) = a.shape();
+        let k = m.min(n);
+        let f = qr_column_pivot(&a);
+        assert_permutation(&f.perm, n, &tag);
+
+        // Qᵀ applied to I gives Qᵀ (m x m); QᵀQ = (Qᵀ)(Qᵀ)ᵀ = I.
+        let mut qt = Mat::<f64>::eye(m);
+        f.apply_qt(&mut qt);
+        let gram = matmul_nt(&qt, &qt);
+        assert!(
+            gram.rel_fro_err(&Mat::eye(m)) < 1e-10,
+            "{tag}: ||QᵀQ - I|| = {}",
+            gram.rel_fro_err(&Mat::eye(m))
+        );
+
+        // Qᵀ (A P) == [R; 0].
+        let mut qtap = a.select_cols(&f.perm);
+        f.apply_qt(&mut qtap);
+        let r = f.r_factor();
+        let top = qtap.block(0, k, 0, n);
+        let scale = a.fro_norm().max(1e-300);
+        assert!(
+            top.fro_dist(&r) / scale < 1e-10,
+            "{tag}: ||Qᵀ(AP) - R|| = {}",
+            top.fro_dist(&r) / scale
+        );
+        if m > k {
+            let bottom = qtap.block(k, m, 0, n);
+            assert!(bottom.fro_norm() / scale < 1e-10, "{tag}: below-R mass {}", bottom.fro_norm());
+        }
+
+        // Greedy max-residual pivoting: |r_ii| non-increasing (with
+        // numerical slack for the down-dating safeguard).
+        let r0 = f.rdiag.first().map(|d| d.abs()).unwrap_or(0.0);
+        for w in f.rdiag.windows(2) {
+            assert!(
+                w[1].abs() <= w[0].abs() + 1e-8 * (r0 + 1.0),
+                "{tag}: rdiag not monotone: {} then {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
+/// SVD: spectrum is non-negative and sorted descending, the right
+/// singular vectors are orthonormal, the numerically-significant left
+/// singular vectors are orthonormal, and `U Σ Vᵀ` reconstructs `A`.
+#[test]
+fn svd_reconstruction_ordering_and_orthogonality() {
+    for (tag, a) in test_matrices(41_003) {
+        let (m, n) = a.shape();
+        let k = m.min(n);
+        let f = svd(&a);
+        assert_eq!(f.s.len(), k, "{tag}: spectrum length");
+        for w in f.s.windows(2) {
+            assert!(w[0] >= w[1], "{tag}: singular values out of order: {} < {}", w[0], w[1]);
+        }
+        assert!(f.s.iter().all(|&s| s >= 0.0), "{tag}: negative singular value");
+
+        // Full-rank-k reconstruction.
+        let rec = f.reconstruct(k);
+        assert!(
+            rec.rel_fro_err(&a) < 1e-8,
+            "{tag}: ||UΣVᵀ - A||/||A|| = {}",
+            rec.rel_fro_err(&a)
+        );
+
+        // Orthonormality over the numerically significant spectrum: the
+        // factor carrying σ ≈ 0 directions is zero-filled by one-sided
+        // Jacobi (and lands on either side depending on the tall/wide
+        // role swap), so restrict both checks to significant σ.
+        let tol = f.s.first().copied().unwrap_or(0.0) * 1e-10;
+        let sig = f.s.iter().take_while(|&&s| s > tol).count();
+        if sig > 0 {
+            let u_sig = f.u.select_cols(&(0..sig).collect::<Vec<_>>());
+            let utu = matmul_tn(&u_sig, &u_sig);
+            assert!(
+                utu.rel_fro_err(&Mat::eye(sig)) < 1e-8,
+                "{tag}: ||UᵀU - I|| = {} over {sig} significant columns",
+                utu.rel_fro_err(&Mat::eye(sig))
+            );
+            let vt_sig = f.vt.block(0, sig, 0, n);
+            let vtv = matmul_nt(&vt_sig, &vt_sig);
+            assert!(
+                vtv.rel_fro_err(&Mat::eye(sig)) < 1e-8,
+                "{tag}: ||VᵀV - I|| = {} over {sig} significant rows",
+                vtv.rel_fro_err(&Mat::eye(sig))
+            );
+        }
+
+        // Rank detection on the rank-deficient trials: numerical rank
+        // from the spectrum never exceeds min(m, n).
+        assert!(f.rank(1e-9) <= k, "{tag}");
+    }
+}

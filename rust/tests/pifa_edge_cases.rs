@@ -1,0 +1,150 @@
+//! PIFA losslessness edge cases: degenerate ranks, duplicate rows, both
+//! precisions — `factorize → apply_rows / apply_cols` round-trips with
+//! exact pivot/non-pivot index-partition checks.
+
+use pifa::linalg::{matmul, matmul_nt, Mat, Rng, Scalar};
+use pifa::pifa::{pivoting_factorization, PifaLayer, PivotStrategy};
+
+/// The pivot and non-pivot index sets must partition `0..m` exactly,
+/// with non-pivots ascending (the scatter order the layer relies on).
+fn assert_partition<T: Scalar>(layer: &PifaLayer<T>, tag: &str) {
+    let m = layer.m;
+    let mut seen = vec![false; m];
+    for &i in layer.pivots.iter().chain(layer.non_pivots.iter()) {
+        assert!(i < m, "{tag}: index {i} out of range");
+        assert!(!seen[i], "{tag}: index {i} appears twice");
+        seen[i] = true;
+    }
+    assert!(seen.iter().all(|&b| b), "{tag}: partition does not cover 0..{m}");
+    assert!(
+        layer.non_pivots.windows(2).all(|w| w[0] < w[1]),
+        "{tag}: non-pivots not ascending"
+    );
+    assert_eq!(layer.rank() + layer.non_pivots.len(), m, "{tag}");
+}
+
+/// Round-trip a layer against its dense source in both layouts, at a
+/// decode batch (fused path) and a large batch (unfused path).
+fn assert_round_trip<T: Scalar>(w: &Mat<T>, layer: &PifaLayer<T>, tol: f64, tag: &str) {
+    let (m, n) = w.shape();
+    let mut rng = Rng::new(77_000 + m as u64 + n as u64);
+    for b in [1usize, 8] {
+        let x_rows: Mat<T> = Mat::randn(b, n, &mut rng);
+        let y = layer.apply_rows(&x_rows);
+        let y_ref = matmul_nt(&x_rows, w);
+        assert!(
+            y.rel_fro_err(&y_ref) < tol,
+            "{tag}: apply_rows b={b} err {}",
+            y.rel_fro_err(&y_ref)
+        );
+        let x_cols: Mat<T> = Mat::randn(n, b, &mut rng);
+        let y2 = layer.apply_cols(&x_cols);
+        let y2_ref = matmul(w, &x_cols);
+        assert!(
+            y2.rel_fro_err(&y2_ref) < tol,
+            "{tag}: apply_cols b={b} err {}",
+            y2.rel_fro_err(&y2_ref)
+        );
+    }
+    assert!(layer.reconstruct().rel_fro_err(w) < tol, "{tag}: reconstruct");
+}
+
+#[test]
+fn rank_zero_is_rejected_not_undefined() {
+    let w: Mat<f64> = Mat::zeros(6, 6);
+    for strat in [PivotStrategy::QrColumnPivot, PivotStrategy::Lu] {
+        assert!(
+            pivoting_factorization(&w, 0, strat).is_err(),
+            "r = 0 must be a typed error ({strat:?})"
+        );
+    }
+}
+
+#[test]
+fn full_rank_square_r_equals_m() {
+    // r = m = n: every row is a pivot; C is empty; the layer is a pure
+    // gather/scatter permutation of the rows.
+    let mut rng = Rng::new(7701);
+    let w: Mat<f64> = Mat::randn(9, 9, &mut rng);
+    let layer = pivoting_factorization(&w, 9, PivotStrategy::QrColumnPivot).unwrap();
+    assert_partition(&layer, "r=m square");
+    assert_eq!(layer.rank(), 9);
+    assert!(layer.non_pivots.is_empty());
+    assert_eq!(layer.c.shape(), (0, 9));
+    assert_round_trip(&w, &layer, 1e-10, "r=m square");
+}
+
+#[test]
+fn full_row_rank_wide_r_equals_m() {
+    // r = m < n: still every row a pivot (wide matrices always have
+    // independent rows generically).
+    let mut rng = Rng::new(7702);
+    let w: Mat<f64> = Mat::randn(6, 17, &mut rng);
+    let layer = pivoting_factorization(&w, 6, PivotStrategy::QrColumnPivot).unwrap();
+    assert_partition(&layer, "r=m wide");
+    assert!(layer.non_pivots.is_empty());
+    assert_round_trip(&w, &layer, 1e-10, "r=m wide");
+}
+
+#[test]
+fn rank_one_everything_from_one_row() {
+    let mut rng = Rng::new(7703);
+    for &(m, n) in &[(5usize, 5usize), (12, 4), (3, 20)] {
+        let w: Mat<f64> = Mat::rand_low_rank(m, n, 1, &mut rng);
+        let layer = pivoting_factorization(&w, 1, PivotStrategy::QrColumnPivot).unwrap();
+        assert_partition(&layer, "rank 1");
+        assert_eq!(layer.rank(), 1);
+        assert_eq!(layer.w_p.shape(), (1, n));
+        assert_eq!(layer.c.shape(), (m - 1, 1));
+        assert_round_trip(&w, &layer, 1e-9, "rank 1");
+    }
+}
+
+#[test]
+fn duplicate_rows_pick_independent_pivots() {
+    // m = 10 rows but only 3 distinct ones (each repeated): rank 3. The
+    // pivot selector must choose 3 *independent* rows (one from each
+    // duplicate class), never two copies of the same row.
+    let mut rng = Rng::new(7704);
+    let distinct: Mat<f64> = Mat::randn(3, 8, &mut rng);
+    let rows: Vec<usize> = vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0];
+    let w = distinct.select_rows(&rows);
+    for strat in [PivotStrategy::QrColumnPivot, PivotStrategy::Lu] {
+        let layer = pivoting_factorization(&w, 3, strat).unwrap();
+        assert_partition(&layer, "duplicate rows");
+        // The three pivots must come from three different duplicate
+        // classes, else W_p would be singular.
+        let mut classes: Vec<usize> = layer.pivots.iter().map(|&i| rows[i]).collect();
+        classes.sort_unstable();
+        classes.dedup();
+        assert_eq!(classes.len(), 3, "{strat:?}: pivots {:?} repeat a class", layer.pivots);
+        assert_round_trip(&w, &layer, 1e-9, "duplicate rows");
+    }
+}
+
+#[test]
+fn f32_and_f64_round_trips_at_matching_tolerances() {
+    let mut rng = Rng::new(7705);
+    let w64: Mat<f64> = Mat::rand_low_rank(20, 14, 6, &mut rng);
+    let layer64 = pivoting_factorization(&w64, 6, PivotStrategy::QrColumnPivot).unwrap();
+    assert_partition(&layer64, "f64");
+    assert_round_trip(&w64, &layer64, 1e-9, "f64");
+
+    let w32: Mat<f32> = w64.cast();
+    let layer32 = pivoting_factorization(&w32, 6, PivotStrategy::QrColumnPivot).unwrap();
+    assert_partition(&layer32, "f32");
+    assert_round_trip(&w32, &layer32, 1e-3, "f32");
+}
+
+#[test]
+fn degenerate_apply_shapes() {
+    // Batch-0 inputs are legal and produce empty outputs in both layouts
+    // (the scheduler can hit this when every lane finishes at once).
+    let mut rng = Rng::new(7706);
+    let w: Mat<f64> = Mat::rand_low_rank(8, 6, 2, &mut rng);
+    let layer = pivoting_factorization(&w, 2, PivotStrategy::QrColumnPivot).unwrap();
+    let empty_rows: Mat<f64> = Mat::zeros(0, 6);
+    assert_eq!(layer.apply_rows(&empty_rows).shape(), (0, 8));
+    let empty_cols: Mat<f64> = Mat::zeros(6, 0);
+    assert_eq!(layer.apply_cols(&empty_cols).shape(), (8, 0));
+}
