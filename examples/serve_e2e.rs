@@ -157,13 +157,25 @@ fn main() -> anyhow::Result<()> {
         );
         println!(
             "[{label}] ttft p50 {:.1} ms | itl p50/p95 {:.2}/{:.2} ms | peak lanes {} | \
-             occupancy p50 {:.0}%\n",
+             occupancy p50 {:.0}%",
             metrics.ttft_percentile_ms(0.5),
             metrics.itl_percentile_ms(0.5),
             metrics.itl_percentile_ms(0.95),
             metrics.peak_active,
             metrics.occupancy_percentile(0.5) * 100.0,
         );
+        if metrics.has_kv_pool() {
+            println!(
+                "[{label}] paged kv: {} blocks (peak {} in use) | block util p50 {:.0}% | \
+                 prefix hit rate {:.0}% | cow forks {}",
+                metrics.kv_blocks_total,
+                metrics.kv_peak_blocks,
+                metrics.block_util_percentile(0.5) * 100.0,
+                metrics.prefix_hit_rate() * 100.0,
+                metrics.kv_cow_copies,
+            );
+        }
+        println!();
     }
     println!("(Table 7's shape: MPIFA serves faster than dense at ~57% of the weight memory.)");
     Ok(())

@@ -260,6 +260,54 @@ pub fn run(cfg: &KernelBenchConfig) -> Result<BenchReport> {
     Ok(BenchReport { ratios, ..report })
 }
 
+/// Paged-KV microbench (DESIGN.md §8): builds a prefix-shared session
+/// mix on a [`BlockPool`] sized like the serving default, then times the
+/// merged `(L, B, S, d)` gather the PJRT decode path pays per call.
+/// Prints block utilization + prefix-hit-rate alongside the timing.
+pub fn kv_gather_microbench(smoke: bool) -> Result<f64> {
+    use crate::runtime::kernels::gather::gather_merged;
+    use crate::runtime::kvpool::{BlockPool, KvPoolConfig, SeqKv};
+    let (layers, dim, max_seq, lanes) =
+        if smoke { (2usize, 64usize, 64usize, 4usize) } else { (4, 256, 128, 8) };
+    let cfg = KvPoolConfig::matching_contiguous(layers, dim, lanes, max_seq);
+    let mut blkpool = BlockPool::new(cfg);
+    // Sessions share a common system-prompt prefix (half the window).
+    let prefix: Vec<usize> = (0..max_seq / 2).collect();
+    let mut tables: Vec<SeqKv> = Vec::with_capacity(lanes);
+    for lane in 0..lanes {
+        let mut prompt = prefix.clone();
+        prompt.push(1000 + lane);
+        let (mut seq, reused) = blkpool.begin(&prompt);
+        for (i, &tok) in prompt.iter().enumerate().skip(reused) {
+            blkpool.append(&mut seq, tok).map_err(|e| anyhow::anyhow!("{e}"))?;
+            for li in 0..layers {
+                blkpool.k_row_mut(&seq, li, i).fill(i as f32);
+                blkpool.v_row_mut(&seq, li, i).fill(-(i as f32));
+            }
+        }
+        tables.push(seq);
+    }
+    let stats = blkpool.stats();
+    let stride = max_seq * dim;
+    let mut out_k = vec![0f32; layers * lanes * stride];
+    let mut out_v = vec![0f32; layers * lanes * stride];
+    let refs: Vec<Option<&SeqKv>> = tables.iter().map(Some).collect();
+    let res = bench_fn("paged_gather", 2, 7, || {
+        gather_merged(&blkpool, &refs, max_seq, &mut out_k, &mut out_v);
+    });
+    let us = res.median_us();
+    println!(
+        "paged-kv gather (L{layers} B{lanes} S{max_seq} d{dim}): {us:.1} µs/call | \
+         block util {:.0}% ({}/{} blocks) | prefix hit rate {:.0}% | cow forks {}",
+        stats.utilization() * 100.0,
+        stats.used_blocks,
+        stats.num_blocks,
+        stats.prefix_hit_rate() * 100.0,
+        stats.cow_copies,
+    );
+    Ok(us)
+}
+
 /// CLI driver: run the grid, print the table, write the JSON, and (in
 /// smoke mode) assert the tracked ratio is sane.
 pub fn run_cli(smoke: bool, out: &Path) -> Result<()> {
@@ -275,7 +323,12 @@ pub fn run_cli(smoke: bool, out: &Path) -> Result<()> {
             r.m, r.n, r.pifa_vs_lowrank
         );
     }
+    let gather_us = kv_gather_microbench(smoke)?;
     if smoke {
+        ensure!(
+            gather_us.is_finite() && gather_us >= 0.0,
+            "smoke: paged-kv gather time {gather_us} µs is not sane"
+        );
         for r in &report.ratios {
             ensure!(
                 r.pifa_vs_lowrank.is_finite() && r.pifa_vs_lowrank > 0.0,
@@ -332,6 +385,12 @@ mod tests {
         let cfg =
             KernelBenchConfig { dims: vec![(8, 6)], batches: vec![1], warmup: 0, samples: 1 };
         assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn kv_microbench_times_a_prefix_shared_pool() {
+        let us = kv_gather_microbench(true).unwrap();
+        assert!(us.is_finite() && us >= 0.0);
     }
 
     #[test]

@@ -621,9 +621,29 @@ pub fn tab7_e2e() -> Result<()> {
 
     let mut t = TablePrinter::new(
         "Table 7 — end-to-end serving (tiny-s; continuous-batching scheduler)",
-        &["Variant", "Backend", "KV", "tok/s", "TTFT p50 ms", "ITL p50/p95 ms", "weights MB"],
+        &[
+            "Variant",
+            "Backend",
+            "KV",
+            "tok/s",
+            "TTFT p50 ms",
+            "ITL p50/p95 ms",
+            "blk util/hit",
+            "weights MB",
+        ],
     );
     fn push_row(t: &mut TablePrinter, cols: [&str; 3], m: &ServeMetrics, mem: f64) {
+        // Paged-KV block utilization + prefix-hit-rate (DESIGN.md §8);
+        // "-" for backends without a pool (no-KV forced modes).
+        let kv_col = if m.has_kv_pool() {
+            format!(
+                "{:.0}%/{:.0}%",
+                m.block_util_percentile(0.5) * 100.0,
+                m.prefix_hit_rate() * 100.0
+            )
+        } else {
+            "-".into()
+        };
         t.row(&[
             cols[0].into(),
             cols[1].into(),
@@ -631,6 +651,7 @@ pub fn tab7_e2e() -> Result<()> {
             format!("{:.1}", m.throughput()),
             format!("{:.2}", m.ttft_percentile_ms(0.5)),
             format!("{:.2}/{:.2}", m.itl_percentile_ms(0.5), m.itl_percentile_ms(0.95)),
+            kv_col,
             format!("{mem:.2}"),
         ]);
     }
@@ -700,6 +721,7 @@ pub fn tab7_e2e() -> Result<()> {
                 "Error (no sparse kernel)".into(),
                 "-".into(),
                 "-".into(),
+                "-".into(),
                 format!("{:.2}", sparse.memory_bytes_fp16() as f64 / 1e6),
             ]);
         }
@@ -708,7 +730,7 @@ pub fn tab7_e2e() -> Result<()> {
                 "[tab7] SKIP PJRT rows: {e:#} — native-backend rows above are still measured; \
                  run `make artifacts` with the real xla bindings for the PJRT rows"
             );
-            t.row_strs(&["(PJRT rows)", "PJRT", "-", "unavailable", "-", "-", "-"]);
+            t.row_strs(&["(PJRT rows)", "PJRT", "-", "unavailable", "-", "-", "-", "-"]);
         }
     }
     emit("tab7_e2e", &t);

@@ -5,23 +5,34 @@
 //! state. Two implementations:
 //!
 //! * [`PjrtBackend`] — prefill/decode through an AOT artifact pair via
-//!   [`ModelRunner`], with per-lane KV state in [`LaneKv`]. Lanes map to
-//!   batch rows of the static-batch decode artifact; lanes that share a
-//!   sequence position decode in one PJRT call.
-//! * [`NativeBackend`] — the from-scratch Rust forward path, one
-//!   [`KvCache`] per lane. No artifacts required: this is the serving
-//!   path CI exercises and the fallback `pifa serve` uses when PJRT is
-//!   unavailable.
+//!   [`ModelRunner`], with per-lane KV state in the paged [`LaneKv`].
+//!   Lanes map to batch rows of the static-batch decode artifact; lanes
+//!   that share a sequence position decode in one PJRT call.
+//! * [`NativeBackend`] — the from-scratch Rust forward path. The default
+//!   KV layout is the *paged* block pool (`runtime::kvpool`, DESIGN.md
+//!   §8): sessions hold block tables, shared prompt prefixes map the
+//!   same physical blocks, and the lane cap comes from the pool size
+//!   rather than a fixed constructor argument. The contiguous per-lane
+//!   [`KvCache`] layout survives as [`NativeBackend::contiguous`], the
+//!   reference the differential suite compares against.
 //!
-//! Both honour [`GenerationMode::NoKvCache`] (full re-prefill per token),
-//! the mode 2:4-sparse and hybrid `lowrank-s24` models are forced into
-//! when the sparse kernel cannot run the cache ops (Table 7's
-//! "Use KV Cache: No" rows).
+//! Failure granularity: [`DecodeBackend::step`] returns one
+//! [`StepResult`] per lane, so a KV bounds failure or pool exhaustion on
+//! one lane is a [`StepResult::Fault`] that fails only the offending
+//! session — an `Err` from `step` still means the whole engine state is
+//! unknown and every in-flight session fails.
+//!
+//! Both backends honour [`GenerationMode::NoKvCache`] (full re-prefill
+//! per token), the mode 2:4-sparse and hybrid `lowrank-s24` models are
+//! forced into when the sparse kernel cannot run the cache ops
+//! (Table 7's "Use KV Cache: No" rows).
 
 use crate::linalg::Mat;
-use crate::model::transformer::{KvCache, Transformer};
+use crate::model::transformer::{KvCache, KvStoreFull, Transformer};
 use crate::runtime::exec::{literal_f32_view, KvState, LaneKv, ModelRunner};
+use crate::runtime::kernels::gather::{self, LaneView};
 use crate::runtime::kernels::pool;
+use crate::runtime::kvpool::{BlockPool, KvPoolConfig, KvPoolStats, PagedSeq, SeqKv};
 use crate::runtime::Engine;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -49,6 +60,57 @@ pub struct StepInput<'a> {
     pub seq: &'a [usize],
 }
 
+/// Per-lane outcome of one shared decode iteration.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepResult {
+    /// The lane advanced one token; its logits row.
+    Logits(Vec<f32>),
+    /// The lane failed (KV bounds, pool exhaustion) at `pos`; only this
+    /// session should be failed — the other lanes' results are valid.
+    Fault { pos: usize, msg: String },
+}
+
+/// Block-aware admission verdict (paged backends; DESIGN.md §8).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmitVerdict {
+    /// Enough free blocks: admit now.
+    Admit,
+    /// Temporarily short on blocks: leave the request queued.
+    Defer,
+    /// The request can never fit this pool: reject it.
+    Reject(String),
+}
+
+/// Paged-KV sizing for [`NativeBackend`].
+#[derive(Clone, Debug)]
+pub struct PagedKvParams {
+    /// Token rows per block.
+    pub block_tokens: usize,
+    /// Physical blocks in the pool.
+    pub num_blocks: usize,
+    /// Admission low-watermark: keep this many blocks free per active
+    /// session when gating new admissions (decode headroom).
+    pub watermark_per_active: usize,
+}
+
+impl PagedKvParams {
+    /// A pool holding the bytes of the old contiguous `lanes × max_seq`
+    /// cache, rounded up to whole blocks per lane (exact when
+    /// `block_tokens` divides `max_seq` — true for the default 16 and
+    /// the tiny-model family's 128) — the equal-memory comparison
+    /// point. Delegates to [`KvPoolConfig::matching_contiguous`] (the
+    /// block count is independent of layers/dim) so the sizing formula
+    /// lives in one place.
+    pub fn matching_contiguous(lanes: usize, max_seq: usize) -> Self {
+        let cfg = KvPoolConfig::matching_contiguous(1, 1, lanes, max_seq);
+        Self {
+            block_tokens: cfg.block_tokens,
+            num_blocks: cfg.num_blocks,
+            watermark_per_active: 1,
+        }
+    }
+}
+
 /// Per-lane generation state owned by a backend. `prefill` claims a
 /// lane, `step` advances any subset of claimed lanes by one token, and
 /// `release` frees a lane for reuse (cancel / finish).
@@ -64,41 +126,221 @@ pub trait DecodeBackend {
     /// Run the prompt through the model on `lane`; returns the logits row
     /// for the final prompt position.
     fn prefill(&mut self, lane: usize, prompt: &[usize]) -> Result<Vec<f32>>;
-    /// Advance the given lanes one token; returns one logits row per
-    /// input, in input order.
-    fn step(&mut self, inputs: &[StepInput<'_>]) -> Result<Vec<Vec<f32>>>;
+    /// Advance the given lanes one token; returns one [`StepResult`] per
+    /// input, in input order. `Err` means the engine state is unknown
+    /// (every in-flight session fails); a per-lane [`StepResult::Fault`]
+    /// fails only that lane's session.
+    fn step(&mut self, inputs: &[StepInput<'_>]) -> Result<Vec<StepResult>>;
     /// Free a lane's state so a queued session can claim it.
     fn release(&mut self, lane: usize);
+    /// Block-aware admission gate: can a session with this prompt length
+    /// and token budget start now? Non-paged backends always admit.
+    fn admit_check(&self, _prompt_len: usize, _max_new: usize) -> AdmitVerdict {
+        AdmitVerdict::Admit
+    }
+    /// Paged-KV pool counters, when the backend has a pool.
+    fn kv_stats(&self) -> Option<KvPoolStats> {
+        None
+    }
     /// Diagnostic label.
     fn name(&self) -> &'static str {
         "backend"
     }
 }
 
-/// Pure-Rust backend: one [`KvCache`] per lane over a [`Transformer`].
+/// KV storage behind [`NativeBackend`].
+enum NativeKv {
+    /// One dense [`KvCache`] per lane (the pre-paging reference layout).
+    Contiguous(Vec<Option<KvCache>>),
+    /// Shared block pool + per-lane block tables (DESIGN.md §8).
+    Paged { pool: BlockPool, seqs: Vec<Option<SeqKv>>, params: PagedKvParams },
+}
+
+/// Pure-Rust backend over a [`Transformer`].
 pub struct NativeBackend {
     model: Transformer,
     mode: GenerationMode,
-    caches: Vec<Option<KvCache>>,
+    kv: NativeKv,
 }
 
 /// Per-lane step job (token + owned cache) handed to a pool job.
 type LaneJob = Mutex<Option<(usize, KvCache)>>;
 /// Per-lane step result (logits + the cache handed back).
 type LaneDone = Mutex<Option<(Mat<f32>, KvCache)>>;
+/// Per-lane paged step job (token + raw-slab lane view).
+type PagedJob = Mutex<Option<(usize, LaneView)>>;
+/// Per-lane paged step outcome.
+type PagedDone = Mutex<Option<Result<Mat<f32>, KvStoreFull>>>;
 
 impl NativeBackend {
+    /// Default construction: paged KV sized to the same memory as a
+    /// contiguous `lanes × max_seq` cache, which typically exposes *more*
+    /// lanes than `lanes` (short sessions don't reserve `max_seq` rows).
+    /// No-KV mode has no cache to page and keeps plain lane slots.
     pub fn new(model: Transformer, mode: GenerationMode, lanes: usize) -> Self {
+        match mode {
+            GenerationMode::KvCache => {
+                let params = PagedKvParams::matching_contiguous(lanes, model.cfg.max_seq);
+                Self::paged(model, mode, params)
+            }
+            GenerationMode::NoKvCache => Self::contiguous(model, mode, lanes),
+        }
+    }
+
+    /// The contiguous per-lane layout (fixed lane count) — the reference
+    /// the paged path is differentially tested against.
+    pub fn contiguous(model: Transformer, mode: GenerationMode, lanes: usize) -> Self {
         // Spawn the kernel pool now so the first decode token does not
         // pay the worker start-up cost.
         pool::prewarm();
-        Self { model, mode, caches: (0..lanes.max(1)).map(|_| None).collect() }
+        Self {
+            model,
+            mode,
+            kv: NativeKv::Contiguous((0..lanes.max(1)).map(|_| None).collect()),
+        }
     }
+
+    /// Paged KV with explicit pool sizing. The lane cap is the block
+    /// count (every session needs at least one block); admission is
+    /// gated by the free-block watermark, not the lane count.
+    pub fn paged(model: Transformer, mode: GenerationMode, params: PagedKvParams) -> Self {
+        pool::prewarm();
+        let cfg = KvPoolConfig {
+            layers: model.cfg.n_layers,
+            dim: model.cfg.dim,
+            block_tokens: params.block_tokens.max(1),
+            num_blocks: params.num_blocks.max(1),
+        };
+        let lanes = cfg.num_blocks;
+        Self {
+            model,
+            mode,
+            kv: NativeKv::Paged {
+                pool: BlockPool::new(cfg),
+                seqs: (0..lanes).map(|_| None).collect(),
+                params,
+            },
+        }
+    }
+
+    fn lane_count(&self) -> usize {
+        match &self.kv {
+            NativeKv::Contiguous(c) => c.len(),
+            NativeKv::Paged { seqs, .. } => seqs.len(),
+        }
+    }
+
+    fn lane_claimed(&self, lane: usize) -> bool {
+        match &self.kv {
+            NativeKv::Contiguous(c) => c.get(lane).is_some_and(|s| s.is_some()),
+            NativeKv::Paged { seqs, .. } => seqs.get(lane).is_some_and(|s| s.is_some()),
+        }
+    }
+}
+
+/// Contiguous KV iteration: per-lane capacity faults resolve locally,
+/// healthy lanes fan out across the kernel pool (the per-lane GEMVs
+/// inside run inline — nested pool calls do not re-enter).
+fn step_contiguous(
+    model: &Transformer,
+    caches: &mut [Option<KvCache>],
+    inputs: &[StepInput<'_>],
+) -> Result<Vec<StepResult>> {
+    let mut out: Vec<Option<StepResult>> = (0..inputs.len()).map(|_| None).collect();
+    let mut live: Vec<usize> = Vec::new();
+    for (i, inp) in inputs.iter().enumerate() {
+        let cache = caches[inp.lane].as_ref().expect("validated by caller");
+        if cache.len >= cache.capacity {
+            out[i] = Some(StepResult::Fault {
+                pos: cache.len,
+                msg: format!("KV cache full at {}/{}", cache.len, cache.capacity),
+            });
+        } else {
+            live.push(i);
+        }
+    }
+    // Move each live lane's cache into its job slot; jobs own it for the
+    // duration of the scope and hand it back with the logits.
+    let jobs: Vec<LaneJob> = live
+        .iter()
+        .map(|&i| Mutex::new(Some((inputs[i].token, caches[inputs[i].lane].take().unwrap()))))
+        .collect();
+    let done: Vec<LaneDone> = live.iter().map(|_| Mutex::new(None)).collect();
+    pool::scope_run(jobs.len(), |j| {
+        let (token, mut cache) = jobs[j].lock().unwrap().take().unwrap();
+        let logits = model.decode_step(token, &mut cache);
+        *done[j].lock().unwrap() = Some((logits, cache));
+    });
+    for (&i, slot) in live.iter().zip(done) {
+        let (logits, cache) =
+            slot.into_inner().unwrap().context("lane step produced no result")?;
+        caches[inputs[i].lane] = Some(cache);
+        out[i] = Some(StepResult::Logits(logits.row(0).to_vec()));
+    }
+    Ok(out.into_iter().map(|o| o.expect("every input resolved")).collect())
+}
+
+/// Paged KV iteration. Serial phase: block reservation per lane
+/// (`BlockPool::append` — alloc / copy-on-write / sharing-index update);
+/// a reservation failure (pool exhausted mid-decode) faults only that
+/// lane. Parallel phase: disjoint-write [`LaneView`]s advance the
+/// healthy lanes across the kernel pool (soundness argument in
+/// `runtime::kernels::gather`).
+fn step_paged(
+    model: &Transformer,
+    blkpool: &mut BlockPool,
+    seqs: &mut [Option<SeqKv>],
+    inputs: &[StepInput<'_>],
+    max_seq: usize,
+) -> Result<Vec<StepResult>> {
+    let mut out: Vec<Option<StepResult>> = (0..inputs.len()).map(|_| None).collect();
+    let mut live: Vec<usize> = Vec::new();
+    for (i, inp) in inputs.iter().enumerate() {
+        let seq = seqs[inp.lane].as_mut().expect("validated by caller");
+        if seq.len() >= max_seq {
+            out[i] = Some(StepResult::Fault {
+                pos: seq.len(),
+                msg: format!("KV sequence capacity {max_seq} reached"),
+            });
+            continue;
+        }
+        match blkpool.append(seq, inp.token) {
+            Ok(()) => live.push(i),
+            Err(e) => {
+                out[i] = Some(StepResult::Fault { pos: e.pos(), msg: e.to_string() });
+            }
+        }
+    }
+    // One pool borrow builds every view, so all raw slab pointers share
+    // a provenance (see `gather::lane_views`).
+    let live_seqs: Vec<&SeqKv> = live
+        .iter()
+        .map(|&i| seqs[inputs[i].lane].as_ref().expect("validated by caller"))
+        .collect();
+    let jobs: Vec<PagedJob> = gather::lane_views(blkpool, &live_seqs)
+        .into_iter()
+        .zip(live.iter())
+        .map(|(view, &i)| Mutex::new(Some((inputs[i].token, view))))
+        .collect();
+    drop(live_seqs);
+    let done: Vec<PagedDone> = live.iter().map(|_| Mutex::new(None)).collect();
+    pool::scope_run(jobs.len(), |j| {
+        let (token, mut view) = jobs[j].lock().unwrap().take().unwrap();
+        *done[j].lock().unwrap() = Some(model.decode_step_kv(token, &mut view));
+    });
+    for (&i, slot) in live.iter().zip(done) {
+        let res = slot.into_inner().unwrap().context("lane step produced no result")?;
+        out[i] = Some(match res {
+            Ok(logits) => StepResult::Logits(logits.row(0).to_vec()),
+            Err(e) => StepResult::Fault { pos: e.pos, msg: e.detail },
+        });
+    }
+    Ok(out.into_iter().map(|o| o.expect("every input resolved")).collect())
 }
 
 impl DecodeBackend for NativeBackend {
     fn lanes(&self) -> usize {
-        self.caches.len()
+        self.lane_count()
     }
 
     fn max_seq(&self) -> usize {
@@ -106,82 +348,88 @@ impl DecodeBackend for NativeBackend {
     }
 
     fn prefill(&mut self, lane: usize, prompt: &[usize]) -> Result<Vec<f32>> {
-        if lane >= self.caches.len() {
-            bail!("lane {lane} out of range ({} lanes)", self.caches.len());
+        if lane >= self.lane_count() {
+            bail!("lane {lane} out of range ({} lanes)", self.lane_count());
         }
         if prompt.is_empty() || prompt.len() > self.max_prompt() {
             bail!("prompt length {} not in 1..={}", prompt.len(), self.max_prompt());
         }
+        let max_seq = self.model.cfg.max_seq;
+        let model = &self.model;
         match self.mode {
-            GenerationMode::KvCache => {
-                let mut cache = KvCache::new(&self.model.cfg);
-                let mut logits = None;
-                for &t in prompt {
-                    logits = Some(self.model.decode_step(t, &mut cache));
+            GenerationMode::KvCache => match &mut self.kv {
+                NativeKv::Contiguous(caches) => {
+                    let mut cache = KvCache::new(&model.cfg);
+                    let mut logits = None;
+                    for &t in prompt {
+                        logits = Some(model.decode_step(t, &mut cache));
+                    }
+                    caches[lane] = Some(cache);
+                    Ok(logits.context("empty prompt")?.row(0).to_vec())
                 }
-                self.caches[lane] = Some(cache);
-                Ok(logits.context("empty prompt")?.row(0).to_vec())
-            }
+                NativeKv::Paged { pool: blkpool, seqs, .. } => {
+                    // Defensive: a stale table on this lane is released
+                    // before the new session claims it.
+                    if let Some(old) = seqs[lane].take() {
+                        blkpool.release(old);
+                    }
+                    // Attach the longest resident shared prefix; only the
+                    // tail (always including the final position, whose
+                    // logits we need) is recomputed.
+                    let (mut seq, reused) = blkpool.begin(prompt);
+                    let mut logits: Option<Mat<f32>> = None;
+                    for &t in &prompt[reused..] {
+                        let mut store =
+                            PagedSeq { pool: &mut *blkpool, seq: &mut seq, cap: max_seq };
+                        match model.decode_step_kv(t, &mut store) {
+                            Ok(l) => logits = Some(l),
+                            Err(e) => {
+                                blkpool.release(seq);
+                                bail!("paged prefill failed: {e}");
+                            }
+                        }
+                    }
+                    seqs[lane] = Some(seq);
+                    Ok(logits.expect("prefix match leaves at least one position").row(0).to_vec())
+                }
+            },
             GenerationMode::NoKvCache => {
-                let logits = self.model.forward(prompt, None);
+                let logits = model.forward(prompt, None);
                 Ok(logits.row(prompt.len() - 1).to_vec())
             }
         }
     }
 
-    /// Lanes are independent, so one shared iteration can fan the
-    /// per-lane work across the kernel pool (the kernels inside a pool
-    /// job run inline — nested pool calls do not re-enter). KV-cache
-    /// decode steps are single-token GEMVs, usually below the banding
-    /// threshold, so lane-level parallelism is the only parallelism
-    /// available and is always used; no-KV steps are prefill-sized
-    /// forwards whose inner GEMMs band across the pool themselves, so
-    /// lanes fan out only when there are at least as many of them as
-    /// pool slots. All validation happens up front so the parallel
-    /// section is infallible.
-    fn step(&mut self, inputs: &[StepInput<'_>]) -> Result<Vec<Vec<f32>>> {
+    fn step(&mut self, inputs: &[StepInput<'_>]) -> Result<Vec<StepResult>> {
         if inputs.is_empty() {
             return Ok(Vec::new());
         }
         match self.mode {
             GenerationMode::KvCache => {
-                let mut seen = vec![false; self.caches.len()];
+                // Engine-wide validation (programming errors, not session
+                // faults): lane range, claimed state, duplicates.
+                let lanes_n = self.lane_count();
+                let mut seen = vec![false; lanes_n];
                 for inp in inputs {
-                    let cache = self
-                        .caches
-                        .get(inp.lane)
-                        .and_then(Option::as_ref)
-                        .with_context(|| format!("lane {} has no prefilled cache", inp.lane))?;
-                    if cache.len >= cache.capacity {
-                        bail!("lane {} KV cache full at {}", inp.lane, cache.len);
+                    if inp.lane >= lanes_n {
+                        bail!("lane {} out of range ({lanes_n} lanes)", inp.lane);
                     }
                     if seen[inp.lane] {
                         bail!("lane {} appears twice in one iteration", inp.lane);
                     }
                     seen[inp.lane] = true;
+                    if !self.lane_claimed(inp.lane) {
+                        bail!("lane {} has no prefilled cache", inp.lane);
+                    }
                 }
-                // Move each lane's cache into its job slot; jobs own it for
-                // the duration of the scope and hand it back with the
-                // logits.
-                let jobs: Vec<LaneJob> = inputs
-                    .iter()
-                    .map(|inp| Mutex::new(Some((inp.token, self.caches[inp.lane].take().unwrap()))))
-                    .collect();
-                let done: Vec<LaneDone> = inputs.iter().map(|_| Mutex::new(None)).collect();
+                let max_seq = self.model.cfg.max_seq;
                 let model = &self.model;
-                pool::scope_run(inputs.len(), |i| {
-                    let (token, mut cache) = jobs[i].lock().unwrap().take().unwrap();
-                    let logits = model.decode_step(token, &mut cache);
-                    *done[i].lock().unwrap() = Some((logits, cache));
-                });
-                let mut out = Vec::with_capacity(inputs.len());
-                for (inp, slot) in inputs.iter().zip(done) {
-                    let (logits, cache) =
-                        slot.into_inner().unwrap().context("lane step produced no result")?;
-                    self.caches[inp.lane] = Some(cache);
-                    out.push(logits.row(0).to_vec());
+                match &mut self.kv {
+                    NativeKv::Contiguous(caches) => step_contiguous(model, caches, inputs),
+                    NativeKv::Paged { pool: blkpool, seqs, .. } => {
+                        step_paged(model, blkpool, seqs, inputs, max_seq)
+                    }
                 }
-                Ok(out)
             }
             GenerationMode::NoKvCache => {
                 for inp in inputs {
@@ -213,7 +461,7 @@ impl DecodeBackend for NativeBackend {
                     .map(|(inp, slot)| {
                         let logits =
                             slot.into_inner().unwrap().context("lane step produced no result")?;
-                        Ok(logits.row(inp.seq.len() - 1).to_vec())
+                        Ok(StepResult::Logits(logits.row(inp.seq.len() - 1).to_vec()))
                     })
                     .collect()
             }
@@ -221,8 +469,53 @@ impl DecodeBackend for NativeBackend {
     }
 
     fn release(&mut self, lane: usize) {
-        if let Some(c) = self.caches.get_mut(lane) {
-            *c = None;
+        match &mut self.kv {
+            NativeKv::Contiguous(caches) => {
+                if let Some(c) = caches.get_mut(lane) {
+                    *c = None;
+                }
+            }
+            NativeKv::Paged { pool: blkpool, seqs, .. } => {
+                if let Some(seq) = seqs.get_mut(lane).and_then(|s| s.take()) {
+                    blkpool.release(seq);
+                }
+            }
+        }
+    }
+
+    fn admit_check(&self, prompt_len: usize, max_new: usize) -> AdmitVerdict {
+        if self.mode == GenerationMode::NoKvCache {
+            return AdmitVerdict::Admit;
+        }
+        let NativeKv::Paged { pool: blkpool, seqs, params } = &self.kv else {
+            return AdmitVerdict::Admit;
+        };
+        let max_seq = self.model.cfg.max_seq;
+        let worst = (prompt_len + max_new).clamp(1, max_seq);
+        if blkpool.blocks_for(worst) > blkpool.config().num_blocks {
+            return AdmitVerdict::Reject(format!(
+                "session needs {} blocks at its longest, pool holds {}",
+                blkpool.blocks_for(worst),
+                blkpool.config().num_blocks
+            ));
+        }
+        // Admit while the prompt (plus one decode row) fits and the
+        // watermark leaves headroom for in-flight sessions to grow.
+        let needed = blkpool.blocks_for((prompt_len + 1).min(max_seq));
+        let active = seqs.iter().filter(|s| s.is_some()).count();
+        if blkpool.allocatable_blocks() < needed + params.watermark_per_active * active {
+            AdmitVerdict::Defer
+        } else {
+            AdmitVerdict::Admit
+        }
+    }
+
+    fn kv_stats(&self) -> Option<KvPoolStats> {
+        match (&self.kv, self.mode) {
+            (NativeKv::Paged { pool: blkpool, .. }, GenerationMode::KvCache) => {
+                Some(blkpool.stats())
+            }
+            _ => None,
         }
     }
 
@@ -232,9 +525,10 @@ impl DecodeBackend for NativeBackend {
 }
 
 /// PJRT backend: lanes are batch rows of the static-batch decode
-/// artifact; per-lane KV lives in a [`LaneKv`] so a single lane can be
-/// re-prefetched or reset without rebuilding the merged `(L,B,S,d)`
-/// cache. Lanes at the same sequence position share one decode call.
+/// artifact; per-lane KV lives in the paged [`LaneKv`], which keeps one
+/// block table per lane (shared prompt prefixes map the same physical
+/// blocks) and gathers the merged `(L,B,S,d)` literal only at decode
+/// call time. Lanes at the same sequence position share one decode call.
 pub struct PjrtBackend {
     pjrt: Engine,
     runner: ModelRunner,
@@ -274,20 +568,25 @@ impl DecodeBackend for PjrtBackend {
         let (logits, kvs) = self.runner.prefill(&mut self.pjrt, prompt)?;
         if self.mode == GenerationMode::KvCache {
             // Borrowed views: no full-cache copies on the claim path.
+            // Shared prompt prefixes dedupe into already-resident blocks.
             let k = literal_f32_view(&kvs.k)?;
             let v = literal_f32_view(&kvs.v)?;
-            self.kv.write_lane(lane, k, v, prompt.len())?;
+            self.kv
+                .write_lane(lane, prompt, k, v, prompt.len())
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
         }
         Ok(self.runner.logits_at(&logits, prompt.len() - 1))
     }
 
-    fn step(&mut self, inputs: &[StepInput<'_>]) -> Result<Vec<Vec<f32>>> {
+    fn step(&mut self, inputs: &[StepInput<'_>]) -> Result<Vec<StepResult>> {
         match self.mode {
             GenerationMode::NoKvCache => {
                 let mut out = Vec::with_capacity(inputs.len());
                 for inp in inputs {
                     let (logits, _) = self.runner.prefill(&mut self.pjrt, inp.seq)?;
-                    out.push(self.runner.logits_at(&logits, inp.seq.len() - 1));
+                    out.push(StepResult::Logits(
+                        self.runner.logits_at(&logits, inp.seq.len() - 1),
+                    ));
                 }
                 Ok(out)
             }
@@ -295,50 +594,78 @@ impl DecodeBackend for PjrtBackend {
                 // Group lanes by shared position: the decode artifact
                 // takes one scalar `pos`, so only same-position lanes
                 // can share a call. Mixed-length traffic still shares
-                // whenever prompts align or converge.
-                //
-                // Each group pays full-cache host<->literal copies
-                // (k/v_literal + absorb_step). With the vendored
-                // host-side xla stub this is a plain memcpy; a real
-                // device runtime would instead keep the cache resident
-                // and materialize single lanes only on prefill/release.
+                // whenever prompts align or converge. A lane at its KV
+                // capacity is a per-lane fault, not an engine failure.
+                let mut out: Vec<Option<StepResult>> =
+                    (0..inputs.len()).map(|_| None).collect();
                 let mut by_pos: BTreeMap<usize, Vec<(usize, usize, usize)>> = BTreeMap::new();
                 for (i, inp) in inputs.iter().enumerate() {
                     if inp.lane >= self.lanes() {
                         bail!("lane {} out of range", inp.lane);
                     }
-                    let pos = self.kv.pos[inp.lane];
+                    let pos = self.kv.pos(inp.lane);
                     if pos == 0 {
                         bail!("lane {} stepped without prefill", inp.lane);
                     }
+                    if pos >= self.runner.max_seq {
+                        out[i] = Some(StepResult::Fault {
+                            pos,
+                            msg: format!("KV cache full at pos {pos}"),
+                        });
+                        continue;
+                    }
                     by_pos.entry(pos).or_default().push((i, inp.lane, inp.token));
                 }
-                let mut out: Vec<Vec<f32>> = vec![Vec::new(); inputs.len()];
                 for (pos, group) in by_pos {
-                    if pos >= self.runner.max_seq {
-                        bail!("KV cache full at pos {pos}");
-                    }
                     let mut tokens = vec![0usize; self.runner.batch];
                     for &(_, lane, token) in &group {
                         tokens[lane] = token;
                     }
-                    let state =
-                        KvState { k: self.kv.k_literal()?, v: self.kv.v_literal()?, pos };
+                    // Each group pays one merged gather + decode call.
+                    // With the vendored host-side xla stub this is a
+                    // plain memcpy; a real device runtime would keep the
+                    // cache resident instead.
+                    let (k_lit, v_lit) = self.kv.merged_literals()?;
+                    let state = KvState { k: k_lit, v: v_lit, pos };
                     let (rows, new_state) =
                         self.runner.decode_step(&mut self.pjrt, state, &tokens)?;
-                    let lanes: Vec<usize> = group.iter().map(|g| g.1).collect();
-                    self.kv.absorb_step(&lanes, &new_state.k, &new_state.v, pos)?;
-                    for &(i, lane, _) in &group {
-                        out[i] = rows[lane].clone();
+                    let kview = literal_f32_view(&new_state.k)?;
+                    let vview = literal_f32_view(&new_state.v)?;
+                    for &(i, lane, token) in &group {
+                        let absorbed = self.kv.absorb_lane(lane, token, kview, vview, pos);
+                        out[i] = Some(match absorbed {
+                            Ok(()) => StepResult::Logits(rows[lane].clone()),
+                            Err(e) => StepResult::Fault { pos: e.pos, msg: e.msg },
+                        });
                     }
                 }
-                Ok(out)
+                Ok(out.into_iter().map(|o| o.expect("every input resolved")).collect())
             }
         }
     }
 
     fn release(&mut self, lane: usize) {
         self.kv.reset_lane(lane);
+    }
+
+    fn admit_check(&self, prompt_len: usize, _max_new: usize) -> AdmitVerdict {
+        if self.mode != GenerationMode::KvCache {
+            return AdmitVerdict::Admit;
+        }
+        // Watermark: one spare block per active lane for decode growth.
+        let needed = self.kv.blocks_for((prompt_len + 1).min(self.runner.max_seq));
+        if self.kv.allocatable_blocks() < needed + self.kv.active_lanes() {
+            AdmitVerdict::Defer
+        } else {
+            AdmitVerdict::Admit
+        }
+    }
+
+    fn kv_stats(&self) -> Option<KvPoolStats> {
+        match self.mode {
+            GenerationMode::KvCache => Some(self.kv.stats()),
+            GenerationMode::NoKvCache => None,
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -359,6 +686,32 @@ mod tests {
         Transformer::new_random(&cfg, &mut rng)
     }
 
+    /// A much smaller transformer for pool-edge-case tests.
+    fn micro_model(seed: u64, max_seq: usize) -> Transformer {
+        let cfg = ModelConfig {
+            name: "micro".into(),
+            vocab: 32,
+            dim: 16,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 24,
+            max_seq,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(seed);
+        Transformer::new_random(&cfg, &mut rng)
+    }
+
+    fn logits_of(rows: &[StepResult], i: usize) -> &[f32] {
+        match &rows[i] {
+            StepResult::Logits(row) => row,
+            StepResult::Fault { pos, msg } => {
+                panic!("unexpected lane fault at pos {pos}: {msg}")
+            }
+        }
+    }
+
     /// Greedy-generate through a backend exactly as the scheduler does:
     /// prefill emits token 0, each step emits one more.
     fn backend_greedy(
@@ -375,7 +728,7 @@ mod tests {
             let rows = backend
                 .step(&[StepInput { lane, token: last, seq: &seq }])
                 .unwrap();
-            seq.push(argmax(&rows[0]));
+            seq.push(argmax(logits_of(&rows, 0)));
         }
         backend.release(lane);
         seq[prompt.len()..].to_vec()
@@ -387,6 +740,15 @@ mod tests {
         let prompt = vec![3usize, 11, 7, 2];
         let want = model.generate(&prompt, 6);
         let mut be = NativeBackend::new(model, GenerationMode::KvCache, 2);
+        assert_eq!(backend_greedy(&mut be, 1, &prompt, 6), want);
+    }
+
+    #[test]
+    fn native_contiguous_matches_model_generate() {
+        let model = tiny_model(416);
+        let prompt = vec![3usize, 11, 7, 2];
+        let want = model.generate(&prompt, 6);
+        let mut be = NativeBackend::contiguous(model, GenerationMode::KvCache, 2);
         assert_eq!(backend_greedy(&mut be, 1, &prompt, 6), want);
     }
 
@@ -423,8 +785,8 @@ mod tests {
                     StepInput { lane: 1, token: *sb.last().unwrap(), seq: &sb },
                 ])
                 .unwrap();
-            sa.push(argmax(&rows[0]));
-            sb.push(argmax(&rows[1]));
+            sa.push(argmax(logits_of(&rows, 0)));
+            sb.push(argmax(logits_of(&rows, 1)));
         }
         assert_eq!(&sa[pa.len()..], &want_a[..]);
         assert_eq!(&sb[pb.len()..], &want_b[..]);
@@ -446,11 +808,144 @@ mod tests {
         let model = tiny_model(415);
         let max = model.cfg.max_seq;
         let mut be = NativeBackend::new(model, GenerationMode::KvCache, 1);
-        assert!(be.prefill(7, &[1, 2]).is_err());
+        let beyond = be.lanes();
+        assert!(be.prefill(beyond, &[1, 2]).is_err());
         assert!(be.prefill(0, &[]).is_err());
         let too_long = vec![1usize; max + 1];
         assert!(be.prefill(0, &too_long).is_err());
-        // Stepping an unprefilled lane is a typed error, not a panic.
+        // Stepping an unprefilled lane is an engine-wide typed error,
+        // not a panic.
         assert!(be.step(&[StepInput { lane: 0, token: 1, seq: &[1] }]).is_err());
+    }
+
+    #[test]
+    fn paged_lane_cap_exceeds_contiguous_at_equal_memory() {
+        let model = tiny_model(417);
+        let fixed_lanes = 4;
+        let contiguous = NativeBackend::contiguous(
+            model.clone(),
+            GenerationMode::KvCache,
+            fixed_lanes,
+        );
+        let paged = NativeBackend::new(model, GenerationMode::KvCache, fixed_lanes);
+        assert!(
+            paged.lanes() > contiguous.lanes(),
+            "paged ({}) must admit more lanes than contiguous ({}) at equal memory",
+            paged.lanes(),
+            contiguous.lanes()
+        );
+    }
+
+    #[test]
+    fn shared_prefix_prefill_reuses_blocks_and_matches() {
+        let model = micro_model(418, 32);
+        let reference = model.clone();
+        let mut be = NativeBackend::paged(
+            model,
+            GenerationMode::KvCache,
+            PagedKvParams { block_tokens: 4, num_blocks: 16, watermark_per_active: 1 },
+        );
+        let prompt = vec![7usize, 3, 9, 1, 5, 2, 8, 4];
+        let l0 = be.prefill(0, &prompt).unwrap();
+        let stats0 = be.kv_stats().unwrap();
+        let l1 = be.prefill(1, &prompt).unwrap();
+        let stats1 = be.kv_stats().unwrap();
+        // Same prompt: the second prefill reuses the resident prefix...
+        assert!(stats1.prefix_hit_tokens > 0, "no prefix hits recorded");
+        assert!(
+            stats1.used_blocks <= stats0.used_blocks + 1,
+            "shared prefix duplicated blocks: {} -> {}",
+            stats0.used_blocks,
+            stats1.used_blocks
+        );
+        // ...and produces bitwise-identical prefill logits.
+        assert_eq!(l0, l1);
+        // Both lanes then decode exactly like model.generate.
+        let want = reference.generate(&prompt, 4);
+        let mut s0 = prompt.clone();
+        s0.push(argmax(&l0));
+        let mut s1 = prompt.clone();
+        s1.push(argmax(&l1));
+        for _ in 0..3 {
+            let rows = be
+                .step(&[
+                    StepInput { lane: 0, token: *s0.last().unwrap(), seq: &s0 },
+                    StepInput { lane: 1, token: *s1.last().unwrap(), seq: &s1 },
+                ])
+                .unwrap();
+            s0.push(argmax(logits_of(&rows, 0)));
+            s1.push(argmax(logits_of(&rows, 1)));
+        }
+        assert_eq!(&s0[prompt.len()..], &want[..]);
+        assert_eq!(&s1[prompt.len()..], &want[..]);
+    }
+
+    #[test]
+    fn pool_exhaustion_faults_only_the_offending_lane() {
+        let model = micro_model(419, 32);
+        // Three blocks of four tokens: two sessions with 4-token prompts
+        // each own one block; the third block is consumed by the first
+        // decode wave, and the next append on one lane must fault while
+        // the other lane (whose block still has a free row) advances.
+        let mut be = NativeBackend::paged(
+            model,
+            GenerationMode::KvCache,
+            PagedKvParams { block_tokens: 4, num_blocks: 3, watermark_per_active: 0 },
+        );
+        let pa = vec![1usize, 2, 3, 4];
+        let pb = vec![5usize, 6, 7, 8];
+        let la = be.prefill(0, &pa).unwrap();
+        let lb = be.prefill(1, &pb).unwrap();
+        let mut sa = pa.clone();
+        sa.push(argmax(&la));
+        let mut sb = pb.clone();
+        sb.push(argmax(&lb));
+        // Step 1: lane 0 grabs the last free block; lane 1 exhausts.
+        let rows = be
+            .step(&[
+                StepInput { lane: 0, token: *sa.last().unwrap(), seq: &sa },
+                StepInput { lane: 1, token: *sb.last().unwrap(), seq: &sb },
+            ])
+            .unwrap();
+        let mut faults = 0;
+        let mut ok = 0;
+        for r in &rows {
+            match r {
+                StepResult::Logits(_) => ok += 1,
+                StepResult::Fault { pos, msg } => {
+                    faults += 1;
+                    assert_eq!(*pos, 4, "fault at the first decode position");
+                    assert!(msg.contains("exhausted"), "unexpected fault: {msg}");
+                }
+            }
+        }
+        assert_eq!((ok, faults), (1, 1), "exactly one lane faults, one advances");
+        // Releasing the faulted lane frees its block for the survivor.
+        be.release(1);
+        sa.push(0);
+        let rows = be
+            .step(&[StepInput { lane: 0, token: 0, seq: &sa }])
+            .unwrap();
+        assert!(matches!(rows[0], StepResult::Logits(_)), "survivor keeps decoding");
+        be.release(0);
+    }
+
+    #[test]
+    fn paged_admit_check_gates_on_free_blocks() {
+        let model = micro_model(420, 32);
+        let mut be = NativeBackend::paged(
+            model,
+            GenerationMode::KvCache,
+            PagedKvParams { block_tokens: 4, num_blocks: 4, watermark_per_active: 1 },
+        );
+        // Empty pool admits.
+        assert_eq!(be.admit_check(4, 4), AdmitVerdict::Admit);
+        // A session that could never fit is rejected outright.
+        assert!(matches!(be.admit_check(13, 10), AdmitVerdict::Reject(_)));
+        // Fill most of the pool; the watermark defers further admissions.
+        be.prefill(0, &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]).unwrap();
+        assert_eq!(be.admit_check(4, 4), AdmitVerdict::Defer);
+        be.release(0);
+        assert_eq!(be.admit_check(4, 4), AdmitVerdict::Admit);
     }
 }

@@ -18,9 +18,13 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 
-pub use engine::{DecodeBackend, GenerationMode, NativeBackend, PjrtBackend, StepInput};
+pub use engine::{
+    AdmitVerdict, DecodeBackend, GenerationMode, NativeBackend, PagedKvParams, PjrtBackend,
+    StepInput, StepResult,
+};
 pub use request::{
-    Event, FinishReason, GenRequest, GenStats, SamplingParams, ServeError, ServeMetrics,
+    EngineFault, Event, FinishReason, GenRequest, GenStats, SamplingParams, ServeError,
+    ServeMetrics,
 };
 pub use scheduler::{GenSession, Scheduler, SchedulerConfig};
 pub use server::{Server, StreamHandle};

@@ -90,18 +90,71 @@ impl GenRequest {
     }
 }
 
+/// Payload of [`ServeError::EngineFailure`]. KV faults carry the lane
+/// and sequence position they occurred at, so a bounds failure or pool
+/// exhaustion identifies — and fails — exactly the offending session.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EngineFault {
+    /// Lane the failure occurred on (None for engine-wide failures).
+    pub lane: Option<usize>,
+    /// Sequence position of the failure (None when not positional).
+    pub pos: Option<usize>,
+    pub msg: String,
+}
+
+impl EngineFault {
+    /// An engine-wide failure (construction, validation, whole-step).
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self { lane: None, pos: None, msg: msg.into() }
+    }
+
+    /// A per-lane KV fault at a known position.
+    pub fn at(lane: usize, pos: usize, msg: impl Into<String>) -> Self {
+        Self { lane: Some(lane), pos: Some(pos), msg: msg.into() }
+    }
+
+    /// Substring check on the message (test/diagnostic convenience).
+    pub fn contains(&self, needle: &str) -> bool {
+        self.msg.contains(needle)
+    }
+}
+
+impl fmt::Display for EngineFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let (Some(lane), Some(pos)) = (self.lane, self.pos) {
+            write!(f, " (lane {lane}, position {pos})")?;
+        }
+        Ok(())
+    }
+}
+
 /// Typed failure delivered to the waiting client as [`Event::Error`]
 /// (replacing the old `eprintln!` + silent waiter drop).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServeError {
-    /// The admission queue is full; the request was never enqueued.
+    /// The admission queue is full — or block-aware admission determined
+    /// the request cannot be served; the request was never started.
     Overloaded { queue_cap: usize },
-    /// The backend failed (construction, prefill, or a decode step).
-    EngineFailure(String),
+    /// The backend failed (construction, prefill, or a decode step);
+    /// per-lane KV faults carry lane + position.
+    EngineFailure(EngineFault),
     /// The client cancelled the request (queued or mid-generation).
     Cancelled,
     /// The request's deadline elapsed before completion.
     Timeout,
+}
+
+impl ServeError {
+    /// Engine-wide failure with no lane attribution.
+    pub fn engine(msg: impl Into<String>) -> Self {
+        ServeError::EngineFailure(EngineFault::new(msg))
+    }
+
+    /// Per-lane KV fault at a known position.
+    pub fn lane_fault(lane: usize, pos: usize, msg: impl Into<String>) -> Self {
+        ServeError::EngineFailure(EngineFault::at(lane, pos, msg))
+    }
 }
 
 impl fmt::Display for ServeError {
@@ -110,7 +163,7 @@ impl fmt::Display for ServeError {
             ServeError::Overloaded { queue_cap } => {
                 write!(f, "server overloaded (queue cap {queue_cap})")
             }
-            ServeError::EngineFailure(msg) => write!(f, "engine failure: {msg}"),
+            ServeError::EngineFailure(fault) => write!(f, "engine failure: {fault}"),
             ServeError::Cancelled => write!(f, "request cancelled"),
             ServeError::Timeout => write!(f, "request deadline exceeded"),
         }
@@ -176,11 +229,23 @@ pub struct ServeMetrics {
     pub prefills: usize,
     /// Highest number of simultaneously active lanes observed.
     pub peak_active: usize,
+    /// Paged-KV pool size in blocks (0 when the backend has no pool).
+    pub kv_blocks_total: usize,
+    /// Peak pool blocks referenced by live sessions.
+    pub kv_peak_blocks: usize,
+    /// Prompt positions served from resident blocks (prefix cache hits).
+    pub kv_prefix_hit_tokens: usize,
+    /// Prompt positions eligible for prefix matching.
+    pub kv_prefix_query_tokens: usize,
+    /// Copy-on-write block forks taken by diverging shared prefixes.
+    pub kv_cow_copies: usize,
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
     itl_ms: Vec<f64>,
     queue_depth: Vec<f64>,
     lane_occupancy: Vec<f64>,
+    /// Per-iteration fraction of pool blocks holding live session data.
+    kv_util: Vec<f64>,
     finalized: bool,
 }
 
@@ -234,6 +299,25 @@ impl ServeMetrics {
         }
     }
 
+    /// One per-iteration sample of paged-KV block utilization.
+    pub fn record_kv_sample(&mut self, utilization: f64) {
+        self.kv_util.push(utilization);
+    }
+
+    /// Absorb the backend's final pool counters (server shutdown).
+    pub fn set_kv_final(&mut self, stats: crate::runtime::kvpool::KvPoolStats) {
+        self.kv_blocks_total = stats.num_blocks;
+        self.kv_peak_blocks = stats.peak_used_blocks;
+        self.kv_prefix_hit_tokens = stats.prefix_hit_tokens;
+        self.kv_prefix_query_tokens = stats.prefix_query_tokens;
+        self.kv_cow_copies = stats.cow_copies;
+    }
+
+    /// True when the backend reported a paged-KV pool.
+    pub fn has_kv_pool(&self) -> bool {
+        self.kv_blocks_total > 0
+    }
+
     /// Sort the percentile vectors once; accessors index directly after
     /// this. The server calls it before returning metrics at shutdown.
     pub fn finalize(&mut self) {
@@ -243,6 +327,7 @@ impl ServeMetrics {
         self.itl_ms.sort_by(cmp);
         self.queue_depth.sort_by(cmp);
         self.lane_occupancy.sort_by(cmp);
+        self.kv_util.sort_by(cmp);
         self.finalized = true;
     }
 
@@ -288,6 +373,20 @@ impl ServeMetrics {
     /// Lane-occupancy percentile (active/lanes, sampled per iteration).
     pub fn occupancy_percentile(&self, p: f64) -> f64 {
         self.pct(&self.lane_occupancy, p)
+    }
+
+    /// Paged-KV block-utilization percentile (sampled per iteration).
+    pub fn block_util_percentile(&self, p: f64) -> f64 {
+        self.pct(&self.kv_util, p)
+    }
+
+    /// Fraction of eligible prompt positions served from resident blocks.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.kv_prefix_query_tokens == 0 {
+            0.0
+        } else {
+            self.kv_prefix_hit_tokens as f64 / self.kv_prefix_query_tokens as f64
+        }
     }
 }
 
@@ -377,8 +476,48 @@ mod tests {
     #[test]
     fn serve_error_displays() {
         assert!(ServeError::Overloaded { queue_cap: 3 }.to_string().contains("3"));
-        assert!(ServeError::EngineFailure("boom".into()).to_string().contains("boom"));
+        assert!(ServeError::engine("boom").to_string().contains("boom"));
         assert_eq!(ServeError::Cancelled.to_string(), "request cancelled");
         assert!(ServeError::Timeout.to_string().contains("deadline"));
+    }
+
+    #[test]
+    fn lane_faults_carry_lane_and_position() {
+        let e = ServeError::lane_fault(3, 17, "pool exhausted");
+        let ServeError::EngineFailure(fault) = &e else { panic!("wrong variant") };
+        assert_eq!((fault.lane, fault.pos), (Some(3), Some(17)));
+        assert!(fault.contains("exhausted"));
+        let s = e.to_string();
+        assert!(s.contains("lane 3") && s.contains("position 17"), "{s}");
+        // Engine-wide failures render without lane attribution.
+        assert!(!ServeError::engine("boom").to_string().contains("lane"));
+    }
+
+    #[test]
+    fn kv_metrics_aggregate_and_report() {
+        let mut m = ServeMetrics::default();
+        assert!(!m.has_kv_pool());
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.record_kv_sample(0.25);
+        m.record_kv_sample(0.75);
+        let stats = crate::runtime::kvpool::KvPoolStats {
+            num_blocks: 32,
+            used_blocks: 8,
+            free_blocks: 24,
+            idle_blocks: 4,
+            peak_used_blocks: 24,
+            prefix_hit_tokens: 30,
+            prefix_query_tokens: 40,
+            cow_copies: 2,
+        };
+        m.set_kv_final(stats);
+        m.finalize();
+        assert!(m.has_kv_pool());
+        assert_eq!(m.kv_blocks_total, 32);
+        assert_eq!(m.kv_peak_blocks, 24);
+        assert_eq!(m.kv_cow_copies, 2);
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((m.block_util_percentile(0.0) - 0.25).abs() < 1e-12);
+        assert!((m.block_util_percentile(1.0) - 0.75).abs() < 1e-12);
     }
 }

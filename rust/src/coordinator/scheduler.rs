@@ -13,7 +13,7 @@
 //! full wave, or a join while other lanes are already decoding, is
 //! admitted immediately.
 
-use super::engine::{DecodeBackend, StepInput};
+use super::engine::{AdmitVerdict, DecodeBackend, StepInput, StepResult};
 use super::request::{
     Event, FinishReason, GenRequest, GenStats, SamplingParams, ServeError, ServeMetrics,
 };
@@ -25,7 +25,9 @@ use std::time::{Duration, Instant};
 /// Scheduler policy knobs (`pifa serve --max-batch/--max-wait-ms/--queue-cap`).
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
-    /// Concurrent-session cap (clamped to the backend's lane count).
+    /// Concurrent-session cap (clamped to the backend's lane count);
+    /// `0` means "use the backend's lane cap" — for paged-KV backends
+    /// that is the block-pool-derived watermark cap, not a fixed number.
     pub max_batch: usize,
     /// Coalescing budget: how long a partial wave may wait on an idle
     /// scheduler before shipping anyway.
@@ -143,7 +145,11 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig, backend_lanes: usize) -> Self {
-        let n = cfg.max_batch.min(backend_lanes).max(1);
+        let n = if cfg.max_batch == 0 {
+            backend_lanes.max(1)
+        } else {
+            cfg.max_batch.min(backend_lanes).max(1)
+        };
         Self { cfg, queue: VecDeque::new(), lanes: (0..n).map(|_| None).collect() }
     }
 
@@ -302,10 +308,31 @@ impl Scheduler {
     }
 
     /// Admission that ignores the coalescing budget (shutdown drain).
+    /// Block-aware: the backend is consulted per request — admit while
+    /// free blocks suffice; a `Defer` leaves the queue intact (FIFO, so
+    /// a small late request cannot starve the front); a `Reject`
+    /// (request can never fit the pool) is a typed
+    /// [`ServeError::Overloaded`].
     pub fn admit_now(&mut self, backend: &mut dyn DecodeBackend, metrics: &mut ServeMetrics) {
         while let Some(lane) = self.free_lane() {
-            let Some(q) = self.queue.pop_front() else { break };
-            self.start_session(lane, q, backend, metrics);
+            let (prompt_len, budget) = match self.queue.front() {
+                Some(q) => (q.req.prompt.len(), q.req.max_new),
+                None => break,
+            };
+            match backend.admit_check(prompt_len, budget) {
+                AdmitVerdict::Admit => {
+                    let q = self.queue.pop_front().expect("front checked above");
+                    self.start_session(lane, q, backend, metrics);
+                }
+                AdmitVerdict::Defer => break,
+                AdmitVerdict::Reject(_reason) => {
+                    let q = self.queue.pop_front().expect("front checked above");
+                    metrics.rejected += 1;
+                    let _ = q.events.send(Event::Error(ServeError::Overloaded {
+                        queue_cap: self.cfg.queue_cap,
+                    }));
+                }
+            }
         }
     }
 
@@ -337,7 +364,7 @@ impl Scheduler {
             || req.prompt.len() >= backend.max_seq()
         {
             metrics.errors += 1;
-            let _ = events.send(Event::Error(ServeError::EngineFailure(format!(
+            let _ = events.send(Event::Error(ServeError::engine(format!(
                 "prompt length {} unsupported (max prompt {}, max seq {})",
                 req.prompt.len(),
                 backend.max_prompt(),
@@ -382,9 +409,8 @@ impl Scheduler {
             Err(e) => {
                 metrics.errors += 1;
                 backend.release(lane);
-                let _ = events.send(Event::Error(ServeError::EngineFailure(format!(
-                    "prefill failed: {e:#}"
-                ))));
+                let _ = events
+                    .send(Event::Error(ServeError::engine(format!("prefill failed: {e:#}"))));
             }
         }
     }
@@ -429,9 +455,26 @@ impl Scheduler {
         // Only successful iterations count as shared decode batches (a
         // failed step produced no tokens; `errors` records it instead).
         metrics.record_iteration(elapsed, active.len(), self.lanes.len(), self.queue.len());
-        for (row, &lane) in rows.iter().zip(active.iter()) {
+        if let Some(stats) = backend.kv_stats() {
+            metrics.record_kv_sample(stats.utilization());
+        }
+        for (res, &lane) in rows.into_iter().zip(active.iter()) {
+            let row = match res {
+                StepResult::Logits(row) => row,
+                StepResult::Fault { pos, msg } => {
+                    // Per-lane KV fault (bounds, pool exhaustion): fail
+                    // exactly this session; the other lanes' results are
+                    // valid and proceed below.
+                    let sess = self.lanes[lane].take().expect("active lane");
+                    backend.release(lane);
+                    metrics.errors += 1;
+                    let _ =
+                        sess.events.send(Event::Error(ServeError::lane_fault(lane, pos, msg)));
+                    continue;
+                }
+            };
             let sess = self.lanes[lane].as_mut().expect("active lane");
-            let tok = sess.sampling.pick(row, &mut sess.rng);
+            let tok = sess.sampling.pick(&row, &mut sess.rng);
             if !sess.emit(tok, metrics) {
                 // Client hung up mid-stream: implicit cancel frees the lane.
                 self.lanes[lane] = None;
@@ -461,7 +504,7 @@ impl Scheduler {
             if let Some(sess) = self.lanes[lane].take() {
                 backend.release(lane);
                 metrics.errors += 1;
-                let _ = sess.events.send(Event::Error(ServeError::EngineFailure(msg.clone())));
+                let _ = sess.events.send(Event::Error(ServeError::engine(msg.clone())));
             }
         }
     }
@@ -483,6 +526,10 @@ mod tests {
         released: Vec<usize>,
         fail_prefill: bool,
         fail_step_after: Option<usize>,
+        /// Steps on this lane return a per-lane [`StepResult::Fault`].
+        fault_lane: Option<usize>,
+        /// Scripted admission verdict (block-aware gate).
+        admit: AdmitVerdict,
     }
 
     impl MockBackend {
@@ -496,6 +543,8 @@ mod tests {
                 released: Vec::new(),
                 fail_prefill: false,
                 fail_step_after: None,
+                fault_lane: None,
+                admit: AdmitVerdict::Admit,
             }
         }
 
@@ -527,18 +576,31 @@ mod tests {
             Ok(self.logits_for(prompt))
         }
 
-        fn step(&mut self, inputs: &[StepInput<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        fn step(&mut self, inputs: &[StepInput<'_>]) -> anyhow::Result<Vec<StepResult>> {
             if let Some(n) = self.fail_step_after {
                 if self.steps.len() >= n {
                     bail!("mock step failure");
                 }
             }
             self.steps.push(inputs.iter().map(|i| i.lane).collect());
-            Ok(inputs.iter().map(|i| self.logits_for(i.seq)).collect())
+            Ok(inputs
+                .iter()
+                .map(|i| {
+                    if Some(i.lane) == self.fault_lane {
+                        StepResult::Fault { pos: i.seq.len(), msg: "mock KV fault".into() }
+                    } else {
+                        StepResult::Logits(self.logits_for(i.seq))
+                    }
+                })
+                .collect())
         }
 
         fn release(&mut self, lane: usize) {
             self.released.push(lane);
+        }
+
+        fn admit_check(&self, _prompt_len: usize, _max_new: usize) -> AdmitVerdict {
+            self.admit.clone()
         }
     }
 
@@ -842,5 +904,97 @@ mod tests {
             Some(Event::Error(ServeError::EngineFailure(_)))
         ));
         assert!(sched.is_idle());
+    }
+
+    /// Regression (paged KV): a per-lane KV fault — bounds failure or
+    /// pool exhaustion — fails exactly the offending session with lane +
+    /// position attribution; the other lanes' tokens land normally.
+    #[test]
+    fn lane_fault_fails_only_the_offending_session() {
+        let mut be = MockBackend::new(2);
+        be.fault_lane = Some(0);
+        let mut sched = Scheduler::new(cfg(2, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (ta, ra) = mpsc::channel();
+        let (tb, rb) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1, 2], 4), ta, &mut m);
+        sched.submit(GenRequest::new(2, vec![3, 4], 2), tb, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        sched.step(&mut be, &mut m);
+        // Lane 0's session failed with the typed lane+position fault...
+        let ea = drain(&ra);
+        let fault = ea
+            .iter()
+            .find_map(|e| match e {
+                Event::Error(ServeError::EngineFailure(f)) => Some(f.clone()),
+                _ => None,
+            })
+            .expect("lane-0 session must receive the fault");
+        assert_eq!(fault.lane, Some(0));
+        assert_eq!(fault.pos, Some(3), "prompt(2) + first emitted token");
+        assert!(fault.contains("mock KV fault"));
+        // ...while lane 1's session completed in the same iteration.
+        let eb = drain(&rb);
+        assert!(done_of(&eb).is_some(), "healthy lane must finish normally");
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.completed, 1);
+        assert!(be.released.contains(&0), "faulted lane released");
+        // The freed lane is immediately reusable.
+        be.fault_lane = None;
+        let (tc, rc) = mpsc::channel();
+        sched.submit(GenRequest::new(3, vec![5], 1), tc, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert!(done_of(&drain(&rc)).is_some(), "reclaimed lane serves again");
+        assert!(sched.is_idle());
+    }
+
+    /// Block-aware admission: a `Defer` verdict leaves the request
+    /// queued (no prefill, no error) until blocks free up.
+    #[test]
+    fn admission_defers_while_blocks_are_short() {
+        let mut be = MockBackend::new(2);
+        be.admit = AdmitVerdict::Defer;
+        let mut sched = Scheduler::new(cfg(2, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (tx, rx) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1, 2], 2), tx, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert!(be.prefills.is_empty(), "deferred admission must not prefill");
+        assert_eq!(sched.queue_len(), 1, "request stays queued");
+        assert!(drain(&rx).is_empty(), "no error for a deferred request");
+        // Blocks freed: the same request admits on the next wave.
+        be.admit = AdmitVerdict::Admit;
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert_eq!(be.prefills.len(), 1);
+        sched.step(&mut be, &mut m);
+        assert!(done_of(&drain(&rx)).is_some());
+    }
+
+    /// Block-aware admission: a request that can never fit the pool is
+    /// rejected with the typed Overloaded error.
+    #[test]
+    fn admission_reject_delivers_typed_overloaded() {
+        let mut be = MockBackend::new(1);
+        be.admit = AdmitVerdict::Reject("session needs 9 blocks, pool holds 4".into());
+        let mut sched = Scheduler::new(cfg(1, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (tx, rx) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1; 8], 30), tx, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert!(matches!(
+            drain(&rx).first(),
+            Some(Event::Error(ServeError::Overloaded { .. }))
+        ));
+        assert_eq!(m.rejected, 1);
+        assert!(sched.is_idle());
+    }
+
+    /// `max_batch == 0` resolves to the backend's lane cap (the paged
+    /// watermark cap) instead of a fixed number.
+    #[test]
+    fn zero_max_batch_uses_backend_lane_cap() {
+        let be = MockBackend::new(5);
+        let sched = Scheduler::new(cfg(0, Duration::ZERO, 16), be.lanes());
+        assert_eq!(sched.lanes.len(), 5);
     }
 }

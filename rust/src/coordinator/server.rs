@@ -34,9 +34,7 @@ impl StreamHandle {
     /// Block for the next event. A closed stream (server gone) surfaces
     /// as [`ServeError::EngineFailure`] rather than hanging.
     pub fn next(&self) -> Result<Event, ServeError> {
-        self.rx
-            .recv()
-            .map_err(|_| ServeError::EngineFailure("server stream closed".into()))
+        self.rx.recv().map_err(|_| ServeError::engine("server stream closed"))
     }
 
     /// Like [`StreamHandle::next`] with a per-event timeout.
@@ -45,7 +43,7 @@ impl StreamHandle {
             Ok(ev) => Ok(ev),
             Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::Timeout),
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                Err(ServeError::EngineFailure("server stream closed".into()))
+                Err(ServeError::engine("server stream closed"))
             }
         }
     }
@@ -110,8 +108,8 @@ impl Server {
                     while let Ok(m) = rx.recv() {
                         match m {
                             Msg::Submit(_, events) => {
-                                let _ = events
-                                    .send(Event::Error(ServeError::EngineFailure(msg.clone())));
+                                let _ =
+                                    events.send(Event::Error(ServeError::engine(msg.clone())));
                             }
                             Msg::Cancel(_) => {}
                             Msg::Shutdown(reply) => {
@@ -171,8 +169,8 @@ impl Server {
                                 // Counted under `errors` to match the
                                 // delivered error type.
                                 metrics.errors += 1;
-                                let _ = events.send(Event::Error(ServeError::EngineFailure(
-                                    "server shutting down".into(),
+                                let _ = events.send(Event::Error(ServeError::engine(
+                                    "server shutting down",
                                 )));
                             } else {
                                 sched.submit(req, events, &mut metrics);
@@ -197,6 +195,11 @@ impl Server {
                 }
             }
             if let Some(reply) = shutdown_reply {
+                // Final paged-KV counters (peak blocks, prefix hits,
+                // COW forks) ride out with the metrics snapshot.
+                if let Some(stats) = backend.kv_stats() {
+                    metrics.set_kv_final(stats);
+                }
                 metrics.finalize();
                 let _ = reply.send(metrics);
             }
@@ -239,7 +242,7 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::{GenerationMode, NativeBackend, StepInput};
+    use crate::coordinator::engine::{GenerationMode, NativeBackend, StepInput, StepResult};
     use crate::coordinator::request::{FinishReason, SamplingParams};
     use crate::linalg::Rng;
     use crate::model::config::ModelConfig;
@@ -273,7 +276,7 @@ mod tests {
         fn prefill(&mut self, lane: usize, prompt: &[usize]) -> Result<Vec<f32>> {
             self.inner.prefill(lane, prompt)
         }
-        fn step(&mut self, inputs: &[StepInput<'_>]) -> Result<Vec<Vec<f32>>> {
+        fn step(&mut self, inputs: &[StepInput<'_>]) -> Result<Vec<StepResult>> {
             std::thread::sleep(self.delay);
             self.inner.step(inputs)
         }
@@ -506,7 +509,7 @@ mod tests {
                 row[prompt.len() % 8] = 1.0;
                 Ok(row)
             }
-            fn step(&mut self, _inputs: &[StepInput<'_>]) -> Result<Vec<Vec<f32>>> {
+            fn step(&mut self, _inputs: &[StepInput<'_>]) -> Result<Vec<StepResult>> {
                 anyhow::bail!("decode exploded")
             }
             fn release(&mut self, _lane: usize) {}
@@ -635,6 +638,11 @@ mod tests {
         assert_eq!(metrics.tokens_generated, 24);
         assert!(metrics.throughput() > 0.0);
         assert!(metrics.batches > 0);
+        // The native backend serves through the paged KV pool: block
+        // utilization and prefix-sharing counters surface in metrics.
+        assert!(metrics.has_kv_pool(), "paged-KV stats missing from ServeMetrics");
+        assert!(metrics.kv_peak_blocks > 0);
+        assert!(metrics.block_util_percentile(1.0) > 0.0);
     }
 
     /// PJRT path (artifact-gated). The skip is explicit and loud; the

@@ -13,9 +13,15 @@
 //! pifa serve    --model tiny-s --flavour dense|pifa [--method NAME]
 //!               [--requests N] [--no-kv] [--native]
 //!               [--max-batch N] [--max-wait-ms MS] [--queue-cap N]
-//!               [--temperature F] [--top-k N]
+//!               [--temperature F] [--top-k N] [--kv-lanes N]
 //!               (+ the compress stage overrides; falls back to the
-//!               Rust-native backend when PJRT/artifacts are absent)
+//!               Rust-native backend when PJRT/artifacts are absent).
+//!               --max-batch 0 (default) uses the backend's lane cap —
+//!               for the paged-KV native backend that is the block-pool
+//!               watermark cap, so more concurrent sessions fit than the
+//!               fixed-lane baseline at equal memory; --kv-lanes sizes
+//!               the pool to that many contiguous max_seq lanes' bytes.
+//!               Block utilization + prefix-hit-rate print at shutdown.
 //! pifa tables   <fig1|tab2|tab3|...|all>   (same generators as cargo bench)
 //! pifa bench-kernels [--smoke] [--out PATH]
 //!               — decode-path kernel microbench (dense vs low-rank vs
@@ -226,8 +232,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         flags.get("requests").map(String::as_str).unwrap_or("8").parse::<usize>()?.max(1);
     let max_new: usize = flags.get("max-new").map(String::as_str).unwrap_or("16").parse()?;
     let use_kv = !flags.contains_key("no-kv");
-    // Scheduler knobs (DESIGN.md §6).
-    let max_batch: usize = flags.get("max-batch").map(String::as_str).unwrap_or("4").parse()?;
+    // Scheduler knobs (DESIGN.md §6). max_batch 0 = backend lane cap.
+    let max_batch: usize = flags.get("max-batch").map(String::as_str).unwrap_or("0").parse()?;
+    // Paged-KV pool sizing (DESIGN.md §8): the pool holds the bytes of
+    // this many contiguous max_seq lanes.
+    let kv_lanes: usize =
+        flags.get("kv-lanes").map(String::as_str).unwrap_or("4").parse::<usize>()?.max(1);
     let max_wait_ms: u64 = flags.get("max-wait-ms").map(String::as_str).unwrap_or("5").parse()?;
     let queue_cap: usize = flags.get("queue-cap").map(String::as_str).unwrap_or("64").parse()?;
     // Sampling knobs (greedy by default).
@@ -283,9 +293,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     };
     let server = if native {
         let served = served.clone();
+        // KV mode sizes the paged pool from --kv-lanes (the lane cap then
+        // comes from the block watermark); no-KV mode has no pool, so the
+        // lane slots must honour an explicit --max-batch directly.
+        let native_lanes = if use_kv { kv_lanes } else { kv_lanes.max(max_batch) };
         Server::spawn(
             move || {
-                Ok(Box::new(NativeBackend::new(served, mode, max_batch))
+                Ok(Box::new(NativeBackend::new(served, mode, native_lanes))
                     as Box<dyn DecodeBackend>)
             },
             scfg,
@@ -364,6 +378,18 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         metrics.occupancy_percentile(0.5) * 100.0,
         served_mem as f64 / 1e6,
     );
+    if metrics.has_kv_pool() {
+        println!(
+            "kv: paged pool {} blocks (peak {} in use) | block util p50 {:.0}% p95 {:.0}% | prefix hit rate {:.0}% | cow forks {} | peak sessions {}",
+            metrics.kv_blocks_total,
+            metrics.kv_peak_blocks,
+            metrics.block_util_percentile(0.5) * 100.0,
+            metrics.block_util_percentile(0.95) * 100.0,
+            metrics.prefix_hit_rate() * 100.0,
+            metrics.kv_cow_copies,
+            metrics.peak_active,
+        );
+    }
     Ok(())
 }
 

@@ -27,4 +27,4 @@ pub mod transformer;
 
 pub use config::ModelConfig;
 pub use linear::{LinearGrad, LinearRepr};
-pub use transformer::{Block, KvCache, ModuleKind, Transformer};
+pub use transformer::{Block, KvCache, KvStore, KvStoreFull, ModuleKind, Transformer};

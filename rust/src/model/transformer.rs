@@ -130,6 +130,79 @@ impl KvCache {
     }
 }
 
+/// A KV store could not hold another position (contiguous capacity
+/// reached, or the paged block pool is exhausted).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KvStoreFull {
+    /// The sequence position that could not be reserved.
+    pub pos: usize,
+    pub detail: String,
+}
+
+impl std::fmt::Display for KvStoreFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV store full at position {}: {}", self.pos, self.detail)
+    }
+}
+
+impl std::error::Error for KvStoreFull {}
+
+/// Storage abstraction the KV-cache decode path reads and writes
+/// through. Implemented by the contiguous [`KvCache`] and by the paged
+/// block-table views (`runtime::kvpool`), so both layouts run the *same*
+/// decode arithmetic — the bitwise-equivalence contract
+/// `rust/tests/kv_differential.rs` checks.
+pub trait KvStore {
+    /// Tokens currently cached (the next write position).
+    fn len(&self) -> usize;
+    /// No tokens cached yet.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Reserve storage for one more position (holding `token`),
+    /// advancing [`KvStore::len`] by one. The row contents are then
+    /// filled per layer via [`KvStore::write_row`] at the old length.
+    fn reserve(&mut self, token: usize) -> Result<(), KvStoreFull>;
+    /// K row for `(layer, pos)`; at least `dim` wide, only the leading
+    /// projection width is meaningful.
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32];
+    /// V row for `(layer, pos)`.
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32];
+    /// Install the (possibly head-pruned, `k.len() <= dim`) K/V rows for
+    /// a reserved position.
+    fn write_row(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+}
+
+impl KvStore for KvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn reserve(&mut self, _token: usize) -> Result<(), KvStoreFull> {
+        if self.len >= self.capacity {
+            return Err(KvStoreFull {
+                pos: self.len,
+                detail: format!("contiguous KV capacity {} reached", self.capacity),
+            });
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.k[layer].row(pos)
+    }
+
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.v[layer].row(pos)
+    }
+
+    fn write_row(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.k[layer].row_mut(pos)[..k.len()].copy_from_slice(k);
+        self.v[layer].row_mut(pos)[..v.len()].copy_from_slice(v);
+    }
+}
+
 /// The full model.
 #[derive(Clone)]
 pub struct Transformer {
@@ -235,7 +308,18 @@ impl Transformer {
     /// Single-token decode step with KV cache; returns logits `(1 x vocab)`.
     pub fn decode_step(&self, token: usize, cache: &mut KvCache) -> Mat<f32> {
         assert!(cache.len < cache.capacity, "KV cache full");
-        let pos = cache.len;
+        self.decode_step_kv(token, cache).expect("KV cache full")
+    }
+
+    /// Single-token decode step through any [`KvStore`] (contiguous or
+    /// paged); returns logits `(1 x vocab)` or a typed capacity error.
+    pub fn decode_step_kv<S: KvStore>(
+        &self,
+        token: usize,
+        store: &mut S,
+    ) -> Result<Mat<f32>, KvStoreFull> {
+        let pos = store.len();
+        store.reserve(token)?;
         let mut h = Mat::zeros(1, self.cfg.dim);
         h.row_mut(0).copy_from_slice(self.embed.row(token));
         for (li, block) in self.blocks.iter().enumerate() {
@@ -245,14 +329,13 @@ impl Transformer {
                 &self.rope,
                 self.cfg.n_heads,
                 self.cfg.norm_eps,
-                &mut cache.k[li],
-                &mut cache.v[li],
+                store,
+                li,
                 pos,
             );
         }
-        cache.len += 1;
         let (xf, _) = ops::rmsnorm(&h, &self.final_norm, self.cfg.norm_eps);
-        linalg::matmul_nt(&xf, &self.head)
+        Ok(linalg::matmul_nt(&xf, &self.head))
     }
 
     /// Greedy generation (serving path reference implementation).
@@ -463,16 +546,18 @@ pub fn block_forward(
     h_out
 }
 
-/// One block decode step with KV cache (single new token at `pos`).
+/// One block decode step (single new token at `pos`), reading and
+/// writing the KV rows through a [`KvStore`] — the same arithmetic for
+/// the contiguous and paged layouts.
 #[allow(clippy::too_many_arguments)]
-fn block_decode_step(
+fn block_decode_step<S: KvStore>(
     block: &Block,
     h_in: &Mat<f32>,
     rope: &RopeTable,
     n_heads: usize,
     eps: f32,
-    k_cache: &mut Mat<f32>,
-    v_cache: &mut Mat<f32>,
+    store: &mut S,
+    layer: usize,
     pos: usize,
 ) -> Mat<f32> {
     let (x, _) = ops::rmsnorm(h_in, &block.attn_norm, eps);
@@ -492,8 +577,7 @@ fn block_decode_step(
         q.set_block(0, h * hd, &qh);
         k.set_block(0, h * hd, &kh);
     }
-    k_cache.row_mut(pos)[..dq].copy_from_slice(k.row(0));
-    v_cache.row_mut(pos)[..dq].copy_from_slice(v.row(0));
+    store.write_row(layer, pos, k.row(0), v.row(0));
 
     let mut mix = Mat::zeros(1, dq);
     for h in 0..n_heads {
@@ -501,8 +585,8 @@ fn block_decode_step(
         let mut scores = vec![0f32; pos + 1];
         let qh = &q.row(0)[h * hd..(h + 1) * hd];
         for (p, score) in scores.iter_mut().enumerate() {
-            let kh = &k_cache.row(p)[h * hd..(h + 1) * hd];
-            *score = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+            let kh = &store.k_row(layer, p)[h * hd..(h + 1) * hd];
+            *score = qh.iter().zip(kh.iter()).map(|(a, b)| a * b).sum::<f32>() * scale;
         }
         // softmax
         let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
@@ -516,8 +600,8 @@ fn block_decode_step(
         }
         let out = &mut mix.row_mut(0)[h * hd..(h + 1) * hd];
         for (p, &w) in scores.iter().enumerate() {
-            let vh = &v_cache.row(p)[h * hd..(h + 1) * hd];
-            for (o, vv) in out.iter_mut().zip(vh) {
+            let vh = &store.v_row(layer, p)[h * hd..(h + 1) * hd];
+            for (o, vv) in out.iter_mut().zip(vh.iter()) {
                 *o += w * vv;
             }
         }

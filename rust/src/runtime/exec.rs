@@ -1,6 +1,8 @@
 //! Binds a Rust [`Transformer`] checkpoint to an AOT artifact and drives
 //! prefill / decode through PJRT.
 
+use super::kernels::gather;
+use super::kvpool::{BlockPool, KvPoolConfig, KvPoolStats, SeqKv};
 use super::loader::{literal_f32, literal_i32, Engine};
 use super::manifest::{ArtifactKind, TensorSpec};
 use crate::model::transformer::{ModuleKind, Transformer};
@@ -246,140 +248,300 @@ impl ModelRunner {
     }
 }
 
-/// Per-lane view over the merged `(L, B, S, d)` decode KV cache.
+/// Typed KV failure on the lane path, carrying the lane and sequence
+/// position — so the serving layer can fail exactly the offending
+/// session instead of killing the whole engine loop.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LaneKvError {
+    pub lane: usize,
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for LaneKvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "lane {} KV failure at position {}: {}", self.lane, self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for LaneKvError {}
+
+/// Per-lane view over the decode KV cache, backed by the paged
+/// [`BlockPool`] (DESIGN.md §8).
 ///
-/// The decode artifact is lowered for a static batch `B`; continuous
-/// batching needs each batch row ("lane") to carry an independent
-/// session. `LaneKv` keeps the merged cache as host buffers so one lane
-/// can be written (prefill), advanced (decode absorb), or reset
-/// (cancel / finish) without touching the other lanes' state.
+/// The decode artifact is lowered for a static batch `B` and a merged
+/// `(L, B, S, d)` cache layout; continuous batching needs each batch row
+/// ("lane") to carry an independent session. `LaneKv` keeps one block
+/// table per lane — so lanes sharing a prompt prefix map the same
+/// physical blocks — and materializes the merged contiguous literal only
+/// at decode-call time via the kernel-layer gather
+/// ([`gather::gather_merged`]); positions a lane has not written are
+/// zero in the merged view.
 pub struct LaneKv {
-    k: Vec<f32>,
-    v: Vec<f32>,
-    /// Per-lane sequence position (tokens currently cached).
-    pub pos: Vec<usize>,
+    pool: BlockPool,
+    tables: Vec<Option<SeqKv>>,
     layers: usize,
-    lanes: usize,
     max_seq: usize,
     dim: usize,
+    /// Zero row returned for unwritten positions by [`LaneKv::k_row`].
+    zeros: Vec<f32>,
 }
 
 impl LaneKv {
+    /// Pool sized to the same bytes as the old contiguous
+    /// `layers × lanes × max_seq × dim` cache.
     pub fn new(layers: usize, lanes: usize, max_seq: usize, dim: usize) -> Self {
-        let n = layers * lanes * max_seq * dim;
+        let cfg = KvPoolConfig::matching_contiguous(layers, dim, lanes.max(1), max_seq);
         Self {
-            k: vec![0f32; n],
-            v: vec![0f32; n],
-            pos: vec![0; lanes],
+            pool: BlockPool::new(cfg),
+            tables: (0..lanes.max(1)).map(|_| None).collect(),
             layers,
-            lanes,
             max_seq,
             dim,
+            zeros: vec![0f32; dim],
         }
     }
 
     pub fn lanes(&self) -> usize {
-        self.lanes
+        self.tables.len()
     }
 
-    /// Start offset of `(layer, lane, seq_pos)` in the merged buffer.
-    fn offset(&self, layer: usize, lane: usize, seq_pos: usize) -> usize {
-        ((layer * self.lanes + lane) * self.max_seq + seq_pos) * self.dim
+    /// Tokens currently cached on a lane (0 when unclaimed).
+    pub fn pos(&self, lane: usize) -> usize {
+        self.tables.get(lane).and_then(|t| t.as_ref()).map_or(0, |t| t.len())
+    }
+
+    /// Lanes currently holding a session table.
+    pub fn active_lanes(&self) -> usize {
+        self.tables.iter().filter(|t| t.is_some()).count()
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        self.pool.stats()
+    }
+
+    /// Blocks an allocation could obtain right now.
+    pub fn allocatable_blocks(&self) -> usize {
+        self.pool.allocatable_blocks()
+    }
+
+    /// Blocks needed for `tokens` positions (ignoring prefix sharing).
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        self.pool.blocks_for(tokens)
+    }
+
+    fn fault(lane: usize, pos: usize, msg: impl Into<String>) -> LaneKvError {
+        LaneKvError { lane, pos, msg: msg.into() }
     }
 
     /// Install a single-sequence `(L, 1, S, d)` prefill cache (the layout
-    /// [`ModelRunner::prefill`] returns) into one lane of the merged
-    /// cache, and set that lane's position.
-    pub fn write_lane(&mut self, lane: usize, k_seq: &[f32], v_seq: &[f32], pos: usize) -> Result<()> {
-        if lane >= self.lanes {
-            bail!("lane {lane} out of range (lanes {})", self.lanes);
+    /// [`ModelRunner::prefill`] returns) for `tokens` into one lane.
+    /// Rows already resident for a shared prompt prefix are reused
+    /// instead of copied; returns how many leading positions were shared.
+    pub fn write_lane(
+        &mut self,
+        lane: usize,
+        tokens: &[usize],
+        k_seq: &[f32],
+        v_seq: &[f32],
+        pos: usize,
+    ) -> Result<usize, LaneKvError> {
+        if lane >= self.tables.len() {
+            return Err(Self::fault(
+                lane,
+                pos,
+                format!("lane out of range (lanes {})", self.tables.len()),
+            ));
         }
         let stride = self.max_seq * self.dim;
         let want = self.layers * stride;
         if k_seq.len() != want || v_seq.len() != want {
-            bail!(
-                "per-lane cache has {} elements, artifact wants {want} (L*S*d)",
-                k_seq.len()
-            );
+            return Err(Self::fault(
+                lane,
+                pos,
+                format!(
+                    "per-lane cache has {} elements, artifact wants {want} (L*S*d)",
+                    k_seq.len()
+                ),
+            ));
         }
         if pos > self.max_seq {
-            bail!("lane position {pos} exceeds max_seq {}", self.max_seq);
+            return Err(Self::fault(
+                lane,
+                pos,
+                format!("lane position exceeds max_seq {}", self.max_seq),
+            ));
+        }
+        if tokens.len() != pos {
+            return Err(Self::fault(
+                lane,
+                pos,
+                format!("{} prompt tokens for position {pos}", tokens.len()),
+            ));
+        }
+        // Stale table (re-prefill without reset): release it first.
+        if let Some(old) = self.tables[lane].take() {
+            self.pool.release(old);
+        }
+        let (mut seq, reused) = self.pool.begin(tokens);
+        for t in reused..pos {
+            if let Err(e) = self.pool.append(&mut seq, tokens[t]) {
+                let p = e.pos();
+                let msg = e.to_string();
+                self.pool.release(seq);
+                return Err(Self::fault(lane, p, msg));
+            }
+            for li in 0..self.layers {
+                let src = li * stride + t * self.dim;
+                self.pool
+                    .k_row_mut(&seq, li, t)
+                    .copy_from_slice(&k_seq[src..src + self.dim]);
+                self.pool
+                    .v_row_mut(&seq, li, t)
+                    .copy_from_slice(&v_seq[src..src + self.dim]);
+            }
+        }
+        self.tables[lane] = Some(seq);
+        Ok(reused)
+    }
+
+    /// Free one lane's blocks (session finished/cancelled); other lanes
+    /// — including ones sharing prefix blocks — are untouched.
+    pub fn reset_lane(&mut self, lane: usize) {
+        if let Some(seq) = self.tables.get_mut(lane).and_then(|t| t.take()) {
+            self.pool.release(seq);
+        }
+    }
+
+    /// Absorb one lane's freshly decoded KV row for `token` at `pos`
+    /// out of the merged `(L, B, S, d)` decode output views.
+    pub fn absorb_lane(
+        &mut self,
+        lane: usize,
+        token: usize,
+        k_new: &[f32],
+        v_new: &[f32],
+        pos: usize,
+    ) -> Result<(), LaneKvError> {
+        let lanes = self.tables.len();
+        if lane >= lanes {
+            return Err(Self::fault(lane, pos, format!("lane out of range (lanes {lanes})")));
+        }
+        if pos >= self.max_seq {
+            return Err(Self::fault(
+                lane,
+                pos,
+                format!("absorb position exceeds max_seq {}", self.max_seq),
+            ));
+        }
+        let want = self.layers * lanes * self.max_seq * self.dim;
+        if k_new.len() != want || v_new.len() != want {
+            return Err(Self::fault(
+                lane,
+                pos,
+                format!("decode KV output has {} elements, want {want}", k_new.len()),
+            ));
+        }
+        let cur = self.pos(lane);
+        if self.tables[lane].is_none() || cur != pos {
+            return Err(Self::fault(
+                lane,
+                pos,
+                format!("lane holds {cur} positions, artifact stepped at {pos}"),
+            ));
+        }
+        let mut seq = self.tables[lane].take().expect("checked above");
+        if let Err(e) = self.pool.append(&mut seq, token) {
+            let p = e.pos();
+            let msg = e.to_string();
+            self.pool.release(seq);
+            return Err(Self::fault(lane, p, msg));
         }
         for li in 0..self.layers {
-            let src = li * stride..(li + 1) * stride;
-            let dst = self.offset(li, lane, 0);
-            self.k[dst..dst + stride].copy_from_slice(&k_seq[src.clone()]);
-            self.v[dst..dst + stride].copy_from_slice(&v_seq[src]);
+            let src = ((li * lanes + lane) * self.max_seq + pos) * self.dim;
+            self.pool
+                .k_row_mut(&seq, li, pos)
+                .copy_from_slice(&k_new[src..src + self.dim]);
+            self.pool
+                .v_row_mut(&seq, li, pos)
+                .copy_from_slice(&v_new[src..src + self.dim]);
         }
-        self.pos[lane] = pos;
+        self.tables[lane] = Some(seq);
         Ok(())
     }
 
-    /// Zero one lane and reset its position (session finished/cancelled);
-    /// the other lanes are untouched.
-    pub fn reset_lane(&mut self, lane: usize) {
-        if lane >= self.lanes {
-            return;
-        }
-        let stride = self.max_seq * self.dim;
-        for li in 0..self.layers {
-            let dst = self.offset(li, lane, 0);
-            self.k[dst..dst + stride].fill(0.0);
-            self.v[dst..dst + stride].fill(0.0);
-        }
-        self.pos[lane] = 0;
-    }
-
-    /// After a decode step at shared position `pos`, copy back the newly
-    /// written KV rows for exactly the given lanes (the artifact writes a
-    /// row for *every* batch slot; inactive lanes must not be absorbed)
-    /// and advance their positions.
+    /// Absorb a decode step for the given `(lane, token)` pairs at the
+    /// shared position `pos` (the artifact writes a row for *every*
+    /// batch slot; inactive lanes must not be absorbed). A per-lane
+    /// fault does not abandon the remaining lanes — every lane is
+    /// absorbed and the *first* fault is returned — matching the
+    /// only-the-offending-session-fails contract.
     pub fn absorb_step(
         &mut self,
-        active_lanes: &[usize],
+        active: &[(usize, usize)],
         k_new: &xla::Literal,
         v_new: &xla::Literal,
         pos: usize,
-    ) -> Result<()> {
-        if pos >= self.max_seq {
-            bail!("absorb position {pos} exceeds max_seq {}", self.max_seq);
-        }
-        // Borrowed views of the decode output: the per-step cost is the
-        // L * d row copies below, not two full-cache materializations.
-        let kv = literal_f32_view(k_new)?;
-        let vv = literal_f32_view(v_new)?;
-        let want = self.layers * self.lanes * self.max_seq * self.dim;
-        if kv.len() != want || vv.len() != want {
-            bail!("decode KV output has {} elements, want {want}", kv.len());
-        }
-        for &lane in active_lanes {
-            if lane >= self.lanes {
-                bail!("lane {lane} out of range (lanes {})", self.lanes);
+    ) -> Result<(), LaneKvError> {
+        // A view-borrow failure predates any lane work; attribute it to
+        // the first requested lane rather than inventing a sentinel.
+        let lane0 = active.first().map_or(0, |&(lane, _)| lane);
+        let kv = literal_f32_view(k_new)
+            .map_err(|e| Self::fault(lane0, pos, format!("borrowing K view: {e:#}")))?;
+        let vv = literal_f32_view(v_new)
+            .map_err(|e| Self::fault(lane0, pos, format!("borrowing V view: {e:#}")))?;
+        let mut first_err: Option<LaneKvError> = None;
+        for &(lane, token) in active {
+            if let Err(e) = self.absorb_lane(lane, token, kv, vv, pos) {
+                first_err.get_or_insert(e);
             }
-            for li in 0..self.layers {
-                let at = self.offset(li, lane, pos);
-                self.k[at..at + self.dim].copy_from_slice(&kv[at..at + self.dim]);
-                self.v[at..at + self.dim].copy_from_slice(&vv[at..at + self.dim]);
-            }
-            self.pos[lane] = pos + 1;
         }
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
-    /// Merged K cache as a `(L, B, S, d)` literal for the decode artifact.
+    /// Gather the block tables into contiguous merged `(L, B, S, d)`
+    /// K and V buffers (unwritten positions zero).
+    fn merged(&self) -> (Vec<f32>, Vec<f32>) {
+        let lanes = self.tables.len();
+        let n = self.layers * lanes * self.max_seq * self.dim;
+        let mut k = vec![0f32; n];
+        let mut v = vec![0f32; n];
+        let tables: Vec<Option<&SeqKv>> = self.tables.iter().map(|t| t.as_ref()).collect();
+        gather::gather_merged(&self.pool, &tables, self.max_seq, &mut k, &mut v);
+        (k, v)
+    }
+
+    /// Merged K and V caches as `(L, B, S, d)` literals for the decode
+    /// artifact (one gather for both).
+    pub fn merged_literals(&self) -> Result<(xla::Literal, xla::Literal)> {
+        let (k, v) = self.merged();
+        let dims = [self.layers, self.tables.len(), self.max_seq, self.dim];
+        Ok((literal_f32(&k, &dims)?, literal_f32(&v, &dims)?))
+    }
+
+    /// Merged K cache as a `(L, B, S, d)` literal. Test/diagnostic
+    /// accessor: it gathers *both* slabs and discards V — the decode
+    /// path uses [`LaneKv::merged_literals`], which pays one gather for
+    /// the pair.
     pub fn k_literal(&self) -> Result<xla::Literal> {
-        literal_f32(&self.k, &[self.layers, self.lanes, self.max_seq, self.dim])
+        Ok(self.merged_literals()?.0)
     }
 
-    /// Merged V cache as a `(L, B, S, d)` literal for the decode artifact.
+    /// Merged V cache as a `(L, B, S, d)` literal (see [`LaneKv::k_literal`]).
     pub fn v_literal(&self) -> Result<xla::Literal> {
-        literal_f32(&self.v, &[self.layers, self.lanes, self.max_seq, self.dim])
+        Ok(self.merged_literals()?.1)
     }
 
-    /// Host K row `(layer, lane, seq_pos)` — test/diagnostic accessor.
+    /// Host K row `(layer, lane, seq_pos)` — test/diagnostic accessor;
+    /// zeros for unclaimed lanes / unwritten positions.
     pub fn k_row(&self, layer: usize, lane: usize, seq_pos: usize) -> &[f32] {
-        let at = self.offset(layer, lane, seq_pos);
-        &self.k[at..at + self.dim]
+        match self.tables.get(lane).and_then(|t| t.as_ref()) {
+            Some(t) if seq_pos < t.len() => self.pool.k_row(t, layer, seq_pos),
+            _ => &self.zeros,
+        }
     }
 }
 
@@ -459,21 +621,23 @@ mod tests {
     }
 
     #[test]
-    fn lane_kv_write_matches_legacy_merge_layout() {
+    fn lane_kv_merged_layout_holds_written_rows_zeros_elsewhere() {
         let (l, b, s, d) = (2usize, 3usize, 4usize, 2usize);
         let mut kv = LaneKv::new(l, b, s, d);
         let k0 = seq_cache(l, s, d, 1000.0);
         let k2 = seq_cache(l, s, d, 9000.0);
-        kv.write_lane(0, &k0, &k0, 3).unwrap();
-        kv.write_lane(2, &k2, &k2, 1).unwrap();
-        assert_eq!(kv.pos, vec![3, 0, 1]);
-        // Reference: the merge loop the old GenerationEngine::run_kv used.
+        kv.write_lane(0, &[11, 12, 13], &k0, &k0, 3).unwrap();
+        kv.write_lane(2, &[21], &k2, &k2, 1).unwrap();
+        assert_eq!((kv.pos(0), kv.pos(1), kv.pos(2)), (3, 0, 1));
+        // Reference merge: only the `pos` valid rows per lane land in the
+        // merged `(L, B, S, d)` layout; everything else is zero.
         let stride = s * d;
         let mut want = vec![0f32; l * b * stride];
         for li in 0..l {
-            for (lane, src) in [(0usize, &k0), (2usize, &k2)] {
+            for (lane, src, pos) in [(0usize, &k0, 3usize), (2, &k2, 1)] {
                 let dst = (li * b + lane) * stride;
-                want[dst..dst + stride].copy_from_slice(&src[li * stride..(li + 1) * stride]);
+                let n = pos * d;
+                want[dst..dst + n].copy_from_slice(&src[li * stride..li * stride + n]);
             }
         }
         assert_eq!(kv.k_literal().unwrap().to_vec::<f32>().unwrap(), want);
@@ -486,14 +650,14 @@ mod tests {
         let mut kv = LaneKv::new(l, b, s, d);
         let c0 = seq_cache(l, s, d, 100.0);
         let c1 = seq_cache(l, s, d, 500.0);
-        kv.write_lane(0, &c0, &c0, 2).unwrap();
-        kv.write_lane(1, &c1, &c1, 3).unwrap();
+        kv.write_lane(0, &[1, 2], &c0, &c0, 2).unwrap();
+        kv.write_lane(1, &[3, 4, 5], &c1, &c1, 3).unwrap();
         kv.reset_lane(0);
-        assert_eq!(kv.pos, vec![0, 3]);
+        assert_eq!((kv.pos(0), kv.pos(1)), (0, 3));
         assert!(kv.k_row(0, 0, 0).iter().all(|&x| x == 0.0));
         assert_eq!(kv.k_row(0, 1, 0), &c1[0..d]);
         // Re-prefetching the freed lane works without disturbing lane 1.
-        kv.write_lane(0, &c0, &c0, 1).unwrap();
+        kv.write_lane(0, &[1], &c0, &c0, 1).unwrap();
         assert_eq!(kv.k_row(1, 1, 2), &c1[(s + 2) * d..(s + 3) * d]);
     }
 
@@ -502,29 +666,63 @@ mod tests {
         let (l, b, s, d) = (1usize, 2usize, 3usize, 2usize);
         let mut kv = LaneKv::new(l, b, s, d);
         let c = seq_cache(l, s, d, 0.0);
-        kv.write_lane(0, &c, &c, 1).unwrap();
-        kv.write_lane(1, &c, &c, 1).unwrap();
+        // Different prompts so the lanes do not share prefix blocks.
+        kv.write_lane(0, &[5], &c, &c, 1).unwrap();
+        kv.write_lane(1, &[6], &c, &c, 1).unwrap();
         // Fake decode output: every element 7.0 (the artifact writes all
         // batch rows at `pos`, active or not).
         let full = vec![7.0f32; l * b * s * d];
         let lit = literal_f32(&full, &[l, b, s, d]).unwrap();
-        kv.absorb_step(&[1], &lit, &lit, 1).unwrap();
-        assert_eq!(kv.pos, vec![1, 2]);
-        // Lane 1 absorbed the row at pos=1; lane 0 kept its old value.
+        kv.absorb_step(&[(1, 9)], &lit, &lit, 1).unwrap();
+        assert_eq!((kv.pos(0), kv.pos(1)), (1, 2));
+        // Lane 1 absorbed the row at pos=1; lane 0 has no row there.
         assert_eq!(kv.k_row(0, 1, 1), &[7.0, 7.0]);
-        assert_eq!(kv.k_row(0, 0, 1), &c[d..2 * d]);
+        assert!(kv.k_row(0, 0, 1).iter().all(|&x| x == 0.0));
+        assert_eq!(kv.k_row(0, 0, 0), &c[0..d], "lane 0 prefill row intact");
     }
 
     #[test]
-    fn lane_kv_rejects_bad_shapes() {
+    fn lane_kv_shares_prompt_prefix_blocks_across_lanes() {
+        let (l, b, s, d) = (1usize, 3usize, 32usize, 2usize);
+        let mut kv = LaneKv::new(l, b, s, d);
+        let c = seq_cache(l, s, d, 3000.0);
+        let prompt: Vec<usize> = (40..40 + 20).collect();
+        kv.write_lane(0, &prompt, &c, &c, 20).unwrap();
+        let used_one = kv.stats().used_blocks;
+        let reused = kv.write_lane(1, &prompt, &c, &c, 20).unwrap();
+        assert_eq!(reused, 19, "all but the final prompt position shared");
+        assert!(
+            kv.stats().used_blocks <= used_one + 1,
+            "shared prefix must not duplicate blocks: {} -> {}",
+            used_one,
+            kv.stats().used_blocks
+        );
+        assert_eq!(kv.k_row(0, 0, 5), kv.k_row(0, 1, 5), "same physical rows");
+        kv.reset_lane(0);
+        // Lane 1 still reads the shared rows after lane 0 released.
+        assert_eq!(kv.k_row(0, 1, 5), &c[5 * d..6 * d]);
+    }
+
+    #[test]
+    fn lane_kv_errors_are_typed_with_lane_and_position() {
         let mut kv = LaneKv::new(1, 2, 3, 2);
-        assert!(kv.write_lane(5, &[0.0; 6], &[0.0; 6], 0).is_err());
-        assert!(kv.write_lane(0, &[0.0; 4], &[0.0; 4], 0).is_err());
+        let e = kv.write_lane(5, &[], &[0.0; 6], &[0.0; 6], 0).unwrap_err();
+        assert_eq!((e.lane, e.pos), (5, 0));
+        assert!(kv.write_lane(0, &[], &[0.0; 4], &[0.0; 4], 0).is_err());
         let ok = vec![0.0f32; 6];
-        assert!(kv.write_lane(0, &ok, &ok, 9).is_err());
+        let e = kv.write_lane(0, &[1; 9], &ok, &ok, 9).unwrap_err();
+        assert_eq!((e.lane, e.pos), (0, 9));
+        assert!(kv.write_lane(0, &[1, 2], &ok, &ok, 3).is_err(), "token/pos mismatch");
         let lit = literal_f32(&[0.0f32; 12], &[1, 2, 3, 2]).unwrap();
-        assert!(kv.absorb_step(&[0], &lit, &lit, 7).is_err());
-        assert!(kv.absorb_step(&[9], &lit, &lit, 0).is_err());
+        let e = kv.absorb_step(&[(0, 1)], &lit, &lit, 7).unwrap_err();
+        assert_eq!((e.lane, e.pos), (0, 7));
+        let e = kv.absorb_step(&[(9, 1)], &lit, &lit, 0).unwrap_err();
+        assert_eq!(e.lane, 9);
+        // Absorb at a position the lane has not reached is typed too.
+        kv.write_lane(0, &[1], &ok, &ok, 1).unwrap();
+        let e = kv.absorb_step(&[(0, 2)], &lit, &lit, 2).unwrap_err();
+        assert_eq!((e.lane, e.pos), (0, 2));
+        assert!(e.to_string().contains("lane 0"));
     }
 
     #[test]

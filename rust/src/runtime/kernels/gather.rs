@@ -1,0 +1,285 @@
+//! Paged-KV gather/scatter kernels (DESIGN.md §8).
+//!
+//! The block pool (`runtime::kvpool`) stores K/V rows scattered across
+//! fixed-size blocks; two consumers need flat access:
+//!
+//! * [`gather_merged`] — materialize every lane's rows into the
+//!   contiguous `(L, B, S, d)` layout the static-batch PJRT decode
+//!   artifact consumes (positions beyond a lane's length are
+//!   zero-filled). Banded across the kernel pool via
+//!   [`super::scope_chunks`].
+//! * [`LaneView`] — a per-lane [`KvStore`] over raw slab pointers, so a
+//!   shared decode iteration can advance independent lanes in parallel
+//!   (`NativeBackend::step`). Reads go through shared slices; the single
+//!   row written per layer lives in the lane's privately owned tail
+//!   block.
+//!
+//! ## Disjointness argument (why the raw-pointer writes are sound)
+//!
+//! Before the parallel section, every stepped lane runs
+//! `BlockPool::append` serially; `append` guarantees the block holding
+//! the pending position is referenced by *exactly one* table (fresh
+//! allocation, or a copy-on-write fork of a shared block). Therefore,
+//! for distinct lanes `a != b`:
+//! `write-region(a) ∩ (read-region(b) ∪ write-region(b)) = ∅` — lane
+//! `a`'s writes land in a block that appears in no other lane's table.
+//! Within a lane, reads and writes happen on one thread. The pool's
+//! bookkeeping (free lists, sharing index) is never touched while views
+//! are alive.
+
+use super::pool::SendPtr;
+use super::scope_chunks;
+use crate::model::transformer::{KvStore, KvStoreFull};
+use crate::runtime::kvpool::{BlockPool, KvPoolConfig, SeqKv};
+
+/// Gather every lane's resident rows into contiguous `(L, B, S, d)`
+/// K and V buffers (`S = max_seq`); positions at or beyond a lane's
+/// length — and lanes without a table — are zero-filled.
+pub fn gather_merged(
+    pool: &BlockPool,
+    tables: &[Option<&SeqKv>],
+    max_seq: usize,
+    out_k: &mut [f32],
+    out_v: &mut [f32],
+) {
+    let cfg = pool.config();
+    let (layers, dim) = (cfg.layers, cfg.dim);
+    let lanes = tables.len();
+    let stride = max_seq * dim;
+    assert_eq!(out_k.len(), layers * lanes * stride, "gather_merged: bad K buffer");
+    assert_eq!(out_v.len(), layers * lanes * stride, "gather_merged: bad V buffer");
+    if lanes == 0 {
+        return;
+    }
+    let pk = SendPtr::new(out_k.as_mut_ptr());
+    let pv = SendPtr::new(out_v.as_mut_ptr());
+    let units = layers * lanes;
+    // Treat copied elements as the work estimate for banding.
+    let work = 2 * units * stride;
+    scope_chunks(units, work, |lo, hi| {
+        for u in lo..hi {
+            let (layer, lane) = (u / lanes, u % lanes);
+            let dst = u * stride;
+            // SAFETY: unit `u` owns exactly `[dst, dst + stride)`;
+            // `scope_chunks` hands out disjoint unit ranges covering
+            // `0..units` once, and the buffers outlive the scope.
+            let dk = unsafe { pk.slice_mut(dst, stride) };
+            let dv = unsafe { pv.slice_mut(dst, stride) };
+            match tables[lane] {
+                Some(seq) => {
+                    let n = seq.len().min(max_seq);
+                    for pos in 0..n {
+                        dk[pos * dim..(pos + 1) * dim]
+                            .copy_from_slice(pool.k_row(seq, layer, pos));
+                        dv[pos * dim..(pos + 1) * dim]
+                            .copy_from_slice(pool.v_row(seq, layer, pos));
+                    }
+                    dk[n * dim..].fill(0.0);
+                    dv[n * dim..].fill(0.0);
+                }
+                None => {
+                    dk.fill(0.0);
+                    dv.fill(0.0);
+                }
+            }
+        }
+    });
+}
+
+/// Per-lane [`KvStore`] over the pool's raw slabs for one *pre-reserved*
+/// decode step (see the module-level disjointness argument). Build with
+/// [`lane_views`] after `BlockPool::append` reserved each lane's pending
+/// position.
+pub struct LaneView {
+    k: SendPtr<f32>,
+    v: SendPtr<f32>,
+    blocks: Vec<usize>,
+    /// Logical length *before* the pending pre-reserved position, i.e.
+    /// the position the decode step writes.
+    len: usize,
+    layers: usize,
+    block_tokens: usize,
+    dim: usize,
+    pending: bool,
+}
+
+impl LaneView {
+    fn from_parts(k: SendPtr<f32>, v: SendPtr<f32>, cfg: &KvPoolConfig, seq: &SeqKv) -> Self {
+        assert!(!seq.is_empty(), "LaneView needs a pre-reserved pending position");
+        Self {
+            k,
+            v,
+            blocks: seq.blocks().to_vec(),
+            len: seq.len() - 1,
+            layers: cfg.layers,
+            block_tokens: cfg.block_tokens,
+            dim: cfg.dim,
+            pending: true,
+        }
+    }
+
+    #[inline]
+    fn row_offset(&self, layer: usize, pos: usize) -> usize {
+        let block = self.blocks[pos / self.block_tokens];
+        let row = pos % self.block_tokens;
+        ((block * self.layers + layer) * self.block_tokens + row) * self.dim
+    }
+}
+
+/// Snapshot one [`LaneView`] per lane whose next position was already
+/// reserved via `BlockPool::append` (so each `seq.len()` is the
+/// *post*-append length). All views derive their raw slab pointers from
+/// this call's single exclusive pool borrow — constructing them from
+/// separate `&mut` borrows would invalidate the earlier views' pointers
+/// under Stacked Borrows.
+pub fn lane_views(pool: &mut BlockPool, seqs: &[&SeqKv]) -> Vec<LaneView> {
+    let cfg = pool.config().clone();
+    let (k, v) = pool.slab_ptrs();
+    let (k, v) = (SendPtr::new(k), SendPtr::new(v));
+    seqs.iter().map(|seq| LaneView::from_parts(k, v, &cfg, seq)).collect()
+}
+
+impl KvStore for LaneView {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn reserve(&mut self, _token: usize) -> Result<(), KvStoreFull> {
+        if !self.pending {
+            return Err(KvStoreFull {
+                pos: self.len + 1,
+                detail: "LaneView holds a single pre-reserved position".into(),
+            });
+        }
+        self.pending = false;
+        Ok(())
+    }
+
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        debug_assert!(pos <= self.len);
+        let at = self.row_offset(layer, pos);
+        // SAFETY: in-bounds row of the pool slab; concurrent writers only
+        // touch blocks absent from this lane's table (module docs).
+        unsafe { &*self.k.slice_mut(at, self.dim) }
+    }
+
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        debug_assert!(pos <= self.len);
+        let at = self.row_offset(layer, pos);
+        // SAFETY: as `k_row`.
+        unsafe { &*self.v.slice_mut(at, self.dim) }
+    }
+
+    fn write_row(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(pos, self.len, "LaneView writes only the pending position");
+        let at = self.row_offset(layer, pos);
+        // SAFETY: the pending row lives in this lane's privately owned
+        // tail block (module docs); no other thread touches it.
+        unsafe {
+            self.k.slice_mut(at, k.len()).copy_from_slice(k);
+            self.v.slice_mut(at, v.len()).copy_from_slice(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::kernels::pool;
+    use crate::runtime::kvpool::KvPoolConfig;
+    use std::sync::Mutex;
+
+    fn small_pool() -> BlockPool {
+        BlockPool::new(KvPoolConfig { layers: 2, dim: 3, block_tokens: 2, num_blocks: 8 })
+    }
+
+    /// Append `n` tokens writing k = lane*100 + layer*10 + pos (v = -k).
+    fn fill_lane(pool: &mut BlockPool, lane: usize, n: usize) -> SeqKv {
+        let (mut seq, _) = pool.begin(&[]);
+        for i in 0..n {
+            pool.append(&mut seq, 1000 * lane + i).unwrap();
+            for layer in 0..2 {
+                let val = (lane * 100 + layer * 10 + i) as f32;
+                pool.k_row_mut(&seq, layer, i).fill(val);
+                pool.v_row_mut(&seq, layer, i).fill(-val);
+            }
+        }
+        seq
+    }
+
+    #[test]
+    fn gather_matches_reference_and_zero_fills() {
+        let mut p = small_pool();
+        let s0 = fill_lane(&mut p, 0, 3);
+        let s2 = fill_lane(&mut p, 2, 5);
+        let (layers, dim, max_seq, lanes) = (2usize, 3usize, 6usize, 3usize);
+        let stride = max_seq * dim;
+        let mut out_k = vec![9.9f32; layers * lanes * stride];
+        let mut out_v = vec![9.9f32; layers * lanes * stride];
+        let tables = [Some(&s0), None, Some(&s2)];
+        gather_merged(&p, &tables, max_seq, &mut out_k, &mut out_v);
+        // Reference layout: ((layer * lanes + lane) * max_seq + pos) * dim.
+        for layer in 0..layers {
+            for (lane, len) in [(0usize, 3usize), (1, 0), (2, 5)] {
+                for pos in 0..max_seq {
+                    let at = ((layer * lanes + lane) * max_seq + pos) * dim;
+                    let want = if pos < len {
+                        (lane * 100 + layer * 10 + pos) as f32
+                    } else {
+                        0.0
+                    };
+                    assert_eq!(out_k[at], want, "k (l{layer}, lane{lane}, p{pos})");
+                    assert_eq!(out_v[at], -want, "v (l{layer}, lane{lane}, p{pos})");
+                }
+            }
+        }
+        p.release(s0);
+        p.release(s2);
+    }
+
+    #[test]
+    fn lane_views_step_independent_lanes_in_parallel() {
+        let mut p = small_pool();
+        let mut s0 = fill_lane(&mut p, 0, 2);
+        let mut s1 = fill_lane(&mut p, 1, 3);
+        // Serial phase: reserve the pending position on both lanes.
+        p.append(&mut s0, 7).unwrap();
+        p.append(&mut s1, 8).unwrap();
+        let views: Vec<Mutex<Option<LaneView>>> = lane_views(&mut p, &[&s0, &s1])
+            .into_iter()
+            .map(|v| Mutex::new(Some(v)))
+            .collect();
+        pool::scope_run(2, |i| {
+            let mut view = views[i].lock().unwrap().take().unwrap();
+            let pos = view.len();
+            view.reserve(0).unwrap();
+            // Reads see the serially written history...
+            let base = (i * 100) as f32;
+            assert_eq!(view.k_row(0, 0)[0], base);
+            // ...and the write lands in the lane's own pending row.
+            let val = [(500 + i) as f32; 3];
+            for layer in 0..2 {
+                view.write_row(layer, pos, &val, &val);
+            }
+        });
+        assert_eq!(p.k_row(&s0, 0, 2)[0], 500.0);
+        assert_eq!(p.k_row(&s1, 0, 3)[0], 501.0);
+        // Pre-existing rows are untouched.
+        assert_eq!(p.k_row(&s0, 1, 1)[0], 11.0);
+        assert_eq!(p.v_row(&s1, 0, 2)[0], -102.0);
+        p.release(s0);
+        p.release(s1);
+    }
+
+    #[test]
+    fn lane_view_rejects_a_second_reserve() {
+        let mut p = small_pool();
+        let mut s = fill_lane(&mut p, 0, 1);
+        p.append(&mut s, 3).unwrap();
+        let mut view = lane_views(&mut p, &[&s]).pop().unwrap();
+        assert_eq!(view.len(), 1);
+        view.reserve(3).unwrap();
+        assert!(view.reserve(4).is_err());
+        p.release(s);
+    }
+}

@@ -14,6 +14,9 @@
 //!   ([`fused::pifa_apply_rows_fused`]): pivot dots scatter straight
 //!   into `Y`, non-pivot rows combine the `y_p` scratch, no intermediate
 //!   `Mat` allocations.
+//! * [`gather`] — paged-KV access kernels: the `(L, B, S, d)` merged
+//!   gather for the PJRT decode artifact and the per-lane raw-slab views
+//!   a parallel native decode iteration writes through (DESIGN.md §8).
 //! * the packed 2:4 decode mat-vec lives with its storage in
 //!   [`crate::sparse24::Sparse24Mat::matvec`] (it needs the private
 //!   values/meta layout); dispatch is documented here because it follows
@@ -34,6 +37,7 @@
 //! here); refactors cannot silently diverge.
 
 pub mod fused;
+pub mod gather;
 pub mod gemv;
 pub mod pool;
 

@@ -1,0 +1,734 @@
+//! Paged KV-cache block pool with copy-on-write prefix sharing
+//! (DESIGN.md §8).
+//!
+//! The contiguous serving caches preallocated a dense
+//! `layers × lanes × max_seq × dim` buffer per engine, so lane count was
+//! fixed at startup and a three-token session paid for `max_seq` rows.
+//! [`BlockPool`] replaces that with a pool of fixed-size *blocks*
+//! (`block_tokens` rows × `layers` × `dim` each); a session holds a
+//! [`SeqKv`] block table mapping positions to physical blocks, and blocks
+//! are:
+//!
+//! * **ref-counted** — sessions whose token prefixes agree map the *same*
+//!   physical blocks (system prompts, repeated tab7 evals);
+//! * **content-addressed** — a chain hash over the token prefix indexes
+//!   every resident block, so [`BlockPool::begin`] can re-attach a new
+//!   session to already-computed K/V rows;
+//! * **copy-on-write** — appending into a block another session still
+//!   references forks a private copy first ([`BlockPool::append`]), so a
+//!   shared prefix can diverge mid-block without corrupting the peer;
+//! * **retained after release** — a block whose refcount drops to zero
+//!   parks on an idle queue, still indexed, and is only evicted (oldest
+//!   first) when an allocation needs it. Sequential sessions with the
+//!   same prompt therefore still hit the prefix cache.
+//!
+//! K/V rows are a pure function of the token prefix (causal attention +
+//! deterministic kernels), which is what makes content-addressed sharing
+//! sound — and why the paged path can be *bitwise* identical to the
+//! contiguous one (`rust/tests/kv_differential.rs`).
+//!
+//! Single-owner discipline: the pool is owned by one decode backend and
+//! mutated only between parallel sections. The kernel-layer views that
+//! read/write slabs during a parallel decode step live in
+//! [`crate::runtime::kernels::gather`].
+
+use crate::model::transformer::{KvStore, KvStoreFull};
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+
+/// Default tokens per block (vLLM-style granularity; small enough that a
+/// short session wastes at most one partial block per layer).
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// Geometry of a [`BlockPool`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KvPoolConfig {
+    pub layers: usize,
+    pub dim: usize,
+    /// Token rows per block.
+    pub block_tokens: usize,
+    /// Physical blocks in the pool.
+    pub num_blocks: usize,
+}
+
+impl KvPoolConfig {
+    /// A pool holding the bytes of a contiguous `lanes × max_seq` cache
+    /// (the fixed-lane baseline), rounded up to whole blocks per lane —
+    /// exact when `block_tokens` divides `max_seq`, as with the default
+    /// 16 and the tiny-model family's `max_seq = 128`; otherwise the
+    /// pool is at most one block per lane larger.
+    pub fn matching_contiguous(layers: usize, dim: usize, lanes: usize, max_seq: usize) -> Self {
+        let block_tokens = DEFAULT_BLOCK_TOKENS.min(max_seq.max(1));
+        Self {
+            layers,
+            dim,
+            block_tokens,
+            num_blocks: lanes.max(1) * max_seq.max(1).div_ceil(block_tokens),
+        }
+    }
+
+    /// f32 elements per block (one K or V slab).
+    pub fn block_elems(&self) -> usize {
+        self.layers * self.block_tokens * self.dim
+    }
+}
+
+/// Typed per-session KV failure: carries the position so the serving
+/// layer can fail exactly the offending session.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KvError {
+    /// No free block and nothing evictable at append time.
+    Exhausted { pos: usize },
+    /// Position outside the caller-enforced capacity.
+    Bounds { pos: usize, cap: usize },
+}
+
+impl KvError {
+    /// The sequence position at which the failure occurred.
+    pub fn pos(&self) -> usize {
+        match *self {
+            KvError::Exhausted { pos } => pos,
+            KvError::Bounds { pos, .. } => pos,
+        }
+    }
+}
+
+impl fmt::Display for KvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvError::Exhausted { pos } => {
+                write!(f, "KV block pool exhausted at position {pos}")
+            }
+            KvError::Bounds { pos, cap } => {
+                write!(f, "KV position {pos} exceeds capacity {cap}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// Aggregate pool counters, surfaced in `ServeMetrics` and the
+/// `pifa serve` / tab7 / bench-kernels output.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KvPoolStats {
+    pub num_blocks: usize,
+    /// Blocks referenced by at least one live session.
+    pub used_blocks: usize,
+    /// Blocks allocatable right now (never-used + idle-evictable).
+    pub free_blocks: usize,
+    /// Idle blocks retained for prefix reuse (subset of `free_blocks`).
+    pub idle_blocks: usize,
+    pub peak_used_blocks: usize,
+    /// Prompt positions served from resident blocks by [`BlockPool::begin`].
+    pub prefix_hit_tokens: usize,
+    /// Prompt positions eligible for prefix matching.
+    pub prefix_query_tokens: usize,
+    /// Copy-on-write forks taken by [`BlockPool::append`].
+    pub cow_copies: usize,
+}
+
+impl KvPoolStats {
+    /// Fraction of pool blocks holding live session data.
+    pub fn utilization(&self) -> f64 {
+        if self.num_blocks == 0 {
+            0.0
+        } else {
+            self.used_blocks as f64 / self.num_blocks as f64
+        }
+    }
+
+    /// Fraction of eligible prompt positions served from the cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_query_tokens == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / self.prefix_query_tokens as f64
+        }
+    }
+}
+
+/// Per-session block table: positions `0..len` map to rows of the listed
+/// physical blocks, `block_tokens` positions per block.
+#[derive(Clone, Debug, Default)]
+pub struct SeqKv {
+    blocks: Vec<usize>,
+    len: usize,
+    /// Chain hash of the `len` tokens cached so far.
+    hash: u64,
+}
+
+impl SeqKv {
+    /// Tokens cached (the next write position).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Physical block ids backing this session, in position order.
+    pub fn blocks(&self) -> &[usize] {
+        &self.blocks
+    }
+}
+
+/// Root of the token chain hash (arbitrary non-zero constant).
+const ROOT_HASH: u64 = 0x517c_c1b7_2722_0a95;
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Extend a token-prefix chain hash by one token.
+fn chain(h: u64, token: usize) -> u64 {
+    splitmix64(h ^ (token as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93))
+}
+
+#[derive(Clone, Debug, Default)]
+struct BlockMeta {
+    refs: usize,
+    /// Token ids whose K/V rows fill this block, in row order.
+    tokens: Vec<usize>,
+    /// Chain hash of every token before this block.
+    parent_hash: u64,
+    /// Present in the `children` sharing index.
+    registered: bool,
+}
+
+/// The physical block pool (see module docs).
+pub struct BlockPool {
+    cfg: KvPoolConfig,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    meta: Vec<BlockMeta>,
+    /// Never-used or fully evicted blocks.
+    free: Vec<usize>,
+    /// refs == 0 but still indexed for prefix reuse; evicted oldest-first.
+    idle: VecDeque<usize>,
+    /// parent chain hash → candidate blocks holding the next tokens.
+    children: HashMap<u64, Vec<usize>>,
+    prefix_hit_tokens: usize,
+    prefix_query_tokens: usize,
+    cow_copies: usize,
+    peak_used: usize,
+}
+
+impl BlockPool {
+    pub fn new(cfg: KvPoolConfig) -> Self {
+        assert!(cfg.layers > 0 && cfg.dim > 0, "degenerate pool geometry");
+        assert!(cfg.block_tokens > 0 && cfg.num_blocks > 0, "empty pool");
+        let elems = cfg.num_blocks * cfg.block_elems();
+        Self {
+            k: vec![0f32; elems],
+            v: vec![0f32; elems],
+            meta: (0..cfg.num_blocks).map(|_| BlockMeta::default()).collect(),
+            free: (0..cfg.num_blocks).rev().collect(),
+            idle: VecDeque::new(),
+            children: HashMap::new(),
+            prefix_hit_tokens: 0,
+            prefix_query_tokens: 0,
+            cow_copies: 0,
+            peak_used: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &KvPoolConfig {
+        &self.cfg
+    }
+
+    /// Blocks an allocation could obtain right now.
+    pub fn allocatable_blocks(&self) -> usize {
+        self.free.len() + self.idle.len()
+    }
+
+    /// Blocks needed to hold `tokens` positions (ignoring sharing).
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.cfg.block_tokens)
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        let used = self.cfg.num_blocks - self.free.len() - self.idle.len();
+        KvPoolStats {
+            num_blocks: self.cfg.num_blocks,
+            used_blocks: used,
+            free_blocks: self.allocatable_blocks(),
+            idle_blocks: self.idle.len(),
+            peak_used_blocks: self.peak_used,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            prefix_query_tokens: self.prefix_query_tokens,
+            cow_copies: self.cow_copies,
+        }
+    }
+
+    fn note_used(&mut self) {
+        let used = self.cfg.num_blocks - self.free.len() - self.idle.len();
+        self.peak_used = self.peak_used.max(used);
+    }
+
+    /// Drop a block from the sharing index and clear its token list.
+    fn unregister(&mut self, b: usize) {
+        if self.meta[b].registered {
+            let parent = self.meta[b].parent_hash;
+            if let Some(sibs) = self.children.get_mut(&parent) {
+                sibs.retain(|&x| x != b);
+                if sibs.is_empty() {
+                    self.children.remove(&parent);
+                }
+            }
+            self.meta[b].registered = false;
+        }
+        self.meta[b].tokens.clear();
+    }
+
+    /// Pop a writable block: the free list first, then evict the oldest
+    /// idle (refs == 0) block.
+    fn alloc(&mut self) -> Option<usize> {
+        if let Some(b) = self.free.pop() {
+            return Some(b);
+        }
+        let b = self.idle.pop_front()?;
+        self.unregister(b);
+        Some(b)
+    }
+
+    /// Bump a matched block's refcount, pulling it off the idle queue if
+    /// it was retained with zero references.
+    fn retain_block(&mut self, b: usize) {
+        if self.meta[b].refs == 0 {
+            if let Some(i) = self.idle.iter().position(|&x| x == b) {
+                self.idle.remove(i);
+            }
+        }
+        self.meta[b].refs += 1;
+    }
+
+    /// Register a block under its parent chain hash so later sessions
+    /// can discover it.
+    fn register(&mut self, b: usize, parent_hash: u64) {
+        self.meta[b].parent_hash = parent_hash;
+        self.meta[b].registered = true;
+        self.children.entry(parent_hash).or_default().push(b);
+    }
+
+    /// Start a session over `tokens` (its prompt). Walks the sharing
+    /// index and attaches the longest resident prefix; returns the table
+    /// plus how many leading positions are already cached. Matching is
+    /// capped at `tokens.len() - 1`: prefill must always recompute the
+    /// final prompt position, because its logits are needed.
+    pub fn begin(&mut self, tokens: &[usize]) -> (SeqKv, usize) {
+        let mut seq = SeqKv { blocks: Vec::new(), len: 0, hash: ROOT_HASH };
+        let limit = tokens.len().saturating_sub(1);
+        self.prefix_query_tokens += limit;
+        let bt = self.cfg.block_tokens;
+        while seq.len < limit {
+            let want = &tokens[seq.len..limit];
+            // Longest-matching child under the current chain hash.
+            let mut best: Option<(usize, usize)> = None;
+            if let Some(cands) = self.children.get(&seq.hash) {
+                for &b in cands {
+                    let have = &self.meta[b].tokens;
+                    let mut m = 0;
+                    while m < want.len() && m < have.len() && have[m] == want[m] {
+                        m += 1;
+                    }
+                    let beats = match best {
+                        Some((_, bm)) => m > bm,
+                        None => m > 0,
+                    };
+                    if beats {
+                        best = Some((b, m));
+                    }
+                }
+            }
+            let Some((b, m)) = best else { break };
+            self.retain_block(b);
+            seq.blocks.push(b);
+            for &t in &tokens[seq.len..seq.len + m] {
+                seq.hash = chain(seq.hash, t);
+            }
+            seq.len += m;
+            self.prefix_hit_tokens += m;
+            if m < bt {
+                // Partial block (or partial match): nothing deeper can
+                // match, and the session will COW-fork it on append.
+                break;
+            }
+        }
+        self.note_used();
+        let reused = seq.len;
+        (seq, reused)
+    }
+
+    /// Make position `seq.len()` writable for `token`: allocates a fresh
+    /// block at block boundaries, copy-on-write-forks a shared partial
+    /// block, records the token in the sharing index, and advances the
+    /// session. The row contents are then written per layer through
+    /// [`BlockPool::k_row_mut`] / [`BlockPool::v_row_mut`] (or the
+    /// kernel-layer views).
+    pub fn append(&mut self, seq: &mut SeqKv, token: usize) -> Result<(), KvError> {
+        let bt = self.cfg.block_tokens;
+        let pos = seq.len;
+        let off = pos % bt;
+        if off == 0 {
+            let Some(b) = self.alloc() else {
+                return Err(KvError::Exhausted { pos });
+            };
+            self.unregister(b); // fresh blocks carry no stale index entry
+            self.meta[b].refs = 1;
+            self.register(b, seq.hash);
+            seq.blocks.push(b);
+        } else {
+            let bi = pos / bt;
+            let b = seq.blocks[bi];
+            if self.meta[b].refs > 1 {
+                // Copy-on-write fork: private copy of the rows this
+                // session actually shares, then diverge in the copy.
+                let Some(nb) = self.alloc() else {
+                    return Err(KvError::Exhausted { pos });
+                };
+                self.unregister(nb);
+                self.copy_rows(b, nb, off);
+                self.meta[nb].refs = 1;
+                self.meta[nb].tokens = self.meta[b].tokens[..off].to_vec();
+                let parent = self.meta[b].parent_hash;
+                self.register(nb, parent);
+                self.meta[b].refs -= 1;
+                seq.blocks[bi] = nb;
+                self.cow_copies += 1;
+            } else if self.meta[b].tokens.len() > off {
+                // Sole owner of a block longer than this session's view
+                // (a partial match whose other holder released):
+                // truncate the stale tail before overwriting it.
+                self.meta[b].tokens.truncate(off);
+            }
+        }
+        let b = *seq.blocks.last().expect("append always has a last block");
+        debug_assert_eq!(self.meta[b].tokens.len(), off, "token list out of sync");
+        self.meta[b].tokens.push(token);
+        seq.hash = chain(seq.hash, token);
+        seq.len += 1;
+        self.note_used();
+        Ok(())
+    }
+
+    /// Copy the first `rows` K/V rows of every layer from `src` to `dst`.
+    fn copy_rows(&mut self, src: usize, dst: usize, rows: usize) {
+        if rows == 0 {
+            return;
+        }
+        let d = self.cfg.dim;
+        for layer in 0..self.cfg.layers {
+            let s = self.row_offset(src, layer, 0);
+            let t = self.row_offset(dst, layer, 0);
+            let n = rows * d;
+            self.k.copy_within(s..s + n, t);
+            self.v.copy_within(s..s + n, t);
+        }
+    }
+
+    /// Release a session: every block it references drops one refcount;
+    /// blocks reaching zero park on the idle queue (still indexed) for
+    /// prefix reuse until an allocation evicts them.
+    pub fn release(&mut self, seq: SeqKv) {
+        for &b in &seq.blocks {
+            debug_assert!(self.meta[b].refs > 0, "double release of block {b}");
+            self.meta[b].refs -= 1;
+            if self.meta[b].refs == 0 {
+                self.idle.push_back(b);
+            }
+        }
+    }
+
+    /// Flat element offset of `(block, layer, row)` in the K/V slabs.
+    #[inline]
+    fn row_offset(&self, block: usize, layer: usize, row: usize) -> usize {
+        ((block * self.cfg.layers + layer) * self.cfg.block_tokens + row) * self.cfg.dim
+    }
+
+    /// `(block, row-within-block)` for a session position.
+    #[inline]
+    pub fn locate(&self, seq: &SeqKv, pos: usize) -> (usize, usize) {
+        (seq.blocks[pos / self.cfg.block_tokens], pos % self.cfg.block_tokens)
+    }
+
+    pub fn k_row(&self, seq: &SeqKv, layer: usize, pos: usize) -> &[f32] {
+        let (b, r) = self.locate(seq, pos);
+        let at = self.row_offset(b, layer, r);
+        &self.k[at..at + self.cfg.dim]
+    }
+
+    pub fn v_row(&self, seq: &SeqKv, layer: usize, pos: usize) -> &[f32] {
+        let (b, r) = self.locate(seq, pos);
+        let at = self.row_offset(b, layer, r);
+        &self.v[at..at + self.cfg.dim]
+    }
+
+    pub fn k_row_mut(&mut self, seq: &SeqKv, layer: usize, pos: usize) -> &mut [f32] {
+        let (b, r) = self.locate(seq, pos);
+        let at = self.row_offset(b, layer, r);
+        &mut self.k[at..at + self.cfg.dim]
+    }
+
+    pub fn v_row_mut(&mut self, seq: &SeqKv, layer: usize, pos: usize) -> &mut [f32] {
+        let (b, r) = self.locate(seq, pos);
+        let at = self.row_offset(b, layer, r);
+        &mut self.v[at..at + self.cfg.dim]
+    }
+
+    /// Raw slab pointers + geometry for the kernel layer's parallel lane
+    /// views (`runtime::kernels::gather`); see there for the
+    /// disjointness argument.
+    pub(crate) fn slab_ptrs(&mut self) -> (*mut f32, *mut f32) {
+        (self.k.as_mut_ptr(), self.v.as_mut_ptr())
+    }
+}
+
+/// Serial read/write adapter binding one session table to its pool:
+/// the [`KvStore`] the paged prefill path decodes through.
+pub struct PagedSeq<'a> {
+    pub pool: &'a mut BlockPool,
+    pub seq: &'a mut SeqKv,
+    /// Position capacity (the model's `max_seq`).
+    pub cap: usize,
+}
+
+impl KvStore for PagedSeq<'_> {
+    fn len(&self) -> usize {
+        self.seq.len()
+    }
+
+    fn reserve(&mut self, token: usize) -> Result<(), KvStoreFull> {
+        let pos = self.seq.len();
+        if pos >= self.cap {
+            return Err(KvStoreFull {
+                pos,
+                detail: format!("sequence capacity {} reached", self.cap),
+            });
+        }
+        self.pool
+            .append(self.seq, token)
+            .map_err(|e| KvStoreFull { pos: e.pos(), detail: e.to_string() })
+    }
+
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.pool.k_row(self.seq, layer, pos)
+    }
+
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.pool.v_row(self.seq, layer, pos)
+    }
+
+    fn write_row(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.pool.k_row_mut(self.seq, layer, pos)[..k.len()].copy_from_slice(k);
+        self.pool.v_row_mut(self.seq, layer, pos)[..v.len()].copy_from_slice(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(bt: usize, blocks: usize) -> BlockPool {
+        BlockPool::new(KvPoolConfig { layers: 2, dim: 3, block_tokens: bt, num_blocks: blocks })
+    }
+
+    /// Append `tokens` to a fresh session, writing a recognizable value
+    /// into every row: k = base + pos, v = -(base + pos).
+    fn fill(p: &mut BlockPool, tokens: &[usize], base: f32) -> SeqKv {
+        let (mut seq, reused) = p.begin(tokens);
+        for i in reused..tokens.len() {
+            p.append(&mut seq, tokens[i]).unwrap();
+            for layer in 0..p.config().layers {
+                let val = base + i as f32;
+                p.k_row_mut(&seq, layer, i).fill(val);
+                p.v_row_mut(&seq, layer, i).fill(-val);
+            }
+        }
+        seq
+    }
+
+    #[test]
+    fn append_fills_blocks_exactly() {
+        let mut p = pool(4, 4);
+        let toks: Vec<usize> = (0..8).collect();
+        let seq = fill(&mut p, &toks, 100.0);
+        // 8 tokens at block_tokens = 4: exactly two full blocks.
+        assert_eq!(seq.blocks().len(), 2);
+        assert_eq!(seq.len(), 8);
+        assert_eq!(p.stats().used_blocks, 2);
+        // The ninth token opens a third block.
+        let mut seq = seq;
+        p.append(&mut seq, 42).unwrap();
+        assert_eq!(seq.blocks().len(), 3);
+        p.release(seq);
+    }
+
+    #[test]
+    fn zero_length_prompt_yields_empty_table() {
+        let mut p = pool(4, 2);
+        let (seq, reused) = p.begin(&[]);
+        assert_eq!(seq.len(), 0);
+        assert_eq!(reused, 0);
+        assert!(seq.blocks().is_empty());
+        p.release(seq);
+        assert_eq!(p.stats().used_blocks, 0);
+    }
+
+    #[test]
+    fn rows_round_trip_through_block_tables() {
+        let mut p = pool(4, 4);
+        let toks = [9usize, 8, 7, 6, 5];
+        let seq = fill(&mut p, &toks, 10.0);
+        for i in 0..5 {
+            for layer in 0..2 {
+                assert!(p.k_row(&seq, layer, i).iter().all(|&x| x == 10.0 + i as f32));
+                assert!(p.v_row(&seq, layer, i).iter().all(|&x| x == -(10.0 + i as f32)));
+            }
+        }
+    }
+
+    #[test]
+    fn shared_prefix_maps_same_physical_blocks() {
+        let mut p = pool(4, 8);
+        let prompt: Vec<usize> = (0..8).collect();
+        let a = fill(&mut p, &prompt, 0.0);
+        let used_after_a = p.stats().used_blocks;
+        let (b, reused) = p.begin(&prompt);
+        // Matching is capped at len - 1 = 7: block 0 in full, 3 rows of
+        // block 1.
+        assert_eq!(reused, 7);
+        assert_eq!(b.blocks()[0], a.blocks()[0]);
+        assert_eq!(b.blocks()[1], a.blocks()[1]);
+        // No new physical blocks were consumed by the share.
+        assert_eq!(p.stats().used_blocks, used_after_a);
+        let s = p.stats();
+        // A's begin queried 7 positions (cold), B's queried 7 (all hits).
+        assert_eq!(s.prefix_hit_tokens, 7);
+        assert_eq!(s.prefix_query_tokens, 14);
+        assert!((s.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        p.release(a);
+        p.release(b);
+    }
+
+    #[test]
+    fn cow_fork_preserves_the_peer() {
+        let mut p = pool(4, 8);
+        let prompt: Vec<usize> = vec![1, 2, 3, 4, 5, 6];
+        let a = fill(&mut p, &prompt, 50.0);
+        let (mut b, reused) = p.begin(&prompt);
+        assert_eq!(reused, 5, "matched through block 0 plus one row of block 1");
+        assert_eq!(b.blocks()[1], a.blocks()[1], "partial block shared before the fork");
+        // B diverges inside the shared partial block: COW fork.
+        p.append(&mut b, 999).unwrap();
+        assert_eq!(p.stats().cow_copies, 1);
+        assert_ne!(b.blocks()[1], a.blocks()[1], "fork gave B a private block");
+        for layer in 0..2 {
+            p.k_row_mut(&b, layer, 5).fill(777.0);
+        }
+        // A's rows are untouched; B's copied rows match A's originals.
+        for layer in 0..2 {
+            assert!(p.k_row(&a, layer, 5).iter().all(|&x| x == 55.0));
+            assert!(p.k_row(&b, layer, 5).iter().all(|&x| x == 777.0));
+            assert!(p.k_row(&b, layer, 4).iter().all(|&x| x == 54.0), "COW copied shared rows");
+        }
+        p.release(a);
+        p.release(b);
+    }
+
+    #[test]
+    fn release_drops_refcounts_and_frees_blocks() {
+        let mut p = pool(4, 4);
+        let prompt: Vec<usize> = (10..18).collect();
+        let a = fill(&mut p, &prompt, 0.0);
+        let (b, _) = p.begin(&prompt);
+        assert_eq!(p.stats().used_blocks, 2);
+        // Cancel B: shared blocks stay live via A's references.
+        p.release(b);
+        assert_eq!(p.stats().used_blocks, 2);
+        // Cancel A: blocks park idle (allocatable, still indexed).
+        p.release(a);
+        let s = p.stats();
+        assert_eq!(s.used_blocks, 0);
+        assert_eq!(s.idle_blocks, 2);
+        assert_eq!(s.free_blocks, 4);
+        // A later identical prompt still hits the retained blocks.
+        let (c, reused) = p.begin(&prompt);
+        assert_eq!(reused, 7);
+        p.release(c);
+    }
+
+    #[test]
+    fn exhaustion_is_a_typed_error_at_the_failing_position() {
+        let mut p = pool(2, 2);
+        let (mut seq, _) = p.begin(&[]);
+        for t in 0..4 {
+            p.append(&mut seq, t).unwrap();
+        }
+        let err = p.append(&mut seq, 4).unwrap_err();
+        assert_eq!(err, KvError::Exhausted { pos: 4 });
+        assert_eq!(err.pos(), 4);
+        // Releasing recovers the pool.
+        p.release(seq);
+        let (mut seq2, _) = p.begin(&[]);
+        p.append(&mut seq2, 9).unwrap();
+        p.release(seq2);
+    }
+
+    #[test]
+    fn eviction_unregisters_the_oldest_idle_block() {
+        let mut p = pool(2, 2);
+        let a = fill(&mut p, &[1, 2, 3, 4], 0.0);
+        p.release(a);
+        assert_eq!(p.stats().idle_blocks, 2);
+        // A different session must evict both idle blocks.
+        let b = fill(&mut p, &[7, 8, 9, 10], 1.0);
+        assert_eq!(p.stats().idle_blocks, 0);
+        p.release(b);
+        // The original prompt no longer matches (its blocks were evicted
+        // and unregistered).
+        let (c, reused) = p.begin(&[1, 2, 3, 4]);
+        assert_eq!(reused, 0);
+        p.release(c);
+    }
+
+    #[test]
+    fn paged_seq_store_reserves_and_writes() {
+        let mut p = pool(4, 2);
+        let (mut seq, _) = p.begin(&[]);
+        {
+            let mut store = PagedSeq { pool: &mut p, seq: &mut seq, cap: 6 };
+            for t in 0..6usize {
+                assert_eq!(store.len(), t);
+                store.reserve(t).unwrap();
+                store.write_row(0, t, &[t as f32; 3], &[0.5; 3]);
+            }
+            // Capacity is enforced before pool space.
+            let err = store.reserve(6).unwrap_err();
+            assert_eq!(err.pos, 6);
+            assert!(err.detail.contains("capacity"));
+        }
+        for t in 0..6 {
+            assert!(p.k_row(&seq, 0, t).iter().all(|&x| x == t as f32));
+        }
+        p.release(seq);
+    }
+
+    #[test]
+    fn peak_and_utilization_track_usage() {
+        let mut p = pool(2, 4);
+        let a = fill(&mut p, &[1, 2, 3], 0.0);
+        let s = p.stats();
+        assert_eq!(s.used_blocks, 2);
+        assert!((s.utilization() - 0.5).abs() < 1e-12);
+        p.release(a);
+        assert_eq!(p.stats().peak_used_blocks, 2);
+        assert_eq!(p.stats().used_blocks, 0);
+    }
+}

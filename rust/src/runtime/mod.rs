@@ -12,13 +12,19 @@
 //!   drives prefill / KV-cache decode.
 //! * [`kernels`] — structure-aware decode fast paths for the Rust-native
 //!   execution layer: the persistent kernel thread pool, batch-≤-4 GEMV,
-//!   and the fused PIFA apply (DESIGN.md §7).
+//!   the fused PIFA apply (DESIGN.md §7), and the paged-KV gather views
+//!   (§8).
+//! * [`kvpool`] — the paged KV-cache block pool: ref-counted fixed-size
+//!   blocks, copy-on-write prefix sharing, per-session block tables
+//!   (DESIGN.md §8).
 
 pub mod exec;
 pub mod kernels;
+pub mod kvpool;
 pub mod loader;
 pub mod manifest;
 
 pub use exec::{weights_to_literals, LaneKv, ModelRunner};
+pub use kvpool::{BlockPool, KvPoolConfig, KvPoolStats, SeqKv};
 pub use loader::Engine;
 pub use manifest::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};

@@ -1,0 +1,328 @@
+//! Differential equivalence suite: the paged KV path must be *bitwise*
+//! identical to the contiguous reference (DESIGN.md §8), in the spirit
+//! of `kernel_differential.rs`.
+//!
+//! * `paged_backend_matches_contiguous_bitwise` — random session mixes
+//!   (unequal prompt lengths, shared prompt prefixes, mid-stream
+//!   cancels, lane reuse, capacity faults) through
+//!   `NativeBackend::contiguous` and `NativeBackend::paged`
+//!   side by side; every logits row must match bit for bit, and faults
+//!   must fire at the same positions.
+//! * `lane_kv_matches_dense_reference_under_random_ops` — the paged
+//!   `LaneKv` (PJRT lane store) against a dense `(L, B, S, d)` reference
+//!   array under random write/absorb/reset sequences.
+//!
+//! Failures print the seed: rerun with
+//! `PIFA_KV_SEED=<seed> cargo test --test kv_differential`.
+
+use pifa::coordinator::{
+    DecodeBackend, GenerationMode, NativeBackend, PagedKvParams, StepInput, StepResult,
+};
+use pifa::linalg::Rng;
+use pifa::model::config::ModelConfig;
+use pifa::model::transformer::Transformer;
+use pifa::runtime::exec::argmax;
+use pifa::runtime::LaneKv;
+
+fn micro_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "kvdiff".into(),
+        vocab: 32,
+        dim: 16,
+        n_layers: 2,
+        n_heads: 2,
+        ffn_hidden: 24,
+        max_seq: 32,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Random prompt drawn from shared-prefix families (so sessions often
+/// agree on a leading system-prompt-like chunk) plus a random tail.
+fn gen_prompt(rng: &mut Rng, families: &[Vec<usize>]) -> Vec<usize> {
+    let fam = &families[rng.below(families.len())];
+    let take = 1 + rng.below(fam.len());
+    let mut p = fam[..take].to_vec();
+    for _ in 0..rng.below(4) {
+        p.push(rng.below(32));
+    }
+    p
+}
+
+fn run_backend_differential(seed: u64) {
+    let cfg = micro_cfg();
+    let max_seq = cfg.max_seq;
+    let mut rng = Rng::new(seed.wrapping_mul(7919).wrapping_add(13));
+    let model = Transformer::new_random(&cfg, &mut rng);
+    let lanes = 3usize;
+    let mut contiguous = NativeBackend::contiguous(model.clone(), GenerationMode::KvCache, lanes);
+    let mut paged = NativeBackend::paged(
+        model,
+        GenerationMode::KvCache,
+        PagedKvParams { block_tokens: 4, num_blocks: 32, watermark_per_active: 1 },
+    );
+    let families =
+        vec![vec![7usize, 3, 9, 1, 5, 2, 8, 4, 6, 11], vec![21usize, 22, 23, 24, 25, 26]];
+    let mut seqs: Vec<Option<Vec<usize>>> = vec![None; lanes];
+
+    for iter in 0..70 {
+        // Maybe start a session on a free lane (lane reuse after release).
+        if rng.below(3) > 0 {
+            if let Some(lane) = seqs.iter().position(|s| s.is_none()) {
+                let prompt = gen_prompt(&mut rng, &families);
+                let la = contiguous.prefill(lane, &prompt).unwrap();
+                let lb = paged.prefill(lane, &prompt).unwrap();
+                assert_eq!(
+                    bits(&la),
+                    bits(&lb),
+                    "seed {seed} iter {iter}: prefill logits diverged on lane {lane}"
+                );
+                let mut s = prompt;
+                s.push(argmax(&la));
+                seqs[lane] = Some(s);
+            }
+        }
+        // Mid-stream cancel: release the lane on both backends.
+        if rng.below(8) == 0 {
+            let active: Vec<usize> = (0..lanes).filter(|&l| seqs[l].is_some()).collect();
+            if !active.is_empty() {
+                let lane = active[rng.below(active.len())];
+                contiguous.release(lane);
+                paged.release(lane);
+                seqs[lane] = None;
+            }
+        }
+        // One shared decode iteration over every active lane.
+        let active: Vec<usize> = (0..lanes).filter(|&l| seqs[l].is_some()).collect();
+        if active.is_empty() {
+            continue;
+        }
+        let inputs: Vec<StepInput<'_>> = active
+            .iter()
+            .map(|&l| {
+                let s = seqs[l].as_ref().unwrap();
+                StepInput { lane: l, token: *s.last().unwrap(), seq: s }
+            })
+            .collect();
+        let ra = contiguous.step(&inputs).unwrap();
+        let rb = paged.step(&inputs).unwrap();
+        assert_eq!(ra.len(), rb.len());
+        // (lane, Some(next token) | None = faulted/ended).
+        let mut updates: Vec<(usize, Option<usize>)> = Vec::new();
+        for (i, &lane) in active.iter().enumerate() {
+            match (&ra[i], &rb[i]) {
+                (StepResult::Logits(va), StepResult::Logits(vb)) => {
+                    assert_eq!(
+                        bits(va),
+                        bits(vb),
+                        "seed {seed} iter {iter}: decode logits diverged on lane {lane}"
+                    );
+                    updates.push((lane, Some(argmax(va))));
+                }
+                (StepResult::Fault { pos: pa, .. }, StepResult::Fault { pos: pb, .. }) => {
+                    assert_eq!(
+                        pa, pb,
+                        "seed {seed} iter {iter}: fault positions diverged on lane {lane}"
+                    );
+                    updates.push((lane, None));
+                }
+                (a, b) => panic!(
+                    "seed {seed} iter {iter}: outcome mismatch on lane {lane}: \
+                     contiguous {a:?} vs paged {b:?}"
+                ),
+            }
+        }
+        drop(inputs);
+        for (lane, tok) in updates {
+            match tok {
+                Some(t) => {
+                    let s = seqs[lane].as_mut().unwrap();
+                    s.push(t);
+                    // Keep one position of headroom so capacity faults
+                    // stay rare but reachable.
+                    if s.len() > max_seq + 1 {
+                        contiguous.release(lane);
+                        paged.release(lane);
+                        seqs[lane] = None;
+                    }
+                }
+                None => {
+                    contiguous.release(lane);
+                    paged.release(lane);
+                    seqs[lane] = None;
+                }
+            }
+        }
+    }
+    // The mix must actually have exercised prefix sharing.
+    let stats = paged.kv_stats().expect("paged backend exposes pool stats");
+    assert!(
+        stats.prefix_hit_tokens > 0,
+        "seed {seed}: prefix sharing never exercised (families too divergent?)"
+    );
+}
+
+#[test]
+fn paged_backend_matches_contiguous_bitwise() {
+    let seeds: Vec<u64> = match std::env::var("PIFA_KV_SEED") {
+        Ok(s) => vec![s.parse().expect("PIFA_KV_SEED must be a u64")],
+        Err(_) => (0..6).collect(),
+    };
+    for seed in seeds {
+        if let Err(payload) = std::panic::catch_unwind(|| run_backend_differential(seed)) {
+            eprintln!(
+                "kv_differential FAILED at seed {seed}; reproduce with \
+                 PIFA_KV_SEED={seed} cargo test --test kv_differential"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Dense reference model for the paged [`LaneKv`]: a flat `(L, B, S, d)`
+/// array plus per-lane positions, updated alongside every op.
+struct DenseRef {
+    k: Vec<f32>,
+    layers: usize,
+    lanes: usize,
+    max_seq: usize,
+    dim: usize,
+}
+
+impl DenseRef {
+    fn new(layers: usize, lanes: usize, max_seq: usize, dim: usize) -> Self {
+        Self { k: vec![0.0; layers * lanes * max_seq * dim], layers, lanes, max_seq, dim }
+    }
+
+    fn row_at(&self, layer: usize, lane: usize, pos: usize) -> usize {
+        ((layer * self.lanes + lane) * self.max_seq + pos) * self.dim
+    }
+
+    fn write_lane(&mut self, lane: usize, buf: &[f32], pos: usize) {
+        let stride = self.max_seq * self.dim;
+        for li in 0..self.layers {
+            for t in 0..self.max_seq {
+                let dst = self.row_at(li, lane, t);
+                let val = if t < pos {
+                    buf[li * stride + t * self.dim..li * stride + (t + 1) * self.dim].to_vec()
+                } else {
+                    vec![0.0; self.dim]
+                };
+                self.k[dst..dst + self.dim].copy_from_slice(&val);
+            }
+        }
+    }
+
+    fn absorb(&mut self, lane: usize, buf: &[f32], pos: usize) {
+        for li in 0..self.layers {
+            let at = self.row_at(li, lane, pos);
+            self.k[at..at + self.dim].copy_from_slice(&buf[at..at + self.dim]);
+        }
+    }
+
+    fn reset(&mut self, lane: usize) {
+        for li in 0..self.layers {
+            let at = self.row_at(li, lane, 0);
+            self.k[at..at + self.max_seq * self.dim].fill(0.0);
+        }
+    }
+}
+
+/// The KV-rows-are-a-function-of-the-token-prefix contract: the test
+/// derives every written value from (lane, position, layer) so repeated
+/// prompts produce identical rows — exactly what prefix sharing relies
+/// on (real K/V rows are deterministic in the token prefix).
+fn lane_value(lane: usize, t: usize, layer: usize) -> f32 {
+    (1000 * lane + 10 * t + layer) as f32
+}
+
+fn run_lane_kv_differential(seed: u64) {
+    let (layers, lanes, max_seq, dim) = (2usize, 3usize, 8usize, 2usize);
+    let mut rng = Rng::new(seed.wrapping_mul(104729).wrapping_add(7));
+    let mut kv = LaneKv::new(layers, lanes, max_seq, dim);
+    let mut dense = DenseRef::new(layers, lanes, max_seq, dim);
+    let mut pos_of = vec![0usize; lanes];
+    let stride = max_seq * dim;
+
+    for op in 0..60 {
+        let lane = rng.below(lanes);
+        match rng.below(3) {
+            // (Re)prefill the lane at a random prompt length.
+            0 => {
+                let pos = 1 + rng.below(max_seq);
+                // Lane-distinct token namespaces: cross-lane sharing is
+                // covered by the backend differential above.
+                let tokens: Vec<usize> = (0..pos).map(|t| 10_000 * lane + t).collect();
+                let mut buf = vec![0f32; layers * stride];
+                for li in 0..layers {
+                    for t in 0..pos {
+                        let at = li * stride + t * dim;
+                        buf[at..at + dim].fill(lane_value(lane, t, li));
+                    }
+                }
+                kv.write_lane(lane, &tokens, &buf, &buf, pos)
+                    .unwrap_or_else(|e| panic!("seed {seed} op {op}: write_lane: {e}"));
+                dense.write_lane(lane, &buf, pos);
+                pos_of[lane] = pos;
+            }
+            // Absorb one decode row (only meaningful on a claimed lane).
+            1 if pos_of[lane] > 0 && pos_of[lane] < max_seq => {
+                let pos = pos_of[lane];
+                let mut buf = vec![0f32; layers * lanes * stride];
+                for li in 0..layers {
+                    for b in 0..lanes {
+                        let at = ((li * lanes + b) * max_seq + pos) * dim;
+                        buf[at..at + dim].fill(lane_value(b, pos, li));
+                    }
+                }
+                kv.absorb_lane(lane, 10_000 * lane + pos, &buf, &buf, pos)
+                    .unwrap_or_else(|e| panic!("seed {seed} op {op}: absorb_lane: {e}"));
+                dense.absorb(lane, &buf, pos);
+                pos_of[lane] = pos + 1;
+            }
+            // Cancel / finish: refcounts drop, rows disappear from the
+            // merged view.
+            2 => {
+                kv.reset_lane(lane);
+                dense.reset(lane);
+                pos_of[lane] = 0;
+            }
+            _ => {}
+        }
+        let got = kv
+            .k_literal()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        assert_eq!(
+            bits(&got),
+            bits(&dense.k),
+            "seed {seed} op {op}: merged K layout diverged from the dense reference"
+        );
+        for l in 0..lanes {
+            assert_eq!(kv.pos(l), pos_of[l], "seed {seed} op {op}: lane {l} position");
+        }
+    }
+}
+
+#[test]
+fn lane_kv_matches_dense_reference_under_random_ops() {
+    let seeds: Vec<u64> = match std::env::var("PIFA_KV_SEED") {
+        Ok(s) => vec![s.parse().expect("PIFA_KV_SEED must be a u64")],
+        Err(_) => (0..8).collect(),
+    };
+    for seed in seeds {
+        if let Err(payload) = std::panic::catch_unwind(|| run_lane_kv_differential(seed)) {
+            eprintln!(
+                "kv_differential (LaneKv) FAILED at seed {seed}; reproduce with \
+                 PIFA_KV_SEED={seed} cargo test --test kv_differential"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Randomized scheduler soak suite (DESIGN.md §6/§8).
+//!
+//! Seeded random admit / cancel / deadline / stop-token / lane-fault
+//! sequences drive the [`Scheduler`] state machine against a scripted
+//! backend and a reference model of what must hold afterwards:
+//!
+//! * **no leaked lanes** — every lane the backend handed out is released
+//!   exactly once, and the scheduler drains to idle;
+//! * **no dropped waiters** — every submitted session's event stream
+//!   carries *exactly one* terminal event (`Done` or `Error`), with
+//!   consecutive token indices before it and silence after it;
+//! * **accounting closes** — the metrics terminal buckets
+//!   (completed / cancelled / timeouts / errors / rejected) sum to the
+//!   number of submissions, bucket by bucket.
+//!
+//! Failures print the seed: rerun one seed with
+//! `PIFA_SOAK_SEED=<seed> cargo test --test scheduler_soak`.
+
+use pifa::coordinator::{
+    AdmitVerdict, DecodeBackend, Event, GenRequest, SamplingParams, Scheduler, SchedulerConfig,
+    ServeError, ServeMetrics, StepInput, StepResult,
+};
+use pifa::linalg::Rng;
+use std::cell::Cell;
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+const VOCAB: usize = 8;
+
+/// Deterministic scripted backend with occasional injected per-lane
+/// faults and deferred admissions; tracks lane claim/release balance.
+struct SoakBackend {
+    lanes: usize,
+    max_seq: usize,
+    claimed: HashSet<usize>,
+    step_calls: usize,
+    admit_calls: Cell<usize>,
+    /// Every Nth step call faults its first input lane (0 = never).
+    fault_every: usize,
+    /// Every Nth admit check defers (0 = never).
+    defer_every: usize,
+}
+
+impl SoakBackend {
+    fn new(lanes: usize, max_seq: usize, fault_every: usize, defer_every: usize) -> Self {
+        Self {
+            lanes,
+            max_seq,
+            claimed: HashSet::new(),
+            step_calls: 0,
+            admit_calls: Cell::new(0),
+            fault_every,
+            defer_every,
+        }
+    }
+
+    fn next_token(seq: &[usize]) -> usize {
+        (seq.iter().sum::<usize>() + seq.len()) % VOCAB
+    }
+
+    fn logits_for(seq: &[usize]) -> Vec<f32> {
+        let mut row = vec![0f32; VOCAB];
+        row[Self::next_token(seq)] = 1.0;
+        row
+    }
+}
+
+impl DecodeBackend for SoakBackend {
+    fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn prefill(&mut self, lane: usize, prompt: &[usize]) -> anyhow::Result<Vec<f32>> {
+        assert!(lane < self.lanes, "prefill on out-of-range lane {lane}");
+        assert!(
+            self.claimed.insert(lane),
+            "scheduler double-claimed lane {lane} without a release"
+        );
+        Ok(Self::logits_for(prompt))
+    }
+
+    fn step(&mut self, inputs: &[StepInput<'_>]) -> anyhow::Result<Vec<StepResult>> {
+        self.step_calls += 1;
+        let fault_first =
+            self.fault_every > 0 && self.step_calls % self.fault_every == 0 && !inputs.is_empty();
+        Ok(inputs
+            .iter()
+            .enumerate()
+            .map(|(i, inp)| {
+                assert!(
+                    self.claimed.contains(&inp.lane),
+                    "step on unclaimed lane {}",
+                    inp.lane
+                );
+                if fault_first && i == 0 {
+                    StepResult::Fault { pos: inp.seq.len(), msg: "injected KV fault".into() }
+                } else {
+                    StepResult::Logits(Self::logits_for(inp.seq))
+                }
+            })
+            .collect())
+    }
+
+    fn release(&mut self, lane: usize) {
+        assert!(
+            self.claimed.remove(&lane),
+            "released lane {lane} that was not claimed (double release or leak)"
+        );
+    }
+
+    fn admit_check(&self, _prompt_len: usize, _max_new: usize) -> AdmitVerdict {
+        let n = self.admit_calls.get() + 1;
+        self.admit_calls.set(n);
+        if self.defer_every > 0 && n % self.defer_every == 0 {
+            AdmitVerdict::Defer
+        } else {
+            AdmitVerdict::Admit
+        }
+    }
+}
+
+/// What the reference model expects of one submitted request.
+struct Submitted {
+    rx: mpsc::Receiver<Event>,
+    max_new: usize,
+}
+
+fn run_soak(seed: u64) {
+    let mut rng = Rng::new(seed ^ 0x50AB_50AB);
+    let lanes = 1 + rng.below(4);
+    let fault_every = [0usize, 7, 11][rng.below(3)];
+    let defer_every = [0usize, 5][rng.below(2)];
+    let mut be = SoakBackend::new(lanes, 24, fault_every, defer_every);
+    let cfg = SchedulerConfig {
+        max_batch: 1 + rng.below(4),
+        max_wait: Duration::ZERO,
+        queue_cap: 1 + rng.below(4),
+    };
+    let mut sched = Scheduler::new(cfg, be.lanes());
+    let mut m = ServeMetrics::default();
+
+    let t0 = Instant::now();
+    let mut vt = Duration::ZERO;
+    let mut streams: HashMap<u64, Submitted> = HashMap::new();
+    let mut next_id = 0u64;
+
+    for _ in 0..200 {
+        vt += Duration::from_millis(rng.below(4) as u64);
+        let now = t0 + vt;
+        match rng.below(100) {
+            // Submit: random prompt length (sometimes oversized), random
+            // budget (sometimes zero), sometimes a deadline or stop set.
+            0..=49 => {
+                let plen = 1 + rng.below(30); // max_seq is 24: some reject
+                let prompt: Vec<usize> = (0..plen).map(|_| rng.below(VOCAB)).collect();
+                let max_new = rng.below(7);
+                let mut req = GenRequest::new(next_id, prompt, max_new);
+                if rng.below(5) == 0 {
+                    req = req.with_deadline(Duration::from_millis(rng.below(3) as u64));
+                }
+                if rng.below(4) == 0 {
+                    req = req.with_sampling(SamplingParams {
+                        stop_tokens: vec![rng.below(VOCAB)],
+                        ..SamplingParams::greedy()
+                    });
+                }
+                let (tx, rx) = mpsc::channel();
+                sched.submit(req, tx, &mut m);
+                streams.insert(next_id, Submitted { rx, max_new });
+                next_id += 1;
+            }
+            // Cancel a random known id (possibly already finished).
+            50..=64 if next_id > 0 => {
+                let id = rng.below(next_id as usize) as u64;
+                sched.cancel(id, &mut be, &mut m);
+            }
+            _ => {}
+        }
+        sched.sweep_deadlines(now, &mut be, &mut m);
+        sched.admit(now, &mut be, &mut m);
+        sched.step(&mut be, &mut m);
+    }
+
+    // Drain: everything in flight or queued must reach a terminal state.
+    let mut drain_iters = 0usize;
+    while !sched.is_idle() {
+        drain_iters += 1;
+        assert!(drain_iters < 10_000, "seed {seed}: scheduler failed to drain (leaked lanes?)");
+        vt += Duration::from_millis(1);
+        let now = t0 + vt;
+        sched.sweep_deadlines(now, &mut be, &mut m);
+        sched.admit_now(&mut be, &mut m);
+        sched.step(&mut be, &mut m);
+    }
+    assert!(
+        be.claimed.is_empty(),
+        "seed {seed}: lanes leaked after drain: {:?}",
+        be.claimed
+    );
+
+    // Reference model: every stream has exactly one terminal event.
+    let submitted = next_id as usize;
+    let (mut done, mut cancelled, mut timeouts, mut rejected, mut engine_errs) =
+        (0usize, 0usize, 0usize, 0usize, 0usize);
+    for (id, sub) in &streams {
+        let events: Vec<Event> = sub.rx.try_iter().collect();
+        let mut terminal: Option<&Event> = None;
+        let mut tokens = Vec::new();
+        for ev in &events {
+            assert!(
+                terminal.is_none(),
+                "seed {seed}: request {id} got events after its terminal: {ev:?}"
+            );
+            match ev {
+                Event::Token { index, token } => {
+                    assert_eq!(
+                        *index,
+                        tokens.len(),
+                        "seed {seed}: request {id} token indices not consecutive"
+                    );
+                    tokens.push(*token);
+                }
+                Event::Done(stats) => {
+                    assert_eq!(
+                        stats.tokens, tokens,
+                        "seed {seed}: request {id} Done stats disagree with streamed tokens"
+                    );
+                    assert!(
+                        stats.tokens.len() <= sub.max_new,
+                        "seed {seed}: request {id} overshot max_new"
+                    );
+                    terminal = Some(ev);
+                }
+                Event::Error(_) => terminal = Some(ev),
+            }
+        }
+        match terminal {
+            Some(Event::Done(_)) => done += 1,
+            Some(Event::Error(ServeError::Cancelled)) => cancelled += 1,
+            Some(Event::Error(ServeError::Timeout)) => timeouts += 1,
+            Some(Event::Error(ServeError::Overloaded { .. })) => rejected += 1,
+            Some(Event::Error(ServeError::EngineFailure(_))) => engine_errs += 1,
+            other => panic!(
+                "seed {seed}: request {id} ended without a terminal event ({} events, last {other:?})",
+                events.len()
+            ),
+        }
+    }
+    assert_eq!(
+        done + cancelled + timeouts + rejected + engine_errs,
+        submitted,
+        "seed {seed}: terminal events do not cover every submission"
+    );
+    // Metrics buckets agree with the delivered terminals, bucket by
+    // bucket — no silent double counting or drops.
+    assert_eq!(m.completed, done, "seed {seed}: completed mismatch");
+    assert_eq!(m.cancelled, cancelled, "seed {seed}: cancelled mismatch");
+    assert_eq!(m.timeouts, timeouts, "seed {seed}: timeout mismatch");
+    assert_eq!(m.rejected, rejected, "seed {seed}: rejected mismatch");
+    assert_eq!(m.errors, engine_errs, "seed {seed}: error mismatch");
+}
+
+#[test]
+fn randomized_scheduler_soak() {
+    let seeds: Vec<u64> = match std::env::var("PIFA_SOAK_SEED") {
+        Ok(s) => vec![s.parse().expect("PIFA_SOAK_SEED must be a u64")],
+        Err(_) => (0..24).collect(),
+    };
+    for seed in seeds {
+        if let Err(payload) = std::panic::catch_unwind(|| run_soak(seed)) {
+            eprintln!(
+                "scheduler_soak FAILED at seed {seed}; reproduce with \
+                 PIFA_SOAK_SEED={seed} cargo test --test scheduler_soak"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
