@@ -1,0 +1,89 @@
+//! The bench gate in one sitting: run a single serving scenario through
+//! the `bench-serve` library, self-diff it (passes), then inject a
+//! synthetic 50% TTFT regression into the serialized report and watch
+//! the gate fail — the exact mechanics CI's `bench-gate` job runs via
+//! `pifa bench-serve --smoke` + `pifa bench-diff`.
+//!
+//! ```bash
+//! cargo run --release --example bench_gate
+//! ```
+
+use pifa::bench::diff;
+use pifa::bench::json::Json;
+use pifa::bench::serve::{
+    build_workload, catalogue, run_scenario, CellResult, ServeBenchReport,
+};
+use pifa::coordinator::GenerationMode;
+use pifa::linalg::Rng;
+use pifa::model::config::ModelConfig;
+use pifa::model::transformer::Transformer;
+
+fn main() -> anyhow::Result<()> {
+    // A micro model keeps this demo in the sub-second range.
+    let cfg = ModelConfig {
+        name: "micro".into(),
+        vocab: 64,
+        dim: 24,
+        n_layers: 2,
+        n_heads: 2,
+        ffn_hidden: 32,
+        max_seq: 64,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+    };
+    let mut rng = Rng::new(7);
+    let model = Transformer::new_random(&cfg, &mut rng);
+
+    // One scenario from the real catalogue, trimmed to demo size.
+    let mut sc = catalogue(true)
+        .into_iter()
+        .find(|s| s.name == "poisson-short")
+        .expect("catalogue always carries poisson-short");
+    sc.requests = 6;
+    println!(
+        "scenario {}: {} requests, first arrivals at {:?}",
+        sc.name,
+        sc.requests,
+        build_workload(&sc, cfg.vocab, cfg.max_seq, 0)
+            .iter()
+            .take(3)
+            .map(|w| w.submit_at)
+            .collect::<Vec<_>>()
+    );
+
+    let metrics = run_scenario(&model, GenerationMode::KvCache, &sc, 1)?;
+    let report = ServeBenchReport {
+        model: cfg.name.clone(),
+        smoke: true,
+        reps: 1,
+        cells: vec![CellResult {
+            scenario: sc.name.to_string(),
+            method: "dense".to_string(),
+            requests: sc.requests,
+            metrics,
+        }],
+    };
+    report.print_summary();
+
+    // Self-diff: identical reports are always within noise.
+    let parsed = Json::parse(&report.to_json())?;
+    println!("\nschema: {}", diff::check_schema(&parsed)?);
+    let self_diff = diff::compare_reports(&parsed, &parsed, 1.0)?;
+    self_diff.print();
+    assert!(!self_diff.failed(), "self-diff must pass");
+
+    // Inject a 50% TTFT regression into the serialized candidate: the
+    // gate must fail it even at the widest single-rep noise band.
+    let ttft = report.cells[0].metric("ttft_p50_ms").unwrap_or(0.0);
+    let injected = format!("\"ttft_p50_ms\": {:.6}", ttft * 1.5 + 1.0);
+    let slow_text = report
+        .to_json()
+        .replace(&format!("\"ttft_p50_ms\": {ttft:.6}"), &injected);
+    let slow = Json::parse(&slow_text)?;
+    println!("\ninjecting a 50% TTFT regression into the candidate:");
+    let gated = diff::compare_reports(&parsed, &slow, 1.0)?;
+    gated.print();
+    assert!(gated.failed(), "the injected regression must trip the gate");
+    println!("\ngate verdict: FAILED as intended — this is the exit-1 path CI merges gate on");
+    Ok(())
+}

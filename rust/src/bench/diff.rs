@@ -1,0 +1,864 @@
+//! `pifa bench-diff` — the noise-aware bench comparator behind the CI
+//! regression gate.
+//!
+//! Compares a baseline bench JSON against a candidate (both
+//! `BENCH_serve.json` and `BENCH_kernels.json` schemas), judging each
+//! *gated* metric with a direction tag and a relative threshold:
+//! "higher goodput" and "lower TTFT" both count as wins, a move past
+//! the threshold in the bad direction is a regression, and anything
+//! inside the band is within noise. Thresholds are median-of-k aware —
+//! a report whose cells are medians of fewer repetitions gets a wider
+//! band (see [`noise_factor`]) — and every time-valued gate carries an
+//! absolute floor so microsecond jitter on near-zero medians cannot
+//! fail a build.
+//!
+//! The band is multiplicative (see [`judge`]): with limit
+//! `L = 1 + band·rel_tol`, moving past `base·L` or below `base/L` in
+//! the bad direction regresses. Ratio symmetry means the band can never
+//! swallow a metric's whole range — a goodput collapse to zero fails at
+//! any tolerance scale.
+//!
+//! Failure policy (what makes the exit code non-zero):
+//! * any gated metric regressing past its band;
+//! * a *required* gated metric present in the baseline but missing from
+//!   the candidate (a silently dropped measurement is worse than a slow
+//!   one);
+//! * a whole cell disappearing (coverage shrank).
+//!
+//! A metric present only in the candidate is a note, not a failure —
+//! new coverage must not be punished — and so is the absence of an
+//! `optional` gated metric (the KV-pool rates exist only for paged
+//! backends; see `ServeMetrics::snapshot`). Metrics without a gate
+//! entry are informational and never affect the verdict.
+//!
+//! `--check-schema FILE` validates a single bench JSON structurally
+//! (schema tag, required fields, all metric values finite) — the loud
+//! replacement for the old `grep -q '"pifa_vs_lowrank"'` smoke check.
+
+use crate::bench::json::Json;
+use crate::bench::tables::TablePrinter;
+use crate::bench::{kernels, serve};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Which way a gated metric is allowed to move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    LowerIsBetter,
+    HigherIsBetter,
+}
+
+/// Gate parameters for one metric name.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricGate {
+    pub direction: Direction,
+    /// Relative band at k >= 3 repetitions (scaled by [`noise_factor`]).
+    pub rel_tol: f64,
+    /// Absolute no-op band: |base - cand| below this is always noise.
+    pub abs_floor: f64,
+    /// A metric whose presence depends on backend configuration (e.g.
+    /// the KV-pool rates exist only for paged backends, per the
+    /// `ServeMetrics::snapshot` contract). Its disappearance from the
+    /// candidate is a note, not a failure.
+    pub optional: bool,
+}
+
+/// The gated-metric table. Names match [`crate::coordinator::ServeMetrics::snapshot`]
+/// and the `bench-kernels` ratio keys; anything absent here is
+/// informational. To gate a new metric, emit it from the bench and add
+/// one row (DESIGN.md §9 walks through it).
+pub fn gate_for(metric: &str) -> Option<MetricGate> {
+    use Direction::{HigherIsBetter, LowerIsBetter};
+    let g = |direction, rel_tol, abs_floor| MetricGate {
+        direction,
+        rel_tol,
+        abs_floor,
+        optional: false,
+    };
+    match metric {
+        // Serving latency percentiles (ms): tails get a wider band.
+        "ttft_p50_ms" => Some(g(LowerIsBetter, 0.25, 0.25)),
+        "ttft_p95_ms" => Some(g(LowerIsBetter, 0.30, 0.50)),
+        "itl_p50_ms" => Some(g(LowerIsBetter, 0.25, 0.10)),
+        "itl_p95_ms" => Some(g(LowerIsBetter, 0.30, 0.25)),
+        "latency_p50_ms" => Some(g(LowerIsBetter, 0.25, 0.50)),
+        "latency_p95_ms" => Some(g(LowerIsBetter, 0.30, 1.00)),
+        // Work delivered.
+        "goodput_tps" => Some(g(HigherIsBetter, 0.25, 1.0)),
+        "throughput_tps" => Some(g(HigherIsBetter, 0.25, 1.0)),
+        "completed" => Some(g(HigherIsBetter, 0.20, 1.5)),
+        // Pressure + paging effectiveness. The prefix-hit rate exists
+        // only when the backend serves through the paged pool, so its
+        // absence is configuration, not regression (optional).
+        "queue_depth_p95" => Some(g(LowerIsBetter, 0.50, 1.0)),
+        "prefix_hit_rate" => Some(MetricGate {
+            direction: HigherIsBetter,
+            rel_tol: 0.25,
+            abs_floor: 0.05,
+            optional: true,
+        }),
+        // Kernel speedup ratios (bench-kernels): machine-portable-ish,
+        // but still timing quotients — wide band.
+        "pifa_vs_lowrank" | "pifa_vs_dense" | "lowrank_vs_dense" | "s24_vs_dense"
+        | "hybrid_vs_dense" => Some(g(HigherIsBetter, 0.35, 0.05)),
+        _ => None,
+    }
+}
+
+/// Median-of-k awareness: the relative band widens when a report's cell
+/// values are medians of few repetitions (the median's spread shrinks
+/// roughly like 1/sqrt(k)). Calibrated so `rel_tol` is the band at
+/// k = 3 and a single-rep report gets 1.5x of it.
+pub fn noise_factor(reps: f64) -> f64 {
+    (3.0 / reps.max(1.0)).sqrt().clamp(1.0, 1.5)
+}
+
+/// Outcome of one gated comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Improvement,
+    WithinNoise,
+    Regression,
+    /// Metric only in the candidate (new coverage — a note, not a fail).
+    MissingBaseline,
+    /// Metric in the baseline but gone from the candidate (fails).
+    MissingCandidate,
+    /// An `optional` gated metric absent from the candidate — a
+    /// configuration change (e.g. a method moved off the paged pool),
+    /// not a regression.
+    OptionalAbsent,
+    /// Whole cell gone from the candidate (fails).
+    CellMissing,
+}
+
+impl Verdict {
+    /// Does this verdict fail the gate?
+    pub fn fails(self) -> bool {
+        matches!(self, Verdict::Regression | Verdict::MissingCandidate | Verdict::CellMissing)
+    }
+
+    fn label(self) -> &'static str {
+        match self {
+            Verdict::Improvement => "improvement",
+            Verdict::WithinNoise => "within-noise",
+            Verdict::Regression => "REGRESSION",
+            Verdict::MissingBaseline => "new-in-candidate",
+            Verdict::MissingCandidate => "MISSING-IN-CANDIDATE",
+            Verdict::OptionalAbsent => "optional-absent",
+            Verdict::CellMissing => "CELL-MISSING",
+        }
+    }
+}
+
+/// One judged (cell, metric) pair.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub cell: String,
+    pub metric: String,
+    pub base: Option<f64>,
+    pub cand: Option<f64>,
+    /// Signed relative change (cand vs base), when both sides exist.
+    pub change: Option<f64>,
+    pub verdict: Verdict,
+}
+
+/// Full comparison result.
+pub struct DiffReport {
+    pub schema: String,
+    /// Effective relative-band multiplier that was applied.
+    pub band_scale: f64,
+    pub findings: Vec<Finding>,
+}
+
+impl DiffReport {
+    /// True when any finding fails the gate (non-zero exit).
+    pub fn failed(&self) -> bool {
+        self.findings.iter().any(|f| f.verdict.fails())
+    }
+
+    fn count(&self, v: Verdict) -> usize {
+        self.findings.iter().filter(|f| f.verdict == v).count()
+    }
+
+    /// Human-readable table: every non-within-noise finding, then a
+    /// one-line summary. Quiet when everything is inside the band.
+    pub fn print(&self) {
+        let interesting: Vec<&Finding> =
+            self.findings.iter().filter(|f| f.verdict != Verdict::WithinNoise).collect();
+        if !interesting.is_empty() {
+            let mut t = TablePrinter::new(
+                &format!("bench-diff ({}) — findings outside the noise band", self.schema),
+                &["cell", "metric", "baseline", "candidate", "change", "verdict"],
+            );
+            let fmt = |v: Option<f64>| match v {
+                Some(x) => format!("{x:.3}"),
+                None => "-".to_string(),
+            };
+            for f in interesting {
+                t.row(&[
+                    f.cell.clone(),
+                    f.metric.clone(),
+                    fmt(f.base),
+                    fmt(f.cand),
+                    match f.change {
+                        Some(c) => format!("{:+.1}%", c * 100.0),
+                        None => "-".to_string(),
+                    },
+                    f.verdict.label().to_string(),
+                ]);
+            }
+            t.print();
+        }
+        println!(
+            "bench-diff: {} gated comparisons | {} improvements, {} within noise, \
+             {} regressions, {} missing-in-candidate, {} new-in-candidate, \
+             {} optional-absent, {} cells missing (band scale {:.2})",
+            self.findings.len(),
+            self.count(Verdict::Improvement),
+            self.count(Verdict::WithinNoise),
+            self.count(Verdict::Regression),
+            self.count(Verdict::MissingCandidate),
+            self.count(Verdict::MissingBaseline),
+            self.count(Verdict::OptionalAbsent),
+            self.count(Verdict::CellMissing),
+            self.band_scale,
+        );
+    }
+}
+
+/// Named numeric metrics of one flattened cell.
+type CellMetrics = Vec<(String, f64)>;
+
+/// A schema-agnostic flattening: named cells each carrying named
+/// numeric metrics, plus the repetition count the medians came from.
+struct FlatReport {
+    schema: String,
+    reps: f64,
+    cells: Vec<(String, CellMetrics)>,
+}
+
+fn flatten(j: &Json) -> Result<FlatReport> {
+    let schema = j
+        .str("schema")
+        .context("bench JSON has no \"schema\" field")?
+        .to_string();
+    if schema == serve::SCHEMA {
+        let reps = j.num("reps").unwrap_or(1.0);
+        let mut cells = Vec::new();
+        for cell in j.get("cells").and_then(Json::as_arr).unwrap_or(&[]) {
+            let id = format!(
+                "{}/{}",
+                cell.str("scenario").unwrap_or("?"),
+                cell.str("method").unwrap_or("?")
+            );
+            let mut metrics = Vec::new();
+            if let Some(fields) = cell.get("metrics").and_then(Json::as_obj) {
+                for (k, v) in fields {
+                    if let Some(x) = v.as_f64() {
+                        metrics.push((k.clone(), x));
+                    }
+                }
+            }
+            cells.push((id, metrics));
+        }
+        Ok(FlatReport { schema, reps, cells })
+    } else if schema == kernels::SCHEMA {
+        let reps = j.num("samples").unwrap_or(1.0);
+        let mut cells = Vec::new();
+        for ratio in j.get("ratios").and_then(Json::as_arr).unwrap_or(&[]) {
+            let id = format!(
+                "ratio {}x{} b{}",
+                ratio.num("m").unwrap_or(0.0),
+                ratio.num("n").unwrap_or(0.0),
+                ratio.num("batch").unwrap_or(0.0)
+            );
+            let mut metrics = Vec::new();
+            if let Some(fields) = ratio.as_obj() {
+                for (k, v) in fields {
+                    if !matches!(k.as_str(), "m" | "n" | "batch") {
+                        if let Some(x) = v.as_f64() {
+                            metrics.push((k.clone(), x));
+                        }
+                    }
+                }
+            }
+            cells.push((id, metrics));
+        }
+        for case in j.get("cases").and_then(Json::as_arr).unwrap_or(&[]) {
+            let id = format!(
+                "case {} {}x{} b{}",
+                case.str("kind").unwrap_or("?"),
+                case.num("m").unwrap_or(0.0),
+                case.num("n").unwrap_or(0.0),
+                case.num("batch").unwrap_or(0.0)
+            );
+            // Raw timings are informational (no gate entry), but the
+            // cell itself still counts for coverage tracking.
+            let mut metrics = Vec::new();
+            if let Some(x) = case.num("median_us") {
+                metrics.push(("median_us".to_string(), x));
+            }
+            cells.push((id, metrics));
+        }
+        Ok(FlatReport { schema, reps, cells })
+    } else {
+        bail!("unknown bench schema '{schema}'")
+    }
+}
+
+fn lookup(metrics: &[(String, f64)], key: &str) -> Option<f64> {
+    metrics.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+}
+
+/// Judge one gated metric pair against its (scaled) band.
+///
+/// The band is **multiplicative**: with limit `L = 1 + band * rel_tol`,
+/// a value is a regression when it moves past `base * L` in the bad
+/// direction or past `base / L` in the bad direction for
+/// higher-is-better metrics. Dividing on the downside keeps the band
+/// symmetric in ratio space (a 2x slowdown and a 2x speedup are
+/// equidistant) and — unlike a subtractive `-X%` threshold — can never
+/// exceed the metric's possible range, so a higher-is-better gate stays
+/// live at any tolerance scale (a goodput collapse to 0 always fires).
+fn judge(gate: MetricGate, base: f64, cand: f64, band: f64) -> (Verdict, f64) {
+    let change = if base.abs() > 1e-12 { (cand - base) / base.abs() } else { f64::INFINITY };
+    if (cand - base).abs() <= gate.abs_floor {
+        return (Verdict::WithinNoise, if change.is_finite() { change } else { 0.0 });
+    }
+    let worse = match gate.direction {
+        Direction::LowerIsBetter => cand > base,
+        Direction::HigherIsBetter => cand < base,
+    };
+    if base.abs() <= 1e-12 {
+        // No relative scale: past the absolute floor, direction decides.
+        return (if worse { Verdict::Regression } else { Verdict::Improvement }, 0.0);
+    }
+    // Gated metrics are non-negative magnitudes; past the ≈0 guard the
+    // ratio is well-defined.
+    let limit = 1.0 + band * gate.rel_tol;
+    let ratio = cand / base;
+    let (worse_past, better_past) = match gate.direction {
+        Direction::LowerIsBetter => (ratio > limit, ratio < 1.0 / limit),
+        Direction::HigherIsBetter => (ratio < 1.0 / limit, ratio > limit),
+    };
+    let verdict = if worse_past {
+        debug_assert!(worse);
+        Verdict::Regression
+    } else if better_past {
+        Verdict::Improvement
+    } else {
+        Verdict::WithinNoise
+    };
+    (verdict, change)
+}
+
+/// Compare two parsed bench reports. `tol_scale` multiplies every
+/// relative band (CI uses > 1 to absorb runner heterogeneity; tests use
+/// 1.0). Returns the full finding list; the caller decides how to
+/// render or fail.
+pub fn compare_reports(base: &Json, cand: &Json, tol_scale: f64) -> Result<DiffReport> {
+    let b = flatten(base)?;
+    let c = flatten(cand)?;
+    if b.schema != c.schema {
+        bail!("schema mismatch: baseline {} vs candidate {}", b.schema, c.schema);
+    }
+    // Median-of-k awareness uses the weaker side's repetition count.
+    let band = tol_scale * noise_factor(b.reps.min(c.reps));
+    let mut findings = Vec::new();
+    for (cell_id, base_metrics) in &b.cells {
+        let Some((_, cand_metrics)) = c.cells.iter().find(|(id, _)| id == cell_id) else {
+            findings.push(Finding {
+                cell: cell_id.clone(),
+                metric: "*".to_string(),
+                base: None,
+                cand: None,
+                change: None,
+                verdict: Verdict::CellMissing,
+            });
+            continue;
+        };
+        for (metric, base_val) in base_metrics {
+            let Some(gate) = gate_for(metric) else { continue };
+            match lookup(cand_metrics, metric) {
+                None => findings.push(Finding {
+                    cell: cell_id.clone(),
+                    metric: metric.clone(),
+                    base: Some(*base_val),
+                    cand: None,
+                    change: None,
+                    verdict: if gate.optional {
+                        Verdict::OptionalAbsent
+                    } else {
+                        Verdict::MissingCandidate
+                    },
+                }),
+                Some(cand_val) => {
+                    let (verdict, change) = judge(gate, *base_val, cand_val, band);
+                    findings.push(Finding {
+                        cell: cell_id.clone(),
+                        metric: metric.clone(),
+                        base: Some(*base_val),
+                        cand: Some(cand_val),
+                        change: Some(change),
+                        verdict,
+                    });
+                }
+            }
+        }
+        // Gated metrics that appeared only in the candidate: a note.
+        for (metric, cand_val) in cand_metrics {
+            if gate_for(metric).is_some() && lookup(base_metrics, metric).is_none() {
+                findings.push(Finding {
+                    cell: cell_id.clone(),
+                    metric: metric.clone(),
+                    base: None,
+                    cand: Some(*cand_val),
+                    change: None,
+                    verdict: Verdict::MissingBaseline,
+                });
+            }
+        }
+    }
+    Ok(DiffReport { schema: b.schema, band_scale: band, findings })
+}
+
+/// Structural validation of one bench JSON: known schema tag, required
+/// fields present, every metric value finite. Returns the schema name.
+pub fn check_schema(j: &Json) -> Result<&'static str> {
+    let schema = j.str("schema").context("missing \"schema\" field")?;
+    if schema == serve::SCHEMA {
+        j.str("model").context("serve schema: missing \"model\"")?;
+        let reps = j.num("reps").context("serve schema: missing \"reps\"")?;
+        if !(reps.is_finite() && reps >= 1.0) {
+            bail!("serve schema: reps {reps} invalid");
+        }
+        let cells = j
+            .get("cells")
+            .and_then(Json::as_arr)
+            .context("serve schema: missing \"cells\" array")?;
+        if cells.is_empty() {
+            bail!("serve schema: empty \"cells\"");
+        }
+        for (i, cell) in cells.iter().enumerate() {
+            let scenario = cell
+                .str("scenario")
+                .with_context(|| format!("cell {i}: missing \"scenario\""))?;
+            cell.str("method").with_context(|| format!("cell {i}: missing \"method\""))?;
+            cell.num("requests")
+                .with_context(|| format!("cell {i} ({scenario}): missing \"requests\""))?;
+            let metrics = cell
+                .get("metrics")
+                .and_then(Json::as_obj)
+                .with_context(|| format!("cell {i} ({scenario}): missing \"metrics\""))?;
+            for required in
+                ["ttft_p50_ms", "itl_p50_ms", "latency_p50_ms", "goodput_tps", "throughput_tps"]
+            {
+                let v = cell
+                    .get("metrics")
+                    .and_then(|m| m.num(required))
+                    .with_context(|| format!("cell {i} ({scenario}): missing {required}"))?;
+                if !v.is_finite() {
+                    bail!("cell {i} ({scenario}): {required} = {v} not finite");
+                }
+            }
+            for (k, v) in metrics {
+                let x = v
+                    .as_f64()
+                    .with_context(|| format!("cell {i} ({scenario}): metric {k} not a number"))?;
+                if !x.is_finite() {
+                    bail!("cell {i} ({scenario}): metric {k} = {x} not finite");
+                }
+            }
+        }
+        Ok(serve::SCHEMA)
+    } else if schema == kernels::SCHEMA {
+        for field in ["warmup", "samples"] {
+            j.num(field)
+                .with_context(|| format!("kernels schema: missing \"{field}\""))?;
+        }
+        let cases = j
+            .get("cases")
+            .and_then(Json::as_arr)
+            .context("kernels schema: missing \"cases\" array")?;
+        if cases.is_empty() {
+            bail!("kernels schema: empty \"cases\"");
+        }
+        for (i, case) in cases.iter().enumerate() {
+            case.str("kind").with_context(|| format!("case {i}: missing \"kind\""))?;
+            for field in ["m", "n", "r", "batch", "median_us", "p10_us", "p90_us"] {
+                let v =
+                    case.num(field).with_context(|| format!("case {i}: missing {field}"))?;
+                if !v.is_finite() {
+                    bail!("case {i}: {field} = {v} not finite");
+                }
+            }
+        }
+        let ratios = j
+            .get("ratios")
+            .and_then(Json::as_arr)
+            .context("kernels schema: missing \"ratios\" array")?;
+        if ratios.is_empty() {
+            bail!("kernels schema: empty \"ratios\"");
+        }
+        for (i, ratio) in ratios.iter().enumerate() {
+            for field in ["m", "n", "batch", "pifa_vs_lowrank", "pifa_vs_dense"] {
+                let v =
+                    ratio.num(field).with_context(|| format!("ratio {i}: missing {field}"))?;
+                if !v.is_finite() {
+                    bail!("ratio {i}: {field} = {v} not finite");
+                }
+            }
+        }
+        Ok(kernels::SCHEMA)
+    } else {
+        bail!("unknown bench schema '{schema}' (known: {}, {})", serve::SCHEMA, kernels::SCHEMA)
+    }
+}
+
+fn load(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Json::parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// CLI entry. `pifa bench-diff <baseline> <candidate>
+/// [--tolerance-scale F]` compares and exits non-zero on failure;
+/// `pifa bench-diff --check-schema <file>` validates one report.
+pub fn run_cli(args: &[String]) -> Result<()> {
+    let mut positional: Vec<&str> = Vec::new();
+    let mut check_schema_mode = false;
+    let mut tol_scale = 1.0f64;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--check-schema" => check_schema_mode = true,
+            "--tolerance-scale" => {
+                i += 1;
+                let v = args
+                    .get(i)
+                    .context("--tolerance-scale needs a value")?;
+                tol_scale = v
+                    .parse()
+                    .with_context(|| format!("--tolerance-scale '{v}' is not a number"))?;
+                if !(tol_scale.is_finite() && tol_scale > 0.0) {
+                    bail!("--tolerance-scale must be a positive number, got {tol_scale}");
+                }
+            }
+            flag if flag.starts_with("--") => bail!("unknown bench-diff flag '{flag}'"),
+            path => positional.push(path),
+        }
+        i += 1;
+    }
+    if check_schema_mode {
+        if positional.len() != 1 {
+            bail!("usage: pifa bench-diff --check-schema <file>");
+        }
+        let path = Path::new(positional[0]);
+        let schema = check_schema(&load(path)?)?;
+        println!("schema OK: {} is valid {}", path.display(), schema);
+        return Ok(());
+    }
+    if positional.len() != 2 {
+        bail!(
+            "usage: pifa bench-diff <baseline.json> <candidate.json> [--tolerance-scale F]\n\
+             or:    pifa bench-diff --check-schema <file.json>"
+        );
+    }
+    let base = load(Path::new(positional[0]))?;
+    let cand = load(Path::new(positional[1]))?;
+    let report = compare_reports(&base, &cand, tol_scale)?;
+    report.print();
+    if report.failed() {
+        println!("bench-diff: FAILED — candidate regressed against the baseline");
+        std::process::exit(1);
+    }
+    println!("bench-diff: OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A serve report with one cell and the given metric values.
+    fn serve_report(reps: usize, metrics: &[(&str, f64)]) -> Json {
+        let body: Vec<String> =
+            metrics.iter().map(|(k, v)| format!("\"{k}\": {v:.6}")).collect();
+        let text = format!(
+            "{{\"schema\": \"{}\", \"model\": \"m\", \"smoke\": true, \"reps\": {reps}, \
+             \"cells\": [{{\"scenario\": \"s\", \"method\": \"d\", \"requests\": 4, \
+             \"metrics\": {{{}}}}}]}}",
+            serve::SCHEMA,
+            body.join(", ")
+        );
+        Json::parse(&text).unwrap()
+    }
+
+    const BASE_METRICS: &[(&str, f64)] = &[
+        ("ttft_p50_ms", 10.0),
+        ("itl_p50_ms", 2.0),
+        ("latency_p50_ms", 40.0),
+        ("goodput_tps", 100.0),
+        ("throughput_tps", 120.0),
+    ];
+
+    fn verdict_of(report: &DiffReport, metric: &str) -> Verdict {
+        report
+            .findings
+            .iter()
+            .find(|f| f.metric == metric)
+            .unwrap_or_else(|| panic!("no finding for {metric}"))
+            .verdict
+    }
+
+    #[test]
+    fn self_diff_passes_with_everything_within_noise() {
+        let j = serve_report(1, BASE_METRICS);
+        let report = compare_reports(&j, &j, 1.0).unwrap();
+        assert!(!report.failed());
+        assert!(report.findings.iter().all(|f| f.verdict == Verdict::WithinNoise));
+    }
+
+    /// The acceptance scenario: a 50% TTFT regression must fail even at
+    /// the widest (single-rep) noise band.
+    #[test]
+    fn fifty_percent_ttft_regression_fails() {
+        let base = serve_report(1, BASE_METRICS);
+        let mut worse = BASE_METRICS.to_vec();
+        worse[0] = ("ttft_p50_ms", 15.0);
+        let cand = serve_report(1, &worse);
+        let report = compare_reports(&base, &cand, 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "ttft_p50_ms"), Verdict::Regression);
+        assert!(report.failed(), "50% TTFT regression must exit non-zero");
+        // ...and the reverse move is an improvement, not a failure (at
+        // the k=3 band; relative change is judged against the baseline,
+        // so 15 -> 10 ms is -33%).
+        let base3 = serve_report(3, BASE_METRICS);
+        let mut worse3 = BASE_METRICS.to_vec();
+        worse3[0] = ("ttft_p50_ms", 15.0);
+        let cand3 = serve_report(3, &worse3);
+        let report = compare_reports(&cand3, &base3, 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "ttft_p50_ms"), Verdict::Improvement);
+        assert!(!report.failed());
+    }
+
+    #[test]
+    fn small_moves_stay_within_noise() {
+        let base = serve_report(3, BASE_METRICS);
+        let mut close = BASE_METRICS.to_vec();
+        close[0] = ("ttft_p50_ms", 11.5); // +15% < 25% band at k=3
+        close[3] = ("goodput_tps", 92.0); // -8% < 25% band
+        let cand = serve_report(3, &close);
+        let report = compare_reports(&base, &cand, 1.0).unwrap();
+        assert!(!report.failed());
+        assert_eq!(verdict_of(&report, "ttft_p50_ms"), Verdict::WithinNoise);
+        assert_eq!(verdict_of(&report, "goodput_tps"), Verdict::WithinNoise);
+    }
+
+    #[test]
+    fn direction_tags_make_higher_goodput_a_win() {
+        let base = serve_report(3, BASE_METRICS);
+        let mut moved = BASE_METRICS.to_vec();
+        moved[3] = ("goodput_tps", 150.0); // +50% goodput: win
+        moved[4] = ("throughput_tps", 60.0); // -50% throughput: regression
+        let cand = serve_report(3, &moved);
+        let report = compare_reports(&base, &cand, 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "goodput_tps"), Verdict::Improvement);
+        assert_eq!(verdict_of(&report, "throughput_tps"), Verdict::Regression);
+        assert!(report.failed());
+    }
+
+    #[test]
+    fn missing_metric_fails_only_when_candidate_lost_it() {
+        let base = serve_report(1, BASE_METRICS);
+        let cand = serve_report(1, &BASE_METRICS[..4]); // throughput_tps gone
+        let report = compare_reports(&base, &cand, 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "throughput_tps"), Verdict::MissingCandidate);
+        assert!(report.failed(), "a dropped gated metric must fail the gate");
+        // The mirror image — metric new in the candidate — is a note.
+        let report = compare_reports(&cand, &base, 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "throughput_tps"), Verdict::MissingBaseline);
+        assert!(!report.failed(), "new coverage must not fail the gate");
+    }
+
+    #[test]
+    fn missing_cell_fails_the_gate() {
+        let base = serve_report(1, BASE_METRICS);
+        let empty = Json::parse(&format!(
+            "{{\"schema\": \"{}\", \"model\": \"m\", \"reps\": 1, \"cells\": \
+             [{{\"scenario\": \"other\", \"method\": \"d\", \"requests\": 1, \
+             \"metrics\": {{\"ttft_p50_ms\": 1.0}}}}]}}",
+            serve::SCHEMA
+        ))
+        .unwrap();
+        let report = compare_reports(&base, &empty, 1.0).unwrap();
+        assert!(report.findings.iter().any(|f| f.verdict == Verdict::CellMissing));
+        assert!(report.failed());
+    }
+
+    #[test]
+    fn median_of_k_awareness_widens_single_rep_bands() {
+        assert_eq!(noise_factor(3.0), 1.0);
+        assert_eq!(noise_factor(9.0), 1.0, "more reps never widens the band");
+        assert!((noise_factor(1.0) - 1.5).abs() < 1e-12);
+        assert!(noise_factor(2.0) > 1.0 && noise_factor(2.0) < 1.5);
+        // +30% TTFT: outside the k=3 band (25%), inside the k=1 band
+        // (37.5%) — the same delta judges differently by rep count.
+        let mut moved = BASE_METRICS.to_vec();
+        moved[0] = ("ttft_p50_ms", 13.0);
+        let strict =
+            compare_reports(&serve_report(3, BASE_METRICS), &serve_report(3, &moved), 1.0)
+                .unwrap();
+        assert_eq!(verdict_of(&strict, "ttft_p50_ms"), Verdict::Regression);
+        let loose =
+            compare_reports(&serve_report(1, BASE_METRICS), &serve_report(1, &moved), 1.0)
+                .unwrap();
+        assert_eq!(verdict_of(&loose, "ttft_p50_ms"), Verdict::WithinNoise);
+    }
+
+    #[test]
+    fn abs_floor_shields_near_zero_medians() {
+        let mut base = BASE_METRICS.to_vec();
+        base[1] = ("itl_p50_ms", 0.02);
+        let mut cand = base.clone();
+        cand[1] = ("itl_p50_ms", 0.06); // 3x relative, but 0.04 ms absolute
+        let report =
+            compare_reports(&serve_report(3, &base), &serve_report(3, &cand), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "itl_p50_ms"), Verdict::WithinNoise);
+    }
+
+    #[test]
+    fn informational_metrics_never_gate() {
+        let base = serve_report(1, &[("wall_ms", 100.0), ("ttft_p50_ms", 1.0)]);
+        let cand = serve_report(1, &[("wall_ms", 9000.0), ("ttft_p50_ms", 1.0)]);
+        let report = compare_reports(&base, &cand, 1.0).unwrap();
+        assert!(!report.failed(), "wall_ms has no gate entry and must not fail");
+        assert!(report.findings.iter().all(|f| f.metric != "wall_ms"));
+    }
+
+    /// Regression guard for the multiplicative band: a higher-is-better
+    /// gate must stay live at ANY tolerance scale — a subtractive "-X%"
+    /// threshold above 100% could never fire on a bounded drop, but the
+    /// ratio band always catches a collapse.
+    #[test]
+    fn goodput_collapse_fails_even_at_wide_tolerance() {
+        let base = serve_report(1, BASE_METRICS);
+        let mut dead = BASE_METRICS.to_vec();
+        dead[3] = ("goodput_tps", 0.0);
+        let cand = serve_report(1, &dead);
+        // Scale 3 at one rep: relative band 3 * 1.5 * 0.25 = 112.5%.
+        let report = compare_reports(&base, &cand, 3.0).unwrap();
+        assert_eq!(verdict_of(&report, "goodput_tps"), Verdict::Regression);
+        assert!(report.failed(), "a total goodput collapse must fail at any scale");
+    }
+
+    /// Optional gated metrics (pool-dependent rates): disappearing from
+    /// the candidate is a configuration note, not a failure — per the
+    /// `ServeMetrics::snapshot` contract that KV metrics exist only for
+    /// paged backends.
+    #[test]
+    fn optional_kv_metric_absence_is_not_a_failure() {
+        let mut with_kv = BASE_METRICS.to_vec();
+        with_kv.push(("prefix_hit_rate", 0.5));
+        let base = serve_report(1, &with_kv);
+        let cand = serve_report(1, BASE_METRICS); // method moved off the pool
+        let report = compare_reports(&base, &cand, 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "prefix_hit_rate"), Verdict::OptionalAbsent);
+        assert!(!report.failed(), "pool-config change must not red the gate");
+        // A *required* gated metric disappearing still fails (guard that
+        // the optional carve-out stays narrow).
+        let cand2 = serve_report(1, &BASE_METRICS[..4]);
+        assert!(compare_reports(&base, &cand2, 1.0).unwrap().failed());
+    }
+
+    #[test]
+    fn tolerance_scale_widens_the_band() {
+        let mut worse = BASE_METRICS.to_vec();
+        worse[0] = ("ttft_p50_ms", 15.0);
+        let base = serve_report(3, BASE_METRICS);
+        let cand = serve_report(3, &worse);
+        assert!(compare_reports(&base, &cand, 1.0).unwrap().failed());
+        assert!(!compare_reports(&base, &cand, 3.0).unwrap().failed());
+    }
+
+    #[test]
+    fn schema_mismatch_and_unknown_schema_error() {
+        let serve = serve_report(1, BASE_METRICS);
+        let kernels_doc = kernels_json();
+        assert!(compare_reports(&serve, &kernels_doc, 1.0).is_err());
+        let unknown = Json::parse("{\"schema\": \"nope-v9\"}").unwrap();
+        assert!(compare_reports(&unknown, &unknown, 1.0).is_err());
+        assert!(check_schema(&unknown).is_err());
+    }
+
+    fn kernels_json() -> Json {
+        use crate::bench::kernels::{run, KernelBenchConfig};
+        let cfg =
+            KernelBenchConfig { dims: vec![(16, 16)], batches: vec![1], warmup: 0, samples: 1 };
+        Json::parse(&run(&cfg).unwrap().to_json()).unwrap()
+    }
+
+    #[test]
+    fn kernels_reports_self_diff_and_validate() {
+        let j = kernels_json();
+        assert_eq!(check_schema(&j).unwrap(), kernels::SCHEMA);
+        let report = compare_reports(&j, &j, 1.0).unwrap();
+        assert!(!report.failed());
+        assert!(
+            report.findings.iter().any(|f| f.metric == "pifa_vs_lowrank"),
+            "kernel ratio must be a gated comparison"
+        );
+    }
+
+    /// A deterministic hand-written kernels report (fixed ratio values,
+    /// no timing involved).
+    fn kernels_fixture(pifa_vs_lowrank: f64) -> Json {
+        Json::parse(&format!(
+            "{{\"schema\": \"{}\", \"pool_parallelism\": 1, \"warmup\": 3, \"samples\": 9, \
+             \"cases\": [{{\"kind\": \"dense\", \"m\": 16, \"n\": 16, \"r\": 0, \"batch\": 1, \
+             \"median_us\": 1.0, \"p10_us\": 0.9, \"p90_us\": 1.1}}], \
+             \"ratios\": [{{\"m\": 16, \"n\": 16, \"batch\": 1, \
+             \"pifa_vs_lowrank\": {pifa_vs_lowrank:.4}, \"pifa_vs_dense\": 1.1, \
+             \"lowrank_vs_dense\": 0.9, \"s24_vs_dense\": 1.0, \"hybrid_vs_dense\": 1.0}}]}}",
+            kernels::SCHEMA
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn kernels_ratio_collapse_is_a_regression() {
+        // 1.5x -> 0.75x at 9 samples: -50% past the 35% ratio band.
+        let base = kernels_fixture(1.5);
+        let collapsed = kernels_fixture(0.75);
+        let report = compare_reports(&base, &collapsed, 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "pifa_vs_lowrank"), Verdict::Regression);
+        assert!(report.failed(), "a collapsed pifa_vs_lowrank ratio must fail");
+        assert!(!compare_reports(&base, &base, 1.0).unwrap().failed());
+    }
+
+    #[test]
+    fn check_schema_accepts_serve_and_rejects_mutations() {
+        let good = serve_report(1, BASE_METRICS);
+        assert_eq!(check_schema(&good).unwrap(), serve::SCHEMA);
+        // Missing a required metric.
+        let bad = serve_report(1, &BASE_METRICS[1..]);
+        assert!(check_schema(&bad).is_err(), "missing ttft_p50_ms must fail loudly");
+        // Non-finite metric value (1e999 parses to +inf).
+        let inf = Json::parse(&format!(
+            "{{\"schema\": \"{}\", \"model\": \"m\", \"reps\": 1, \"cells\": \
+             [{{\"scenario\": \"s\", \"method\": \"d\", \"requests\": 1, \"metrics\": \
+             {{\"ttft_p50_ms\": 1e999, \"itl_p50_ms\": 1, \"latency_p50_ms\": 1, \
+             \"goodput_tps\": 1, \"throughput_tps\": 1}}}}]}}",
+            serve::SCHEMA
+        ))
+        .unwrap();
+        assert!(check_schema(&inf).is_err(), "infinite metric must fail schema validation");
+        // Empty cells array.
+        let empty = Json::parse(&format!(
+            "{{\"schema\": \"{}\", \"model\": \"m\", \"reps\": 1, \"cells\": []}}",
+            serve::SCHEMA
+        ))
+        .unwrap();
+        assert!(check_schema(&empty).is_err());
+    }
+}

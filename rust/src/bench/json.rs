@@ -1,0 +1,356 @@
+//! Minimal JSON reader for the bench gate (the offline crate set has no
+//! serde). Parses the strict JSON subset our own writers emit —
+//! objects, arrays, strings with `\`-escapes, numbers, booleans, null —
+//! with line-accurate errors, so `pifa bench-diff` can *read back*
+//! `BENCH_serve.json` / `BENCH_kernels.json` instead of grepping them.
+//!
+//! Writing stays hand-rolled at each call site (see
+//! [`crate::bench::kernels`]); this module is deliberately read-only.
+
+use anyhow::{bail, Result};
+
+/// A parsed JSON value. Object keys keep insertion order (diff tables
+/// print in the order the bench wrote them).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document (trailing whitespace allowed,
+    /// trailing garbage rejected).
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut p = Parser { bytes, pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != bytes.len() {
+            bail!("trailing garbage at byte {} (line {})", p.pos, p.line());
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None on non-objects or missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Number value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// String value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Array elements, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Object fields, if this is an object.
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(fields) => Some(fields),
+            _ => None,
+        }
+    }
+
+    /// `get(key)` then `as_f64` — the diff gate's bread and butter.
+    pub fn num(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Json::as_f64)
+    }
+
+    /// `get(key)` then `as_str`.
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Json::as_str)
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn line(&self) -> usize {
+        1 + self.bytes[..self.pos.min(self.bytes.len())]
+            .iter()
+            .filter(|&&b| b == b'\n')
+            .count()
+    }
+
+    fn skip_ws(&mut self) {
+        while self
+            .bytes
+            .get(self.pos)
+            .is_some_and(|&b| matches!(b, b' ' | b'\t' | b'\n' | b'\r'))
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!(
+                "expected '{}' at byte {} (line {}), found {:?}",
+                b as char,
+                self.pos,
+                self.line(),
+                self.peek().map(|c| c as char)
+            )
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {} (line {})", self.pos, self.line())
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            other => bail!(
+                "unexpected {:?} at byte {} (line {})",
+                other.map(|c| c as char),
+                self.pos,
+                self.line()
+            ),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => bail!("expected ',' or '}}' at byte {} (line {})", self.pos, self.line()),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {} (line {})", self.pos, self.line()),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string (line {})", self.line()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{0008}'),
+                        Some(b'f') => out.push('\u{000C}'),
+                        Some(b'u') => {
+                            // \uXXXX — our writers never emit these, but
+                            // accept the basic-plane form for robustness.
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                            self.pos += 4;
+                        }
+                        other => bail!(
+                            "bad escape {:?} at byte {} (line {})",
+                            other.map(|c| c as char),
+                            self.pos,
+                            self.line()
+                        ),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (may be multi-byte).
+                    let rest = &self.bytes[self.pos..];
+                    let s = std::str::from_utf8(rest)
+                        .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"))?;
+                    let ch = s.chars().next().expect("non-empty by peek");
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while self
+            .peek()
+            .is_some_and(|b| b.is_ascii_digit() || matches!(b, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let x: f64 = text
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad number '{text}' (line {})", self.line()))?;
+        Ok(Json::Num(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_documents() {
+        let doc = r#"{
+            "schema": "pifa-bench-serve-v1",
+            "reps": 3,
+            "ok": true, "none": null, "neg": -1.5e2,
+            "cells": [ {"m": {"ttft_p50_ms": 1.25}}, {"m": {}} ]
+        }"#;
+        let j = Json::parse(doc).unwrap();
+        assert_eq!(j.str("schema"), Some("pifa-bench-serve-v1"));
+        assert_eq!(j.num("reps"), Some(3.0));
+        assert_eq!(j.num("neg"), Some(-150.0));
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("none"), Some(&Json::Null));
+        let cells = j.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].get("m").and_then(|m| m.num("ttft_p50_ms")), Some(1.25));
+        assert_eq!(cells[1].get("m").and_then(Json::as_obj).map(|o| o.len()), Some(0));
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let j = Json::parse(r#"{"s": "a\"b\\c\ndA"}"#).unwrap();
+        assert_eq!(j.str("s"), Some("a\"b\\c\ndA"));
+    }
+
+    #[test]
+    fn preserves_key_order() {
+        let j = Json::parse(r#"{"z": 1, "a": 2, "m": 3}"#).unwrap();
+        let keys: Vec<&str> = j.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["z", "a", "m"]);
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1, 2",
+            r#"{"a" 1}"#,
+            r#"{"a": 1,}"#,
+            "{} trailing",
+            r#"{"a": 01x}"#,
+            r#""unterminated"#,
+            "nul",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted malformed {bad:?}");
+        }
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Json::parse("{\n  \"a\": 1,\n  broken\n}").unwrap_err();
+        assert!(err.to_string().contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn reads_the_kernels_writer_output() {
+        use crate::bench::kernels::{run, KernelBenchConfig};
+        let cfg =
+            KernelBenchConfig { dims: vec![(16, 16)], batches: vec![1], warmup: 0, samples: 1 };
+        let report = run(&cfg).unwrap();
+        let j = Json::parse(&report.to_json()).unwrap();
+        assert_eq!(j.str("schema"), Some("pifa-bench-kernels-v1"));
+        assert!(!j.get("cases").and_then(Json::as_arr).unwrap().is_empty());
+        assert!(j.get("ratios").and_then(Json::as_arr).unwrap()[0]
+            .num("pifa_vs_lowrank")
+            .is_some());
+    }
+}

@@ -22,6 +22,10 @@ use crate::sparse24::Sparse24Mat;
 use anyhow::{ensure, Context, Result};
 use std::path::{Path, PathBuf};
 
+/// Version tag of `BENCH_kernels.json`; bump on breaking layout
+/// changes. `pifa bench-diff --check-schema` validates against this.
+pub const SCHEMA: &str = "pifa-bench-kernels-v1";
+
 /// One timed case.
 #[derive(Clone, Debug)]
 pub struct CaseResult {
@@ -140,7 +144,7 @@ impl BenchReport {
     pub fn to_json(&self) -> String {
         let mut out = String::new();
         out.push_str("{\n");
-        out.push_str("  \"schema\": \"pifa-bench-kernels-v1\",\n");
+        out.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
         out.push_str(&format!("  \"pool_parallelism\": {},\n", pool::max_parallelism()));
         out.push_str(&format!("  \"warmup\": {},\n", self.warmup));
         out.push_str(&format!("  \"samples\": {},\n", self.samples));

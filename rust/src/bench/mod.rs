@@ -1,9 +1,19 @@
 //! Criterion-less benchmark harness (criterion is not in the offline crate
 //! set) plus the shared experiment plumbing and the per-table generators.
+//!
+//! The bench *trajectory* lives here too: [`kernels`] measures isolated
+//! decode kernels, [`serve`] measures the end-to-end serving stack
+//! (scheduler + paged KV + kernel pool) under seeded open-loop load,
+//! and [`diff`] is the noise-aware comparator CI gates merges on.
+//! [`json`] is the serde-less reader the comparator parses bench
+//! reports with.
 
+pub mod diff;
 pub mod experiments;
 pub mod harness;
+pub mod json;
 pub mod kernels;
+pub mod serve;
 pub mod tablegen;
 pub mod tables;
 

@@ -1,0 +1,729 @@
+//! `pifa bench-serve` — the end-to-end serving benchmark.
+//!
+//! Where `bench-kernels` times isolated matmuls, this harness measures
+//! the *system* the paper's throughput claims live or die on: an
+//! open-loop load generator drives [`crate::coordinator::Server`] (the
+//! continuous-batching scheduler over the paged-KV [`NativeBackend`])
+//! with seeded, reproducible workload scenarios — Poisson and bursty
+//! arrivals, short/long/mixed prompt distributions, shared-prefix
+//! fleets (the §8 prefix-cache + COW path), cancellation storms, and
+//! deadline-heavy mixes — across the compression-method registry, and
+//! records TTFT/ITL/e2e-latency percentiles, goodput, queue depth,
+//! block-pool utilization, and prefix-hit rate into a versioned
+//! `BENCH_serve.json` (schema [`SCHEMA`]).
+//!
+//! "Open-loop" means arrival times come from the scenario's seeded
+//! arrival process, never from completions — a slow server faces the
+//! same offered load as a fast one, so queueing collapse is visible
+//! instead of hidden (the closed-loop trap). All request *content* is
+//! seed-deterministic; only durations vary run to run, which is exactly
+//! the noise `pifa bench-diff`'s thresholds are calibrated for.
+//!
+//! The served model is a seed-built `Transformer` (weights don't change
+//! serving cost; skipping training keeps the harness deterministic and
+//! CI-cheap), compressed per method through the same registry presets
+//! the accuracy tables use. `--smoke` trims requests per scenario and
+//! the method lineup but keeps ≥ 4 scenarios × ≥ 3 methods — the CI
+//! gate's coverage floor.
+
+use crate::bench::diff;
+use crate::bench::experiments::wiki_dataset;
+use crate::bench::tables::TablePrinter;
+use crate::compress::registry;
+use crate::coordinator::{
+    DecodeBackend, GenRequest, GenerationMode, NativeBackend, SchedulerConfig, ServeError, Server,
+    StreamHandle,
+};
+use crate::linalg::Rng;
+use crate::model::config::ModelConfig;
+use crate::model::transformer::Transformer;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Version tag of `BENCH_serve.json`; bump on breaking layout changes.
+pub const SCHEMA: &str = "pifa-bench-serve-v1";
+
+/// Paged-KV pool sizing for the served backend (contiguous-equivalent
+/// lanes; see `NativeBackend::new`).
+const KV_LANES: usize = 4;
+
+/// How request arrival times are generated (open loop: independent of
+/// service completions).
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Exponential inter-arrival gaps at `rate_per_sec`.
+    Poisson { rate_per_sec: f64 },
+    /// Groups of `burst` simultaneous arrivals separated by `gap_ms`.
+    Bursty { burst: usize, gap_ms: f64 },
+}
+
+/// One seeded workload scenario. Every distribution draw is taken from
+/// a `Rng` seeded with `seed`, so the request set (prompts, budgets,
+/// arrival offsets, cancel/deadline assignments) is bit-reproducible.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub arrivals: ArrivalProcess,
+    /// Requests per repetition.
+    pub requests: usize,
+    /// Inclusive prompt-length range (tokens), excluding `shared_prefix`.
+    pub prompt_lens: (usize, usize),
+    /// Inclusive `max_new` range (tokens).
+    pub max_new: (usize, usize),
+    /// Common prefix length prepended to every prompt (0 = none) —
+    /// exercises the paged-KV prefix cache and COW forks.
+    pub shared_prefix: usize,
+    /// Fraction of requests cancelled mid-stream.
+    pub cancel_frac: f64,
+    /// Fraction of requests carrying a deadline, and its budget.
+    pub deadline_frac: f64,
+    pub deadline_ms: u64,
+    pub seed: u64,
+}
+
+/// The scenario catalogue (DESIGN.md §9). Smoke trims request counts
+/// but keeps ≥ 4 scenarios so the CI gate still sees arrivals, prefix
+/// sharing, cancellation, and deadlines.
+pub fn catalogue(smoke: bool) -> Vec<Scenario> {
+    let base = Scenario {
+        name: "",
+        arrivals: ArrivalProcess::Poisson { rate_per_sec: 60.0 },
+        requests: if smoke { 8 } else { 24 },
+        prompt_lens: (2, 6),
+        max_new: (6, 14),
+        shared_prefix: 0,
+        cancel_frac: 0.0,
+        deadline_frac: 0.0,
+        deadline_ms: 0,
+        seed: 0,
+    };
+    let mut out = vec![
+        Scenario { name: "poisson-short", seed: 101, ..base.clone() },
+        Scenario {
+            name: "shared-prefix",
+            arrivals: ArrivalProcess::Poisson { rate_per_sec: 50.0 },
+            prompt_lens: (3, 8),
+            max_new: (6, 12),
+            shared_prefix: 16,
+            seed: 104,
+            ..base.clone()
+        },
+        Scenario {
+            name: "cancel-storm",
+            prompt_lens: (4, 10),
+            max_new: (24, 40),
+            cancel_frac: 0.5,
+            seed: 105,
+            ..base.clone()
+        },
+        Scenario {
+            name: "deadline-heavy",
+            arrivals: ArrivalProcess::Poisson { rate_per_sec: 80.0 },
+            prompt_lens: (4, 12),
+            max_new: (8, 24),
+            deadline_frac: 0.7,
+            deadline_ms: 60,
+            seed: 106,
+            ..base.clone()
+        },
+    ];
+    if !smoke {
+        out.push(Scenario {
+            name: "poisson-long",
+            arrivals: ArrivalProcess::Poisson { rate_per_sec: 25.0 },
+            requests: 16,
+            prompt_lens: (16, 28),
+            max_new: (8, 20),
+            seed: 102,
+            ..base.clone()
+        });
+        out.push(Scenario {
+            name: "bursty-mixed",
+            arrivals: ArrivalProcess::Bursty { burst: 6, gap_ms: 80.0 },
+            prompt_lens: (2, 24),
+            max_new: (4, 18),
+            seed: 103,
+            ..base
+        });
+    }
+    out
+}
+
+/// One column of the method grid: how to build the served model and
+/// which KV mode it serves in. 2:4-packed representations cannot run
+/// the cache ops, so (as in Table 7) they serve in forced no-KV mode.
+#[derive(Clone, Debug)]
+pub struct MethodSpec {
+    pub name: &'static str,
+    /// Registry preset + density; `None` serves the uncompressed model.
+    pub preset: Option<(&'static str, f64)>,
+    pub mode: GenerationMode,
+}
+
+/// The method lineup. Smoke keeps the three KV-cache methods (the
+/// cheap-to-compress ones); the full grid adds the 2:4 and hybrid rows.
+pub fn methods(smoke: bool) -> Vec<MethodSpec> {
+    let mut out = vec![
+        MethodSpec { name: "dense", preset: None, mode: GenerationMode::KvCache },
+        MethodSpec {
+            name: "lowrank",
+            preset: Some(("w", 0.55)),
+            mode: GenerationMode::KvCache,
+        },
+        MethodSpec {
+            name: "pifa",
+            preset: Some(("mpifa", 0.55)),
+            mode: GenerationMode::KvCache,
+        },
+    ];
+    if !smoke {
+        out.push(MethodSpec {
+            name: "s24",
+            preset: Some(("wanda24", 0.5)),
+            mode: GenerationMode::NoKvCache,
+        });
+        out.push(MethodSpec {
+            name: "lowrank-s24",
+            preset: Some(("lowrank-s24", 0.75)),
+            mode: GenerationMode::NoKvCache,
+        });
+    }
+    out
+}
+
+/// Build the served model for a method (identity for `dense`).
+pub fn prepare_method(model: &Transformer, spec: &MethodSpec) -> Result<Transformer> {
+    match spec.preset {
+        None => Ok(model.clone()),
+        Some((preset, density)) => {
+            let data = wiki_dataset();
+            Ok(registry::compress(preset, model, &data, density)
+                .with_context(|| format!("compressing with preset {preset}"))?
+                .model)
+        }
+    }
+}
+
+/// One generated request of a workload timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkItem {
+    pub id: u64,
+    /// Offset from the run start at which the request is submitted.
+    pub submit_at: Duration,
+    pub prompt: Vec<usize>,
+    pub max_new: usize,
+    pub deadline: Option<Duration>,
+    /// Cancel this long after submission (mid-stream cancel).
+    pub cancel_after: Option<Duration>,
+}
+
+/// Expand a scenario into its concrete, seed-deterministic request
+/// timeline for one repetition (`rep` perturbs the seed so repetitions
+/// draw independent-but-reproducible workloads).
+pub fn build_workload(
+    sc: &Scenario,
+    vocab: usize,
+    max_seq: usize,
+    rep: u64,
+) -> Vec<WorkItem> {
+    let mut rng = Rng::new(sc.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ rep);
+    let prefix: Vec<usize> = (0..sc.shared_prefix).map(|_| rng.below(vocab)).collect();
+    let mut at = Duration::ZERO;
+    let mut out = Vec::with_capacity(sc.requests);
+    for i in 0..sc.requests {
+        match &sc.arrivals {
+            ArrivalProcess::Poisson { rate_per_sec } => {
+                // Exponential gap; clamp u away from 0 so ln stays finite.
+                let u = rng.uniform().max(1e-12);
+                if i > 0 {
+                    at += Duration::from_secs_f64(-u.ln() / rate_per_sec.max(1e-9));
+                }
+            }
+            ArrivalProcess::Bursty { burst, gap_ms } => {
+                if i > 0 && i % (*burst).max(1) == 0 {
+                    at += Duration::from_secs_f64(*gap_ms / 1e3);
+                }
+            }
+        }
+        let span = sc.prompt_lens.1.saturating_sub(sc.prompt_lens.0) + 1;
+        let plen = sc.prompt_lens.0 + rng.below(span);
+        let mut prompt = prefix.clone();
+        for _ in 0..plen.max(1) {
+            prompt.push(rng.below(vocab));
+        }
+        // Keep prompt + budget inside the backend's sequence window.
+        prompt.truncate(max_seq / 2);
+        let span = sc.max_new.1.saturating_sub(sc.max_new.0) + 1;
+        let max_new = (sc.max_new.0 + rng.below(span))
+            .min(max_seq.saturating_sub(prompt.len() + 1))
+            .max(1);
+        let deadline = if rng.uniform() < sc.deadline_frac {
+            Some(Duration::from_millis(sc.deadline_ms.max(1)))
+        } else {
+            None
+        };
+        let cancel_after = if rng.uniform() < sc.cancel_frac {
+            // Mid-stream: a few ITLs after submission.
+            Some(Duration::from_millis(10 + rng.below(30) as u64))
+        } else {
+            None
+        };
+        out.push(WorkItem { id: i as u64, submit_at: at, prompt, max_new, deadline, cancel_after });
+    }
+    out
+}
+
+/// Client-side tallies of one driven repetition.
+struct DriveOutcome {
+    wall: Duration,
+    completed: usize,
+    completed_tokens: usize,
+}
+
+/// Submit the timeline open-loop (sleeping to each event's offset,
+/// never waiting on completions), fire scheduled cancels, then drain
+/// every stream to its terminal event.
+fn drive(server: &Server, work: &[WorkItem]) -> Result<DriveOutcome> {
+    #[derive(Clone, Copy)]
+    enum Ev {
+        Submit(usize),
+        Cancel(usize),
+    }
+    let mut events: Vec<(Duration, Ev)> = Vec::new();
+    for (i, w) in work.iter().enumerate() {
+        events.push((w.submit_at, Ev::Submit(i)));
+        if let Some(delay) = w.cancel_after {
+            events.push((w.submit_at + delay, Ev::Cancel(i)));
+        }
+    }
+    events.sort_by_key(|(t, _)| *t);
+    let mut handles: Vec<Option<StreamHandle>> = (0..work.len()).map(|_| None).collect();
+    let start = Instant::now();
+    for (at, ev) in events {
+        let target = start + at;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        match ev {
+            Ev::Submit(i) => {
+                let w = &work[i];
+                let mut req = GenRequest::new(w.id, w.prompt.clone(), w.max_new);
+                if let Some(d) = w.deadline {
+                    req = req.with_deadline(d);
+                }
+                handles[i] = Some(server.submit(req)?);
+            }
+            Ev::Cancel(i) => {
+                if let Some(h) = handles[i].as_ref() {
+                    h.cancel();
+                }
+            }
+        }
+    }
+    let mut completed = 0usize;
+    let mut completed_tokens = 0usize;
+    for h in handles.into_iter().flatten() {
+        match h.collect_timeout(Duration::from_secs(60)) {
+            Ok(stats) => {
+                completed += 1;
+                completed_tokens += stats.tokens.len();
+            }
+            // Cancels, deadline timeouts, and load-shedding rejections
+            // are *expected* outcomes the scenario injected; the server
+            // tallies them in its own metrics.
+            Err(
+                ServeError::Cancelled
+                | ServeError::Timeout
+                | ServeError::Overloaded { .. },
+            ) => {}
+            Err(e) => anyhow::bail!("serve request failed: {e}"),
+        }
+    }
+    Ok(DriveOutcome { wall: start.elapsed(), completed, completed_tokens })
+}
+
+/// Run `reps` repetitions of one (scenario, method-model) cell and
+/// return the per-metric **medians** (the noise discipline `bench-diff`
+/// assumes: a cell value is a median of `reps` independent runs).
+pub fn run_scenario(
+    served: &Transformer,
+    mode: GenerationMode,
+    sc: &Scenario,
+    reps: usize,
+) -> Result<Vec<(String, f64)>> {
+    let mut samples: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for rep in 0..reps.max(1) {
+        let work = build_workload(sc, served.cfg.vocab, served.cfg.max_seq, rep as u64);
+        let model = served.clone();
+        let server = Server::spawn(
+            move || {
+                Ok(Box::new(NativeBackend::new(model, mode, KV_LANES)) as Box<dyn DecodeBackend>)
+            },
+            SchedulerConfig {
+                max_batch: 0, // backend lane cap (paged watermark for KV mode)
+                max_wait: Duration::from_millis(2),
+                queue_cap: 64,
+            },
+        );
+        let outcome = drive(&server, &work)?;
+        let metrics = server.shutdown()?;
+        let wall_secs = outcome.wall.as_secs_f64().max(1e-9);
+        let mut row: Vec<(String, f64)> =
+            metrics.snapshot().into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        // Client-side additions: goodput counts only tokens delivered to
+        // *successfully completed* requests, against wall-clock time —
+        // the "useful work under load" number throughput_tps (engine
+        // time, all tokens) deliberately is not.
+        row.push(("goodput_tps".to_string(), outcome.completed_tokens as f64 / wall_secs));
+        row.push(("wall_ms".to_string(), wall_secs * 1e3));
+        row.push(("client_completed".to_string(), outcome.completed as f64));
+        for (k, v) in row {
+            samples.entry(k).or_default().push(v);
+        }
+    }
+    let mut out = Vec::with_capacity(samples.len());
+    for (k, mut vs) in samples {
+        vs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        out.push((k, vs[vs.len() / 2]));
+    }
+    Ok(out)
+}
+
+/// One (scenario, method) cell of the report.
+pub struct CellResult {
+    pub scenario: String,
+    pub method: String,
+    pub requests: usize,
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl CellResult {
+    /// Metric lookup by name.
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+}
+
+/// The full bench report (`BENCH_serve.json`).
+pub struct ServeBenchReport {
+    pub model: String,
+    pub smoke: bool,
+    pub reps: usize,
+    pub cells: Vec<CellResult>,
+}
+
+impl ServeBenchReport {
+    /// Hand-rolled JSON (no serde in the offline crate set); reads back
+    /// through [`crate::bench::json::Json::parse`].
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+        out.push_str(&format!("  \"model\": \"{}\",\n", self.model));
+        out.push_str(&format!("  \"smoke\": {},\n", self.smoke));
+        out.push_str(&format!("  \"reps\": {},\n", self.reps));
+        out.push_str("  \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"scenario\": \"{}\", \"method\": \"{}\", \"requests\": {}, \
+                 \"metrics\": {{",
+                c.scenario, c.method, c.requests
+            ));
+            for (j, (k, v)) in c.metrics.iter().enumerate() {
+                out.push_str(&format!(
+                    "\"{k}\": {v:.6}{}",
+                    if j + 1 < c.metrics.len() { ", " } else { "" }
+                ));
+            }
+            out.push_str(&format!(
+                "}}}}{}\n",
+                if i + 1 < self.cells.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n");
+        out.push_str("}\n");
+        out
+    }
+
+    /// Console summary: one row per cell, headline serving metrics.
+    pub fn print_summary(&self) {
+        let mut t = TablePrinter::new(
+            "bench-serve — end-to-end serving (open-loop, seeded scenarios)",
+            &[
+                "scenario",
+                "method",
+                "reqs",
+                "done",
+                "goodput tok/s",
+                "ttft p50/p95 ms",
+                "itl p50/p95 ms",
+                "queue p95",
+                "blk p95/hit",
+            ],
+        );
+        for c in &self.cells {
+            let g = |k: &str| c.metric(k).unwrap_or(0.0);
+            let kv = if c.metric("prefix_hit_rate").is_some() {
+                format!("{:.0}%/{:.0}%", g("block_util_p95") * 100.0, g("prefix_hit_rate") * 100.0)
+            } else {
+                "-".into()
+            };
+            t.row(&[
+                c.scenario.clone(),
+                c.method.clone(),
+                c.requests.to_string(),
+                format!("{:.0}", g("completed")),
+                format!("{:.1}", g("goodput_tps")),
+                format!("{:.1}/{:.1}", g("ttft_p50_ms"), g("ttft_p95_ms")),
+                format!("{:.2}/{:.2}", g("itl_p50_ms"), g("itl_p95_ms")),
+                format!("{:.1}", g("queue_depth_p95")),
+                kv,
+            ]);
+        }
+        t.print();
+    }
+}
+
+/// Run the full (scenario × method) grid.
+pub fn run(model_name: &str, smoke: bool, reps: usize) -> Result<ServeBenchReport> {
+    let cfg = ModelConfig::by_name(model_name)
+        .with_context(|| format!("unknown model preset {model_name}"))?;
+    // Seed-built weights: serving cost is weight-value-independent, and
+    // skipping training keeps the harness deterministic and CI-cheap.
+    let mut rng = Rng::new(0xBE_5E_77);
+    let model = Transformer::new_random(&cfg, &mut rng);
+    let scenarios = catalogue(smoke);
+    let mut cells = Vec::new();
+    for spec in methods(smoke) {
+        eprintln!("[bench-serve] preparing method {} ...", spec.name);
+        let served = prepare_method(&model, &spec)?;
+        for sc in &scenarios {
+            let t0 = Instant::now();
+            let metrics = run_scenario(&served, spec.mode, sc, reps)
+                .with_context(|| format!("scenario {} / method {}", sc.name, spec.name))?;
+            eprintln!(
+                "[bench-serve] {} / {}: {} requests x {} reps in {:.2}s",
+                sc.name,
+                spec.name,
+                sc.requests,
+                reps,
+                t0.elapsed().as_secs_f64()
+            );
+            cells.push(CellResult {
+                scenario: sc.name.to_string(),
+                method: spec.name.to_string(),
+                requests: sc.requests,
+                metrics,
+            });
+        }
+    }
+    Ok(ServeBenchReport { model: model_name.to_string(), smoke, reps, cells })
+}
+
+/// CLI driver: run the grid, print the table, write the JSON; in smoke
+/// mode additionally assert the CI coverage floor, schema-validate the
+/// emitted file, and require a self-diff to pass.
+pub fn run_cli(smoke: bool, out: &Path, model_name: &str, reps: usize) -> Result<()> {
+    let report = run(model_name, smoke, reps)?;
+    report.print_summary();
+    let json_text = report.to_json();
+    std::fs::write(out, &json_text).with_context(|| format!("writing {}", out.display()))?;
+    println!("wrote {} ({} cells)", out.display(), report.cells.len());
+    if smoke {
+        let scenarios: std::collections::BTreeSet<&str> =
+            report.cells.iter().map(|c| c.scenario.as_str()).collect();
+        let methods: std::collections::BTreeSet<&str> =
+            report.cells.iter().map(|c| c.method.as_str()).collect();
+        ensure!(
+            scenarios.len() >= 4 && methods.len() >= 3,
+            "smoke: coverage floor is 4 scenarios x 3 methods, got {} x {}",
+            scenarios.len(),
+            methods.len()
+        );
+        for c in &report.cells {
+            for (k, v) in &c.metrics {
+                ensure!(
+                    v.is_finite(),
+                    "smoke: metric {k} in {}/{} is {v} — not finite",
+                    c.scenario,
+                    c.method
+                );
+            }
+        }
+        // Close the loop through the reader: the file we just wrote must
+        // parse, schema-validate, and self-diff clean.
+        let parsed = crate::bench::json::Json::parse(&json_text)?;
+        diff::check_schema(&parsed)?;
+        let self_diff = diff::compare_reports(&parsed, &parsed, 1.0)?;
+        ensure!(!self_diff.failed(), "smoke: self-diff of the fresh report must pass");
+        println!(
+            "smoke OK: {} scenarios x {} methods, schema + self-diff clean",
+            scenarios.len(),
+            methods.len()
+        );
+    }
+    Ok(())
+}
+
+/// Default output path (repo root when run via `cargo run`).
+pub fn default_out() -> PathBuf {
+    PathBuf::from("BENCH_serve.json")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A scenario sized for unit tests: no sleeps worth noticing.
+    fn tiny_scenario() -> Scenario {
+        Scenario {
+            name: "unit",
+            arrivals: ArrivalProcess::Poisson { rate_per_sec: 500.0 },
+            requests: 4,
+            prompt_lens: (2, 4),
+            max_new: (2, 4),
+            shared_prefix: 0,
+            cancel_frac: 0.0,
+            deadline_frac: 0.0,
+            deadline_ms: 0,
+            seed: 7,
+        }
+    }
+
+    fn micro_model(seed: u64) -> Transformer {
+        let cfg = ModelConfig {
+            name: "micro".into(),
+            vocab: 32,
+            dim: 16,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 24,
+            max_seq: 32,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(seed);
+        Transformer::new_random(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn workload_is_seed_deterministic_and_bounded() {
+        let sc = Scenario {
+            shared_prefix: 6,
+            cancel_frac: 0.5,
+            deadline_frac: 0.5,
+            deadline_ms: 20,
+            requests: 12,
+            ..tiny_scenario()
+        };
+        let a = build_workload(&sc, 32, 32, 0);
+        let b = build_workload(&sc, 32, 32, 0);
+        assert_eq!(a, b, "same seed + rep must reproduce the workload exactly");
+        let c = build_workload(&sc, 32, 32, 1);
+        assert_ne!(a, c, "different reps must draw different workloads");
+        let mut last = Duration::ZERO;
+        for w in &a {
+            assert!(w.submit_at >= last, "arrivals must be non-decreasing");
+            last = w.submit_at;
+            assert!(!w.prompt.is_empty());
+            assert!(w.prompt.len() + w.max_new <= 32, "must fit the sequence window");
+            assert!(w.prompt.iter().all(|&t| t < 32), "tokens must be in-vocab");
+            assert_eq!(&w.prompt[..6], &a[0].prompt[..6], "shared prefix must be shared");
+        }
+        assert!(a.iter().any(|w| w.cancel_after.is_some()));
+        assert!(a.iter().any(|w| w.deadline.is_some()));
+    }
+
+    #[test]
+    fn bursty_arrivals_group_into_bursts() {
+        let sc = Scenario {
+            arrivals: ArrivalProcess::Bursty { burst: 3, gap_ms: 50.0 },
+            requests: 9,
+            ..tiny_scenario()
+        };
+        let w = build_workload(&sc, 32, 32, 0);
+        assert_eq!(w[0].submit_at, w[2].submit_at, "first burst arrives together");
+        assert!(w[3].submit_at > w[2].submit_at, "bursts are separated by the gap");
+        assert_eq!(w[3].submit_at, w[5].submit_at);
+    }
+
+    #[test]
+    fn catalogue_meets_the_ci_coverage_floor() {
+        let smoke = catalogue(true);
+        assert!(smoke.len() >= 4, "smoke keeps >= 4 scenarios");
+        assert!(catalogue(false).len() > smoke.len(), "full grid is a superset in size");
+        assert!(smoke.iter().any(|s| s.shared_prefix > 0), "prefix scenario required");
+        assert!(smoke.iter().any(|s| s.cancel_frac > 0.0), "cancel scenario required");
+        assert!(smoke.iter().any(|s| s.deadline_frac > 0.0), "deadline scenario required");
+        assert!(methods(true).len() >= 3);
+        assert!(methods(false).len() >= 5);
+        for s in catalogue(false) {
+            assert!(s.requests > 0);
+            assert!(s.prompt_lens.0 >= 1 && s.prompt_lens.0 <= s.prompt_lens.1);
+            assert!(s.max_new.0 >= 1 && s.max_new.0 <= s.max_new.1);
+        }
+    }
+
+    #[test]
+    fn run_scenario_produces_the_gated_metrics() {
+        let model = micro_model(21);
+        let m = run_scenario(&model, GenerationMode::KvCache, &tiny_scenario(), 1).unwrap();
+        let get = |k: &str| m.iter().find(|(n, _)| n == k).map(|(_, v)| *v);
+        for key in
+            ["ttft_p50_ms", "itl_p50_ms", "latency_p95_ms", "goodput_tps", "queue_depth_p95"]
+        {
+            let v = get(key).unwrap_or_else(|| panic!("metric {key} missing"));
+            assert!(v.is_finite() && v >= 0.0, "{key} = {v}");
+        }
+        assert_eq!(get("requests"), Some(4.0));
+        assert_eq!(get("completed"), Some(4.0));
+        assert_eq!(get("client_completed"), Some(4.0));
+        assert!(get("goodput_tps").unwrap() > 0.0);
+        // The paged-KV pool metrics surface through the serve bench.
+        assert!(get("prefix_hit_rate").is_some(), "KV-mode cell must report pool metrics");
+    }
+
+    #[test]
+    fn cancel_storm_cancels_without_failing_the_run() {
+        let sc = Scenario {
+            cancel_frac: 1.0,
+            max_new: (20, 30),
+            requests: 3,
+            ..tiny_scenario()
+        };
+        let model = micro_model(22);
+        let m = run_scenario(&model, GenerationMode::KvCache, &sc, 1).unwrap();
+        let get = |k: &str| m.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap_or(0.0);
+        assert_eq!(
+            get("completed") + get("cancelled") + get("timeouts"),
+            3.0,
+            "every request reaches a terminal outcome"
+        );
+    }
+
+    #[test]
+    fn report_serializes_and_reads_back() {
+        let report = ServeBenchReport {
+            model: "micro".into(),
+            smoke: true,
+            reps: 1,
+            cells: vec![CellResult {
+                scenario: "unit".into(),
+                method: "dense".into(),
+                requests: 4,
+                metrics: vec![("ttft_p50_ms".into(), 1.5), ("goodput_tps".into(), 100.0)],
+            }],
+        };
+        let j = crate::bench::json::Json::parse(&report.to_json()).unwrap();
+        assert_eq!(j.str("schema"), Some(SCHEMA));
+        let cells = j.get("cells").and_then(crate::bench::json::Json::as_arr).unwrap();
+        assert_eq!(cells[0].str("method"), Some("dense"));
+        assert_eq!(
+            cells[0].get("metrics").and_then(|m| m.num("ttft_p50_ms")),
+            Some(1.5)
+        );
+    }
+}

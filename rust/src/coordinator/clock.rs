@@ -1,0 +1,105 @@
+//! Time source for the serving stack.
+//!
+//! Every timestamp the scheduler and server read — request arrival,
+//! deadline expiry, coalescing budgets, TTFT/ITL sampling — goes through
+//! a [`Clock`], so tests and benchmarks can substitute a [`ManualClock`]
+//! and drive the timing policy deterministically instead of sleeping.
+//! Production paths use [`SystemClock`] (a plain [`Instant::now`]).
+//!
+//! `ManualClock` is designed for driving the [`crate::coordinator::Scheduler`]
+//! state machine directly (as its tests do) or a server whose test
+//! advances the clock explicitly; a server worker blocked on a channel
+//! timeout still sleeps in real time — only its *decisions* read the
+//! injected clock.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A monotonic time source. `Send + Sync` so one clock can be shared
+/// between a test thread and the server worker.
+pub trait Clock: Send + Sync {
+    /// Current instant on this clock.
+    fn now(&self) -> Instant;
+}
+
+/// The real monotonic clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+/// A clock that only moves when told to: `now()` returns a fixed base
+/// instant plus the accumulated [`ManualClock::advance`] offset.
+#[derive(Debug)]
+pub struct ManualClock {
+    base: Instant,
+    offset: Mutex<Duration>,
+}
+
+impl ManualClock {
+    /// A new manual clock frozen at the moment of construction.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self { base: Instant::now(), offset: Mutex::new(Duration::ZERO) })
+    }
+
+    /// Move the clock forward by `d`.
+    pub fn advance(&self, d: Duration) {
+        let mut off = self.offset.lock().expect("manual clock poisoned");
+        *off += d;
+    }
+
+    /// Total time advanced since construction.
+    pub fn elapsed(&self) -> Duration {
+        *self.offset.lock().expect("manual clock poisoned")
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> Instant {
+        self.base + *self.offset.lock().expect("manual clock poisoned")
+    }
+}
+
+/// The default shared clock.
+pub fn system_clock() -> Arc<dyn Clock> {
+    Arc::new(SystemClock)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_is_monotonic() {
+        let c = SystemClock;
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn manual_clock_moves_only_on_advance() {
+        let c = ManualClock::new();
+        let t0 = c.now();
+        assert_eq!(c.now(), t0, "manual clock must not drift on its own");
+        c.advance(Duration::from_millis(250));
+        assert_eq!(c.now().duration_since(t0), Duration::from_millis(250));
+        c.advance(Duration::from_secs(1));
+        assert_eq!(c.elapsed(), Duration::from_millis(1250));
+    }
+
+    #[test]
+    fn manual_clock_shares_across_threads() {
+        let c = ManualClock::new();
+        let t0 = c.now();
+        let c2 = Arc::clone(&c);
+        std::thread::spawn(move || c2.advance(Duration::from_millis(10)))
+            .join()
+            .unwrap();
+        assert_eq!(c.now().duration_since(t0), Duration::from_millis(10));
+    }
+}

@@ -12,12 +12,17 @@
 //!   continuous batching.
 //! * [`server`] — worker-thread server: `submit` returns a
 //!   [`StreamHandle`] of token events with mid-generation `cancel()`.
+//! * [`clock`] — the injectable time source ([`SystemClock`] /
+//!   [`ManualClock`]) behind every scheduling-policy timestamp, so
+//!   tests and benchmarks can drive timing deterministically.
 
+pub mod clock;
 pub mod engine;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
+pub use clock::{system_clock, Clock, ManualClock, SystemClock};
 pub use engine::{
     AdmitVerdict, DecodeBackend, GenerationMode, NativeBackend, PagedKvParams, PjrtBackend,
     StepInput, StepResult,

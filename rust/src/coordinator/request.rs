@@ -388,6 +388,48 @@ impl ServeMetrics {
             self.kv_prefix_hit_tokens as f64 / self.kv_prefix_query_tokens as f64
         }
     }
+
+    /// Machine-consumable snapshot: every counter, rate, and tracked
+    /// percentile as stable `(name, value)` pairs. This is the single
+    /// source of metric names shared by `pifa bench-serve` (which writes
+    /// them into `BENCH_serve.json`) and the `pifa bench-diff` CI gate
+    /// (which resolves its direction/threshold table against the same
+    /// names) — add a metric here and both sides see it. KV-pool metrics
+    /// appear only when the backend reported a pool, so their absence in
+    /// a diff means "backend without paging", not a regression.
+    pub fn snapshot(&self) -> Vec<(&'static str, f64)> {
+        let mut out: Vec<(&'static str, f64)> = vec![
+            ("requests", self.requests as f64),
+            ("completed", self.completed as f64),
+            ("cancelled", self.cancelled as f64),
+            ("rejected", self.rejected as f64),
+            ("timeouts", self.timeouts as f64),
+            ("errors", self.errors as f64),
+            ("tokens_generated", self.tokens_generated as f64),
+            ("prefills", self.prefills as f64),
+            ("batches", self.batches as f64),
+            ("peak_active", self.peak_active as f64),
+            ("throughput_tps", self.throughput()),
+            ("latency_p50_ms", self.latency_percentile_ms(0.5)),
+            ("latency_p95_ms", self.latency_percentile_ms(0.95)),
+            ("ttft_p50_ms", self.ttft_percentile_ms(0.5)),
+            ("ttft_p95_ms", self.ttft_percentile_ms(0.95)),
+            ("itl_p50_ms", self.itl_percentile_ms(0.5)),
+            ("itl_p95_ms", self.itl_percentile_ms(0.95)),
+            ("queue_depth_p50", self.queue_depth_percentile(0.5)),
+            ("queue_depth_p95", self.queue_depth_percentile(0.95)),
+            ("occupancy_p50", self.occupancy_percentile(0.5)),
+            ("occupancy_p95", self.occupancy_percentile(0.95)),
+        ];
+        if self.has_kv_pool() {
+            out.push(("block_util_p50", self.block_util_percentile(0.5)));
+            out.push(("block_util_p95", self.block_util_percentile(0.95)));
+            out.push(("prefix_hit_rate", self.prefix_hit_rate()));
+            out.push(("kv_peak_blocks", self.kv_peak_blocks as f64));
+            out.push(("cow_forks", self.kv_cow_copies as f64));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -448,6 +490,109 @@ mod tests {
         assert_eq!(m.latency_percentile_ms(0.5), 0.0);
         assert_eq!(m.ttft_percentile_ms(0.5), 0.0);
         assert_eq!(m.itl_percentile_ms(0.5), 0.0);
+    }
+
+    /// Percentile edge case: an empty (never-recorded) snapshot yields
+    /// 0.0 for every percentile at every probe point, finalized or not —
+    /// the bench JSON must never carry NaN.
+    #[test]
+    fn empty_snapshot_percentiles_are_zero_at_every_p() {
+        for finalized in [false, true] {
+            let mut m = ServeMetrics::default();
+            if finalized {
+                m.finalize();
+            }
+            for p in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                assert_eq!(m.latency_percentile_ms(p), 0.0);
+                assert_eq!(m.ttft_percentile_ms(p), 0.0);
+                assert_eq!(m.itl_percentile_ms(p), 0.0);
+                assert_eq!(m.queue_depth_percentile(p), 0.0);
+                assert_eq!(m.occupancy_percentile(p), 0.0);
+                assert_eq!(m.block_util_percentile(p), 0.0);
+            }
+            for (name, v) in m.snapshot() {
+                assert!(v.is_finite(), "{name} not finite on an empty snapshot");
+            }
+        }
+    }
+
+    /// Percentile edge case: with exactly one sample, every probe point
+    /// returns that sample (nearest-rank on a singleton).
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut m = ServeMetrics::default();
+        m.record_first_token(Duration::from_millis(12));
+        m.record_done(&stats(1, 1, 34));
+        m.finalize();
+        for p in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            assert!((m.ttft_percentile_ms(p) - 12.0).abs() < 1e-9, "p={p}");
+            assert!((m.latency_percentile_ms(p) - 34.0).abs() < 1e-9, "p={p}");
+        }
+    }
+
+    /// Percentile edge case: all-equal samples — every percentile is
+    /// that value and the spread (p95 - p50) is exactly zero.
+    #[test]
+    fn all_equal_samples_have_zero_spread() {
+        let mut m = ServeMetrics::default();
+        for _ in 0..9 {
+            m.record_token(Duration::from_millis(5));
+        }
+        m.finalize();
+        for p in [0.0, 0.5, 0.95, 1.0] {
+            assert!((m.itl_percentile_ms(p) - 5.0).abs() < 1e-9, "p={p}");
+        }
+        assert_eq!(m.itl_percentile_ms(0.95) - m.itl_percentile_ms(0.5), 0.0);
+    }
+
+    /// Out-of-range probe points clamp instead of indexing out of
+    /// bounds.
+    #[test]
+    fn percentile_probe_points_clamp() {
+        let mut m = ServeMetrics::default();
+        m.record_done(&stats(1, 1, 10));
+        m.record_done(&stats(2, 1, 20));
+        m.finalize();
+        assert_eq!(m.latency_percentile_ms(-0.5), 10.0);
+        assert_eq!(m.latency_percentile_ms(7.0), 20.0);
+    }
+
+    /// The snapshot names are stable and cover the gated serving
+    /// metrics; KV names appear only when a pool was reported.
+    #[test]
+    fn snapshot_names_are_stable_and_kv_gated() {
+        let mut m = ServeMetrics::default();
+        m.record_admit();
+        m.record_first_token(Duration::from_millis(3));
+        m.finalize();
+        let names: Vec<&str> = m.snapshot().iter().map(|(n, _)| *n).collect();
+        for required in [
+            "requests",
+            "completed",
+            "throughput_tps",
+            "latency_p50_ms",
+            "ttft_p50_ms",
+            "ttft_p95_ms",
+            "itl_p50_ms",
+            "queue_depth_p95",
+            "occupancy_p50",
+        ] {
+            assert!(names.contains(&required), "snapshot lost metric {required}");
+        }
+        assert!(!names.contains(&"prefix_hit_rate"), "KV metrics must be pool-gated");
+        m.set_kv_final(crate::runtime::kvpool::KvPoolStats {
+            num_blocks: 8,
+            used_blocks: 1,
+            free_blocks: 7,
+            idle_blocks: 0,
+            peak_used_blocks: 2,
+            prefix_hit_tokens: 1,
+            prefix_query_tokens: 2,
+            cow_copies: 0,
+        });
+        let names: Vec<&str> = m.snapshot().iter().map(|(n, _)| *n).collect();
+        assert!(names.contains(&"prefix_hit_rate"));
+        assert!(names.contains(&"block_util_p95"));
     }
 
     #[test]

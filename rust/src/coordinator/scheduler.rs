@@ -13,6 +13,7 @@
 //! full wave, or a join while other lanes are already decoding, is
 //! admitted immediately.
 
+use super::clock::{system_clock, Clock};
 use super::engine::{AdmitVerdict, DecodeBackend, StepInput, StepResult};
 use super::request::{
     Event, FinishReason, GenRequest, GenStats, SamplingParams, ServeError, ServeMetrics,
@@ -20,6 +21,7 @@ use super::request::{
 use crate::linalg::Rng;
 use std::collections::VecDeque;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Scheduler policy knobs (`pifa serve --max-batch/--max-wait-ms/--queue-cap`).
@@ -77,9 +79,10 @@ impl GenSession {
     /// Append + stream one token; returns false when the client has
     /// dropped its stream (treated as an implicit cancel). Undelivered
     /// tokens are NOT recorded in the serving metrics — percentiles
-    /// describe served traffic only.
-    fn emit(&mut self, token: usize, metrics: &mut ServeMetrics) -> bool {
-        let now = Instant::now();
+    /// describe served traffic only. `now` comes from the scheduler's
+    /// clock so TTFT/ITL samples are deterministic under a
+    /// [`crate::coordinator::ManualClock`].
+    fn emit(&mut self, token: usize, now: Instant, metrics: &mut ServeMetrics) -> bool {
         let index = self.generated_count();
         self.seq.push(token);
         let delivered = self.events.send(Event::Token { index, token }).is_ok();
@@ -115,11 +118,11 @@ impl GenSession {
 fn finish_session(
     sess: GenSession,
     reason: FinishReason,
+    now: Instant,
     backend: &mut dyn DecodeBackend,
     metrics: &mut ServeMetrics,
 ) {
     backend.release(sess.lane);
-    let now = Instant::now();
     let stats = GenStats {
         id: sess.id,
         tokens: sess.generated().to_vec(),
@@ -141,16 +144,24 @@ pub struct Scheduler {
     cfg: SchedulerConfig,
     queue: VecDeque<Queued>,
     lanes: Vec<Option<GenSession>>,
+    clock: Arc<dyn Clock>,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig, backend_lanes: usize) -> Self {
+        Self::with_clock(cfg, backend_lanes, system_clock())
+    }
+
+    /// Like [`Scheduler::new`] with an injected time source — the
+    /// deterministic-clock hook: every arrival stamp, deadline check,
+    /// coalescing decision, and TTFT/ITL sample reads this clock.
+    pub fn with_clock(cfg: SchedulerConfig, backend_lanes: usize, clock: Arc<dyn Clock>) -> Self {
         let n = if cfg.max_batch == 0 {
             backend_lanes.max(1)
         } else {
             cfg.max_batch.min(backend_lanes).max(1)
         };
-        Self { cfg, queue: VecDeque::new(), lanes: (0..n).map(|_| None).collect() }
+        Self { cfg, queue: VecDeque::new(), lanes: (0..n).map(|_| None).collect(), clock }
     }
 
     pub fn has_active(&self) -> bool {
@@ -189,7 +200,7 @@ impl Scheduler {
             return;
         }
         if req.arrived.is_none() {
-            req.arrived = Some(Instant::now());
+            req.arrived = Some(self.clock.now());
         }
         metrics.record_admit();
         self.queue.push_back(Queued { req, events });
@@ -344,7 +355,7 @@ impl Scheduler {
         metrics: &mut ServeMetrics,
     ) {
         let Queued { req, events } = q;
-        let arrived = req.arrived.unwrap_or_else(Instant::now);
+        let arrived = req.arrived.unwrap_or_else(|| self.clock.now());
         if req.max_new == 0 {
             // Nothing requested: complete with zero tokens (matching the
             // pre-session API) instead of emitting an unasked-for token.
@@ -352,7 +363,7 @@ impl Scheduler {
                 id: req.id,
                 tokens: Vec::new(),
                 finish: FinishReason::MaxTokens,
-                latency: arrived.elapsed(),
+                latency: self.clock.now().duration_since(arrived),
                 ttft: Duration::ZERO,
             };
             metrics.record_done(&stats);
@@ -372,10 +383,10 @@ impl Scheduler {
             ))));
             return;
         }
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         match backend.prefill(lane, &req.prompt) {
             Ok(logits) => {
-                metrics.record_prefill(t0.elapsed());
+                metrics.record_prefill(self.clock.now().duration_since(t0));
                 let mut rng =
                     Rng::new(req.sampling.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
                 let first = req.sampling.pick(&logits, &mut rng);
@@ -394,14 +405,15 @@ impl Scheduler {
                     rng,
                     events,
                 };
-                if !sess.emit(first, metrics) {
+                let now = self.clock.now();
+                if !sess.emit(first, now, metrics) {
                     // Client hung up before the first token: implicit cancel.
                     backend.release(lane);
                     metrics.cancelled += 1;
                     return;
                 }
                 if let Some(reason) = sess.finish_reason(backend.max_seq()) {
-                    finish_session(sess, reason, backend, metrics);
+                    finish_session(sess, reason, now, backend, metrics);
                 } else {
                     self.lanes[lane] = Some(sess);
                 }
@@ -432,10 +444,10 @@ impl Scheduler {
                 StepInput { lane: l, token: *s.seq.last().expect("non-empty"), seq: &s.seq }
             })
             .collect();
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let result = backend.step(&inputs);
         drop(inputs);
-        let elapsed = t0.elapsed();
+        let elapsed = self.clock.now().duration_since(t0);
         let rows = match result {
             Ok(rows) if rows.len() == active.len() => rows,
             Ok(rows) => {
@@ -473,9 +485,10 @@ impl Scheduler {
                     continue;
                 }
             };
+            let now = self.clock.now();
             let sess = self.lanes[lane].as_mut().expect("active lane");
             let tok = sess.sampling.pick(&row, &mut sess.rng);
-            if !sess.emit(tok, metrics) {
+            if !sess.emit(tok, now, metrics) {
                 // Client hung up mid-stream: implicit cancel frees the lane.
                 self.lanes[lane] = None;
                 backend.release(lane);
@@ -488,7 +501,7 @@ impl Scheduler {
                 .finish_reason(backend.max_seq());
             if let Some(reason) = reason {
                 let sess = self.lanes[lane].take().expect("active lane");
-                finish_session(sess, reason, backend, metrics);
+                finish_session(sess, reason, now, backend, metrics);
             }
         }
     }
@@ -987,6 +1000,44 @@ mod tests {
         ));
         assert_eq!(m.rejected, 1);
         assert!(sched.is_idle());
+    }
+
+    /// The deterministic-clock hook: with a [`ManualClock`] driving the
+    /// scheduler, TTFT samples and deadline expiry are *exact* — no
+    /// sleeps, no tolerance windows.
+    #[test]
+    fn manual_clock_makes_ttft_and_deadlines_exact() {
+        use crate::coordinator::clock::ManualClock;
+        let clock = ManualClock::new();
+        let mut be = MockBackend::new(2);
+        let mut sched = Scheduler::with_clock(
+            cfg(2, Duration::ZERO, 16),
+            be.lanes(),
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        );
+        let mut m = ServeMetrics::default();
+        let (ta, _ra) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1, 2], 4), ta, &mut m);
+        // 7 ms of pure virtual queue wait before admission: TTFT must be
+        // exactly 7 ms (prefill is instantaneous on a frozen clock).
+        clock.advance(Duration::from_millis(7));
+        sched.admit(clock.now(), &mut be, &mut m);
+        assert_eq!(m.tokens_generated, 1);
+        assert!((m.ttft_percentile_ms(1.0) - 7.0).abs() < 1e-9, "TTFT must be exactly 7 ms");
+        // A queued deadline fires exactly at its boundary, not before.
+        let (tb, rb) = mpsc::channel();
+        sched.submit(
+            GenRequest::new(2, vec![3], 4).with_deadline(Duration::from_millis(50)),
+            tb,
+            &mut m,
+        );
+        clock.advance(Duration::from_millis(49));
+        sched.sweep_deadlines(clock.now(), &mut be, &mut m);
+        assert_eq!(m.timeouts, 0, "deadline must not fire at 49/50 ms");
+        clock.advance(Duration::from_millis(1));
+        sched.sweep_deadlines(clock.now(), &mut be, &mut m);
+        assert_eq!(m.timeouts, 1, "deadline fires exactly at 50 ms");
+        assert!(drain(&rb).iter().any(|e| matches!(e, Event::Error(ServeError::Timeout))));
     }
 
     /// `max_batch == 0` resolves to the backend's lane cap (the paged

@@ -10,12 +10,14 @@
 //! [`ServeError::EngineFailure`] events — never an `eprintln!` with a
 //! silently dropped waiter.
 
+use super::clock::{system_clock, Clock};
 use super::engine::DecodeBackend;
 use super::request::{Event, GenRequest, GenStats, ServeError, ServeMetrics};
 use super::scheduler::{Scheduler, SchedulerConfig};
 use anyhow::Result;
 use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 enum Msg {
     Submit(GenRequest, mpsc::Sender<Event>),
@@ -99,6 +101,20 @@ impl Server {
         factory: impl FnOnce() -> Result<Box<dyn DecodeBackend>> + Send + 'static,
         cfg: SchedulerConfig,
     ) -> Self {
+        Self::spawn_with_clock(factory, cfg, system_clock())
+    }
+
+    /// [`Server::spawn`] with an injected [`Clock`] — the
+    /// deterministic-time hook. Every *policy* timestamp the worker
+    /// reads (arrival stamps, deadline sweeps, coalescing budgets,
+    /// TTFT/ITL samples) comes from `clock`; channel waits still sleep
+    /// in real time, so a `ManualClock` server needs its driver to
+    /// advance the clock.
+    pub fn spawn_with_clock(
+        factory: impl FnOnce() -> Result<Box<dyn DecodeBackend>> + Send + 'static,
+        cfg: SchedulerConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Self {
         let (tx, rx) = mpsc::channel::<Msg>();
         let worker = std::thread::spawn(move || {
             let mut backend = match factory() {
@@ -123,7 +139,7 @@ impl Server {
                     return;
                 }
             };
-            let mut sched = Scheduler::new(cfg, backend.lanes());
+            let mut sched = Scheduler::with_clock(cfg, backend.lanes(), Arc::clone(&clock));
             let mut metrics = ServeMetrics::default();
             let mut shutdown_reply: Option<mpsc::Sender<ServeMetrics>> = None;
             loop {
@@ -137,7 +153,7 @@ impl Server {
                         Err(_) => break, // all clients gone, nothing in flight
                     }
                 } else if shutdown_reply.is_none() && !sched.has_active() {
-                    let wait = sched.time_to_admission(Instant::now());
+                    let wait = sched.time_to_admission(clock.now());
                     if wait.is_zero() {
                         rx.try_recv().ok()
                     } else {
@@ -180,7 +196,7 @@ impl Server {
                         Msg::Shutdown(reply) => shutdown_reply = Some(reply),
                     }
                 }
-                let now = Instant::now();
+                let now = clock.now();
                 sched.sweep_deadlines(now, &mut *backend, &mut metrics);
                 if shutdown_reply.is_some() {
                     // Drain: remaining queued work ships without waiting
@@ -247,6 +263,7 @@ mod tests {
     use crate::linalg::Rng;
     use crate::model::config::ModelConfig;
     use crate::model::transformer::Transformer;
+    use std::time::Instant;
 
     const EVENT_TIMEOUT: Duration = Duration::from_secs(30);
 

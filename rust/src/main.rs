@@ -28,6 +28,20 @@
 //!               PIFA vs 2:4 vs hybrid across an (m, n, batch) grid);
 //!               writes BENCH_kernels.json. --smoke runs the CI grid and
 //!               fails unless the PIFA-vs-lowrank ratio is positive.
+//! pifa bench-serve [--smoke] [--out PATH] [--model NAME] [--reps K]
+//!               — end-to-end serving bench: open-loop seeded scenarios
+//!               (Poisson/bursty arrivals, shared prefixes, cancel
+//!               storms, deadline mixes) x the method registry through
+//!               the continuous-batching scheduler; writes
+//!               BENCH_serve.json (schema pifa-bench-serve-v1). --smoke
+//!               trims to the CI grid and self-validates the output.
+//! pifa bench-diff <baseline.json> <candidate.json> [--tolerance-scale F]
+//!               — noise-aware regression gate over two bench reports
+//!               (serve or kernels schema); exits non-zero on a gated
+//!               regression, a dropped metric, or lost cell coverage.
+//! pifa bench-diff --check-schema <file.json>
+//!               — structural validation of one bench report (the loud
+//!               replacement for grepping the JSON).
 //! pifa info     — artifact + platform diagnostics
 //! ```
 //!
@@ -420,10 +434,26 @@ fn cmd_bench_kernels(flags: &HashMap<String, String>) -> Result<()> {
     pifa::bench::kernels::run_cli(smoke, &out)
 }
 
+fn cmd_bench_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let smoke = flags.contains_key("smoke");
+    let out = flags
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(pifa::bench::serve::default_out);
+    let model = flags.get("model").map(String::as_str).unwrap_or("tiny-s");
+    // Median-of-k discipline: the full grid defaults to 3 repetitions
+    // per cell (bench-diff reads the count and narrows its noise band);
+    // smoke keeps CI wall time down with 1.
+    let default_reps = if smoke { "1" } else { "3" };
+    let reps: usize =
+        flags.get("reps").map(String::as_str).unwrap_or(default_reps).parse::<usize>()?.max(1);
+    pifa::bench::serve::run_cli(smoke, &out, model, reps)
+}
+
 fn usage() -> ! {
     eprintln!(
-        "usage: pifa <train|compress|methods|eval|generate|serve|tables|bench-kernels|info> \
-         [--flags]\n\
+        "usage: pifa <train|compress|methods|eval|generate|serve|tables|bench-kernels|\
+         bench-serve|bench-diff|info> [--flags]\n\
          see rust/src/main.rs docs for details"
     );
     std::process::exit(2)
@@ -445,6 +475,10 @@ fn main() -> Result<()> {
             pifa::bench::tablegen::run(which)
         }
         "bench-kernels" => cmd_bench_kernels(&flags),
+        "bench-serve" => cmd_bench_serve(&flags),
+        // bench-diff takes positional file paths, so it parses its own
+        // argument list instead of going through `parse_flags`.
+        "bench-diff" => pifa::bench::diff::run_cli(&args[1..]),
         "info" => cmd_info(),
         _ => usage(),
     }
