@@ -108,7 +108,7 @@ fn main() -> anyhow::Result<()> {
                 temperature: if i % 2 == 0 { 0.0 } else { 0.7 },
                 top_k: 8,
                 seed: i,
-                stop_tokens: Vec::new(),
+                ..SamplingParams::default()
             });
             handles.push(server.submit(req)?);
         }
@@ -173,6 +173,11 @@ fn main() -> anyhow::Result<()> {
                 metrics.block_util_percentile(0.5) * 100.0,
                 metrics.prefix_hit_rate() * 100.0,
                 metrics.kv_cow_copies,
+            );
+            println!(
+                "[{label}] kv lifecycle: idle at shutdown {} | evictions {} | spills {} | \
+                 resumes {}",
+                metrics.kv_idle_blocks, metrics.kv_evictions, metrics.spills, metrics.resumes,
             );
         }
         println!();

@@ -97,6 +97,21 @@ pub fn gate_for(metric: &str) -> Option<MetricGate> {
             abs_floor: 0.05,
             optional: true,
         }),
+        // KV lifecycle quality (DESIGN.md §10): seed-deterministic
+        // outputs of the compressed-spill drift harness, present only
+        // in `compress_kv` scenario cells of KV-cache methods.
+        "kv_compression_ratio" => Some(MetricGate {
+            direction: HigherIsBetter,
+            rel_tol: 0.30,
+            abs_floor: 0.10,
+            optional: true,
+        }),
+        "kv_ppl_drift" => Some(MetricGate {
+            direction: LowerIsBetter,
+            rel_tol: 1.00,
+            abs_floor: 0.05,
+            optional: true,
+        }),
         // Kernel speedup ratios (bench-kernels): machine-portable-ish,
         // but still timing quotients — wide band.
         "pifa_vs_lowrank" | "pifa_vs_dense" | "lowrank_vs_dense" | "s24_vs_dense"
@@ -769,6 +784,40 @@ mod tests {
         // the optional carve-out stays narrow).
         let cand2 = serve_report(1, &BASE_METRICS[..4]);
         assert!(compare_reports(&base, &cand2, 1.0).unwrap().failed());
+    }
+
+    /// The KV-lifecycle quality gates: a compression-ratio collapse or
+    /// a PPL-drift blow-up past its absolute floor fails, while absence
+    /// (a cell without compressed spill) stays a configuration note.
+    #[test]
+    fn kv_lifecycle_quality_metrics_gate_and_stay_optional() {
+        let mut with_q = BASE_METRICS.to_vec();
+        with_q.push(("kv_compression_ratio", 2.0));
+        with_q.push(("kv_ppl_drift", 0.01));
+        let base = serve_report(1, &with_q);
+        let mut collapsed = with_q.clone();
+        collapsed[BASE_METRICS.len()] = ("kv_compression_ratio", 1.0);
+        let report =
+            compare_reports(&base, &serve_report(1, &collapsed), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "kv_compression_ratio"), Verdict::Regression);
+        assert!(report.failed(), "halving the capacity gain must red the gate");
+        let mut drifted = with_q.clone();
+        drifted[BASE_METRICS.len() + 1] = ("kv_ppl_drift", 0.50);
+        let report =
+            compare_reports(&base, &serve_report(1, &drifted), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "kv_ppl_drift"), Verdict::Regression);
+        // Tiny drift wobble sits under the 0.05 absolute floor.
+        let mut wobble = with_q.clone();
+        wobble[BASE_METRICS.len() + 1] = ("kv_ppl_drift", 0.04);
+        let report =
+            compare_reports(&base, &serve_report(1, &wobble), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "kv_ppl_drift"), Verdict::WithinNoise);
+        // Absence = the cell no longer compresses spills: a note.
+        let report =
+            compare_reports(&base, &serve_report(1, BASE_METRICS), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "kv_compression_ratio"), Verdict::OptionalAbsent);
+        assert_eq!(verdict_of(&report, "kv_ppl_drift"), Verdict::OptionalAbsent);
+        assert!(!report.failed());
     }
 
     #[test]

@@ -31,10 +31,11 @@ use crate::bench::experiments::wiki_dataset;
 use crate::bench::tables::TablePrinter;
 use crate::compress::registry;
 use crate::coordinator::{
-    DecodeBackend, GenRequest, GenerationMode, NativeBackend, SchedulerConfig, ServeError, Server,
-    StreamHandle,
+    DecodeBackend, GenRequest, GenerationMode, KvLifeConfig, NativeBackend, Priority,
+    SamplingParams, SchedulerConfig, ServeError, Server, StepInput, StepResult, StreamHandle,
 };
 use crate::linalg::Rng;
+use crate::runtime::EvictPolicyKind;
 use crate::model::config::ModelConfig;
 use crate::model::transformer::Transformer;
 use anyhow::{ensure, Context, Result};
@@ -80,6 +81,16 @@ pub struct Scenario {
     /// Fraction of requests carrying a deadline, and its budget.
     pub deadline_frac: f64,
     pub deadline_ms: u64,
+    /// Idle-block eviction policy for the paged pool (DESIGN.md §10).
+    pub evict: EvictPolicyKind,
+    /// Allow priority preemption into the host spill arena.
+    pub spill: bool,
+    /// Store spilled KV as a PIFA factorization (rank fraction 0.5).
+    pub compress_kv: bool,
+    /// Fraction of requests submitted at High priority; the remainder
+    /// run Low when `spill` is on (so preemption has victims) and
+    /// Normal otherwise.
+    pub high_frac: f64,
     pub seed: u64,
 }
 
@@ -97,7 +108,25 @@ pub fn catalogue(smoke: bool) -> Vec<Scenario> {
         cancel_frac: 0.0,
         deadline_frac: 0.0,
         deadline_ms: 0,
+        evict: EvictPolicyKind::Fifo,
+        spill: false,
+        compress_kv: false,
+        high_frac: 0.0,
         seed: 0,
+    };
+    // Repeated fleet: the same shared-prefix fleet replayed in bursts
+    // with enough suffix churn that the pool must sacrifice idle blocks
+    // — the cell trio differs *only* in eviction policy, so the
+    // prefix-hit-rate spread is the policy comparison the gate watches.
+    let fleet = Scenario {
+        name: "repeated-fleet-fifo",
+        arrivals: ArrivalProcess::Bursty { burst: 4, gap_ms: 30.0 },
+        requests: if smoke { 12 } else { 24 },
+        prompt_lens: (6, 10),
+        max_new: (10, 16),
+        shared_prefix: 12,
+        seed: 107,
+        ..base.clone()
     };
     let mut out = vec![
         Scenario { name: "poisson-short", seed: 101, ..base.clone() },
@@ -128,8 +157,29 @@ pub fn catalogue(smoke: bool) -> Vec<Scenario> {
             seed: 106,
             ..base.clone()
         },
+        fleet.clone(),
+        Scenario { name: "repeated-fleet-lru", evict: EvictPolicyKind::Lru, ..fleet.clone() },
+        Scenario {
+            name: "spill-compress",
+            arrivals: ArrivalProcess::Bursty { burst: 5, gap_ms: 40.0 },
+            requests: if smoke { 10 } else { 20 },
+            prompt_lens: (4, 8),
+            max_new: (8, 16),
+            shared_prefix: 8,
+            evict: EvictPolicyKind::Lru,
+            spill: true,
+            compress_kv: true,
+            high_frac: 0.4,
+            seed: 108,
+            ..base.clone()
+        },
     ];
     if !smoke {
+        out.push(Scenario {
+            name: "repeated-fleet-freq",
+            evict: EvictPolicyKind::Freq,
+            ..fleet.clone()
+        });
         out.push(Scenario {
             name: "poisson-long",
             arrivals: ArrivalProcess::Poisson { rate_per_sec: 25.0 },
@@ -217,6 +267,8 @@ pub struct WorkItem {
     pub deadline: Option<Duration>,
     /// Cancel this long after submission (mid-stream cancel).
     pub cancel_after: Option<Duration>,
+    /// Priority / SLO class (drives preemption when the scenario spills).
+    pub priority: Priority,
 }
 
 /// Expand a scenario into its concrete, seed-deterministic request
@@ -270,7 +322,22 @@ pub fn build_workload(
         } else {
             None
         };
-        out.push(WorkItem { id: i as u64, submit_at: at, prompt, max_new, deadline, cancel_after });
+        let priority = if rng.uniform() < sc.high_frac {
+            Priority::High
+        } else if sc.spill {
+            Priority::Low
+        } else {
+            Priority::Normal
+        };
+        out.push(WorkItem {
+            id: i as u64,
+            submit_at: at,
+            prompt,
+            max_new,
+            deadline,
+            cancel_after,
+            priority,
+        });
     }
     out
 }
@@ -310,7 +377,9 @@ fn drive(server: &Server, work: &[WorkItem]) -> Result<DriveOutcome> {
         match ev {
             Ev::Submit(i) => {
                 let w = &work[i];
-                let mut req = GenRequest::new(w.id, w.prompt.clone(), w.max_new);
+                let mut req = GenRequest::new(w.id, w.prompt.clone(), w.max_new).with_sampling(
+                    SamplingParams { priority: w.priority, ..SamplingParams::default() },
+                );
                 if let Some(d) = w.deadline {
                     req = req.with_deadline(d);
                 }
@@ -355,12 +424,29 @@ pub fn run_scenario(
     reps: usize,
 ) -> Result<Vec<(String, f64)>> {
     let mut samples: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let life = KvLifeConfig {
+        evict: sc.evict,
+        spill: sc.spill,
+        compress: sc.compress_kv,
+        rank_frac: 0.5,
+    };
+    // The compression-quality numbers the gate watches come from the
+    // seeded teacher-forcing harness, not the serving run: how often
+    // preemption fires mid-run depends on completion timing, and a
+    // gated metric must not appear or vanish with scheduling noise.
+    // No-KV methods (2:4-packed) have no KV to spill, so no cell.
+    let quality = if sc.compress_kv && matches!(mode, GenerationMode::KvCache) {
+        Some(kv_ppl_drift(served, life.rank_frac)?)
+    } else {
+        None
+    };
     for rep in 0..reps.max(1) {
         let work = build_workload(sc, served.cfg.vocab, served.cfg.max_seq, rep as u64);
         let model = served.clone();
         let server = Server::spawn(
             move || {
-                Ok(Box::new(NativeBackend::new(model, mode, KV_LANES)) as Box<dyn DecodeBackend>)
+                Ok(Box::new(NativeBackend::new(model, mode, KV_LANES).with_kvlife(life))
+                    as Box<dyn DecodeBackend>)
             },
             SchedulerConfig {
                 max_batch: 0, // backend lane cap (paged watermark for KV mode)
@@ -373,6 +459,7 @@ pub fn run_scenario(
         let wall_secs = outcome.wall.as_secs_f64().max(1e-9);
         let mut row: Vec<(String, f64)> =
             metrics.snapshot().into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        row.retain(|(k, _)| k != "kv_compression_ratio");
         // Client-side additions: goodput counts only tokens delivered to
         // *successfully completed* requests, against wall-clock time —
         // the "useful work under load" number throughput_tps (engine
@@ -380,6 +467,10 @@ pub fn run_scenario(
         row.push(("goodput_tps".to_string(), outcome.completed_tokens as f64 / wall_secs));
         row.push(("wall_ms".to_string(), wall_secs * 1e3));
         row.push(("client_completed".to_string(), outcome.completed as f64));
+        if let Some((drift, ratio)) = quality {
+            row.push(("kv_ppl_drift".to_string(), drift));
+            row.push(("kv_compression_ratio".to_string(), ratio));
+        }
         for (k, v) in row {
             samples.entry(k).or_default().push(v);
         }
@@ -390,6 +481,78 @@ pub fn run_scenario(
         out.push((k, vs[vs.len() / 2]));
     }
     Ok(out)
+}
+
+/// Log-probability of `token` under a logits row (stable log-softmax).
+fn log_prob_of(logits: &[f32], token: usize) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let sum: f64 = logits.iter().map(|&l| (l as f64 - max).exp()).sum();
+    (logits[token] as f64 - max) - sum.ln()
+}
+
+/// Teacher-forced mean NLL of `toks[prompt_len..]` on lane 0, optionally
+/// spilling + resuming the lane right after scoring position `spill_at`
+/// so the tail is scored against KV that round-tripped the arena.
+fn teacher_forced_nll(
+    be: &mut NativeBackend,
+    toks: &[usize],
+    prompt_len: usize,
+    spill_at: Option<usize>,
+) -> Result<f64> {
+    let lane = 0usize;
+    let mut logits = be.prefill(lane, &toks[..prompt_len])?;
+    let mut nll = 0.0;
+    let mut scored = 0usize;
+    for pos in prompt_len..toks.len() {
+        nll += -log_prob_of(&logits, toks[pos]);
+        scored += 1;
+        if pos + 1 == toks.len() {
+            break;
+        }
+        if spill_at == Some(pos) {
+            let Some(ticket) = be.spill(lane) else {
+                anyhow::bail!("drift harness: backend refused to spill")
+            };
+            ensure!(be.resume(lane, ticket)?, "drift harness: resume deferred on an empty pool");
+        }
+        let seq = &toks[..pos + 1];
+        let step = be.step(&[StepInput { lane, token: toks[pos], seq }])?;
+        logits = match step.into_iter().next() {
+            Some(StepResult::Logits(l)) => l,
+            other => anyhow::bail!("drift harness: unexpected step result {other:?}"),
+        };
+    }
+    be.release(lane);
+    Ok(nll / scored.max(1) as f64)
+}
+
+/// Measure what PIFA-compressing spilled KV costs in model quality:
+/// the same seeded continuation is teacher-force scored against exact
+/// KV and against KV that round-tripped a compressed spill at
+/// `rank_frac`. Returns `(ppl_drift, compression_ratio)`. Fully
+/// deterministic (seeded tokens, no wall-clock dependence), so both
+/// numbers can sit behind a `bench-diff` gate.
+pub fn kv_ppl_drift(served: &Transformer, rank_frac: f64) -> Result<(f64, f64)> {
+    let total = served.cfg.max_seq.min(24).max(8);
+    let mut rng = Rng::new(0x5EED_D81F);
+    let toks: Vec<usize> = (0..total).map(|_| rng.below(served.cfg.vocab)).collect();
+    let prompt_len = total / 2;
+    let spill_at = Some(prompt_len + 1);
+
+    let mut exact = NativeBackend::new(served.clone(), GenerationMode::KvCache, KV_LANES);
+    let nll_exact = teacher_forced_nll(&mut exact, &toks, prompt_len, None)?;
+
+    let life =
+        KvLifeConfig { evict: EvictPolicyKind::Lru, spill: true, compress: true, rank_frac };
+    let mut lossy =
+        NativeBackend::new(served.clone(), GenerationMode::KvCache, KV_LANES).with_kvlife(life);
+    let nll_lossy = teacher_forced_nll(&mut lossy, &toks, prompt_len, spill_at)?;
+    let stats = lossy
+        .spill_stats()
+        .context("drift harness: spill-enabled backend must expose arena stats")?;
+
+    let drift = (nll_lossy.exp() - nll_exact.exp()).abs();
+    Ok((drift, stats.compression_ratio()))
 }
 
 /// One (scenario, method) cell of the report.
@@ -589,6 +752,10 @@ mod tests {
             cancel_frac: 0.0,
             deadline_frac: 0.0,
             deadline_ms: 0,
+            evict: EvictPolicyKind::Fifo,
+            spill: false,
+            compress_kv: false,
+            high_frac: 0.0,
             seed: 7,
         }
     }
@@ -665,6 +832,70 @@ mod tests {
             assert!(s.prompt_lens.0 >= 1 && s.prompt_lens.0 <= s.prompt_lens.1);
             assert!(s.max_new.0 >= 1 && s.max_new.0 <= s.max_new.1);
         }
+    }
+
+    /// The repeated-fleet trio differs only in eviction policy, and the
+    /// spill scenario actually exercises preemption + compression.
+    #[test]
+    fn kv_lifecycle_scenarios_are_in_the_catalogue() {
+        let find = |cat: &[Scenario], name: &str| {
+            cat.iter().find(|s| s.name == name).cloned().unwrap_or_else(|| {
+                panic!("scenario {name} missing from catalogue")
+            })
+        };
+        let smoke = catalogue(true);
+        let fifo = find(&smoke, "repeated-fleet-fifo");
+        let lru = find(&smoke, "repeated-fleet-lru");
+        assert_eq!(fifo.evict, EvictPolicyKind::Fifo);
+        assert_eq!(lru.evict, EvictPolicyKind::Lru);
+        assert_eq!(fifo.seed, lru.seed, "trio must replay the identical workload");
+        assert_eq!(fifo.shared_prefix, lru.shared_prefix);
+        assert!(fifo.shared_prefix > 0, "fleet must share a prefix for hit rates to differ");
+        let spill = find(&smoke, "spill-compress");
+        assert!(spill.spill && spill.compress_kv && spill.high_frac > 0.0);
+        let full = catalogue(false);
+        let freq = find(&full, "repeated-fleet-freq");
+        assert_eq!(freq.evict, EvictPolicyKind::Freq);
+        assert_eq!(freq.seed, fifo.seed);
+        assert!(
+            !smoke.iter().any(|s| s.name == "repeated-fleet-freq"),
+            "freq cell is full-grid only"
+        );
+    }
+
+    /// Spill-enabled workloads mix High and Low priorities so the
+    /// scheduler has both preemptors and victims.
+    #[test]
+    fn spill_workloads_mix_priorities() {
+        let sc = Scenario { spill: true, high_frac: 0.5, requests: 24, ..tiny_scenario() };
+        let w = build_workload(&sc, 32, 32, 0);
+        assert!(w.iter().any(|i| i.priority == Priority::High));
+        assert!(w.iter().any(|i| i.priority == Priority::Low));
+        assert!(w.iter().all(|i| i.priority != Priority::Normal));
+        let plain = build_workload(&tiny_scenario(), 32, 32, 0);
+        assert!(plain.iter().all(|i| i.priority == Priority::Normal));
+    }
+
+    /// A compressed-spill cell reports the two gated quality metrics,
+    /// and they are seed-deterministic.
+    #[test]
+    fn compressed_cell_reports_drift_and_ratio() {
+        let model = micro_model(23);
+        let sc = Scenario {
+            spill: true,
+            compress_kv: true,
+            high_frac: 0.5,
+            ..tiny_scenario()
+        };
+        let m = run_scenario(&model, GenerationMode::KvCache, &sc, 1).unwrap();
+        let get = |k: &str| m.iter().find(|(n, _)| n == k).map(|(_, v)| *v);
+        let drift = get("kv_ppl_drift").expect("compress cell must report ppl drift");
+        let ratio = get("kv_compression_ratio").expect("compress cell must report the ratio");
+        assert!(drift.is_finite() && drift >= 0.0, "drift = {drift}");
+        assert!(ratio >= 1.0, "PIFA storage must not exceed raw f32 ({ratio})");
+        let (d2, r2) = kv_ppl_drift(&model, 0.5).unwrap();
+        assert_eq!(drift, d2, "drift must be seed-deterministic");
+        assert_eq!(ratio, r2, "ratio must be seed-deterministic");
     }
 
     #[test]

@@ -628,7 +628,7 @@ pub fn tab7_e2e() -> Result<()> {
             "tok/s",
             "TTFT p50 ms",
             "ITL p50/p95 ms",
-            "blk util/hit",
+            "blk util/hit/idle/evict",
             "weights MB",
         ],
     );
@@ -637,9 +637,11 @@ pub fn tab7_e2e() -> Result<()> {
         // "-" for backends without a pool (no-KV forced modes).
         let kv_col = if m.has_kv_pool() {
             format!(
-                "{:.0}%/{:.0}%",
+                "{:.0}%/{:.0}%/{}/{}",
                 m.block_util_percentile(0.5) * 100.0,
-                m.prefix_hit_rate() * 100.0
+                m.prefix_hit_rate() * 100.0,
+                m.kv_idle_blocks,
+                m.kv_evictions
             )
         } else {
             "-".into()

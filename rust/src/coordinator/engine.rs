@@ -32,6 +32,7 @@ use crate::model::transformer::{KvCache, KvStoreFull, Transformer};
 use crate::runtime::exec::{literal_f32_view, KvState, LaneKv, ModelRunner};
 use crate::runtime::kernels::gather::{self, LaneView};
 use crate::runtime::kernels::pool;
+use crate::runtime::kvlife::{CompressedKv, EvictPolicyKind, SpillArena, SpillArenaStats, SpilledKv};
 use crate::runtime::kvpool::{BlockPool, KvPoolConfig, KvPoolStats, PagedSeq, SeqKv};
 use crate::runtime::Engine;
 use anyhow::{bail, Context, Result};
@@ -111,6 +112,31 @@ impl PagedKvParams {
     }
 }
 
+/// KV lifecycle configuration (DESIGN.md §10): idle-block eviction
+/// policy, spill preemption, and cold-block compression. Applied to a
+/// paged [`NativeBackend`] via [`NativeBackend::with_kvlife`]; a no-op
+/// for other layouts.
+#[derive(Clone, Copy, Debug)]
+pub struct KvLifeConfig {
+    /// Which idle block to sacrifice when the free list is empty
+    /// (`pifa serve --kv-evict`).
+    pub evict: EvictPolicyKind,
+    /// Allow the scheduler to preempt low-priority sessions into the
+    /// host spill arena (`--kv-spill`).
+    pub spill: bool,
+    /// PIFA-factorize cold spilled K/V blocks (`--kv-compress`;
+    /// implies lossy resume above the matrix's true rank).
+    pub compress: bool,
+    /// Compression rank as a fraction of `min(len, dim)`.
+    pub rank_frac: f64,
+}
+
+impl Default for KvLifeConfig {
+    fn default() -> Self {
+        Self { evict: EvictPolicyKind::Fifo, spill: false, compress: false, rank_frac: 0.5 }
+    }
+}
+
 /// Per-lane generation state owned by a backend. `prefill` claims a
 /// lane, `step` advances any subset of claimed lanes by one token, and
 /// `release` frees a lane for reuse (cancel / finish).
@@ -142,6 +168,27 @@ pub trait DecodeBackend {
     fn kv_stats(&self) -> Option<KvPoolStats> {
         None
     }
+    /// Preempt: export `lane`'s KV state into the backend's host spill
+    /// arena and free the lane, returning a resume ticket. `None` means
+    /// the backend cannot spill (non-paged layouts, spill disabled) —
+    /// the caller must then `release` the lane itself and resume by
+    /// re-prefilling the session's sequence.
+    fn spill(&mut self, _lane: usize) -> Option<u64> {
+        None
+    }
+    /// Re-import a spilled ticket onto a free `lane`. `Ok(false)` means
+    /// the pool is too tight right now — the ticket stays parked, retry
+    /// later. `Ok(true)` consumes the ticket and claims the lane.
+    fn resume(&mut self, _lane: usize, ticket: u64) -> Result<bool> {
+        bail!("backend cannot resume spilled ticket {ticket}")
+    }
+    /// Discard a spilled ticket (the session reached a terminal state
+    /// while spilled). No-op for unknown tickets.
+    fn drop_spilled(&mut self, _ticket: u64) {}
+    /// Spill-arena counters, when the backend has one and spill is on.
+    fn spill_stats(&self) -> Option<SpillArenaStats> {
+        None
+    }
     /// Diagnostic label.
     fn name(&self) -> &'static str {
         "backend"
@@ -152,8 +199,16 @@ pub trait DecodeBackend {
 enum NativeKv {
     /// One dense [`KvCache`] per lane (the pre-paging reference layout).
     Contiguous(Vec<Option<KvCache>>),
-    /// Shared block pool + per-lane block tables (DESIGN.md §8).
-    Paged { pool: BlockPool, seqs: Vec<Option<SeqKv>>, params: PagedKvParams },
+    /// Shared block pool + per-lane block tables (DESIGN.md §8), plus
+    /// the lifecycle layer above them (§10): the host spill arena and
+    /// its configuration.
+    Paged {
+        pool: BlockPool,
+        seqs: Vec<Option<SeqKv>>,
+        params: PagedKvParams,
+        arena: SpillArena,
+        life: KvLifeConfig,
+    },
 }
 
 /// Pure-Rust backend over a [`Transformer`].
@@ -219,8 +274,20 @@ impl NativeBackend {
                 pool: BlockPool::new(cfg),
                 seqs: (0..lanes).map(|_| None).collect(),
                 params,
+                arena: SpillArena::new(),
+                life: KvLifeConfig::default(),
             },
         }
+    }
+
+    /// Configure the KV lifecycle layer (DESIGN.md §10). A no-op for
+    /// non-paged layouts, which have no pool to evict from or spill.
+    pub fn with_kvlife(mut self, life: KvLifeConfig) -> Self {
+        if let NativeKv::Paged { pool, life: slot, .. } = &mut self.kv {
+            pool.set_policy(life.evict);
+            *slot = life;
+        }
+        self
     }
 
     fn lane_count(&self) -> usize {
@@ -487,7 +554,7 @@ impl DecodeBackend for NativeBackend {
         if self.mode == GenerationMode::NoKvCache {
             return AdmitVerdict::Admit;
         }
-        let NativeKv::Paged { pool: blkpool, seqs, params } = &self.kv else {
+        let NativeKv::Paged { pool: blkpool, seqs, params, .. } = &self.kv else {
             return AdmitVerdict::Admit;
         };
         let max_seq = self.model.cfg.max_seq;
@@ -514,6 +581,85 @@ impl DecodeBackend for NativeBackend {
         match (&self.kv, self.mode) {
             (NativeKv::Paged { pool: blkpool, .. }, GenerationMode::KvCache) => {
                 Some(blkpool.stats())
+            }
+            _ => None,
+        }
+    }
+
+    fn spill(&mut self, lane: usize) -> Option<u64> {
+        if self.mode != GenerationMode::KvCache {
+            return None;
+        }
+        let NativeKv::Paged { pool: blkpool, seqs, arena, life, .. } = &mut self.kv else {
+            return None;
+        };
+        if !life.spill {
+            return None;
+        }
+        let seq = seqs.get_mut(lane)?.take()?;
+        let tokens = blkpool.tokens_of(&seq);
+        let (k, v) = blkpool.export_kv(&seq);
+        blkpool.release(seq);
+        let (n, d) = (tokens.len(), blkpool.config().dim);
+        let per = n * d;
+        let mut ck = Vec::with_capacity(blkpool.config().layers);
+        let mut cv = Vec::with_capacity(blkpool.config().layers);
+        for layer in 0..blkpool.config().layers {
+            let ks = &k[layer * per..(layer + 1) * per];
+            let vs = &v[layer * per..(layer + 1) * per];
+            if life.compress {
+                ck.push(CompressedKv::compress(n, d, ks, life.rank_frac));
+                cv.push(CompressedKv::compress(n, d, vs, life.rank_frac));
+            } else {
+                ck.push(CompressedKv::raw(n, d, ks.to_vec()));
+                cv.push(CompressedKv::raw(n, d, vs.to_vec()));
+            }
+        }
+        Some(arena.insert(SpilledKv { tokens, k: ck, v: cv }))
+    }
+
+    fn resume(&mut self, lane: usize, ticket: u64) -> Result<bool> {
+        let max_seq = self.model.cfg.max_seq;
+        let NativeKv::Paged { pool: blkpool, seqs, arena, .. } = &mut self.kv else {
+            bail!("contiguous backend cannot resume spilled ticket {ticket}");
+        };
+        if lane >= seqs.len() {
+            bail!("lane {lane} out of range ({} lanes)", seqs.len());
+        }
+        if seqs[lane].is_some() {
+            bail!("lane {lane} already claimed");
+        }
+        let Some(entry) = arena.get(ticket) else {
+            bail!("unknown spill ticket {ticket}");
+        };
+        // Worst-case capacity pre-check (resident-prefix re-attach only
+        // needs fewer): refuse rather than fail an import mid-way, and
+        // keep room for the next decode row.
+        let need = blkpool.blocks_for((entry.tokens.len() + 1).min(max_seq));
+        if blkpool.allocatable_blocks() < need {
+            return Ok(false);
+        }
+        let entry = arena.take(ticket).expect("ticket checked resident above");
+        let (k, v) = entry.materialize();
+        match blkpool.import_kv(&entry.tokens, &k, &v) {
+            Ok(seq) => {
+                seqs[lane] = Some(seq);
+                Ok(true)
+            }
+            Err(e) => bail!("resume import failed despite capacity pre-check: {e}"),
+        }
+    }
+
+    fn drop_spilled(&mut self, ticket: u64) {
+        if let NativeKv::Paged { arena, .. } = &mut self.kv {
+            arena.drop_ticket(ticket);
+        }
+    }
+
+    fn spill_stats(&self) -> Option<SpillArenaStats> {
+        match (&self.kv, self.mode) {
+            (NativeKv::Paged { arena, life, .. }, GenerationMode::KvCache) if life.spill => {
+                Some(arena.stats())
             }
             _ => None,
         }
@@ -927,6 +1073,117 @@ mod tests {
             .step(&[StepInput { lane: 0, token: 0, seq: &sa }])
             .unwrap();
         assert!(matches!(rows[0], StepResult::Logits(_)), "survivor keeps decoding");
+        be.release(0);
+    }
+
+    fn kvlife_backend(seed: u64, life: KvLifeConfig) -> NativeBackend {
+        NativeBackend::paged(
+            micro_model(seed, 32),
+            GenerationMode::KvCache,
+            PagedKvParams { block_tokens: 4, num_blocks: 16, watermark_per_active: 1 },
+        )
+        .with_kvlife(life)
+    }
+
+    #[test]
+    fn spill_resume_preserves_greedy_decode_bitwise() {
+        let model = micro_model(421, 32);
+        let reference = model.clone();
+        let mut be = NativeBackend::paged(
+            model,
+            GenerationMode::KvCache,
+            PagedKvParams { block_tokens: 4, num_blocks: 16, watermark_per_active: 1 },
+        )
+        .with_kvlife(KvLifeConfig {
+            evict: EvictPolicyKind::Lru,
+            spill: true,
+            ..KvLifeConfig::default()
+        });
+        let prompt = vec![7usize, 3, 9, 1, 5];
+        let want = reference.generate(&prompt, 6);
+        let l = be.prefill(0, &prompt).unwrap();
+        let mut seq = prompt.clone();
+        seq.push(argmax(&l));
+        for _ in 0..2 {
+            let rows = be
+                .step(&[StepInput { lane: 0, token: *seq.last().unwrap(), seq: &seq }])
+                .unwrap();
+            seq.push(argmax(logits_of(&rows, 0)));
+        }
+        // Preempt mid-generation, resume on a *different* lane.
+        let ticket = be.spill(0).expect("paged backend with spill on must spill");
+        assert_eq!(be.spill_stats().unwrap().spills, 1);
+        assert!(be.spill(0).is_none(), "lane freed by the spill");
+        assert!(be.resume(3, ticket).unwrap(), "pool has room to resume");
+        for _ in 0..3 {
+            let rows = be
+                .step(&[StepInput { lane: 3, token: *seq.last().unwrap(), seq: &seq }])
+                .unwrap();
+            seq.push(argmax(logits_of(&rows, 0)));
+        }
+        assert_eq!(&seq[prompt.len()..], &want[..], "spill+resume changed greedy tokens");
+        assert_eq!(be.spill_stats().unwrap().resumes, 1);
+        be.release(3);
+    }
+
+    #[test]
+    fn spill_is_refused_when_disabled_or_contiguous() {
+        let mut off = kvlife_backend(422, KvLifeConfig::default());
+        off.prefill(0, &[1, 2, 3]).unwrap();
+        assert!(off.spill(0).is_none(), "spill disabled by default");
+        assert!(off.spill_stats().is_none());
+        off.release(0);
+
+        let mut contiguous =
+            NativeBackend::contiguous(micro_model(423, 32), GenerationMode::KvCache, 2);
+        contiguous.prefill(0, &[1, 2, 3]).unwrap();
+        assert!(contiguous.spill(0).is_none(), "contiguous layout cannot spill");
+        assert!(contiguous.resume(1, 0).is_err());
+        contiguous.release(0);
+    }
+
+    #[test]
+    fn resume_defers_when_the_pool_is_tight() {
+        let mut be = NativeBackend::paged(
+            micro_model(424, 32),
+            GenerationMode::KvCache,
+            PagedKvParams { block_tokens: 4, num_blocks: 2, watermark_per_active: 0 },
+        )
+        .with_kvlife(KvLifeConfig { spill: true, ..KvLifeConfig::default() });
+        // 8 tokens fill both blocks; + 1 decode row cannot fit back.
+        be.prefill(0, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        let ticket = be.spill(0).unwrap();
+        assert_eq!(be.resume(0, ticket).unwrap(), false, "no headroom for the decode row");
+        // The ticket survives a refused resume and can still be dropped.
+        be.drop_spilled(ticket);
+        let st = be.spill_stats().unwrap();
+        assert_eq!((st.spills, st.resumes, st.dropped), (1, 0, 1));
+    }
+
+    #[test]
+    fn compressed_spill_resume_keeps_serving() {
+        let mut be = kvlife_backend(
+            425,
+            KvLifeConfig {
+                spill: true,
+                compress: true,
+                rank_frac: 0.5,
+                ..KvLifeConfig::default()
+            },
+        );
+        let prompt = vec![2usize, 9, 4, 7, 1, 3];
+        let l = be.prefill(0, &prompt).unwrap();
+        let mut seq = prompt.clone();
+        seq.push(argmax(&l));
+        let ticket = be.spill(0).unwrap();
+        let st = be.spill_stats().unwrap();
+        assert!(st.stored_bytes <= st.raw_bytes, "compression must never grow storage");
+        assert!(be.resume(0, ticket).unwrap());
+        // Lossy resume still decodes (logits, not faults).
+        let rows = be
+            .step(&[StepInput { lane: 0, token: *seq.last().unwrap(), seq: &seq }])
+            .unwrap();
+        assert!(matches!(rows[0], StepResult::Logits(_)));
         be.release(0);
     }
 

@@ -24,11 +24,11 @@ pub mod server;
 
 pub use clock::{system_clock, Clock, ManualClock, SystemClock};
 pub use engine::{
-    AdmitVerdict, DecodeBackend, GenerationMode, NativeBackend, PagedKvParams, PjrtBackend,
-    StepInput, StepResult,
+    AdmitVerdict, DecodeBackend, GenerationMode, KvLifeConfig, NativeBackend, PagedKvParams,
+    PjrtBackend, StepInput, StepResult,
 };
 pub use request::{
-    EngineFault, Event, FinishReason, GenRequest, GenStats, SamplingParams, ServeError,
+    EngineFault, Event, FinishReason, GenRequest, GenStats, Priority, SamplingParams, ServeError,
     ServeMetrics,
 };
 pub use scheduler::{GenSession, Scheduler, SchedulerConfig};

@@ -7,6 +7,41 @@ use crate::runtime::exec::argmax;
 use std::fmt;
 use std::time::{Duration, Instant};
 
+/// Priority / SLO class of a request (DESIGN.md §10). Derived `Ord`
+/// ranks `Low < Normal < High`; the scheduler may preempt a
+/// lower-priority active session (spilling its KV to the host arena)
+/// when admission would otherwise defer a higher class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Preemptible background work (batch eval, speculative traffic).
+    Low,
+    /// Interactive default.
+    #[default]
+    Normal,
+    /// Latency-critical; may preempt `Low` sessions to admit.
+    High,
+}
+
+impl Priority {
+    /// Parse a `--priority`-style flag value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "low" => Some(Self::Low),
+            "normal" => Some(Self::Normal),
+            "high" => Some(Self::High),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Low => "low",
+            Self::Normal => "normal",
+            Self::High => "high",
+        }
+    }
+}
+
 /// Per-request sampling policy. `temperature <= 0` is greedy argmax
 /// (the paper's Table 7 measurement mode); otherwise top-k softmax
 /// sampling at the given temperature, seeded per session.
@@ -21,6 +56,8 @@ pub struct SamplingParams {
     /// Generation stops after emitting any of these tokens (the emitted
     /// stop token counts toward the output).
     pub stop_tokens: Vec<usize>,
+    /// Priority / SLO class (preemption, DESIGN.md §10).
+    pub priority: Priority,
 }
 
 impl SamplingParams {
@@ -239,6 +276,18 @@ pub struct ServeMetrics {
     pub kv_prefix_query_tokens: usize,
     /// Copy-on-write block forks taken by diverging shared prefixes.
     pub kv_cow_copies: usize,
+    /// Idle blocks sacrificed to allocations (prefix-index entries lost).
+    pub kv_evictions: usize,
+    /// Idle blocks retained for prefix reuse at shutdown.
+    pub kv_idle_blocks: usize,
+    /// Sessions preempted into the host spill arena (scheduler-counted).
+    pub spills: usize,
+    /// Spilled sessions brought back onto a lane (scheduler-counted).
+    pub resumes: usize,
+    /// Spilled K/V bytes before compression (arena accounting).
+    pub kv_spill_raw_bytes: u64,
+    /// Spilled K/V bytes actually stored (== raw with compression off).
+    pub kv_spill_stored_bytes: u64,
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
     itl_ms: Vec<f64>,
@@ -311,6 +360,15 @@ impl ServeMetrics {
         self.kv_prefix_hit_tokens = stats.prefix_hit_tokens;
         self.kv_prefix_query_tokens = stats.prefix_query_tokens;
         self.kv_cow_copies = stats.cow_copies;
+        self.kv_evictions = stats.evictions;
+        self.kv_idle_blocks = stats.idle_blocks;
+    }
+
+    /// Absorb the backend's final spill-arena byte counters (server
+    /// shutdown; the spill/resume *event* counts are scheduler-recorded).
+    pub fn set_spill_final(&mut self, stats: crate::runtime::kvlife::SpillArenaStats) {
+        self.kv_spill_raw_bytes = stats.raw_bytes;
+        self.kv_spill_stored_bytes = stats.stored_bytes;
     }
 
     /// True when the backend reported a paged-KV pool.
@@ -420,6 +478,8 @@ impl ServeMetrics {
             ("queue_depth_p95", self.queue_depth_percentile(0.95)),
             ("occupancy_p50", self.occupancy_percentile(0.5)),
             ("occupancy_p95", self.occupancy_percentile(0.95)),
+            ("spills", self.spills as f64),
+            ("resumes", self.resumes as f64),
         ];
         if self.has_kv_pool() {
             out.push(("block_util_p50", self.block_util_percentile(0.5)));
@@ -427,6 +487,14 @@ impl ServeMetrics {
             out.push(("prefix_hit_rate", self.prefix_hit_rate()));
             out.push(("kv_peak_blocks", self.kv_peak_blocks as f64));
             out.push(("cow_forks", self.kv_cow_copies as f64));
+            out.push(("kv_evictions", self.kv_evictions as f64));
+            out.push(("kv_idle_blocks", self.kv_idle_blocks as f64));
+        }
+        if self.kv_spill_stored_bytes > 0 {
+            out.push((
+                "kv_compression_ratio",
+                self.kv_spill_raw_bytes as f64 / self.kv_spill_stored_bytes as f64,
+            ));
         }
         out
     }
@@ -589,6 +657,7 @@ mod tests {
             prefix_hit_tokens: 1,
             prefix_query_tokens: 2,
             cow_copies: 0,
+            evictions: 0,
         });
         let names: Vec<&str> = m.snapshot().iter().map(|(n, _)| *n).collect();
         assert!(names.contains(&"prefix_hit_rate"));
@@ -608,7 +677,7 @@ mod tests {
             temperature: 0.8,
             top_k: 2,
             seed: 9,
-            stop_tokens: Vec::new(),
+            ..SamplingParams::default()
         };
         let mut rng = Rng::new(9);
         let logits = [0.0f32, 5.0, 4.5, -2.0, 1.0];
@@ -639,6 +708,45 @@ mod tests {
     }
 
     #[test]
+    fn priority_orders_and_parses() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::parse(p.name()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(SamplingParams::greedy().priority, Priority::Normal);
+    }
+
+    #[test]
+    fn spill_metrics_surface_in_snapshot() {
+        let mut m = ServeMetrics::default();
+        m.spills = 3;
+        m.resumes = 2;
+        let names: Vec<&str> = m.snapshot().iter().map(|(n, _)| *n).collect();
+        assert!(names.contains(&"spills") && names.contains(&"resumes"));
+        assert!(
+            !names.contains(&"kv_compression_ratio"),
+            "compression ratio needs stored bytes"
+        );
+        m.set_spill_final(crate::runtime::kvlife::SpillArenaStats {
+            spills: 3,
+            resumes: 2,
+            dropped: 0,
+            raw_bytes: 4000,
+            stored_bytes: 1000,
+        });
+        let snap = m.snapshot();
+        let ratio = snap
+            .iter()
+            .find(|(n, _)| *n == "kv_compression_ratio")
+            .expect("ratio emitted once bytes exist")
+            .1;
+        assert!((ratio - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn kv_metrics_aggregate_and_report() {
         let mut m = ServeMetrics::default();
         assert!(!m.has_kv_pool());
@@ -654,6 +762,7 @@ mod tests {
             prefix_hit_tokens: 30,
             prefix_query_tokens: 40,
             cow_copies: 2,
+            evictions: 3,
         };
         m.set_kv_final(stats);
         m.finalize();
@@ -661,6 +770,8 @@ mod tests {
         assert_eq!(m.kv_blocks_total, 32);
         assert_eq!(m.kv_peak_blocks, 24);
         assert_eq!(m.kv_cow_copies, 2);
+        assert_eq!(m.kv_evictions, 3);
+        assert_eq!(m.kv_idle_blocks, 4);
         assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
         assert!((m.block_util_percentile(0.0) - 0.25).abs() < 1e-12);
         assert!((m.block_util_percentile(1.0) - 0.75).abs() < 1e-12);

@@ -137,6 +137,16 @@ fn finish_session(
     let _ = sess.events.send(Event::Done(stats));
 }
 
+/// A session preempted off its lane (DESIGN.md §10). With a `ticket`
+/// its KV rows sit in the backend's host spill arena and resume
+/// re-imports them; without one (backend can't spill) resume re-prefills
+/// `seq[..len-1]` from scratch. Either way the session keeps its
+/// streaming channel and owes its client exactly one terminal event.
+struct SpilledSession {
+    sess: GenSession,
+    ticket: Option<u64>,
+}
+
 /// Lane table + admission queue. Pure state machine: the server loop
 /// calls `submit`/`cancel` on message arrival and `sweep_deadlines` →
 /// `admit` → `step` once per iteration.
@@ -144,6 +154,8 @@ pub struct Scheduler {
     cfg: SchedulerConfig,
     queue: VecDeque<Queued>,
     lanes: Vec<Option<GenSession>>,
+    /// Sessions preempted off their lanes, waiting to resume.
+    spilled: Vec<SpilledSession>,
     clock: Arc<dyn Clock>,
 }
 
@@ -161,7 +173,13 @@ impl Scheduler {
         } else {
             cfg.max_batch.min(backend_lanes).max(1)
         };
-        Self { cfg, queue: VecDeque::new(), lanes: (0..n).map(|_| None).collect(), clock }
+        Self {
+            cfg,
+            queue: VecDeque::new(),
+            lanes: (0..n).map(|_| None).collect(),
+            spilled: Vec::new(),
+            clock,
+        }
     }
 
     pub fn has_active(&self) -> bool {
@@ -172,9 +190,14 @@ impl Scheduler {
         self.queue.len()
     }
 
-    /// Nothing queued and nothing in flight.
+    /// Sessions preempted off their lanes, awaiting resume.
+    pub fn spilled_len(&self) -> usize {
+        self.spilled.len()
+    }
+
+    /// Nothing queued, nothing in flight, nothing spilled.
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && !self.has_active()
+        self.queue.is_empty() && !self.has_active() && self.spilled.is_empty()
     }
 
     fn free_lane(&self) -> Option<usize> {
@@ -225,6 +248,15 @@ impl Scheduler {
                 return;
             }
         }
+        // A spilled session holds no lane — just its arena ticket.
+        if let Some(i) = self.spilled.iter().position(|s| s.sess.id == id) {
+            let SpilledSession { sess, ticket } = self.spilled.remove(i);
+            if let Some(t) = ticket {
+                backend.drop_spilled(t);
+            }
+            metrics.cancelled += 1;
+            let _ = sess.events.send(Event::Error(ServeError::Cancelled));
+        }
     }
 
     /// Expire queued and in-flight requests whose deadline has passed.
@@ -258,6 +290,19 @@ impl Scheduler {
                 backend.release(lane);
                 metrics.timeouts += 1;
                 let _ = sess.events.send(Event::Error(ServeError::Timeout));
+            }
+        }
+        let mut i = 0;
+        while i < self.spilled.len() {
+            if self.spilled[i].sess.deadline.is_some_and(|d| now >= d) {
+                let SpilledSession { sess, ticket } = self.spilled.remove(i);
+                if let Some(t) = ticket {
+                    backend.drop_spilled(t);
+                }
+                metrics.timeouts += 1;
+                let _ = sess.events.send(Event::Error(ServeError::Timeout));
+            } else {
+                i += 1;
             }
         }
     }
@@ -312,6 +357,12 @@ impl Scheduler {
         backend: &mut dyn DecodeBackend,
         metrics: &mut ServeMetrics,
     ) {
+        // Spilled sessions resume independently of the coalescing
+        // budget — with an empty queue no admission wave is ever "due",
+        // and a preempted session must not wait on new arrivals.
+        if !self.spilled.is_empty() {
+            self.try_resume(backend, metrics);
+        }
         if !self.admission_due(now) {
             return;
         }
@@ -325,6 +376,7 @@ impl Scheduler {
     /// (request can never fit the pool) is a typed
     /// [`ServeError::Overloaded`].
     pub fn admit_now(&mut self, backend: &mut dyn DecodeBackend, metrics: &mut ServeMetrics) {
+        self.try_resume(backend, metrics);
         while let Some(lane) = self.free_lane() {
             let (prompt_len, budget) = match self.queue.front() {
                 Some(q) => (q.req.prompt.len(), q.req.max_new),
@@ -335,13 +387,137 @@ impl Scheduler {
                     let q = self.queue.pop_front().expect("front checked above");
                     self.start_session(lane, q, backend, metrics);
                 }
-                AdmitVerdict::Defer => break,
+                AdmitVerdict::Defer => {
+                    // Priority preemption (DESIGN.md §10): a deferred
+                    // higher class may evict a lower-priority active
+                    // session into the spill arena, then the wave
+                    // retries. Bounded: every preemption removes one
+                    // active session, and with no eligible victim the
+                    // wave closes exactly like a plain Defer.
+                    if !self.try_preempt(backend, metrics) {
+                        break;
+                    }
+                }
                 AdmitVerdict::Reject(_reason) => {
                     let q = self.queue.pop_front().expect("front checked above");
                     metrics.rejected += 1;
                     let _ = q.events.send(Event::Error(ServeError::Overloaded {
                         queue_cap: self.cfg.queue_cap,
                     }));
+                }
+            }
+        }
+    }
+
+    /// Preempt the cheapest active session strictly below the queue
+    /// front's priority: spill its KV to the backend's host arena (or
+    /// just release, for backends that cannot spill) and park it for
+    /// resume. Returns whether a victim was evicted.
+    fn try_preempt(&mut self, backend: &mut dyn DecodeBackend, metrics: &mut ServeMetrics) -> bool {
+        let Some(front_pri) = self.queue.front().map(|q| q.req.sampling.priority) else {
+            return false;
+        };
+        // Victim choice: lowest priority first, then the *latest* arrival
+        // (least sunk prefill/decode work to redo).
+        let victim = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(l, s)| s.as_ref().map(|s| (l, s.sampling.priority, s.arrived)))
+            .min_by_key(|&(_, pri, arrived)| (pri, std::cmp::Reverse(arrived)));
+        let Some((lane, pri, _)) = victim else { return false };
+        if pri >= front_pri {
+            return false;
+        }
+        let sess = self.lanes[lane].take().expect("victim is active");
+        let ticket = backend.spill(lane);
+        if ticket.is_none() {
+            // Backend can't export KV: drop the lane state; resume will
+            // re-prefill the sequence instead of re-importing it.
+            backend.release(lane);
+        }
+        metrics.spills += 1;
+        self.spilled.push(SpilledSession { sess, ticket });
+        true
+    }
+
+    /// Bring spilled sessions back onto free lanes: highest priority
+    /// first, earliest arrival breaking ties. Stops when lanes or blocks
+    /// run out, or when the queue front outranks every spilled session
+    /// (resuming one would just be preempted straight back).
+    fn try_resume(&mut self, backend: &mut dyn DecodeBackend, metrics: &mut ServeMetrics) {
+        while !self.spilled.is_empty() {
+            let Some(lane) = self.free_lane() else { return };
+            let best = self
+                .spilled
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| {
+                    (std::cmp::Reverse(s.sess.sampling.priority), s.sess.arrived)
+                })
+                .map(|(i, _)| i)
+                .expect("spilled checked non-empty");
+            if let Some(q) = self.queue.front() {
+                if q.req.sampling.priority > self.spilled[best].sess.sampling.priority {
+                    return;
+                }
+            }
+            let SpilledSession { mut sess, ticket } = self.spilled.remove(best);
+            match ticket {
+                Some(t) => match backend.resume(lane, t) {
+                    Ok(true) => {
+                        sess.lane = lane;
+                        self.lanes[lane] = Some(sess);
+                        metrics.resumes += 1;
+                    }
+                    Ok(false) => {
+                        // Pool too tight right now; the ticket stays
+                        // parked and later waves retry.
+                        self.spilled.push(SpilledSession { sess, ticket });
+                        return;
+                    }
+                    Err(e) => {
+                        backend.drop_spilled(t);
+                        metrics.errors += 1;
+                        let _ = sess.events.send(Event::Error(ServeError::engine(format!(
+                            "resume failed: {e:#}"
+                        ))));
+                    }
+                },
+                None => {
+                    // No arena copy: recompute the KV by re-prefilling
+                    // everything except the already-sampled final token
+                    // (whose logits are not needed again).
+                    let prefix_len = sess.seq.len() - 1;
+                    let remaining = sess.max_new.saturating_sub(sess.generated_count()).max(1);
+                    match backend.admit_check(prefix_len, remaining) {
+                        AdmitVerdict::Defer => {
+                            self.spilled.push(SpilledSession { sess, ticket: None });
+                            return;
+                        }
+                        AdmitVerdict::Reject(reason) => {
+                            metrics.errors += 1;
+                            let _ = sess.events.send(Event::Error(ServeError::engine(format!(
+                                "spilled session no longer fits: {reason}"
+                            ))));
+                        }
+                        AdmitVerdict::Admit => {
+                            match backend.prefill(lane, &sess.seq[..prefix_len]) {
+                                Ok(_logits) => {
+                                    sess.lane = lane;
+                                    self.lanes[lane] = Some(sess);
+                                    metrics.resumes += 1;
+                                }
+                                Err(e) => {
+                                    backend.release(lane);
+                                    metrics.errors += 1;
+                                    let _ = sess.events.send(Event::Error(ServeError::engine(
+                                        format!("resume prefill failed: {e:#}"),
+                                    )));
+                                }
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -519,6 +695,15 @@ impl Scheduler {
                 metrics.errors += 1;
                 let _ = sess.events.send(Event::Error(ServeError::engine(msg.clone())));
             }
+        }
+        // Spilled sessions hold no lane, but an engine failure dooms
+        // them the same way: free their arena tickets and fail them out.
+        for SpilledSession { sess, ticket } in self.spilled.drain(..) {
+            if let Some(t) = ticket {
+                backend.drop_spilled(t);
+            }
+            metrics.errors += 1;
+            let _ = sess.events.send(Event::Error(ServeError::engine(msg.clone())));
         }
     }
 }
@@ -1047,5 +1232,103 @@ mod tests {
         let be = MockBackend::new(5);
         let sched = Scheduler::new(cfg(0, Duration::ZERO, 16), be.lanes());
         assert_eq!(sched.lanes.len(), 5);
+    }
+
+    /// Full preemption round trip on the re-prefill fallback path (a
+    /// backend whose `spill` returns `None`): a deferred High request
+    /// evicts the Low session into the spilled set, runs to completion,
+    /// then Low resumes and finishes with the exact token stream an
+    /// uninterrupted run would have produced.
+    #[test]
+    fn priority_preemption_spills_and_resumes_low_session() {
+        use crate::coordinator::request::Priority;
+        let mut be = MockBackend::new(2);
+        let mut sched = Scheduler::new(cfg(2, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (tl, rl) = mpsc::channel();
+        let low = SamplingParams { priority: Priority::Low, ..SamplingParams::greedy() };
+        sched.submit(GenRequest::new(1, vec![1, 2], 6).with_sampling(low), tl, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        sched.step(&mut be, &mut m); // Low has generated 2 of 6.
+
+        // Blocks run out (Defer) just as a High request arrives.
+        be.admit = AdmitVerdict::Defer;
+        let (th, rh) = mpsc::channel();
+        let high = SamplingParams { priority: Priority::High, ..SamplingParams::greedy() };
+        sched.submit(GenRequest::new(2, vec![3, 4], 2).with_sampling(high), th, &mut m);
+        sched.admit_now(&mut be, &mut m);
+        assert_eq!(m.spills, 1, "Low must be preempted for the deferred High request");
+        assert_eq!(sched.spilled_len(), 1);
+        assert_eq!(sched.queue_len(), 1, "High stays queued while admission still defers");
+        assert_eq!(be.released, vec![0], "fallback spill releases the victim's lane");
+
+        // Pressure clears: High admits first (it outranks the spilled
+        // Low, so try_resume yields), runs to completion.
+        be.admit = AdmitVerdict::Admit;
+        sched.admit_now(&mut be, &mut m);
+        assert_eq!(sched.spilled_len(), 1, "Low must not resume ahead of the High front");
+        sched.step(&mut be, &mut m);
+        let eh = drain(&rh);
+        assert_eq!(done_of(&eh).expect("High Done").tokens.len(), 2);
+
+        // Next wave resumes Low by re-prefilling everything except the
+        // already-sampled final token.
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert_eq!(m.resumes, 1);
+        assert_eq!(sched.spilled_len(), 0);
+        let resume_prefill = be.prefills.last().expect("resume re-prefills");
+        assert_eq!(resume_prefill.1.len(), 3, "prompt(2) + generated(2) - unfed final token");
+        for _ in 0..6 {
+            sched.step(&mut be, &mut m);
+        }
+        let el = drain(&rl);
+        let sl = done_of(&el).expect("Low Done exactly once despite the spill");
+        assert_eq!(sl.tokens.len(), 6);
+        assert_eq!(tokens_of(&el), sl.tokens, "stream stays continuous across the spill");
+        // Bitwise determinism: the interrupted run matches the script.
+        let mut seq = vec![1usize, 2];
+        for _ in 0..6 {
+            let t = be.next_token(&seq);
+            seq.push(t);
+        }
+        assert_eq!(sl.tokens, &seq[2..]);
+        assert_eq!(el.iter().filter(|e| matches!(e, Event::Done(_))).count(), 1);
+        assert_eq!(m.completed, 2);
+        assert!(sched.is_idle(), "no leaked lanes or spilled sessions");
+    }
+
+    /// Cancelling a spilled session terminates it (exactly one terminal
+    /// event) without touching any lane — it holds none.
+    #[test]
+    fn cancel_while_spilled_terminates_without_touching_lanes() {
+        use crate::coordinator::request::Priority;
+        let mut be = MockBackend::new(2);
+        let mut sched = Scheduler::new(cfg(2, Duration::ZERO, 16), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (tl, rl) = mpsc::channel();
+        let low = SamplingParams { priority: Priority::Low, ..SamplingParams::greedy() };
+        sched.submit(GenRequest::new(1, vec![1, 2], 8).with_sampling(low), tl, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        be.admit = AdmitVerdict::Defer;
+        let (th, rh) = mpsc::channel();
+        let high = SamplingParams { priority: Priority::High, ..SamplingParams::greedy() };
+        sched.submit(GenRequest::new(2, vec![3], 2).with_sampling(high), th, &mut m);
+        sched.admit_now(&mut be, &mut m);
+        assert_eq!(sched.spilled_len(), 1);
+        let released_at_spill = be.released.len();
+
+        sched.cancel(1, &mut be, &mut m);
+        assert_eq!(sched.spilled_len(), 0);
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(be.released.len(), released_at_spill, "no lane release for a spilled cancel");
+        let el = drain(&rl);
+        assert!(el.iter().any(|e| matches!(e, Event::Error(ServeError::Cancelled))));
+        assert_eq!(el.iter().filter(|e| matches!(e, Event::Error(_))).count(), 1);
+
+        be.admit = AdmitVerdict::Admit;
+        sched.admit_now(&mut be, &mut m);
+        sched.step(&mut be, &mut m);
+        assert!(done_of(&drain(&rh)).is_some());
+        assert!(sched.is_idle());
     }
 }

@@ -216,6 +216,9 @@ impl Server {
                 if let Some(stats) = backend.kv_stats() {
                     metrics.set_kv_final(stats);
                 }
+                if let Some(stats) = backend.spill_stats() {
+                    metrics.set_spill_final(stats);
+                }
                 metrics.finalize();
                 let _ = reply.send(metrics);
             }

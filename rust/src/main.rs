@@ -14,6 +14,8 @@
 //!               [--requests N] [--no-kv] [--native]
 //!               [--max-batch N] [--max-wait-ms MS] [--queue-cap N]
 //!               [--temperature F] [--top-k N] [--kv-lanes N]
+//!               [--kv-evict fifo|lru|freq] [--kv-spill] [--kv-compress]
+//!               [--kv-rank-frac F]
 //!               (+ the compress stage overrides; falls back to the
 //!               Rust-native backend when PJRT/artifacts are absent).
 //!               --max-batch 0 (default) uses the backend's lane cap —
@@ -22,6 +24,12 @@
 //!               fixed-lane baseline at equal memory; --kv-lanes sizes
 //!               the pool to that many contiguous max_seq lanes' bytes.
 //!               Block utilization + prefix-hit-rate print at shutdown.
+//!               KV lifecycle (DESIGN.md §10, native paged backend only):
+//!               --kv-evict picks the idle-block eviction policy,
+//!               --kv-spill lets the scheduler preempt low-priority
+//!               sessions into a host spill arena under block pressure,
+//!               and --kv-compress stores cold spilled KV as a PIFA
+//!               factorization at rank fraction --kv-rank-frac.
 //! pifa tables   <fig1|tab2|tab3|...|all>   (same generators as cargo bench)
 //! pifa bench-kernels [--smoke] [--out PATH]
 //!               — decode-path kernel microbench (dense vs low-rank vs
@@ -56,8 +64,8 @@ use pifa::compress::pipeline::{self, FactorizeStage, PackStage, PipelineSpec, Re
 use pifa::compress::registry::{self, CompressionOutput};
 use pifa::compress::ReconTarget;
 use pifa::coordinator::{
-    DecodeBackend, Event, GenRequest, GenerationMode, NativeBackend, PjrtBackend, SamplingParams,
-    SchedulerConfig, Server,
+    DecodeBackend, Event, GenRequest, GenerationMode, KvLifeConfig, NativeBackend, PjrtBackend,
+    SamplingParams, SchedulerConfig, Server,
 };
 use pifa::data::vocab::Vocab;
 use pifa::model::serialize::{load_checkpoint, load_checkpoint_full, save_checkpoint_with_spec};
@@ -257,6 +265,23 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     // Sampling knobs (greedy by default).
     let temperature: f32 = flags.get("temperature").map(String::as_str).unwrap_or("0").parse()?;
     let top_k: usize = flags.get("top-k").map(String::as_str).unwrap_or("0").parse()?;
+    // KV lifecycle knobs (DESIGN.md §10; native paged backend only).
+    let evict = match flags.get("kv-evict").map(String::as_str) {
+        None => pifa::runtime::EvictPolicyKind::default(),
+        Some(s) => pifa::runtime::EvictPolicyKind::parse(s)
+            .ok_or_else(|| anyhow!("unknown --kv-evict '{s}' (fifo|lru|freq)"))?,
+    };
+    let life = KvLifeConfig {
+        evict,
+        spill: flags.contains_key("kv-spill"),
+        compress: flags.contains_key("kv-compress"),
+        rank_frac: flags
+            .get("kv-rank-frac")
+            .map(String::as_str)
+            .unwrap_or("0.5")
+            .parse()
+            .context("--kv-rank-frac must be a number in (0, 1]")?,
+    };
 
     // Backend selection: PJRT when the runtime + artifacts are usable,
     // otherwise the Rust-native backend (same scheduler, no artifacts).
@@ -313,7 +338,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         let native_lanes = if use_kv { kv_lanes } else { kv_lanes.max(max_batch) };
         Server::spawn(
             move || {
-                Ok(Box::new(NativeBackend::new(served, mode, native_lanes))
+                Ok(Box::new(NativeBackend::new(served, mode, native_lanes).with_kvlife(life))
                     as Box<dyn DecodeBackend>)
             },
             scfg,
@@ -332,7 +357,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     };
 
     let v = Vocab::new();
-    let sampling = SamplingParams { temperature, top_k, seed: 7, stop_tokens: Vec::new() };
+    let sampling =
+        SamplingParams { temperature, top_k, seed: 7, ..SamplingParams::default() };
     let mut handles = Vec::new();
     for i in 0..n_requests as u64 {
         // Mixed traffic: prompt lengths and budgets vary per request.
@@ -403,6 +429,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             metrics.kv_cow_copies,
             metrics.peak_active,
         );
+        println!(
+            "kv lifecycle ({}): idle at shutdown {} | evictions {} | spills {} | resumes {}",
+            evict.name(),
+            metrics.kv_idle_blocks,
+            metrics.kv_evictions,
+            metrics.spills,
+            metrics.resumes,
+        );
+        if metrics.kv_spill_stored_bytes > 0 {
+            println!(
+                "kv spill arena: {:.1} KB raw -> {:.1} KB stored ({:.2}x compression)",
+                metrics.kv_spill_raw_bytes as f64 / 1e3,
+                metrics.kv_spill_stored_bytes as f64 / 1e3,
+                metrics.kv_spill_raw_bytes as f64 / metrics.kv_spill_stored_bytes as f64,
+            );
+        }
     }
     Ok(())
 }

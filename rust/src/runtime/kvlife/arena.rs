@@ -1,0 +1,203 @@
+//! Host-side spill arena for preempted sessions (DESIGN.md §10).
+//!
+//! When the scheduler preempts a low-priority session, its block table
+//! leaves the pool entirely: the K/V rows are exported into host
+//! buffers (optionally PIFA-compressed, see [`super::compress`]) and
+//! parked here under a resume ticket. Resume re-imports the rows
+//! through the pool's content-addressed path — any prefix still
+//! resident re-attaches bitwise-identically, the rest is rewritten
+//! from the arena copy.
+
+use crate::runtime::kvlife::compress::CompressedKv;
+use std::collections::HashMap;
+
+/// A spilled session: the tokens whose K/V rows are stored, plus one
+/// [`CompressedKv`] per layer for each of K and V
+/// (`tokens.len() × dim` matrices).
+pub struct SpilledKv {
+    pub tokens: Vec<usize>,
+    pub k: Vec<CompressedKv>,
+    pub v: Vec<CompressedKv>,
+}
+
+impl SpilledKv {
+    /// Materialize the layer-major contiguous K and V buffers the
+    /// pool's import path expects.
+    pub fn materialize(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        for c in &self.k {
+            k.extend_from_slice(&c.decompress());
+        }
+        for c in &self.v {
+            v.extend_from_slice(&c.decompress());
+        }
+        (k, v)
+    }
+}
+
+/// Cumulative arena counters (monotone; absorbed into `ServeMetrics`
+/// at server shutdown).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpillArenaStats {
+    pub spills: u64,
+    pub resumes: u64,
+    /// Tickets discarded because the session terminated while spilled.
+    pub dropped: u64,
+    /// Bytes the spilled rows would occupy uncompressed.
+    pub raw_bytes: u64,
+    /// Bytes actually stored (== `raw_bytes` with compression off).
+    pub stored_bytes: u64,
+}
+
+impl SpillArenaStats {
+    /// Capacity gain of compression (raw / stored); 1.0 before any
+    /// spill.
+    pub fn compression_ratio(&self) -> f64 {
+        if self.stored_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.stored_bytes as f64
+        }
+    }
+}
+
+/// Ticket-keyed store of spilled sessions.
+#[derive(Default)]
+pub struct SpillArena {
+    next_ticket: u64,
+    entries: HashMap<u64, SpilledKv>,
+    stats: SpillArenaStats,
+}
+
+impl SpillArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> SpillArenaStats {
+        self.stats
+    }
+
+    /// Store a spilled session; returns its resume ticket.
+    pub fn insert(&mut self, spilled: SpilledKv) -> u64 {
+        let mut raw = 0usize;
+        let mut stored = 0usize;
+        for c in spilled.k.iter().chain(spilled.v.iter()) {
+            raw += c.rows() * c.dim();
+            stored += c.stored_f32s();
+        }
+        self.stats.spills += 1;
+        self.stats.raw_bytes += (raw * std::mem::size_of::<f32>()) as u64;
+        self.stats.stored_bytes += (stored * std::mem::size_of::<f32>()) as u64;
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.entries.insert(ticket, spilled);
+        ticket
+    }
+
+    /// Borrow a ticket's entry (capacity pre-checks before committing
+    /// to a resume).
+    pub fn get(&self, ticket: u64) -> Option<&SpilledKv> {
+        self.entries.get(&ticket)
+    }
+
+    /// Remove and return a ticket's entry for resume.
+    pub fn take(&mut self, ticket: u64) -> Option<SpilledKv> {
+        let entry = self.entries.remove(&ticket);
+        if entry.is_some() {
+            self.stats.resumes += 1;
+        }
+        entry
+    }
+
+    /// Discard a ticket (the session reached a terminal state while
+    /// spilled). Returns whether the ticket existed.
+    pub fn drop_ticket(&mut self, ticket: u64) -> bool {
+        let existed = self.entries.remove(&ticket).is_some();
+        if existed {
+            self.stats.dropped += 1;
+        }
+        existed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(tokens: Vec<usize>, dim: usize) -> SpilledKv {
+        let rows = tokens.len();
+        let data: Vec<f32> = (0..rows * dim).map(|x| x as f32).collect();
+        SpilledKv {
+            tokens,
+            k: vec![CompressedKv::raw(rows, dim, data.clone())],
+            v: vec![CompressedKv::raw(rows, dim, data)],
+        }
+    }
+
+    #[test]
+    fn insert_take_round_trips_and_counts() {
+        let mut a = SpillArena::new();
+        assert!(a.is_empty());
+        let t0 = a.insert(entry(vec![1, 2, 3], 4));
+        let t1 = a.insert(entry(vec![9], 4));
+        assert_ne!(t0, t1);
+        assert_eq!(a.len(), 2);
+        let s = a.stats();
+        assert_eq!(s.spills, 2);
+        // (3 + 1) rows x dim 4 x (K + V) x 4 bytes.
+        assert_eq!(s.raw_bytes, (3 + 1) * 4 * 2 * 4);
+        assert_eq!(s.stored_bytes, s.raw_bytes, "raw storage stores every byte");
+        assert!((s.compression_ratio() - 1.0).abs() < 1e-12);
+
+        let got = a.take(t0).expect("ticket resolves");
+        assert_eq!(got.tokens, vec![1, 2, 3]);
+        let (k, v) = got.materialize();
+        assert_eq!(k.len(), 12);
+        assert_eq!(k, v);
+        assert_eq!(a.stats().resumes, 1);
+        assert!(a.take(t0).is_none(), "tickets are single-use");
+    }
+
+    #[test]
+    fn drop_ticket_discards_without_a_resume() {
+        let mut a = SpillArena::new();
+        let t = a.insert(entry(vec![5, 6], 2));
+        assert!(a.get(t).is_some());
+        assert!(a.drop_ticket(t));
+        assert!(!a.drop_ticket(t));
+        let s = a.stats();
+        assert_eq!((s.spills, s.resumes, s.dropped), (1, 0, 1));
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn compressed_entries_store_fewer_bytes() {
+        let (rows, dim) = (12, 8);
+        // Rank-1 rows: i-th row = (i+1) * ones.
+        let mut data = vec![0f32; rows * dim];
+        for i in 0..rows {
+            for j in 0..dim {
+                data[i * dim + j] = (i + 1) as f32;
+            }
+        }
+        let mut a = SpillArena::new();
+        a.insert(SpilledKv {
+            tokens: (0..rows).collect(),
+            k: vec![CompressedKv::compress(rows, dim, &data, 0.5)],
+            v: vec![CompressedKv::compress(rows, dim, &data, 0.5)],
+        });
+        let s = a.stats();
+        assert!(s.stored_bytes < s.raw_bytes, "rank-1 KV must compress");
+        assert!(s.compression_ratio() > 1.0);
+    }
+}

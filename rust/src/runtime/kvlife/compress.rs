@@ -1,0 +1,140 @@
+//! PIFA compression of cold spilled KV matrices (DESIGN.md §10).
+//!
+//! A spilled session's per-layer K (or V) rows form a `len × dim`
+//! matrix — the same shape family the paper's pivoting factorization
+//! targets for weights. Compressing cold KV turns host-arena capacity
+//! into a rank knob: at rank `r = rank_frac · min(len, dim)` the
+//! factors are exact whenever the matrix's true rank is at most `r`
+//! and lossy above it. The serving bench measures the resulting PPL
+//! drift (`kv_ppl_drift`) and the capacity gain
+//! (`kv_compression_ratio`); the bitwise differential suite only ever
+//! sees the raw representation.
+
+use crate::linalg::Mat;
+use crate::pifa::{pivoting_factorization, PifaLayer, PivotStrategy};
+
+/// One layer's K or V rows, either raw or PIFA-factorized.
+pub struct CompressedKv {
+    rows: usize,
+    dim: usize,
+    repr: Repr,
+}
+
+enum Repr {
+    Raw(Vec<f32>),
+    Pifa(PifaLayer<f32>),
+}
+
+impl CompressedKv {
+    /// Store `rows × dim` row-major `data` verbatim (spill without
+    /// compression — the bitwise-exact path).
+    pub fn raw(rows: usize, dim: usize, data: Vec<f32>) -> Self {
+        debug_assert_eq!(data.len(), rows * dim, "raw KV geometry mismatch");
+        Self { rows, dim, repr: Repr::Raw(data) }
+    }
+
+    /// Factorize `rows × dim` row-major `data` at
+    /// `r = rank_frac · min(rows, dim)`. Falls back to raw storage when
+    /// the factorization cannot win: degenerate shapes, a rank so close
+    /// to full that the factors outweigh the matrix, or a matrix the
+    /// pivot search rejects.
+    pub fn compress(rows: usize, dim: usize, data: &[f32], rank_frac: f64) -> Self {
+        debug_assert_eq!(data.len(), rows * dim, "KV geometry mismatch");
+        if rows >= 2 && dim >= 2 {
+            let full = rows.min(dim);
+            let r = ((full as f64 * rank_frac).round() as usize).clamp(1, full);
+            let w = Mat::from_vec(rows, dim, data.to_vec());
+            if let Ok(layer) = pivoting_factorization(&w, r, PivotStrategy::QrColumnPivot) {
+                if layer.param_count() < rows * dim {
+                    return Self { rows, dim, repr: Repr::Pifa(layer) };
+                }
+            }
+        }
+        Self::raw(rows, dim, data.to_vec())
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// True when the PIFA factors are stored instead of the raw rows.
+    pub fn is_compressed(&self) -> bool {
+        matches!(self.repr, Repr::Pifa(_))
+    }
+
+    /// f32 values actually stored (the arena's byte accounting).
+    pub fn stored_f32s(&self) -> usize {
+        match &self.repr {
+            Repr::Raw(d) => d.len(),
+            Repr::Pifa(l) => l.param_count(),
+        }
+    }
+
+    /// Materialize the `rows × dim` row-major matrix: exact for raw
+    /// storage and for factorizations at or above the true rank.
+    pub fn decompress(&self) -> Vec<f32> {
+        match &self.repr {
+            Repr::Raw(d) => d.clone(),
+            Repr::Pifa(l) => l.reconstruct().into_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic rank-2 matrix: row i = a_i * u + b_i * w.
+    fn low_rank(rows: usize, dim: usize) -> Vec<f32> {
+        let mut data = vec![0f32; rows * dim];
+        for i in 0..rows {
+            let (a, b) = (1.0 + i as f32, 0.5 * i as f32 - 1.0);
+            for j in 0..dim {
+                let (u, w) = ((j as f32).sin(), 0.25 * j as f32 + 1.0);
+                data[i * dim + j] = a * u + b * w;
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn raw_round_trips_bitwise() {
+        let data: Vec<f32> = (0..24).map(|x| x as f32 * 0.5).collect();
+        let c = CompressedKv::raw(4, 6, data.clone());
+        assert!(!c.is_compressed());
+        assert_eq!(c.stored_f32s(), 24);
+        assert_eq!(c.decompress(), data);
+    }
+
+    #[test]
+    fn low_rank_kv_compresses_losslessly() {
+        let (rows, dim) = (12, 8);
+        let data = low_rank(rows, dim);
+        let c = CompressedKv::compress(rows, dim, &data, 0.5);
+        assert!(c.is_compressed(), "rank-2 rows must factorize at r = 4");
+        assert!(c.stored_f32s() < rows * dim, "factors must beat raw storage");
+        let back = c.decompress();
+        let err = data
+            .iter()
+            .zip(&back)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(err < 1e-3, "true rank below r must reconstruct exactly (err {err})");
+    }
+
+    #[test]
+    fn degenerate_shapes_fall_back_to_raw() {
+        let c = CompressedKv::compress(1, 6, &[1.0; 6], 0.5);
+        assert!(!c.is_compressed());
+        assert_eq!(c.decompress(), vec![1.0; 6]);
+        // Full-rank tiny matrix at rank_frac 1.0: factors cannot win.
+        let data = vec![3.0, 1.0, 2.0, 7.0];
+        let c = CompressedKv::compress(2, 2, &data, 1.0);
+        assert!(!c.is_compressed());
+        assert_eq!(c.decompress(), data);
+    }
+}

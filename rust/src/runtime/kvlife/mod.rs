@@ -1,0 +1,22 @@
+//! KV lifecycle subsystem (DESIGN.md §10): what happens to a block
+//! after its first write.
+//!
+//! The pool (§8) handles *residency* — allocation, refcounts,
+//! copy-on-write. This module owns everything after that:
+//!
+//! * [`policy`] — pluggable idle-block eviction (FIFO / LRU /
+//!   frequency), consulted by [`crate::runtime::kvpool::BlockPool`]
+//!   when the free list is empty (`pifa serve --kv-evict`).
+//! * [`arena`] — the host-side [`SpillArena`]: a preempted session's KV
+//!   rows leave the pool and wait, ticket-keyed, for resume.
+//! * [`compress`] — opt-in PIFA factorization of cold spilled K/V
+//!   matrices — the paper's compact meta low-rank representation
+//!   applied to serving state instead of weights.
+
+pub mod arena;
+pub mod compress;
+pub mod policy;
+
+pub use arena::{SpillArena, SpillArenaStats, SpilledKv};
+pub use compress::CompressedKv;
+pub use policy::EvictPolicyKind;

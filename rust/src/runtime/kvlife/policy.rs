@@ -1,0 +1,108 @@
+//! Pluggable idle-block eviction policies (DESIGN.md §10).
+//!
+//! When [`crate::runtime::kvpool::BlockPool`]'s free list is empty, an
+//! allocation must sacrifice one idle (refs == 0, still-indexed) block.
+//! Which one matters: the pool's release path parks a finished
+//! session's blocks head-first, so insertion-order eviction throws away
+//! the *hot shared-prefix head blocks* first — exactly the rows
+//! repeated-fleet traffic would re-attach. The policy sees per-block
+//! touch recency and prefix-hit counts and picks the victim.
+
+/// Which idle block the pool sacrifices when the free list is empty.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictPolicyKind {
+    /// Insertion order: the block that went idle first. Bit-identical
+    /// to the pre-lifecycle pool behavior.
+    #[default]
+    Fifo,
+    /// Least recently touched (allocation, prefix re-attach, append).
+    Lru,
+    /// Fewest prefix-cache hits; ties fall back to least recently
+    /// touched.
+    Freq,
+}
+
+impl EvictPolicyKind {
+    /// Parse a `--kv-evict` flag value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fifo" => Some(Self::Fifo),
+            "lru" => Some(Self::Lru),
+            "freq" | "frequency" => Some(Self::Freq),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Fifo => "fifo",
+            Self::Lru => "lru",
+            Self::Freq => "freq",
+        }
+    }
+
+    /// Pick the victim among idle candidates, given `(last_touch,
+    /// hits)` per candidate in idle-queue (insertion) order. Returns an
+    /// index into `candidates`. Panics on an empty list — the pool only
+    /// asks when something is evictable.
+    pub fn pick(self, candidates: &[(u64, u64)]) -> usize {
+        assert!(!candidates.is_empty(), "eviction with no idle candidates");
+        match self {
+            Self::Fifo => 0,
+            Self::Lru => {
+                let mut best = 0;
+                for (i, c) in candidates.iter().enumerate().skip(1) {
+                    if c.0 < candidates[best].0 {
+                        best = i;
+                    }
+                }
+                best
+            }
+            Self::Freq => {
+                let mut best = 0;
+                for (i, c) in candidates.iter().enumerate().skip(1) {
+                    if (c.1, c.0) < (candidates[best].1, candidates[best].0) {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for kind in [EvictPolicyKind::Fifo, EvictPolicyKind::Lru, EvictPolicyKind::Freq] {
+            assert_eq!(EvictPolicyKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(EvictPolicyKind::parse("frequency"), Some(EvictPolicyKind::Freq));
+        assert_eq!(EvictPolicyKind::parse("mru"), None);
+        assert_eq!(EvictPolicyKind::default(), EvictPolicyKind::Fifo);
+    }
+
+    #[test]
+    fn fifo_ignores_metadata_and_takes_the_front() {
+        let cands = [(9, 9), (1, 0), (5, 3)];
+        assert_eq!(EvictPolicyKind::Fifo.pick(&cands), 0);
+    }
+
+    #[test]
+    fn lru_takes_the_stalest_touch() {
+        let cands = [(9, 0), (1, 7), (5, 3)];
+        assert_eq!(EvictPolicyKind::Lru.pick(&cands), 1);
+    }
+
+    #[test]
+    fn freq_takes_fewest_hits_then_stalest() {
+        let cands = [(9, 2), (1, 2), (5, 0)];
+        assert_eq!(EvictPolicyKind::Freq.pick(&cands), 2);
+        // Tie on hits: the staler touch loses.
+        let tied = [(9, 1), (1, 1)];
+        assert_eq!(EvictPolicyKind::Freq.pick(&tied), 1);
+    }
+}

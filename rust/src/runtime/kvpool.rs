@@ -33,6 +33,7 @@
 //! [`crate::runtime::kernels::gather`].
 
 use crate::model::transformer::{KvStore, KvStoreFull};
+use crate::runtime::kvlife::EvictPolicyKind;
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
 
@@ -126,6 +127,8 @@ pub struct KvPoolStats {
     pub prefix_query_tokens: usize,
     /// Copy-on-write forks taken by [`BlockPool::append`].
     pub cow_copies: usize,
+    /// Idle blocks sacrificed to allocations (prefix-index entries lost).
+    pub evictions: usize,
 }
 
 impl KvPoolStats {
@@ -199,6 +202,10 @@ struct BlockMeta {
     parent_hash: u64,
     /// Present in the `children` sharing index.
     registered: bool,
+    /// Pool tick of the last allocation, prefix re-attach, or append.
+    last_touch: u64,
+    /// Prefix-cache re-attaches served by this block.
+    hits: u64,
 }
 
 /// The physical block pool (see module docs).
@@ -213,9 +220,14 @@ pub struct BlockPool {
     idle: VecDeque<usize>,
     /// parent chain hash → candidate blocks holding the next tokens.
     children: HashMap<u64, Vec<usize>>,
+    /// Which idle block to sacrifice when the free list is empty.
+    policy: EvictPolicyKind,
+    /// Logical clock driving `BlockMeta::last_touch`.
+    tick: u64,
     prefix_hit_tokens: usize,
     prefix_query_tokens: usize,
     cow_copies: usize,
+    evictions: usize,
     peak_used: usize,
 }
 
@@ -231,9 +243,12 @@ impl BlockPool {
             free: (0..cfg.num_blocks).rev().collect(),
             idle: VecDeque::new(),
             children: HashMap::new(),
+            policy: EvictPolicyKind::default(),
+            tick: 0,
             prefix_hit_tokens: 0,
             prefix_query_tokens: 0,
             cow_copies: 0,
+            evictions: 0,
             peak_used: 0,
             cfg,
         }
@@ -241,6 +256,15 @@ impl BlockPool {
 
     pub fn config(&self) -> &KvPoolConfig {
         &self.cfg
+    }
+
+    /// Select the idle-block eviction policy (DESIGN.md §10).
+    pub fn set_policy(&mut self, policy: EvictPolicyKind) {
+        self.policy = policy;
+    }
+
+    pub fn policy(&self) -> EvictPolicyKind {
+        self.policy
     }
 
     /// Blocks an allocation could obtain right now.
@@ -264,7 +288,14 @@ impl BlockPool {
             prefix_hit_tokens: self.prefix_hit_tokens,
             prefix_query_tokens: self.prefix_query_tokens,
             cow_copies: self.cow_copies,
+            evictions: self.evictions,
         }
+    }
+
+    /// Advance the logical clock and stamp block `b` as just touched.
+    fn touch(&mut self, b: usize) {
+        self.tick += 1;
+        self.meta[b].last_touch = self.tick;
     }
 
     fn note_used(&mut self) {
@@ -287,14 +318,31 @@ impl BlockPool {
         self.meta[b].tokens.clear();
     }
 
-    /// Pop a writable block: the free list first, then evict the oldest
-    /// idle (refs == 0) block.
+    /// Pop a writable block: the free list first, then sacrifice the
+    /// idle (refs == 0) block the eviction policy picks — insertion
+    /// order under FIFO, stalest touch under LRU, fewest prefix hits
+    /// under Freq.
     fn alloc(&mut self) -> Option<usize> {
         if let Some(b) = self.free.pop() {
             return Some(b);
         }
-        let b = self.idle.pop_front()?;
+        if self.idle.is_empty() {
+            return None;
+        }
+        let i = match self.policy {
+            EvictPolicyKind::Fifo => 0,
+            _ => {
+                let cands: Vec<(u64, u64)> = self
+                    .idle
+                    .iter()
+                    .map(|&b| (self.meta[b].last_touch, self.meta[b].hits))
+                    .collect();
+                self.policy.pick(&cands)
+            }
+        };
+        let b = self.idle.remove(i).expect("victim index within the idle queue");
         self.unregister(b);
+        self.evictions += 1;
         Some(b)
     }
 
@@ -349,6 +397,8 @@ impl BlockPool {
             }
             let Some((b, m)) = best else { break };
             self.retain_block(b);
+            self.meta[b].hits += 1;
+            self.touch(b);
             seq.blocks.push(b);
             for &t in &tokens[seq.len..seq.len + m] {
                 seq.hash = chain(seq.hash, t);
@@ -412,6 +462,7 @@ impl BlockPool {
         let b = *seq.blocks.last().expect("append always has a last block");
         debug_assert_eq!(self.meta[b].tokens.len(), off, "token list out of sync");
         self.meta[b].tokens.push(token);
+        self.touch(b);
         seq.hash = chain(seq.hash, token);
         seq.len += 1;
         self.note_used();
@@ -487,6 +538,100 @@ impl BlockPool {
     /// disjointness argument.
     pub(crate) fn slab_ptrs(&mut self) -> (*mut f32, *mut f32) {
         (self.k.as_mut_ptr(), self.v.as_mut_ptr())
+    }
+
+    /// The token ids whose K/V rows a session caches, reconstructed
+    /// from its blocks' metadata (spill needs them to re-import by
+    /// content address later).
+    pub fn tokens_of(&self, seq: &SeqKv) -> Vec<usize> {
+        let mut out = Vec::with_capacity(seq.len);
+        'outer: for &b in &seq.blocks {
+            for &t in &self.meta[b].tokens {
+                if out.len() == seq.len {
+                    break 'outer;
+                }
+                out.push(t);
+            }
+        }
+        debug_assert_eq!(out.len(), seq.len, "block token lists shorter than the session");
+        out
+    }
+
+    /// Copy a session's K and V rows into contiguous host buffers,
+    /// layer-major: element `(layer * len + pos) * dim + j`. The inverse
+    /// of [`BlockPool::import_kv`].
+    pub fn export_kv(&self, seq: &SeqKv) -> (Vec<f32>, Vec<f32>) {
+        let (n, d) = (seq.len, self.cfg.dim);
+        let mut k = vec![0f32; self.cfg.layers * n * d];
+        let mut v = vec![0f32; self.cfg.layers * n * d];
+        for layer in 0..self.cfg.layers {
+            for pos in 0..n {
+                let at = (layer * n + pos) * d;
+                k[at..at + d].copy_from_slice(self.k_row(seq, layer, pos));
+                v[at..at + d].copy_from_slice(self.v_row(seq, layer, pos));
+            }
+        }
+        (k, v)
+    }
+
+    /// Rebuild a session table from spilled state: re-attach whatever
+    /// prefix of `tokens` is still resident (content-addressed, exactly
+    /// like [`BlockPool::begin`] but over the *full* token list and
+    /// without prefix-rate accounting — a resume is not a prompt
+    /// arrival), then allocate and rewrite the rest from the exported
+    /// `k`/`v` buffers. On failure the partial table is released and the
+    /// pool is unchanged up to eviction of idle blocks.
+    pub fn import_kv(&mut self, tokens: &[usize], k: &[f32], v: &[f32]) -> Result<SeqKv, KvError> {
+        let (n, d) = (tokens.len(), self.cfg.dim);
+        debug_assert_eq!(k.len(), self.cfg.layers * n * d, "import K geometry mismatch");
+        debug_assert_eq!(v.len(), self.cfg.layers * n * d, "import V geometry mismatch");
+        let mut seq = SeqKv { blocks: Vec::new(), len: 0, hash: ROOT_HASH };
+        let bt = self.cfg.block_tokens;
+        while seq.len < n {
+            let want = &tokens[seq.len..];
+            let mut best: Option<(usize, usize)> = None;
+            if let Some(cands) = self.children.get(&seq.hash) {
+                for &b in cands {
+                    let have = &self.meta[b].tokens;
+                    let mut m = 0;
+                    while m < want.len() && m < have.len() && have[m] == want[m] {
+                        m += 1;
+                    }
+                    let beats = match best {
+                        Some((_, bm)) => m > bm,
+                        None => m > 0,
+                    };
+                    if beats {
+                        best = Some((b, m));
+                    }
+                }
+            }
+            let Some((b, m)) = best else { break };
+            self.retain_block(b);
+            self.meta[b].hits += 1;
+            self.touch(b);
+            seq.blocks.push(b);
+            for &t in &tokens[seq.len..seq.len + m] {
+                seq.hash = chain(seq.hash, t);
+            }
+            seq.len += m;
+            if m < bt {
+                break;
+            }
+        }
+        for pos in seq.len..n {
+            if let Err(e) = self.append(&mut seq, tokens[pos]) {
+                self.release(seq);
+                return Err(e);
+            }
+            for layer in 0..self.cfg.layers {
+                let at = (layer * n + pos) * d;
+                self.k_row_mut(&seq, layer, pos).copy_from_slice(&k[at..at + d]);
+                self.v_row_mut(&seq, layer, pos).copy_from_slice(&v[at..at + d]);
+            }
+        }
+        self.note_used();
+        Ok(seq)
     }
 }
 
@@ -718,6 +863,107 @@ mod tests {
             assert!(p.k_row(&seq, 0, t).iter().all(|&x| x == t as f32));
         }
         p.release(seq);
+    }
+
+    /// Build the discriminating idle state: two idle blocks where the
+    /// *older-queued* one (A) is hotter — one prefix hit, fresher touch —
+    /// than the younger-queued one (B). FIFO sacrifices A; LRU and Freq
+    /// sacrifice B.
+    fn hot_head_idle_pool(policy: EvictPolicyKind) -> BlockPool {
+        let mut p = pool(2, 2);
+        p.set_policy(policy);
+        let a = fill(&mut p, &[1, 2], 0.0);
+        let b = fill(&mut p, &[3, 4], 10.0);
+        // Re-attach A's block while A still holds it: hits += 1, touch.
+        let (s, reused) = p.begin(&[1, 2, 99]);
+        assert_eq!(reused, 2);
+        p.release(a);
+        p.release(s); // A's block idles first...
+        p.release(b); // ...then B's: idle order [A, B].
+        assert_eq!(p.stats().idle_blocks, 2);
+        p
+    }
+
+    #[test]
+    fn fifo_eviction_sacrifices_the_hot_head_block() {
+        let mut p = hot_head_idle_pool(EvictPolicyKind::Fifo);
+        let c = fill(&mut p, &[9, 10], 20.0);
+        assert_eq!(p.stats().evictions, 1);
+        let (s, reused) = p.begin(&[1, 2, 99]);
+        assert_eq!(reused, 0, "FIFO threw away the hot prefix block");
+        p.release(c);
+        p.release(s);
+    }
+
+    #[test]
+    fn lru_and_freq_eviction_keep_the_hot_block() {
+        for policy in [EvictPolicyKind::Lru, EvictPolicyKind::Freq] {
+            let mut p = hot_head_idle_pool(policy);
+            let c = fill(&mut p, &[9, 10], 20.0);
+            assert_eq!(p.stats().evictions, 1);
+            let (s, reused) = p.begin(&[1, 2, 99]);
+            assert_eq!(reused, 2, "{} evicted the cold block instead", policy.name());
+            p.release(c);
+            p.release(s);
+        }
+    }
+
+    #[test]
+    fn export_import_round_trips_bitwise() {
+        let mut p = pool(4, 8);
+        let toks: Vec<usize> = (100..106).collect();
+        let seq = fill(&mut p, &toks, 30.0);
+        assert_eq!(p.tokens_of(&seq), toks);
+        let (k, v) = p.export_kv(&seq);
+        let want_k: Vec<Vec<f32>> =
+            (0..6).map(|i| p.k_row(&seq, 1, i).to_vec()).collect();
+        p.release(seq);
+        // Churn the pool until every original block is evicted.
+        let filler: Vec<usize> = (500..532).collect();
+        let f = fill(&mut p, &filler, 40.0);
+        assert!(p.stats().evictions > 0, "filler must evict the released blocks");
+        p.release(f);
+        let seq2 = p.import_kv(&toks, &k, &v).unwrap();
+        assert_eq!(seq2.len(), 6);
+        assert_eq!(p.tokens_of(&seq2), toks);
+        let (k2, v2) = p.export_kv(&seq2);
+        assert_eq!(k, k2, "imported K rows must be bitwise identical");
+        assert_eq!(v, v2, "imported V rows must be bitwise identical");
+        for (i, row) in want_k.iter().enumerate() {
+            assert_eq!(p.k_row(&seq2, 1, i), &row[..]);
+        }
+        p.release(seq2);
+    }
+
+    #[test]
+    fn import_reattaches_resident_prefix() {
+        let mut p = pool(4, 8);
+        let toks: Vec<usize> = (7..15).collect();
+        let seq = fill(&mut p, &toks, 0.0);
+        let (k, v) = p.export_kv(&seq);
+        let original_blocks = seq.blocks().to_vec();
+        p.release(seq);
+        // Blocks are idle but resident: import matches all 8 positions
+        // (no `len - 1` cap — a resume needs no fresh logits).
+        let seq2 = p.import_kv(&toks, &k, &v).unwrap();
+        assert_eq!(seq2.len(), 8);
+        assert_eq!(seq2.blocks(), &original_blocks[..], "reused the resident blocks");
+        assert_eq!(p.stats().evictions, 0);
+        p.release(seq2);
+    }
+
+    #[test]
+    fn import_failure_releases_partial_table() {
+        let mut p = pool(2, 2);
+        let toks: Vec<usize> = (0..6).collect();
+        let k = vec![0f32; 2 * 6 * 3];
+        let v = vec![0f32; 2 * 6 * 3];
+        // 6 tokens need 3 blocks; the pool has 2.
+        let err = p.import_kv(&toks, &k, &v).unwrap_err();
+        assert_eq!(err, KvError::Exhausted { pos: 4 });
+        let s = p.stats();
+        assert_eq!(s.used_blocks, 0, "partial import table was released");
+        assert_eq!(s.free_blocks, 2);
     }
 
     #[test]

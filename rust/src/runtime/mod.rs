@@ -17,14 +17,20 @@
 //! * [`kvpool`] — the paged KV-cache block pool: ref-counted fixed-size
 //!   blocks, copy-on-write prefix sharing, per-session block tables
 //!   (DESIGN.md §8).
+//! * [`kvlife`] — the KV lifecycle layer above the pool: pluggable
+//!   idle-block eviction policies, the host-side spill arena for
+//!   preempted sessions, and PIFA compression of cold spilled blocks
+//!   (DESIGN.md §10).
 
 pub mod exec;
 pub mod kernels;
+pub mod kvlife;
 pub mod kvpool;
 pub mod loader;
 pub mod manifest;
 
 pub use exec::{weights_to_literals, LaneKv, ModelRunner};
+pub use kvlife::{CompressedKv, EvictPolicyKind, SpillArena, SpillArenaStats, SpilledKv};
 pub use kvpool::{BlockPool, KvPoolConfig, KvPoolStats, SeqKv};
 pub use loader::Engine;
 pub use manifest::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};

@@ -4,10 +4,13 @@
 //!
 //! * `paged_backend_matches_contiguous_bitwise` — random session mixes
 //!   (unequal prompt lengths, shared prompt prefixes, mid-stream
-//!   cancels, lane reuse, capacity faults) through
-//!   `NativeBackend::contiguous` and `NativeBackend::paged`
-//!   side by side; every logits row must match bit for bit, and faults
-//!   must fire at the same positions.
+//!   cancels, lane reuse, capacity faults, and uncompressed
+//!   spill-arena round trips) through `NativeBackend::contiguous` and
+//!   `NativeBackend::paged` side by side; every logits row must match
+//!   bit for bit, and faults must fire at the same positions. The paged
+//!   side rotates through the three eviction policies by seed
+//!   (override with `PIFA_KV_EVICT=fifo|lru|freq`), so eviction and
+//!   spill/resume are proven bitwise-invisible, not just survivable.
 //! * `lane_kv_matches_dense_reference_under_random_ops` — the paged
 //!   `LaneKv` (PJRT lane store) against a dense `(L, B, S, d)` reference
 //!   array under random write/absorb/reset sequences.
@@ -16,9 +19,11 @@
 //! `PIFA_KV_SEED=<seed> cargo test --test kv_differential`.
 
 use pifa::coordinator::{
-    DecodeBackend, GenerationMode, NativeBackend, PagedKvParams, StepInput, StepResult,
+    DecodeBackend, GenerationMode, KvLifeConfig, NativeBackend, PagedKvParams, StepInput,
+    StepResult,
 };
 use pifa::linalg::Rng;
+use pifa::runtime::EvictPolicyKind;
 use pifa::model::config::ModelConfig;
 use pifa::model::transformer::Transformer;
 use pifa::runtime::exec::argmax;
@@ -61,11 +66,20 @@ fn run_backend_differential(seed: u64) {
     let model = Transformer::new_random(&cfg, &mut rng);
     let lanes = 3usize;
     let mut contiguous = NativeBackend::contiguous(model.clone(), GenerationMode::KvCache, lanes);
+    let policy = match std::env::var("PIFA_KV_EVICT") {
+        Ok(s) => EvictPolicyKind::parse(&s).expect("PIFA_KV_EVICT must be fifo|lru|freq"),
+        Err(_) => {
+            [EvictPolicyKind::Fifo, EvictPolicyKind::Lru, EvictPolicyKind::Freq]
+                [seed as usize % 3]
+        }
+    };
     let mut paged = NativeBackend::paged(
         model,
         GenerationMode::KvCache,
         PagedKvParams { block_tokens: 4, num_blocks: 32, watermark_per_active: 1 },
-    );
+    )
+    .with_kvlife(KvLifeConfig { evict: policy, spill: true, ..KvLifeConfig::default() });
+    let mut spilled_any = false;
     let families =
         vec![vec![7usize, 3, 9, 1, 5, 2, 8, 4, 6, 11], vec![21usize, 22, 23, 24, 25, 26]];
     let mut seqs: Vec<Option<Vec<usize>>> = vec![None; lanes];
@@ -95,6 +109,26 @@ fn run_backend_differential(seed: u64) {
                 contiguous.release(lane);
                 paged.release(lane);
                 seqs[lane] = None;
+            }
+        }
+        // Spill + resume round trip on the paged side only: an
+        // uncompressed arena round trip must be bitwise invisible to
+        // the decode stream (the contiguous reference never spills).
+        if rng.below(6) == 0 {
+            let active: Vec<usize> = (0..lanes).filter(|&l| seqs[l].is_some()).collect();
+            if !active.is_empty() {
+                let lane = active[rng.below(active.len())];
+                let ticket =
+                    paged.spill(lane).expect("spill-enabled paged backend must export the lane");
+                if paged.resume(lane, ticket).unwrap() {
+                    spilled_any = true;
+                } else {
+                    // Pool too tight to re-import right now: end the
+                    // session on both sides instead of diverging.
+                    paged.drop_spilled(ticket);
+                    contiguous.release(lane);
+                    seqs[lane] = None;
+                }
             }
         }
         // One shared decode iteration over every active lane.
@@ -159,12 +193,21 @@ fn run_backend_differential(seed: u64) {
             }
         }
     }
-    // The mix must actually have exercised prefix sharing.
+    // The mix must actually have exercised prefix sharing, and every
+    // completed spill round trip must be visible in the arena stats.
     let stats = paged.kv_stats().expect("paged backend exposes pool stats");
     assert!(
         stats.prefix_hit_tokens > 0,
         "seed {seed}: prefix sharing never exercised (families too divergent?)"
     );
+    let arena = paged.spill_stats().expect("spill-enabled paged backend exposes arena stats");
+    if spilled_any {
+        assert!(arena.spills > 0 && arena.resumes > 0, "seed {seed}: arena stats unmoved");
+        assert_eq!(
+            arena.raw_bytes, arena.stored_bytes,
+            "seed {seed}: uncompressed spills must store exactly their raw bytes"
+        );
+    }
 }
 
 #[test]

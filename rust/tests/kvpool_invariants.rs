@@ -1,0 +1,189 @@
+//! Property suite for the paged KV block pool's bookkeeping (DESIGN.md
+//! §8/§10): under seeded random begin/append/release churn across all
+//! three eviction policies,
+//!
+//! * the block ledger always closes — `used + free == num_blocks` with
+//!   the idle queue a subset of the free pool (`idle <= free`);
+//! * the prefix-cache counters stay consistent (`hit <= query` tokens)
+//!   and monotone — hits, queries, COW copies, evictions, and the peak
+//!   watermark never roll back between operations;
+//! * `peak_used_blocks` dominates the live count at every step, and a
+//!   full drain returns every block (`used == 0` after final release).
+//!
+//! Prompts draw from shared-prefix families, so `begin` exercises
+//! prefix attach (including partial tail blocks) and decode appends
+//! COW-fork blocks still shared with live sessions.
+//!
+//! Failures print the seed: rerun with
+//! `PIFA_KV_SEED=<seed> cargo test --test kvpool_invariants`.
+
+use pifa::linalg::Rng;
+use pifa::runtime::{BlockPool, EvictPolicyKind, KvPoolConfig, KvPoolStats, SeqKv};
+
+const VOCAB: usize = 16;
+
+/// Assert every per-step invariant between two consecutive snapshots.
+fn check_step(prev: &KvPoolStats, cur: &KvPoolStats, seed: u64, op: usize) {
+    assert_eq!(
+        cur.used_blocks + cur.free_blocks,
+        cur.num_blocks,
+        "seed {seed} op {op}: ledger does not close (used {} + free {} != {})",
+        cur.used_blocks,
+        cur.free_blocks,
+        cur.num_blocks
+    );
+    assert!(
+        cur.idle_blocks <= cur.free_blocks,
+        "seed {seed} op {op}: idle {} exceeds free {}",
+        cur.idle_blocks,
+        cur.free_blocks
+    );
+    assert!(
+        cur.prefix_hit_tokens <= cur.prefix_query_tokens,
+        "seed {seed} op {op}: prefix hits {} exceed queries {}",
+        cur.prefix_hit_tokens,
+        cur.prefix_query_tokens
+    );
+    assert!(
+        cur.used_blocks <= cur.peak_used_blocks,
+        "seed {seed} op {op}: live {} above peak {}",
+        cur.used_blocks,
+        cur.peak_used_blocks
+    );
+    let monotone = [
+        ("prefix_hit_tokens", prev.prefix_hit_tokens, cur.prefix_hit_tokens),
+        ("prefix_query_tokens", prev.prefix_query_tokens, cur.prefix_query_tokens),
+        ("cow_copies", prev.cow_copies, cur.cow_copies),
+        ("evictions", prev.evictions, cur.evictions),
+        ("peak_used_blocks", prev.peak_used_blocks, cur.peak_used_blocks),
+    ];
+    for (name, before, after) in monotone {
+        assert!(
+            after >= before,
+            "seed {seed} op {op}: {name} rolled back ({before} -> {after})"
+        );
+    }
+}
+
+/// Shared-prefix prompt: a family head plus a short random tail, so
+/// sessions frequently agree on leading blocks.
+fn gen_prompt(rng: &mut Rng, families: &[Vec<usize>]) -> Vec<usize> {
+    let fam = &families[rng.below(families.len())];
+    let take = 1 + rng.below(fam.len());
+    let mut p = fam[..take].to_vec();
+    for _ in 0..rng.below(4) {
+        p.push(rng.below(VOCAB));
+    }
+    p
+}
+
+/// One churn run: ~300 random begin/append/release ops on a small pool,
+/// snapshotting and checking stats after every operation.
+fn run_pool_churn(seed: u64, policy: EvictPolicyKind) -> KvPoolStats {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(policy as u64));
+    let cfg = KvPoolConfig { layers: 2, dim: 4, block_tokens: 4, num_blocks: 12 };
+    let mut pool = BlockPool::new(cfg);
+    pool.set_policy(policy);
+
+    let families: Vec<Vec<usize>> = (0..3)
+        .map(|_| (0..6 + rng.below(8)).map(|_| rng.below(VOCAB)).collect())
+        .collect();
+    let mut live: Vec<SeqKv> = Vec::new();
+    let mut prev = pool.stats();
+    check_step(&prev, &prev, seed, 0);
+
+    for op in 1..=300 {
+        match rng.below(6) {
+            // Admit a new session: attach a shared prefix, append the
+            // rest. On exhaustion, release it (the caller's fallback).
+            0..=2 => {
+                let prompt = gen_prompt(&mut rng, &families);
+                let (mut seq, reused) = pool.begin(&prompt);
+                assert!(
+                    reused < prompt.len(),
+                    "seed {seed} op {op}: begin attached the final position"
+                );
+                let mut admitted = true;
+                for &t in &prompt[reused..] {
+                    if pool.append(&mut seq, t).is_err() {
+                        admitted = false;
+                        break;
+                    }
+                }
+                if admitted && live.len() < 6 {
+                    live.push(seq);
+                } else {
+                    pool.release(seq);
+                }
+            }
+            // Decode step on a live session: may COW-fork a block that
+            // a later `begin` re-attached while still partially filled.
+            3..=4 => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let t = rng.below(VOCAB);
+                    let _ = pool.append(&mut live[i], t);
+                }
+            }
+            // Finish a session; its sole-owned blocks park on the idle
+            // queue for prefix reuse until an allocation evicts them.
+            _ => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let seq = live.swap_remove(i);
+                    pool.release(seq);
+                }
+            }
+        }
+        let cur = pool.stats();
+        check_step(&prev, &cur, seed, op);
+        prev = cur;
+    }
+
+    for seq in live.drain(..) {
+        pool.release(seq);
+    }
+    let end = pool.stats();
+    check_step(&prev, &end, seed, 301);
+    assert_eq!(
+        end.used_blocks, 0,
+        "seed {seed}: blocks leaked after draining every session"
+    );
+    end
+}
+
+#[test]
+fn pool_stats_invariants_hold_under_random_churn() {
+    let seeds: Vec<u64> = match std::env::var("PIFA_KV_SEED") {
+        Ok(s) => vec![s.parse().expect("PIFA_KV_SEED must be a u64")],
+        Err(_) => (0..5).collect(),
+    };
+    let policies = [EvictPolicyKind::Fifo, EvictPolicyKind::Lru, EvictPolicyKind::Freq];
+    let mut total_hits = 0usize;
+    let mut total_cow = 0usize;
+    let mut total_evictions = 0usize;
+    for &seed in &seeds {
+        for policy in policies {
+            match std::panic::catch_unwind(|| run_pool_churn(seed, policy)) {
+                Ok(end) => {
+                    total_hits += end.prefix_hit_tokens;
+                    total_cow += end.cow_copies;
+                    total_evictions += end.evictions;
+                }
+                Err(payload) => {
+                    eprintln!(
+                        "kvpool_invariants FAILED at seed {seed} ({}); reproduce with \
+                         PIFA_KV_SEED={seed} cargo test --test kvpool_invariants",
+                        policy.name()
+                    );
+                    std::panic::resume_unwind(payload);
+                }
+            }
+        }
+    }
+    // The churn must actually exercise the interesting paths; a run
+    // that never hits the prefix cache, COW-forks, or evicts is vacuous.
+    assert!(total_hits > 0, "no prefix hits across any seed");
+    assert!(total_cow > 0, "no COW forks across any seed");
+    assert!(total_evictions > 0, "no evictions across any seed");
+}

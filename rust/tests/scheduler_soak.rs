@@ -1,24 +1,30 @@
-//! Randomized scheduler soak suite (DESIGN.md §6/§8).
+//! Randomized scheduler soak suite (DESIGN.md §6/§8/§10).
 //!
-//! Seeded random admit / cancel / deadline / stop-token / lane-fault
-//! sequences drive the [`Scheduler`] state machine against a scripted
-//! backend and a reference model of what must hold afterwards:
+//! Seeded random admit / cancel / deadline / stop-token / lane-fault /
+//! priority sequences drive the [`Scheduler`] state machine — including
+//! preemption into the spill arena and later resume — against a
+//! scripted backend and a reference model of what must hold afterwards:
 //!
 //! * **no leaked lanes** — every lane the backend handed out is released
-//!   exactly once, and the scheduler drains to idle;
+//!   exactly once, every spill ticket is consumed or dropped, and the
+//!   scheduler drains to idle;
 //! * **no dropped waiters** — every submitted session's event stream
 //!   carries *exactly one* terminal event (`Done` or `Error`), with
-//!   consecutive token indices before it and silence after it;
+//!   consecutive token indices before it and silence after it — a
+//!   Spilled-then-resumed session included;
 //! * **accounting closes** — the metrics terminal buckets
 //!   (completed / cancelled / timeouts / errors / rejected) sum to the
 //!   number of submissions, bucket by bucket.
 //!
-//! Failures print the seed: rerun one seed with
+//! The backend's spill mode rotates by seed: ticket mode (arena-backed
+//! resume) or fallback mode (spill refused, resume re-prefills).
+//! Override with `PIFA_KV_SPILL=ticket|fallback`. Failures print the
+//! seed: rerun one seed with
 //! `PIFA_SOAK_SEED=<seed> cargo test --test scheduler_soak`.
 
 use pifa::coordinator::{
-    AdmitVerdict, DecodeBackend, Event, GenRequest, SamplingParams, Scheduler, SchedulerConfig,
-    ServeError, ServeMetrics, StepInput, StepResult,
+    AdmitVerdict, DecodeBackend, Event, GenRequest, Priority, SamplingParams, Scheduler,
+    SchedulerConfig, ServeError, ServeMetrics, StepInput, StepResult,
 };
 use pifa::linalg::Rng;
 use std::cell::Cell;
@@ -40,10 +46,25 @@ struct SoakBackend {
     fault_every: usize,
     /// Every Nth admit check defers (0 = never).
     defer_every: usize,
+    /// Ticket-mode spill (arena-backed resume); false = refuse to
+    /// spill, forcing the scheduler's re-prefill fallback.
+    ticket_spill: bool,
+    next_ticket: u64,
+    tickets: HashSet<u64>,
+    resume_calls: usize,
+    /// Every Nth ticket resume reports a tight pool (0 = never).
+    resume_defer_every: usize,
 }
 
 impl SoakBackend {
-    fn new(lanes: usize, max_seq: usize, fault_every: usize, defer_every: usize) -> Self {
+    fn new(
+        lanes: usize,
+        max_seq: usize,
+        fault_every: usize,
+        defer_every: usize,
+        ticket_spill: bool,
+        resume_defer_every: usize,
+    ) -> Self {
         Self {
             lanes,
             max_seq,
@@ -52,6 +73,11 @@ impl SoakBackend {
             admit_calls: Cell::new(0),
             fault_every,
             defer_every,
+            ticket_spill,
+            next_ticket: 0,
+            tickets: HashSet::new(),
+            resume_calls: 0,
+            resume_defer_every,
         }
     }
 
@@ -122,6 +148,31 @@ impl DecodeBackend for SoakBackend {
             AdmitVerdict::Admit
         }
     }
+
+    fn spill(&mut self, lane: usize) -> Option<u64> {
+        if !self.ticket_spill {
+            return None;
+        }
+        assert!(self.claimed.remove(&lane), "spilled lane {lane} that was not claimed");
+        self.next_ticket += 1;
+        self.tickets.insert(self.next_ticket);
+        Some(self.next_ticket)
+    }
+
+    fn resume(&mut self, lane: usize, ticket: u64) -> anyhow::Result<bool> {
+        assert!(self.tickets.contains(&ticket), "resume of unknown ticket {ticket}");
+        self.resume_calls += 1;
+        if self.resume_defer_every > 0 && self.resume_calls % self.resume_defer_every == 0 {
+            return Ok(false); // pool reported tight; ticket stays parked
+        }
+        self.tickets.remove(&ticket);
+        assert!(self.claimed.insert(lane), "resume double-claimed lane {lane}");
+        Ok(true)
+    }
+
+    fn drop_spilled(&mut self, ticket: u64) {
+        assert!(self.tickets.remove(&ticket), "dropped unknown ticket {ticket}");
+    }
 }
 
 /// What the reference model expects of one submitted request.
@@ -135,7 +186,12 @@ fn run_soak(seed: u64) {
     let lanes = 1 + rng.below(4);
     let fault_every = [0usize, 7, 11][rng.below(3)];
     let defer_every = [0usize, 5][rng.below(2)];
-    let mut be = SoakBackend::new(lanes, 24, fault_every, defer_every);
+    let ticket_spill = match std::env::var("PIFA_KV_SPILL") {
+        Ok(v) => v != "0" && v != "fallback",
+        Err(_) => rng.below(2) == 1,
+    };
+    let resume_defer_every = [0usize, 3][rng.below(2)];
+    let mut be = SoakBackend::new(lanes, 24, fault_every, defer_every, ticket_spill, resume_defer_every);
     let cfg = SchedulerConfig {
         max_batch: 1 + rng.below(4),
         max_wait: Duration::ZERO,
@@ -163,12 +219,16 @@ fn run_soak(seed: u64) {
                 if rng.below(5) == 0 {
                     req = req.with_deadline(Duration::from_millis(rng.below(3) as u64));
                 }
+                // Priority mix: High arrivals behind a Defer trigger
+                // preemption of Low/Normal sessions into the arena.
+                let mut sampling = SamplingParams {
+                    priority: [Priority::Low, Priority::Normal, Priority::High][rng.below(3)],
+                    ..SamplingParams::greedy()
+                };
                 if rng.below(4) == 0 {
-                    req = req.with_sampling(SamplingParams {
-                        stop_tokens: vec![rng.below(VOCAB)],
-                        ..SamplingParams::greedy()
-                    });
+                    sampling.stop_tokens = vec![rng.below(VOCAB)];
                 }
+                req = req.with_sampling(sampling);
                 let (tx, rx) = mpsc::channel();
                 sched.submit(req, tx, &mut m);
                 streams.insert(next_id, Submitted { rx, max_new });
@@ -202,6 +262,12 @@ fn run_soak(seed: u64) {
         "seed {seed}: lanes leaked after drain: {:?}",
         be.claimed
     );
+    assert!(
+        be.tickets.is_empty(),
+        "seed {seed}: spill tickets leaked after drain: {:?}",
+        be.tickets
+    );
+    assert!(m.resumes <= m.spills, "seed {seed}: more resumes ({}) than spills ({})", m.resumes, m.spills);
 
     // Reference model: every stream has exactly one terminal event.
     let submitted = next_id as usize;
