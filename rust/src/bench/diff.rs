@@ -112,6 +112,18 @@ pub fn gate_for(metric: &str) -> Option<MetricGate> {
             abs_floor: 0.05,
             optional: true,
         }),
+        // Self-speculative decoding (DESIGN.md §11): the fraction of
+        // drafted tokens the verify step accepted. Dropping acceptance
+        // means the draft variant stopped tracking the served model —
+        // the speedup evaporates even though output stays bitwise
+        // identical. Present only in speculative KV-cache cells
+        // (optional); the raw counters stay informational.
+        "spec_acceptance_rate" => Some(MetricGate {
+            direction: HigherIsBetter,
+            rel_tol: 0.25,
+            abs_floor: 0.05,
+            optional: true,
+        }),
         // Kernel speedup ratios (bench-kernels): machine-portable-ish,
         // but still timing quotients — wide band.
         "pifa_vs_lowrank" | "pifa_vs_dense" | "lowrank_vs_dense" | "s24_vs_dense"
@@ -818,6 +830,32 @@ mod tests {
         assert_eq!(verdict_of(&report, "kv_compression_ratio"), Verdict::OptionalAbsent);
         assert_eq!(verdict_of(&report, "kv_ppl_drift"), Verdict::OptionalAbsent);
         assert!(!report.failed());
+    }
+
+    /// The speculative-decoding acceptance gate: a collapse past the
+    /// band fails, small wobble sits under the 0.05 absolute floor, and
+    /// absence (a cell serving plain) stays a configuration note.
+    #[test]
+    fn spec_acceptance_rate_gates_and_stays_optional() {
+        let mut with_spec = BASE_METRICS.to_vec();
+        with_spec.push(("spec_acceptance_rate", 0.60));
+        with_spec.push(("tokens_drafted", 400.0));
+        let base = serve_report(1, &with_spec);
+        let mut collapsed = with_spec.clone();
+        collapsed[BASE_METRICS.len()] = ("spec_acceptance_rate", 0.20);
+        let report = compare_reports(&base, &serve_report(1, &collapsed), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "spec_acceptance_rate"), Verdict::Regression);
+        assert!(report.failed(), "an acceptance collapse must red the gate");
+        let mut wobble = with_spec.clone();
+        wobble[BASE_METRICS.len()] = ("spec_acceptance_rate", 0.56);
+        let report = compare_reports(&base, &serve_report(1, &wobble), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "spec_acceptance_rate"), Verdict::WithinNoise);
+        // A cell that stopped speculating loses the metric: a note.
+        let report = compare_reports(&base, &serve_report(1, BASE_METRICS), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "spec_acceptance_rate"), Verdict::OptionalAbsent);
+        assert!(!report.failed());
+        // The raw counter carries no gate: halving it is not a finding.
+        assert!(report.findings.iter().all(|f| f.metric != "tokens_drafted"));
     }
 
     #[test]

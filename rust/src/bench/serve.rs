@@ -30,12 +30,13 @@ use crate::bench::diff;
 use crate::bench::experiments::wiki_dataset;
 use crate::bench::tables::TablePrinter;
 use crate::compress::registry;
+use crate::data::batch::TokenDataset;
 use crate::coordinator::{
     DecodeBackend, GenRequest, GenerationMode, KvLifeConfig, NativeBackend, Priority,
     SamplingParams, SchedulerConfig, ServeError, Server, StepInput, StepResult, StreamHandle,
 };
 use crate::linalg::Rng;
-use crate::runtime::EvictPolicyKind;
+use crate::runtime::{DraftEngine, EvictPolicyKind, SpecConfig};
 use crate::model::config::ModelConfig;
 use crate::model::transformer::Transformer;
 use anyhow::{ensure, Context, Result};
@@ -91,6 +92,12 @@ pub struct Scenario {
     /// run Low when `spill` is on (so preemption has victims) and
     /// Normal otherwise.
     pub high_frac: f64,
+    /// Serve through the self-speculative path (DESIGN.md §11): a
+    /// further-compressed draft variant proposes tokens, the served
+    /// model verifies. Only KV-cache cells can speculate (the draft
+    /// mirror and rollback both live on the paged pool); no-KV cells
+    /// silently serve plain.
+    pub speculate: bool,
     pub seed: u64,
 }
 
@@ -112,6 +119,7 @@ pub fn catalogue(smoke: bool) -> Vec<Scenario> {
         spill: false,
         compress_kv: false,
         high_frac: 0.0,
+        speculate: false,
         seed: 0,
     };
     // Repeated fleet: the same shared-prefix fleet replayed in bursts
@@ -171,6 +179,20 @@ pub fn catalogue(smoke: bool) -> Vec<Scenario> {
             compress_kv: true,
             high_frac: 0.4,
             seed: 108,
+            ..base.clone()
+        },
+        // Self-speculative decoding (DESIGN.md §11): long-ish budgets so
+        // the draft/verify loop gets many iterations per request, and a
+        // moderate arrival rate so spec and plain sessions coexist on
+        // the lane set. The gated metric is the acceptance rate.
+        Scenario {
+            name: "spec-decode",
+            arrivals: ArrivalProcess::Poisson { rate_per_sec: 40.0 },
+            requests: if smoke { 8 } else { 16 },
+            prompt_lens: (4, 8),
+            max_new: (12, 20),
+            speculate: true,
+            seed: 109,
             ..base.clone()
         },
     ];
@@ -440,20 +462,50 @@ pub fn run_scenario(
     } else {
         None
     };
+    // Self-speculative draft: a further-compressed variant of the served
+    // model (DESIGN.md §11). Built once per cell — compression is
+    // deterministic — and cloned into each repetition's backend thread.
+    // No-KV cells cannot speculate (the draft mirror and rollback both
+    // need the paged pool), so they silently serve plain.
+    let draft = if sc.speculate && matches!(mode, GenerationMode::KvCache) {
+        let data = draft_calibration(served);
+        Some(
+            registry::compress("mpifa", served, &data, 0.55)
+                .context("compressing the speculative draft variant")?
+                .model,
+        )
+    } else {
+        None
+    };
     for rep in 0..reps.max(1) {
         let work = build_workload(sc, served.cfg.vocab, served.cfg.max_seq, rep as u64);
         let model = served.clone();
-        let server = Server::spawn(
-            move || {
-                Ok(Box::new(NativeBackend::new(model, mode, KV_LANES).with_kvlife(life))
-                    as Box<dyn DecodeBackend>)
-            },
-            SchedulerConfig {
-                max_batch: 0, // backend lane cap (paged watermark for KV mode)
-                max_wait: Duration::from_millis(2),
-                queue_cap: 64,
-            },
-        );
+        let scfg = SchedulerConfig {
+            max_batch: 0, // backend lane cap (paged watermark for KV mode)
+            max_wait: Duration::from_millis(2),
+            queue_cap: 64,
+        };
+        let server = match draft.clone() {
+            Some(dm) => Server::spawn_speculative(
+                move || {
+                    let backend = NativeBackend::new(model, mode, KV_LANES).with_kvlife(life);
+                    let engine = DraftEngine::new(
+                        dm,
+                        backend.lanes(),
+                        SpecConfig { draft_k: 4, ..SpecConfig::default() },
+                    );
+                    Ok((Box::new(backend) as Box<dyn DecodeBackend>, engine))
+                },
+                scfg,
+            ),
+            None => Server::spawn(
+                move || {
+                    Ok(Box::new(NativeBackend::new(model, mode, KV_LANES).with_kvlife(life))
+                        as Box<dyn DecodeBackend>)
+                },
+                scfg,
+            ),
+        };
         let outcome = drive(&server, &work)?;
         let metrics = server.shutdown()?;
         let wall_secs = outcome.wall.as_secs_f64().max(1e-9);
@@ -481,6 +533,24 @@ pub fn run_scenario(
         out.push((k, vs[vs.len() / 2]));
     }
     Ok(out)
+}
+
+/// Calibration set for compressing the speculative draft variant: the
+/// wiki corpus when it fits the served model (token ids in-vocab,
+/// windows inside the sequence budget), else a seeded in-vocab corpus —
+/// unit-test micro models have vocab 32, far below the word vocabulary.
+fn draft_calibration(served: &Transformer) -> TokenDataset {
+    let wiki = wiki_dataset();
+    let fits = wiki.seq_len <= served.cfg.max_seq
+        && wiki.tokens.iter().all(|&t| t < served.cfg.vocab);
+    if fits {
+        return wiki;
+    }
+    let seq_len = (served.cfg.max_seq / 2).max(4);
+    let mut rng = Rng::new(0x0D2A_F7ED);
+    let toks: Vec<usize> =
+        (0..seq_len * 64).map(|_| rng.below(served.cfg.vocab.max(1))).collect();
+    TokenDataset::new(toks, seq_len)
 }
 
 /// Log-probability of `token` under a logits row (stable log-softmax).
@@ -715,6 +785,22 @@ pub fn run_cli(smoke: bool, out: &Path, model_name: &str, reps: usize) -> Result
                     c.method
                 );
             }
+            // Every KV-mode spec-decode cell must actually have run the
+            // speculative path — a silently-plain cell would make the
+            // acceptance-rate gate vacuous.
+            if c.scenario == "spec-decode" && c.metric("prefix_hit_rate").is_some() {
+                ensure!(
+                    c.metric("tokens_drafted").unwrap_or(0.0) > 0.0,
+                    "smoke: spec-decode/{} drafted no tokens — speculative path inactive",
+                    c.method
+                );
+                let acc = c.metric("spec_acceptance_rate").unwrap_or(-1.0);
+                ensure!(
+                    (0.0..=1.0).contains(&acc),
+                    "smoke: spec-decode/{} acceptance rate {acc} out of [0, 1]",
+                    c.method
+                );
+            }
         }
         // Close the loop through the reader: the file we just wrote must
         // parse, schema-validate, and self-diff clean.
@@ -756,6 +842,7 @@ mod tests {
             spill: false,
             compress_kv: false,
             high_frac: 0.0,
+            speculate: false,
             seed: 7,
         }
     }
@@ -853,6 +940,12 @@ mod tests {
         assert!(fifo.shared_prefix > 0, "fleet must share a prefix for hit rates to differ");
         let spill = find(&smoke, "spill-compress");
         assert!(spill.spill && spill.compress_kv && spill.high_frac > 0.0);
+        let spec = find(&smoke, "spec-decode");
+        assert!(spec.speculate, "spec-decode must run the speculative path");
+        assert!(
+            smoke.iter().filter(|s| s.speculate).count() == 1,
+            "exactly one speculative scenario keeps the gate's cell set stable"
+        );
         let full = catalogue(false);
         let freq = find(&full, "repeated-fleet-freq");
         assert_eq!(freq.evict, EvictPolicyKind::Freq);
@@ -896,6 +989,30 @@ mod tests {
         let (d2, r2) = kv_ppl_drift(&model, 0.5).unwrap();
         assert_eq!(drift, d2, "drift must be seed-deterministic");
         assert_eq!(ratio, r2, "ratio must be seed-deterministic");
+    }
+
+    /// A speculative cell reports the §11 counters, and the acceptance
+    /// rate is a true ratio of the two raw counts. No-KV cells silently
+    /// serve plain (no spec metrics), so the gate treats them as
+    /// absent-optional rather than regressed.
+    #[test]
+    fn speculative_scenario_reports_acceptance_metrics() {
+        let model = micro_model(24);
+        let sc = Scenario { speculate: true, max_new: (6, 10), ..tiny_scenario() };
+        let m = run_scenario(&model, GenerationMode::KvCache, &sc, 1).unwrap();
+        let get = |k: &str| m.iter().find(|(n, _)| n == k).map(|(_, v)| *v);
+        let drafted = get("tokens_drafted").expect("spec cell must report drafted tokens");
+        let accepted = get("tokens_accepted").expect("spec cell must report accepted tokens");
+        let rate = get("spec_acceptance_rate").expect("spec cell must report acceptance rate");
+        assert!(drafted > 0.0, "speculative path must have drafted");
+        assert!(accepted <= drafted);
+        assert!((rate - accepted / drafted).abs() < 1e-9, "rate must be accepted/drafted");
+        assert_eq!(get("completed"), Some(4.0), "speculation must not drop requests");
+        let plain = run_scenario(&model, GenerationMode::NoKvCache, &sc, 1).unwrap();
+        assert!(
+            !plain.iter().any(|(k, _)| k == "tokens_drafted"),
+            "no-KV cells cannot speculate and must not emit spec metrics"
+        );
     }
 
     #[test]

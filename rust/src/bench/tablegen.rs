@@ -575,7 +575,9 @@ pub fn fig7_rank_sweep() -> Result<()> {
 /// compressed model's pipeline provenance is validated against the
 /// artifact manifest before serving. 2:4 and the `lowrank-s24` hybrid
 /// serve in the forced no-KV decode mode (the sparse kernel cannot run
-/// the cache ops — the paper's "Use KV Cache: No" rows).
+/// the cache ops — the paper's "Use KV Cache: No" rows). The
+/// "Dense + MPIFA spec" row serves through the self-speculative path
+/// (DESIGN.md §11); its acc% column is the draft acceptance rate.
 pub fn tab7_e2e() -> Result<()> {
     use crate::coordinator::{
         DecodeBackend, GenRequest, GenerationMode, NativeBackend, PjrtBackend, SchedulerConfig,
@@ -629,6 +631,7 @@ pub fn tab7_e2e() -> Result<()> {
             "TTFT p50 ms",
             "ITL p50/p95 ms",
             "blk util/hit/idle/evict",
+            "acc%",
             "weights MB",
         ],
     );
@@ -646,6 +649,13 @@ pub fn tab7_e2e() -> Result<()> {
         } else {
             "-".into()
         };
+        // Speculative acceptance rate (DESIGN.md §11); "-" for rows
+        // that served plain (nothing drafted).
+        let acc_col = if m.tokens_drafted > 0 {
+            format!("{:.0}%", m.spec_acceptance_rate() * 100.0)
+        } else {
+            "-".into()
+        };
         t.row(&[
             cols[0].into(),
             cols[1].into(),
@@ -654,6 +664,7 @@ pub fn tab7_e2e() -> Result<()> {
             format!("{:.2}", m.ttft_percentile_ms(0.5)),
             format!("{:.2}/{:.2}", m.itl_percentile_ms(0.5), m.itl_percentile_ms(0.95)),
             kv_col,
+            acc_col,
             format!("{mem:.2}"),
         ]);
     }
@@ -677,6 +688,36 @@ pub fn tab7_e2e() -> Result<()> {
             [variant, "native", kv],
             &metrics,
             served.memory_bytes_fp16() as f64 / 1e6,
+        );
+    }
+
+    // Self-speculative row (DESIGN.md §11): dense target verified
+    // against an MPIFA draft — output is bitwise the plain dense row's;
+    // the acc% column shows how often the compressed variant's guesses
+    // survived verification.
+    {
+        use crate::runtime::{DraftEngine, SpecConfig};
+        let m2: Transformer = model.clone();
+        let draft = mpifa.clone();
+        let server = Server::spawn_speculative(
+            move || {
+                let backend = NativeBackend::new(m2, GenerationMode::KvCache, 4);
+                let engine = DraftEngine::new(draft, backend.lanes(), SpecConfig::default());
+                Ok((Box::new(backend) as Box<dyn DecodeBackend>, engine))
+            },
+            scfg.clone(),
+        );
+        let metrics = drive(server, &prompts, max_new)?;
+        eprintln!(
+            "[tab7] Dense + spec native: {:.1} tok/s, {:.0}% acceptance",
+            metrics.throughput(),
+            metrics.spec_acceptance_rate() * 100.0
+        );
+        push_row(
+            &mut t,
+            ["Dense + MPIFA spec", "native", "Yes"],
+            &metrics,
+            model.memory_bytes_fp16() as f64 / 1e6,
         );
     }
 
@@ -724,6 +765,7 @@ pub fn tab7_e2e() -> Result<()> {
                 "-".into(),
                 "-".into(),
                 "-".into(),
+                "-".into(),
                 format!("{:.2}", sparse.memory_bytes_fp16() as f64 / 1e6),
             ]);
         }
@@ -732,7 +774,7 @@ pub fn tab7_e2e() -> Result<()> {
                 "[tab7] SKIP PJRT rows: {e:#} — native-backend rows above are still measured; \
                  run `make artifacts` with the real xla bindings for the PJRT rows"
             );
-            t.row_strs(&["(PJRT rows)", "PJRT", "-", "unavailable", "-", "-", "-", "-"]);
+            t.row_strs(&["(PJRT rows)", "PJRT", "-", "unavailable", "-", "-", "-", "-", "-"]);
         }
     }
     emit("tab7_e2e", &t);

@@ -157,6 +157,30 @@ pub trait DecodeBackend {
     /// (every in-flight session fails); a per-lane [`StepResult::Fault`]
     /// fails only that lane's session.
     fn step(&mut self, inputs: &[StepInput<'_>]) -> Result<Vec<StepResult>>;
+    /// Whether this backend implements the speculative verify/rollback
+    /// pair (DESIGN.md §11). The scheduler only marks sessions
+    /// speculative when this holds.
+    fn supports_speculation(&self) -> bool {
+        false
+    }
+    /// Speculative verify: feed `tokens` — the session's last committed
+    /// token followed by its draft tokens — through `lane` in order,
+    /// returning one [`StepResult`] per position fed. Stops at the first
+    /// per-lane KV fault (appending that `Fault` last), so a caller can
+    /// still accept the prefix that did score; positions past the fault
+    /// are never computed. Must be arithmetically identical to feeding
+    /// the same tokens through [`DecodeBackend::step`] one at a time —
+    /// the bitwise contract `rust/tests/spec_differential.rs` pins.
+    /// `Err` means the engine state is unknown, as with `step`.
+    fn verify(&mut self, _lane: usize, _tokens: &[usize]) -> Result<Vec<StepResult>> {
+        bail!("backend does not support speculative verify")
+    }
+    /// Roll `lane`'s KV state back to `len` cached positions, discarding
+    /// rejected draft rows. A `len` at or past the current length is a
+    /// no-op.
+    fn rollback(&mut self, _lane: usize, _len: usize) -> Result<()> {
+        bail!("backend does not support KV rollback")
+    }
     /// Free a lane's state so a queued session can claim it.
     fn release(&mut self, lane: usize);
     /// Block-aware admission gate: can a session with this prompt length
@@ -535,6 +559,68 @@ impl DecodeBackend for NativeBackend {
         }
     }
 
+    fn supports_speculation(&self) -> bool {
+        // NoKvCache has nothing to roll back (each step re-prefills).
+        self.mode == GenerationMode::KvCache
+    }
+
+    fn verify(&mut self, lane: usize, tokens: &[usize]) -> Result<Vec<StepResult>> {
+        if self.mode != GenerationMode::KvCache {
+            bail!("speculative verify requires the KV cache");
+        }
+        if lane >= self.lane_count() || !self.lane_claimed(lane) {
+            bail!("verify on unclaimed lane {lane}");
+        }
+        if tokens.is_empty() {
+            return Ok(Vec::new());
+        }
+        let max_seq = self.model.cfg.max_seq;
+        let model = &self.model;
+        // Both layouts run the span through the same sequential
+        // `decode_span_kv` the plain per-token paths use, so the logits
+        // are bitwise-identical to k+1 ordinary steps.
+        let (rows, fault) = match &mut self.kv {
+            NativeKv::Contiguous(caches) => {
+                let cache = caches[lane].as_mut().expect("claimed lane has a cache");
+                model.decode_span_kv(tokens, cache)
+            }
+            NativeKv::Paged { pool: blkpool, seqs, .. } => {
+                let seq = seqs[lane].as_mut().expect("claimed lane has a table");
+                let mut store = PagedSeq { pool: &mut *blkpool, seq: &mut *seq, cap: max_seq };
+                model.decode_span_kv(tokens, &mut store)
+            }
+        };
+        let mut out: Vec<StepResult> = rows
+            .into_iter()
+            .map(|l| StepResult::Logits(l.row(0).to_vec()))
+            .collect();
+        if let Some(e) = fault {
+            out.push(StepResult::Fault { pos: e.pos, msg: e.detail });
+        }
+        Ok(out)
+    }
+
+    fn rollback(&mut self, lane: usize, len: usize) -> Result<()> {
+        match &mut self.kv {
+            NativeKv::Contiguous(caches) => {
+                let cache = caches
+                    .get_mut(lane)
+                    .and_then(|c| c.as_mut())
+                    .with_context(|| format!("rollback on unclaimed lane {lane}"))?;
+                cache.len = cache.len.min(len);
+                Ok(())
+            }
+            NativeKv::Paged { pool: blkpool, seqs, .. } => {
+                let seq = seqs
+                    .get_mut(lane)
+                    .and_then(|s| s.as_mut())
+                    .with_context(|| format!("rollback on unclaimed lane {lane}"))?;
+                blkpool.truncate(seq, len);
+                Ok(())
+            }
+        }
+    }
+
     fn release(&mut self, lane: usize) {
         match &mut self.kv {
             NativeKv::Contiguous(caches) => {
@@ -896,6 +982,105 @@ mod tests {
         let want = model.generate(&prompt, 6);
         let mut be = NativeBackend::contiguous(model, GenerationMode::KvCache, 2);
         assert_eq!(backend_greedy(&mut be, 1, &prompt, 6), want);
+    }
+
+    /// Drive one lane through speculative verify spans (alternating
+    /// deliberately-wrong and perfect drafts) with rollback after every
+    /// round; the emitted greedy stream must be bitwise-identical to
+    /// `Transformer::generate`, in both KV layouts.
+    #[test]
+    fn verify_rollback_reproduce_plain_greedy_bitwise() {
+        let model = micro_model(419, 64);
+        let vocab = model.cfg.vocab;
+        let prompt = vec![3usize, 9, 1, 4];
+        let want = model.generate(&prompt, 8);
+        assert_eq!(want.len(), 8);
+        for contiguous in [false, true] {
+            let mut be = if contiguous {
+                NativeBackend::contiguous(model.clone(), GenerationMode::KvCache, 2)
+            } else {
+                NativeBackend::new(model.clone(), GenerationMode::KvCache, 2)
+            };
+            assert!(be.supports_speculation());
+            let logits = be.prefill(0, &prompt).unwrap();
+            let mut seq = prompt.clone();
+            seq.push(argmax(&logits));
+            let k = 2usize;
+            let mut round = 0usize;
+            while seq.len() - prompt.len() < want.len() {
+                let g = seq.len() - prompt.len();
+                let perfect = round % 2 == 1;
+                let mut tokens = vec![*seq.last().unwrap()];
+                for j in 0..k {
+                    let idx = (g + j).min(want.len() - 1);
+                    // Perfect drafts are the true greedy continuations;
+                    // garbage drafts are off-by-one, guaranteed rejected.
+                    tokens.push(if perfect { want[idx] } else { (want[idx] + 1) % vocab });
+                }
+                let rows = be.verify(0, &tokens).unwrap();
+                assert_eq!(rows.len(), k + 1, "no faults expected in this pool");
+                let picks: Vec<usize> =
+                    (0..rows.len()).map(|i| argmax(logits_of(&rows, i))).collect();
+                let mut a = 0;
+                while a < picks.len() - 1 && tokens[a + 1] == picks[a] {
+                    a += 1;
+                }
+                if perfect && g + k <= want.len() {
+                    assert_eq!(a, k, "perfect drafts must all be accepted");
+                } else if !perfect {
+                    assert_eq!(a, 0, "off-by-one drafts must all be rejected");
+                }
+                for &p in picks.iter().take(a + 1) {
+                    if seq.len() - prompt.len() == want.len() {
+                        break;
+                    }
+                    seq.push(p);
+                }
+                be.rollback(0, seq.len() - 1).unwrap();
+                round += 1;
+            }
+            assert_eq!(
+                &seq[prompt.len()..],
+                &want[..],
+                "speculative stream diverged (contiguous={contiguous})"
+            );
+            be.release(0);
+        }
+    }
+
+    /// Pool exhaustion mid-verify returns the rows that did score plus a
+    /// trailing fault; rollback then restores the lane so plain decode
+    /// continues — the draft/verify path can never strand blocks.
+    #[test]
+    fn verify_exhaustion_yields_partial_rows_and_rolls_back() {
+        let model = micro_model(420, 64);
+        let mut be = NativeBackend::paged(
+            model,
+            GenerationMode::KvCache,
+            PagedKvParams { block_tokens: 4, num_blocks: 2, watermark_per_active: 1 },
+        );
+        let prompt = vec![1usize, 2, 3, 4];
+        let logits = be.prefill(0, &prompt).unwrap();
+        let mut seq = prompt.clone();
+        seq.push(argmax(&logits));
+        // One spare block = 4 appendable positions; a 5-token span must
+        // score 4 and fault on the fifth.
+        let rows = be.verify(0, &[7, 8, 9, 10, 11]).unwrap();
+        assert_eq!(rows.len(), 5);
+        for row in rows.iter().take(4) {
+            assert!(matches!(row, StepResult::Logits(_)));
+        }
+        match &rows[4] {
+            StepResult::Fault { pos, .. } => assert_eq!(*pos, 8),
+            other => panic!("expected a trailing fault, got {other:?}"),
+        }
+        be.rollback(0, prompt.len()).unwrap();
+        assert_eq!(be.kv_stats().unwrap().used_blocks, 1, "rejected block returned");
+        // The lane still decodes normally after the rollback.
+        let last = *seq.last().unwrap();
+        let rows = be.step(&[StepInput { lane: 0, token: last, seq: &seq }]).unwrap();
+        assert!(matches!(rows[0], StepResult::Logits(_)));
+        be.release(0);
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //!   coalescing, deadline sweeps, and one-decode-step-per-iteration
 //!   continuous batching.
 //! * [`server`] — worker-thread server: `submit` returns a
-//!   [`StreamHandle`] of token events with mid-generation `cancel()`.
+//!   [`StreamHandle`] of token events with mid-generation `cancel()`;
+//!   `spawn_speculative` installs a compressed-variant
+//!   [`crate::runtime::DraftEngine`] for self-speculative decoding
+//!   (DESIGN.md §11).
 //! * [`clock`] — the injectable time source ([`SystemClock`] /
 //!   [`ManualClock`]) behind every scheduling-policy timestamp, so
 //!   tests and benchmarks can drive timing deterministically.

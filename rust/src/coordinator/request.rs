@@ -288,6 +288,13 @@ pub struct ServeMetrics {
     pub kv_spill_raw_bytes: u64,
     /// Spilled K/V bytes actually stored (== raw with compression off).
     pub kv_spill_stored_bytes: u64,
+    /// Draft tokens proposed by the speculative decoder (DESIGN.md §11).
+    pub tokens_drafted: usize,
+    /// Draft tokens accepted by the dense verify.
+    pub tokens_accepted: usize,
+    /// Sessions that fell back to plain decode (draft-pool exhaustion or
+    /// acceptance collapse below the floor).
+    pub spec_fallbacks: usize,
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
     itl_ms: Vec<f64>,
@@ -345,6 +352,25 @@ impl ServeMetrics {
         self.queue_depth.push(queued as f64);
         if lanes > 0 {
             self.lane_occupancy.push(active as f64 / lanes as f64);
+        }
+    }
+
+    /// One speculative iteration on a lane: `exec` engine time for the
+    /// draft + verify pair, `drafted` tokens proposed, `accepted` of
+    /// them kept. Counts as a batch so throughput covers spec work.
+    pub fn record_spec_iteration(&mut self, exec: Duration, drafted: usize, accepted: usize) {
+        self.batches += 1;
+        self.total_exec_secs += exec.as_secs_f64();
+        self.tokens_drafted += drafted;
+        self.tokens_accepted += accepted;
+    }
+
+    /// Fraction of drafted tokens the dense verify kept.
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.tokens_drafted == 0 {
+            0.0
+        } else {
+            self.tokens_accepted as f64 / self.tokens_drafted as f64
         }
     }
 
@@ -495,6 +521,15 @@ impl ServeMetrics {
                 "kv_compression_ratio",
                 self.kv_spill_raw_bytes as f64 / self.kv_spill_stored_bytes as f64,
             ));
+        }
+        // Speculative-decode metrics appear only when drafting actually
+        // ran, so their absence in a diff means "plain serving", not a
+        // regression.
+        if self.tokens_drafted > 0 {
+            out.push(("tokens_drafted", self.tokens_drafted as f64));
+            out.push(("tokens_accepted", self.tokens_accepted as f64));
+            out.push(("spec_acceptance_rate", self.spec_acceptance_rate()));
+            out.push(("spec_fallbacks", self.spec_fallbacks as f64));
         }
         out
     }
@@ -662,6 +697,23 @@ mod tests {
         let names: Vec<&str> = m.snapshot().iter().map(|(n, _)| *n).collect();
         assert!(names.contains(&"prefix_hit_rate"));
         assert!(names.contains(&"block_util_p95"));
+    }
+
+    #[test]
+    fn spec_metrics_are_presence_gated() {
+        let mut m = ServeMetrics::default();
+        let names: Vec<&str> = m.snapshot().iter().map(|(n, _)| *n).collect();
+        assert!(!names.contains(&"spec_acceptance_rate"), "spec metrics must be gated");
+        m.record_spec_iteration(Duration::from_millis(2), 4, 3);
+        m.record_spec_iteration(Duration::from_millis(2), 4, 1);
+        assert!((m.spec_acceptance_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(m.batches, 2, "spec iterations count as batches");
+        let names: Vec<&str> = m.snapshot().iter().map(|(n, _)| *n).collect();
+        for required in
+            ["tokens_drafted", "tokens_accepted", "spec_acceptance_rate", "spec_fallbacks"]
+        {
+            assert!(names.contains(&required), "snapshot lost metric {required}");
+        }
     }
 
     #[test]

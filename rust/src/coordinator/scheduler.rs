@@ -19,6 +19,7 @@ use super::request::{
     Event, FinishReason, GenRequest, GenStats, SamplingParams, ServeError, ServeMetrics,
 };
 use crate::linalg::Rng;
+use crate::runtime::specdec::DraftEngine;
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -50,6 +51,18 @@ struct Queued {
     events: mpsc::Sender<Event>,
 }
 
+/// Per-session speculative-decoding state (DESIGN.md §11). `Some` marks
+/// a session eligible for draft/verify iterations; cleared permanently
+/// when the draft pool runs dry for this session or the acceptance rate
+/// collapses below the configured floor.
+#[derive(Default)]
+struct SpecState {
+    /// Draft tokens proposed for this session so far.
+    drafted: usize,
+    /// Draft tokens the target's greedy picks accepted.
+    accepted: usize,
+}
+
 /// One in-flight generation bound to a backend lane.
 pub struct GenSession {
     pub id: u64,
@@ -65,6 +78,9 @@ pub struct GenSession {
     last_token_at: Instant,
     rng: Rng,
     events: mpsc::Sender<Event>,
+    /// Speculative-decoding state; `None` for plain sessions (and for
+    /// speculative ones that have fallen back).
+    spec: Option<SpecState>,
 }
 
 impl GenSession {
@@ -156,6 +172,9 @@ pub struct Scheduler {
     lanes: Vec<Option<GenSession>>,
     /// Sessions preempted off their lanes, waiting to resume.
     spilled: Vec<SpilledSession>,
+    /// Compressed-variant draft engine (DESIGN.md §11); `None` serves
+    /// every session with plain one-token decode steps.
+    draft: Option<DraftEngine>,
     clock: Arc<dyn Clock>,
 }
 
@@ -178,7 +197,28 @@ impl Scheduler {
             queue: VecDeque::new(),
             lanes: (0..n).map(|_| None).collect(),
             spilled: Vec::new(),
+            draft: None,
             clock,
+        }
+    }
+
+    /// Install a compressed-variant draft engine: greedy sessions
+    /// admitted onto a KV-capable backend from now on run speculative
+    /// draft/verify iterations instead of plain one-token steps.
+    pub fn set_draft_engine(&mut self, draft: DraftEngine) {
+        self.draft = Some(draft);
+    }
+
+    pub fn draft_engine(&self) -> Option<&DraftEngine> {
+        self.draft.as_ref()
+    }
+
+    /// Drop a lane's draft mirror, if any (no-op without a draft
+    /// engine). Called at every site that releases a target lane so the
+    /// draft pool never holds blocks for a dead session.
+    fn release_draft(&mut self, lane: usize) {
+        if let Some(d) = self.draft.as_mut() {
+            d.release(lane);
         }
     }
 
@@ -243,6 +283,7 @@ impl Scheduler {
             if self.lanes[lane].as_ref().is_some_and(|s| s.id == id) {
                 let sess = self.lanes[lane].take().expect("checked above");
                 backend.release(lane);
+                self.release_draft(lane);
                 metrics.cancelled += 1;
                 let _ = sess.events.send(Event::Error(ServeError::Cancelled));
                 return;
@@ -288,6 +329,7 @@ impl Scheduler {
             if expired {
                 let sess = self.lanes[lane].take().expect("checked above");
                 backend.release(lane);
+                self.release_draft(lane);
                 metrics.timeouts += 1;
                 let _ = sess.events.send(Event::Error(ServeError::Timeout));
             }
@@ -436,6 +478,9 @@ impl Scheduler {
             // re-prefill the sequence instead of re-importing it.
             backend.release(lane);
         }
+        // The draft mirror is never spilled — a resumed session re-drafts
+        // from the target's committed prefix (self-healing owner check).
+        self.release_draft(lane);
         metrics.spills += 1;
         self.spilled.push(SpilledSession { sess, ticket });
         true
@@ -567,6 +612,15 @@ impl Scheduler {
                     Rng::new(req.sampling.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
                 let first = req.sampling.pick(&logits, &mut rng);
                 let prompt_len = req.prompt.len();
+                // Speculative eligibility: a draft engine is installed,
+                // the backend can verify/rollback, and sampling is
+                // greedy — acceptance is defined against argmax picks,
+                // and greedy `pick` never consumes the rng, so scoring
+                // extra verify rows cannot perturb the token stream.
+                let spec = (self.draft.is_some()
+                    && backend.supports_speculation()
+                    && req.sampling.temperature <= 0.0)
+                    .then(SpecState::default);
                 let mut sess = GenSession {
                     id: req.id,
                     lane,
@@ -580,6 +634,7 @@ impl Scheduler {
                     last_token_at: t0,
                     rng,
                     events,
+                    spec,
                 };
                 let now = self.clock.now();
                 if !sess.emit(first, now, metrics) {
@@ -603,17 +658,61 @@ impl Scheduler {
         }
     }
 
-    /// One shared decode iteration: advance every active lane by one
-    /// token. A backend error fails *all* in-flight sessions with
+    /// One shared decode iteration: advance every active lane. Plain
+    /// lanes batch through a single `backend.step`; speculative lanes
+    /// each run one draft/verify/rollback round
+    /// ([`Self::spec_step_lane`]) and may land several tokens. A backend
+    /// `Err` fails *all* in-flight sessions with
     /// [`ServeError::EngineFailure`] (engine state is unknown) — clients
     /// are told, never silently dropped.
     pub fn step(&mut self, backend: &mut dyn DecodeBackend, metrics: &mut ServeMetrics) {
-        let active: Vec<usize> =
-            (0..self.lanes.len()).filter(|&l| self.lanes[l].is_some()).collect();
-        if active.is_empty() {
-            return;
+        let max_seq = backend.max_seq();
+        let mut plain: Vec<usize> = Vec::new();
+        let mut spec: Vec<usize> = Vec::new();
+        for l in 0..self.lanes.len() {
+            match self.lanes[l].as_ref() {
+                None => {}
+                Some(s) if self.spec_k(s, max_seq) > 0 => spec.push(l),
+                Some(_) => plain.push(l),
+            }
         }
-        let inputs: Vec<StepInput<'_>> = active
+        if !plain.is_empty() && !self.plain_wave(&plain, &spec, backend, metrics) {
+            return; // engine-wide failure: every session already failed out
+        }
+        for &lane in &spec {
+            self.spec_step_lane(lane, backend, metrics);
+        }
+    }
+
+    /// How many tokens a session may draft this iteration: the
+    /// configured `draft_k`, bounded so at least one budgeted token
+    /// remains for the bonus pick and the k+1 verify rows stay inside
+    /// the backend's sequence capacity. Zero (or a plain session)
+    /// routes the lane through the batched plain wave instead.
+    fn spec_k(&self, sess: &GenSession, max_seq: usize) -> usize {
+        let Some(d) = self.draft.as_ref() else { return 0 };
+        if sess.spec.is_none() {
+            return 0;
+        }
+        let remaining = sess.max_new.saturating_sub(sess.generated_count());
+        d.config()
+            .draft_k
+            .min(remaining.saturating_sub(1))
+            .min(max_seq.saturating_sub(sess.seq.len()))
+    }
+
+    /// The classic one-token-per-lane decode iteration over `plain`
+    /// lanes. Returns `false` after an engine-wide failure (every
+    /// in-flight session — the speculative `others` included — has
+    /// already been failed and released).
+    fn plain_wave(
+        &mut self,
+        plain: &[usize],
+        others: &[usize],
+        backend: &mut dyn DecodeBackend,
+        metrics: &mut ServeMetrics,
+    ) -> bool {
+        let inputs: Vec<StepInput<'_>> = plain
             .iter()
             .map(|&l| {
                 let s = self.lanes[l].as_ref().expect("active lane");
@@ -624,29 +723,30 @@ impl Scheduler {
         let result = backend.step(&inputs);
         drop(inputs);
         let elapsed = self.clock.now().duration_since(t0);
+        let everyone: Vec<usize> = plain.iter().chain(others).copied().collect();
         let rows = match result {
-            Ok(rows) if rows.len() == active.len() => rows,
+            Ok(rows) if rows.len() == plain.len() => rows,
             Ok(rows) => {
                 self.fail_active(
-                    &active,
-                    format!("backend returned {} rows for {} lanes", rows.len(), active.len()),
+                    &everyone,
+                    format!("backend returned {} rows for {} lanes", rows.len(), plain.len()),
                     backend,
                     metrics,
                 );
-                return;
+                return false;
             }
             Err(e) => {
-                self.fail_active(&active, format!("decode step failed: {e:#}"), backend, metrics);
-                return;
+                self.fail_active(&everyone, format!("decode step failed: {e:#}"), backend, metrics);
+                return false;
             }
         };
         // Only successful iterations count as shared decode batches (a
         // failed step produced no tokens; `errors` records it instead).
-        metrics.record_iteration(elapsed, active.len(), self.lanes.len(), self.queue.len());
+        metrics.record_iteration(elapsed, plain.len(), self.lanes.len(), self.queue.len());
         if let Some(stats) = backend.kv_stats() {
             metrics.record_kv_sample(stats.utilization());
         }
-        for (res, &lane) in rows.into_iter().zip(active.iter()) {
+        for (res, &lane) in rows.into_iter().zip(plain.iter()) {
             let row = match res {
                 StepResult::Logits(row) => row,
                 StepResult::Fault { pos, msg } => {
@@ -655,6 +755,7 @@ impl Scheduler {
                     // valid and proceed below.
                     let sess = self.lanes[lane].take().expect("active lane");
                     backend.release(lane);
+                    self.release_draft(lane);
                     metrics.errors += 1;
                     let _ =
                         sess.events.send(Event::Error(ServeError::lane_fault(lane, pos, msg)));
@@ -668,6 +769,7 @@ impl Scheduler {
                 // Client hung up mid-stream: implicit cancel frees the lane.
                 self.lanes[lane] = None;
                 backend.release(lane);
+                self.release_draft(lane);
                 metrics.cancelled += 1;
                 continue;
             }
@@ -677,8 +779,185 @@ impl Scheduler {
                 .finish_reason(backend.max_seq());
             if let Some(reason) = reason {
                 let sess = self.lanes[lane].take().expect("active lane");
+                self.release_draft(lane);
                 finish_session(sess, reason, now, backend, metrics);
             }
+        }
+        true
+    }
+
+    /// One speculative round for `lane` (DESIGN.md §11): draft `k`
+    /// greedy tokens on the compressed variant, score all k+1 positions
+    /// through the target in one sequential verify span, emit the
+    /// longest draft prefix matching the target's own picks plus the
+    /// target's bonus token, then roll both KV pools back to the
+    /// committed sequence. A draft failure falls this session back to
+    /// plain decode (the target lane is untouched); a verify `Err` is an
+    /// engine-wide failure exactly like a plain `step` `Err`.
+    fn spec_step_lane(
+        &mut self,
+        lane: usize,
+        backend: &mut dyn DecodeBackend,
+        metrics: &mut ServeMetrics,
+    ) {
+        // An engine-wide failure earlier in this iteration may have
+        // taken the lane down before its speculative turn came up.
+        let Some(sess) = self.lanes[lane].as_ref() else { return };
+        let k = self.spec_k(sess, backend.max_seq());
+        let draft = self.draft.as_mut().expect("spec lane implies a draft engine");
+        let sess = self.lanes[lane].as_ref().expect("checked above");
+        let drafts = match draft.draft(lane, sess.id, &sess.seq, k) {
+            Ok(d) => d,
+            Err(_) => {
+                // Draft pool exhausted: permanent fallback to plain
+                // decode (the failed mirror is already released). The
+                // target lane is untouched and rejoins the plain wave
+                // from the next iteration on.
+                self.lanes[lane].as_mut().expect("checked above").spec = None;
+                metrics.spec_fallbacks += 1;
+                return;
+            }
+        };
+        // Verify span: the last committed token plus every draft — the
+        // target scores k+1 positions with plain-decode arithmetic.
+        let mut vtokens = Vec::with_capacity(drafts.len() + 1);
+        vtokens.push(*sess.seq.last().expect("non-empty"));
+        vtokens.extend_from_slice(&drafts);
+        let t0 = self.clock.now();
+        let result = backend.verify(lane, &vtokens);
+        let elapsed = self.clock.now().duration_since(t0);
+        let results = match result {
+            Ok(r) => r,
+            Err(e) => {
+                let everyone: Vec<usize> =
+                    (0..self.lanes.len()).filter(|&l| self.lanes[l].is_some()).collect();
+                self.fail_active(
+                    &everyone,
+                    format!("speculative verify failed: {e:#}"),
+                    backend,
+                    metrics,
+                );
+                return;
+            }
+        };
+        // Logit rows up to an optional trailing per-lane fault (the
+        // span stops at its first unfundable position; rows before it
+        // are valid and still worth a partial accept).
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(results.len());
+        let mut fault: Option<(usize, String)> = None;
+        for r in results {
+            match r {
+                StepResult::Logits(row) => rows.push(row),
+                StepResult::Fault { pos, msg } => {
+                    fault = Some((pos, msg));
+                    break;
+                }
+            }
+        }
+        if rows.is_empty() {
+            // Even the committed token could not be scored (the target
+            // pool is exhausted): the same per-lane fault a plain step
+            // would have hit.
+            let (pos, msg) =
+                fault.unwrap_or_else(|| (sess.seq.len(), "verify returned no rows".into()));
+            let sess = self.lanes[lane].take().expect("checked above");
+            backend.release(lane);
+            self.release_draft(lane);
+            metrics.errors += 1;
+            let _ = sess.events.send(Event::Error(ServeError::lane_fault(lane, pos, msg)));
+            return;
+        }
+        let now = self.clock.now();
+        let sess = self.lanes[lane].as_mut().expect("checked above");
+        // Greedy picks for every scored position. Spec eligibility
+        // requires greedy sampling, where `pick` never consumes the rng
+        // — rows beyond the accepted prefix cannot perturb any later
+        // token.
+        let picks: Vec<usize> =
+            rows.iter().map(|r| sess.sampling.pick(r, &mut sess.rng)).collect();
+        // Longest draft prefix matching the target's own picks;
+        // `picks[a]` is the bonus token the target appends either way.
+        let mut a = 0;
+        while a + 1 < picks.len() && a < drafts.len() && drafts[a] == picks[a] {
+            a += 1;
+        }
+        metrics.record_spec_iteration(elapsed, drafts.len(), a);
+        if let Some(stats) = backend.kv_stats() {
+            metrics.record_kv_sample(stats.utilization());
+        }
+        let mut dropped = false;
+        let mut finish: Option<FinishReason> = None;
+        for &tok in &picks[..=a] {
+            if !sess.emit(tok, now, metrics) {
+                dropped = true;
+                break;
+            }
+            if let Some(r) = sess.finish_reason(backend.max_seq()) {
+                finish = Some(r);
+                break;
+            }
+        }
+        if dropped {
+            // Client hung up mid-stream: implicit cancel frees the lane.
+            self.lanes[lane] = None;
+            backend.release(lane);
+            self.release_draft(lane);
+            metrics.cancelled += 1;
+            return;
+        }
+        if let Some(reason) = finish {
+            let sess = self.lanes[lane].take().expect("checked above");
+            self.release_draft(lane);
+            finish_session(sess, reason, now, backend, metrics);
+            return;
+        }
+        // Roll both pools back to the committed sequence: in steady
+        // state the target KV holds `seq.len() - 1` positions (the
+        // newest token is fed next iteration, not yet cached) and the
+        // draft mirror at most that.
+        let new_kv = self.lanes[lane].as_ref().expect("checked above").seq.len() - 1;
+        if let Err(e) = backend.rollback(lane, new_kv) {
+            // This lane's KV state is unknown: fail exactly this session.
+            let sess = self.lanes[lane].take().expect("checked above");
+            backend.release(lane);
+            self.release_draft(lane);
+            metrics.errors += 1;
+            let _ = sess.events.send(Event::Error(ServeError::engine(format!(
+                "speculative rollback failed: {e:#}"
+            ))));
+            return;
+        }
+        if let Some(d) = self.draft.as_mut() {
+            d.truncate(lane, new_kv);
+        }
+        // Account acceptance. A collapsed rate — or a verify fault,
+        // meaning the pool has no speculative headroom — falls the
+        // session back to plain decode for the rest of its life.
+        let (accept_floor, floor_window) = {
+            let c = self.draft.as_ref().expect("draft engine").config();
+            (c.accept_floor, c.floor_window)
+        };
+        let fell_back = {
+            let sess = self.lanes[lane].as_mut().expect("checked above");
+            match sess.spec.as_mut() {
+                Some(spec) => {
+                    spec.drafted += drafts.len();
+                    spec.accepted += a;
+                    let collapsed = spec.drafted >= floor_window
+                        && (spec.accepted as f64) < accept_floor * spec.drafted as f64;
+                    if collapsed || fault.is_some() {
+                        sess.spec = None;
+                        true
+                    } else {
+                        false
+                    }
+                }
+                None => false,
+            }
+        };
+        if fell_back {
+            metrics.spec_fallbacks += 1;
+            self.release_draft(lane);
         }
     }
 
@@ -692,6 +971,7 @@ impl Scheduler {
         for &lane in active {
             if let Some(sess) = self.lanes[lane].take() {
                 backend.release(lane);
+                self.release_draft(lane);
                 metrics.errors += 1;
                 let _ = sess.events.send(Event::Error(ServeError::engine(msg.clone())));
             }
@@ -1330,5 +1610,141 @@ mod tests {
         sched.step(&mut be, &mut m);
         assert!(done_of(&drain(&rh)).is_some());
         assert!(sched.is_idle());
+    }
+
+    mod speculative {
+        use super::*;
+        use crate::coordinator::engine::{GenerationMode, NativeBackend, PagedKvParams};
+        use crate::model::config::ModelConfig;
+        use crate::model::transformer::Transformer;
+        use crate::runtime::kvpool::KvPoolConfig;
+        use crate::runtime::specdec::{DraftEngine, SpecConfig};
+
+        fn micro_model(seed: u64) -> Transformer {
+            let cfg = ModelConfig {
+                vocab: 32,
+                dim: 16,
+                n_layers: 2,
+                n_heads: 2,
+                ffn_hidden: 24,
+                max_seq: 64,
+                ..ModelConfig::tiny_s()
+            };
+            Transformer::new_random(&cfg, &mut crate::linalg::Rng::new(seed))
+        }
+
+        /// End-to-end speculative rounds through the scheduler on a real
+        /// paged backend. The draft is a *different* random model, so
+        /// acceptance is poor and most rounds are rollback-heavy — the
+        /// emitted stream must still be bitwise-identical to plain
+        /// greedy decode, because acceptance is judged only by target
+        /// logits.
+        #[test]
+        fn speculative_session_matches_plain_greedy_bitwise() {
+            let model = micro_model(501);
+            let draft_model = micro_model(502);
+            let prompt = vec![3usize, 9, 1, 4];
+            let max_new = 12;
+            let want = model.generate(&prompt, max_new);
+            let mut be = NativeBackend::paged(
+                model,
+                GenerationMode::KvCache,
+                PagedKvParams { block_tokens: 4, num_blocks: 64, watermark_per_active: 1 },
+            );
+            let mut sched = Scheduler::new(cfg(2, Duration::ZERO, 16), be.lanes());
+            sched.set_draft_engine(DraftEngine::new(
+                draft_model,
+                2,
+                SpecConfig { draft_k: 3, accept_floor: 0.0, floor_window: 8 },
+            ));
+            let mut m = ServeMetrics::default();
+            let (tx, rx) = mpsc::channel();
+            sched.submit(GenRequest::new(1, prompt, max_new), tx, &mut m);
+            sched.admit(Instant::now(), &mut be, &mut m);
+            for _ in 0..64 {
+                sched.step(&mut be, &mut m);
+            }
+            let ev = drain(&rx);
+            let stats = done_of(&ev).expect("Done");
+            assert_eq!(stats.tokens, want, "speculative output must equal plain greedy");
+            assert_eq!(tokens_of(&ev), want, "streamed tokens match Done stats");
+            assert!(m.tokens_drafted > 0, "the session actually speculated");
+            assert!(m.tokens_accepted <= m.tokens_drafted);
+            assert_eq!(m.completed, 1);
+            assert!(sched.is_idle());
+        }
+
+        /// Self-speculation (draft == target) accepts every draft: the
+        /// whole budget lands in few iterations and acceptance is 100%.
+        #[test]
+        fn identical_draft_accepts_everything() {
+            let model = micro_model(503);
+            let prompt = vec![7usize, 2, 5];
+            let max_new = 9;
+            let want = model.generate(&prompt, max_new);
+            let mut be = NativeBackend::paged(
+                model.clone(),
+                GenerationMode::KvCache,
+                PagedKvParams { block_tokens: 4, num_blocks: 64, watermark_per_active: 1 },
+            );
+            let mut sched = Scheduler::new(cfg(1, Duration::ZERO, 16), be.lanes());
+            sched.set_draft_engine(DraftEngine::new(model, 1, SpecConfig::default()));
+            let mut m = ServeMetrics::default();
+            let (tx, rx) = mpsc::channel();
+            sched.submit(GenRequest::new(9, prompt, max_new), tx, &mut m);
+            sched.admit(Instant::now(), &mut be, &mut m);
+            for _ in 0..16 {
+                sched.step(&mut be, &mut m);
+            }
+            let stats = done_of(&drain(&rx)).expect("Done");
+            assert_eq!(stats.tokens, want);
+            assert_eq!(
+                m.tokens_accepted, m.tokens_drafted,
+                "an identical draft model must be accepted in full"
+            );
+            assert!(m.tokens_drafted > 0);
+            // 1 prefill token + ceil(8 / (k+1)) speculative rounds beats
+            // the 8 plain decode iterations by construction.
+            assert!(m.batches <= 4, "8 budgeted tokens at draft_k=4 need at most 2 rounds");
+            assert!(sched.is_idle());
+        }
+
+        /// A draft pool too small to mirror the session: the draft fails
+        /// typed, the session falls back to plain decode permanently,
+        /// and the output is untouched. The target never notices.
+        #[test]
+        fn draft_pool_exhaustion_falls_back_to_plain_decode() {
+            let model = micro_model(504);
+            let draft_model = micro_model(504);
+            let prompt = vec![1usize, 2, 3, 4, 5, 6];
+            let max_new = 6;
+            let want = model.generate(&prompt, max_new);
+            let mut be = NativeBackend::paged(
+                model,
+                GenerationMode::KvCache,
+                PagedKvParams { block_tokens: 4, num_blocks: 64, watermark_per_active: 1 },
+            );
+            let mut sched = Scheduler::new(cfg(1, Duration::ZERO, 16), be.lanes());
+            // One 4-token draft block cannot hold the 6-token prefix.
+            let pool_cfg =
+                KvPoolConfig { layers: 2, dim: 16, block_tokens: 4, num_blocks: 1 };
+            sched.set_draft_engine(DraftEngine::with_pool(
+                draft_model,
+                SpecConfig::default(),
+                pool_cfg,
+            ));
+            let mut m = ServeMetrics::default();
+            let (tx, rx) = mpsc::channel();
+            sched.submit(GenRequest::new(3, prompt, max_new), tx, &mut m);
+            sched.admit(Instant::now(), &mut be, &mut m);
+            for _ in 0..16 {
+                sched.step(&mut be, &mut m);
+            }
+            let stats = done_of(&drain(&rx)).expect("Done");
+            assert_eq!(stats.tokens, want, "fallback must not change the output");
+            assert_eq!(m.spec_fallbacks, 1, "exactly one permanent fallback");
+            assert_eq!(m.tokens_drafted, 0, "no draft round ever completed");
+            assert!(sched.is_idle());
+        }
     }
 }

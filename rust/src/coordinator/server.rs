@@ -14,6 +14,7 @@ use super::clock::{system_clock, Clock};
 use super::engine::DecodeBackend;
 use super::request::{Event, GenRequest, GenStats, ServeError, ServeMetrics};
 use super::scheduler::{Scheduler, SchedulerConfig};
+use crate::runtime::specdec::DraftEngine;
 use anyhow::Result;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -104,6 +105,17 @@ impl Server {
         Self::spawn_with_clock(factory, cfg, system_clock())
     }
 
+    /// [`Server::spawn`] with a speculative-decoding draft engine
+    /// (DESIGN.md §11): the factory builds the target backend *and* the
+    /// compressed-variant [`DraftEngine`] in the worker thread; greedy
+    /// sessions on the resulting server run draft/verify iterations.
+    pub fn spawn_speculative(
+        factory: impl FnOnce() -> Result<(Box<dyn DecodeBackend>, DraftEngine)> + Send + 'static,
+        cfg: SchedulerConfig,
+    ) -> Self {
+        Self::spawn_inner(move || factory().map(|(b, d)| (b, Some(d))), cfg, system_clock())
+    }
+
     /// [`Server::spawn`] with an injected [`Clock`] — the
     /// deterministic-time hook. Every *policy* timestamp the worker
     /// reads (arrival stamps, deadline sweeps, coalescing budgets,
@@ -115,9 +127,19 @@ impl Server {
         cfg: SchedulerConfig,
         clock: Arc<dyn Clock>,
     ) -> Self {
+        Self::spawn_inner(move || factory().map(|b| (b, None)), cfg, clock)
+    }
+
+    fn spawn_inner(
+        factory: impl FnOnce() -> Result<(Box<dyn DecodeBackend>, Option<DraftEngine>)>
+            + Send
+            + 'static,
+        cfg: SchedulerConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Self {
         let (tx, rx) = mpsc::channel::<Msg>();
         let worker = std::thread::spawn(move || {
-            let mut backend = match factory() {
+            let (mut backend, draft) = match factory() {
                 Ok(b) => b,
                 Err(e) => {
                     let msg = format!("engine construction failed: {e:#}");
@@ -140,6 +162,9 @@ impl Server {
                 }
             };
             let mut sched = Scheduler::with_clock(cfg, backend.lanes(), Arc::clone(&clock));
+            if let Some(d) = draft {
+                sched.set_draft_engine(d);
+            }
             let mut metrics = ServeMetrics::default();
             let mut shutdown_reply: Option<mpsc::Sender<ServeMetrics>> = None;
             loop {
@@ -663,6 +688,47 @@ mod tests {
         assert!(metrics.has_kv_pool(), "paged-KV stats missing from ServeMetrics");
         assert!(metrics.kv_peak_blocks > 0);
         assert!(metrics.block_util_percentile(1.0) > 0.0);
+    }
+
+    /// Speculative serving end to end: an identical-checkpoint draft
+    /// accepts everything, the output matches plain greedy decode
+    /// bitwise, and the acceptance counters ride out with shutdown
+    /// metrics.
+    #[test]
+    fn speculative_server_matches_plain_greedy() {
+        use crate::runtime::specdec::{DraftEngine, SpecConfig};
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 16,
+        };
+        let model = tiny_model(830);
+        let m2 = model.clone();
+        let server = Server::spawn_speculative(
+            move || {
+                let draft = DraftEngine::new(m2.clone(), 2, SpecConfig::default());
+                let backend = NativeBackend::new(m2, GenerationMode::KvCache, 2);
+                Ok((Box::new(backend) as Box<dyn DecodeBackend>, draft))
+            },
+            cfg,
+        );
+        let mut handles = Vec::new();
+        for i in 0..4u64 {
+            let prompt = vec![2 + i as usize, 5, 9];
+            handles.push((prompt.clone(), server.submit(GenRequest::new(i, prompt, 6)).unwrap()));
+        }
+        for (prompt, h) in handles {
+            let stats = h.collect_timeout(EVENT_TIMEOUT).unwrap();
+            assert_eq!(stats.tokens, model.generate(&prompt, 6), "spec output diverged");
+        }
+        let metrics = server.shutdown().unwrap();
+        assert_eq!(metrics.completed, 4);
+        assert!(metrics.tokens_drafted > 0, "speculation must have engaged");
+        assert_eq!(
+            metrics.tokens_accepted, metrics.tokens_drafted,
+            "an identical draft checkpoint must be accepted in full"
+        );
+        assert_eq!(metrics.spec_fallbacks, 0);
     }
 
     /// PJRT path (artifact-gated). The skip is explicit and loud; the

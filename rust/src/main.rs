@@ -16,6 +16,7 @@
 //!               [--temperature F] [--top-k N] [--kv-lanes N]
 //!               [--kv-evict fifo|lru|freq] [--kv-spill] [--kv-compress]
 //!               [--kv-rank-frac F]
+//!               [--speculate METHOD] [--draft-k N]
 //!               (+ the compress stage overrides; falls back to the
 //!               Rust-native backend when PJRT/artifacts are absent).
 //!               --max-batch 0 (default) uses the backend's lane cap —
@@ -30,6 +31,13 @@
 //!               sessions into a host spill arena under block pressure,
 //!               and --kv-compress stores cold spilled KV as a PIFA
 //!               factorization at rank fraction --kv-rank-frac.
+//!               Self-speculative decoding (DESIGN.md §11, native KV
+//!               backend only): --speculate compresses the base dense
+//!               checkpoint with the named registry method into a draft
+//!               model that proposes --draft-k greedy tokens per
+//!               iteration; the dense target verifies all k+1 positions
+//!               and the output stays bitwise-identical to plain greedy
+//!               decode. Acceptance counters print at shutdown.
 //! pifa tables   <fig1|tab2|tab3|...|all>   (same generators as cargo bench)
 //! pifa bench-kernels [--smoke] [--out PATH]
 //!               — decode-path kernel microbench (dense vs low-rank vs
@@ -70,7 +78,7 @@ use pifa::coordinator::{
 use pifa::data::vocab::Vocab;
 use pifa::model::serialize::{load_checkpoint, load_checkpoint_full, save_checkpoint_with_spec};
 use pifa::pifa::PivotStrategy;
-use pifa::runtime::{Engine, Manifest, ModelRunner};
+use pifa::runtime::{DraftEngine, Engine, Manifest, ModelRunner, SpecConfig};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -260,8 +268,31 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     // this many contiguous max_seq lanes.
     let kv_lanes: usize =
         flags.get("kv-lanes").map(String::as_str).unwrap_or("4").parse::<usize>()?.max(1);
-    let max_wait_ms: u64 = flags.get("max-wait-ms").map(String::as_str).unwrap_or("5").parse()?;
-    let queue_cap: usize = flags.get("queue-cap").map(String::as_str).unwrap_or("64").parse()?;
+    // Range-checked at the CLI boundary: a bad knob is a usage error
+    // here, not a panic (or silent nonsense) deep in the scheduler.
+    let max_wait_ms: u64 = flags
+        .get("max-wait-ms")
+        .map(String::as_str)
+        .unwrap_or("5")
+        .parse()
+        .context("--max-wait-ms must be a non-negative integer (milliseconds)")?;
+    let queue_cap: usize = flags
+        .get("queue-cap")
+        .map(String::as_str)
+        .unwrap_or("64")
+        .parse()
+        .context("--queue-cap must be a non-negative integer")?;
+    // Speculative decoding knobs (DESIGN.md §11).
+    let speculate = flags.get("speculate").cloned();
+    let draft_k: usize = flags
+        .get("draft-k")
+        .map(String::as_str)
+        .unwrap_or("4")
+        .parse()
+        .context("--draft-k must be an integer")?;
+    if !(1..=16).contains(&draft_k) {
+        bail!("--draft-k must be in [1, 16], got {draft_k}");
+    }
     // Sampling knobs (greedy by default).
     let temperature: f32 = flags.get("temperature").map(String::as_str).unwrap_or("0").parse()?;
     let top_k: usize = flags.get("top-k").map(String::as_str).unwrap_or("0").parse()?;
@@ -271,16 +302,20 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         Some(s) => pifa::runtime::EvictPolicyKind::parse(s)
             .ok_or_else(|| anyhow!("unknown --kv-evict '{s}' (fifo|lru|freq)"))?,
     };
+    let rank_frac: f64 = flags
+        .get("kv-rank-frac")
+        .map(String::as_str)
+        .unwrap_or("0.5")
+        .parse()
+        .context("--kv-rank-frac must be a number in (0, 1]")?;
+    if !(rank_frac > 0.0 && rank_frac <= 1.0) {
+        bail!("--kv-rank-frac must be in (0, 1], got {rank_frac}");
+    }
     let life = KvLifeConfig {
         evict,
         spill: flags.contains_key("kv-spill"),
         compress: flags.contains_key("kv-compress"),
-        rank_frac: flags
-            .get("kv-rank-frac")
-            .map(String::as_str)
-            .unwrap_or("0.5")
-            .parse()
-            .context("--kv-rank-frac must be a number in (0, 1]")?,
+        rank_frac,
     };
 
     // Backend selection: PJRT when the runtime + artifacts are usable,
@@ -324,6 +359,29 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         other => bail!("unknown flavour {other}"),
     };
     let mode = if use_kv { GenerationMode::KvCache } else { GenerationMode::NoKvCache };
+    // Draft model for --speculate: compress the BASE dense checkpoint
+    // with the named registry method — the compressed/dense pair of the
+    // same weights is the classic self-speculative setup (DESIGN.md
+    // §11). Only the native KV-cache backend can verify/rollback;
+    // anything else serves plain, loudly.
+    let draft_model = match speculate.as_deref() {
+        Some(method) if use_kv && native => {
+            let data = experiments::wiki_dataset();
+            let density: f64 =
+                flags.get("density").map(String::as_str).unwrap_or("0.55").parse()?;
+            let output = compress_via_registry(&model, &data, method, density, flags)?;
+            println!("draft pipeline ({method}): {}", output.spec.describe());
+            Some(output.model)
+        }
+        Some(method) => {
+            println!(
+                "--speculate {method} needs the native KV-cache backend; serving plain \
+                 (drop --no-kv / PJRT artifacts to enable it)"
+            );
+            None
+        }
+        None => None,
+    };
     let served_mem = served.memory_bytes_fp16();
     let scfg = SchedulerConfig {
         max_batch,
@@ -336,13 +394,29 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         // comes from the block watermark); no-KV mode has no pool, so the
         // lane slots must honour an explicit --max-batch directly.
         let native_lanes = if use_kv { kv_lanes } else { kv_lanes.max(max_batch) };
-        Server::spawn(
-            move || {
-                Ok(Box::new(NativeBackend::new(served, mode, native_lanes).with_kvlife(life))
-                    as Box<dyn DecodeBackend>)
-            },
-            scfg,
-        )
+        match draft_model {
+            Some(draft) => Server::spawn_speculative(
+                move || {
+                    let backend =
+                        NativeBackend::new(served, mode, native_lanes).with_kvlife(life);
+                    let engine = DraftEngine::new(
+                        draft,
+                        backend.lanes(),
+                        SpecConfig { draft_k, ..SpecConfig::default() },
+                    );
+                    Ok((Box::new(backend) as Box<dyn DecodeBackend>, engine))
+                },
+                scfg,
+            ),
+            None => Server::spawn(
+                move || {
+                    Ok(Box::new(
+                        NativeBackend::new(served, mode, native_lanes).with_kvlife(life),
+                    ) as Box<dyn DecodeBackend>)
+                },
+                scfg,
+            ),
+        }
     } else {
         let served = served.clone();
         Server::spawn(
@@ -418,6 +492,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         metrics.occupancy_percentile(0.5) * 100.0,
         served_mem as f64 / 1e6,
     );
+    if metrics.tokens_drafted > 0 {
+        println!(
+            "spec: drafted {} accepted {} ({:.0}% acceptance) | fallbacks {}",
+            metrics.tokens_drafted,
+            metrics.tokens_accepted,
+            metrics.spec_acceptance_rate() * 100.0,
+            metrics.spec_fallbacks,
+        );
+    }
     if metrics.has_kv_pool() {
         println!(
             "kv: paged pool {} blocks (peak {} in use) | block util p50 {:.0}% p95 {:.0}% | prefix hit rate {:.0}% | cow forks {} | peak sessions {}",

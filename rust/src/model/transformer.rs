@@ -338,6 +338,32 @@ impl Transformer {
         Ok(linalg::matmul_nt(&xf, &self.head))
     }
 
+    /// Score a span of tokens against the KV store — the speculative
+    /// verify entry point (DESIGN.md §11). Feeds each token in order and
+    /// returns one logits row per position fed; stops at the first
+    /// capacity failure, returning the rows that did complete alongside
+    /// the fault so the caller can still accept a shorter prefix.
+    ///
+    /// Deliberately a sequential loop over [`Transformer::decode_step_kv`]:
+    /// pushing the span through the multi-row GEMM path would change
+    /// which matmul kernel runs and therefore the FP summation order,
+    /// breaking the bitwise draft/verify contract that
+    /// `rust/tests/spec_differential.rs` pins against plain decode.
+    pub fn decode_span_kv<S: KvStore>(
+        &self,
+        tokens: &[usize],
+        store: &mut S,
+    ) -> (Vec<Mat<f32>>, Option<KvStoreFull>) {
+        let mut rows = Vec::with_capacity(tokens.len());
+        for &t in tokens {
+            match self.decode_step_kv(t, &mut *store) {
+                Ok(l) => rows.push(l),
+                Err(e) => return (rows, Some(e)),
+            }
+        }
+        (rows, None)
+    }
+
     /// Greedy generation (serving path reference implementation).
     pub fn generate(&self, prompt: &[usize], max_new: usize) -> Vec<usize> {
         let mut cache = KvCache::new(&self.cfg);

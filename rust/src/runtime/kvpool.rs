@@ -497,6 +497,40 @@ impl BlockPool {
         }
     }
 
+    /// Truncate a session to its first `pos` positions — the speculative
+    /// rollback primitive (DESIGN.md §11): rejected draft tokens are
+    /// discarded by shrinking the *block table*, never by touching row
+    /// contents. Whole blocks past the cut drop one refcount each (and
+    /// park idle at zero, exactly like [`BlockPool::release`]). The
+    /// boundary block that keeps a partial row range is deliberately
+    /// **not** mutated: its token list may retain a stale tail, but a
+    /// shared (refs > 1) block may back a peer's longer view, and
+    /// [`BlockPool::append`] already handles divergence lazily — a COW
+    /// fork when shared, a token-list truncation when solely owned. The
+    /// chain hash rewinds by re-chaining the kept tokens, so prefix
+    /// sharing and later appends see a consistent content address.
+    /// Positions at or past `seq.len()` are a no-op.
+    pub fn truncate(&mut self, seq: &mut SeqKv, pos: usize) {
+        if pos >= seq.len {
+            return;
+        }
+        let kept: Vec<usize> = {
+            let all = self.tokens_of(seq);
+            all[..pos].to_vec()
+        };
+        let first_dropped = pos.div_ceil(self.cfg.block_tokens);
+        let dropped: Vec<usize> = seq.blocks.drain(first_dropped..).collect();
+        for b in dropped {
+            debug_assert!(self.meta[b].refs > 0, "truncate dropped block {b} twice");
+            self.meta[b].refs -= 1;
+            if self.meta[b].refs == 0 {
+                self.idle.push_back(b);
+            }
+        }
+        seq.len = pos;
+        seq.hash = kept.iter().fold(ROOT_HASH, |h, &t| chain(h, t));
+    }
+
     /// Flat element offset of `(block, layer, row)` in the K/V slabs.
     #[inline]
     fn row_offset(&self, block: usize, layer: usize, row: usize) -> usize {
@@ -964,6 +998,90 @@ mod tests {
         let s = p.stats();
         assert_eq!(s.used_blocks, 0, "partial import table was released");
         assert_eq!(s.free_blocks, 2);
+    }
+
+    #[test]
+    fn truncate_releases_whole_blocks_and_rewinds_the_hash() {
+        let mut p = pool(4, 4);
+        let toks: Vec<usize> = (0..10).collect();
+        let mut seq = fill(&mut p, &toks, 0.0);
+        assert_eq!(seq.blocks().len(), 3);
+        // Cut back to 6 positions: block 2 drops, block 1 keeps rows 4..6.
+        p.truncate(&mut seq, 6);
+        assert_eq!(seq.len(), 6);
+        assert_eq!(seq.blocks().len(), 2);
+        assert_eq!(p.tokens_of(&seq), &toks[..6]);
+        assert_eq!(p.stats().idle_blocks, 1, "dropped block parks idle");
+        // The rewound hash is consistent: appending the same tokens again
+        // reproduces the original chain, so an identical 10-token prompt
+        // still prefix-matches this session's blocks.
+        for t in 6..10 {
+            p.append(&mut seq, t).unwrap();
+        }
+        let (peer, reused) = p.begin(&toks);
+        assert_eq!(reused, 9, "re-grown chain is content-addressable");
+        p.release(peer);
+        p.release(seq);
+    }
+
+    #[test]
+    fn truncate_past_len_and_to_zero_are_sound() {
+        let mut p = pool(4, 4);
+        let mut seq = fill(&mut p, &[5, 6, 7], 0.0);
+        p.truncate(&mut seq, 3); // no-op: pos == len
+        p.truncate(&mut seq, 7); // no-op: pos > len
+        assert_eq!(seq.len(), 3);
+        assert_eq!(seq.blocks().len(), 1);
+        p.truncate(&mut seq, 0);
+        assert_eq!(seq.len(), 0);
+        assert!(seq.blocks().is_empty());
+        assert_eq!(p.stats().used_blocks, 0);
+        // The emptied table accepts appends again from position zero.
+        p.append(&mut seq, 9).unwrap();
+        assert_eq!(p.tokens_of(&seq), &[9]);
+        p.release(seq);
+    }
+
+    #[test]
+    fn truncate_onto_a_shared_partial_block_never_mutates_the_peer() {
+        let mut p = pool(4, 8);
+        let prompt: Vec<usize> = vec![1, 2, 3, 4, 5, 6, 7];
+        let a = fill(&mut p, &prompt, 50.0);
+        let (mut b, reused) = p.begin(&prompt);
+        assert_eq!(reused, 6, "block 0 in full plus two rows of block 1");
+        assert_eq!(b.blocks()[1], a.blocks()[1], "partial block shared");
+        // Roll B back *into* the shared partial block, then diverge. The
+        // truncate must leave A's token list and rows untouched; the
+        // divergent append must COW-fork, not overwrite.
+        p.truncate(&mut b, 5);
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.blocks()[1], a.blocks()[1], "truncate keeps the shared block");
+        assert_eq!(p.tokens_of(&a), prompt, "peer's token view intact");
+        p.append(&mut b, 999).unwrap();
+        assert_eq!(p.stats().cow_copies, 1, "divergence after rollback forks");
+        assert_ne!(b.blocks()[1], a.blocks()[1]);
+        for layer in 0..2 {
+            assert!(p.k_row(&a, layer, 5).iter().all(|&x| x == 55.0), "peer rows intact");
+            assert!(p.k_row(&b, layer, 4).iter().all(|&x| x == 54.0), "fork copied kept rows");
+        }
+        p.release(a);
+        p.release(b);
+    }
+
+    #[test]
+    fn truncate_then_regrow_in_a_sole_owner_block_reuses_the_block() {
+        let mut p = pool(4, 4);
+        let mut seq = fill(&mut p, &[1, 2, 3, 4, 5, 6], 0.0);
+        let block1 = seq.blocks()[1];
+        // Rollback mid-block, then append a *different* token: the sole
+        // owner truncates the stale token tail in place (no fork, no
+        // fresh allocation).
+        p.truncate(&mut seq, 5);
+        p.append(&mut seq, 77).unwrap();
+        assert_eq!(seq.blocks()[1], block1, "sole owner rewrites in place");
+        assert_eq!(p.stats().cow_copies, 0);
+        assert_eq!(p.tokens_of(&seq), &[1, 2, 3, 4, 5, 77]);
+        p.release(seq);
     }
 
     #[test]

@@ -21,6 +21,10 @@
 //!   idle-block eviction policies, the host-side spill arena for
 //!   preempted sessions, and PIFA compression of cold spilled blocks
 //!   (DESIGN.md §10).
+//! * [`specdec`] — self-speculative decoding: the compressed-variant
+//!   [`specdec::DraftEngine`] that proposes k greedy tokens per
+//!   iteration against its own paged pool, verified and rolled back by
+//!   the serving coordinator (DESIGN.md §11).
 
 pub mod exec;
 pub mod kernels;
@@ -28,9 +32,11 @@ pub mod kvlife;
 pub mod kvpool;
 pub mod loader;
 pub mod manifest;
+pub mod specdec;
 
 pub use exec::{weights_to_literals, LaneKv, ModelRunner};
 pub use kvlife::{CompressedKv, EvictPolicyKind, SpillArena, SpillArenaStats, SpilledKv};
 pub use kvpool::{BlockPool, KvPoolConfig, KvPoolStats, SeqKv};
+pub use specdec::{DraftEngine, SpecConfig};
 pub use loader::Engine;
 pub use manifest::{ArtifactKind, ArtifactSpec, Manifest, TensorSpec};

@@ -1,0 +1,292 @@
+//! Self-speculative decoding: the compressed-variant draft engine
+//! (DESIGN.md §11).
+//!
+//! The method registry holds dense and compressed (pifa / lowrank /
+//! lowrank-s24) variants of the *same* checkpoint — the classic
+//! draft/verify pair for free. Each scheduler iteration on a speculative
+//! session runs:
+//!
+//! 1. **draft** — k greedy tokens on the cheap compressed variant here,
+//!    against a private paged-KV pool whose lanes mirror the target
+//!    backend's lanes 1:1;
+//! 2. **verify** — all k+1 positions scored through the dense target
+//!    (`DecodeBackend::verify`, a sequential span so the arithmetic is
+//!    bitwise-identical to plain decode);
+//! 3. **accept** — the longest draft prefix matching the target's greedy
+//!    picks, plus the target's one bonus token;
+//! 4. **rollback** — rejected positions drop off both pools by block-table
+//!    truncation ([`crate::runtime::kvpool::BlockPool::truncate`]).
+//!
+//! Because acceptance is judged entirely by target logits, the output
+//! stream is bitwise-identical to plain greedy dense decode no matter
+//! how bad the draft is — the draft quality only moves the speedup.
+//!
+//! The mirror KV is *self-healing*: every call to [`DraftEngine::draft`]
+//! names the owning session, so a lane reused by a new session (or a
+//! mirror left stale by a fallback) is released and re-begun from the
+//! target's committed prefix — a draft-side prefill. Draft-pool
+//! exhaustion surfaces as a typed error the scheduler maps to a plain
+//! per-session fallback, never to a target-session failure.
+
+use crate::model::transformer::{KvStoreFull, Transformer};
+use crate::runtime::exec::argmax;
+use crate::runtime::kvpool::{BlockPool, KvPoolConfig, KvPoolStats, PagedSeq};
+use crate::runtime::kvpool::SeqKv;
+
+/// Tuning knobs for speculative decoding.
+#[derive(Clone, Debug)]
+pub struct SpecConfig {
+    /// Draft tokens proposed per iteration (1..=16).
+    pub draft_k: usize,
+    /// A session whose acceptance rate sits below this floor after
+    /// `floor_window` drafted tokens falls back to plain decode for the
+    /// rest of its life (the draft is costing more than it saves).
+    pub accept_floor: f64,
+    /// Drafted tokens observed before the floor is judged.
+    pub floor_window: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        Self { draft_k: 4, accept_floor: 0.1, floor_window: 64 }
+    }
+}
+
+/// The draft side of the speculative loop: a compressed model plus its
+/// own block pool, with one mirror [`SeqKv`] per target lane.
+pub struct DraftEngine {
+    model: Transformer,
+    pool: BlockPool,
+    cfg: SpecConfig,
+    /// Mirror block table per target lane (grown on demand).
+    seqs: Vec<Option<SeqKv>>,
+    /// Session id each mirror belongs to — lane reuse by a new session
+    /// invalidates the old mirror.
+    owner: Vec<Option<u64>>,
+}
+
+impl DraftEngine {
+    /// Draft engine whose pool matches a contiguous `lanes × max_seq`
+    /// cache of the draft model's geometry (same sizing rule as the
+    /// target backend's paged pool).
+    pub fn new(model: Transformer, lanes: usize, cfg: SpecConfig) -> Self {
+        let pool_cfg = KvPoolConfig::matching_contiguous(
+            model.cfg.n_layers,
+            model.cfg.dim,
+            lanes,
+            model.cfg.max_seq,
+        );
+        Self::with_pool(model, cfg, pool_cfg)
+    }
+
+    /// Explicit pool geometry (tests shrink it to force exhaustion).
+    pub fn with_pool(model: Transformer, cfg: SpecConfig, pool_cfg: KvPoolConfig) -> Self {
+        debug_assert!((1..=16).contains(&cfg.draft_k), "draft_k out of range");
+        Self { model, pool: BlockPool::new(pool_cfg), cfg, seqs: Vec::new(), owner: Vec::new() }
+    }
+
+    pub fn config(&self) -> &SpecConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        self.pool.stats()
+    }
+
+    /// Cached mirror length for a lane (tests).
+    pub fn lane_len(&self, lane: usize) -> usize {
+        self.seqs.get(lane).and_then(|s| s.as_ref()).map_or(0, |s| s.len())
+    }
+
+    fn ensure_lane(&mut self, lane: usize) {
+        if lane >= self.seqs.len() {
+            self.seqs.resize_with(lane + 1, || None);
+            self.owner.resize(lane + 1, None);
+        }
+    }
+
+    /// Propose `k` greedy draft tokens for session `id` on `lane`, whose
+    /// committed target sequence is `seq`. Catches the mirror KV up to
+    /// `seq.len() - 1` positions (re-beginning from scratch when the
+    /// lane changed owners), feeds the last committed token, then chains
+    /// k greedy picks. On pool exhaustion the mirror is released and the
+    /// typed error returned — the caller falls back to plain decode; the
+    /// target session is untouched.
+    pub fn draft(
+        &mut self,
+        lane: usize,
+        id: u64,
+        seq: &[usize],
+        k: usize,
+    ) -> Result<Vec<usize>, KvStoreFull> {
+        assert!(!seq.is_empty(), "draft requires a non-empty sequence");
+        self.ensure_lane(lane);
+        if self.owner[lane] != Some(id) {
+            if let Some(old) = self.seqs[lane].take() {
+                self.pool.release(old);
+            }
+            self.owner[lane] = Some(id);
+        }
+        let mut kv = match self.seqs[lane].take() {
+            Some(kv) => kv,
+            // Fresh mirror: re-attach whatever prefix is resident in the
+            // draft pool (shared system prompts hit here too).
+            None => self.pool.begin(&seq[..seq.len() - 1]).0,
+        };
+        // A mirror longer than the committed prefix (left by a fallback
+        // mid-iteration) rolls back before catching up.
+        if kv.len() + 1 > seq.len() {
+            self.pool.truncate(&mut kv, seq.len() - 1);
+        }
+        match self.draft_into(&mut kv, seq, k) {
+            Ok(drafts) => {
+                self.seqs[lane] = Some(kv);
+                Ok(drafts)
+            }
+            Err(e) => {
+                self.pool.release(kv);
+                self.owner[lane] = None;
+                Err(e)
+            }
+        }
+    }
+
+    fn draft_into(
+        &mut self,
+        kv: &mut SeqKv,
+        seq: &[usize],
+        k: usize,
+    ) -> Result<Vec<usize>, KvStoreFull> {
+        let cap = self.model.cfg.max_seq;
+        // Catch-up: decode committed tokens the mirror has not cached,
+        // stopping one short — the last committed token starts drafting.
+        for pos in kv.len()..seq.len() - 1 {
+            let mut store = PagedSeq { pool: &mut self.pool, seq: kv, cap };
+            self.model.decode_step_kv(seq[pos], &mut store)?;
+        }
+        let mut drafts = Vec::with_capacity(k);
+        let mut next = *seq.last().expect("non-empty sequence");
+        for _ in 0..k {
+            let mut store = PagedSeq { pool: &mut self.pool, seq: kv, cap };
+            let logits = self.model.decode_step_kv(next, &mut store)?;
+            next = argmax(logits.row(0));
+            drafts.push(next);
+        }
+        Ok(drafts)
+    }
+
+    /// Roll the lane's mirror back to `pos` cached positions (rejected
+    /// draft tokens after a verify). A `pos` at or past the mirror
+    /// length — the all-accepted case, where the mirror is one position
+    /// short — is a no-op; the next draft's catch-up fills the gap.
+    pub fn truncate(&mut self, lane: usize, pos: usize) {
+        if let Some(kv) = self.seqs.get_mut(lane).and_then(|s| s.as_mut()) {
+            self.pool.truncate(kv, pos);
+        }
+    }
+
+    /// Release a lane's mirror (session finished, cancelled, preempted,
+    /// or fallen back to plain decode).
+    pub fn release(&mut self, lane: usize) {
+        if lane < self.seqs.len() {
+            if let Some(kv) = self.seqs[lane].take() {
+                self.pool.release(kv);
+            }
+            self.owner[lane] = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::model::config::ModelConfig;
+
+    fn micro_model(seed: u64) -> Transformer {
+        let cfg = ModelConfig {
+            vocab: 32,
+            dim: 16,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 24,
+            max_seq: 64,
+            ..ModelConfig::tiny_s()
+        };
+        Transformer::new_random(&cfg, &mut Rng::new(seed))
+    }
+
+    /// Greedy reference: the token the draft model itself would decode
+    /// next after `seq`, computed through a fresh contiguous cache.
+    fn greedy_chain(model: &Transformer, seq: &[usize], k: usize) -> Vec<usize> {
+        let mut cache = crate::model::transformer::KvCache::new(&model.cfg);
+        let mut logits = None;
+        for &t in seq {
+            logits = Some(model.decode_step(t, &mut cache));
+        }
+        let mut out = Vec::new();
+        let mut next = argmax(logits.expect("non-empty seq").row(0));
+        for _ in 0..k {
+            out.push(next);
+            if out.len() == k {
+                break;
+            }
+            let l = model.decode_step(next, &mut cache);
+            next = argmax(l.row(0));
+        }
+        out
+    }
+
+    #[test]
+    fn drafts_match_the_models_own_greedy_chain() {
+        let model = micro_model(7);
+        let mut eng = DraftEngine::new(model.clone(), 2, SpecConfig::default());
+        let seq = vec![3usize, 1, 4, 1, 5];
+        let drafts = eng.draft(0, 42, &seq, 4).unwrap();
+        assert_eq!(drafts, greedy_chain(&model, &seq, 4));
+        // Mirror sits one short of seq end plus the drafts it fed.
+        assert_eq!(eng.lane_len(0), seq.len() + 4 - 1);
+    }
+
+    #[test]
+    fn truncate_then_redraft_is_consistent() {
+        let model = micro_model(9);
+        let mut eng = DraftEngine::new(model.clone(), 2, SpecConfig::default());
+        let mut seq = vec![2usize, 7, 1];
+        let drafts = eng.draft(0, 1, &seq, 3).unwrap();
+        // Pretend verify accepted one draft plus a bonus token 9.
+        seq.push(drafts[0]);
+        seq.push(9);
+        eng.truncate(0, seq.len() - 1);
+        let redraft = eng.draft(0, 1, &seq, 3).unwrap();
+        assert_eq!(redraft, greedy_chain(&model, &seq, 3));
+    }
+
+    #[test]
+    fn lane_reuse_by_a_new_session_resets_the_mirror() {
+        let model = micro_model(11);
+        let mut eng = DraftEngine::new(model.clone(), 1, SpecConfig::default());
+        eng.draft(0, 1, &[1, 2, 3], 2).unwrap();
+        // Same lane, different session id, unrelated sequence.
+        let seq = vec![9usize, 8, 7, 6];
+        let drafts = eng.draft(0, 2, &seq, 2).unwrap();
+        assert_eq!(drafts, greedy_chain(&model, &seq, 2));
+    }
+
+    #[test]
+    fn exhaustion_is_typed_and_releases_the_mirror() {
+        let model = micro_model(13);
+        // One block of 4 tokens: a 5-position draft run must exhaust.
+        let pool_cfg = KvPoolConfig {
+            layers: model.cfg.n_layers,
+            dim: model.cfg.dim,
+            block_tokens: 4,
+            num_blocks: 1,
+        };
+        let mut eng = DraftEngine::with_pool(model, SpecConfig::default(), pool_cfg);
+        let err = eng.draft(0, 1, &[1, 2, 3, 4, 5], 4).unwrap_err();
+        assert_eq!(err.pos, 4, "failed exactly at the first unfundable position");
+        assert_eq!(eng.lane_len(0), 0, "failed mirror was released");
+        assert_eq!(eng.stats().used_blocks, 0, "no leaked draft blocks");
+    }
+}

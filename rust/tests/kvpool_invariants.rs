@@ -1,6 +1,6 @@
 //! Property suite for the paged KV block pool's bookkeeping (DESIGN.md
-//! §8/§10): under seeded random begin/append/release churn across all
-//! three eviction policies,
+//! §8/§10/§11): under seeded random begin/append/truncate/release churn
+//! across all three eviction policies,
 //!
 //! * the block ledger always closes — `used + free == num_blocks` with
 //!   the idle queue a subset of the free pool (`idle <= free`);
@@ -93,7 +93,7 @@ fn run_pool_churn(seed: u64, policy: EvictPolicyKind) -> KvPoolStats {
     check_step(&prev, &prev, seed, 0);
 
     for op in 1..=300 {
-        match rng.below(6) {
+        match rng.below(8) {
             // Admit a new session: attach a shared prefix, append the
             // rest. On exhaustion, release it (the caller's fallback).
             0..=2 => {
@@ -123,6 +123,29 @@ fn run_pool_churn(seed: u64, policy: EvictPolicyKind) -> KvPoolStats {
                     let i = rng.below(live.len());
                     let t = rng.below(VOCAB);
                     let _ = pool.append(&mut live[i], t);
+                }
+            }
+            // Speculative rollback (DESIGN.md §11): rewind a live
+            // session to a random earlier position. Blocks the rewind
+            // strands must return to the ledger; shared blocks must
+            // survive for their other owners (COW-release, never a
+            // mutate), and the sequence must keep append-able state.
+            5..=6 => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let len = live[i].len();
+                    if len > 1 {
+                        let pos = 1 + rng.below(len - 1);
+                        pool.truncate(&mut live[i], pos);
+                        assert_eq!(
+                            live[i].len(),
+                            pos,
+                            "seed {seed} op {op}: truncate left length {} (wanted {pos})",
+                            live[i].len()
+                        );
+                        // The rewound session must still be stepable.
+                        let _ = pool.append(&mut live[i], rng.below(VOCAB));
+                    }
                 }
             }
             // Finish a session; its sole-owned blocks park on the idle

@@ -1,0 +1,431 @@
+//! Differential suite for self-speculative decoding (DESIGN.md §11).
+//!
+//! The load-bearing contract: serving a greedy session through the
+//! speculative draft/verify/rollback path must emit a token stream
+//! **bitwise identical** to plain autoregressive decode — acceptance is
+//! exact-match against the target's own argmax, and verify runs the
+//! same sequential KV arithmetic as per-token stepping, so speculation
+//! may only change *when* tokens are computed, never *which*.
+//!
+//! Seeded random mixes drive the real [`Scheduler`] over a real
+//! [`NativeBackend`] (micro transformers, both KV layouts) with a
+//! [`DraftEngine`] installed, across draft quality (identical /
+//! garbage checkpoints), draft-k {1, 2, 4, 8}, mid-stream cancels,
+//! and draft-pool exhaustion; every completed request is checked
+//! against `Transformer::generate`.
+//!
+//! Env knobs:
+//! * `PIFA_SPEC_SEED=<u64>` — rerun one failing seed.
+//! * `PIFA_SPECDEC=plain` — run the identical mixes without a draft
+//!   engine (the CI control axis: the harness itself must pass plain).
+
+use pifa::coordinator::{
+    Event, GenRequest, GenerationMode, NativeBackend, SamplingParams, Scheduler, SchedulerConfig,
+    ServeMetrics,
+};
+use pifa::linalg::Rng;
+use pifa::model::config::ModelConfig;
+use pifa::model::transformer::Transformer;
+use pifa::runtime::{DraftEngine, KvPoolConfig, SpecConfig};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::time::Duration;
+
+fn micro_model(seed: u64) -> Transformer {
+    let cfg = ModelConfig {
+        name: "micro".into(),
+        vocab: 32,
+        dim: 16,
+        n_layers: 2,
+        n_heads: 2,
+        ffn_hidden: 24,
+        max_seq: 64,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+    };
+    let mut rng = Rng::new(seed);
+    Transformer::new_random(&cfg, &mut rng)
+}
+
+/// Whether the CI control axis disabled speculation for this process.
+fn spec_enabled() -> bool {
+    !matches!(std::env::var("PIFA_SPECDEC").as_deref(), Ok("plain") | Ok("off") | Ok("0"))
+}
+
+struct Submitted {
+    rx: mpsc::Receiver<Event>,
+    prompt: Vec<usize>,
+    max_new: usize,
+    /// Cancel after this many scheduler iterations (mid-stream).
+    cancel_at: Option<usize>,
+}
+
+/// One seeded session mix driven to drain. Returns the metrics.
+///
+/// Every request is greedy; every request that reaches `Done` must
+/// carry exactly `Transformer::generate(prompt, max_new)`.
+fn run_mix(seed: u64) -> ServeMetrics {
+    let mut rng = Rng::new(seed ^ 0x5bec_dec0);
+    let model = micro_model(1000 + seed * 2);
+    let vocab = model.cfg.vocab;
+    // Draft quality rotates: an identical checkpoint (high acceptance),
+    // or an independent random model (rollback-heavy garbage drafts).
+    let identical_draft = rng.below(2) == 0;
+    let draft_model =
+        if identical_draft { model.clone() } else { micro_model(9000 + seed * 2) };
+    let draft_k = [1usize, 2, 4, 8][rng.below(4)];
+    let contiguous = rng.below(3) == 0;
+    let lanes = 2 + rng.below(2);
+
+    let mut be = if contiguous {
+        NativeBackend::contiguous(model.clone(), GenerationMode::KvCache, lanes)
+    } else {
+        NativeBackend::new(model.clone(), GenerationMode::KvCache, lanes)
+    };
+    use pifa::coordinator::DecodeBackend;
+    let backend_lanes = be.lanes();
+    let cfg = SchedulerConfig {
+        max_batch: 0,
+        max_wait: Duration::ZERO,
+        queue_cap: 32,
+    };
+    let mut sched = Scheduler::new(cfg, backend_lanes);
+    if spec_enabled() {
+        // accept_floor 0 keeps garbage-draft mixes speculative to the
+        // end — the collapse fallback has its own dedicated test.
+        sched.set_draft_engine(DraftEngine::new(
+            draft_model,
+            backend_lanes,
+            SpecConfig { draft_k, accept_floor: 0.0, ..SpecConfig::default() },
+        ));
+    }
+    let mut m = ServeMetrics::default();
+
+    let n_requests = 6 + rng.below(5);
+    let mut streams: BTreeMap<u64, Submitted> = BTreeMap::new();
+    for id in 0..n_requests as u64 {
+        let plen = 2 + rng.below(6);
+        let prompt: Vec<usize> = (0..plen).map(|_| rng.below(vocab)).collect();
+        let max_new = 1 + rng.below(12);
+        let cancel_at = (rng.below(4) == 0).then(|| 1 + rng.below(6));
+        let req = GenRequest::new(id, prompt.clone(), max_new)
+            .with_sampling(SamplingParams::greedy());
+        let (tx, rx) = mpsc::channel();
+        sched.submit(req, tx, &mut m);
+        streams.insert(id, Submitted { rx, prompt, max_new, cancel_at });
+    }
+
+    let mut iters = 0usize;
+    while !sched.is_idle() {
+        iters += 1;
+        assert!(iters < 10_000, "seed {seed}: scheduler failed to drain");
+        for (id, sub) in &streams {
+            if sub.cancel_at == Some(iters) {
+                sched.cancel(*id, &mut be, &mut m);
+            }
+        }
+        sched.admit_now(&mut be, &mut m);
+        sched.step(&mut be, &mut m);
+    }
+
+    let mut done = 0usize;
+    let mut cancelled = 0usize;
+    for (id, sub) in &streams {
+        let events: Vec<Event> = sub.rx.try_iter().collect();
+        let mut tokens = Vec::new();
+        let mut terminal = None;
+        for ev in &events {
+            assert!(terminal.is_none(), "seed {seed}: request {id} events after terminal");
+            match ev {
+                Event::Token { index, token } => {
+                    assert_eq!(*index, tokens.len(), "seed {seed}: request {id} index gap");
+                    tokens.push(*token);
+                }
+                Event::Done(stats) => {
+                    assert_eq!(stats.tokens, tokens, "seed {seed}: request {id} stats drift");
+                    terminal = Some("done");
+                }
+                Event::Error(_) => terminal = Some("err"),
+            }
+        }
+        match terminal {
+            Some("done") => {
+                done += 1;
+                let want = model.generate(&sub.prompt, sub.max_new);
+                assert_eq!(
+                    tokens, want,
+                    "seed {seed}: request {id} (k={draft_k}, identical_draft={identical_draft}, \
+                     contiguous={contiguous}) diverged from plain greedy decode"
+                );
+            }
+            Some(_) => {
+                cancelled += 1;
+                // A cancel lands mid-stream: whatever prefix streamed
+                // must still be the greedy prefix.
+                let want = model.generate(&sub.prompt, sub.max_new);
+                assert_eq!(
+                    tokens[..],
+                    want[..tokens.len()],
+                    "seed {seed}: request {id} streamed a non-greedy prefix before cancel"
+                );
+            }
+            None => panic!("seed {seed}: request {id} has no terminal event"),
+        }
+    }
+    assert_eq!(done + cancelled, n_requests, "seed {seed}: terminal coverage");
+    assert_eq!(m.completed, done, "seed {seed}: completed mismatch");
+    assert!(m.tokens_accepted <= m.tokens_drafted, "seed {seed}: accepted > drafted");
+    m
+}
+
+/// The headline property: across session mixes, draft quality, draft-k,
+/// layouts, and mid-stream cancels, speculative serving is bitwise
+/// plain greedy decode. With `PIFA_SPECDEC=plain` the same mixes run
+/// without a draft engine (CI control).
+#[test]
+fn speculative_decode_is_bitwise_identical_to_plain() {
+    let seeds: Vec<u64> = match std::env::var("PIFA_SPEC_SEED") {
+        Ok(s) => vec![s.parse().expect("PIFA_SPEC_SEED must be a u64")],
+        Err(_) => (0..12).collect(),
+    };
+    let mut total_drafted = 0usize;
+    for &seed in &seeds {
+        match std::panic::catch_unwind(|| run_mix(seed)) {
+            Ok(m) => total_drafted += m.tokens_drafted,
+            Err(payload) => {
+                eprintln!(
+                    "spec_differential FAILED at seed {seed}; reproduce with \
+                     PIFA_SPEC_SEED={seed} cargo test --test spec_differential"
+                );
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+    if spec_enabled() && seeds.len() > 1 {
+        assert!(total_drafted > 0, "no mix ever drafted — the suite is testing nothing");
+    } else if !spec_enabled() {
+        assert_eq!(total_drafted, 0, "plain control must never draft");
+    }
+}
+
+/// Garbage drafts at the largest k: almost everything rolls back every
+/// iteration (the rollback-heaviest path), and the output still matches.
+#[test]
+fn rollback_heavy_garbage_drafts_stay_bitwise() {
+    if !spec_enabled() {
+        return;
+    }
+    let model = micro_model(77);
+    let draft = micro_model(78); // independent weights: drafts are noise
+    let prompt = vec![3usize, 9, 1, 4, 7];
+    let max_new = 16;
+    let want = model.generate(&prompt, max_new);
+
+    let mut be = NativeBackend::new(model.clone(), GenerationMode::KvCache, 2);
+    use pifa::coordinator::DecodeBackend;
+    let lanes = be.lanes();
+    let mut sched =
+        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 4 }, lanes);
+    sched.set_draft_engine(DraftEngine::new(
+        draft,
+        lanes,
+        SpecConfig { draft_k: 8, accept_floor: 0.0, ..SpecConfig::default() },
+    ));
+    let mut m = ServeMetrics::default();
+    let (tx, rx) = mpsc::channel();
+    sched.submit(
+        GenRequest::new(1, prompt, max_new).with_sampling(SamplingParams::greedy()),
+        tx,
+        &mut m,
+    );
+    let mut iters = 0;
+    while !sched.is_idle() {
+        iters += 1;
+        assert!(iters < 1000);
+        sched.admit_now(&mut be, &mut m);
+        sched.step(&mut be, &mut m);
+    }
+    let tokens: Vec<usize> = rx
+        .try_iter()
+        .filter_map(|ev| match ev {
+            Event::Token { token, .. } => Some(token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(tokens, want, "rollback-heavy speculation diverged from plain greedy");
+    assert!(m.tokens_drafted >= 8, "k=8 speculation must have drafted");
+    assert!(
+        m.tokens_accepted < m.tokens_drafted,
+        "independent random drafts cannot be universally accepted"
+    );
+}
+
+/// An acceptance collapse (garbage draft + a live floor) must fall the
+/// session back to plain decode — and the stream stays bitwise greedy
+/// across the switch.
+#[test]
+fn acceptance_collapse_falls_back_mid_stream() {
+    if !spec_enabled() {
+        return;
+    }
+    let model = micro_model(81);
+    let draft = micro_model(82);
+    let prompt = vec![5usize, 2, 8];
+    let max_new = 14;
+    let want = model.generate(&prompt, max_new);
+
+    let mut be = NativeBackend::new(model.clone(), GenerationMode::KvCache, 2);
+    use pifa::coordinator::DecodeBackend;
+    let lanes = be.lanes();
+    let mut sched =
+        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 4 }, lanes);
+    // A floor no garbage draft can sustain, measured over a tiny window
+    // so the collapse fires mid-generation.
+    sched.set_draft_engine(DraftEngine::new(
+        draft,
+        lanes,
+        SpecConfig { draft_k: 4, accept_floor: 0.9, floor_window: 4 },
+    ));
+    let mut m = ServeMetrics::default();
+    let (tx, rx) = mpsc::channel();
+    sched.submit(
+        GenRequest::new(1, prompt, max_new).with_sampling(SamplingParams::greedy()),
+        tx,
+        &mut m,
+    );
+    let mut iters = 0;
+    while !sched.is_idle() {
+        iters += 1;
+        assert!(iters < 1000);
+        sched.admit_now(&mut be, &mut m);
+        sched.step(&mut be, &mut m);
+    }
+    let tokens: Vec<usize> = rx
+        .try_iter()
+        .filter_map(|ev| match ev {
+            Event::Token { token, .. } => Some(token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(tokens, want, "output changed across the spec -> plain fallback");
+    assert!(m.spec_fallbacks >= 1, "the collapse floor never fired");
+    assert_eq!(m.completed, 1);
+}
+
+/// Draft-pool exhaustion (1-block mirror) is a per-session fallback:
+/// the target session must finish plainly with identical output — a
+/// draft failure may never kill a target session.
+#[test]
+fn draft_pool_exhaustion_never_kills_the_target_session() {
+    if !spec_enabled() {
+        return;
+    }
+    let model = micro_model(83);
+    let prompt = vec![1usize, 2, 3, 4, 5, 6];
+    let max_new = 6;
+    let want = model.generate(&prompt, max_new);
+
+    let mut be = NativeBackend::new(model.clone(), GenerationMode::KvCache, 2);
+    let mut sched =
+        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 4 }, 2);
+    // One 4-token block cannot hold the 6-token prefix: every draft
+    // attempt exhausts the mirror pool immediately.
+    sched.set_draft_engine(DraftEngine::with_pool(
+        model.clone(),
+        SpecConfig::default(),
+        KvPoolConfig { layers: 2, dim: 16, block_tokens: 4, num_blocks: 1 },
+    ));
+    let mut m = ServeMetrics::default();
+    let (tx, rx) = mpsc::channel();
+    sched.submit(
+        GenRequest::new(1, prompt, max_new).with_sampling(SamplingParams::greedy()),
+        tx,
+        &mut m,
+    );
+    let mut iters = 0;
+    while !sched.is_idle() {
+        iters += 1;
+        assert!(iters < 1000);
+        sched.admit_now(&mut be, &mut m);
+        sched.step(&mut be, &mut m);
+    }
+    let tokens: Vec<usize> = rx
+        .try_iter()
+        .filter_map(|ev| match ev {
+            Event::Token { token, .. } => Some(token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(tokens, want, "draft exhaustion changed the target's output");
+    assert_eq!(m.completed, 1, "draft failure must not fail the target session");
+    assert_eq!(m.errors, 0);
+    assert!(m.spec_fallbacks >= 1, "exhaustion must be recorded as a fallback");
+    assert_eq!(m.tokens_drafted, 0, "nothing fit the 1-block mirror");
+}
+
+/// Speculative and plain sessions coexist in one scheduler: a sampled
+/// (temperature > 0) session serves plain while greedy neighbours
+/// speculate, and the greedy streams stay bitwise.
+#[test]
+fn sampled_and_speculative_sessions_coexist() {
+    if !spec_enabled() {
+        return;
+    }
+    let model = micro_model(85);
+    let mut be = NativeBackend::new(model.clone(), GenerationMode::KvCache, 3);
+    use pifa::coordinator::DecodeBackend;
+    let lanes = be.lanes();
+    let mut sched =
+        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 8 }, lanes);
+    sched.set_draft_engine(DraftEngine::new(model.clone(), lanes, SpecConfig::default()));
+    let mut m = ServeMetrics::default();
+
+    let greedy_prompt = vec![4usize, 11, 2];
+    let sampled_prompt = vec![9usize, 3];
+    let want = model.generate(&greedy_prompt, 8);
+    let (tx_g, rx_g) = mpsc::channel();
+    sched.submit(
+        GenRequest::new(1, greedy_prompt, 8).with_sampling(SamplingParams::greedy()),
+        tx_g,
+        &mut m,
+    );
+    let (tx_s, rx_s) = mpsc::channel();
+    sched.submit(
+        GenRequest::new(2, sampled_prompt, 8).with_sampling(SamplingParams {
+            temperature: 0.8,
+            seed: 17,
+            ..SamplingParams::default()
+        }),
+        tx_s,
+        &mut m,
+    );
+    let mut iters = 0;
+    while !sched.is_idle() {
+        iters += 1;
+        assert!(iters < 1000);
+        sched.admit_now(&mut be, &mut m);
+        sched.step(&mut be, &mut m);
+    }
+    let greedy: Vec<usize> = rx_g
+        .try_iter()
+        .filter_map(|ev| match ev {
+            Event::Token { token, .. } => Some(token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(greedy, want, "greedy stream diverged with a sampled neighbour");
+    let sampled: Vec<usize> = rx_s
+        .try_iter()
+        .filter_map(|ev| match ev {
+            Event::Token { token, .. } => Some(token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(sampled.len(), 8, "sampled session must run to its budget");
+    assert_eq!(m.completed, 2);
+    assert!(m.tokens_drafted > 0, "the greedy lane must have speculated");
+    assert!(
+        m.tokens_accepted == m.tokens_drafted,
+        "identical draft checkpoint must be fully accepted"
+    );
+}
