@@ -124,6 +124,16 @@ pub fn gate_for(metric: &str) -> Option<MetricGate> {
             abs_floor: 0.05,
             optional: true,
         }),
+        // Draft-engine rebuild failures per run. Baseline cells are
+        // routinely exactly 0, which is why the judge clamps its ratio
+        // denominator to the absolute floor: a couple of stray
+        // fallbacks is noise, a systematic pile-up gates.
+        "spec_fallbacks" => Some(MetricGate {
+            direction: LowerIsBetter,
+            rel_tol: 0.50,
+            abs_floor: 2.0,
+            optional: true,
+        }),
         // Kernel speedup ratios (bench-kernels): machine-portable-ish,
         // but still timing quotients — wide band.
         "pifa_vs_lowrank" | "pifa_vs_dense" | "lowrank_vs_dense" | "s24_vs_dense"
@@ -346,30 +356,31 @@ fn lookup(metrics: &[(String, f64)], key: &str) -> Option<f64> {
 /// symmetric in ratio space (a 2x slowdown and a 2x speedup are
 /// equidistant) and — unlike a subtractive `-X%` threshold — can never
 /// exceed the metric's possible range, so a higher-is-better gate stays
-/// live at any tolerance scale (a goodput collapse to 0 always fires).
+/// live at any tolerance scale (a goodput collapse to 0 always fires:
+/// the clamped ratio `0 / max(base, floor)` sits below `1/L` for any
+/// finite band).
+///
+/// Ratios divide by `max(|base|, abs_floor)` rather than the raw
+/// baseline, so a zero baseline cell (e.g. `spec_fallbacks: 0`) yields
+/// a finite change and an absolute-scaled band instead of inf/NaN.
 fn judge(gate: MetricGate, base: f64, cand: f64, band: f64) -> (Verdict, f64) {
-    let change = if base.abs() > 1e-12 { (cand - base) / base.abs() } else { f64::INFINITY };
+    // A zero (or near-zero) baseline has no relative scale — naive
+    // division yields inf/NaN verdicts (e.g. a `spec_fallbacks: 0`
+    // baseline cell). Clamp the denominator to the gate's absolute
+    // floor so both `change` and `ratio` stay finite, and the band
+    // degrades gracefully into an absolute one near zero.
+    let denom = base.abs().max(gate.abs_floor.max(1e-12));
+    let change = (cand - base) / denom;
     if (cand - base).abs() <= gate.abs_floor {
-        return (Verdict::WithinNoise, if change.is_finite() { change } else { 0.0 });
+        return (Verdict::WithinNoise, change);
     }
-    let worse = match gate.direction {
-        Direction::LowerIsBetter => cand > base,
-        Direction::HigherIsBetter => cand < base,
-    };
-    if base.abs() <= 1e-12 {
-        // No relative scale: past the absolute floor, direction decides.
-        return (if worse { Verdict::Regression } else { Verdict::Improvement }, 0.0);
-    }
-    // Gated metrics are non-negative magnitudes; past the ≈0 guard the
-    // ratio is well-defined.
     let limit = 1.0 + band * gate.rel_tol;
-    let ratio = cand / base;
+    let ratio = cand / denom;
     let (worse_past, better_past) = match gate.direction {
         Direction::LowerIsBetter => (ratio > limit, ratio < 1.0 / limit),
         Direction::HigherIsBetter => (ratio < 1.0 / limit, ratio > limit),
     };
     let verdict = if worse_past {
-        debug_assert!(worse);
         Verdict::Regression
     } else if better_past {
         Verdict::Improvement
@@ -777,6 +788,37 @@ mod tests {
         let report = compare_reports(&base, &cand, 3.0).unwrap();
         assert_eq!(verdict_of(&report, "goodput_tps"), Verdict::Regression);
         assert!(report.failed(), "a total goodput collapse must fail at any scale");
+    }
+
+    /// Regression guard for the zero-baseline clamp: a baseline cell of
+    /// exactly 0 (routine for `spec_fallbacks`) used to make the
+    /// relative-change division blow up to inf/NaN. The judge now
+    /// divides by `max(|base|, abs_floor)`, so a zero baseline judges
+    /// finitely: small absolute moves are noise, a pile-up regresses.
+    #[test]
+    fn zero_baseline_clamps_to_absolute_floor() {
+        let mut with_fb = BASE_METRICS.to_vec();
+        with_fb.push(("spec_fallbacks", 0.0));
+        let base = serve_report(1, &with_fb);
+        // 0 -> 1 stray fallback: under the 2.0 absolute floor — noise.
+        let mut one = with_fb.clone();
+        one[BASE_METRICS.len()] = ("spec_fallbacks", 1.0);
+        let report = compare_reports(&base, &serve_report(1, &one), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "spec_fallbacks"), Verdict::WithinNoise);
+        assert!(!report.failed(), "a single fallback over a zero baseline is noise");
+        // 0 -> 12: past floor * band — a systematic pile-up gates.
+        let mut many = with_fb;
+        many[BASE_METRICS.len()] = ("spec_fallbacks", 12.0);
+        let report = compare_reports(&base, &serve_report(1, &many), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "spec_fallbacks"), Verdict::Regression);
+        assert!(report.failed(), "a fallback pile-up must red the gate");
+        // No verdict path may leak a non-finite change value into the
+        // rendered report (the pre-clamp judge returned inf here).
+        for f in &report.findings {
+            if let Some(c) = f.change {
+                assert!(c.is_finite(), "{}: change must stay finite", f.metric);
+            }
+        }
     }
 
     /// Optional gated metrics (pool-dependent rates): disappearing from

@@ -98,6 +98,10 @@ pub struct Scenario {
     /// mirror and rollback both live on the paged pool); no-KV cells
     /// silently serve plain.
     pub speculate: bool,
+    /// Per-iteration prefill token budget (DESIGN.md §6): 0 serves
+    /// monolithically (one backend call per prompt), > 0 interleaves
+    /// chunked prefill with decode iterations.
+    pub prefill_chunk: usize,
     pub seed: u64,
 }
 
@@ -120,6 +124,7 @@ pub fn catalogue(smoke: bool) -> Vec<Scenario> {
         compress_kv: false,
         high_frac: 0.0,
         speculate: false,
+        prefill_chunk: 512,
         seed: 0,
     };
     // Repeated fleet: the same shared-prefix fleet replayed in bursts
@@ -134,6 +139,19 @@ pub fn catalogue(smoke: bool) -> Vec<Scenario> {
         max_new: (10, 16),
         shared_prefix: 12,
         seed: 107,
+        ..base.clone()
+    };
+    // Long prompts (clamped to the model's window) alongside short
+    // decode-heavy ones; a small chunk budget so a long prefill takes
+    // several iterations and decode steps run in between.
+    let interference = Scenario {
+        name: "long-prompt-interference",
+        arrivals: ArrivalProcess::Bursty { burst: 3, gap_ms: 40.0 },
+        requests: if smoke { 9 } else { 18 },
+        prompt_lens: (4, 60),
+        max_new: (8, 16),
+        prefill_chunk: 16,
+        seed: 110,
         ..base.clone()
     };
     let mut out = vec![
@@ -180,6 +198,20 @@ pub fn catalogue(smoke: bool) -> Vec<Scenario> {
             high_frac: 0.4,
             seed: 108,
             ..base.clone()
+        },
+        // Long-prompt interference (DESIGN.md §6): bursts mixing long
+        // prompts with short decode-heavy requests, so a monolithic
+        // prefill of a wave-mate stalls every active lane's ITL. The
+        // pair differs *only* in the prefill chunk budget (the `-mono`
+        // twin replays the identical workload with chunking off), so
+        // the chunked cell's decode ITL p95 strictly beating the
+        // monolithic cell is the property the smoke run asserts and the
+        // baseline cells gate.
+        interference.clone(),
+        Scenario {
+            name: "long-prompt-interference-mono",
+            prefill_chunk: 0,
+            ..interference
         },
         // Self-speculative decoding (DESIGN.md §11): long-ish budgets so
         // the draft/verify loop gets many iterations per request, and a
@@ -484,6 +516,7 @@ pub fn run_scenario(
             max_batch: 0, // backend lane cap (paged watermark for KV mode)
             max_wait: Duration::from_millis(2),
             queue_cap: 64,
+            prefill_chunk: sc.prefill_chunk,
         };
         let server = match draft.clone() {
             Some(dm) => Server::spawn_speculative(
@@ -802,6 +835,28 @@ pub fn run_cli(smoke: bool, out: &Path, model_name: &str, reps: usize) -> Result
                 );
             }
         }
+        // The interference pair replays the identical seeded workload
+        // with and without chunking; chunked decode ITL p95 strictly
+        // beating monolithic is the tentpole property (ISSUE 8 / the
+        // acceptance criterion behind the gated baseline cells).
+        for m in &methods {
+            let cell = |scenario: &str| {
+                report
+                    .cells
+                    .iter()
+                    .find(|c| c.scenario == scenario && c.method == *m)
+                    .and_then(|c| c.metric("itl_p95_ms"))
+            };
+            if let (Some(chunked), Some(mono)) =
+                (cell("long-prompt-interference"), cell("long-prompt-interference-mono"))
+            {
+                ensure!(
+                    chunked < mono,
+                    "smoke: {m}: chunked decode ITL p95 ({chunked:.3} ms) must strictly \
+                     beat monolithic ({mono:.3} ms) on the same seed"
+                );
+            }
+        }
         // Close the loop through the reader: the file we just wrote must
         // parse, schema-validate, and self-diff clean.
         let parsed = crate::bench::json::Json::parse(&json_text)?;
@@ -843,6 +898,7 @@ mod tests {
             compress_kv: false,
             high_frac: 0.0,
             speculate: false,
+            prefill_chunk: 512,
             seed: 7,
         }
     }
@@ -954,6 +1010,59 @@ mod tests {
             !smoke.iter().any(|s| s.name == "repeated-fleet-freq"),
             "freq cell is full-grid only"
         );
+    }
+
+    /// The long-prompt-interference pair differs *only* in the prefill
+    /// chunk budget — same seed, same workload — so the chunked-vs-
+    /// monolithic ITL comparison is apples to apples (ISSUE 8).
+    #[test]
+    fn interference_pair_differs_only_in_prefill_chunk() {
+        let find = |cat: &[Scenario], name: &str| {
+            cat.iter().find(|s| s.name == name).cloned().unwrap_or_else(|| {
+                panic!("scenario {name} missing from catalogue")
+            })
+        };
+        let smoke = catalogue(true);
+        let chunked = find(&smoke, "long-prompt-interference");
+        let mono = find(&smoke, "long-prompt-interference-mono");
+        assert!(chunked.prefill_chunk > 0, "chunked twin must actually chunk");
+        assert_eq!(mono.prefill_chunk, 0, "mono twin must serve monolithically");
+        assert_eq!(chunked.seed, mono.seed, "pair must replay the identical workload");
+        assert_eq!(chunked.requests, mono.requests);
+        assert_eq!(chunked.prompt_lens, mono.prompt_lens);
+        assert_eq!(chunked.max_new, mono.max_new);
+        assert!(
+            chunked.prompt_lens.1 >= 3 * chunked.prefill_chunk,
+            "longest prompts must span several chunks for interference to show"
+        );
+        // Every other smoke scenario keeps the serve default.
+        for s in &smoke {
+            if !s.name.starts_with("long-prompt-interference") {
+                assert_eq!(s.prefill_chunk, 512, "{}: non-pair scenarios use the default", s.name);
+            }
+        }
+    }
+
+    /// The chunked scheduler path engages end-to-end: a tiny chunk
+    /// budget splits each prefill into several backend calls (the
+    /// `prefill_chunks` counter outruns `prefills`) without changing
+    /// any terminal outcome.
+    #[test]
+    fn chunked_scenario_splits_prefills_and_completes() {
+        let model = micro_model(25);
+        let sc = Scenario { prefill_chunk: 2, prompt_lens: (3, 4), ..tiny_scenario() };
+        let m = run_scenario(&model, GenerationMode::KvCache, &sc, 1).unwrap();
+        let get = |k: &str| m.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap_or(0.0);
+        assert_eq!(get("completed"), 4.0, "chunking must not drop requests");
+        assert!(get("prefills") >= 4.0);
+        assert!(
+            get("prefill_chunks") > get("prefills"),
+            "budget 2 over 3-4 token prompts must take >1 chunk per prefill \
+             (chunks {} vs prefills {})",
+            get("prefill_chunks"),
+            get("prefills")
+        );
+        assert!(get("prefill_stall_ms") >= 0.0);
     }
 
     /// Spill-enabled workloads mix High and Low priorities so the

@@ -604,7 +604,12 @@ pub fn tab7_e2e() -> Result<()> {
         (0..n_prompts).map(|i| (0..3 + i % 3).map(|j| 5 + i + 7 * j).collect()).collect();
 
     let scfg =
-        SchedulerConfig { max_batch: 4, max_wait: Duration::from_millis(2), queue_cap: 64 };
+        SchedulerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 64,
+            prefill_chunk: 0,
+        };
 
     /// Submit the mixed request set, drain every stream, return metrics.
     fn drive(server: Server, prompts: &[Vec<usize>], max_new: usize) -> Result<ServeMetrics> {

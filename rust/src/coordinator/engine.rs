@@ -152,6 +152,29 @@ pub trait DecodeBackend {
     /// Run the prompt through the model on `lane`; returns the logits row
     /// for the final prompt position.
     fn prefill(&mut self, lane: usize, prompt: &[usize]) -> Result<Vec<f32>>;
+    /// Advance an in-flight prefill on `lane` by up to `budget` prompt
+    /// positions (`0` = unbounded), given that `done` positions are
+    /// already resident (`done == 0` claims the lane). Returns the new
+    /// resident count — which may exceed `done + budget` when the
+    /// backend serves a prefix from cache — and, once the whole prompt
+    /// is resident, the final position's logits row. An `Err` leaves the
+    /// lane unclaimed (the backend cleans up its partial state).
+    ///
+    /// The default is the correct monolithic fallback for backends
+    /// without incremental prefill (e.g. artifact-driven `PjrtBackend`,
+    /// whose prefill executable consumes the whole prompt in one call):
+    /// the first chunk runs the entire prompt regardless of budget.
+    fn prefill_chunk(
+        &mut self,
+        lane: usize,
+        prompt: &[usize],
+        done: usize,
+        _budget: usize,
+    ) -> Result<(usize, Option<Vec<f32>>)> {
+        debug_assert_eq!(done, 0, "monolithic fallback cannot resume mid-prefill");
+        let logits = self.prefill(lane, prompt)?;
+        Ok((prompt.len(), Some(logits)))
+    }
     /// Advance the given lanes one token; returns one [`StepResult`] per
     /// input, in input order. `Err` means the engine state is unknown
     /// (every in-flight session fails); a per-lane [`StepResult::Fault`]
@@ -439,37 +462,85 @@ impl DecodeBackend for NativeBackend {
     }
 
     fn prefill(&mut self, lane: usize, prompt: &[usize]) -> Result<Vec<f32>> {
+        // One unbounded chunk: the monolithic path and the chunked path
+        // are the *same* token loop, so `--prefill-chunk` can never
+        // change a logit (the bitwise contract kv_differential pins).
+        let (_, logits) = self.prefill_chunk(lane, prompt, 0, 0)?;
+        logits.context("unbudgeted prefill chunk must complete the prompt")
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        lane: usize,
+        prompt: &[usize],
+        done: usize,
+        budget: usize,
+    ) -> Result<(usize, Option<Vec<f32>>)> {
         if lane >= self.lane_count() {
             bail!("lane {lane} out of range ({} lanes)", self.lane_count());
         }
         if prompt.is_empty() || prompt.len() > self.max_prompt() {
             bail!("prompt length {} not in 1..={}", prompt.len(), self.max_prompt());
         }
+        if done >= prompt.len() {
+            bail!("prefill chunk past the prompt end ({done} >= {})", prompt.len());
+        }
         let max_seq = self.model.cfg.max_seq;
         let model = &self.model;
         match self.mode {
             GenerationMode::KvCache => match &mut self.kv {
                 NativeKv::Contiguous(caches) => {
-                    let mut cache = KvCache::new(&model.cfg);
-                    let mut logits = None;
-                    for &t in prompt {
-                        logits = Some(model.decode_step(t, &mut cache));
+                    if done == 0 {
+                        caches[lane] = Some(KvCache::new(&model.cfg));
                     }
-                    caches[lane] = Some(cache);
-                    Ok(logits.context("empty prompt")?.row(0).to_vec())
+                    let Some(cache) = caches[lane].as_mut() else {
+                        bail!("lane {lane} has no in-flight prefill to continue");
+                    };
+                    if cache.len != done {
+                        let have = cache.len;
+                        caches[lane] = None;
+                        bail!("lane {lane} prefill cursor mismatch: {have} cached vs {done} fed");
+                    }
+                    let end =
+                        if budget == 0 { prompt.len() } else { (done + budget).min(prompt.len()) };
+                    let mut logits = None;
+                    for &t in &prompt[done..end] {
+                        logits = Some(model.decode_step(t, cache));
+                    }
+                    if end == prompt.len() {
+                        let l = logits.expect("chunk is non-empty").row(0).to_vec();
+                        Ok((end, Some(l)))
+                    } else {
+                        Ok((end, None))
+                    }
                 }
                 NativeKv::Paged { pool: blkpool, seqs, .. } => {
-                    // Defensive: a stale table on this lane is released
-                    // before the new session claims it.
-                    if let Some(old) = seqs[lane].take() {
-                        blkpool.release(old);
+                    if done == 0 {
+                        // Defensive: a stale table on this lane is released
+                        // before the new session claims it.
+                        if let Some(old) = seqs[lane].take() {
+                            blkpool.release(old);
+                        }
+                        // Attach the longest resident shared prefix; only
+                        // the tail (always including the final position,
+                        // whose logits we need) is recomputed. The jump
+                        // is free, so it does not count against `budget`.
+                        let (seq, _reused) = blkpool.begin(prompt);
+                        seqs[lane] = Some(seq);
                     }
-                    // Attach the longest resident shared prefix; only the
-                    // tail (always including the final position, whose
-                    // logits we need) is recomputed.
-                    let (mut seq, reused) = blkpool.begin(prompt);
+                    let Some(start) = seqs[lane].as_ref().map(|s| s.len()) else {
+                        bail!("lane {lane} has no in-flight prefill to continue");
+                    };
+                    if done > 0 && start != done {
+                        let seq = seqs[lane].take().expect("length just read");
+                        blkpool.release(seq);
+                        bail!("lane {lane} prefill cursor mismatch: {start} resident vs {done} fed");
+                    }
+                    let end =
+                        if budget == 0 { prompt.len() } else { (start + budget).min(prompt.len()) };
+                    let mut seq = seqs[lane].take().expect("length just read");
                     let mut logits: Option<Mat<f32>> = None;
-                    for &t in &prompt[reused..] {
+                    for &t in &prompt[start..end] {
                         let mut store =
                             PagedSeq { pool: &mut *blkpool, seq: &mut seq, cap: max_seq };
                         match model.decode_step_kv(t, &mut store) {
@@ -481,12 +552,26 @@ impl DecodeBackend for NativeBackend {
                         }
                     }
                     seqs[lane] = Some(seq);
-                    Ok(logits.expect("prefix match leaves at least one position").row(0).to_vec())
+                    if end == prompt.len() {
+                        // Prefix reuse is capped at len − 1, so the final
+                        // position was recomputed in some chunk's loop —
+                        // this one, because earlier chunks end before it.
+                        let l = logits
+                            .expect("final position recomputed")
+                            .row(0)
+                            .to_vec();
+                        Ok((end, Some(l)))
+                    } else {
+                        Ok((end, None))
+                    }
                 }
             },
             GenerationMode::NoKvCache => {
+                // No cache to grow incrementally: one full forward serves
+                // the whole prompt regardless of budget (a single maximal
+                // chunk; re-prefill mode recomputes it every step anyway).
                 let logits = model.forward(prompt, None);
-                Ok(logits.row(prompt.len() - 1).to_vec())
+                Ok((prompt.len(), Some(logits.row(prompt.len() - 1).to_vec())))
             }
         }
     }
@@ -982,6 +1067,70 @@ mod tests {
         let want = model.generate(&prompt, 6);
         let mut be = NativeBackend::contiguous(model, GenerationMode::KvCache, 2);
         assert_eq!(backend_greedy(&mut be, 1, &prompt, 6), want);
+    }
+
+    /// Chunked prefill is the monolithic token loop split across calls:
+    /// for every budget (including 1 and past-the-prompt), the final
+    /// logits row and the subsequent greedy decode stream must be
+    /// bitwise-identical to the one-shot `prefill`, in both KV layouts.
+    #[test]
+    fn prefill_chunk_matches_monolithic_bitwise() {
+        let model = micro_model(423, 64);
+        let prompt = vec![3usize, 9, 1, 4, 7, 2, 5];
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        for contiguous in [false, true] {
+            let make = |m: &Transformer| {
+                if contiguous {
+                    NativeBackend::contiguous(m.clone(), GenerationMode::KvCache, 2)
+                } else {
+                    NativeBackend::new(m.clone(), GenerationMode::KvCache, 2)
+                }
+            };
+            let mut mono = make(&model);
+            let want_logits = mono.prefill(0, &prompt).unwrap();
+            mono.release(0);
+            let want_gen = backend_greedy(&mut mono, 0, &prompt, 5);
+            for budget in [1usize, 3, prompt.len(), prompt.len() + 9] {
+                let mut be = make(&model);
+                let mut done = 0usize;
+                let mut chunks = 0usize;
+                let logits = loop {
+                    let (d, l) = be.prefill_chunk(0, &prompt, done, budget).unwrap();
+                    assert!(d > done, "every chunk must make progress");
+                    done = d;
+                    chunks += 1;
+                    if let Some(l) = l {
+                        assert_eq!(done, prompt.len(), "logits only with the prompt resident");
+                        break l;
+                    }
+                };
+                assert_eq!(
+                    chunks,
+                    (prompt.len() + budget - 1) / budget,
+                    "budget {budget} must take exactly ceil(len/budget) chunks on a cold pool"
+                );
+                assert_eq!(bits(&logits), bits(&want_logits), "budget {budget}");
+                // The chunk-built KV state decodes identically too.
+                let mut seq = prompt.clone();
+                seq.push(argmax(&logits));
+                while seq.len() - prompt.len() < want_gen.len() {
+                    let last = *seq.last().unwrap();
+                    let rows =
+                        be.step(&[StepInput { lane: 0, token: last, seq: &seq }]).unwrap();
+                    seq.push(argmax(logits_of(&rows, 0)));
+                }
+                be.release(0);
+                assert_eq!(&seq[prompt.len()..], &want_gen[..], "budget {budget}");
+            }
+        }
+        // Paged prefix reuse composes with chunking: a warm pool lets the
+        // first chunk jump to len − 1 resident positions, so even budget
+        // 1 completes a fully-cached prompt in one call.
+        let mut be = NativeBackend::new(model.clone(), GenerationMode::KvCache, 2);
+        let want_logits = be.prefill(0, &prompt).unwrap();
+        let (done, l) = be.prefill_chunk(1, &prompt, 0, 1).unwrap();
+        assert_eq!(done, prompt.len(), "cached prefix + 1-token budget covers the prompt");
+        assert_eq!(bits(&l.expect("prompt resident")), bits(&want_logits));
     }
 
     /// Drive one lane through speculative verify spans (alternating

@@ -264,6 +264,12 @@ pub struct ServeMetrics {
     /// Shared decode iterations (one per scheduler step over all lanes).
     pub batches: usize,
     pub prefills: usize,
+    /// Prefill chunks fed (== `prefills` on the monolithic path; larger
+    /// when `--prefill-chunk` splits prompts across iterations).
+    pub prefill_chunks: usize,
+    /// Engine time spent prefilling while at least one other lane was
+    /// actively decoding — the interference the chunk budget bounds.
+    pub prefill_stall_secs: f64,
     /// Highest number of simultaneously active lanes observed.
     pub peak_active: usize,
     /// Paged-KV pool size in blocks (0 when the backend has no pool).
@@ -298,6 +304,12 @@ pub struct ServeMetrics {
     latencies_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
     itl_ms: Vec<f64>,
+    /// Arrival -> the session's *own* prefill start. TTFT splits into
+    /// `queue_wait + prefill` per session: a wave-mate's prefill counts
+    /// as queue wait here, never as this session's prefill time.
+    queue_wait_ms: Vec<f64>,
+    /// Per-session backend prefill time (all chunks summed).
+    prefill_ms: Vec<f64>,
     queue_depth: Vec<f64>,
     lane_occupancy: Vec<f64>,
     /// Per-iteration fraction of pool blocks holding live session data.
@@ -337,10 +349,31 @@ impl ServeMetrics {
         self.latencies_ms.push(stats.latency.as_secs_f64() * 1000.0);
     }
 
-    /// One prefill ran for `exec` engine time.
+    /// A session's queue wait ended: its own prefill is starting.
+    /// Latency attribution, not engine time — see `queue_wait_ms`.
+    pub fn record_queue_wait(&mut self, wait: Duration) {
+        self.queue_wait_ms.push(wait.as_secs_f64() * 1000.0);
+    }
+
+    /// One prefill chunk ran for `exec` engine time while `decoding`
+    /// other lanes were mid-decode (stall attribution: their next token
+    /// waited behind this chunk). Engine wall time accrues here, per
+    /// chunk — [`ServeMetrics::record_prefill`] only closes out the
+    /// per-session attribution.
+    pub fn record_prefill_chunk(&mut self, exec: Duration, decoding: usize) {
+        self.prefill_chunks += 1;
+        self.total_exec_secs += exec.as_secs_f64();
+        if decoding > 0 {
+            self.prefill_stall_secs += exec.as_secs_f64();
+        }
+    }
+
+    /// A session's prefill completed after `exec` total backend time
+    /// (all chunks summed; chunk wall time is already in
+    /// `total_exec_secs` via [`ServeMetrics::record_prefill_chunk`]).
     pub fn record_prefill(&mut self, exec: Duration) {
         self.prefills += 1;
-        self.total_exec_secs += exec.as_secs_f64();
+        self.prefill_ms.push(exec.as_secs_f64() * 1000.0);
     }
 
     /// One shared decode iteration over `active` of `lanes` lanes, with
@@ -409,6 +442,8 @@ impl ServeMetrics {
         self.latencies_ms.sort_by(cmp);
         self.ttft_ms.sort_by(cmp);
         self.itl_ms.sort_by(cmp);
+        self.queue_wait_ms.sort_by(cmp);
+        self.prefill_ms.sort_by(cmp);
         self.queue_depth.sort_by(cmp);
         self.lane_occupancy.sort_by(cmp);
         self.kv_util.sort_by(cmp);
@@ -447,6 +482,16 @@ impl ServeMetrics {
     /// Inter-token latency percentile (ms).
     pub fn itl_percentile_ms(&self, p: f64) -> f64 {
         self.pct(&self.itl_ms, p)
+    }
+
+    /// Queue-wait percentile (ms): arrival -> own prefill start.
+    pub fn queue_wait_percentile_ms(&self, p: f64) -> f64 {
+        self.pct(&self.queue_wait_ms, p)
+    }
+
+    /// Per-session prefill-time percentile (ms, all chunks summed).
+    pub fn prefill_percentile_ms(&self, p: f64) -> f64 {
+        self.pct(&self.prefill_ms, p)
     }
 
     /// Queue depth percentile (requests waiting, sampled per iteration).
@@ -491,6 +536,8 @@ impl ServeMetrics {
             ("errors", self.errors as f64),
             ("tokens_generated", self.tokens_generated as f64),
             ("prefills", self.prefills as f64),
+            ("prefill_chunks", self.prefill_chunks as f64),
+            ("prefill_stall_ms", self.prefill_stall_secs * 1000.0),
             ("batches", self.batches as f64),
             ("peak_active", self.peak_active as f64),
             ("throughput_tps", self.throughput()),
@@ -498,6 +545,10 @@ impl ServeMetrics {
             ("latency_p95_ms", self.latency_percentile_ms(0.95)),
             ("ttft_p50_ms", self.ttft_percentile_ms(0.5)),
             ("ttft_p95_ms", self.ttft_percentile_ms(0.95)),
+            ("queue_wait_p50_ms", self.queue_wait_percentile_ms(0.5)),
+            ("queue_wait_p95_ms", self.queue_wait_percentile_ms(0.95)),
+            ("prefill_p50_ms", self.prefill_percentile_ms(0.5)),
+            ("prefill_p95_ms", self.prefill_percentile_ms(0.95)),
             ("itl_p50_ms", self.itl_percentile_ms(0.5)),
             ("itl_p95_ms", self.itl_percentile_ms(0.95)),
             ("queue_depth_p50", self.queue_depth_percentile(0.5)),
@@ -560,6 +611,11 @@ mod tests {
             m.record_token(Duration::from_millis(4));
             m.record_done(&s);
         }
+        // Engine wall time accrues per chunk; `record_prefill` closes
+        // out the per-session attribution sample.
+        m.record_queue_wait(Duration::from_millis(5));
+        m.record_prefill_chunk(Duration::from_secs_f64(0.06), 0);
+        m.record_prefill_chunk(Duration::from_secs_f64(0.04), 2);
         m.record_prefill(Duration::from_secs_f64(0.1));
         m.record_iteration(Duration::from_secs_f64(0.4), 2, 4, 1);
         m.finalize();
@@ -567,6 +623,14 @@ mod tests {
         assert_eq!(m.completed, 4);
         assert_eq!(m.tokens_generated, 12);
         assert!((m.throughput() - 24.0).abs() < 1e-9);
+        assert_eq!(m.prefills, 1);
+        assert_eq!(m.prefill_chunks, 2);
+        assert!(
+            (m.prefill_stall_secs - 0.04).abs() < 1e-12,
+            "only the chunk fed while lanes decoded counts as stall"
+        );
+        assert!((m.prefill_percentile_ms(0.5) - 100.0).abs() < 1e-9);
+        assert!((m.queue_wait_percentile_ms(1.0) - 5.0).abs() < 1e-9);
         assert!((m.latency_percentile_ms(0.0) - 10.0).abs() < 1e-9);
         assert!((m.latency_percentile_ms(1.0) - 40.0).abs() < 1e-9);
         assert!((m.itl_percentile_ms(1.0) - 4.0).abs() < 1e-9);
@@ -676,6 +740,12 @@ mod tests {
             "latency_p50_ms",
             "ttft_p50_ms",
             "ttft_p95_ms",
+            "queue_wait_p50_ms",
+            "queue_wait_p95_ms",
+            "prefill_p50_ms",
+            "prefill_p95_ms",
+            "prefill_chunks",
+            "prefill_stall_ms",
             "itl_p50_ms",
             "queue_depth_p95",
             "occupancy_p50",

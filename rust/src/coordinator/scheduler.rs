@@ -2,11 +2,16 @@
 //! [`crate::coordinator::Server`] (DESIGN.md §6).
 //!
 //! Requests are admitted from a bounded queue into per-lane
-//! [`GenSession`] slots. New sessions are prefilled individually; then
-//! every loop iteration advances *all* active lanes by one decode step,
-//! so requests with different prompt lengths and `max_new` share decode
-//! batches, and finished/cancelled sessions free their lane for the next
-//! queued request immediately — no whole-generation batching.
+//! [`GenSession`] slots. Admission reserves a lane in the `Prefilling`
+//! state; the prompt is then fed to the backend in fixed-token chunks
+//! (`prefill_chunk`, `0` = one monolithic call at admission), at most
+//! one in-flight prefill advancing per iteration *after* the shared
+//! decode step — decode priority, so one long prompt cannot stall every
+//! active lane's inter-token latency. Every loop iteration advances
+//! *all* active lanes by one decode step, so requests with different
+//! prompt lengths and `max_new` share decode batches, and
+//! finished/cancelled sessions free their lane for the next queued
+//! request immediately — no whole-generation batching.
 //!
 //! Admission policy (the dispatch-loop fix): a *partial* wave on an idle
 //! scheduler waits up to `max_wait` for more arrivals to coalesce; a
@@ -38,11 +43,23 @@ pub struct SchedulerConfig {
     /// Admission-queue bound; a full queue rejects with
     /// [`ServeError::Overloaded`] instead of growing without bound.
     pub queue_cap: usize,
+    /// Per-iteration prefill token budget (`pifa serve
+    /// --prefill-chunk`): each scheduler iteration runs the shared
+    /// decode step first, then advances at most one in-flight prefill
+    /// by up to this many prompt positions. `0` disables chunking —
+    /// prompts prefill in one monolithic backend call at admission,
+    /// stalling every active lane for the whole prompt.
+    pub prefill_chunk: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { max_batch: 8, max_wait: Duration::from_millis(5), queue_cap: 64 }
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 64,
+            prefill_chunk: 512,
+        }
     }
 }
 
@@ -63,6 +80,29 @@ struct SpecState {
     accepted: usize,
 }
 
+/// Chunked-prefill cursor: the `Prefilling` session lifecycle state
+/// between queued and active (DESIGN.md §6). While `Some`, the lane is
+/// reserved but the prompt is not yet fully resident, so the session
+/// takes no part in decode waves; [`Scheduler::advance_prefill`] feeds
+/// it one budgeted chunk per iteration.
+struct PrefillState {
+    /// Prompt positions already resident in the backend.
+    done: usize,
+    /// Positions to make resident: the full prompt for a fresh
+    /// admission, `seq.len() - 1` for a fallback-resume rebuild.
+    target: usize,
+    /// Chunks fed so far. `0` means the backend was never touched —
+    /// the lane owes no `release`/`spill` (see
+    /// [`GenSession::backend_touched`]).
+    chunks: usize,
+    /// Accumulated backend time across chunks (prefill attribution).
+    exec: Duration,
+    /// `true` when this prefill rebuilds a preempted session's KV: the
+    /// final token was already sampled before the spill, so the
+    /// completion logits are discarded instead of sampling again.
+    rebuild: bool,
+}
+
 /// One in-flight generation bound to a backend lane.
 pub struct GenSession {
     pub id: u64,
@@ -81,11 +121,24 @@ pub struct GenSession {
     /// Speculative-decoding state; `None` for plain sessions (and for
     /// speculative ones that have fallen back).
     spec: Option<SpecState>,
+    /// `Some` while the session is in the `Prefilling` state.
+    prefill: Option<PrefillState>,
 }
 
 impl GenSession {
     fn generated_count(&self) -> usize {
         self.seq.len() - self.prompt_len
+    }
+
+    /// Does the backend hold lane state for this session? `false` only
+    /// for a reserved lane whose chunked prefill never fed a token —
+    /// releasing or spilling such a lane would unbalance backends that
+    /// track claim/release pairing.
+    fn backend_touched(&self) -> bool {
+        match self.prefill.as_ref() {
+            Some(p) => p.chunks > 0,
+            None => true,
+        }
     }
 
     fn generated(&self) -> &[usize] {
@@ -282,7 +335,9 @@ impl Scheduler {
         for lane in 0..self.lanes.len() {
             if self.lanes[lane].as_ref().is_some_and(|s| s.id == id) {
                 let sess = self.lanes[lane].take().expect("checked above");
-                backend.release(lane);
+                if sess.backend_touched() {
+                    backend.release(lane);
+                }
                 self.release_draft(lane);
                 metrics.cancelled += 1;
                 let _ = sess.events.send(Event::Error(ServeError::Cancelled));
@@ -328,7 +383,9 @@ impl Scheduler {
                 .is_some_and(|s| s.deadline.is_some_and(|d| now >= d));
             if expired {
                 let sess = self.lanes[lane].take().expect("checked above");
-                backend.release(lane);
+                if sess.backend_touched() {
+                    backend.release(lane);
+                }
                 self.release_draft(lane);
                 metrics.timeouts += 1;
                 let _ = sess.events.send(Event::Error(ServeError::Timeout));
@@ -472,12 +529,20 @@ impl Scheduler {
             return false;
         }
         let sess = self.lanes[lane].take().expect("victim is active");
-        let ticket = backend.spill(lane);
-        if ticket.is_none() {
-            // Backend can't export KV: drop the lane state; resume will
-            // re-prefill the sequence instead of re-importing it.
-            backend.release(lane);
-        }
+        let ticket = if sess.backend_touched() {
+            let t = backend.spill(lane);
+            if t.is_none() {
+                // Backend can't export KV: drop the lane state; resume
+                // will re-prefill the sequence instead of re-importing
+                // it.
+                backend.release(lane);
+            }
+            t
+        } else {
+            // Reserved lane whose chunked prefill never fed a token:
+            // the backend holds nothing to spill or release.
+            None
+        };
         // The draft mirror is never spilled — a resumed session re-drafts
         // from the target's committed prefix (self-healing owner check).
         self.release_draft(lane);
@@ -530,12 +595,17 @@ impl Scheduler {
                     }
                 },
                 None => {
-                    // No arena copy: recompute the KV by re-prefilling
-                    // everything except the already-sampled final token
-                    // (whose logits are not needed again).
-                    let prefix_len = sess.seq.len() - 1;
+                    // No arena copy: recompute the KV by re-prefilling.
+                    // A victim preempted mid-prefill restarts its prompt
+                    // from scratch (no token was ever sampled); a
+                    // post-first-token session rebuilds everything
+                    // except the already-sampled final token (whose
+                    // logits are not needed again).
+                    let mid_prefill = sess.prefill.is_some();
+                    let target =
+                        if mid_prefill { sess.prompt_len } else { sess.seq.len() - 1 };
                     let remaining = sess.max_new.saturating_sub(sess.generated_count()).max(1);
-                    match backend.admit_check(prefix_len, remaining) {
+                    match backend.admit_check(target, remaining) {
                         AdmitVerdict::Defer => {
                             self.spilled.push(SpilledSession { sess, ticket: None });
                             return;
@@ -546,8 +616,28 @@ impl Scheduler {
                                 "spilled session no longer fits: {reason}"
                             ))));
                         }
+                        AdmitVerdict::Admit if self.cfg.prefill_chunk > 0 => {
+                            // Chunked rebuild: reserve the lane; the
+                            // per-iteration budget feeds it behind the
+                            // decode waves like a fresh admission.
+                            let exec = sess
+                                .prefill
+                                .as_ref()
+                                .map(|p| p.exec)
+                                .unwrap_or_default();
+                            sess.prefill = Some(PrefillState {
+                                done: 0,
+                                target,
+                                chunks: 0,
+                                exec,
+                                rebuild: !mid_prefill,
+                            });
+                            sess.lane = lane;
+                            self.lanes[lane] = Some(sess);
+                            metrics.resumes += 1;
+                        }
                         AdmitVerdict::Admit => {
-                            match backend.prefill(lane, &sess.seq[..prefix_len]) {
+                            match backend.prefill(lane, &sess.seq[..target]) {
                                 Ok(_logits) => {
                                     sess.lane = lane;
                                     self.lanes[lane] = Some(sess);
@@ -577,6 +667,18 @@ impl Scheduler {
     ) {
         let Queued { req, events } = q;
         let arrived = req.arrived.unwrap_or_else(|| self.clock.now());
+        // Deadline check at admission, against a *fresh* clock read: a
+        // request whose budget elapsed while it sat in the queue — or
+        // while earlier sessions in this same wave prefilled — must not
+        // burn a backend prefill only for `sweep_deadlines` to discard
+        // it afterwards.
+        if let Some(d) = req.deadline {
+            if self.clock.now().duration_since(arrived) >= d {
+                metrics.timeouts += 1;
+                let _ = events.send(Event::Error(ServeError::Timeout));
+                return;
+            }
+        }
         if req.max_new == 0 {
             // Nothing requested: complete with zero tokens (matching the
             // pre-session API) instead of emitting an unasked-for token.
@@ -604,38 +706,64 @@ impl Scheduler {
             ))));
             return;
         }
+        let rng = Rng::new(req.sampling.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let prompt_len = req.prompt.len();
+        // Speculative eligibility: a draft engine is installed, the
+        // backend can verify/rollback, and sampling is greedy —
+        // acceptance is defined against argmax picks, and greedy `pick`
+        // never consumes the rng, so scoring extra verify rows cannot
+        // perturb the token stream.
+        let spec = (self.draft.is_some()
+            && backend.supports_speculation()
+            && req.sampling.temperature <= 0.0)
+            .then(SpecState::default);
         let t0 = self.clock.now();
-        match backend.prefill(lane, &req.prompt) {
+        let mut sess = GenSession {
+            id: req.id,
+            lane,
+            prompt_len,
+            seq: req.prompt,
+            max_new: req.max_new,
+            sampling: req.sampling,
+            arrived,
+            deadline: req.deadline.map(|d| arrived + d),
+            first_token_at: None,
+            last_token_at: t0,
+            rng,
+            events,
+            spec,
+            prefill: None,
+        };
+        if self.cfg.prefill_chunk > 0 {
+            // Chunked admission only reserves the lane: the session
+            // enters the `Prefilling` state with no backend call, and
+            // `advance_prefill` feeds it one budgeted chunk per
+            // iteration behind the shared decode step.
+            sess.prefill = Some(PrefillState {
+                done: 0,
+                target: prompt_len,
+                chunks: 0,
+                exec: Duration::ZERO,
+                rebuild: false,
+            });
+            self.lanes[lane] = Some(sess);
+            return;
+        }
+        // Monolithic path (`--prefill-chunk 0`): waiting ends the moment
+        // this session's *own* prefill starts — queue-vs-prefill
+        // attribution, so a wave-mate's prefill shows up as queue wait,
+        // not as this session's prefill time.
+        metrics.record_queue_wait(t0.duration_since(arrived));
+        match backend.prefill(lane, &sess.seq) {
             Ok(logits) => {
-                metrics.record_prefill(self.clock.now().duration_since(t0));
-                let mut rng =
-                    Rng::new(req.sampling.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
-                let first = req.sampling.pick(&logits, &mut rng);
-                let prompt_len = req.prompt.len();
-                // Speculative eligibility: a draft engine is installed,
-                // the backend can verify/rollback, and sampling is
-                // greedy — acceptance is defined against argmax picks,
-                // and greedy `pick` never consumes the rng, so scoring
-                // extra verify rows cannot perturb the token stream.
-                let spec = (self.draft.is_some()
-                    && backend.supports_speculation()
-                    && req.sampling.temperature <= 0.0)
-                    .then(SpecState::default);
-                let mut sess = GenSession {
-                    id: req.id,
-                    lane,
-                    prompt_len,
-                    seq: req.prompt,
-                    max_new: req.max_new,
-                    sampling: req.sampling,
-                    arrived,
-                    deadline: req.deadline.map(|d| arrived + d),
-                    first_token_at: None,
-                    last_token_at: t0,
-                    rng,
-                    events,
-                    spec,
-                };
+                let exec = self.clock.now().duration_since(t0);
+                // A monolithic prefill stalls every already-active lane
+                // for its whole duration — the interference chunking
+                // bounds.
+                let decoding = self.lanes.iter().flatten().count();
+                metrics.record_prefill_chunk(exec, decoding);
+                metrics.record_prefill(exec);
+                let first = sess.sampling.pick(&logits, &mut sess.rng);
                 let now = self.clock.now();
                 if !sess.emit(first, now, metrics) {
                     // Client hung up before the first token: implicit cancel.
@@ -652,7 +780,8 @@ impl Scheduler {
             Err(e) => {
                 metrics.errors += 1;
                 backend.release(lane);
-                let _ = events
+                let _ = sess
+                    .events
                     .send(Event::Error(ServeError::engine(format!("prefill failed: {e:#}"))));
             }
         }
@@ -661,8 +790,11 @@ impl Scheduler {
     /// One shared decode iteration: advance every active lane. Plain
     /// lanes batch through a single `backend.step`; speculative lanes
     /// each run one draft/verify/rollback round
-    /// ([`Self::spec_step_lane`]) and may land several tokens. A backend
-    /// `Err` fails *all* in-flight sessions with
+    /// ([`Self::spec_step_lane`]) and may land several tokens; lanes
+    /// still in the `Prefilling` state sit the wave out, then at most
+    /// one of them advances by the chunk budget
+    /// ([`Self::advance_prefill`]) — decode first, prefill second. A
+    /// backend `Err` fails *all* in-flight sessions with
     /// [`ServeError::EngineFailure`] (engine state is unknown) — clients
     /// are told, never silently dropped.
     pub fn step(&mut self, backend: &mut dyn DecodeBackend, metrics: &mut ServeMetrics) {
@@ -672,6 +804,7 @@ impl Scheduler {
         for l in 0..self.lanes.len() {
             match self.lanes[l].as_ref() {
                 None => {}
+                Some(s) if s.prefill.is_some() => {} // Prefilling: not decodable yet
                 Some(s) if self.spec_k(s, max_seq) > 0 => spec.push(l),
                 Some(_) => plain.push(l),
             }
@@ -682,6 +815,7 @@ impl Scheduler {
         for &lane in &spec {
             self.spec_step_lane(lane, backend, metrics);
         }
+        self.advance_prefill(backend, metrics);
     }
 
     /// How many tokens a session may draft this iteration: the
@@ -961,6 +1095,135 @@ impl Scheduler {
         }
     }
 
+    /// Advance at most one in-flight prefill by the per-iteration chunk
+    /// budget. Runs *after* the shared decode step (decode priority):
+    /// active lanes pay at most one chunk of prefill interference per
+    /// token instead of a whole long prompt. Earliest arrival goes
+    /// first, so admission stays FIFO across prefilling lanes. The
+    /// deadline is re-checked between chunks with a fresh clock read —
+    /// a session whose budget expires mid-prefill times out without
+    /// burning another chunk of backend work.
+    fn advance_prefill(&mut self, backend: &mut dyn DecodeBackend, metrics: &mut ServeMetrics) {
+        let budget = self.cfg.prefill_chunk;
+        if budget == 0 {
+            return;
+        }
+        let Some(lane) = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(l, s)| {
+                s.as_ref().filter(|s| s.prefill.is_some()).map(|s| (l, s.arrived))
+            })
+            .min_by_key(|&(_, arrived)| arrived)
+            .map(|(l, _)| l)
+        else {
+            return;
+        };
+        let now = self.clock.now();
+        if self.lanes[lane]
+            .as_ref()
+            .expect("selected above")
+            .deadline
+            .is_some_and(|d| now >= d)
+        {
+            let sess = self.lanes[lane].take().expect("selected above");
+            if sess.backend_touched() {
+                backend.release(lane);
+            }
+            self.release_draft(lane);
+            metrics.timeouts += 1;
+            let _ = sess.events.send(Event::Error(ServeError::Timeout));
+            return;
+        }
+        let (done, target, first_chunk) = {
+            let sess = self.lanes[lane].as_ref().expect("selected above");
+            let p = sess.prefill.as_ref().expect("prefilling lane");
+            (p.done, p.target, p.chunks == 0)
+        };
+        if first_chunk {
+            // Queue-vs-prefill attribution: waiting ends the moment this
+            // session's own prefill starts, so a wave-mate's prefill (or
+            // chunked decode interleaving) counts as queue wait, not as
+            // this session's prefill time.
+            let arrived = self.lanes[lane].as_ref().expect("selected above").arrived;
+            metrics.record_queue_wait(now.duration_since(arrived));
+        }
+        let t0 = self.clock.now();
+        let result = {
+            let sess = self.lanes[lane].as_ref().expect("selected above");
+            backend.prefill_chunk(lane, &sess.seq[..target], done, budget)
+        };
+        let elapsed = self.clock.now().duration_since(t0);
+        // Chunk accounting: lanes mid-decode while this chunk ran are
+        // the stall victims the chunk budget bounds.
+        let decoding =
+            self.lanes.iter().flatten().filter(|s| s.prefill.is_none()).count();
+        metrics.record_prefill_chunk(elapsed, decoding);
+        match result {
+            Ok((new_done, logits)) => {
+                let now = self.clock.now();
+                let complete = {
+                    let sess = self.lanes[lane].as_mut().expect("selected above");
+                    let p = sess.prefill.as_mut().expect("prefilling lane");
+                    p.done = new_done;
+                    p.chunks += 1;
+                    p.exec += elapsed;
+                    new_done >= p.target
+                };
+                if !complete {
+                    return;
+                }
+                let (exec, rebuild) = {
+                    let sess = self.lanes[lane].as_mut().expect("selected above");
+                    let p = sess.prefill.take().expect("prefilling lane");
+                    (p.exec, p.rebuild)
+                };
+                metrics.record_prefill(exec);
+                if rebuild {
+                    // Fallback-resume rebuild: the final token was
+                    // sampled before the spill and the next decode wave
+                    // feeds it — the recomputed logits are not needed.
+                    return;
+                }
+                let logits = logits.expect("completed prefill returns final logits");
+                let delivered = {
+                    let sess = self.lanes[lane].as_mut().expect("selected above");
+                    let first = sess.sampling.pick(&logits, &mut sess.rng);
+                    sess.emit(first, now, metrics)
+                };
+                if !delivered {
+                    // Client hung up before the first token: implicit cancel.
+                    self.lanes[lane] = None;
+                    backend.release(lane);
+                    self.release_draft(lane);
+                    metrics.cancelled += 1;
+                    return;
+                }
+                let reason = self.lanes[lane]
+                    .as_ref()
+                    .expect("selected above")
+                    .finish_reason(backend.max_seq());
+                if let Some(reason) = reason {
+                    let sess = self.lanes[lane].take().expect("selected above");
+                    self.release_draft(lane);
+                    finish_session(sess, reason, now, backend, metrics);
+                }
+            }
+            Err(e) => {
+                // `prefill_chunk` leaves the lane unclaimed on `Err`
+                // (the backend drops its own partial state), so no
+                // release here.
+                let sess = self.lanes[lane].take().expect("selected above");
+                self.release_draft(lane);
+                metrics.errors += 1;
+                let _ = sess
+                    .events
+                    .send(Event::Error(ServeError::engine(format!("prefill failed: {e:#}"))));
+            }
+        }
+    }
+
     fn fail_active(
         &mut self,
         active: &[usize],
@@ -970,7 +1233,22 @@ impl Scheduler {
     ) {
         for &lane in active {
             if let Some(sess) = self.lanes[lane].take() {
-                backend.release(lane);
+                if sess.backend_touched() {
+                    backend.release(lane);
+                }
+                self.release_draft(lane);
+                metrics.errors += 1;
+                let _ = sess.events.send(Event::Error(ServeError::engine(msg.clone())));
+            }
+        }
+        // Prefilling lanes never join a decode wave's lane list, but an
+        // engine-wide failure dooms them just the same.
+        for lane in 0..self.lanes.len() {
+            if self.lanes[lane].as_ref().is_some_and(|s| s.prefill.is_some()) {
+                let sess = self.lanes[lane].take().expect("checked above");
+                if sess.backend_touched() {
+                    backend.release(lane);
+                }
                 self.release_draft(lane);
                 metrics.errors += 1;
                 let _ = sess.events.send(Event::Error(ServeError::engine(msg.clone())));
@@ -1000,6 +1278,8 @@ mod tests {
         max_seq: usize,
         vocab: usize,
         prefills: Vec<(usize, Vec<usize>)>,
+        /// Every `prefill_chunk` call as `(lane, done, new_done)`.
+        chunk_calls: Vec<(usize, usize, usize)>,
         steps: Vec<Vec<usize>>,
         released: Vec<usize>,
         fail_prefill: bool,
@@ -1008,6 +1288,11 @@ mod tests {
         fault_lane: Option<usize>,
         /// Scripted admission verdict (block-aware gate).
         admit: AdmitVerdict,
+        /// When set, prefill work advances this clock by `token_cost`
+        /// per prompt position — virtual backend time for exact
+        /// queue-vs-prefill attribution tests.
+        clock: Option<Arc<crate::coordinator::clock::ManualClock>>,
+        token_cost: Duration,
     }
 
     impl MockBackend {
@@ -1017,12 +1302,21 @@ mod tests {
                 max_seq: 64,
                 vocab: 8,
                 prefills: Vec::new(),
+                chunk_calls: Vec::new(),
                 steps: Vec::new(),
                 released: Vec::new(),
                 fail_prefill: false,
                 fail_step_after: None,
                 fault_lane: None,
                 admit: AdmitVerdict::Admit,
+                clock: None,
+                token_cost: Duration::ZERO,
+            }
+        }
+
+        fn charge(&self, tokens: usize) {
+            if let Some(c) = &self.clock {
+                c.advance(self.token_cost * tokens as u32);
             }
         }
 
@@ -1050,8 +1344,33 @@ mod tests {
             if self.fail_prefill {
                 bail!("mock prefill failure");
             }
+            self.charge(prompt.len());
             self.prefills.push((lane, prompt.to_vec()));
             Ok(self.logits_for(prompt))
+        }
+
+        fn prefill_chunk(
+            &mut self,
+            lane: usize,
+            prompt: &[usize],
+            done: usize,
+            budget: usize,
+        ) -> anyhow::Result<(usize, Option<Vec<f32>>)> {
+            if self.fail_prefill {
+                bail!("mock prefill failure");
+            }
+            let end =
+                if budget == 0 { prompt.len() } else { (done + budget).min(prompt.len()) };
+            self.charge(end - done);
+            self.chunk_calls.push((lane, done, end));
+            if end == prompt.len() {
+                // A completed chunked prefill counts as one prefill —
+                // same ledger the monolithic path writes.
+                self.prefills.push((lane, prompt.to_vec()));
+                Ok((end, Some(self.logits_for(prompt))))
+            } else {
+                Ok((end, None))
+            }
         }
 
         fn step(&mut self, inputs: &[StepInput<'_>]) -> anyhow::Result<Vec<StepResult>> {
@@ -1103,8 +1422,20 @@ mod tests {
         })
     }
 
+    /// Monolithic-prefill config (`prefill_chunk: 0`): the historical
+    /// synchronous admission semantics most tests in this module pin.
     fn cfg(max_batch: usize, max_wait: Duration, queue_cap: usize) -> SchedulerConfig {
-        SchedulerConfig { max_batch, max_wait, queue_cap }
+        SchedulerConfig { max_batch, max_wait, queue_cap, prefill_chunk: 0 }
+    }
+
+    /// Chunked-prefill config: like [`cfg`] with a per-iteration budget.
+    fn chunked_cfg(max_batch: usize, queue_cap: usize, chunk: usize) -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch,
+            max_wait: Duration::ZERO,
+            queue_cap,
+            prefill_chunk: chunk,
+        }
     }
 
     #[test]
@@ -1503,6 +1834,252 @@ mod tests {
         sched.sweep_deadlines(clock.now(), &mut be, &mut m);
         assert_eq!(m.timeouts, 1, "deadline fires exactly at 50 ms");
         assert!(drain(&rb).iter().any(|e| matches!(e, Event::Error(ServeError::Timeout))));
+    }
+
+    /// The serve default chunks prefill; `0` stays the explicit
+    /// monolithic opt-out.
+    #[test]
+    fn default_config_enables_chunked_prefill() {
+        assert_eq!(SchedulerConfig::default().prefill_chunk, 512);
+    }
+
+    /// Regression (deadline-at-admission): a request whose deadline
+    /// expired in the queue — or while an earlier wave-mate's prefill
+    /// burned the clock — times out *without* paying its own prefill.
+    #[test]
+    fn expired_deadline_skips_prefill_at_admission() {
+        use crate::coordinator::clock::ManualClock;
+        let clock = ManualClock::new();
+        let mut be = MockBackend::new(2);
+        be.clock = Some(Arc::clone(&clock));
+        be.token_cost = Duration::from_millis(1);
+        let mut sched = Scheduler::with_clock(
+            cfg(2, Duration::ZERO, 16),
+            be.lanes(),
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        );
+        let mut m = ServeMetrics::default();
+        // A has no deadline and a 6-token prompt (6 ms of prefill); B's
+        // 4 ms deadline expires *during* A's prefill in the same wave.
+        let (ta, _ra) = mpsc::channel();
+        let (tb, rb) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1; 6], 4), ta, &mut m);
+        sched.submit(
+            GenRequest::new(2, vec![2, 3], 4).with_deadline(Duration::from_millis(4)),
+            tb,
+            &mut m,
+        );
+        sched.admit(clock.now(), &mut be, &mut m);
+        assert_eq!(be.prefills.len(), 1, "B must not burn a prefill after expiring");
+        assert_eq!(m.timeouts, 1);
+        assert_eq!(m.errors, 0);
+        assert!(drain(&rb).iter().any(|e| matches!(e, Event::Error(ServeError::Timeout))));
+        // Queued-expired flavour: a zero deadline is dead on arrival.
+        let (tc, rc) = mpsc::channel();
+        sched.submit(GenRequest::new(3, vec![4], 4).with_deadline(Duration::ZERO), tc, &mut m);
+        sched.admit(clock.now(), &mut be, &mut m);
+        assert_eq!(be.prefills.len(), 1, "expired request admitted to a free lane: no prefill");
+        assert_eq!(m.timeouts, 2);
+        assert!(drain(&rc).iter().any(|e| matches!(e, Event::Error(ServeError::Timeout))));
+    }
+
+    /// The latency-attribution split, pinned exactly under a
+    /// [`ManualClock`]: queue wait ends when a session's *own* prefill
+    /// starts, so a wave-mate's prefill lands in queue wait — and
+    /// `queue_wait + prefill == ttft` per session, identically on the
+    /// monolithic and the chunked path.
+    #[test]
+    fn queue_wait_and_prefill_attribution_is_exact() {
+        use crate::coordinator::clock::ManualClock;
+        for chunked in [false, true] {
+            let clock = ManualClock::new();
+            let mut be = MockBackend::new(2);
+            be.clock = Some(Arc::clone(&clock));
+            be.token_cost = Duration::from_millis(2);
+            let scfg = if chunked { chunked_cfg(2, 16, 64) } else { cfg(2, Duration::ZERO, 16) };
+            let mut sched =
+                Scheduler::with_clock(scfg, be.lanes(), Arc::clone(&clock) as Arc<dyn Clock>);
+            let mut m = ServeMetrics::default();
+            let (ta, _ra) = mpsc::channel();
+            let (tb, _rb) = mpsc::channel();
+            sched.submit(GenRequest::new(1, vec![1, 2, 3], 2), ta, &mut m);
+            sched.submit(GenRequest::new(2, vec![4, 5, 6, 7], 2), tb, &mut m);
+            clock.advance(Duration::from_millis(5));
+            sched.admit(clock.now(), &mut be, &mut m);
+            if chunked {
+                // One prefill advances per iteration; A completes in the
+                // first, B (whose wait now includes A's prefill) in the
+                // second.
+                sched.step(&mut be, &mut m);
+                sched.step(&mut be, &mut m);
+            }
+            // A: 5 ms queued + 6 ms prefill → TTFT 11 ms.
+            // B: (5 + 6) ms queued + 8 ms prefill → TTFT 19 ms.
+            let probe = |v: &dyn Fn(f64) -> f64| (v(0.0), v(1.0));
+            let (qw_min, qw_max) = probe(&|p| m.queue_wait_percentile_ms(p));
+            let (pf_min, pf_max) = probe(&|p| m.prefill_percentile_ms(p));
+            let (tt_min, tt_max) = probe(&|p| m.ttft_percentile_ms(p));
+            assert!((qw_min - 5.0).abs() < 1e-9, "A queue wait (chunked={chunked}): {qw_min}");
+            assert!((qw_max - 11.0).abs() < 1e-9, "B queue wait absorbs A's prefill: {qw_max}");
+            assert!((pf_min - 6.0).abs() < 1e-9, "A prefill exec: {pf_min}");
+            assert!((pf_max - 8.0).abs() < 1e-9, "B prefill exec is its own: {pf_max}");
+            assert!((tt_min - 11.0).abs() < 1e-9, "A ttft = queue + prefill: {tt_min}");
+            assert!((tt_max - 19.0).abs() < 1e-9, "B ttft = queue + prefill: {tt_max}");
+        }
+    }
+
+    /// The tentpole behaviour: a long prompt prefills in budgeted
+    /// chunks *behind* the decode wave, so an active session keeps
+    /// emitting tokens while the newcomer's prompt loads — and both
+    /// token streams are exactly the monolithic script.
+    #[test]
+    fn chunked_prefill_interleaves_with_decode() {
+        let mut be = MockBackend::new(2);
+        let mut sched = Scheduler::new(chunked_cfg(2, 16, 2), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (ta, ra) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1, 2], 3), ta, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert!(be.prefills.is_empty(), "admission only reserves the lane");
+        sched.step(&mut be, &mut m); // A's 2-token prompt fits one chunk
+        assert_eq!(be.chunk_calls, vec![(0, 0, 2)]);
+        let (tb, rb) = mpsc::channel();
+        sched.submit(GenRequest::new(2, vec![3, 1, 2, 1, 0], 2), tb, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        for _ in 0..4 {
+            sched.step(&mut be, &mut m);
+        }
+        // Decode never paused for B's prompt: A decoded in the same
+        // iterations B's chunks were fed.
+        assert_eq!(be.steps, vec![vec![0], vec![0], vec![1]]);
+        assert_eq!(
+            be.chunk_calls,
+            vec![(0, 0, 2), (1, 0, 2), (1, 2, 4), (1, 4, 5)],
+            "at most one prefill advances per iteration, by one budget chunk"
+        );
+        let sa = done_of(&drain(&ra)).expect("A Done");
+        let sb = done_of(&drain(&rb)).expect("B Done");
+        let script = |prompt: &[usize], n: usize| {
+            let mut seq = prompt.to_vec();
+            for _ in 0..n {
+                let t = be.next_token(&seq);
+                seq.push(t);
+            }
+            seq[prompt.len()..].to_vec()
+        };
+        assert_eq!(sa.tokens, script(&[1, 2], 3), "chunking must not change A's stream");
+        assert_eq!(sb.tokens, script(&[3, 1, 2, 1, 0], 2), "nor B's");
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.prefills, 2);
+        assert_eq!(m.prefill_chunks, 4);
+        assert!(sched.is_idle());
+    }
+
+    /// Cancelling mid-prefill frees exactly what the backend holds: a
+    /// lane with chunks fed is released, a reserved-but-untouched lane
+    /// is not (claim/release stays balanced).
+    #[test]
+    fn cancel_mid_prefill_releases_only_touched_lanes() {
+        let mut be = MockBackend::new(2);
+        let mut sched = Scheduler::new(chunked_cfg(2, 16, 1), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (ta, ra) = mpsc::channel();
+        let (tb, rb) = mpsc::channel();
+        sched.submit(GenRequest::new(1, vec![1, 2, 3, 4], 2), ta, &mut m);
+        sched.submit(GenRequest::new(2, vec![5, 6, 7], 2), tb, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        sched.step(&mut be, &mut m); // A (earliest) gets the only chunk
+        assert_eq!(be.chunk_calls, vec![(0, 0, 1)]);
+        sched.cancel(1, &mut be, &mut m);
+        assert_eq!(be.released, vec![0], "A fed a chunk: its lane must be released");
+        sched.cancel(2, &mut be, &mut m);
+        assert_eq!(be.released, vec![0], "B never touched the backend: no release");
+        assert_eq!(m.cancelled, 2);
+        assert!(drain(&ra).iter().any(|e| matches!(e, Event::Error(ServeError::Cancelled))));
+        assert!(drain(&rb).iter().any(|e| matches!(e, Event::Error(ServeError::Cancelled))));
+        assert!(sched.is_idle());
+    }
+
+    /// A deadline expiring between chunks stops the prefill mid-flight:
+    /// no further chunk is fed after the budget runs out.
+    #[test]
+    fn deadline_mid_prefill_stops_chunking() {
+        use crate::coordinator::clock::ManualClock;
+        let clock = ManualClock::new();
+        let mut be = MockBackend::new(1);
+        be.clock = Some(Arc::clone(&clock));
+        be.token_cost = Duration::from_millis(2);
+        let mut sched = Scheduler::with_clock(
+            chunked_cfg(1, 16, 1),
+            be.lanes(),
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        );
+        let mut m = ServeMetrics::default();
+        let (tx, rx) = mpsc::channel();
+        sched.submit(
+            GenRequest::new(1, vec![1; 5], 2).with_deadline(Duration::from_millis(3)),
+            tx,
+            &mut m,
+        );
+        sched.admit(clock.now(), &mut be, &mut m);
+        for _ in 0..4 {
+            sched.step(&mut be, &mut m);
+        }
+        // Chunks at t=0 and t=2 ms fit the 3 ms budget; the check before
+        // the third (t=4 ms) times the session out instead.
+        assert_eq!(be.chunk_calls.len(), 2, "no chunk is fed past the deadline");
+        assert_eq!(m.timeouts, 1);
+        assert_eq!(be.released, vec![0], "partially-prefilled lane is released");
+        assert!(drain(&rx).iter().any(|e| matches!(e, Event::Error(ServeError::Timeout))));
+        assert!(sched.is_idle());
+    }
+
+    /// Preemption mid-prefill on the fallback (ticket-less) path: the
+    /// victim's partial prefill is discarded, it re-prefills its whole
+    /// prompt chunk-by-chunk after resuming, and the token stream
+    /// matches an uninterrupted run bitwise.
+    #[test]
+    fn preempt_mid_prefill_restarts_and_matches_script() {
+        use crate::coordinator::request::Priority;
+        let mut be = MockBackend::new(2);
+        let mut sched = Scheduler::new(chunked_cfg(2, 16, 2), be.lanes());
+        let mut m = ServeMetrics::default();
+        let (tl, rl) = mpsc::channel();
+        let low = SamplingParams { priority: Priority::Low, ..SamplingParams::greedy() };
+        sched.submit(GenRequest::new(1, vec![1, 2, 3, 4], 2).with_sampling(low), tl, &mut m);
+        sched.admit(Instant::now(), &mut be, &mut m);
+        sched.step(&mut be, &mut m); // Low is mid-prefill: 2 of 4 positions
+        assert_eq!(be.chunk_calls, vec![(0, 0, 2)]);
+        be.admit = AdmitVerdict::Defer;
+        let (th, rh) = mpsc::channel();
+        let high = SamplingParams { priority: Priority::High, ..SamplingParams::greedy() };
+        sched.submit(GenRequest::new(2, vec![5], 1).with_sampling(high), th, &mut m);
+        sched.admit_now(&mut be, &mut m);
+        assert_eq!(m.spills, 1, "mid-prefill Low is evicted for the deferred High");
+        assert_eq!(be.released, vec![0], "fallback spill of a touched lane releases it");
+        be.admit = AdmitVerdict::Admit;
+        sched.admit_now(&mut be, &mut m);
+        sched.step(&mut be, &mut m); // High: single-chunk prefill + its one token
+        assert!(done_of(&drain(&rh)).is_some(), "High completes past the preempted Low");
+        sched.admit(Instant::now(), &mut be, &mut m);
+        assert_eq!(m.resumes, 1);
+        for _ in 0..4 {
+            sched.step(&mut be, &mut m);
+        }
+        let sl = done_of(&drain(&rl)).expect("Low Done despite mid-prefill preemption");
+        let mut seq = vec![1usize, 2, 3, 4];
+        for _ in 0..2 {
+            let t = be.next_token(&seq);
+            seq.push(t);
+        }
+        assert_eq!(sl.tokens, &seq[4..], "restarted prefill reproduces the exact stream");
+        assert_eq!(
+            be.chunk_calls,
+            vec![(0, 0, 2), (0, 0, 1), (0, 0, 2), (0, 2, 4)],
+            "the rebuild restarts from position 0, not from the lost partial state"
+        );
+        assert_eq!(m.completed, 2);
+        assert!(sched.is_idle());
     }
 
     /// `max_batch == 0` resolves to the backend's lane cap (the paged

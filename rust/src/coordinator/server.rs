@@ -372,6 +372,7 @@ mod tests {
             max_batch: 2,
             max_wait: Duration::from_millis(20),
             queue_cap: 16,
+            prefill_chunk: 0,
         };
         // 2 ms per shared decode iteration: A (max_new 100) cannot finish
         // before the cancel below lands.
@@ -435,7 +436,8 @@ mod tests {
     #[test]
     fn lone_request_waits_for_coalescing_budget() {
         let wait = Duration::from_millis(120);
-        let cfg = SchedulerConfig { max_batch: 4, max_wait: wait, queue_cap: 16 };
+        let cfg =
+            SchedulerConfig { max_batch: 4, max_wait: wait, queue_cap: 16, prefill_chunk: 0 };
         let (server, _model) = native_server(822, 4, cfg);
         let t0 = Instant::now();
         let h = server.submit(GenRequest::new(1, vec![5, 6], 2)).unwrap();
@@ -457,6 +459,7 @@ mod tests {
             max_batch: 2,
             max_wait: Duration::from_secs(30),
             queue_cap: 16,
+            prefill_chunk: 0,
         };
         let (server, _model) = native_server(823, 2, cfg);
         let t0 = Instant::now();
@@ -480,6 +483,7 @@ mod tests {
             max_batch: 1,
             max_wait: Duration::ZERO,
             queue_cap: 1,
+            prefill_chunk: 0,
         };
         let (server, _model) = throttled_server(824, 1, cfg, Duration::from_millis(2));
         // r0 occupies the lane for ~40 iterations x 2ms.
@@ -617,6 +621,7 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_secs(30),
             queue_cap: 4,
+            prefill_chunk: 0,
         };
         let (server, _model) = native_server(829, 4, cfg);
         let t0 = Instant::now();
@@ -642,6 +647,7 @@ mod tests {
             max_batch: 1,
             max_wait: Duration::ZERO,
             queue_cap: 16,
+            prefill_chunk: 0,
         };
         let (server, _model) = throttled_server(826, 1, cfg, Duration::from_millis(2));
         let h0 = server.submit(GenRequest::new(0, vec![1, 2], 40)).unwrap();
@@ -666,6 +672,7 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_millis(5),
             queue_cap: 16,
+            prefill_chunk: 0,
         };
         let (server, model) = native_server(827, 4, cfg);
         let mut handles = Vec::new();
@@ -701,6 +708,7 @@ mod tests {
             max_batch: 2,
             max_wait: Duration::from_millis(5),
             queue_cap: 16,
+            prefill_chunk: 0,
         };
         let model = tiny_model(830);
         let m2 = model.clone();

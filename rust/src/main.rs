@@ -13,6 +13,7 @@
 //! pifa serve    --model tiny-s --flavour dense|pifa [--method NAME]
 //!               [--requests N] [--no-kv] [--native]
 //!               [--max-batch N] [--max-wait-ms MS] [--queue-cap N]
+//!               [--prefill-chunk N]
 //!               [--temperature F] [--top-k N] [--kv-lanes N]
 //!               [--kv-evict fifo|lru|freq] [--kv-spill] [--kv-compress]
 //!               [--kv-rank-frac F]
@@ -24,6 +25,12 @@
 //!               watermark cap, so more concurrent sessions fit than the
 //!               fixed-lane baseline at equal memory; --kv-lanes sizes
 //!               the pool to that many contiguous max_seq lanes' bytes.
+//!               --prefill-chunk (default 512, 0 = monolithic) is the
+//!               per-iteration token budget for chunked prefill: each
+//!               scheduler iteration decodes the active lanes first,
+//!               then advances at most one in-flight prefill by up to
+//!               that many tokens, so one long prompt cannot stall every
+//!               active lane's inter-token latency (DESIGN.md §6).
 //!               Block utilization + prefix-hit-rate print at shutdown.
 //!               KV lifecycle (DESIGN.md §10, native paged backend only):
 //!               --kv-evict picks the idle-block eviction policy,
@@ -282,6 +289,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .unwrap_or("64")
         .parse()
         .context("--queue-cap must be a non-negative integer")?;
+    // Chunked prefill (DESIGN.md §6): per-iteration token budget spent
+    // advancing at most one in-flight prefill after the decode step.
+    // 0 disables chunking (one monolithic backend call per prompt).
+    let prefill_chunk: usize = flags
+        .get("prefill-chunk")
+        .map(String::as_str)
+        .unwrap_or("512")
+        .parse()
+        .context("--prefill-chunk must be a non-negative integer (tokens; 0 = monolithic)")?;
     // Speculative decoding knobs (DESIGN.md §11).
     let speculate = flags.get("speculate").cloned();
     let draft_k: usize = flags
@@ -387,6 +403,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         max_batch,
         max_wait: std::time::Duration::from_millis(max_wait_ms),
         queue_cap,
+        prefill_chunk,
     };
     let server = if native {
         let served = served.clone();

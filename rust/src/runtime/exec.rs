@@ -338,6 +338,12 @@ impl LaneKv {
     /// [`ModelRunner::prefill`] returns) for `tokens` into one lane.
     /// Rows already resident for a shared prompt prefix are reused
     /// instead of copied; returns how many leading positions were shared.
+    ///
+    /// Always installs the *whole* prompt: the PJRT prefill artifact is
+    /// lowered for one full-sequence call, so the PJRT backend serves
+    /// chunked-prefill scheduling (DESIGN.md §6) through the monolithic
+    /// `DecodeBackend::prefill_chunk` fallback — correct, just without
+    /// the decode-interleaving the native paged path gets.
     pub fn write_lane(
         &mut self,
         lane: usize,

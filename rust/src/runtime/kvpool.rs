@@ -370,6 +370,11 @@ impl BlockPool {
     /// plus how many leading positions are already cached. Matching is
     /// capped at `tokens.len() - 1`: prefill must always recompute the
     /// final prompt position, because its logits are needed.
+    ///
+    /// Chunked prefill (DESIGN.md §6) calls this once, on its *first*
+    /// chunk, for the whole prompt: the reused prefix is attached as a
+    /// free cursor jump (it never counts against the chunk budget) and
+    /// only the recomputed tail is split across iterations.
     pub fn begin(&mut self, tokens: &[usize]) -> (SeqKv, usize) {
         let mut seq = SeqKv { blocks: Vec::new(), len: 0, hash: ROOT_HASH };
         let limit = tokens.len().saturating_sub(1);

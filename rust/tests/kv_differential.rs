@@ -14,6 +14,11 @@
 //! * `lane_kv_matches_dense_reference_under_random_ops` — the paged
 //!   `LaneKv` (PJRT lane store) against a dense `(L, B, S, d)` reference
 //!   array under random write/absorb/reset sequences.
+//! * `chunked_prefill_matches_monolithic_bitwise` — chunked prefill
+//!   (DESIGN.md §6; budgets of 1 token through ≥ the whole prompt) must
+//!   produce bitwise-identical final logits *and* KV state to one-shot
+//!   prefill on both layouts, including sessions cancelled, spilled, or
+//!   spilled-and-resumed mid-prefill.
 //!
 //! Failures print the seed: rerun with
 //! `PIFA_KV_SEED=<seed> cargo test --test kv_differential`.
@@ -220,6 +225,145 @@ fn paged_backend_matches_contiguous_bitwise() {
         if let Err(payload) = std::panic::catch_unwind(|| run_backend_differential(seed)) {
             eprintln!(
                 "kv_differential FAILED at seed {seed}; reproduce with \
+                 PIFA_KV_SEED={seed} cargo test --test kv_differential"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Chunked-vs-monolithic prefill differential (DESIGN.md §6): over a
+/// seeded session mix, feeding a prompt through `prefill_chunk` at a
+/// random budget — including 1 token and ≥ the whole prompt — must
+/// yield bitwise-identical final logits to one-shot `prefill`, and the
+/// chunk-built KV must decode bitwise-identically afterwards. Sessions
+/// interrupted mid-prefill (cancelled, spilled then dropped, or spilled
+/// then resumed and continued) must leave no trace in what follows.
+/// Both backends keep their pools warm across cases, so prefix-reuse
+/// jumps interleave with the chunk loop exactly as they do in serving.
+fn run_chunked_prefill_differential(seed: u64) {
+    let cfg = micro_cfg();
+    let mut rng = Rng::new(seed.wrapping_mul(6271).wrapping_add(3));
+    let model = Transformer::new_random(&cfg, &mut rng);
+    let families =
+        vec![vec![7usize, 3, 9, 1, 5, 2, 8, 4, 6, 11], vec![21usize, 22, 23, 24, 25, 26]];
+    for paged in [false, true] {
+        let make = || {
+            if paged {
+                NativeBackend::paged(
+                    model.clone(),
+                    GenerationMode::KvCache,
+                    PagedKvParams { block_tokens: 4, num_blocks: 64, watermark_per_active: 1 },
+                )
+                .with_kvlife(KvLifeConfig { spill: true, ..KvLifeConfig::default() })
+            } else {
+                NativeBackend::contiguous(model.clone(), GenerationMode::KvCache, 2)
+            }
+        };
+        let mut mono = make();
+        let mut chunked = make();
+        for case in 0..12 {
+            let prompt = gen_prompt(&mut rng, &families);
+            let budget = [1usize, 2, 3, prompt.len(), prompt.len() + 7][rng.below(5)];
+            let want = mono.prefill(0, &prompt).unwrap();
+
+            // Mid-prefill interruption: a partial chunk is cancelled,
+            // spilled-and-dropped (deadline while preempted), or
+            // spilled-and-resumed; only the resumed variant keeps its
+            // progress, the others must be invisible to the retry.
+            let mut done = 0usize;
+            let variant = rng.below(4);
+            if budget < prompt.len() && variant < 3 {
+                let (d, l) = chunked.prefill_chunk(0, &prompt, 0, budget).unwrap();
+                if l.is_some() {
+                    // A prefix-reuse jump completed the prompt in one
+                    // chunk; nothing is left to interrupt.
+                    chunked.release(0);
+                } else {
+                    match variant {
+                        1 if paged => {
+                            let t = chunked.spill(0).expect("paged spill-on backend must spill");
+                            chunked.drop_spilled(t);
+                        }
+                        2 if paged => {
+                            let t = chunked.spill(0).expect("paged spill-on backend must spill");
+                            if chunked.resume(0, t).unwrap() {
+                                done = d;
+                            } else {
+                                chunked.drop_spilled(t);
+                            }
+                        }
+                        // Cancel mid-prefill (and the spill variants on
+                        // the contiguous layout, which cannot spill).
+                        _ => chunked.release(0),
+                    }
+                }
+            }
+
+            // Chunk to completion; paged prefix reuse may jump `done`
+            // past `fed + budget` for free, so progress is the only
+            // invariant on the cursor.
+            let got = loop {
+                let (d, l) = chunked.prefill_chunk(0, &prompt, done, budget).unwrap();
+                assert!(d > done, "seed {seed} case {case}: chunk made no progress");
+                done = d;
+                if let Some(l) = l {
+                    assert_eq!(done, prompt.len(), "logits only once the prompt is resident");
+                    break l;
+                }
+            };
+            assert_eq!(
+                bits(&got),
+                bits(&want),
+                "seed {seed} case {case} (paged {paged}, budget {budget}): \
+                 chunked prefill logits diverged from one-shot"
+            );
+
+            // The chunk-built KV state is the same state, not just the
+            // same last row: greedy decode stays bitwise-identical.
+            let mut seq = prompt.clone();
+            seq.push(argmax(&got));
+            for _ in 0..4 {
+                if seq.len() >= cfg.max_seq {
+                    break;
+                }
+                let inputs = [StepInput { lane: 0, token: *seq.last().unwrap(), seq: &seq }];
+                let ra = mono.step(&inputs).unwrap();
+                let rb = chunked.step(&inputs).unwrap();
+                let next = match (&ra[0], &rb[0]) {
+                    (StepResult::Logits(va), StepResult::Logits(vb)) => {
+                        assert_eq!(
+                            bits(va),
+                            bits(vb),
+                            "seed {seed} case {case} (paged {paged}, budget {budget}): \
+                             decode diverged after chunked prefill"
+                        );
+                        argmax(va)
+                    }
+                    (a, b) => panic!(
+                        "seed {seed} case {case}: outcome mismatch after chunked prefill: \
+                         {a:?} vs {b:?}"
+                    ),
+                };
+                drop(inputs);
+                seq.push(next);
+            }
+            mono.release(0);
+            chunked.release(0);
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_monolithic_bitwise() {
+    let seeds: Vec<u64> = match std::env::var("PIFA_KV_SEED") {
+        Ok(s) => vec![s.parse().expect("PIFA_KV_SEED must be a u64")],
+        Err(_) => (0..6).collect(),
+    };
+    for seed in seeds {
+        if let Err(payload) = std::panic::catch_unwind(|| run_chunked_prefill_differential(seed)) {
+            eprintln!(
+                "kv_differential (chunked prefill) FAILED at seed {seed}; reproduce with \
                  PIFA_KV_SEED={seed} cargo test --test kv_differential"
             );
             std::panic::resume_unwind(payload);

@@ -18,8 +18,11 @@
 //!
 //! The backend's spill mode rotates by seed: ticket mode (arena-backed
 //! resume) or fallback mode (spill refused, resume re-prefills).
-//! Override with `PIFA_KV_SPILL=ticket|fallback`. Failures print the
-//! seed: rerun one seed with
+//! Override with `PIFA_KV_SPILL=ticket|fallback`. The prefill chunk
+//! budget also rotates by seed (0 = monolithic, through 64 = one-shot
+//! for these prompt lengths), so cancel/deadline/preempt sequences land
+//! mid-prefill; pin it with `PIFA_PREFILL_CHUNK=<tokens>`. Failures
+//! print the seed: rerun one seed with
 //! `PIFA_SOAK_SEED=<seed> cargo test --test scheduler_soak`.
 
 use pifa::coordinator::{
@@ -110,6 +113,31 @@ impl DecodeBackend for SoakBackend {
         Ok(Self::logits_for(prompt))
     }
 
+    fn prefill_chunk(
+        &mut self,
+        lane: usize,
+        prompt: &[usize],
+        done: usize,
+        budget: usize,
+    ) -> anyhow::Result<(usize, Option<Vec<f32>>)> {
+        assert!(lane < self.lanes, "chunked prefill on out-of-range lane {lane}");
+        assert!(done < prompt.len(), "chunk past the end of the prompt");
+        if done == 0 {
+            assert!(
+                self.claimed.insert(lane),
+                "chunked prefill double-claimed lane {lane} without a release"
+            );
+        } else {
+            assert!(
+                self.claimed.contains(&lane),
+                "chunk continuation on unclaimed lane {lane}"
+            );
+        }
+        let end = if budget == 0 { prompt.len() } else { (done + budget).min(prompt.len()) };
+        let logits = (end == prompt.len()).then(|| Self::logits_for(prompt));
+        Ok((end, logits))
+    }
+
     fn step(&mut self, inputs: &[StepInput<'_>]) -> anyhow::Result<Vec<StepResult>> {
         self.step_calls += 1;
         let fault_first =
@@ -192,10 +220,15 @@ fn run_soak(seed: u64) {
     };
     let resume_defer_every = [0usize, 3][rng.below(2)];
     let mut be = SoakBackend::new(lanes, 24, fault_every, defer_every, ticket_spill, resume_defer_every);
+    let prefill_chunk = match std::env::var("PIFA_PREFILL_CHUNK") {
+        Ok(v) => v.parse().expect("PIFA_PREFILL_CHUNK must be a usize (0 = monolithic)"),
+        Err(_) => [0usize, 1, 2, 5, 64][rng.below(5)],
+    };
     let cfg = SchedulerConfig {
         max_batch: 1 + rng.below(4),
         max_wait: Duration::ZERO,
         queue_cap: 1 + rng.below(4),
+        prefill_chunk,
     };
     let mut sched = Scheduler::new(cfg, be.lanes());
     let mut m = ServeMetrics::default();

@@ -88,6 +88,7 @@ fn run_mix(seed: u64) -> ServeMetrics {
         max_batch: 0,
         max_wait: Duration::ZERO,
         queue_cap: 32,
+        prefill_chunk: 0,
     };
     let mut sched = Scheduler::new(cfg, backend_lanes);
     if spec_enabled() {
@@ -225,7 +226,7 @@ fn rollback_heavy_garbage_drafts_stay_bitwise() {
     use pifa::coordinator::DecodeBackend;
     let lanes = be.lanes();
     let mut sched =
-        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 4 }, lanes);
+        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 4, prefill_chunk: 0 }, lanes);
     sched.set_draft_engine(DraftEngine::new(
         draft,
         lanes,
@@ -278,7 +279,7 @@ fn acceptance_collapse_falls_back_mid_stream() {
     use pifa::coordinator::DecodeBackend;
     let lanes = be.lanes();
     let mut sched =
-        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 4 }, lanes);
+        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 4, prefill_chunk: 0 }, lanes);
     // A floor no garbage draft can sustain, measured over a tiny window
     // so the collapse fires mid-generation.
     sched.set_draft_engine(DraftEngine::new(
@@ -327,7 +328,7 @@ fn draft_pool_exhaustion_never_kills_the_target_session() {
 
     let mut be = NativeBackend::new(model.clone(), GenerationMode::KvCache, 2);
     let mut sched =
-        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 4 }, 2);
+        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 4, prefill_chunk: 0 }, 2);
     // One 4-token block cannot hold the 6-token prefix: every draft
     // attempt exhausts the mirror pool immediately.
     sched.set_draft_engine(DraftEngine::with_pool(
@@ -376,7 +377,7 @@ fn sampled_and_speculative_sessions_coexist() {
     use pifa::coordinator::DecodeBackend;
     let lanes = be.lanes();
     let mut sched =
-        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 8 }, lanes);
+        Scheduler::new(SchedulerConfig { max_batch: 0, max_wait: Duration::ZERO, queue_cap: 8, prefill_chunk: 0 }, lanes);
     sched.set_draft_engine(DraftEngine::new(model.clone(), lanes, SpecConfig::default()));
     let mut m = ServeMetrics::default();
 
