@@ -137,7 +137,9 @@ pub fn gate_for(metric: &str) -> Option<MetricGate> {
         // Kernel speedup ratios (bench-kernels): machine-portable-ish,
         // but still timing quotients — wide band.
         "pifa_vs_lowrank" | "pifa_vs_dense" | "lowrank_vs_dense" | "s24_vs_dense"
-        | "hybrid_vs_dense" => Some(g(HigherIsBetter, 0.35, 0.05)),
+        | "hybrid_vs_dense" | "quant_vs_dense" | "simd_vs_scalar" => {
+            Some(g(HigherIsBetter, 0.35, 0.05))
+        }
         _ => None,
     }
 }
@@ -539,7 +541,15 @@ pub fn check_schema(j: &Json) -> Result<&'static str> {
             bail!("kernels schema: empty \"ratios\"");
         }
         for (i, ratio) in ratios.iter().enumerate() {
-            for field in ["m", "n", "batch", "pifa_vs_lowrank", "pifa_vs_dense"] {
+            for field in [
+                "m",
+                "n",
+                "batch",
+                "pifa_vs_lowrank",
+                "pifa_vs_dense",
+                "quant_vs_dense",
+                "simd_vs_scalar",
+            ] {
                 let v =
                     ratio.num(field).with_context(|| format!("ratio {i}: missing {field}"))?;
                 if !v.is_finite() {
@@ -948,7 +958,8 @@ mod tests {
              \"median_us\": 1.0, \"p10_us\": 0.9, \"p90_us\": 1.1}}], \
              \"ratios\": [{{\"m\": 16, \"n\": 16, \"batch\": 1, \
              \"pifa_vs_lowrank\": {pifa_vs_lowrank:.4}, \"pifa_vs_dense\": 1.1, \
-             \"lowrank_vs_dense\": 0.9, \"s24_vs_dense\": 1.0, \"hybrid_vs_dense\": 1.0}}]}}",
+             \"lowrank_vs_dense\": 0.9, \"s24_vs_dense\": 1.0, \"hybrid_vs_dense\": 1.0, \
+             \"quant_vs_dense\": 1.0, \"simd_vs_scalar\": 1.0}}]}}",
             kernels::SCHEMA
         ))
         .unwrap()

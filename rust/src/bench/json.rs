@@ -347,10 +347,13 @@ mod tests {
             KernelBenchConfig { dims: vec![(16, 16)], batches: vec![1], warmup: 0, samples: 1 };
         let report = run(&cfg).unwrap();
         let j = Json::parse(&report.to_json()).unwrap();
-        assert_eq!(j.str("schema"), Some("pifa-bench-kernels-v1"));
+        assert_eq!(j.str("schema"), Some("pifa-bench-kernels-v2"));
         assert!(!j.get("cases").and_then(Json::as_arr).unwrap().is_empty());
         assert!(j.get("ratios").and_then(Json::as_arr).unwrap()[0]
             .num("pifa_vs_lowrank")
+            .is_some());
+        assert!(j.get("ratios").and_then(Json::as_arr).unwrap()[0]
+            .num("simd_vs_scalar")
             .is_some());
     }
 }

@@ -1,30 +1,49 @@
 //! `pifa bench-kernels` — the decode-path kernel microbench.
 //!
-//! Times every `LinearRepr` forward (dense, low-rank, PIFA, 2:4, hybrid)
-//! across an (m, n, batch) grid with warmup + median-of-k discipline and
-//! emits `BENCH_kernels.json`, so the paper's Table-5-style speedup
-//! ratio (fused PIFA vs the unfused low-rank path, batch 1, r = 0.5·m)
-//! becomes a tracked number instead of a claim. `--smoke` runs a trimmed
-//! grid and fails unless the PIFA-vs-lowrank ratio parses, is finite,
-//! and is positive — the CI guard.
+//! Times every `LinearRepr` forward (dense, low-rank, PIFA, 2:4, hybrid,
+//! int8 quant hybrid) across an (m, n, batch) grid with warmup +
+//! median-of-k discipline and emits `BENCH_kernels.json`, so the paper's
+//! Table-5-style speedup ratio (fused PIFA vs the unfused low-rank path,
+//! batch 1, r = 0.5·m) becomes a tracked number instead of a claim.
+//! `--smoke` runs a trimmed grid and fails unless every tracked ratio
+//! parses, is finite, and is positive — the CI guard.
 //!
 //! Timing goes through `LinearRepr::forward`, i.e. the *wired* dispatch
 //! path the serving scheduler actually executes — not bespoke bench-only
-//! kernels.
+//! kernels. One exception: the `dot_simd` / `dot_scalar` rows time the
+//! two inner dot tiers directly through the same sweep driver, because
+//! the wired path's tier is chosen by runtime detection and the
+//! `simd_vs_scalar` column needs both sides measured on every host.
 
 use crate::bench::harness::bench_fn;
 use crate::bench::tables::TablePrinter;
 use crate::linalg::{Mat, Rng};
 use crate::model::LinearRepr;
 use crate::pifa::PifaLayer;
-use crate::runtime::kernels::pool;
-use crate::sparse24::Sparse24Mat;
+use crate::runtime::kernels::{gemv, pool, simd};
+use crate::sparse24::{QuantSparse24Mat, Sparse24Mat};
 use anyhow::{ensure, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Version tag of `BENCH_kernels.json`; bump on breaking layout
 /// changes. `pifa bench-diff --check-schema` validates against this.
-pub const SCHEMA: &str = "pifa-bench-kernels-v1";
+/// v2: added the `quant` / `dot_simd` / `dot_scalar` case rows and the
+/// `quant_vs_dense` / `simd_vs_scalar` ratio columns.
+pub const SCHEMA: &str = "pifa-bench-kernels-v2";
+
+/// Absolute floor (µs) applied to both sides of every ratio. Medians at
+/// the timer's resolution — 0.0 µs is routine for tiny smoke shapes on a
+/// fast host — would otherwise turn into `inf` / `NaN` / 0 ratios and
+/// trip the smoke gate. 10 ns sits below any kernel cost we track, so
+/// the clamp never distorts a genuine measurement.
+const MEDIAN_FLOOR_US: f64 = 0.01;
+
+/// `baseline / contender` with both medians clamped to
+/// [`MEDIAN_FLOOR_US`]: always finite and positive, `1.0` when both
+/// sides are below timer resolution.
+fn speedup(baseline_us: f64, contender_us: f64) -> f64 {
+    baseline_us.max(MEDIAN_FLOOR_US) / contender_us.max(MEDIAN_FLOOR_US)
+}
 
 /// One timed case.
 #[derive(Clone, Debug)]
@@ -54,6 +73,12 @@ pub struct RatioRow {
     pub lowrank_vs_dense: f64,
     pub s24_vs_dense: f64,
     pub hybrid_vs_dense: f64,
+    /// Int8 quantized hybrid vs the dense forward (same shapes as
+    /// `hybrid_vs_dense`, residual stored as int8).
+    pub quant_vs_dense: f64,
+    /// The wide dot tier vs the scalar four-chain core over the same
+    /// sweep (`dot_simd` / `dot_scalar` rows).
+    pub simd_vs_scalar: f64,
 }
 
 /// Grid + measurement discipline.
@@ -96,13 +121,15 @@ fn synthetic_pifa(m: usize, n: usize, r: usize, rng: &mut Rng) -> PifaLayer<f32>
     PifaLayer::new(m, n, pivots, non_pivots, Mat::randn(r, n, rng), Mat::randn(m - r, r, rng))
 }
 
-/// The five representations for one (m, n) cell. Low-rank and PIFA share
-/// rank r = m/2 (the paper's 24.6% comparison point); the hybrid carries
-/// r = m/4 plus a 2:4 residual.
+/// The six representations for one (m, n) cell. Low-rank and PIFA share
+/// rank r = m/2 (the paper's 24.6% comparison point); the hybrids carry
+/// r = m/4 plus a 2:4 residual (f32-packed and int8-quantized).
 fn reprs_for(m: usize, n: usize, rng: &mut Rng) -> Vec<(&'static str, usize, LinearRepr)> {
     let r50 = (m / 2).max(1);
     let r25 = (m / 4).max(1);
     let dense: Mat<f32> = Mat::randn(m, n, rng);
+    let qresid: Mat<f32> = Mat::randn(m, n, rng);
+    let qmask = crate::sparse24::prune_mask_24(&qresid.map(|v| v.abs()));
     vec![
         ("dense", 0, LinearRepr::Dense(dense.clone())),
         (
@@ -119,6 +146,15 @@ fn reprs_for(m: usize, n: usize, rng: &mut Rng) -> Vec<(&'static str, usize, Lin
                 u: Mat::randn(m, r25, rng),
                 vt: Mat::randn(r25, n, rng),
                 residual: Sparse24Mat::pack_magnitude(&Mat::randn(m, n, rng)),
+            },
+        ),
+        (
+            "quant",
+            r25,
+            LinearRepr::LowRankQuantSparse {
+                u: Mat::randn(m, r25, rng),
+                vt: Mat::randn(r25, n, rng),
+                residual: QuantSparse24Mat::quantize(&qresid, &qmask),
             },
         ),
     ]
@@ -170,7 +206,8 @@ impl BenchReport {
             out.push_str(&format!(
                 "    {{\"m\": {}, \"n\": {}, \"batch\": {}, \"pifa_vs_lowrank\": {:.4}, \
                  \"pifa_vs_dense\": {:.4}, \"lowrank_vs_dense\": {:.4}, \"s24_vs_dense\": {:.4}, \
-                 \"hybrid_vs_dense\": {:.4}}}{}\n",
+                 \"hybrid_vs_dense\": {:.4}, \"quant_vs_dense\": {:.4}, \
+                 \"simd_vs_scalar\": {:.4}}}{}\n",
                 r.m,
                 r.n,
                 r.batch,
@@ -179,6 +216,8 @@ impl BenchReport {
                 r.lowrank_vs_dense,
                 r.s24_vs_dense,
                 r.hybrid_vs_dense,
+                r.quant_vs_dense,
+                r.simd_vs_scalar,
                 if i + 1 < self.ratios.len() { "," } else { "" }
             ));
         }
@@ -191,7 +230,17 @@ impl BenchReport {
     pub fn print_ratio_table(&self) {
         let mut t = TablePrinter::new(
             "bench-kernels — decode speedups (ratio > 1: row beats baseline)",
-            &["m", "n", "batch", "pifa/lowrank", "pifa/dense", "lowrank/dense", "s24/dense"],
+            &[
+                "m",
+                "n",
+                "batch",
+                "pifa/lowrank",
+                "pifa/dense",
+                "lowrank/dense",
+                "s24/dense",
+                "quant/dense",
+                "simd/scalar",
+            ],
         );
         for r in &self.ratios {
             t.row(&[
@@ -202,20 +251,77 @@ impl BenchReport {
                 format!("{:.2}x", r.pifa_vs_dense),
                 format!("{:.2}x", r.lowrank_vs_dense),
                 format!("{:.2}x", r.s24_vs_dense),
+                format!("{:.2}x", r.quant_vs_dense),
+                format!("{:.2}x", r.simd_vs_scalar),
             ]);
         }
         t.print();
     }
 }
 
+/// Sweep driver shared by the `dot_simd` / `dot_scalar` rows: one dot
+/// per (batch row, weight row), identical traversal, only the inner
+/// kernel differs.
+fn dot_sweep(w: &Mat<f32>, x: &Mat<f32>, inner: impl Fn(&[f32], &[f32]) -> f32) -> f32 {
+    let mut acc = 0.0f32;
+    for bi in 0..x.rows() {
+        let xrow = x.row(bi);
+        for i in 0..w.rows() {
+            acc += inner(w.row(i), xrow);
+        }
+    }
+    acc
+}
+
+/// Compute the ratio grid from timed cases. Every division goes through
+/// [`speedup`], so zeroed medians (timer-resolution shapes) still yield
+/// finite positive ratios.
+fn ratios_from_cases(
+    report: &BenchReport,
+    dims: &[(usize, usize)],
+    batches: &[usize],
+) -> Result<Vec<RatioRow>> {
+    let mut ratios = Vec::new();
+    for &(m, n) in dims {
+        for &batch in batches {
+            let get = |kind: &str| -> Result<f64> {
+                report
+                    .case_median(kind, m, n, batch)
+                    .with_context(|| format!("missing case {kind} ({m},{n},b{batch})"))
+            };
+            let dense = get("dense")?;
+            let lowrank = get("lowrank")?;
+            let pifa = get("pifa")?;
+            let s24 = get("sparse24")?;
+            let hybrid = get("hybrid")?;
+            let quant = get("quant")?;
+            let dot_simd = get("dot_simd")?;
+            let dot_scalar = get("dot_scalar")?;
+            ratios.push(RatioRow {
+                m,
+                n,
+                batch,
+                pifa_vs_lowrank: speedup(lowrank, pifa),
+                pifa_vs_dense: speedup(dense, pifa),
+                lowrank_vs_dense: speedup(dense, lowrank),
+                s24_vs_dense: speedup(dense, s24),
+                hybrid_vs_dense: speedup(dense, hybrid),
+                quant_vs_dense: speedup(dense, quant),
+                simd_vs_scalar: speedup(dot_scalar, dot_simd),
+            });
+        }
+    }
+    Ok(ratios)
+}
+
 /// Run the grid and compute ratios.
 pub fn run(cfg: &KernelBenchConfig) -> Result<BenchReport> {
     let mut rng = Rng::new(2025);
     let mut cases = Vec::new();
-    let mut ratios = Vec::new();
     for &(m, n) in &cfg.dims {
         ensure!(n % 4 == 0, "bench-kernels: n must be a multiple of 4, got {n}");
         let reprs = reprs_for(m, n, &mut rng);
+        let w_dense = reprs[0].2.to_dense();
         for &batch in &cfg.batches {
             let x: Mat<f32> = Mat::randn(batch, n, &mut rng);
             for &(kind, r, ref repr) in &reprs {
@@ -233,34 +339,37 @@ pub fn run(cfg: &KernelBenchConfig) -> Result<BenchReport> {
                     p90_us: res.p90_secs() * 1e6,
                 });
             }
+            // Direct inner-kernel tiers over the same dense sweep.
+            for (kind, res) in [
+                (
+                    "dot_simd",
+                    bench_fn("dot_simd", cfg.warmup, cfg.samples, || {
+                        std::hint::black_box(dot_sweep(&w_dense, &x, simd::dot));
+                    }),
+                ),
+                (
+                    "dot_scalar",
+                    bench_fn("dot_scalar", cfg.warmup, cfg.samples, || {
+                        std::hint::black_box(dot_sweep(&w_dense, &x, gemv::dot_scalar::<f32>));
+                    }),
+                ),
+            ] {
+                cases.push(CaseResult {
+                    kind,
+                    m,
+                    n,
+                    r: 0,
+                    batch,
+                    median_us: res.median_us(),
+                    p10_us: res.p10_secs() * 1e6,
+                    p90_us: res.p90_secs() * 1e6,
+                });
+            }
         }
     }
     let report =
         BenchReport { cases, ratios: Vec::new(), warmup: cfg.warmup, samples: cfg.samples };
-    for &(m, n) in &cfg.dims {
-        for &batch in &cfg.batches {
-            let get = |kind: &str| -> Result<f64> {
-                report
-                    .case_median(kind, m, n, batch)
-                    .with_context(|| format!("missing case {kind} ({m},{n},b{batch})"))
-            };
-            let dense = get("dense")?;
-            let lowrank = get("lowrank")?;
-            let pifa = get("pifa")?;
-            let s24 = get("sparse24")?;
-            let hybrid = get("hybrid")?;
-            ratios.push(RatioRow {
-                m,
-                n,
-                batch,
-                pifa_vs_lowrank: lowrank / pifa,
-                pifa_vs_dense: dense / pifa,
-                lowrank_vs_dense: dense / lowrank,
-                s24_vs_dense: dense / s24,
-                hybrid_vs_dense: dense / hybrid,
-            });
-        }
-    }
+    let ratios = ratios_from_cases(&report, &cfg.dims, &cfg.batches)?;
     Ok(BenchReport { ratios, ..report })
 }
 
@@ -334,17 +443,25 @@ pub fn run_cli(smoke: bool, out: &Path) -> Result<()> {
             "smoke: paged-kv gather time {gather_us} µs is not sane"
         );
         for r in &report.ratios {
-            ensure!(
-                r.pifa_vs_lowrank.is_finite() && r.pifa_vs_lowrank > 0.0,
-                "smoke: pifa_vs_lowrank ratio at ({}, {}, b{}) is {} — not a positive finite \
-                 speedup",
-                r.m,
-                r.n,
-                r.batch,
-                r.pifa_vs_lowrank
-            );
+            for (name, v) in [
+                ("pifa_vs_lowrank", r.pifa_vs_lowrank),
+                ("pifa_vs_dense", r.pifa_vs_dense),
+                ("lowrank_vs_dense", r.lowrank_vs_dense),
+                ("s24_vs_dense", r.s24_vs_dense),
+                ("hybrid_vs_dense", r.hybrid_vs_dense),
+                ("quant_vs_dense", r.quant_vs_dense),
+                ("simd_vs_scalar", r.simd_vs_scalar),
+            ] {
+                ensure!(
+                    v.is_finite() && v > 0.0,
+                    "smoke: {name} ratio at ({}, {}, b{}) is {v} — not a positive finite speedup",
+                    r.m,
+                    r.n,
+                    r.batch,
+                );
+            }
         }
-        println!("smoke OK: all pifa-vs-lowrank ratios positive and finite");
+        println!("smoke OK: all tracked ratios positive and finite");
     }
     Ok(())
 }
@@ -365,16 +482,20 @@ mod tests {
     #[test]
     fn report_covers_grid_and_serializes() {
         let report = run(&tiny_cfg()).unwrap();
-        // 5 representations x 2 batches x 1 dim.
-        assert_eq!(report.cases.len(), 10);
+        // (6 representations + 2 dot-tier rows) x 2 batches x 1 dim.
+        assert_eq!(report.cases.len(), 16);
         assert_eq!(report.ratios.len(), 2);
         for c in &report.cases {
             assert!(c.median_us >= 0.0 && c.p10_us <= c.p90_us, "{c:?}");
         }
         let json = report.to_json();
         assert!(json.contains("\"pifa_vs_lowrank\""));
+        assert!(json.contains("\"quant_vs_dense\""));
+        assert!(json.contains("\"simd_vs_scalar\""));
         assert!(json.contains("\"kind\": \"hybrid\""));
-        assert!(json.contains("pifa-bench-kernels-v1"));
+        assert!(json.contains("\"kind\": \"quant\""));
+        assert!(json.contains("\"kind\": \"dot_scalar\""));
+        assert!(json.contains("pifa-bench-kernels-v2"));
         // Balanced braces/brackets — cheap well-formedness check without a
         // JSON parser in the offline crate set.
         for (open, close) in [('{', '}'), ('[', ']')] {
@@ -382,6 +503,49 @@ mod tests {
             let c = json.matches(close).count();
             assert_eq!(o, c, "unbalanced {open}{close}");
         }
+    }
+
+    #[test]
+    fn zero_medians_still_produce_finite_positive_ratios() {
+        // Synthetic 0.0 µs medians — routine on fast hosts for the smoke
+        // shapes. Every ratio must clamp to the resolution floor instead
+        // of going inf/NaN (the --smoke gate would trip otherwise).
+        let kinds = [
+            "dense", "lowrank", "pifa", "sparse24", "hybrid", "quant", "dot_simd", "dot_scalar",
+        ];
+        let cases: Vec<CaseResult> = kinds
+            .iter()
+            .map(|&kind| CaseResult {
+                kind,
+                m: 16,
+                n: 16,
+                r: 0,
+                batch: 1,
+                median_us: 0.0,
+                p10_us: 0.0,
+                p90_us: 0.0,
+            })
+            .collect();
+        let report = BenchReport { cases, ratios: Vec::new(), warmup: 0, samples: 1 };
+        let ratios = ratios_from_cases(&report, &[(16, 16)], &[1]).unwrap();
+        assert_eq!(ratios.len(), 1);
+        let r = &ratios[0];
+        for v in [
+            r.pifa_vs_lowrank,
+            r.pifa_vs_dense,
+            r.lowrank_vs_dense,
+            r.s24_vs_dense,
+            r.hybrid_vs_dense,
+            r.quant_vs_dense,
+            r.simd_vs_scalar,
+        ] {
+            assert!(v.is_finite() && v > 0.0, "ratio {v} not a positive finite value");
+            assert_eq!(v, 1.0, "both sides at the floor must give exactly 1.0");
+        }
+        // Mixed: a real median over a zeroed baseline stays finite too.
+        assert!(speedup(5.0, 0.0).is_finite() && speedup(5.0, 0.0) > 0.0);
+        assert!(speedup(0.0, 5.0).is_finite() && speedup(0.0, 5.0) > 0.0);
+        assert_eq!(speedup(0.0, 0.0), 1.0);
     }
 
     #[test]

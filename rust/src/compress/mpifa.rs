@@ -25,7 +25,7 @@ use crate::model::ops::{self};
 use crate::model::transformer::{attention_mix, ModuleKind, Transformer};
 use crate::model::LinearRepr;
 use crate::pifa::{pivoting_factorization, PivotStrategy};
-use crate::sparse24::{prune_mask_24, Sparse24Mat};
+use crate::sparse24::{prune_mask_24, QuantSparse24Mat, Sparse24Mat};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
@@ -62,6 +62,10 @@ pub enum PackMode {
     /// `mn/2` values, so the low-rank factors are budgeted at
     /// `density - 0.5`.
     Sparse24Residual,
+    /// Same selection as [`PackMode::Sparse24Residual`], with the survivor
+    /// values stored as int8 + one f32 scale per output row
+    /// ([`crate::sparse24::QuantSparse24Mat`]).
+    Sparse24ResidualQuant,
 }
 
 /// End-to-end compression configuration (Algorithm 3 parameters).
@@ -270,12 +274,12 @@ fn compress_module(
     // Density -> rank: PIFA affords extra rank at equal density; a 2:4
     // residual reserves mn/2 values, leaving `rho - 0.5` for the factors.
     let r = match (cfg.apply_pifa, cfg.pack) {
-        (true, PackMode::Sparse24Residual) => {
+        (true, PackMode::Sparse24Residual | PackMode::Sparse24ResidualQuant) => {
             bail!("PIFA factorization cannot be combined with a 2:4 residual pack")
         }
         (true, PackMode::None) => crate::pifa::rank_for_density_pifa(m, n, rho),
         (false, PackMode::None) => crate::pifa::rank_for_density_lowrank(m, n, rho),
-        (false, PackMode::Sparse24Residual) => {
+        (false, PackMode::Sparse24Residual | PackMode::Sparse24ResidualQuant) => {
             if rho <= 0.5 {
                 bail!("2:4 residual pack needs density > 0.5 (got {rho})");
             }
@@ -340,7 +344,7 @@ fn compress_module(
         let layer_p = pivoting_factorization(&w_prime, r, cfg.pivot)
             .with_context(|| format!("PIFA failed at layer {layer} {}", kind.name()))?;
         LinearRepr::Pifa(layer_p.cast::<f32>())
-    } else if cfg.pack == PackMode::Sparse24Residual {
+    } else if matches!(cfg.pack, PackMode::Sparse24Residual | PackMode::Sparse24ResidualQuant) {
         // Hybrid: 2:4-pack the reconstruction residual with Wanda-style
         // saliency from the degraded-flow Gram diagonal (`accum.xxt`
         // accumulates X_u X_u^T — the layer's actual inference input).
@@ -357,8 +361,14 @@ fn compress_module(
             }
         }
         let mask = prune_mask_24(&scores);
-        let residual = Sparse24Mat::pack(&resid.cast::<f32>(), &mask);
-        LinearRepr::LowRankSparse { u: u.cast(), vt: vt.cast(), residual }
+        let resid32 = resid.cast::<f32>();
+        if cfg.pack == PackMode::Sparse24ResidualQuant {
+            let residual = QuantSparse24Mat::quantize(&resid32, &mask);
+            LinearRepr::LowRankQuantSparse { u: u.cast(), vt: vt.cast(), residual }
+        } else {
+            let residual = Sparse24Mat::pack(&resid32, &mask);
+            LinearRepr::LowRankSparse { u: u.cast(), vt: vt.cast(), residual }
+        }
     } else {
         LinearRepr::LowRank { u: u.cast(), vt: vt.cast() }
     };
@@ -496,6 +506,35 @@ mod tests {
         assert!(mpifa_compress_model(model, &calib, &bad).is_err());
         let mut low = CompressConfig::w_plus_m(0.4);
         low.pack = PackMode::Sparse24Residual;
+        assert!(mpifa_compress_model(model, &calib, &low).is_err());
+    }
+
+    #[test]
+    fn hybrid_quant_residual_pack() {
+        let (model, data) = trained();
+        let calib = data.calibration_windows(8, 7);
+        let mut cfg = CompressConfig::w_plus_m(0.7);
+        cfg.pack = PackMode::Sparse24ResidualQuant;
+        let (compressed, _) = mpifa_compress_model(model, &calib, &cfg).unwrap();
+        assert_eq!(compressed.module(0, ModuleKind::Q).kind_name(), "lowrank+s24q8");
+        assert_eq!(compressed.module(1, ModuleKind::Down).kind_name(), "lowrank+s24q8");
+        assert!(perplexity(&compressed, data, Split::Test).is_finite());
+
+        // The int8 pack stores strictly fewer bytes than the f32 pack of
+        // the same spec (Table 7's memory column for the hybrid).
+        let mut cfg_f32 = CompressConfig::w_plus_m(0.7);
+        cfg_f32.pack = PackMode::Sparse24Residual;
+        let (base, _) = mpifa_compress_model(model, &calib, &cfg_f32).unwrap();
+        let q_bytes = compressed.module(0, ModuleKind::Q).memory_bytes_fp16();
+        let f_bytes = base.module(0, ModuleKind::Q).memory_bytes_fp16();
+        assert!(q_bytes < f_bytes, "int8 pack {q_bytes}B !< f32 pack {f_bytes}B");
+
+        // Same contradictory-stage errors as the f32 pack.
+        let mut bad = CompressConfig::mpifa(0.7);
+        bad.pack = PackMode::Sparse24ResidualQuant;
+        assert!(mpifa_compress_model(model, &calib, &bad).is_err());
+        let mut low = CompressConfig::w_plus_m(0.4);
+        low.pack = PackMode::Sparse24ResidualQuant;
         assert!(mpifa_compress_model(model, &calib, &low).is_err());
     }
 

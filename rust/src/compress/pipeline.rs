@@ -102,6 +102,10 @@ pub enum PackStage {
     None,
     /// Pack `W - U V^T` as 2:4 (Wanda-saliency survivors).
     Sparse24Residual,
+    /// Same residual pack with int8 per-row quantized values
+    /// ([`crate::sparse24::QuantSparse24Mat`]) — the outlier corrections
+    /// tolerate 8-bit precision while the factors stay f32.
+    Sparse24ResidualQuant,
 }
 
 /// One per-module density override (MPIFA_NS non-uniform sparsity).
@@ -169,7 +173,9 @@ impl PipelineSpec {
                 }
             }
             PruneStage::LowRank(_) => {
-                if self.pack == PackStage::Sparse24Residual {
+                // Both residual packs (f32 and int8) share the same stage
+                // compatibility rules.
+                if self.pack != PackStage::None {
                     if self.factorize != FactorizeStage::None {
                         bail!("a 2:4 residual pack cannot be combined with PIFA factorization");
                     }
@@ -205,6 +211,7 @@ impl PipelineSpec {
             (PruneStage::SemiStructured(_), _, _) => "sparse24",
             (PruneStage::Structured, _, _) => "dense",
             (_, _, PackStage::Sparse24Residual) => "lowrank+s24",
+            (_, _, PackStage::Sparse24ResidualQuant) => "lowrank+s24q8",
             (_, FactorizeStage::Pivot(_), _) => "pifa",
             _ => "lowrank",
         }
@@ -234,8 +241,10 @@ impl PipelineSpec {
             cfg.apply_pifa = true;
             cfg.pivot = strategy;
         }
-        if self.pack == PackStage::Sparse24Residual {
-            cfg.pack = PackMode::Sparse24Residual;
+        match self.pack {
+            PackStage::None => {}
+            PackStage::Sparse24Residual => cfg.pack = PackMode::Sparse24Residual,
+            PackStage::Sparse24ResidualQuant => cfg.pack = PackMode::Sparse24ResidualQuant,
         }
         cfg.module_density = self
             .module_density
@@ -276,10 +285,10 @@ impl PipelineSpec {
             } else {
                 FactorizeStage::None
             },
-            pack: if cfg.pack == PackMode::Sparse24Residual {
-                PackStage::Sparse24Residual
-            } else {
-                PackStage::None
+            pack: match cfg.pack {
+                PackMode::None => PackStage::None,
+                PackMode::Sparse24Residual => PackStage::Sparse24Residual,
+                PackMode::Sparse24ResidualQuant => PackStage::Sparse24ResidualQuant,
             },
             module_density,
         }
@@ -306,6 +315,7 @@ impl PipelineSpec {
         let pack = match self.pack {
             PackStage::None => "none",
             PackStage::Sparse24Residual => "2:4 residual",
+            PackStage::Sparse24ResidualQuant => "2:4 residual int8",
         };
         format!(
             "{} @ density {}: calibrate({}@{}) -> prune[{}] -> recon[{}] -> factorize[{}] -> pack[{}]",
@@ -366,6 +376,7 @@ impl PipelineSpec {
         match self.pack {
             PackStage::None => out.push_str("pack none\n"),
             PackStage::Sparse24Residual => out.push_str("pack sparse24-residual\n"),
+            PackStage::Sparse24ResidualQuant => out.push_str("pack sparse24-residual-q8\n"),
         }
         for m in &self.module_density {
             out.push_str(&format!("module {} {} {}\n", m.layer, m.kind.name(), m.density));
@@ -482,6 +493,7 @@ impl PipelineSpec {
                     pack = match *toks.get(1).with_context(ctx)? {
                         "none" => PackStage::None,
                         "sparse24-residual" => PackStage::Sparse24Residual,
+                        "sparse24-residual-q8" => PackStage::Sparse24ResidualQuant,
                         other => bail!("unknown pack stage '{other}'"),
                     };
                 }
@@ -597,6 +609,11 @@ mod tests {
         hy.module_density.push(ModuleDensity { layer: 0, kind: ModuleKind::Q, density: 0.9 });
         hy.module_density.push(ModuleDensity { layer: 1, kind: ModuleKind::Down, density: 0.55 });
         specs.push(hy);
+        // Quantized-residual hybrid.
+        let mut hq = PipelineSpec::low_rank("lowrank-s24-q8", PruneAlgo::SvdLlm, 0.65);
+        hq.recon = ReconStage::Online { target: ReconTarget::Both, lambda: 0.25, alpha: 1e-3 };
+        hq.pack = PackStage::Sparse24ResidualQuant;
+        specs.push(hq);
 
         for spec in specs {
             let text = spec.to_text();
@@ -630,12 +647,19 @@ mod tests {
         s.pack = PackStage::Sparse24Residual;
         assert!(s.validate().is_err());
 
-        // Residual pack needs density > 0.5.
+        // Residual pack needs density > 0.5 — both the f32 and int8 packs.
         let mut s = PipelineSpec::low_rank("h", PruneAlgo::SvdLlm, 0.4);
         s.pack = PackStage::Sparse24Residual;
         assert!(s.validate().is_err());
         s.density = 0.7;
         assert!(s.validate().is_ok());
+        s.pack = PackStage::Sparse24ResidualQuant;
+        assert!(s.validate().is_ok());
+        s.density = 0.4;
+        assert!(s.validate().is_err());
+        s.density = 0.7;
+        s.factorize = FactorizeStage::Pivot(PivotStrategy::QrColumnPivot);
+        assert!(s.validate().is_err());
 
         // 2:4 prune must sit at 0.5 with no downstream stages.
         let mut s = PipelineSpec::low_rank("m24", PruneAlgo::SvdLlm, 0.5);
@@ -663,6 +687,8 @@ mod tests {
         let mut hy = PipelineSpec::low_rank("h", PruneAlgo::SvdLlm, 0.7);
         hy.pack = PackStage::Sparse24Residual;
         assert_eq!(hy.artifact_flavour(), "lowrank+s24");
+        hy.pack = PackStage::Sparse24ResidualQuant;
+        assert_eq!(hy.artifact_flavour(), "lowrank+s24q8");
         let mut st = PipelineSpec::low_rank("p", PruneAlgo::SvdLlm, 0.5);
         st.prune = PruneStage::Structured;
         assert_eq!(st.artifact_flavour(), "dense");

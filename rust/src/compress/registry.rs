@@ -345,6 +345,21 @@ fn build_registry() -> Vec<Box<dyn Compressor>> {
                 s
             },
         }),
+        // The same hybrid with the residual quantized to int8 per output
+        // row: the outlier corrections tolerate 8-bit precision, dropping
+        // the residual from fp16 to int8 storage.
+        Box::new(PipelinePreset {
+            name: "lowrank-s24-q8",
+            label: "LowRank+2:4-int8",
+            aliases: &["losparse-q8", "hybridq8"],
+            summary: "hybrid: M-reconstructed low-rank factors + int8 2:4 residual (density > 0.5)",
+            build: |d| {
+                let mut s = lowrank("lowrank-s24-q8", PruneAlgo::SvdLlm, d);
+                s.recon = mpifa_recon();
+                s.pack = PackStage::Sparse24ResidualQuant;
+                s
+            },
+        }),
     ]
 }
 
@@ -418,6 +433,8 @@ mod tests {
         }
         assert_eq!(get("MPIFA").unwrap().name(), "mpifa"); // case-insensitive
         assert_eq!(get("losparse").unwrap().name(), "lowrank-s24");
+        assert_eq!(get("losparse-q8").unwrap().name(), "lowrank-s24-q8");
+        assert_eq!(get("hybridq8").unwrap().name(), "lowrank-s24-q8");
     }
 
     #[test]
@@ -468,6 +485,15 @@ mod tests {
         assert_eq!(spec.pack, PackStage::Sparse24Residual);
         assert_eq!(spec.artifact_flavour(), "lowrank+s24");
         // Invalid at <= 0.5 — the validator, not the preset, owns the rule.
+        assert!(c.spec(0.4).unwrap().validate().is_err());
+    }
+
+    #[test]
+    fn quant_hybrid_preset_is_a_single_registration() {
+        let c = get("lowrank-s24-q8").unwrap();
+        let spec = c.spec(0.7).unwrap();
+        assert_eq!(spec.pack, PackStage::Sparse24ResidualQuant);
+        assert_eq!(spec.artifact_flavour(), "lowrank+s24q8");
         assert!(c.spec(0.4).unwrap().validate().is_err());
     }
 }

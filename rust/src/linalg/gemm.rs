@@ -21,6 +21,17 @@ use crate::runtime::kernels::pool::SendPtr;
 /// K-dimension cache block.
 const KC: usize = 256;
 
+/// N-dimension cache block for the packed prefill path: a `KC x NC`
+/// panel of B is copied into contiguous per-thread scratch so it stays
+/// L2-resident (and TLB-friendly) across every row of the band instead
+/// of striding `n` elements between consecutive k-steps.
+const NC: usize = 512;
+
+/// Minimum band height before panel packing amortizes its copy cost:
+/// each packed panel is reused `rows` times, so thin bands (decode-adjacent
+/// shapes) keep the direct streaming kernel.
+const PACK_MIN_ROWS: usize = 8;
+
 /// `C = A * B`.
 pub fn matmul<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
     let mut c = Mat::zeros(a.rows(), b.cols());
@@ -60,6 +71,8 @@ pub fn matmul_into_acc<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
 }
 
 /// Accumulate rows `[r0, r0+rows)` of C (C slice starts at the band).
+/// Prefill shapes (tall band, wide B) take the packed-panel variant;
+/// everything else streams B directly.
 fn kernel_band_local<T: Scalar>(
     a: &[T],
     b: &[T],
@@ -69,6 +82,10 @@ fn kernel_band_local<T: Scalar>(
     k: usize,
     n: usize,
 ) {
+    if rows >= PACK_MIN_ROWS && n > NC {
+        kernel_band_packed(a, b, c_band, r0, rows, k, n);
+        return;
+    }
     for kb in (0..k).step_by(KC) {
         let kmax = (kb + KC).min(k);
         for i in 0..rows {
@@ -100,6 +117,59 @@ fn kernel_band_local<T: Scalar>(
             }
         }
     }
+}
+
+/// Cache-blocked packed variant of [`kernel_band_local`] for prefill
+/// shapes: each `KC x NC` panel of B is copied once into contiguous
+/// per-thread scratch (`Scalar::with_scratch` — reused across calls, so
+/// steady state allocates nothing) and then reused by all `rows` axpy
+/// passes of the band. Same 2-step k-unroll and accumulation order per
+/// `(i, j)` as the direct kernel, so results stay bitwise-compatible
+/// with it when the j-blocks align — and identical math regardless.
+fn kernel_band_packed<T: Scalar>(
+    a: &[T],
+    b: &[T],
+    c_band: &mut [T],
+    r0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    T::with_scratch(KC * NC, |panel| {
+        for kb in (0..k).step_by(KC) {
+            let kmax = (kb + KC).min(k);
+            let klen = kmax - kb;
+            for jb in (0..n).step_by(NC) {
+                let jmax = (jb + NC).min(n);
+                let jlen = jmax - jb;
+                for (kk, dst) in (kb..kmax).zip(panel.chunks_mut(jlen)) {
+                    dst.copy_from_slice(&b[kk * n + jb..kk * n + jmax]);
+                }
+                for i in 0..rows {
+                    let arow = &a[(r0 + i) * k..(r0 + i + 1) * k];
+                    let crow = &mut c_band[i * n + jb..i * n + jmax];
+                    let mut kk = 0;
+                    while kk + 2 <= klen {
+                        let a0 = arow[kb + kk];
+                        let a1 = arow[kb + kk + 1];
+                        let b0 = &panel[kk * jlen..(kk + 1) * jlen];
+                        let b1 = &panel[(kk + 1) * jlen..(kk + 2) * jlen];
+                        for ((cv, &v0), &v1) in crow.iter_mut().zip(b0).zip(b1) {
+                            *cv = *cv + v0 * a0 + v1 * a1;
+                        }
+                        kk += 2;
+                    }
+                    if kk < klen {
+                        let a0 = arow[kb + kk];
+                        let b0 = &panel[kk * jlen..(kk + 1) * jlen];
+                        for (cv, &v0) in crow.iter_mut().zip(b0) {
+                            *cv = v0.mul_add_s(a0, *cv);
+                        }
+                    }
+                }
+            }
+        }
+    });
 }
 
 /// `C = A * B^T` — rows-dot-rows; used for `X X^T` / `Y X^T` accumulators
@@ -228,6 +298,23 @@ mod tests {
         let mut c3 = Mat::zeros(9, 11);
         matmul_into_acc(&a, &b, &mut c3);
         assert!(c3.rel_fro_err(&prod) < 1e-12);
+    }
+
+    #[test]
+    fn packed_prefill_path_matches_naive() {
+        // rows >= PACK_MIN_ROWS and n > NC force kernel_band_packed; the
+        // shapes straddle the NC boundary so partial j-blocks are hit.
+        let mut rng = Rng::new(12);
+        for &(m, k, n) in &[(8usize, 3usize, NC + 1), (16, 64, 600), (9, 130, 2 * NC + 7)] {
+            let a: Mat<f64> = Mat::randn(m, k, &mut rng);
+            let b: Mat<f64> = Mat::randn(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.rel_fro_err(&naive(&a, &b)) < 1e-12, "shape ({m},{k},{n})");
+        }
+        // f32 too (shares the path through Scalar::with_scratch).
+        let a: Mat<f32> = Mat::randn(10, 40, &mut rng);
+        let b: Mat<f32> = Mat::randn(40, NC + 33, &mut rng);
+        assert!(matmul(&a, &b).rel_fro_err(&naive(&a, &b)) < 1e-4);
     }
 
     #[test]

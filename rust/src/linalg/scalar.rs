@@ -48,6 +48,37 @@ pub trait Scalar:
     fn mul_add_s(self, a: Self, b: Self) -> Self {
         self * a + b
     }
+
+    /// Runtime-dispatched SIMD dot, if a wide tier exists for this type
+    /// *and* the `PIFA_SIMD` mode is on: `None` means "run the scalar
+    /// kernel". Only f32 has a wide tier
+    /// ([`crate::runtime::kernels::simd`]); f64 stays on the scalar path.
+    #[inline(always)]
+    fn simd_dot(_a: &[Self], _b: &[Self]) -> Option<Self> {
+        None
+    }
+
+    /// Runtime-dispatched SIMD batched dot against one shared row:
+    /// writes `out[bi] = <a[bi*k..(bi+1)*k], brow>` for `bi in 0..bm` and
+    /// returns `true` when the wide tier handled it; `false` means "run
+    /// the scalar loop". Same dispatch rule as [`Scalar::simd_dot`].
+    #[inline(always)]
+    fn simd_batch_dot(
+        _a: &[Self],
+        _bm: usize,
+        _k: usize,
+        _brow: &[Self],
+        _out: &mut [Self],
+    ) -> bool {
+        false
+    }
+
+    /// Borrow a per-thread reusable scratch buffer of exactly `len`
+    /// elements (contents unspecified — the caller must fully write what
+    /// it reads). Kernel-internal: lets hot-path kernels like the fused
+    /// PIFA apply run allocation-free at steady state. Not reentrant —
+    /// `f` must not call `with_scratch` for the same type again.
+    fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [Self]) -> R) -> R;
 }
 
 impl Scalar for f32 {
@@ -90,6 +121,27 @@ impl Scalar for f32 {
     #[inline(always)]
     fn is_finite_s(self) -> bool {
         f32::is_finite(self)
+    }
+    #[inline(always)]
+    fn simd_dot(a: &[Self], b: &[Self]) -> Option<Self> {
+        crate::runtime::kernels::simd::dot_checked(a, b)
+    }
+    #[inline(always)]
+    fn simd_batch_dot(a: &[Self], bm: usize, k: usize, brow: &[Self], out: &mut [Self]) -> bool {
+        crate::runtime::kernels::simd::batch_dot_checked(a, bm, k, brow, out)
+    }
+    fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [Self]) -> R) -> R {
+        thread_local! {
+            static SCRATCH_F32: std::cell::RefCell<Vec<f32>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
+        SCRATCH_F32.with(|c| {
+            let mut v = c.borrow_mut();
+            if v.len() < len {
+                v.resize(len, 0.0);
+            }
+            f(&mut v[..len])
+        })
     }
 }
 
@@ -134,6 +186,19 @@ impl Scalar for f64 {
     fn is_finite_s(self) -> bool {
         f64::is_finite(self)
     }
+    fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [Self]) -> R) -> R {
+        thread_local! {
+            static SCRATCH_F64: std::cell::RefCell<Vec<f64>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
+        SCRATCH_F64.with(|c| {
+            let mut v = c.borrow_mut();
+            if v.len() < len {
+                v.resize(len, 0.0);
+            }
+            f(&mut v[..len])
+        })
+    }
 }
 
 #[cfg(test)]
@@ -158,5 +223,23 @@ mod tests {
     fn mul_add_matches() {
         let r = 2.0f64.mul_add_s(3.0, 4.0);
         assert_eq!(r, 10.0);
+    }
+
+    #[test]
+    fn f64_has_no_simd_tier() {
+        assert!(f64::simd_dot(&[1.0, 2.0], &[3.0, 4.0]).is_none());
+        let mut out = [0f64; 1];
+        assert!(!f64::simd_batch_dot(&[1.0, 2.0], 1, 2, &[3.0, 4.0], &mut out));
+    }
+
+    #[test]
+    fn scratch_hands_out_exactly_len() {
+        f64::with_scratch(8, |s| {
+            assert_eq!(s.len(), 8);
+            s[0] = 42.0;
+        });
+        // A second borrow reuses the grown buffer but still sizes to len.
+        f64::with_scratch(3, |s| assert_eq!(s.len(), 3));
+        f32::with_scratch(5, |s| assert_eq!(s.len(), 5));
     }
 }

@@ -18,7 +18,7 @@
 
 use crate::linalg::{self, Mat};
 use crate::pifa::PifaLayer;
-use crate::sparse24::Sparse24Mat;
+use crate::sparse24::{QuantSparse24Mat, Sparse24Mat};
 
 /// One linear module's weights in some representation. Logical shape is
 /// always `W (m x n)` acting as `Y = X W^T`.
@@ -37,6 +37,12 @@ pub enum LinearRepr {
     /// the principal subspace; the residual recovers salient outliers the
     /// subspace misses.
     LowRankSparse { u: Mat<f32>, vt: Mat<f32>, residual: Sparse24Mat },
+    /// Hybrid low-rank + int8 per-channel-quantized 2:4 residual: the
+    /// same decomposition as [`LinearRepr::LowRankSparse`] with the
+    /// residual values stored as `i8` + one f32 scale per output row
+    /// (the residual carries outlier corrections, so it tolerates 8-bit
+    /// precision while the factors stay f32).
+    LowRankQuantSparse { u: Mat<f32>, vt: Mat<f32>, residual: QuantSparse24Mat },
 }
 
 /// Gradients matching a [`LinearRepr`].
@@ -46,7 +52,10 @@ pub enum LinearGrad {
     Pifa { dw_p: Mat<f32>, dc: Mat<f32> },
     /// Dense-shaped gradient already masked to the 2:4 pattern.
     Sparse24(Mat<f32>),
-    /// Factor gradients plus a masked dense residual gradient.
+    /// Factor gradients plus a masked dense residual gradient. Shared by
+    /// [`LinearRepr::LowRankSparse`] and [`LinearRepr::LowRankQuantSparse`]
+    /// — the quantized residual's gradient is computed against its
+    /// dequantized dense view.
     LowRankSparse { du: Mat<f32>, dvt: Mat<f32>, dres: Mat<f32> },
 }
 
@@ -59,6 +68,7 @@ impl LinearRepr {
             LinearRepr::Pifa(p) => p.m,
             LinearRepr::Sparse24(s) => s.m,
             LinearRepr::LowRankSparse { u, .. } => u.rows(),
+            LinearRepr::LowRankQuantSparse { u, .. } => u.rows(),
         }
     }
 
@@ -70,6 +80,7 @@ impl LinearRepr {
             LinearRepr::Pifa(p) => p.n,
             LinearRepr::Sparse24(s) => s.n,
             LinearRepr::LowRankSparse { vt, .. } => vt.cols(),
+            LinearRepr::LowRankQuantSparse { vt, .. } => vt.cols(),
         }
     }
 
@@ -83,6 +94,9 @@ impl LinearRepr {
             LinearRepr::LowRankSparse { u, vt, residual } => {
                 u.rows() * u.cols() + vt.rows() * vt.cols() + residual.value_count()
             }
+            LinearRepr::LowRankQuantSparse { u, vt, residual } => {
+                u.rows() * u.cols() + vt.rows() * vt.cols() + residual.value_count()
+            }
         }
     }
 
@@ -92,6 +106,10 @@ impl LinearRepr {
             LinearRepr::Sparse24(s) => s.memory_bytes_fp16(),
             LinearRepr::Pifa(p) => p.param_count() * 2 + p.rank() * 4, // + i32 indices
             LinearRepr::LowRankSparse { u, vt, residual } => {
+                (u.rows() * u.cols() + vt.rows() * vt.cols()) * 2 + residual.memory_bytes_fp16()
+            }
+            LinearRepr::LowRankQuantSparse { u, vt, residual } => {
+                // Factors at fp16, residual at int8 + 2-bit meta + scales.
                 (u.rows() * u.cols() + vt.rows() * vt.cols()) * 2 + residual.memory_bytes_fp16()
             }
             other => other.param_count() * 2,
@@ -109,6 +127,10 @@ impl LinearRepr {
             LinearRepr::Pifa(p) => p.apply_rows(x),
             LinearRepr::Sparse24(s) => s.apply_rows(x),
             LinearRepr::LowRankSparse { u, vt, residual } => {
+                let z = linalg::matmul_nt(x, vt); // b x r
+                linalg::matmul_nt(&z, u).add_mat(&residual.apply_rows(x))
+            }
+            LinearRepr::LowRankQuantSparse { u, vt, residual } => {
                 let z = linalg::matmul_nt(x, vt); // b x r
                 linalg::matmul_nt(&z, u).add_mat(&residual.apply_rows(x))
             }
@@ -188,6 +210,23 @@ impl LinearRepr {
                     linalg::matmul(&dz, vt).add_mat(&linalg::matmul(dy, &residual.to_dense()));
                 (dx, LinearGrad::LowRankSparse { du, dvt, dres })
             }
+            LinearRepr::LowRankQuantSparse { u, vt, residual } => {
+                // Identical math to LowRankSparse against the dequantized
+                // residual view; the gradient shape is shared.
+                let z = linalg::matmul_nt(x, vt); // b x r
+                let dz = linalg::matmul(dy, u); // b x r
+                let du = linalg::matmul_tn(dy, &z); // m x r
+                let dvt = linalg::matmul_tn(&dz, x); // r x n
+                let mut dres = linalg::matmul_tn(dy, x);
+                for (g, &keep) in dres.as_mut_slice().iter_mut().zip(residual.keep_mask().iter()) {
+                    if !keep {
+                        *g = 0.0;
+                    }
+                }
+                let dx =
+                    linalg::matmul(&dz, vt).add_mat(&linalg::matmul(dy, &residual.to_dense()));
+                (dx, LinearGrad::LowRankSparse { du, dvt, dres })
+            }
         }
     }
 
@@ -247,6 +286,28 @@ impl LinearRepr {
                     }
                 });
             }
+            (
+                LinearRepr::LowRankQuantSparse { u, vt, residual },
+                LinearGrad::LowRankSparse { du, dvt, dres },
+            ) => {
+                for (p, g) in u.as_mut_slice().iter_mut().zip(du.as_slice()) {
+                    *p -= lr * g;
+                }
+                for (p, g) in vt.as_mut_slice().iter_mut().zip(dvt.as_slice()) {
+                    *p -= lr * g;
+                }
+                // Dequantize → step → requantize against the same mask
+                // (fine-tuning path only; rescales per row).
+                residual.update_dense(|w, mask| {
+                    for ((p, g), &keep) in
+                        w.as_mut_slice().iter_mut().zip(dres.as_slice()).zip(mask.iter())
+                    {
+                        if keep {
+                            *p -= lr * g;
+                        }
+                    }
+                });
+            }
             _ => panic!("LinearRepr::apply_grad: representation/gradient mismatch"),
         }
     }
@@ -261,6 +322,9 @@ impl LinearRepr {
             LinearRepr::LowRankSparse { u, vt, residual } => {
                 linalg::matmul(u, vt).add_mat(&residual.to_dense())
             }
+            LinearRepr::LowRankQuantSparse { u, vt, residual } => {
+                linalg::matmul(u, vt).add_mat(&residual.to_dense())
+            }
         }
     }
 
@@ -272,6 +336,7 @@ impl LinearRepr {
             LinearRepr::Pifa(_) => "pifa",
             LinearRepr::Sparse24(_) => "sparse24",
             LinearRepr::LowRankSparse { .. } => "lowrank+s24",
+            LinearRepr::LowRankQuantSparse { .. } => "lowrank+s24q8",
         }
     }
 }
@@ -292,12 +357,20 @@ mod tests {
         let sp = Sparse24Mat::pack_magnitude(&w_dense);
         let res = Sparse24Mat::pack_magnitude(&w_dense.sub_mat(&w_lr));
         let w_hybrid = w_lr.add_mat(&res.to_dense());
+        let resid_dense = w_dense.sub_mat(&w_lr);
+        let qmask = crate::sparse24::prune_mask_24(&resid_dense.map(|v| v.abs()));
+        let qres = QuantSparse24Mat::quantize(&resid_dense, &qmask);
+        let w_qhybrid = w_lr.add_mat(&qres.to_dense());
         vec![
             (LinearRepr::Dense(w_dense.clone()), w_dense.clone()),
             (LinearRepr::LowRank { u: u.clone(), vt: vt.clone() }, w_lr.clone()),
             (LinearRepr::Pifa(pifa), w_lr.clone()),
             (LinearRepr::Sparse24(sp.clone()), sp.to_dense()),
-            (LinearRepr::LowRankSparse { u, vt, residual: res }, w_hybrid),
+            (
+                LinearRepr::LowRankSparse { u: u.clone(), vt: vt.clone(), residual: res },
+                w_hybrid,
+            ),
+            (LinearRepr::LowRankQuantSparse { u, vt, residual: qres }, w_qhybrid),
         ]
     }
 
@@ -460,6 +533,37 @@ mod tests {
                         }
                     }
                 }
+                (
+                    LinearRepr::LowRankQuantSparse { u, vt, residual },
+                    LinearGrad::LowRankSparse { du, dres, .. },
+                ) => {
+                    // Factor gradient: finite-difference one entry of U.
+                    // (The quantized residual is fixed during the central
+                    // difference, so the factor gradient is exact.)
+                    let mut up = u.clone();
+                    up[(1, 2)] += h;
+                    let mut um = u.clone();
+                    um[(1, 2)] -= h;
+                    let mk = |uu: Mat<f32>| LinearRepr::LowRankQuantSparse {
+                        u: uu,
+                        vt: vt.clone(),
+                        residual: residual.clone(),
+                    };
+                    let num = (objective(&mk(up)) - objective(&mk(um))) / (2.0 * h);
+                    assert!((num - du[(1, 2)]).abs() < 5e-2, "quant du fd {num} vs {}", du[(1, 2)]);
+                    // Residual gradient respects the 2:4 keep mask. Use the
+                    // mask rather than zero-valued dense entries: a kept
+                    // value can round to 0 under int8 and still carry grad.
+                    let mask = residual.keep_mask();
+                    let n = residual.n;
+                    for i in 0..residual.m {
+                        for j in 0..n {
+                            if !mask[i * n + j] {
+                                assert_eq!(dres[(i, j)], 0.0);
+                            }
+                        }
+                    }
+                }
                 _ => unreachable!(),
             }
         }
@@ -477,7 +581,11 @@ mod tests {
             repr.apply_grad(&grad, 1e-3);
             let y1 = repr.forward(&x);
             let l1: f32 = 0.5 * y1.as_slice().iter().map(|v| v * v).sum::<f32>();
-            assert!(l1 < l0, "{}: {l0} -> {l1}", repr.kind_name());
+            // The quantized residual requantizes after its SGD step, which
+            // injects bounded rounding noise on top of the descent step;
+            // allow a small slack for that representation only.
+            let tol = if repr.kind_name() == "lowrank+s24q8" { l0 * 0.02 } else { 0.0 };
+            assert!(l1 < l0 + tol, "{}: {l0} -> {l1}", repr.kind_name());
         }
     }
 

@@ -13,7 +13,7 @@ use crate::model::linear::LinearRepr;
 use crate::model::transformer::{Attention, Block, Mlp, Transformer};
 use crate::model::ops::RopeTable;
 use crate::pifa::PifaLayer;
-use crate::sparse24::Sparse24Mat;
+use crate::sparse24::{QuantSparse24Mat, Sparse24Mat};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
@@ -122,6 +122,19 @@ fn r_mask(r: &mut impl Read) -> Result<Vec<bool>> {
     Ok(bytes.into_iter().map(|b| b != 0).collect())
 }
 
+fn w_bytes(w: &mut impl Write, b: &[u8]) -> Result<()> {
+    w_u64(w, b.len() as u64)?;
+    w.write_all(b)?;
+    Ok(())
+}
+
+fn r_bytes(r: &mut impl Read) -> Result<Vec<u8>> {
+    let n = r_u64(r)? as usize;
+    let mut bytes = vec![0u8; n];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes)
+}
+
 fn w_linear(w: &mut impl Write, l: &LinearRepr) -> Result<()> {
     match l {
         LinearRepr::Dense(m) => {
@@ -158,6 +171,21 @@ fn w_linear(w: &mut impl Write, l: &LinearRepr) -> Result<()> {
             w_mat(w, vt)?;
             w_mat(w, &residual.to_dense())?;
             w_mask(w, &residual.keep_mask())?;
+        }
+        LinearRepr::LowRankQuantSparse { u, vt, residual } => {
+            // The packed int8 payload round-trips bit-exactly: writing the
+            // dequantized dense and requantizing on load could flip
+            // round-to-even boundary values, so store the raw parts.
+            w.write_all(&[6u8])?;
+            w_mat(w, u)?;
+            w_mat(w, vt)?;
+            let (m, n, values, meta, scales) = residual.to_parts();
+            w_u64(w, m as u64)?;
+            w_u64(w, n as u64)?;
+            w_f32s(w, scales)?;
+            let vbytes: Vec<u8> = values.iter().map(|&v| v as u8).collect();
+            w_bytes(w, &vbytes)?;
+            w_bytes(w, meta)?;
         }
     }
     Ok(())
@@ -207,6 +235,20 @@ fn r_linear(r: &mut impl Read) -> Result<LinearRepr> {
             let dense = r_mat(r)?;
             let mask = r_mask(r)?;
             LinearRepr::Sparse24(Sparse24Mat::pack(&dense, &mask))
+        }
+        6 => {
+            let u = r_mat(r)?;
+            let vt = r_mat(r)?;
+            let m = r_u64(r)? as usize;
+            let n = r_u64(r)? as usize;
+            let scales = r_f32s(r)?;
+            let values: Vec<i8> = r_bytes(r)?.into_iter().map(|b| b as i8).collect();
+            let meta = r_bytes(r)?;
+            LinearRepr::LowRankQuantSparse {
+                u,
+                vt,
+                residual: QuantSparse24Mat::from_parts(m, n, values, meta, scales),
+            }
         }
         t => bail!("unknown linear tag {t}"),
     })
@@ -468,6 +510,33 @@ mod tests {
         let la = model.forward(&[1, 8, 3], None);
         let lb = loaded.forward(&[1, 8, 3], None);
         assert!(la.rel_fro_err(&lb) < 1e-6);
+        assert_eq!(loaded.blocks[0].attn.wk.param_count(), model.blocks[0].attn.wk.param_count());
+    }
+
+    #[test]
+    fn quant_hybrid_repr_roundtrip_exact() {
+        let cfg = ModelConfig::tiny_s();
+        let mut rng = Rng::new(186);
+        let mut model = Transformer::new_random(&cfg, &mut rng);
+        let w = model.blocks[0].attn.wk.to_dense();
+        let f = crate::linalg::svd(&w);
+        let (u, vt) = f.truncate(6);
+        let resid = w.sub_mat(&crate::linalg::matmul(&u, &vt));
+        let mask = crate::sparse24::prune_mask_24(&resid.map(|v| v.abs()));
+        let q = QuantSparse24Mat::quantize(&resid, &mask);
+        model.blocks[0].attn.wk = LinearRepr::LowRankQuantSparse { u, vt, residual: q };
+
+        let path = tmpfile("qhybrid.ckpt");
+        save_checkpoint(&model, &path).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.blocks[0].attn.wk.kind_name(), "lowrank+s24q8");
+        // Raw-parts payload: the int8 codes and scales survive bitwise, so
+        // the effective dense weight is exactly equal, not just close.
+        assert_eq!(loaded.blocks[0].attn.wk.to_dense(), model.blocks[0].attn.wk.to_dense());
+        let la = model.forward(&[1, 8, 3], None);
+        let lb = loaded.forward(&[1, 8, 3], None);
+        assert_eq!(la, lb);
         assert_eq!(loaded.blocks[0].attn.wk.param_count(), model.blocks[0].attn.wk.param_count());
     }
 }

@@ -23,59 +23,79 @@ use crate::pifa::PifaLayer;
 
 /// Transformer-layout fused apply: `X (b x n) -> Y = X W'^T (b x m)`.
 /// Works for any batch; the dispatch in [`PifaLayer::apply_rows`] uses it
-/// for decode batches (`b <= DECODE_BATCH_MAX`).
+/// for decode batches (`b <= DECODE_BATCH_MAX`). Allocates the output —
+/// the steady-state decode loop should hold a reusable output and call
+/// [`pifa_apply_rows_fused_into`] instead.
 pub fn pifa_apply_rows_fused<T: Scalar>(layer: &PifaLayer<T>, x: &Mat<T>) -> Mat<T> {
+    let mut y = Mat::zeros(x.rows(), layer.m);
+    pifa_apply_rows_fused_into(layer, x, &mut y);
+    y
+}
+
+/// [`pifa_apply_rows_fused`] with a caller-owned output (`y` must be
+/// `b x m`). The `b x r` `y_p` buffer comes from the per-thread scratch
+/// (`Scalar::with_scratch`), so steady-state decode makes zero transient
+/// heap allocations; every output element is written (pivots by phase 1,
+/// non-pivots by phase 2), so stale contents of `y` never leak through.
+pub fn pifa_apply_rows_fused_into<T: Scalar>(layer: &PifaLayer<T>, x: &Mat<T>, y: &mut Mat<T>) {
     assert_eq!(x.cols(), layer.n, "pifa_apply_rows_fused: input dim mismatch");
     let b = x.rows();
     let m = layer.m;
     let r = layer.rank();
-    let mut y = Mat::zeros(b, m);
-    if b == 0 || m == 0 || r == 0 {
-        return y;
+    let n = layer.n;
+    assert_eq!(y.shape(), (b, m), "pifa_apply_rows_fused_into: output shape mismatch");
+    if b == 0 || m == 0 {
+        return;
     }
-    let xrows: Vec<&[T]> = (0..b).map(|bi| x.row(bi)).collect();
-    let mut y_p = vec![T::ZERO; b * r];
-
-    // Phase 1: pivot-row dots, scattered into Y as they are produced.
-    {
-        let y_ptr = SendPtr::new(y.as_mut_slice().as_mut_ptr());
-        let yp_ptr = SendPtr::new(y_p.as_mut_ptr());
-        super::scope_chunks(r, 2 * b * r * layer.n, |k0, k1| {
-            for k in k0..k1 {
-                let wrow = layer.w_p.row(k);
-                let piv = layer.pivots[k];
-                for (bi, xrow) in xrows.iter().enumerate() {
-                    let v = dot(wrow, xrow);
-                    // SAFETY: pivot indices are unique and each chunk owns
-                    // a disjoint k-range, so every (bi, k) / (bi, piv)
-                    // element is written by exactly one job.
-                    unsafe {
-                        yp_ptr.write(bi * r + k, v);
-                        y_ptr.write(bi * m + piv, v);
+    if r == 0 {
+        y.as_mut_slice().fill(T::ZERO);
+        return;
+    }
+    let x_s = x.as_slice();
+    T::with_scratch(b * r, |y_p| {
+        // Phase 1: pivot-row dots, scattered into Y as they are produced.
+        // y_p is fully written here (every (bi, k)), so the unspecified
+        // scratch contents never escape.
+        {
+            let y_ptr = SendPtr::new(y.as_mut_slice().as_mut_ptr());
+            let yp_ptr = SendPtr::new(y_p.as_mut_ptr());
+            super::scope_chunks(r, 2 * b * r * n, |k0, k1| {
+                for k in k0..k1 {
+                    let wrow = layer.w_p.row(k);
+                    let piv = layer.pivots[k];
+                    for bi in 0..b {
+                        let v = dot(wrow, &x_s[bi * n..(bi + 1) * n]);
+                        // SAFETY: pivot indices are unique and each chunk
+                        // owns a disjoint k-range, so every (bi, k) /
+                        // (bi, piv) element is written by exactly one job.
+                        unsafe {
+                            yp_ptr.write(bi * r + k, v);
+                            y_ptr.write(bi * m + piv, v);
+                        }
                     }
                 }
-            }
-        });
-    }
+            });
+        }
 
-    // Phase 2: non-pivot rows combine the completed y_p.
-    {
-        let nnp = layer.non_pivots.len();
-        let y_ptr = SendPtr::new(y.as_mut_slice().as_mut_ptr());
-        super::scope_chunks(nnp, 2 * b * nnp * r, |k0, k1| {
-            for k in k0..k1 {
-                let crow = layer.c.row(k);
-                let np = layer.non_pivots[k];
-                for bi in 0..b {
-                    let v = dot(crow, &y_p[bi * r..(bi + 1) * r]);
-                    // SAFETY: non-pivot indices are unique and disjoint
-                    // from pivot indices; chunks own disjoint k-ranges.
-                    unsafe { y_ptr.write(bi * m + np, v) };
+        // Phase 2: non-pivot rows combine the completed y_p.
+        {
+            let nnp = layer.non_pivots.len();
+            let y_ptr = SendPtr::new(y.as_mut_slice().as_mut_ptr());
+            let y_p: &[T] = y_p;
+            super::scope_chunks(nnp, 2 * b * nnp * r, |k0, k1| {
+                for k in k0..k1 {
+                    let crow = layer.c.row(k);
+                    let np = layer.non_pivots[k];
+                    for bi in 0..b {
+                        let v = dot(crow, &y_p[bi * r..(bi + 1) * r]);
+                        // SAFETY: non-pivot indices are unique and disjoint
+                        // from pivot indices; chunks own disjoint k-ranges.
+                        unsafe { y_ptr.write(bi * m + np, v) };
+                    }
                 }
-            }
-        });
-    }
-    y
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -108,6 +128,23 @@ mod tests {
                 assert!(fused.rel_fro_err(&dense) < 1e-9, "({m},{n},{r}) b={b} vs dense");
             }
         }
+    }
+
+    #[test]
+    fn into_overwrites_stale_output() {
+        let (w, layer) = layer_for(24, 16, 6, 620);
+        let mut rng = Rng::new(621);
+        let x: Mat<f64> = Mat::randn(3, 16, &mut rng);
+        // Garbage-prefilled reusable output must be fully overwritten
+        // (pivot rows by phase 1, non-pivot rows by phase 2).
+        let mut y: Mat<f64> = Mat::full(3, 24, 9.0);
+        pifa_apply_rows_fused_into(&layer, &x, &mut y);
+        assert!(y.rel_fro_err(&linalg::matmul_nt(&x, &w)) < 1e-9);
+        // Reuse the same buffer for a second batch: thread-local scratch
+        // and output are both recycled.
+        let x2: Mat<f64> = Mat::randn(3, 16, &mut rng);
+        pifa_apply_rows_fused_into(&layer, &x2, &mut y);
+        assert!(y.rel_fro_err(&linalg::matmul_nt(&x2, &w)) < 1e-9);
     }
 
     #[test]

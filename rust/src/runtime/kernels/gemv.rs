@@ -14,10 +14,25 @@ use super::pool::SendPtr;
 use super::DECODE_BATCH_MAX;
 use crate::linalg::{Mat, Scalar};
 
-/// Four-accumulator dot product (the scalar core of every decode kernel;
-/// the independent chains let LLVM vectorize the `mul_add` stream).
+/// Dot product — the inner core of every decode kernel. Consults the
+/// runtime-dispatched wide tier first (`Scalar::simd_dot`, f32 only —
+/// see [`super::simd`]); otherwise runs the four-accumulator scalar
+/// loop, whose independent chains let LLVM vectorize the `mul_add`
+/// stream.
 #[inline]
 pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
+    debug_assert_eq!(a.len(), b.len());
+    if let Some(v) = T::simd_dot(a, b) {
+        return v;
+    }
+    dot_scalar(a, b)
+}
+
+/// The scalar four-chain core [`dot`] falls back to. Public so the
+/// kernel bench can time the scalar tier against [`super::simd::dot`]
+/// regardless of what runtime detection picked for the wired path.
+#[inline]
+pub fn dot_scalar<T: Scalar>(a: &[T], b: &[T]) -> T {
     debug_assert_eq!(a.len(), b.len());
     let len = a.len();
     let mut acc0 = T::ZERO;
@@ -41,36 +56,53 @@ pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
 
 /// Skinny `C = A B^T` with `A (b x k)`, `B (n x k)`, `b <= DECODE_BATCH_MAX`:
 /// the batch-`b` GEMV. Each row of `B` is streamed once against all `b`
-/// rows of `A`; rows of `B` are chunked across the pool.
+/// rows of `A`; rows of `B` are chunked across the pool. Allocates the
+/// output — the steady-state decode loop should hold a reusable output
+/// and call [`skinny_nt_into`] instead.
 pub fn skinny_nt<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    skinny_nt_into(a, b, &mut c);
+    c
+}
+
+/// [`skinny_nt`] with a caller-owned output (`c` must be `b x n`). Makes
+/// zero transient heap allocations: every output element is written, no
+/// scratch is needed, and the pool path reuses its persistent workers
+/// (below [`super::PAR_FLOP_THRESHOLD`] the chunk runs inline).
+pub fn skinny_nt_into<T: Scalar>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T>) {
     let (bm, k) = a.shape();
     let (n, k2) = b.shape();
     assert_eq!(k, k2, "skinny_nt: inner dim mismatch {bm}x{k} * {n}x{k2}");
     // Hard assert: the accumulator array below holds DECODE_BATCH_MAX
     // lanes, so a larger batch would silently drop rows in release.
     assert!(bm <= DECODE_BATCH_MAX, "skinny_nt: batch {bm} exceeds {DECODE_BATCH_MAX}");
-    let mut c = Mat::zeros(bm, n);
-    if bm == 0 || n == 0 || k == 0 {
-        return c;
+    assert_eq!(c.shape(), (bm, n), "skinny_nt_into: output shape mismatch");
+    if bm == 0 || n == 0 {
+        return;
     }
+    if k == 0 {
+        c.as_mut_slice().fill(T::ZERO);
+        return;
+    }
+    let a_s = a.as_slice();
     let b_s = b.as_slice();
-    let arows: Vec<&[T]> = (0..bm).map(|bi| a.row(bi)).collect();
     let c_ptr = SendPtr::new(c.as_mut_slice().as_mut_ptr());
     super::scope_chunks(n, 2 * bm * n * k, |j0, j1| {
         if bm == 1 {
-            let arow = arows[0];
             for j in j0..j1 {
                 let brow = &b_s[j * k..(j + 1) * k];
                 // SAFETY: each chunk owns columns [j0, j1) exclusively.
-                unsafe { c_ptr.write(j, dot(arow, brow)) };
+                unsafe { c_ptr.write(j, dot(a_s, brow)) };
             }
         } else {
             for j in j0..j1 {
                 let brow = &b_s[j * k..(j + 1) * k];
                 let mut acc = [T::ZERO; DECODE_BATCH_MAX];
-                for (kk, &bv) in brow.iter().enumerate() {
-                    for (ac, arow) in acc.iter_mut().zip(arows.iter()) {
-                        *ac = arow[kk].mul_add_s(bv, *ac);
+                if !T::simd_batch_dot(a_s, bm, k, brow, &mut acc[..bm]) {
+                    for (kk, &bv) in brow.iter().enumerate() {
+                        for (bi, ac) in acc.iter_mut().enumerate().take(bm) {
+                            *ac = a_s[bi * k + kk].mul_add_s(bv, *ac);
+                        }
                     }
                 }
                 for (bi, ac) in acc.iter().enumerate().take(bm) {
@@ -80,7 +112,6 @@ pub fn skinny_nt<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
             }
         }
     });
-    c
 }
 
 #[cfg(test)]
@@ -136,6 +167,28 @@ mod tests {
         let b: Mat<f64> = Mat::randn(1200, 2048, &mut rng);
         let c = skinny_nt(&a, &b);
         assert!(c.rel_fro_err(&naive_nt(&a, &b)) < 1e-11);
+    }
+
+    #[test]
+    fn into_overwrites_stale_output() {
+        let mut rng = Rng::new(604);
+        for bm in 1..=DECODE_BATCH_MAX {
+            let a: Mat<f64> = Mat::randn(bm, 17, &mut rng);
+            let b: Mat<f64> = Mat::randn(33, 17, &mut rng);
+            // Garbage-prefilled reusable output must be fully overwritten.
+            let mut c: Mat<f64> = Mat::full(bm, 33, 7.0);
+            skinny_nt_into(&a, &b, &mut c);
+            assert!(c.rel_fro_err(&naive_nt(&a, &b)) < 1e-12, "bm={bm}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "output shape mismatch")]
+    fn into_rejects_wrong_output_shape() {
+        let a: Mat<f64> = Mat::zeros(1, 3);
+        let b: Mat<f64> = Mat::zeros(4, 3);
+        let mut c: Mat<f64> = Mat::zeros(1, 5);
+        skinny_nt_into(&a, &b, &mut c);
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //! * [`gather`] — paged-KV access kernels: the `(L, B, S, d)` merged
 //!   gather for the PJRT decode artifact and the per-lane raw-slab views
 //!   a parallel native decode iteration writes through (DESIGN.md §8).
+//! * [`simd`] — the runtime-dispatched f32 wide-lane tier underneath the
+//!   kernels above (portable `[f32; 8]` blocks, AVX2+FMA instantiation
+//!   on detected x86_64, `PIFA_SIMD` / [`simd::set_mode`] override).
 //! * the packed 2:4 decode mat-vec lives with its storage in
 //!   [`crate::sparse24::Sparse24Mat::matvec`] (it needs the private
 //!   values/meta layout); dispatch is documented here because it follows
@@ -31,15 +34,22 @@
 //! | `linalg::matmul*`             | below threshold            | single-thread blocked |
 //! | `PifaLayer::apply_rows`       | `x.rows() <= 4`            | fused one-pass apply  |
 //! | `Sparse24Mat::apply_rows`     | `x.rows() <= 4`            | packed decode mat-vec |
+//! | `QuantSparse24Mat::apply_rows`| `x.rows() <= 4`            | int8 decode mat-vec   |
+//! | f32 inner dots (all above)    | `PIFA_SIMD` on (default)   | [`simd`] wide tier    |
+//! | f32 inner dots (all above)    | `PIFA_SIMD=off`            | 4-chain scalar loop   |
 //!
-//! Every fast path is differentially tested against the generic path it
-//! replaces (`rust/tests/kernel_differential.rs` + the module tests
-//! here); refactors cannot silently diverge.
+//! The wide tier is selected per call through the `Scalar::simd_*` hooks
+//! (f64 always takes the scalar loop); within the wide tier the AVX2+FMA
+//! build runs iff runtime detection confirms the features, else the
+//! portable build. Every fast path is differentially tested against the
+//! generic path it replaces (`rust/tests/kernel_differential.rs` + the
+//! module tests here); refactors cannot silently diverge.
 
 pub mod fused;
 pub mod gather;
 pub mod gemv;
 pub mod pool;
+pub mod simd;
 
 /// Largest micro-batch the decode kernels specialize for. The serving
 /// scheduler coalesces at most a handful of same-position lanes per

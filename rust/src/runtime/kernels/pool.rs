@@ -19,7 +19,11 @@
 //! * `PIFA_THREADS=k` caps total parallelism (submitter + workers) at
 //!   `k`; `PIFA_THREADS=1` forces every kernel single-threaded (useful
 //!   for bit-stable A/B timing). The default is
-//!   `std::thread::available_parallelism()`.
+//!   `std::thread::available_parallelism()`. An invalid value (`0`, or
+//!   anything that does not parse as a thread count) falls back to that
+//!   default and prints one warning to stderr at first pool use — it is
+//!   never silently swallowed, so soak-matrix repro runs cannot pin the
+//!   wrong parallelism without a signal.
 //!
 //! A panic inside a job is caught on the worker, the remaining jobs
 //! still run, and the panic is re-raised on the submitting thread once
@@ -206,15 +210,44 @@ impl Pool {
 
 static POOL: OnceLock<Pool> = OnceLock::new();
 
+/// Resolve the `PIFA_THREADS` override against the machine default:
+/// returns the total parallelism plus an optional warning line for
+/// invalid input (`0` or unparseable → fall back to `default`, warn).
+/// Pure so the validation is unit-testable without re-initializing the
+/// process-wide pool.
+fn parse_threads(raw: Option<&str>, default: usize) -> (usize, Option<String>) {
+    match raw {
+        None => (default, None),
+        Some(s) => match s.trim().parse::<usize>() {
+            Ok(0) => (
+                default,
+                Some(format!(
+                    "pifa: warning: PIFA_THREADS=0 is invalid (need >= 1); \
+                     using default ({default})"
+                )),
+            ),
+            Ok(k) => (k, None),
+            Err(_) => (
+                default,
+                Some(format!(
+                    "pifa: warning: PIFA_THREADS={s:?} is not a thread count; \
+                     using default ({default})"
+                )),
+            ),
+        },
+    }
+}
+
 /// The process-wide pool (spawned on first use).
 pub fn pool() -> &'static Pool {
     POOL.get_or_init(|| {
-        let total = std::env::var("PIFA_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-            });
+        let default = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let raw = std::env::var("PIFA_THREADS").ok();
+        let (total, warning) = parse_threads(raw.as_deref(), default);
+        if let Some(w) = warning {
+            // OnceLock init runs exactly once per process: one warning.
+            eprintln!("{w}");
+        }
         // The submitter participates, so spawn one fewer worker.
         let workers = total.saturating_sub(1);
         let shared =
@@ -329,5 +362,26 @@ mod tests {
     fn parallelism_reports_at_least_one() {
         assert!(max_parallelism() >= 1);
         prewarm();
+    }
+
+    #[test]
+    fn parse_threads_validates_the_env_knob() {
+        // Unset: machine default, no warning.
+        assert_eq!(parse_threads(None, 8), (8, None));
+        // Valid values pass through untouched (1 = single-threaded).
+        assert_eq!(parse_threads(Some("1"), 8), (1, None));
+        assert_eq!(parse_threads(Some(" 16 "), 8), (16, None));
+        // 0 is invalid: documented fallback + a warning that names it.
+        let (total, warn) = parse_threads(Some("0"), 8);
+        assert_eq!(total, 8);
+        let warn = warn.expect("PIFA_THREADS=0 must warn");
+        assert!(warn.contains("PIFA_THREADS=0") && warn.contains("default (8)"), "{warn}");
+        // Garbage is invalid: same fallback, warning quotes the input.
+        for bad in ["", "banana", "-3", "2.5", "0x8"] {
+            let (total, warn) = parse_threads(Some(bad), 4);
+            assert_eq!(total, 4, "input {bad:?}");
+            let warn = warn.unwrap_or_else(|| panic!("PIFA_THREADS={bad:?} must warn"));
+            assert!(warn.contains("not a thread count"), "{warn}");
+        }
     }
 }

@@ -1,0 +1,383 @@
+//! Runtime-dispatched SIMD tier for the f32 decode kernels (DESIGN.md §7).
+//!
+//! The wide kernels here are written as portable `[f32; 8]` lane blocks —
+//! plain safe Rust that LLVM turns into packed vector code — and are
+//! additionally instantiated under `#[target_feature(enable = "avx2",
+//! enable = "fma")]` on x86_64, so release builds emit 256-bit FMA even
+//! when the crate's baseline target is generic. Two independent switches
+//! pick the path at runtime:
+//!
+//! * **Mode** (cached in an atomic): `PIFA_SIMD=0|off|scalar|false` forces
+//!   the scalar tier; any other value, or unset, enables the wide tier.
+//!   [`set_mode`] overrides the env knob for bench A/B rows and soak
+//!   rotation.
+//! * **Instruction set**: on x86_64 the AVX2+FMA build of each kernel is
+//!   used iff `is_x86_feature_detected!` confirms both features at
+//!   runtime; otherwise (and on every other arch) the portable build
+//!   runs, compiled for the baseline target.
+//!
+//! The wide tier reduces through 8 partial chains + a pairwise tree, so
+//! its reduction order differs from the 4-chain scalar kernels: the
+//! differential suites pin wide against scalar with a bounded tolerance,
+//! not bitwise (`rust/tests/kernel_differential.rs`). The fused PIFA
+//! apply needs no code here — both its phases funnel through
+//! [`crate::runtime::kernels::gemv::dot`], which consults this module via
+//! the `Scalar::simd_dot` hook.
+
+use super::DECODE_BATCH_MAX;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Lane width of the portable wide kernels (f32 lanes per block).
+pub const LANES: usize = 8;
+
+const MODE_UNSET: u8 = 0;
+const MODE_ON: u8 = 1;
+const MODE_OFF: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Whether the wide tier is active. The first call resolves the
+/// `PIFA_SIMD` env knob and caches the answer; [`set_mode`] replaces it.
+#[inline]
+pub fn enabled() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_ON => true,
+        MODE_OFF => false,
+        _ => {
+            let on = env_default();
+            MODE.store(if on { MODE_ON } else { MODE_OFF }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Override the SIMD/scalar choice at runtime (bench A/B rows, soak
+/// rotation): `true` selects the wide tier, `false` the scalar tier.
+pub fn set_mode(on: bool) {
+    MODE.store(if on { MODE_ON } else { MODE_OFF }, Ordering::Relaxed);
+}
+
+fn env_default() -> bool {
+    match std::env::var("PIFA_SIMD") {
+        Ok(v) => {
+            let v = v.trim().to_ascii_lowercase();
+            !matches!(v.as_str(), "0" | "off" | "scalar" | "false")
+        }
+        Err(_) => true,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx2_fma() -> bool {
+    static DETECT: AtomicU8 = AtomicU8::new(0);
+    match DETECT.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let ok = is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+            DETECT.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
+            ok
+        }
+    }
+}
+
+/// Pairwise tree reduction of one wide accumulator block.
+#[inline(always)]
+fn reduce(acc: &[f32; LANES]) -> f32 {
+    let s01 = acc[0] + acc[1];
+    let s23 = acc[2] + acc[3];
+    let s45 = acc[4] + acc[5];
+    let s67 = acc[6] + acc[7];
+    (s01 + s23) + (s45 + s67)
+}
+
+// --- Portable wide cores -------------------------------------------------
+//
+// Each core is `#[inline(always)]` so the `#[target_feature]` wrappers in
+// `x86` re-specialize the same source under AVX2+FMA codegen.
+
+#[inline(always)]
+fn dot_wide(a: &[f32], b: &[f32]) -> f32 {
+    let len = a.len().min(b.len());
+    let mut acc = [0f32; LANES];
+    let mut i = 0;
+    while i + LANES <= len {
+        let ab = &a[i..i + LANES];
+        let bb = &b[i..i + LANES];
+        for l in 0..LANES {
+            acc[l] = ab[l].mul_add(bb[l], acc[l]);
+        }
+        i += LANES;
+    }
+    let mut tail = 0f32;
+    while i < len {
+        tail = a[i].mul_add(b[i], tail);
+        i += 1;
+    }
+    reduce(&acc) + tail
+}
+
+#[inline(always)]
+fn batch_dot_wide(a: &[f32], bm: usize, k: usize, brow: &[f32], out: &mut [f32]) {
+    debug_assert!(bm <= DECODE_BATCH_MAX && out.len() >= bm);
+    debug_assert!(a.len() >= bm * k && brow.len() >= k);
+    let mut acc = [[0f32; LANES]; DECODE_BATCH_MAX];
+    let mut tails = [0f32; DECODE_BATCH_MAX];
+    let mut i = 0;
+    while i + LANES <= k {
+        let bb = &brow[i..i + LANES];
+        for (bi, accb) in acc.iter_mut().enumerate().take(bm) {
+            let ab = &a[bi * k + i..bi * k + i + LANES];
+            for l in 0..LANES {
+                accb[l] = ab[l].mul_add(bb[l], accb[l]);
+            }
+        }
+        i += LANES;
+    }
+    while i < k {
+        let bv = brow[i];
+        for (bi, t) in tails.iter_mut().enumerate().take(bm) {
+            *t = a[bi * k + i].mul_add(bv, *t);
+        }
+        i += 1;
+    }
+    for bi in 0..bm {
+        out[bi] = reduce(&acc[bi]) + tails[bi];
+    }
+}
+
+#[inline(always)]
+fn s24_row_dot_wide(vals: &[f32], metas: &[u8], x: &[f32]) -> f32 {
+    let groups = metas.len();
+    debug_assert!(vals.len() >= groups * 2 && x.len() >= groups * 4);
+    let mut acc = [0f32; LANES];
+    let mut g = 0;
+    // Four groups (8 kept values) per block: one accumulator chain per
+    // kept value, so the gather latency of the metadata-indexed loads
+    // overlaps across chains.
+    while g + 4 <= groups {
+        for u in 0..4 {
+            let gg = g + u;
+            let byte = metas[gg];
+            let base = gg * 4;
+            acc[2 * u] = vals[gg * 2].mul_add(x[base + (byte & 0b11) as usize], acc[2 * u]);
+            acc[2 * u + 1] =
+                vals[gg * 2 + 1].mul_add(x[base + ((byte >> 2) & 0b11) as usize], acc[2 * u + 1]);
+        }
+        g += 4;
+    }
+    while g < groups {
+        let byte = metas[g];
+        let base = g * 4;
+        acc[0] = vals[g * 2].mul_add(x[base + (byte & 0b11) as usize], acc[0]);
+        acc[1] = vals[g * 2 + 1].mul_add(x[base + ((byte >> 2) & 0b11) as usize], acc[1]);
+        g += 1;
+    }
+    reduce(&acc)
+}
+
+#[inline(always)]
+fn q8_row_dot_wide(vals: &[i8], metas: &[u8], x: &[f32]) -> f32 {
+    let groups = metas.len();
+    debug_assert!(vals.len() >= groups * 2 && x.len() >= groups * 4);
+    let mut acc = [0f32; LANES];
+    let mut g = 0;
+    while g + 4 <= groups {
+        for u in 0..4 {
+            let gg = g + u;
+            let byte = metas[gg];
+            let base = gg * 4;
+            acc[2 * u] =
+                (vals[gg * 2] as f32).mul_add(x[base + (byte & 0b11) as usize], acc[2 * u]);
+            acc[2 * u + 1] = (vals[gg * 2 + 1] as f32)
+                .mul_add(x[base + ((byte >> 2) & 0b11) as usize], acc[2 * u + 1]);
+        }
+        g += 4;
+    }
+    while g < groups {
+        let byte = metas[g];
+        let base = g * 4;
+        acc[0] = (vals[g * 2] as f32).mul_add(x[base + (byte & 0b11) as usize], acc[0]);
+        acc[1] =
+            (vals[g * 2 + 1] as f32).mul_add(x[base + ((byte >> 2) & 0b11) as usize], acc[1]);
+        g += 1;
+    }
+    reduce(&acc)
+}
+
+// --- AVX2 + FMA instantiations -------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::*;
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        dot_wide(a, b)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn batch_dot(a: &[f32], bm: usize, k: usize, brow: &[f32], out: &mut [f32]) {
+        batch_dot_wide(a, bm, k, brow, out)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn s24_row_dot(vals: &[f32], metas: &[u8], x: &[f32]) -> f32 {
+        s24_row_dot_wide(vals, metas, x)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn q8_row_dot(vals: &[i8], metas: &[u8], x: &[f32]) -> f32 {
+        q8_row_dot_wide(vals, metas, x)
+    }
+}
+
+// --- Public entry points --------------------------------------------------
+
+/// Wide dot product. Unconditional (ignores the mode) — generic callers
+/// gate through [`dot_checked`] / the `Scalar::simd_dot` hook; the
+/// differential tests call this directly to pin it against the scalar
+/// kernel regardless of the ambient mode.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_fma() {
+            // SAFETY: AVX2 + FMA presence verified by runtime detection.
+            return unsafe { x86::dot(a, b) };
+        }
+    }
+    dot_wide(a, b)
+}
+
+/// [`dot`] gated on the runtime mode: `None` means "use the scalar tier"
+/// (this is what the f32 `Scalar::simd_dot` hook returns when the mode is
+/// off, so `gemv::dot` falls through to its own loop).
+#[inline]
+pub fn dot_checked(a: &[f32], b: &[f32]) -> Option<f32> {
+    if enabled() {
+        Some(dot(a, b))
+    } else {
+        None
+    }
+}
+
+/// Batched dot of up to [`DECODE_BATCH_MAX`] rows of the row-major
+/// `bm x k` slice `a` against one shared `brow`, writing
+/// `out[bi] = <a[bi], brow>`. Unconditional — see [`batch_dot_checked`].
+#[inline]
+pub fn batch_dot(a: &[f32], bm: usize, k: usize, brow: &[f32], out: &mut [f32]) {
+    assert!(bm <= DECODE_BATCH_MAX, "simd::batch_dot: batch {bm} exceeds {DECODE_BATCH_MAX}");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_fma() {
+            // SAFETY: AVX2 + FMA presence verified by runtime detection.
+            unsafe { x86::batch_dot(a, bm, k, brow, out) };
+            return;
+        }
+    }
+    batch_dot_wide(a, bm, k, brow, out)
+}
+
+/// [`batch_dot`] gated on the runtime mode; returns `true` when the wide
+/// tier handled the call (the `Scalar::simd_batch_dot` hook for f32).
+#[inline]
+pub fn batch_dot_checked(a: &[f32], bm: usize, k: usize, brow: &[f32], out: &mut [f32]) -> bool {
+    if !enabled() {
+        return false;
+    }
+    batch_dot(a, bm, k, brow, out);
+    true
+}
+
+/// Packed 2:4 row dot (8 accumulator chains over 4-group blocks).
+/// Unconditional — `Sparse24Mat::row_dot_packed` gates on [`enabled`].
+#[inline]
+pub fn s24_row_dot(vals: &[f32], metas: &[u8], x: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_fma() {
+            // SAFETY: AVX2 + FMA presence verified by runtime detection.
+            return unsafe { x86::s24_row_dot(vals, metas, x) };
+        }
+    }
+    s24_row_dot_wide(vals, metas, x)
+}
+
+/// Int8 packed 2:4 row dot: accumulates `Σ q·x` in f32 — the caller
+/// applies the per-row scale once. Unconditional —
+/// `QuantSparse24Mat::row_dot_packed` gates on [`enabled`].
+#[inline]
+pub fn q8_row_dot(vals: &[i8], metas: &[u8], x: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_fma() {
+            // SAFETY: AVX2 + FMA presence verified by runtime detection.
+            return unsafe { x86::q8_row_dot(vals, metas, x) };
+        }
+    }
+    q8_row_dot_wide(vals, metas, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn wide_dot_matches_naive_all_tails() {
+        let mut rng = Rng::new(701);
+        for len in [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 64, 100, 257] {
+            let a = randv(len, &mut rng);
+            let b = randv(len, &mut rng);
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            let got = dot(&a, &b) as f64;
+            assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()), "len={len}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn batch_dot_matches_per_row_dot() {
+        let mut rng = Rng::new(702);
+        for bm in 1..=DECODE_BATCH_MAX {
+            for k in [1usize, 3, 7, 8, 9, 31, 64, 129] {
+                let a = randv(bm * k, &mut rng);
+                let brow = randv(k, &mut rng);
+                let mut out = [0f32; DECODE_BATCH_MAX];
+                batch_dot(&a, bm, k, &brow, &mut out);
+                for bi in 0..bm {
+                    let want = dot(&a[bi * k..(bi + 1) * k], &brow);
+                    assert!(
+                        (out[bi] - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                        "bm={bm} k={k} bi={bi}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mode_override_roundtrip() {
+        let before = enabled();
+        set_mode(false);
+        assert!(!enabled());
+        set_mode(true);
+        assert!(enabled());
+        set_mode(before);
+    }
+
+    #[test]
+    fn nan_and_inf_propagate() {
+        let a = vec![1.0f32, f32::NAN, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let b = vec![1.0f32; 9];
+        assert!(dot(&a, &b).is_nan());
+        let c = vec![1.0f32, f32::INFINITY, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        assert!(dot(&c, &b).is_infinite());
+    }
+}

@@ -15,6 +15,8 @@
 
 pub mod device_model;
 pub mod pack;
+pub mod quant;
 
 pub use device_model::{AmpereModel, DeviceTiming};
 pub use pack::{Sparse24Mat, prune_mask_24};
+pub use quant::QuantSparse24Mat;

@@ -176,14 +176,19 @@ impl Sparse24Mat {
         y
     }
 
-    /// Packed dot of row `i` against `x` (two accumulator chains; the
-    /// scalar core of the decode path — walks values/meta directly, no
-    /// densification).
+    /// Packed dot of row `i` against `x` — the core of the decode path,
+    /// walking values/meta directly with no densification. Takes the
+    /// wide tier's 8-chain group-block kernel when `PIFA_SIMD` is on
+    /// ([`kernels::simd::s24_row_dot`]); otherwise two scalar
+    /// accumulator chains.
     #[inline]
     fn row_dot_packed(&self, i: usize, x: &[f32]) -> f32 {
         let groups = self.n / 4;
         let vals = &self.values[i * groups * 2..(i + 1) * groups * 2];
         let metas = &self.meta[i * groups..(i + 1) * groups];
+        if kernels::simd::enabled() {
+            return kernels::simd::s24_row_dot(vals, metas, x);
+        }
         let mut a0 = 0f32;
         let mut a1 = 0f32;
         for (g, &byte) in metas.iter().enumerate() {
@@ -195,12 +200,23 @@ impl Sparse24Mat {
     }
 
     /// Batch-1 packed mat-vec `y = W x` — the decode hot path, chunked
-    /// over output rows on the kernel pool.
+    /// over output rows on the kernel pool. Allocates the output; the
+    /// steady-state decode loop should hold a reusable buffer and call
+    /// [`Self::matvec_into`].
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.n, "Sparse24Mat::matvec: dim mismatch");
         let mut y = vec![0f32; self.m];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// [`Self::matvec`] with a caller-owned output (`y.len() == m`):
+    /// zero transient heap allocations — every element of `y` is
+    /// overwritten.
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.n, "Sparse24Mat::matvec: dim mismatch");
+        assert_eq!(y.len(), self.m, "Sparse24Mat::matvec_into: output length mismatch");
         if self.m == 0 {
-            return y;
+            return;
         }
         let y_ptr = SendPtr::new(y.as_mut_ptr());
         kernels::scope_chunks(self.m, self.m * self.n, |i0, i1| {
@@ -209,11 +225,12 @@ impl Sparse24Mat {
                 unsafe { y_ptr.write(i, self.row_dot_packed(i, x)) };
             }
         });
-        y
     }
 
     /// Decode-batch apply (`b <= 4`): metadata decoded once per group for
-    /// the whole micro-batch, output rows chunked across the pool.
+    /// the whole micro-batch, output rows chunked across the pool. The
+    /// input is indexed through its flat slice (no per-row Vec), so the
+    /// only allocation is the output matrix.
     fn apply_rows_decode(&self, x: &Mat<f32>) -> Mat<f32> {
         assert_eq!(x.cols(), self.n, "Sparse24Mat::apply_rows: dim mismatch");
         let b = x.rows();
@@ -225,7 +242,8 @@ impl Sparse24Mat {
         if b == 0 || self.m == 0 {
             return y;
         }
-        let xrows: Vec<&[f32]> = (0..b).map(|bi| x.row(bi)).collect();
+        let x_s = x.as_slice();
+        let n = self.n;
         let y_ptr = SendPtr::new(y.as_mut_slice().as_mut_ptr());
         kernels::scope_chunks(self.m, b * self.m * self.n, |i0, i1| {
             for i in i0..i1 {
@@ -237,8 +255,8 @@ impl Sparse24Mat {
                     let o1 = g * 4 + ((byte >> 2) & 0b11) as usize;
                     let v0 = vals[g * 2];
                     let v1 = vals[g * 2 + 1];
-                    for (ac, xrow) in acc.iter_mut().zip(xrows.iter()) {
-                        *ac += v0 * xrow[o0] + v1 * xrow[o1];
+                    for (bi, ac) in acc.iter_mut().enumerate().take(b) {
+                        *ac += v0 * x_s[bi * n + o0] + v1 * x_s[bi * n + o1];
                     }
                 }
                 for (bi, ac) in acc.iter().enumerate().take(b) {
@@ -390,6 +408,42 @@ mod tests {
         let y_ref = matmul_nt(&x, &sp.to_dense());
         for (a, b) in y.iter().zip(y_ref.row(0)) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn matvec_into_overwrites_stale_output() {
+        let mut rng = Rng::new(138);
+        let w: Mat<f32> = Mat::randn(9, 32, &mut rng);
+        let sp = Sparse24Mat::pack_magnitude(&w);
+        let x: Mat<f32> = Mat::randn(1, 32, &mut rng);
+        let mut y = vec![7f32; 9];
+        sp.matvec_into(x.row(0), &mut y);
+        assert_eq!(y, sp.matvec(x.row(0)));
+    }
+
+    #[test]
+    fn wide_row_dot_matches_scalar_chains() {
+        // Pin the SIMD group-block kernel against the scalar 2-chain dot
+        // directly (mode-independent: both sides called explicitly).
+        let mut rng = Rng::new(139);
+        for &(m, n) in &[(3usize, 4usize), (5, 16), (9, 20), (7, 64), (2, 132)] {
+            let w: Mat<f32> = Mat::randn(m, n, &mut rng);
+            let sp = Sparse24Mat::pack_magnitude(&w);
+            let x: Mat<f32> = Mat::randn(1, n, &mut rng);
+            let dense = sp.to_dense();
+            for i in 0..m {
+                let groups = n / 4;
+                let vals = &sp.values[i * groups * 2..(i + 1) * groups * 2];
+                let metas = &sp.meta[i * groups..(i + 1) * groups];
+                let wide = crate::runtime::kernels::simd::s24_row_dot(vals, metas, x.row(0));
+                let want: f32 =
+                    dense.row(i).iter().zip(x.row(0)).map(|(a, b)| a * b).sum();
+                assert!(
+                    (wide - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                    "({m},{n}) row {i}: {wide} vs {want}"
+                );
+            }
         }
     }
 

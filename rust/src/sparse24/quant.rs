@@ -1,0 +1,440 @@
+//! Int8 per-channel quantized 2:4 storage (the LoSparse-style residual
+//! tier — PAPERS.md).
+//!
+//! Same packed layout as [`crate::sparse24::Sparse24Mat`] — 2 kept
+//! values per 4-group, one metadata byte per group — but the kept values
+//! are stored as `i8` with one f32 scale per output row (per-channel
+//! symmetric quantization):
+//!
+//! ```text
+//! scale_i = max_j |w_ij| / 127        q_ij = round(w_ij / scale_i)
+//! ```
+//!
+//! The decode mat-vec accumulates `Σ q·x` in f32 and applies the row
+//! scale once per output element, so the inner loop reads 1 byte per
+//! value instead of 4 — a 0.3125 fp16 memory ratio vs the 0.5625 of the
+//! f32-valued packed form. Per-element dequantization error is bounded
+//! by `scale_i / 2`.
+
+use crate::linalg::Mat;
+use crate::runtime::kernels::{self, pool::SendPtr};
+
+/// A 2:4 semi-structured sparse matrix with int8 per-row quantized
+/// values (`m x n`, `n % 4 == 0`).
+#[derive(Clone)]
+pub struct QuantSparse24Mat {
+    pub m: usize,
+    pub n: usize,
+    /// Kept values as quantized i8, row-major: `m * n/2` entries.
+    values: Vec<i8>,
+    /// One byte per group (`m * n/4`): low 2 bits = first kept offset,
+    /// next 2 bits = second kept offset (same encoding as `Sparse24Mat`).
+    meta: Vec<u8>,
+    /// Per-output-row dequantization scale (`m` entries).
+    scales: Vec<f32>,
+}
+
+impl QuantSparse24Mat {
+    /// Pack and quantize `w`, keeping per 4-group the entries selected by
+    /// `mask` (exactly 2 per group, as produced by
+    /// [`crate::sparse24::prune_mask_24`]).
+    pub fn quantize(w: &Mat<f32>, mask: &[bool]) -> Self {
+        let (m, n) = w.shape();
+        assert_eq!(n % 4, 0, "QuantSparse24Mat: n must be a multiple of 4");
+        assert_eq!(mask.len(), m * n);
+        let groups = n / 4;
+        let mut values = Vec::with_capacity(m * n / 2);
+        let mut meta = Vec::with_capacity(m * groups);
+        let mut scales = Vec::with_capacity(m);
+        for i in 0..m {
+            // Row scale from the kept values only (dropped entries never
+            // contribute to the quantization range).
+            let mut maxabs = 0f32;
+            for j in 0..n {
+                if mask[i * n + j] {
+                    maxabs = maxabs.max(w[(i, j)].abs());
+                }
+            }
+            let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+            scales.push(scale);
+            for g in 0..groups {
+                let mut offs = [0u8; 2];
+                let mut vals = [0i8; 2];
+                let mut k = 0;
+                for o in 0..4 {
+                    if mask[i * n + g * 4 + o] {
+                        assert!(k < 2, "QuantSparse24Mat: >2 kept in group ({i},{g})");
+                        offs[k] = o as u8;
+                        let q = (w[(i, g * 4 + o)] / scale).round();
+                        vals[k] = q.clamp(-127.0, 127.0) as i8;
+                        k += 1;
+                    }
+                }
+                assert_eq!(k, 2, "QuantSparse24Mat: <2 kept in group ({i},{g})");
+                values.push(vals[0]);
+                values.push(vals[1]);
+                meta.push(offs[0] | (offs[1] << 2));
+            }
+        }
+        Self { m, n, values, meta, scales }
+    }
+
+    /// The exact keep-mask (from the packed metadata, independent of the
+    /// stored values — kept-but-zero entries report correctly).
+    pub fn keep_mask(&self) -> Vec<bool> {
+        let groups = self.n / 4;
+        let mut mask = vec![false; self.m * self.n];
+        for i in 0..self.m {
+            for g in 0..groups {
+                let byte = self.meta[i * groups + g];
+                mask[i * self.n + g * 4 + (byte & 0b11) as usize] = true;
+                mask[i * self.n + g * 4 + ((byte >> 2) & 0b11) as usize] = true;
+            }
+        }
+        mask
+    }
+
+    /// Materialize the dequantized dense matrix (testing / PPL eval /
+    /// the gradient path).
+    pub fn to_dense(&self) -> Mat<f32> {
+        let mut w = Mat::zeros(self.m, self.n);
+        let groups = self.n / 4;
+        for i in 0..self.m {
+            let s = self.scales[i];
+            for g in 0..groups {
+                let byte = self.meta[i * groups + g];
+                let o0 = (byte & 0b11) as usize;
+                let o1 = ((byte >> 2) & 0b11) as usize;
+                w[(i, g * 4 + o0)] = self.values[(i * groups + g) * 2] as f32 * s;
+                w[(i, g * 4 + o1)] = self.values[(i * groups + g) * 2 + 1] as f32 * s;
+            }
+        }
+        w
+    }
+
+    /// Apply an update through the dequantized dense view while keeping
+    /// the packed pattern: `f` sees the dense matrix and the keep-mask,
+    /// then the matrix is re-quantized against the *original* mask (the
+    /// fine-tuning path; never on the inference hot path — each
+    /// round-trip re-derives the row scales).
+    pub fn update_dense<F: FnOnce(&mut Mat<f32>, &[bool])>(&mut self, f: F) {
+        let mask = self.keep_mask();
+        let mut w = self.to_dense();
+        f(&mut w, &mask);
+        for (v, &keep) in w.as_mut_slice().iter_mut().zip(mask.iter()) {
+            if !keep {
+                *v = 0.0;
+            }
+        }
+        *self = QuantSparse24Mat::quantize(&w, &mask);
+    }
+
+    /// Int8 packed dot of row `i` against `x`: `Σ q·x` accumulated in
+    /// f32, scaled once. Takes the wide tier's 8-chain kernel when
+    /// `PIFA_SIMD` is on ([`kernels::simd::q8_row_dot`]).
+    #[inline]
+    fn row_dot_packed(&self, i: usize, x: &[f32]) -> f32 {
+        let groups = self.n / 4;
+        let vals = &self.values[i * groups * 2..(i + 1) * groups * 2];
+        let metas = &self.meta[i * groups..(i + 1) * groups];
+        let s = self.scales[i];
+        if kernels::simd::enabled() {
+            return s * kernels::simd::q8_row_dot(vals, metas, x);
+        }
+        let mut a0 = 0f32;
+        let mut a1 = 0f32;
+        for (g, &byte) in metas.iter().enumerate() {
+            let base = g * 4;
+            a0 += vals[g * 2] as f32 * x[base + (byte & 0b11) as usize];
+            a1 += vals[g * 2 + 1] as f32 * x[base + ((byte >> 2) & 0b11) as usize];
+        }
+        s * (a0 + a1)
+    }
+
+    /// Transformer layout GEMM: `Y = X W^T` with the dequantized `W`.
+    /// Decode batches (`b <= 4`) take the packed int8 fast path; larger
+    /// batches run the generic loop ([`Self::apply_rows_ref`]).
+    pub fn apply_rows(&self, x: &Mat<f32>) -> Mat<f32> {
+        if x.rows() <= kernels::DECODE_BATCH_MAX {
+            return self.apply_rows_decode(x);
+        }
+        self.apply_rows_ref(x)
+    }
+
+    /// The generic batched loop — the reference the decode fast path is
+    /// differentially tested against.
+    pub fn apply_rows_ref(&self, x: &Mat<f32>) -> Mat<f32> {
+        assert_eq!(x.cols(), self.n, "QuantSparse24Mat::apply_rows: dim mismatch");
+        let b = x.rows();
+        let groups = self.n / 4;
+        let mut y = Mat::zeros(b, self.m);
+        for bi in 0..b {
+            let xrow = x.row(bi);
+            let yrow = y.row_mut(bi);
+            for i in 0..self.m {
+                let mut acc = 0f32;
+                let vbase = (i * groups) * 2;
+                let mbase = i * groups;
+                for g in 0..groups {
+                    let byte = self.meta[mbase + g];
+                    let o0 = (byte & 0b11) as usize;
+                    let o1 = ((byte >> 2) & 0b11) as usize;
+                    let xg = &xrow[g * 4..g * 4 + 4];
+                    acc += self.values[vbase + g * 2] as f32 * xg[o0]
+                        + self.values[vbase + g * 2 + 1] as f32 * xg[o1];
+                }
+                yrow[i] = self.scales[i] * acc;
+            }
+        }
+        y
+    }
+
+    /// Batch-1 int8 mat-vec `y = W x` — the decode hot path, chunked over
+    /// output rows on the kernel pool. Allocates the output; use
+    /// [`Self::matvec_into`] from a steady-state loop.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0f32; self.m];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// [`Self::matvec`] with a caller-owned output (`y.len() == m`):
+    /// zero transient heap allocations.
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.n, "QuantSparse24Mat::matvec: dim mismatch");
+        assert_eq!(y.len(), self.m, "QuantSparse24Mat::matvec_into: output length mismatch");
+        if self.m == 0 {
+            return;
+        }
+        let y_ptr = SendPtr::new(y.as_mut_ptr());
+        kernels::scope_chunks(self.m, self.m * self.n, |i0, i1| {
+            for i in i0..i1 {
+                // SAFETY: chunks own disjoint row ranges of y.
+                unsafe { y_ptr.write(i, self.row_dot_packed(i, x)) };
+            }
+        });
+    }
+
+    /// Decode-batch apply (`b <= 4`): metadata decoded once per group for
+    /// the whole micro-batch, rows chunked across the pool.
+    fn apply_rows_decode(&self, x: &Mat<f32>) -> Mat<f32> {
+        assert_eq!(x.cols(), self.n, "QuantSparse24Mat::apply_rows: dim mismatch");
+        let b = x.rows();
+        if b == 1 {
+            return Mat::from_vec(1, self.m, self.matvec(x.row(0)));
+        }
+        let groups = self.n / 4;
+        let mut y = Mat::zeros(b, self.m);
+        if b == 0 || self.m == 0 {
+            return y;
+        }
+        let x_s = x.as_slice();
+        let n = self.n;
+        let y_ptr = SendPtr::new(y.as_mut_slice().as_mut_ptr());
+        kernels::scope_chunks(self.m, b * self.m * self.n, |i0, i1| {
+            for i in i0..i1 {
+                let vals = &self.values[i * groups * 2..(i + 1) * groups * 2];
+                let metas = &self.meta[i * groups..(i + 1) * groups];
+                let s = self.scales[i];
+                let mut acc = [0f32; kernels::DECODE_BATCH_MAX];
+                for (g, &byte) in metas.iter().enumerate() {
+                    let o0 = g * 4 + (byte & 0b11) as usize;
+                    let o1 = g * 4 + ((byte >> 2) & 0b11) as usize;
+                    let v0 = vals[g * 2] as f32;
+                    let v1 = vals[g * 2 + 1] as f32;
+                    for (bi, ac) in acc.iter_mut().enumerate().take(b) {
+                        *ac += v0 * x_s[bi * n + o0] + v1 * x_s[bi * n + o1];
+                    }
+                }
+                for (bi, ac) in acc.iter().enumerate().take(b) {
+                    // SAFETY: disjoint (bi, i) elements per chunk.
+                    unsafe { y_ptr.write(bi * self.m + i, s * *ac) };
+                }
+            }
+        });
+        y
+    }
+
+    /// Per-row dequantization scale (the quantization error bound per
+    /// element of row `i` is `scale(i) / 2`).
+    pub fn scale(&self, i: usize) -> f32 {
+        self.scales[i]
+    }
+
+    /// Stored quantized values (`m * n / 2`).
+    pub fn value_count(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Hardware-accounted memory: 1 byte per kept value + 2 bits per
+    /// value of metadata + one f32 scale per row.
+    pub fn memory_bytes_fp16(&self) -> usize {
+        self.values.len() + self.values.len() / 4 + 4 * self.m
+    }
+
+    /// Memory ratio vs the dense fp16 matrix (≈ 0.3125 + scales).
+    pub fn memory_ratio_fp16(&self) -> f64 {
+        self.memory_bytes_fp16() as f64 / (self.m * self.n * 2) as f64
+    }
+
+    /// Raw storage views for exact (bit-preserving) serialization.
+    pub fn to_parts(&self) -> (usize, usize, &[i8], &[u8], &[f32]) {
+        (self.m, self.n, &self.values, &self.meta, &self.scales)
+    }
+
+    /// Rebuild from raw storage (the checkpoint read path — exact int8
+    /// round-trip, never via the dense view).
+    pub fn from_parts(m: usize, n: usize, values: Vec<i8>, meta: Vec<u8>, scales: Vec<f32>) -> Self {
+        assert_eq!(n % 4, 0, "QuantSparse24Mat: n must be a multiple of 4");
+        assert_eq!(values.len(), m * n / 2, "QuantSparse24Mat: values length mismatch");
+        assert_eq!(meta.len(), m * n / 4, "QuantSparse24Mat: meta length mismatch");
+        assert_eq!(scales.len(), m, "QuantSparse24Mat: scales length mismatch");
+        Self { m, n, values, meta, scales }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_nt, Rng};
+    use crate::sparse24::{prune_mask_24, Sparse24Mat};
+
+    fn quantized_for(m: usize, n: usize, seed: u64) -> (Mat<f32>, QuantSparse24Mat) {
+        let mut rng = Rng::new(seed);
+        let w: Mat<f32> = Mat::randn(m, n, &mut rng);
+        let mask = prune_mask_24(&w.map(|v| v.abs()));
+        let q = QuantSparse24Mat::quantize(&w, &mask);
+        (w, q)
+    }
+
+    #[test]
+    fn dequant_error_is_bounded_by_half_scale() {
+        let (w, q) = quantized_for(8, 32, 801);
+        let mask = q.keep_mask();
+        let dense = q.to_dense();
+        for i in 0..8 {
+            let bound = q.scale(i) * 0.5 + 1e-6;
+            for j in 0..32 {
+                if mask[i * 32 + j] {
+                    let err = (dense[(i, j)] - w[(i, j)]).abs();
+                    assert!(err <= bound, "({i},{j}): err {err} > bound {bound}");
+                } else {
+                    assert_eq!(dense[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn keep_mask_matches_unquantized_pack() {
+        let mut rng = Rng::new(802);
+        let w: Mat<f32> = Mat::randn(6, 16, &mut rng);
+        let mask = prune_mask_24(&w.map(|v| v.abs()));
+        let q = QuantSparse24Mat::quantize(&w, &mask);
+        let sp = Sparse24Mat::pack(&w, &mask);
+        assert_eq!(q.keep_mask(), sp.keep_mask());
+        assert_eq!(q.keep_mask(), mask);
+    }
+
+    #[test]
+    fn apply_rows_matches_dequantized_dense() {
+        let mut rng = Rng::new(803);
+        for &(m, n) in &[(4usize, 8usize), (12, 24), (9, 64)] {
+            let (_, q) = quantized_for(m, n, 804 + m as u64);
+            let dense = q.to_dense();
+            for b in 1..=6 {
+                let x: Mat<f32> = Mat::randn(b, n, &mut rng);
+                let y = q.apply_rows(&x);
+                let y_ref = matmul_nt(&x, &dense);
+                assert!(
+                    y.rel_fro_err(&y_ref) < 1e-4,
+                    "({m},{n}) b={b}: {}",
+                    y.rel_fro_err(&y_ref)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_fast_path_matches_generic() {
+        let mut rng = Rng::new(805);
+        for &(m, n) in &[(1usize, 4usize), (7, 16), (33, 64), (12, 132)] {
+            let (_, q) = quantized_for(m, n, 806 + n as u64);
+            for b in 1..=6 {
+                let x: Mat<f32> = Mat::randn(b, n, &mut rng);
+                let fast = q.apply_rows(&x); // b <= 4 dispatches to int8 path
+                let generic = q.apply_rows_ref(&x);
+                assert!(
+                    fast.rel_fro_err(&generic) < 1e-4,
+                    "({m},{n}) b={b}: {}",
+                    fast.rel_fro_err(&generic)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_into_overwrites_stale_output() {
+        let (_, q) = quantized_for(11, 32, 807);
+        let mut rng = Rng::new(808);
+        let x: Mat<f32> = Mat::randn(1, 32, &mut rng);
+        let mut y = vec![5f32; 11];
+        q.matvec_into(x.row(0), &mut y);
+        assert_eq!(y, q.matvec(x.row(0)));
+    }
+
+    #[test]
+    fn parts_roundtrip_is_exact() {
+        let (_, q) = quantized_for(6, 24, 809);
+        let (m, n, vals, meta, scales) = q.to_parts();
+        let q2 = QuantSparse24Mat::from_parts(
+            m,
+            n,
+            vals.to_vec(),
+            meta.to_vec(),
+            scales.to_vec(),
+        );
+        // Exact: int8 payloads and scales are preserved bitwise, so the
+        // dequantized views agree exactly.
+        assert_eq!(q.to_dense().as_slice(), q2.to_dense().as_slice());
+    }
+
+    #[test]
+    fn update_dense_requantizes_against_same_mask() {
+        let (_, mut q) = quantized_for(4, 16, 810);
+        let mask = q.keep_mask();
+        q.update_dense(|d, m| {
+            for (v, &keep) in d.as_mut_slice().iter_mut().zip(m.iter()) {
+                if keep {
+                    *v *= 2.0;
+                }
+            }
+        });
+        assert_eq!(q.keep_mask(), mask);
+    }
+
+    #[test]
+    fn zero_row_quantizes_without_dividing_by_zero() {
+        let w: Mat<f32> = Mat::zeros(1, 8);
+        let mask = vec![true, true, false, false, true, true, false, false];
+        let q = QuantSparse24Mat::quantize(&w, &mask);
+        assert_eq!(q.scale(0), 1.0);
+        assert_eq!(q.to_dense().as_slice(), Mat::<f32>::zeros(1, 8).as_slice());
+    }
+
+    #[test]
+    fn memory_ratio_beats_f32_packed() {
+        let (w, q) = quantized_for(16, 64, 811);
+        let sp = Sparse24Mat::pack(&w, &q.keep_mask());
+        assert!(q.memory_ratio_fp16() < sp.memory_ratio_fp16());
+        // 1 B value + 0.25 B meta per kept value + 4 B scale per row.
+        assert_eq!(q.memory_bytes_fp16(), 16 * 64 / 2 + 16 * 64 / 8 + 4 * 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 4")]
+    fn rejects_bad_width() {
+        let w: Mat<f32> = Mat::zeros(2, 6);
+        let _ = QuantSparse24Mat::quantize(&w, &[true; 12]);
+    }
+}

@@ -1,0 +1,141 @@
+//! Steady-state decode makes zero transient heap allocations.
+//!
+//! The decode hot path runs per generated token; a single stray `Vec`
+//! per call is millions of allocator round trips over one serving run.
+//! This binary installs a counting `#[global_allocator]` and asserts
+//! that, after one warmup call (which is allowed to populate the
+//! per-thread scratch buffers and resolve the `PIFA_SIMD` gate), the
+//! `_into` kernel variants allocate nothing:
+//!
+//! * `gemv::skinny_nt_into` — the low-rank / dense decode GEMV,
+//! * `fused::pifa_apply_rows_fused_into` — the one-pass PIFA apply,
+//! * `Sparse24Mat::matvec_into` / `QuantSparse24Mat::matvec_into` —
+//!   the packed 2:4 mat-vecs.
+//!
+//! Shapes stay below `PAR_FLOP_THRESHOLD` so the chunked loops run
+//! inline on this thread (the persistent pool path reuses workers but
+//! its task handoff is not under this thread's counter). Counting is
+//! per-thread via a const-initialized thread-local, so the libtest
+//! harness threads cannot pollute the measurement.
+
+use pifa::linalg::{Mat, Rng};
+use pifa::pifa::PifaLayer;
+use pifa::runtime::kernels::{fused, gemv, DECODE_BATCH_MAX};
+use pifa::sparse24::{prune_mask_24, QuantSparse24Mat, Sparse24Mat};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<usize> = const { Cell::new(0) };
+}
+
+// SAFETY: delegates every operation to `System`; the counter update is a
+// plain thread-local Cell write (const-initialized, so the first access
+// inside `alloc` cannot itself allocate).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        unsafe { System.alloc_zeroed(layout) }
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> usize {
+    ALLOCS.with(|c| c.get())
+}
+
+/// Run `op` `iters` times and return the allocation-count delta.
+fn count_allocs(iters: usize, mut op: impl FnMut()) -> usize {
+    let before = allocs_on_this_thread();
+    for _ in 0..iters {
+        op();
+    }
+    allocs_on_this_thread() - before
+}
+
+/// Synthetic PIFA layer with the real storage layout (no O(m^3) QR).
+fn synthetic_pifa(m: usize, n: usize, r: usize, rng: &mut Rng) -> PifaLayer<f32> {
+    let mut idx: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut idx);
+    let pivots = idx[..r].to_vec();
+    let mut non_pivots = idx[r..].to_vec();
+    non_pivots.sort_unstable();
+    PifaLayer::new(m, n, pivots, non_pivots, Mat::randn(r, n, rng), Mat::randn(m - r, r, rng))
+}
+
+#[test]
+fn steady_state_decode_kernels_allocate_nothing() {
+    let mut rng = Rng::new(991);
+    // Decode shapes: batch <= DECODE_BATCH_MAX, well under the pool's
+    // FLOP threshold, n a multiple of 4 for the 2:4 packs.
+    let (m, n, r, b) = (96usize, 64usize, 24usize, DECODE_BATCH_MAX);
+
+    // skinny_nt_into: A (b x k) * B^T with B (n x k).
+    let a: Mat<f32> = Mat::randn(b, n, &mut rng);
+    let w: Mat<f32> = Mat::randn(m, n, &mut rng);
+    let mut y_gemv: Mat<f32> = Mat::zeros(b, m);
+
+    // Fused PIFA apply.
+    let layer = synthetic_pifa(m, n, r, &mut rng);
+    let mut y_pifa: Mat<f32> = Mat::zeros(b, m);
+
+    // Packed 2:4 mat-vecs (f32 and int8).
+    let sp = Sparse24Mat::pack_magnitude(&w);
+    let qmask = prune_mask_24(&w.map(|v| v.abs()));
+    let qp = QuantSparse24Mat::quantize(&w, &qmask);
+    let x1: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut y_s24 = vec![0f32; m];
+    let mut y_q8 = vec![0f32; m];
+
+    // Warmup: first calls may grow the per-thread scratch, resolve the
+    // PIFA_SIMD env gate, and run CPU feature detection — all one-time.
+    gemv::skinny_nt_into(&a, &w, &mut y_gemv);
+    fused::pifa_apply_rows_fused_into(&layer, &a, &mut y_pifa);
+    sp.matvec_into(&x1, &mut y_s24);
+    qp.matvec_into(&x1, &mut y_q8);
+
+    let iters = 50;
+    let d = count_allocs(iters, || {
+        gemv::skinny_nt_into(&a, &w, &mut y_gemv);
+    });
+    assert_eq!(d, 0, "skinny_nt_into allocated {d} times over {iters} calls");
+
+    let d = count_allocs(iters, || {
+        fused::pifa_apply_rows_fused_into(&layer, &a, &mut y_pifa);
+    });
+    assert_eq!(d, 0, "pifa_apply_rows_fused_into allocated {d} times over {iters} calls");
+
+    let d = count_allocs(iters, || {
+        sp.matvec_into(&x1, &mut y_s24);
+    });
+    assert_eq!(d, 0, "Sparse24Mat::matvec_into allocated {d} times over {iters} calls");
+
+    let d = count_allocs(iters, || {
+        qp.matvec_into(&x1, &mut y_q8);
+    });
+    assert_eq!(d, 0, "QuantSparse24Mat::matvec_into allocated {d} times over {iters} calls");
+
+    // Sanity: the counter itself works — an allocating op registers.
+    let d = count_allocs(1, || {
+        std::hint::black_box(vec![0u8; 1024]);
+    });
+    assert!(d >= 1, "counting allocator failed to observe a Vec allocation");
+}

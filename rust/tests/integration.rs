@@ -173,7 +173,7 @@ fn registry_presets_roundtrip_with_provenance() {
         // 0.5; a 2:4 residual pack needs > 0.5.
         let density = match compressor.spec(0.6) {
             Some(s) if matches!(s.prune, PruneStage::SemiStructured(_)) => 0.5,
-            Some(s) if s.pack == PackStage::Sparse24Residual => 0.7,
+            Some(s) if s.pack != PackStage::None => 0.7,
             _ => 0.6,
         };
         let out = compressor
@@ -200,12 +200,16 @@ fn registry_presets_roundtrip_with_provenance() {
         let restored = PipelineSpec::parse(&provenance.expect("provenance missing")).unwrap();
         assert_eq!(restored, out.spec, "{name}: provenance spec drifted through checkpoint");
 
-        // The hybrid preset must actually install hybrid modules.
+        // The hybrid presets must actually install hybrid modules.
         if name == "lowrank-s24" {
             use pifa::model::transformer::ModuleKind;
             assert_eq!(loaded.module(0, ModuleKind::Q).kind_name(), "lowrank+s24");
             let d = loaded.density();
             assert!((d - density).abs() < 0.1, "hybrid density {d} vs target {density}");
+        }
+        if name == "lowrank-s24-q8" {
+            use pifa::model::transformer::ModuleKind;
+            assert_eq!(loaded.module(0, ModuleKind::Q).kind_name(), "lowrank+s24q8");
         }
     }
 }

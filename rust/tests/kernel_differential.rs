@@ -10,9 +10,9 @@ use pifa::linalg::{
 use pifa::model::LinearRepr;
 use pifa::pifa::{pivoting_factorization, PivotStrategy};
 use pifa::runtime::kernels::fused::pifa_apply_rows_fused;
-use pifa::runtime::kernels::gemv::{dot, skinny_nt};
-use pifa::runtime::kernels::pool;
-use pifa::sparse24::Sparse24Mat;
+use pifa::runtime::kernels::gemv::{dot, dot_scalar, skinny_nt};
+use pifa::runtime::kernels::{pool, simd, DECODE_BATCH_MAX};
+use pifa::sparse24::{prune_mask_24, QuantSparse24Mat, Sparse24Mat};
 
 fn naive_nt(a: &Mat<f64>, b: &Mat<f64>) -> Mat<f64> {
     let (m, k) = a.shape();
@@ -168,15 +168,24 @@ fn diff_linear_forward_vs_effective_dense() {
     let w_lr = matmul(&u, &vt);
     let pifa_layer = pivoting_factorization(&w_lr, r, PivotStrategy::QrColumnPivot).unwrap();
     let sp = Sparse24Mat::pack_magnitude(&w_dense);
-    let res = Sparse24Mat::pack_magnitude(&w_dense.sub_mat(&w_lr));
+    let resid_dense = w_dense.sub_mat(&w_lr);
+    let res = Sparse24Mat::pack_magnitude(&resid_dense);
+    let qmask = prune_mask_24(&resid_dense.map(|v| v.abs()));
+    let qres = QuantSparse24Mat::quantize(&resid_dense, &qmask);
     let cases: Vec<(LinearRepr, Mat<f32>)> = vec![
         (LinearRepr::Dense(w_dense.clone()), w_dense.clone()),
         (LinearRepr::LowRank { u: u.clone(), vt: vt.clone() }, w_lr.clone()),
         (LinearRepr::Pifa(pifa_layer), w_lr.clone()),
         (LinearRepr::Sparse24(sp.clone()), sp.to_dense()),
         (
-            LinearRepr::LowRankSparse { u, vt, residual: res.clone() },
+            LinearRepr::LowRankSparse { u: u.clone(), vt: vt.clone(), residual: res.clone() },
             w_lr.add_mat(&res.to_dense()),
+        ),
+        // Effective dense of the quant hybrid is low-rank + *dequantized*
+        // residual, so int8 rounding cancels out of this comparison.
+        (
+            LinearRepr::LowRankQuantSparse { u, vt, residual: qres.clone() },
+            w_lr.add_mat(&qres.to_dense()),
         ),
     ];
     for b in 1..=6 {
@@ -191,6 +200,180 @@ fn diff_linear_forward_vs_effective_dense() {
                 y.rel_fro_err(&want)
             );
         }
+    }
+}
+
+/// SIMD dot against the scalar four-chain core, called DIRECTLY (both
+/// sides ignore the runtime mode, so this pins the wide tier on every
+/// host regardless of `PIFA_SIMD` or feature detection fallbacks). The
+/// wide tier reduces through 8 chains + a pairwise tree — a different
+/// order than the scalar 4-chain — so the pin is bounded-tolerance, not
+/// bitwise. Sweeps every tail length 1..=7 around each lane boundary.
+#[test]
+fn diff_simd_dot_vs_scalar_all_tails() {
+    let mut rng = Rng::new(51_008);
+    let mut lens: Vec<usize> = vec![0];
+    for blocks in [0usize, 1, 2, 8, 16] {
+        for tail in 0..8 {
+            lens.push(blocks * simd::LANES + tail); // tails 1..7: n not a lane multiple
+        }
+    }
+    for &len in &lens {
+        let a: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        let wide = simd::dot(&a, &b);
+        let scalar = dot_scalar(&a, &b);
+        let tol = 1e-4 * (1.0 + scalar.abs());
+        assert!((wide - scalar).abs() <= tol, "len={len}: {wide} vs {scalar}");
+    }
+}
+
+/// Non-finite inputs must propagate identically through both tiers:
+/// a NaN or ∞ anywhere (lane body or tail) may not be masked by the
+/// wide kernel's block structure.
+#[test]
+fn diff_simd_dot_nan_inf_parity() {
+    for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+        for pos in [0usize, 3, 7, 8, 12] {
+            let mut a = vec![1.0f32; 13]; // 1 full block + tail of 5
+            a[pos] = poison;
+            let b = vec![2.0f32; 13];
+            let wide = simd::dot(&a, &b);
+            let scalar = dot_scalar(&a, &b);
+            assert_eq!(
+                wide.is_nan(),
+                scalar.is_nan(),
+                "poison {poison} at {pos}: {wide} vs {scalar}"
+            );
+            if !scalar.is_nan() {
+                assert_eq!(wide, scalar, "poison {poison} at {pos}");
+            }
+        }
+    }
+}
+
+/// Batched SIMD dot against per-row scalar dots, for every decode batch
+/// size and awkward inner lengths.
+#[test]
+fn diff_simd_batch_dot_vs_scalar_rows() {
+    let mut rng = Rng::new(51_009);
+    for bm in 1..=DECODE_BATCH_MAX {
+        for k in [1usize, 5, 7, 8, 9, 13, 24, 31, 64, 127] {
+            let a: Vec<f32> = (0..bm * k).map(|_| rng.normal() as f32).collect();
+            let brow: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            let mut out = [0f32; DECODE_BATCH_MAX];
+            simd::batch_dot(&a, bm, k, &brow, &mut out);
+            for bi in 0..bm {
+                let want = dot_scalar(&a[bi * k..(bi + 1) * k], &brow);
+                assert!(
+                    (out[bi] - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                    "bm={bm} k={k} bi={bi}: {} vs {want}",
+                    out[bi]
+                );
+            }
+        }
+    }
+}
+
+/// Packed 2:4 SIMD row dots (f32 and int8) against a hand-expanded
+/// reference built from the same raw (values, meta) layout — independent
+/// of `Sparse24Mat`'s own packing code, so a pack bug and a kernel bug
+/// cannot cancel.
+#[test]
+fn diff_simd_packed_row_dots_vs_expanded() {
+    let mut rng = Rng::new(51_010);
+    for &groups in &[0usize, 1, 2, 3, 4, 5, 7, 8, 11, 32, 65] {
+        let n = groups * 4;
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut vals = Vec::with_capacity(groups * 2);
+        let mut qvals = Vec::with_capacity(groups * 2);
+        let mut metas = Vec::with_capacity(groups);
+        let mut want_f = 0f64;
+        let mut want_q = 0f64;
+        for g in 0..groups {
+            // Two distinct kept positions per group of four.
+            let i0 = rng.below(4);
+            let mut i1 = rng.below(4);
+            while i1 == i0 {
+                i1 = rng.below(4);
+            }
+            let (lo, hi) = (i0.min(i1), i0.max(i1));
+            metas.push((lo | (hi << 2)) as u8);
+            for idx in [lo, hi] {
+                let v = rng.normal() as f32;
+                let q = (rng.below(255) as i32 - 127) as i8;
+                vals.push(v);
+                qvals.push(q);
+                want_f += v as f64 * x[g * 4 + idx] as f64;
+                want_q += q as f64 * x[g * 4 + idx] as f64;
+            }
+        }
+        let got_f = simd::s24_row_dot(&vals, &metas, &x) as f64;
+        let got_q = simd::q8_row_dot(&qvals, &metas, &x) as f64;
+        assert!(
+            (got_f - want_f).abs() <= 1e-4 * (1.0 + want_f.abs()),
+            "s24 groups={groups}: {got_f} vs {want_f}"
+        );
+        assert!(
+            (got_q - want_q).abs() <= 1e-3 * (1.0 + want_q.abs()),
+            "q8 groups={groups}: {got_q} vs {want_q}"
+        );
+    }
+}
+
+/// Int8 quantized 2:4 residual: round-trip and error-bound suite.
+/// Quantization is lossy by design — the contract is (a) pruned slots
+/// stay exactly zero, (b) every kept value lands within half a
+/// quantization step of the original, (c) the decode mat-vec agrees with
+/// the dequantized dense product, (d) `to_parts`/`from_parts` is
+/// bit-exact.
+#[test]
+fn diff_quant_repr_round_trip_and_error_bounds() {
+    let mut rng = Rng::new(51_011);
+    for trial in 0..10 {
+        let m = 1 + rng.below(24);
+        let n = 4 * (1 + rng.below(24));
+        let w: Mat<f32> = Mat::randn(m, n, &mut rng);
+        let mask = prune_mask_24(&w.map(|v| v.abs()));
+        let qp = QuantSparse24Mat::quantize(&w, &mask);
+        let deq = qp.to_dense();
+
+        for i in 0..m {
+            // Per-row error bound: |deq - w| <= scale/2 on kept slots
+            // (round-to-nearest), exact zero on pruned slots.
+            let half_step = 0.5 * qp.scale(i) + 1e-6;
+            for j in 0..n {
+                if mask[i * n + j] {
+                    let err = (deq[(i, j)] - w[(i, j)]).abs();
+                    assert!(
+                        err <= half_step,
+                        "trial {trial} ({i},{j}): err {err} > half step {half_step}"
+                    );
+                } else {
+                    assert_eq!(deq[(i, j)], 0.0, "trial {trial} pruned ({i},{j}) nonzero");
+                }
+            }
+        }
+
+        // Decode mat-vec vs the dequantized dense product.
+        let x: Mat<f32> = Mat::randn(1, n, &mut rng);
+        let y = qp.matvec(x.row(0));
+        let want = matmul(&x, &deq.transpose());
+        for (j, (a, b)) in y.iter().zip(want.row(0)).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                "trial {trial} col {j}: {a} vs {b}"
+            );
+        }
+        // And the batched fast path vs its generic reference.
+        let xb: Mat<f32> = Mat::randn(3, n, &mut rng);
+        assert!(qp.apply_rows(&xb).rel_fro_err(&qp.apply_rows_ref(&xb)) < 1e-5, "trial {trial}");
+
+        // Raw-parts round trip is bit-exact (the checkpoint path).
+        let (pm, pn, vals, metas, scales) = qp.to_parts();
+        let rebuilt =
+            QuantSparse24Mat::from_parts(pm, pn, vals.to_vec(), metas.to_vec(), scales.to_vec());
+        assert_eq!(rebuilt.to_dense(), deq, "trial {trial} parts round-trip drifted");
     }
 }
 

@@ -21,8 +21,10 @@
 //! Override with `PIFA_KV_SPILL=ticket|fallback`. The prefill chunk
 //! budget also rotates by seed (0 = monolithic, through 64 = one-shot
 //! for these prompt lengths), so cancel/deadline/preempt sequences land
-//! mid-prefill; pin it with `PIFA_PREFILL_CHUNK=<tokens>`. Failures
-//! print the seed: rerun one seed with
+//! mid-prefill; pin it with `PIFA_PREFILL_CHUNK=<tokens>`. The decode
+//! kernels' SIMD tier rotates by seed too (the mode is process-global,
+//! so both tiers get soaked across the sweep) unless `PIFA_SIMD` pins
+//! one. Failures print the seed: rerun one seed with
 //! `PIFA_SOAK_SEED=<seed> cargo test --test scheduler_soak`.
 
 use pifa::coordinator::{
@@ -211,6 +213,11 @@ struct Submitted {
 
 fn run_soak(seed: u64) {
     let mut rng = Rng::new(seed ^ 0x50AB_50AB);
+    // Rotate the decode SIMD tier per seed unless the env knob pins it
+    // (mirrors the spill-mode rotation below).
+    if std::env::var("PIFA_SIMD").is_err() {
+        pifa::runtime::kernels::simd::set_mode(rng.below(2) == 1);
+    }
     let lanes = 1 + rng.below(4);
     let fault_every = [0usize, 7, 11][rng.below(3)];
     let defer_every = [0usize, 5][rng.below(2)];
