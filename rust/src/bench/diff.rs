@@ -97,6 +97,25 @@ pub fn gate_for(metric: &str) -> Option<MetricGate> {
             abs_floor: 0.05,
             optional: true,
         }),
+        // Router tier (DESIGN.md §12): the fleet-wide prefix-hit rate
+        // (Σ hit / Σ query tokens over every replica's pool) — the
+        // number prefix-aware placement exists to defend — and the
+        // fault-isolation invariant (errors on live replicas). Both are
+        // present only in fleet cells (optional). Live-replica errors
+        // are exactly 0 in every healthy baseline, so the clamped
+        // denominator makes any nonzero candidate gate.
+        "global_prefix_hit_rate" => Some(MetricGate {
+            direction: HigherIsBetter,
+            rel_tol: 0.25,
+            abs_floor: 0.05,
+            optional: true,
+        }),
+        "router_live_replica_errors" => Some(MetricGate {
+            direction: LowerIsBetter,
+            rel_tol: 0.25,
+            abs_floor: 0.5,
+            optional: true,
+        }),
         // KV lifecycle quality (DESIGN.md §10): seed-deterministic
         // outputs of the compressed-spill drift harness, present only
         // in `compress_kv` scenario cells of KV-cache methods.
@@ -908,6 +927,36 @@ mod tests {
         assert!(!report.failed());
         // The raw counter carries no gate: halving it is not a finding.
         assert!(report.findings.iter().all(|f| f.metric != "tokens_drafted"));
+    }
+
+    /// The router-tier gates: a global-hit-rate collapse fails, a
+    /// live-replica error showing up against an all-zero baseline fails
+    /// (the clamped denominator makes 0 → 1 a 2x relative move), and a
+    /// single-server cell that has neither metric stays a note.
+    #[test]
+    fn router_fleet_metrics_gate_and_stay_optional() {
+        let mut fleet = BASE_METRICS.to_vec();
+        fleet.push(("global_prefix_hit_rate", 0.50));
+        fleet.push(("router_live_replica_errors", 0.0));
+        fleet.push(("router_placements", 18.0));
+        let base = serve_report(1, &fleet);
+        let mut collapsed = fleet.clone();
+        collapsed[BASE_METRICS.len()] = ("global_prefix_hit_rate", 0.15);
+        let report = compare_reports(&base, &serve_report(1, &collapsed), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "global_prefix_hit_rate"), Verdict::Regression);
+        assert!(report.failed(), "a global hit-rate collapse must red the gate");
+        let mut leaked = fleet.clone();
+        leaked[BASE_METRICS.len() + 1] = ("router_live_replica_errors", 2.0);
+        let report = compare_reports(&base, &serve_report(1, &leaked), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "router_live_replica_errors"), Verdict::Regression);
+        assert!(report.failed(), "errors leaking onto live replicas must red the gate");
+        // A single-server cell has no fleet metrics: a note, not a fail.
+        let report = compare_reports(&base, &serve_report(1, BASE_METRICS), 1.0).unwrap();
+        assert_eq!(verdict_of(&report, "global_prefix_hit_rate"), Verdict::OptionalAbsent);
+        assert_eq!(verdict_of(&report, "router_live_replica_errors"), Verdict::OptionalAbsent);
+        assert!(!report.failed());
+        // The placement counter carries no gate: drift is not a finding.
+        assert!(report.findings.iter().all(|f| f.metric != "router_placements"));
     }
 
     #[test]

@@ -32,8 +32,9 @@ use crate::bench::tables::TablePrinter;
 use crate::compress::registry;
 use crate::data::batch::TokenDataset;
 use crate::coordinator::{
-    DecodeBackend, GenRequest, GenerationMode, KvLifeConfig, NativeBackend, Priority,
-    SamplingParams, SchedulerConfig, ServeError, Server, StepInput, StepResult, StreamHandle,
+    DecodeBackend, GenRequest, GenerationMode, KvLifeConfig, NativeBackend, PlacementPolicy,
+    Priority, Router, RouterConfig, RouterStreamHandle, SamplingParams, SchedulerConfig,
+    ServeError, Server, StepInput, StepResult, StreamHandle,
 };
 use crate::linalg::Rng;
 use crate::runtime::{DraftEngine, EvictPolicyKind, SpecConfig};
@@ -102,6 +103,19 @@ pub struct Scenario {
     /// monolithically (one backend call per prompt), > 0 interleaves
     /// chunked prefill with decode iterations.
     pub prefill_chunk: usize,
+    /// Fleet size: 1 serves through a single [`Server`]; > 1 routes
+    /// through the multi-replica tier (DESIGN.md §12).
+    pub replicas: usize,
+    /// Number of distinct shared prefixes (each `shared_prefix` tokens
+    /// long) with skewed popularity — the router placement workload.
+    /// 0 keeps the single-prefix behaviour of `shared_prefix`.
+    pub prefix_groups: usize,
+    /// Router placement policy (fleet cells only); round-robin is the
+    /// control arm the prefix-aware hit rate is compared against.
+    pub placement: PlacementPolicy,
+    /// Kill one replica after half the submissions (fleet cells only):
+    /// the degraded-not-erroring leg.
+    pub kill_replica: bool,
     pub seed: u64,
 }
 
@@ -125,6 +139,10 @@ pub fn catalogue(smoke: bool) -> Vec<Scenario> {
         high_frac: 0.0,
         speculate: false,
         prefill_chunk: 512,
+        replicas: 1,
+        prefix_groups: 0,
+        placement: PlacementPolicy::PrefixAware,
+        kill_replica: false,
         seed: 0,
     };
     // Repeated fleet: the same shared-prefix fleet replayed in bursts
@@ -228,6 +246,48 @@ pub fn catalogue(smoke: bool) -> Vec<Scenario> {
             ..base.clone()
         },
     ];
+    // Router fleet (DESIGN.md §12): skewed popularity over several
+    // shared-prefix groups on a 3-replica fleet. The prefix-aware /
+    // round-robin pair replays the identical seeded workload and differs
+    // *only* in placement policy, so the global-prefix-hit-rate spread
+    // IS the placement comparison (aware colocates each group and pays
+    // one cold miss per group; round-robin scatters a group over the
+    // fleet and pays a cold miss per (group, replica) pair).
+    let router = Scenario {
+        name: "router-fleet-skew",
+        arrivals: ArrivalProcess::Bursty { burst: 4, gap_ms: 25.0 },
+        requests: if smoke { 18 } else { 36 },
+        prompt_lens: (3, 6),
+        max_new: (6, 12),
+        shared_prefix: 12,
+        replicas: 3,
+        prefix_groups: 4,
+        seed: 111,
+        ..base.clone()
+    };
+    out.push(router.clone());
+    out.push(Scenario {
+        name: "router-fleet-skew-rr",
+        placement: PlacementPolicy::RoundRobin,
+        ..router.clone()
+    });
+    // Replica-kill mid-run: one replica dies after half the
+    // submissions. The property is degraded-not-erroring — fleet
+    // goodput stays positive and every error is attributable to the
+    // killed replica (live-replica errors exactly zero).
+    out.push(Scenario {
+        name: "router-replica-kill",
+        arrivals: ArrivalProcess::Bursty { burst: 3, gap_ms: 30.0 },
+        requests: if smoke { 15 } else { 30 },
+        prompt_lens: (3, 6),
+        max_new: (12, 20),
+        shared_prefix: 8,
+        replicas: 3,
+        prefix_groups: 3,
+        kill_replica: true,
+        seed: 112,
+        ..base.clone()
+    });
     if !smoke {
         out.push(Scenario {
             name: "repeated-fleet-freq",
@@ -335,7 +395,14 @@ pub fn build_workload(
     rep: u64,
 ) -> Vec<WorkItem> {
     let mut rng = Rng::new(sc.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ rep);
-    let prefix: Vec<usize> = (0..sc.shared_prefix).map(|_| rng.below(vocab)).collect();
+    // `prefix_groups == 0` draws the single prefix exactly as before, so
+    // pre-router scenarios reproduce their historical workloads bit for
+    // bit. Groups > 0 draw one prefix per group; each request then picks
+    // a group with geometric skew (group 0 most popular), the classic
+    // hot-prefix popularity shape prefix-aware placement exploits.
+    let prefixes: Vec<Vec<usize>> = (0..sc.prefix_groups.max(1))
+        .map(|_| (0..sc.shared_prefix).map(|_| rng.below(vocab)).collect())
+        .collect();
     let mut at = Duration::ZERO;
     let mut out = Vec::with_capacity(sc.requests);
     for i in 0..sc.requests {
@@ -355,7 +422,13 @@ pub fn build_workload(
         }
         let span = sc.prompt_lens.1.saturating_sub(sc.prompt_lens.0) + 1;
         let plen = sc.prompt_lens.0 + rng.below(span);
-        let mut prompt = prefix.clone();
+        let mut group = 0usize;
+        if sc.prefix_groups > 1 {
+            while group + 1 < sc.prefix_groups && rng.uniform() < 0.45 {
+                group += 1;
+            }
+        }
+        let mut prompt = prefixes[group].clone();
         for _ in 0..plen.max(1) {
             prompt.push(rng.below(vocab));
         }
@@ -468,6 +541,142 @@ fn drive(server: &Server, work: &[WorkItem]) -> Result<DriveOutcome> {
     Ok(DriveOutcome { wall: start.elapsed(), completed, completed_tokens })
 }
 
+/// Fleet analogue of [`drive`]: the same open-loop timeline submitted
+/// through the router, with the scenario's optional mid-run replica
+/// kill. Engine failures are tolerated only when the scenario injected
+/// the kill — they are the killed replica's expected blast radius, and
+/// the router metrics assert they stayed there.
+fn drive_router(router: &mut Router, work: &[WorkItem], kill_replica: bool) -> Result<DriveOutcome> {
+    #[derive(Clone, Copy)]
+    enum Ev {
+        Submit(usize),
+        Cancel(usize),
+    }
+    let mut events: Vec<(Duration, Ev)> = Vec::new();
+    for (i, w) in work.iter().enumerate() {
+        events.push((w.submit_at, Ev::Submit(i)));
+        if let Some(delay) = w.cancel_after {
+            events.push((w.submit_at + delay, Ev::Cancel(i)));
+        }
+    }
+    events.sort_by_key(|(t, _)| *t);
+    let mut handles: Vec<Option<RouterStreamHandle>> = (0..work.len()).map(|_| None).collect();
+    let kill_after = (work.len() / 2).max(1);
+    let mut submitted = 0usize;
+    let mut killed = false;
+    let start = Instant::now();
+    for (at, ev) in events {
+        let target = start + at;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        match ev {
+            Ev::Submit(i) => {
+                let w = &work[i];
+                let mut req = GenRequest::new(w.id, w.prompt.clone(), w.max_new).with_sampling(
+                    SamplingParams { priority: w.priority, ..SamplingParams::default() },
+                );
+                if let Some(d) = w.deadline {
+                    req = req.with_deadline(d);
+                }
+                handles[i] = Some(router.submit(req)?);
+                submitted += 1;
+                if kill_replica && !killed && submitted >= kill_after {
+                    // Kill the replica serving the first placed stream:
+                    // deterministic, and guaranteed to have in-flight
+                    // blast radius when anything does.
+                    if let Some(v) = handles.iter().flatten().find_map(|h| h.replica()) {
+                        router.kill(v)?;
+                        killed = true;
+                    }
+                }
+            }
+            Ev::Cancel(i) => {
+                if let Some(h) = handles[i].as_ref() {
+                    h.cancel();
+                }
+            }
+        }
+    }
+    let mut completed = 0usize;
+    let mut completed_tokens = 0usize;
+    for h in handles.into_iter().flatten() {
+        match h.collect_timeout(Duration::from_secs(60)) {
+            Ok(stats) => {
+                completed += 1;
+                completed_tokens += stats.tokens.len();
+            }
+            Err(
+                ServeError::Cancelled
+                | ServeError::Timeout
+                | ServeError::Overloaded { .. },
+            ) => {}
+            Err(ServeError::EngineFailure(_)) if kill_replica => {}
+            Err(e) => anyhow::bail!("routed request failed: {e}"),
+        }
+    }
+    Ok(DriveOutcome { wall: start.elapsed(), completed, completed_tokens })
+}
+
+/// Fleet variant of [`run_scenario`]: one [`Router`] over `sc.replicas`
+/// identical replicas per repetition. Fleet cells exercise the
+/// placement axis; speculation and spill stay on the single-server
+/// cells that own those axes.
+fn run_scenario_router(
+    served: &Transformer,
+    mode: GenerationMode,
+    sc: &Scenario,
+    reps: usize,
+) -> Result<Vec<(String, f64)>> {
+    let mut samples: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let life = KvLifeConfig {
+        evict: sc.evict,
+        spill: sc.spill,
+        compress: sc.compress_kv,
+        rank_frac: 0.5,
+    };
+    for rep in 0..reps.max(1) {
+        let work = build_workload(sc, served.cfg.vocab, served.cfg.max_seq, rep as u64);
+        let rcfg = RouterConfig {
+            replicas: sc.replicas,
+            placement: sc.placement,
+            scheduler: SchedulerConfig {
+                max_batch: 0,
+                max_wait: Duration::from_millis(2),
+                queue_cap: 64,
+                prefill_chunk: sc.prefill_chunk,
+            },
+            ..RouterConfig::default()
+        };
+        let model = served.clone();
+        let mut router = Router::spawn(rcfg, move |_id| {
+            let m = model.clone();
+            move || {
+                Ok(Box::new(NativeBackend::new(m, mode, KV_LANES).with_kvlife(life))
+                    as Box<dyn DecodeBackend>)
+            }
+        });
+        let outcome = drive_router(&mut router, &work, sc.kill_replica)?;
+        let rm = router.shutdown()?;
+        let wall_secs = outcome.wall.as_secs_f64().max(1e-9);
+        let mut row = rm.snapshot();
+        row.retain(|(k, _)| k != "kv_compression_ratio");
+        row.push(("goodput_tps".to_string(), outcome.completed_tokens as f64 / wall_secs));
+        row.push(("wall_ms".to_string(), wall_secs * 1e3));
+        row.push(("client_completed".to_string(), outcome.completed as f64));
+        for (k, v) in row {
+            samples.entry(k).or_default().push(v);
+        }
+    }
+    let mut out = Vec::with_capacity(samples.len());
+    for (k, mut vs) in samples {
+        vs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        out.push((k, vs[vs.len() / 2]));
+    }
+    Ok(out)
+}
+
 /// Run `reps` repetitions of one (scenario, method-model) cell and
 /// return the per-metric **medians** (the noise discipline `bench-diff`
 /// assumes: a cell value is a median of `reps` independent runs).
@@ -477,6 +686,9 @@ pub fn run_scenario(
     sc: &Scenario,
     reps: usize,
 ) -> Result<Vec<(String, f64)>> {
+    if sc.replicas > 1 {
+        return run_scenario_router(served, mode, sc, reps);
+    }
     let mut samples: BTreeMap<String, Vec<f64>> = BTreeMap::new();
     let life = KvLifeConfig {
         evict: sc.evict,
@@ -857,6 +1069,46 @@ pub fn run_cli(smoke: bool, out: &Path, model_name: &str, reps: usize) -> Result
                 );
             }
         }
+        // Router fleet (DESIGN.md §12): the skew pair replays the same
+        // seeded workload with placement as the only difference, so
+        // prefix-aware must beat round-robin on the global hit rate for
+        // every method; the replica-kill leg must be degraded-not-
+        // erroring — positive fleet goodput, zero live-replica errors,
+        // exactly one dead replica, work still completing.
+        for m in &methods {
+            let cell = |scenario: &str| {
+                report.cells.iter().find(|c| c.scenario == scenario && c.method == *m)
+            };
+            if let (Some(aware), Some(rr)) =
+                (cell("router-fleet-skew"), cell("router-fleet-skew-rr"))
+            {
+                let a = aware.metric("global_prefix_hit_rate").unwrap_or(0.0);
+                let r = rr.metric("global_prefix_hit_rate").unwrap_or(0.0);
+                ensure!(
+                    a > r,
+                    "smoke: {m}: prefix-aware global hit rate ({a:.3}) must beat \
+                     round-robin ({r:.3}) on the same seed"
+                );
+            }
+            if let Some(kill) = cell("router-replica-kill") {
+                let g = |k: &str| kill.metric(k).unwrap_or(-1.0);
+                ensure!(
+                    g("goodput_tps") > 0.0,
+                    "smoke: {m}: fleet goodput must survive a replica kill"
+                );
+                ensure!(
+                    g("router_live_replica_errors") == 0.0,
+                    "smoke: {m}: errors leaked to live replicas ({})",
+                    g("router_live_replica_errors")
+                );
+                ensure!(g("completed") > 0.0, "smoke: {m}: fleet must still complete work");
+                ensure!(
+                    g("replicas_live") == 2.0,
+                    "smoke: {m}: exactly one replica should die, {} live of 3",
+                    g("replicas_live")
+                );
+            }
+        }
         // Close the loop through the reader: the file we just wrote must
         // parse, schema-validate, and self-diff clean.
         let parsed = crate::bench::json::Json::parse(&json_text)?;
@@ -899,6 +1151,10 @@ mod tests {
             high_frac: 0.0,
             speculate: false,
             prefill_chunk: 512,
+            replicas: 1,
+            prefix_groups: 0,
+            placement: PlacementPolicy::PrefixAware,
+            kill_replica: false,
             seed: 7,
         }
     }
@@ -1041,6 +1297,113 @@ mod tests {
                 assert_eq!(s.prefill_chunk, 512, "{}: non-pair scenarios use the default", s.name);
             }
         }
+    }
+
+    /// The router scenario trio: the skew pair differs only in
+    /// placement policy (identical seeded workload), the kill leg
+    /// actually kills, and every pre-router scenario stays single-
+    /// server so its historical workload — and baselines — are intact.
+    #[test]
+    fn router_scenarios_are_in_the_catalogue() {
+        let find = |cat: &[Scenario], name: &str| {
+            cat.iter()
+                .find(|s| s.name == name)
+                .cloned()
+                .unwrap_or_else(|| panic!("scenario {name} missing from catalogue"))
+        };
+        let smoke = catalogue(true);
+        let aware = find(&smoke, "router-fleet-skew");
+        let rr = find(&smoke, "router-fleet-skew-rr");
+        assert_eq!(aware.placement, PlacementPolicy::PrefixAware);
+        assert_eq!(rr.placement, PlacementPolicy::RoundRobin);
+        assert_eq!(aware.seed, rr.seed, "pair must replay the identical workload");
+        assert_eq!(aware.requests, rr.requests);
+        assert_eq!(aware.prefix_groups, rr.prefix_groups);
+        assert_eq!(aware.replicas, rr.replicas);
+        assert!(aware.replicas > 1 && aware.prefix_groups > 1);
+        assert!(!aware.kill_replica && !rr.kill_replica);
+        let kill = find(&smoke, "router-replica-kill");
+        assert!(kill.kill_replica && kill.replicas > 2, "kill leg needs survivors");
+        for s in &smoke {
+            if !s.name.starts_with("router-") {
+                assert_eq!(s.replicas, 1, "{}: pre-router scenarios stay single-server", s.name);
+                assert_eq!(s.prefix_groups, 0, "{}: single-prefix workload unchanged", s.name);
+            }
+        }
+    }
+
+    /// Grouped workloads draw skewed popularity: several distinct
+    /// prefixes, group 0 the most popular, all seed-deterministic.
+    #[test]
+    fn grouped_workload_is_skewed_and_deterministic() {
+        let sc = Scenario {
+            prefix_groups: 3,
+            shared_prefix: 6,
+            requests: 48,
+            ..tiny_scenario()
+        };
+        let a = build_workload(&sc, 32, 64, 0);
+        assert_eq!(a, build_workload(&sc, 32, 64, 0), "grouped draws must reproduce");
+        let mut counts: BTreeMap<Vec<usize>, usize> = BTreeMap::new();
+        for w in &a {
+            *counts.entry(w.prompt[..6].to_vec()).or_default() += 1;
+        }
+        assert!(counts.len() >= 2, "several groups must actually appear");
+        assert!(counts.len() <= 3, "only the drawn group prefixes may appear");
+        let max = counts.values().copied().max().unwrap();
+        assert!(
+            max * 3 >= a.len(),
+            "skew: the hottest group should dominate ({max} of {})",
+            a.len()
+        );
+    }
+
+    /// A fleet cell runs end-to-end through the router and reports the
+    /// fleet metrics the gate watches.
+    #[test]
+    fn router_cell_reports_fleet_metrics() {
+        let model = micro_model(26);
+        let sc = Scenario {
+            replicas: 2,
+            prefix_groups: 2,
+            shared_prefix: 4,
+            requests: 6,
+            ..tiny_scenario()
+        };
+        let m = run_scenario(&model, GenerationMode::KvCache, &sc, 1).unwrap();
+        let get = |k: &str| m.iter().find(|(n, _)| n == k).map(|(_, v)| *v);
+        assert_eq!(get("completed"), Some(6.0), "healthy fleet completes everything");
+        assert_eq!(get("client_completed"), Some(6.0));
+        assert_eq!(get("router_placements"), Some(6.0));
+        assert_eq!(get("router_unplaceable"), Some(0.0));
+        assert_eq!(get("router_live_replica_errors"), Some(0.0));
+        assert_eq!(get("replicas_live"), Some(2.0));
+        let hit = get("global_prefix_hit_rate").expect("fleet cell must report global hit rate");
+        assert!((0.0..=1.0).contains(&hit));
+        assert!(get("goodput_tps").unwrap() > 0.0);
+    }
+
+    /// The kill leg degrades instead of erroring: the fleet still
+    /// completes work, every error stays on the dead replica, and
+    /// exactly one replica ends the run dead.
+    #[test]
+    fn replica_kill_cell_degrades_not_errors() {
+        let model = micro_model(27);
+        let sc = Scenario {
+            replicas: 3,
+            prefix_groups: 2,
+            shared_prefix: 4,
+            requests: 9,
+            max_new: (8, 12),
+            kill_replica: true,
+            ..tiny_scenario()
+        };
+        let m = run_scenario(&model, GenerationMode::KvCache, &sc, 1).unwrap();
+        let get = |k: &str| m.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap_or(-1.0);
+        assert!(get("completed") > 0.0, "fleet must keep completing after the kill");
+        assert_eq!(get("router_live_replica_errors"), 0.0);
+        assert_eq!(get("replicas_live"), 2.0, "exactly one replica dies");
+        assert!(get("goodput_tps") > 0.0);
     }
 
     /// The chunked scheduler path engages end-to-end: a tiny chunk

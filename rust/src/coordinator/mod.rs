@@ -15,6 +15,10 @@
 //!   `spawn_speculative` installs a compressed-variant
 //!   [`crate::runtime::DraftEngine`] for self-speculative decoding
 //!   (DESIGN.md §11).
+//! * [`router`] — the multi-replica tier (DESIGN.md §12): prefix-aware
+//!   placement over a fleet of [`Server`] replicas, load-aware spill,
+//!   probe-driven health states, draining, and fleet-level
+//!   [`RouterMetrics`] with a *global* prefix-hit rate.
 //! * [`clock`] — the injectable time source ([`SystemClock`] /
 //!   [`ManualClock`]) behind every scheduling-policy timestamp, so
 //!   tests and benchmarks can drive timing deterministically.
@@ -22,6 +26,7 @@
 pub mod clock;
 pub mod engine;
 pub mod request;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 
@@ -34,5 +39,9 @@ pub use request::{
     EngineFault, Event, FinishReason, GenRequest, GenStats, Priority, SamplingParams, ServeError,
     ServeMetrics,
 };
+pub use router::{
+    KillSwitch, PlacementPolicy, ReplicaState, Router, RouterConfig, RouterMetrics,
+    RouterStreamHandle,
+};
 pub use scheduler::{GenSession, Scheduler, SchedulerConfig};
-pub use server::{Server, StreamHandle};
+pub use server::{ProbeReply, Server, StreamHandle};

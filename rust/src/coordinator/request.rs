@@ -435,6 +435,56 @@ impl ServeMetrics {
         self.kv_blocks_total > 0
     }
 
+    /// Fold another replica's metrics into this aggregate (the fleet
+    /// rollup behind [`crate::coordinator::RouterMetrics`], DESIGN.md
+    /// §12). Counters and engine time sum; percentile sample vectors
+    /// concatenate, so a fleet percentile is taken over the union of
+    /// per-replica samples; `peak_active` takes the max (lanes are
+    /// replica-local, peaks at different replicas never coexist on one
+    /// backend); pool totals and peaks sum (the fleet's capacity is the
+    /// sum of its pools — the peak sum is an upper bound since replica
+    /// peaks need not be simultaneous). Merging unsorts the percentile
+    /// vectors: call [`ServeMetrics::finalize`] on the aggregate before
+    /// reading percentiles.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.requests += other.requests;
+        self.completed += other.completed;
+        self.cancelled += other.cancelled;
+        self.rejected += other.rejected;
+        self.timeouts += other.timeouts;
+        self.errors += other.errors;
+        self.tokens_generated += other.tokens_generated;
+        self.total_exec_secs += other.total_exec_secs;
+        self.batches += other.batches;
+        self.prefills += other.prefills;
+        self.prefill_chunks += other.prefill_chunks;
+        self.prefill_stall_secs += other.prefill_stall_secs;
+        self.peak_active = self.peak_active.max(other.peak_active);
+        self.kv_blocks_total += other.kv_blocks_total;
+        self.kv_peak_blocks += other.kv_peak_blocks;
+        self.kv_prefix_hit_tokens += other.kv_prefix_hit_tokens;
+        self.kv_prefix_query_tokens += other.kv_prefix_query_tokens;
+        self.kv_cow_copies += other.kv_cow_copies;
+        self.kv_evictions += other.kv_evictions;
+        self.kv_idle_blocks += other.kv_idle_blocks;
+        self.spills += other.spills;
+        self.resumes += other.resumes;
+        self.kv_spill_raw_bytes += other.kv_spill_raw_bytes;
+        self.kv_spill_stored_bytes += other.kv_spill_stored_bytes;
+        self.tokens_drafted += other.tokens_drafted;
+        self.tokens_accepted += other.tokens_accepted;
+        self.spec_fallbacks += other.spec_fallbacks;
+        self.latencies_ms.extend_from_slice(&other.latencies_ms);
+        self.ttft_ms.extend_from_slice(&other.ttft_ms);
+        self.itl_ms.extend_from_slice(&other.itl_ms);
+        self.queue_wait_ms.extend_from_slice(&other.queue_wait_ms);
+        self.prefill_ms.extend_from_slice(&other.prefill_ms);
+        self.queue_depth.extend_from_slice(&other.queue_depth);
+        self.lane_occupancy.extend_from_slice(&other.lane_occupancy);
+        self.kv_util.extend_from_slice(&other.kv_util);
+        self.finalized = false;
+    }
+
     /// Sort the percentile vectors once; accessors index directly after
     /// this. The server calls it before returning metrics at shutdown.
     pub fn finalize(&mut self) {
@@ -784,6 +834,52 @@ mod tests {
         {
             assert!(names.contains(&required), "snapshot lost metric {required}");
         }
+    }
+
+    /// The fleet rollup: counters sum, percentiles are taken over the
+    /// union of samples, the prefix-hit rate becomes the global
+    /// Σhits/Σqueries ratio (not a mean of per-replica rates), and
+    /// `peak_active` takes the max.
+    #[test]
+    fn merge_aggregates_replica_metrics() {
+        let mut a = ServeMetrics::default();
+        a.record_admit();
+        a.record_first_token(Duration::from_millis(10));
+        a.record_done(&stats(1, 1, 20));
+        a.record_iteration(Duration::from_secs_f64(0.1), 2, 4, 0);
+        a.kv_blocks_total = 8;
+        a.kv_prefix_hit_tokens = 9;
+        a.kv_prefix_query_tokens = 10;
+        a.finalize();
+        let mut b = ServeMetrics::default();
+        b.record_admit();
+        b.record_admit();
+        b.record_first_token(Duration::from_millis(30));
+        b.record_done(&stats(2, 1, 40));
+        b.record_iteration(Duration::from_secs_f64(0.3), 3, 4, 1);
+        b.errors = 1;
+        b.kv_blocks_total = 8;
+        b.kv_prefix_hit_tokens = 0;
+        b.kv_prefix_query_tokens = 10;
+        b.finalize();
+        let mut fleet = ServeMetrics::default();
+        fleet.merge(&a);
+        fleet.merge(&b);
+        fleet.finalize();
+        assert_eq!(fleet.requests, 3);
+        assert_eq!(fleet.completed, 2);
+        assert_eq!(fleet.errors, 1);
+        assert_eq!(fleet.tokens_generated, 2);
+        assert_eq!(fleet.peak_active, 3, "peak is a max, not a sum");
+        assert_eq!(fleet.kv_blocks_total, 16, "fleet pool capacity sums");
+        assert!((fleet.total_exec_secs - 0.4).abs() < 1e-12);
+        // Global hit rate is the token-weighted ratio: 9/20, not the
+        // mean of the per-replica rates (0.9 + 0.0)/2.
+        assert!((fleet.prefix_hit_rate() - 0.45).abs() < 1e-12);
+        // Percentiles span the union of samples.
+        assert!((fleet.ttft_percentile_ms(0.0) - 10.0).abs() < 1e-9);
+        assert!((fleet.ttft_percentile_ms(1.0) - 30.0).abs() < 1e-9);
+        assert!((fleet.latency_percentile_ms(1.0) - 40.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,949 @@
+//! Multi-replica router tier (DESIGN.md §12): admission and placement
+//! over a fleet of [`Server`] replicas.
+//!
+//! The single-server stack already shares KV blocks between sessions
+//! whose prompts share a token prefix — but only *within* one
+//! [`crate::runtime::kvpool::BlockPool`]. The router lifts that to the
+//! fleet: each request is routed by its prompt's prefix-chain hash (the
+//! exact hash the pool's sharing index is keyed by, via
+//! [`crate::runtime::kvpool::prefix_chain_points`]) to the replica most
+//! likely to hold those blocks, so the global prefix-hit rate approaches
+//! the single-pool rate instead of dividing by the replica count.
+//!
+//! * **Placement** — the router records the chain hashes of every placed
+//!   prompt at `prefix_stride` boundaries; a new prompt looks its points
+//!   up longest-first and prefers the replica holding its longest known
+//!   prefix. No replica state is consulted to compute the hash: the
+//!   router only ever sees hashes and stats, never pool internals.
+//! * **Load-aware spill** — when the preferred replica is saturated
+//!   (client-tracked in-flight sessions at `lanes + spill_headroom`) or
+//!   unhealthy, the request diverts to the least-loaded `Healthy`
+//!   replica (then least-loaded `Degraded`; never `Draining`/`Dead`).
+//! * **Health / backpressure** — every `probe_every` placements the
+//!   router probes each replica ([`Server::probe`]): queue depth and
+//!   block-utilization watermarks demote `Healthy` → `Degraded` and
+//!   back; an unanswered probe demotes to `Dead`. `Draining` and `Dead`
+//!   are sticky.
+//! * **Draining** — [`Router::drain`] stops new placements to a replica
+//!   while its active sessions run to completion (the rolling-restart
+//!   primitive); [`Router::shutdown`] then collects its metrics like any
+//!   other replica's.
+//! * **Fault isolation** — [`Router::kill`] trips the replica's
+//!   [`KillSwitch`] (every backend is wrapped in a killable shim at
+//!   spawn): in-flight sessions on that replica fail with typed
+//!   [`ServeError::EngineFailure`] events, the replica is marked `Dead`,
+//!   and the rest of the fleet keeps serving — degraded goodput, not an
+//!   erroring fleet.
+//!
+//! [`RouterMetrics`] merges the per-replica [`ServeMetrics`] into fleet
+//! TTFT/ITL/goodput (union-of-samples percentiles) and reports the
+//! *global* prefix-hit rate: Σ hit tokens / Σ query tokens across every
+//! pool — the fleet-level number `bench-serve`'s `router-fleet-*`
+//! scenarios gate.
+
+use super::engine::{AdmitVerdict, DecodeBackend, StepInput, StepResult};
+use super::request::{Event, GenRequest, GenStats, ServeError, ServeMetrics};
+use super::scheduler::SchedulerConfig;
+use super::server::{Server, StreamHandle};
+use crate::runtime::kvpool::prefix_chain_points;
+use anyhow::{ensure, Result};
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Typed replica health, driven by probes and router commands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Accepting preferred and spill placements.
+    Healthy,
+    /// Over a backpressure watermark (queue depth or block
+    /// utilization): still serving, but spill placements avoid it and
+    /// prefix-preferred placements divert away until it recovers.
+    Degraded,
+    /// Draining for a rolling restart: no new placements; active
+    /// sessions run to completion. Sticky until shutdown.
+    Draining,
+    /// Worker unresponsive or kill-switched. Sticky; never placed on.
+    Dead,
+}
+
+impl ReplicaState {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Healthy => "healthy",
+            Self::Degraded => "degraded",
+            Self::Draining => "draining",
+            Self::Dead => "dead",
+        }
+    }
+
+    /// Whether new placements may target this replica at all.
+    pub fn placeable(self) -> bool {
+        matches!(self, Self::Healthy | Self::Degraded)
+    }
+}
+
+/// How the router picks a preferred replica for each request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Prefix-chain-hash affinity (the tier's point). Default.
+    #[default]
+    PrefixAware,
+    /// Rotate placements ignoring prompt content — the control arm the
+    /// `router-fleet-skew-rr` bench cell compares hit rates against.
+    RoundRobin,
+}
+
+impl PlacementPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "prefix" | "prefix-aware" => Some(Self::PrefixAware),
+            "rr" | "round-robin" => Some(Self::RoundRobin),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::PrefixAware => "prefix-aware",
+            Self::RoundRobin => "round-robin",
+        }
+    }
+}
+
+/// Router tier configuration. The scheduler config is shared by every
+/// replica (homogeneous fleet; heterogeneous fleets would carry it per
+/// replica).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Fleet size (clamped to ≥ 1).
+    pub replicas: usize,
+    pub placement: PlacementPolicy,
+    /// Token stride of the placement index: prompts record/look up
+    /// chain hashes at multiples of this many tokens (plus the full
+    /// prompt), so two prompts sharing at least `prefix_stride` tokens
+    /// can colocate.
+    pub prefix_stride: usize,
+    /// Refresh replica health every this many placements (0 = before
+    /// every placement). The cadence is placement-driven, not timer-
+    /// driven, so tests and benches are deterministic.
+    pub probe_every: usize,
+    /// How long a probe may take before the replica is declared dead.
+    pub probe_timeout: Duration,
+    /// A preferred replica is saturated — and the placement spills —
+    /// once its client-tracked in-flight sessions reach
+    /// `lanes + spill_headroom`.
+    pub spill_headroom: usize,
+    /// Degrade when `queued + spilled` exceeds `lanes × this factor`.
+    pub queue_watermark: f64,
+    /// Degrade when paged block utilization exceeds this fraction.
+    pub util_watermark: f64,
+    /// Per-replica scheduler configuration.
+    pub scheduler: SchedulerConfig,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 1,
+            placement: PlacementPolicy::PrefixAware,
+            prefix_stride: 4,
+            probe_every: 8,
+            probe_timeout: Duration::from_secs(10),
+            spill_headroom: 2,
+            queue_watermark: 1.0,
+            util_watermark: 0.9,
+            scheduler: SchedulerConfig::default(),
+        }
+    }
+}
+
+/// Cooperative fault injector: a shared flag that, once tripped, makes
+/// every subsequent call into the replica's backend fail. The scheduler
+/// converts those failures into typed per-session
+/// [`ServeError::EngineFailure`] events — exactly the blast radius a
+/// real accelerator loss has: that replica's sessions, nothing else.
+#[derive(Clone, Debug, Default)]
+pub struct KillSwitch(Arc<AtomicBool>);
+
+impl KillSwitch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Trip the switch. Irreversible by design (a killed replica is
+    /// replaced, not resurrected).
+    pub fn kill(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_killed(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Backend shim checking the replica's [`KillSwitch`] on every compute
+/// entry point. Wrapped around every replica backend at spawn; one
+/// relaxed atomic load per call when healthy.
+struct KillableBackend {
+    inner: Box<dyn DecodeBackend>,
+    switch: KillSwitch,
+}
+
+impl KillableBackend {
+    fn check(&self) -> Result<()> {
+        ensure!(!self.switch.is_killed(), "replica killed (fault injection)");
+        Ok(())
+    }
+}
+
+impl DecodeBackend for KillableBackend {
+    fn lanes(&self) -> usize {
+        self.inner.lanes()
+    }
+    fn max_seq(&self) -> usize {
+        self.inner.max_seq()
+    }
+    fn max_prompt(&self) -> usize {
+        self.inner.max_prompt()
+    }
+    fn prefill(&mut self, lane: usize, prompt: &[usize]) -> Result<Vec<f32>> {
+        self.check()?;
+        self.inner.prefill(lane, prompt)
+    }
+    fn prefill_chunk(
+        &mut self,
+        lane: usize,
+        prompt: &[usize],
+        done: usize,
+        budget: usize,
+    ) -> Result<(usize, Option<Vec<f32>>)> {
+        self.check()?;
+        self.inner.prefill_chunk(lane, prompt, done, budget)
+    }
+    fn step(&mut self, inputs: &[StepInput<'_>]) -> Result<Vec<StepResult>> {
+        self.check()?;
+        self.inner.step(inputs)
+    }
+    fn supports_speculation(&self) -> bool {
+        self.inner.supports_speculation()
+    }
+    fn verify(&mut self, lane: usize, tokens: &[usize]) -> Result<Vec<StepResult>> {
+        self.check()?;
+        self.inner.verify(lane, tokens)
+    }
+    fn rollback(&mut self, lane: usize, len: usize) -> Result<()> {
+        self.inner.rollback(lane, len)
+    }
+    fn release(&mut self, lane: usize) {
+        self.inner.release(lane)
+    }
+    fn admit_check(&self, prompt_len: usize, max_new: usize) -> AdmitVerdict {
+        if self.switch.is_killed() {
+            // Don't queue work a dead engine can never run; the
+            // scheduler surfaces this as a typed rejection.
+            return AdmitVerdict::Reject("replica killed (fault injection)".into());
+        }
+        self.inner.admit_check(prompt_len, max_new)
+    }
+    fn kv_stats(&self) -> Option<crate::runtime::kvpool::KvPoolStats> {
+        self.inner.kv_stats()
+    }
+    fn spill(&mut self, lane: usize) -> Option<u64> {
+        self.inner.spill(lane)
+    }
+    fn resume(&mut self, lane: usize, ticket: u64) -> Result<bool> {
+        self.check()?;
+        self.inner.resume(lane, ticket)
+    }
+    fn drop_spilled(&mut self, ticket: u64) {
+        self.inner.drop_spilled(ticket)
+    }
+    fn spill_stats(&self) -> Option<crate::runtime::kvlife::SpillArenaStats> {
+        self.inner.spill_stats()
+    }
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+/// One fleet member: a wrapped [`Server`] plus the router-side state
+/// needed to place on (or avoid) it.
+struct Replica {
+    id: usize,
+    server: Server,
+    kill: KillSwitch,
+    state: ReplicaState,
+    /// Client-tracked in-flight sessions: incremented at placement,
+    /// decremented when the stream reaches its terminal event. Shared
+    /// with every [`RouterStreamHandle`] placed here.
+    inflight: Arc<AtomicUsize>,
+    /// Lane ceiling from the last probe (0 until first probed).
+    lanes: usize,
+}
+
+impl Replica {
+    fn load(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+}
+
+/// The router: owns the fleet, the placement index, and the counters.
+pub struct Router {
+    cfg: RouterConfig,
+    replicas: Vec<Replica>,
+    /// Prefix-chain hash → replica that last served a prompt with that
+    /// prefix. Latest placement wins (tracking where the blocks are
+    /// most recently warm, like the pool's own idle-reuse ordering).
+    place: HashMap<u64, usize>,
+    placements: usize,
+    prefix_routed: usize,
+    spilled_placements: usize,
+    unplaceable: usize,
+    rr_next: usize,
+}
+
+impl Router {
+    /// Spawn `cfg.replicas` workers. `factory(id)` returns the backend
+    /// builder for replica `id`; the builder runs in that replica's
+    /// worker thread (same contract as [`Server::spawn`]) and its
+    /// backend is wrapped in the replica's kill shim. An initial probe
+    /// sweep learns each replica's lane ceiling and health.
+    pub fn spawn<F, G>(cfg: RouterConfig, factory: F) -> Self
+    where
+        F: Fn(usize) -> G,
+        G: FnOnce() -> Result<Box<dyn DecodeBackend>> + Send + 'static,
+    {
+        let n = cfg.replicas.max(1);
+        let mut replicas = Vec::with_capacity(n);
+        for id in 0..n {
+            let kill = KillSwitch::new();
+            let switch = kill.clone();
+            let build = factory(id);
+            let server = Server::spawn(
+                move || {
+                    build().map(|inner| {
+                        Box::new(KillableBackend { inner, switch }) as Box<dyn DecodeBackend>
+                    })
+                },
+                cfg.scheduler.clone(),
+            );
+            replicas.push(Replica {
+                id,
+                server,
+                kill,
+                state: ReplicaState::Healthy,
+                inflight: Arc::new(AtomicUsize::new(0)),
+                lanes: 0,
+            });
+        }
+        let mut router = Self {
+            cfg,
+            replicas,
+            place: HashMap::new(),
+            placements: 0,
+            prefix_routed: 0,
+            spilled_placements: 0,
+            unplaceable: 0,
+            rr_next: 0,
+        };
+        router.probe_all();
+        router
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Current health of every replica, by id.
+    pub fn states(&self) -> Vec<ReplicaState> {
+        self.replicas.iter().map(|r| r.state).collect()
+    }
+
+    /// Client-tracked in-flight sessions on replica `id` (tests and
+    /// load displays).
+    pub fn inflight(&self, id: usize) -> usize {
+        self.replicas[id].load()
+    }
+
+    /// Probe every non-sticky replica and refresh its health: over a
+    /// queue or block-utilization watermark → `Degraded`; recovered →
+    /// `Healthy`; unanswered → `Dead`. `Draining`/`Dead` are sticky.
+    pub fn probe_all(&mut self) {
+        for i in 0..self.replicas.len() {
+            if !self.replicas[i].state.placeable() {
+                continue;
+            }
+            match self.replicas[i].server.probe(self.cfg.probe_timeout) {
+                Some(p) => {
+                    let r = &mut self.replicas[i];
+                    r.lanes = p.lanes;
+                    let pressured = (p.queued + p.spilled) as f64
+                        > p.lanes as f64 * self.cfg.queue_watermark
+                        || p.block_util > self.cfg.util_watermark;
+                    r.state =
+                        if pressured { ReplicaState::Degraded } else { ReplicaState::Healthy };
+                }
+                None => self.replicas[i].state = ReplicaState::Dead,
+            }
+        }
+    }
+
+    /// Stop new placements to replica `id`; its active sessions run to
+    /// completion (drain = the rolling-restart primitive). Idempotent;
+    /// a dead replica stays dead.
+    pub fn drain(&mut self, id: usize) -> Result<()> {
+        ensure!(id < self.replicas.len(), "replica {id} out of range");
+        let r = &mut self.replicas[id];
+        if r.state != ReplicaState::Dead {
+            r.state = ReplicaState::Draining;
+        }
+        Ok(())
+    }
+
+    /// Trip replica `id`'s kill switch and mark it `Dead`: in-flight
+    /// sessions there fail with typed engine errors; the rest of the
+    /// fleet keeps serving.
+    pub fn kill(&mut self, id: usize) -> Result<()> {
+        ensure!(id < self.replicas.len(), "replica {id} out of range");
+        self.replicas[id].kill.kill();
+        self.replicas[id].state = ReplicaState::Dead;
+        Ok(())
+    }
+
+    /// Preferred replica saturated: in-flight at lanes + headroom.
+    fn saturated(&self, id: usize) -> bool {
+        let r = &self.replicas[id];
+        r.load() >= r.lanes.max(1) + self.cfg.spill_headroom
+    }
+
+    fn least_loaded(&self, state: ReplicaState) -> Option<usize> {
+        self.replicas
+            .iter()
+            .filter(|r| r.state == state)
+            .min_by_key(|r| (r.load(), r.id))
+            .map(|r| r.id)
+    }
+
+    /// Placement decision: the preferred replica if it is `Healthy` and
+    /// unsaturated, else spill to the least-loaded `Healthy` replica,
+    /// else least-loaded `Degraded`. `Draining`/`Dead` are never
+    /// targets. `None` means nothing can take the request.
+    fn choose(&self, preferred: Option<usize>) -> Option<usize> {
+        if let Some(i) = preferred {
+            if self.replicas[i].state == ReplicaState::Healthy && !self.saturated(i) {
+                return Some(i);
+            }
+        }
+        self.least_loaded(ReplicaState::Healthy)
+            .or_else(|| self.least_loaded(ReplicaState::Degraded))
+    }
+
+    /// Route and submit one request. Always returns a handle: if no
+    /// replica can take the request (all draining or dead), the handle
+    /// yields exactly one typed [`ServeError::EngineFailure`] — the
+    /// same stream protocol as a placed request.
+    pub fn submit(&mut self, req: GenRequest) -> Result<RouterStreamHandle> {
+        if self.cfg.probe_every == 0 || self.placements % self.cfg.probe_every.max(1) == 0 {
+            self.probe_all();
+        }
+        let points = prefix_chain_points(&req.prompt, self.cfg.prefix_stride);
+        let preferred = match self.cfg.placement {
+            PlacementPolicy::PrefixAware => {
+                points.iter().rev().find_map(|h| self.place.get(h).copied())
+            }
+            PlacementPolicy::RoundRobin => {
+                let i = self.rr_next % self.replicas.len();
+                self.rr_next += 1;
+                Some(i)
+            }
+        };
+        let Some(idx) = self.choose(preferred) else {
+            self.unplaceable += 1;
+            return Ok(RouterStreamHandle::failed(
+                req.id,
+                ServeError::engine("router: no placeable replica (all draining or dead)"),
+            ));
+        };
+        self.placements += 1;
+        match (self.cfg.placement, preferred) {
+            (PlacementPolicy::PrefixAware, Some(p)) if p == idx => self.prefix_routed += 1,
+            // Diverted off a preferred replica by load or health.
+            (_, Some(p)) if p != idx => self.spilled_placements += 1,
+            // Fresh placement (no known prefix) or round-robin landing
+            // on its rotation target: neither routed nor spilled.
+            _ => {}
+        }
+        for h in &points {
+            self.place.insert(*h, idx);
+        }
+        let rid = req.id;
+        let rep = &self.replicas[idx];
+        rep.inflight.fetch_add(1, Ordering::AcqRel);
+        match rep.server.submit(req) {
+            Ok(inner) => Ok(RouterStreamHandle {
+                inner,
+                replica: Some(idx),
+                inflight: Some(Arc::clone(&rep.inflight)),
+                done: Cell::new(false),
+            }),
+            Err(_) => {
+                // Worker thread gone (panicked): undo the placement,
+                // mark it dead, and fail the stream typed.
+                rep.inflight.fetch_sub(1, Ordering::AcqRel);
+                self.replicas[idx].state = ReplicaState::Dead;
+                Ok(RouterStreamHandle::failed(
+                    rid,
+                    ServeError::engine(format!("router: replica {idx} worker gone")),
+                ))
+            }
+        }
+    }
+
+    /// Drain the fleet, stop every worker, and aggregate per-replica
+    /// metrics into [`RouterMetrics`] (fleet percentiles finalized).
+    pub fn shutdown(self) -> Result<RouterMetrics> {
+        let replica_states: Vec<ReplicaState> = self.replicas.iter().map(|r| r.state).collect();
+        let mut per_replica = Vec::with_capacity(self.replicas.len());
+        for r in self.replicas {
+            match r.server.shutdown() {
+                Ok(m) => per_replica.push(m),
+                Err(_) => {
+                    // Worker unreachable (panicked mid-run): its
+                    // metrics are lost, but the fleet rollup survives.
+                    let mut m = ServeMetrics::default();
+                    m.finalize();
+                    per_replica.push(m);
+                }
+            }
+        }
+        let mut fleet = ServeMetrics::default();
+        for m in &per_replica {
+            fleet.merge(m);
+        }
+        fleet.finalize();
+        Ok(RouterMetrics {
+            fleet,
+            per_replica,
+            replica_states,
+            placements: self.placements,
+            prefix_routed: self.prefix_routed,
+            spilled: self.spilled_placements,
+            unplaceable: self.unplaceable,
+        })
+    }
+}
+
+/// Client handle to one routed stream: wraps the replica-local
+/// [`StreamHandle`] and keeps the router's in-flight accounting honest
+/// by decrementing the placement's load counter exactly once, at the
+/// stream's terminal event.
+pub struct RouterStreamHandle {
+    inner: StreamHandle,
+    /// Which replica the request landed on (`None` when it was never
+    /// placed — the pre-failed stream case).
+    replica: Option<usize>,
+    inflight: Option<Arc<AtomicUsize>>,
+    done: Cell<bool>,
+}
+
+impl RouterStreamHandle {
+    fn failed(id: u64, err: ServeError) -> Self {
+        Self {
+            inner: StreamHandle::failed(id, err),
+            replica: None,
+            inflight: None,
+            done: Cell::new(false),
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.inner.id
+    }
+
+    /// The replica this request was placed on, if any.
+    pub fn replica(&self) -> Option<usize> {
+        self.replica
+    }
+
+    fn settle(&self) {
+        if !self.done.replace(true) {
+            if let Some(load) = &self.inflight {
+                load.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+    }
+
+    /// Block for the next event (see [`StreamHandle::next`]).
+    pub fn next(&self) -> Result<Event, ServeError> {
+        let r = self.inner.next();
+        if matches!(&r, Ok(Event::Done(_)) | Ok(Event::Error(_)) | Err(_)) {
+            self.settle();
+        }
+        r
+    }
+
+    /// Like [`RouterStreamHandle::next`] with a per-event timeout. A
+    /// poll timeout (`Err(Timeout)` from the *wait*, not a delivered
+    /// deadline event) is transient and does not settle the load
+    /// accounting.
+    pub fn next_timeout(&self, timeout: Duration) -> Result<Event, ServeError> {
+        let r = self.inner.next_timeout(timeout);
+        match &r {
+            Ok(Event::Done(_)) | Ok(Event::Error(_)) => self.settle(),
+            Err(ServeError::Timeout) => {}
+            Err(_) => self.settle(),
+            _ => {}
+        }
+        r
+    }
+
+    /// Non-blocking poll.
+    pub fn try_next(&self) -> Option<Event> {
+        let ev = self.inner.try_next();
+        if matches!(&ev, Some(Event::Done(_)) | Some(Event::Error(_))) {
+            self.settle();
+        }
+        ev
+    }
+
+    /// Cancel the routed request (no-op for never-placed streams).
+    pub fn cancel(&self) {
+        self.inner.cancel();
+    }
+
+    /// Drain to the terminal event.
+    pub fn collect(&self) -> Result<GenStats, ServeError> {
+        let r = self.inner.collect();
+        self.settle();
+        r
+    }
+
+    /// Drain with a per-event timeout.
+    pub fn collect_timeout(&self, per_event: Duration) -> Result<GenStats, ServeError> {
+        let r = self.inner.collect_timeout(per_event);
+        self.settle();
+        r
+    }
+}
+
+/// Fleet-level rollup returned by [`Router::shutdown`].
+pub struct RouterMetrics {
+    /// Merged fleet metrics (finalized): TTFT/ITL/latency percentiles
+    /// over the union of per-replica samples, counters summed.
+    pub fleet: ServeMetrics,
+    /// Per-replica metrics, by replica id.
+    pub per_replica: Vec<ServeMetrics>,
+    /// Final health of each replica, by id.
+    pub replica_states: Vec<ReplicaState>,
+    /// Requests placed on some replica.
+    pub placements: usize,
+    /// Placements that followed the prefix index to their preferred
+    /// replica (prefix-aware policy only).
+    pub prefix_routed: usize,
+    /// Placements diverted off their preferred replica by load or
+    /// health.
+    pub spilled: usize,
+    /// Requests no replica could take (failed typed, never placed).
+    pub unplaceable: usize,
+}
+
+impl RouterMetrics {
+    /// Global prefix-hit rate: Σ hit tokens / Σ query tokens across
+    /// every replica's pool — the fleet analogue of the per-pool
+    /// `prefix_hit_rate`, and the number prefix-aware placement exists
+    /// to defend.
+    pub fn global_prefix_hit_rate(&self) -> f64 {
+        self.fleet.prefix_hit_rate()
+    }
+
+    /// Replicas that ended the run not `Dead`.
+    pub fn live_replicas(&self) -> usize {
+        self.replica_states.iter().filter(|s| **s != ReplicaState::Dead).count()
+    }
+
+    /// Session errors on replicas that ended the run `Dead` (the killed
+    /// replica's expected blast radius).
+    pub fn dead_replica_errors(&self) -> usize {
+        self.errors_where(|s| s == ReplicaState::Dead)
+    }
+
+    /// Session errors on replicas still live at shutdown — must be zero
+    /// for fault isolation to hold (gated in the replica-kill bench
+    /// cell).
+    pub fn live_replica_errors(&self) -> usize {
+        self.errors_where(|s| s != ReplicaState::Dead)
+    }
+
+    fn errors_where(&self, pred: impl Fn(ReplicaState) -> bool) -> usize {
+        self.per_replica
+            .iter()
+            .zip(&self.replica_states)
+            .filter(|(_, s)| pred(**s))
+            .map(|(m, _)| m.errors)
+            .sum()
+    }
+
+    /// Machine-consumable snapshot: the fleet [`ServeMetrics::snapshot`]
+    /// plus the router-level names `bench-serve` writes and `bench-diff`
+    /// gates (`global_prefix_hit_rate`; the `router_*` counters stay
+    /// informational except live-replica errors).
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let mut out: Vec<(String, f64)> =
+            self.fleet.snapshot().into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        out.push(("global_prefix_hit_rate".into(), self.global_prefix_hit_rate()));
+        out.push(("router_placements".into(), self.placements as f64));
+        out.push(("router_prefix_routed".into(), self.prefix_routed as f64));
+        out.push(("router_spilled".into(), self.spilled as f64));
+        out.push(("router_unplaceable".into(), self.unplaceable as f64));
+        out.push(("router_live_replica_errors".into(), self.live_replica_errors() as f64));
+        out.push(("replicas_live".into(), self.live_replicas() as f64));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{GenerationMode, NativeBackend};
+    use crate::linalg::Rng;
+    use crate::model::config::ModelConfig;
+    use crate::model::transformer::Transformer;
+
+    const EVENT_TIMEOUT: Duration = Duration::from_secs(30);
+
+    fn micro_model(seed: u64) -> Transformer {
+        let cfg = ModelConfig {
+            name: "micro".into(),
+            vocab: 32,
+            dim: 16,
+            n_layers: 2,
+            n_heads: 2,
+            ffn_hidden: 24,
+            max_seq: 32,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut rng = Rng::new(seed);
+        Transformer::new_random(&cfg, &mut rng)
+    }
+
+    fn micro_router(replicas: usize, cfg: RouterConfig) -> Router {
+        let model = micro_model(4242);
+        Router::spawn(RouterConfig { replicas, ..cfg }, move |_id| {
+            let m = model.clone();
+            move || {
+                Ok(Box::new(NativeBackend::new(m, GenerationMode::KvCache, 2))
+                    as Box<dyn DecodeBackend>)
+            }
+        })
+    }
+
+    fn prompt_with_prefix(prefix: &[usize], suffix_seed: usize) -> Vec<usize> {
+        let mut p = prefix.to_vec();
+        p.extend([1 + suffix_seed % 7, 3 + suffix_seed % 5]);
+        p
+    }
+
+    /// Same-prefix requests colocate on one replica; a different prefix
+    /// group lands independently. The placement index records strides,
+    /// so the second wave finds the first wave's replica.
+    #[test]
+    fn same_prefix_requests_colocate() {
+        let mut router = micro_router(3, RouterConfig::default());
+        let prefix_a: Vec<usize> = vec![7, 3, 9, 1, 4, 8];
+        let prefix_b: Vec<usize> = vec![2, 6, 5, 11, 10, 12];
+        let mut homes = [None, None];
+        let mut handles = Vec::new();
+        for i in 0..8u64 {
+            let (g, prefix) = if i % 2 == 0 { (0, &prefix_a) } else { (1, &prefix_b) };
+            let h = router
+                .submit(GenRequest::new(i, prompt_with_prefix(prefix, i as usize), 2))
+                .unwrap();
+            let placed = h.replica().expect("healthy fleet must place");
+            match homes[g] {
+                None => homes[g] = Some(placed),
+                Some(home) => {
+                    assert_eq!(placed, home, "group {g} request {i} strayed from its home")
+                }
+            }
+            handles.push(h);
+        }
+        for h in &handles {
+            h.collect_timeout(EVENT_TIMEOUT).unwrap();
+        }
+        let m = router.shutdown().unwrap();
+        assert_eq!(m.placements, 8);
+        assert!(m.prefix_routed >= 6, "each group's follow-ups must be prefix-routed");
+        assert_eq!(m.unplaceable, 0);
+    }
+
+    /// Round-robin ignores prompt content and rotates the fleet.
+    #[test]
+    fn round_robin_rotates() {
+        let cfg = RouterConfig {
+            placement: PlacementPolicy::RoundRobin,
+            ..RouterConfig::default()
+        };
+        let mut router = micro_router(3, cfg);
+        let prompt: Vec<usize> = vec![5, 5, 5, 5, 5];
+        let mut seen = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            let h = router.submit(GenRequest::new(i, prompt.clone(), 2)).unwrap();
+            seen.push(h.replica().unwrap());
+            handles.push(h);
+        }
+        assert_eq!(&seen[..3], &[0, 1, 2], "rr must rotate in id order on an even fleet");
+        assert_eq!(&seen[3..], &[0, 1, 2]);
+        for h in &handles {
+            h.collect_timeout(EVENT_TIMEOUT).unwrap();
+        }
+        router.shutdown().unwrap();
+    }
+
+    /// Draining and dead replicas never receive placements; with every
+    /// replica unavailable the stream pre-fails typed.
+    #[test]
+    fn drain_and_kill_exclude_replicas_from_placement() {
+        let mut router = micro_router(3, RouterConfig::default());
+        router.drain(1).unwrap();
+        router.kill(2).unwrap();
+        assert_eq!(
+            router.states(),
+            vec![ReplicaState::Healthy, ReplicaState::Draining, ReplicaState::Dead]
+        );
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            let h = router.submit(GenRequest::new(i, vec![3 + i as usize, 2, 9], 2)).unwrap();
+            assert_eq!(h.replica(), Some(0), "only replica 0 is placeable");
+            handles.push(h);
+        }
+        for h in &handles {
+            h.collect_timeout(EVENT_TIMEOUT).unwrap();
+        }
+        // Nothing left: drain the last replica too.
+        router.drain(0).unwrap();
+        let h = router.submit(GenRequest::new(99, vec![1, 2, 3], 2)).unwrap();
+        assert_eq!(h.replica(), None);
+        match h.collect_timeout(EVENT_TIMEOUT) {
+            Err(ServeError::EngineFailure(f)) => {
+                assert!(f.contains("no placeable replica"), "{}", f.msg)
+            }
+            other => panic!("expected typed unplaceable failure, got {other:?}"),
+        }
+        let m = router.shutdown().unwrap();
+        assert_eq!(m.unplaceable, 1);
+        assert_eq!(m.per_replica[1].requests, 0, "draining replica took no placements");
+        assert_eq!(m.per_replica[2].requests, 0, "dead replica took no placements");
+        assert_eq!(m.fleet.completed, 6);
+        assert_eq!(m.live_replicas(), 2);
+    }
+
+    /// In-flight accounting settles exactly once per stream, through
+    /// either collect or the event-by-event path.
+    #[test]
+    fn inflight_settles_exactly_once() {
+        let mut router = micro_router(1, RouterConfig::default());
+        let h = router.submit(GenRequest::new(1, vec![4, 9, 2], 2)).unwrap();
+        assert_eq!(router.inflight(0), 1);
+        h.collect_timeout(EVENT_TIMEOUT).unwrap();
+        assert_eq!(router.inflight(0), 0);
+        // Settling again must not underflow.
+        h.settle();
+        assert_eq!(router.inflight(0), 0);
+        let h2 = router.submit(GenRequest::new(2, vec![4, 9, 2], 2)).unwrap();
+        loop {
+            match h2.next_timeout(EVENT_TIMEOUT).unwrap() {
+                Event::Done(_) | Event::Error(_) => break,
+                Event::Token { .. } => {}
+            }
+        }
+        assert_eq!(router.inflight(0), 0, "event-by-event path must settle too");
+        router.shutdown().unwrap();
+    }
+
+    /// Killing a replica mid-fleet fails only that replica's sessions,
+    /// with typed errors; the fleet keeps completing work elsewhere.
+    #[test]
+    fn kill_faults_only_the_killed_replica() {
+        let cfg = RouterConfig {
+            // Probe refresh off the placement path: states only change
+            // when the test says so.
+            probe_every: 1_000_000,
+            ..RouterConfig::default()
+        };
+        let mut router = micro_router(2, cfg);
+        // Two prefix groups, one per replica (by construction order).
+        let pa: Vec<usize> = vec![1, 2, 3, 4, 5, 6];
+        let pb: Vec<usize> = vec![9, 8, 7, 6, 5, 4];
+        let ha = router.submit(GenRequest::new(1, pa.clone(), 24)).unwrap();
+        let hb = router.submit(GenRequest::new(2, pb.clone(), 24)).unwrap();
+        let (ra, rb) = (ha.replica().unwrap(), hb.replica().unwrap());
+        assert_ne!(ra, rb, "fresh groups spread over the idle fleet");
+        // Let both sessions start streaming before the kill.
+        for h in [&ha, &hb] {
+            match h.next_timeout(EVENT_TIMEOUT).unwrap() {
+                Event::Token { .. } => {}
+                other => panic!("expected first token, got {other:?}"),
+            }
+        }
+        router.kill(rb).unwrap();
+        // The killed replica's session fails typed; the other finishes.
+        match hb.collect_timeout(EVENT_TIMEOUT) {
+            Err(ServeError::EngineFailure(_)) => {}
+            other => panic!("killed replica session must fail typed, got {other:?}"),
+        }
+        ha.collect_timeout(EVENT_TIMEOUT).unwrap();
+        let m = router.shutdown().unwrap();
+        assert_eq!(m.per_replica[ra].errors, 0, "live replica saw no errors");
+        assert_eq!(m.per_replica[rb].errors, 1, "killed replica failed its session");
+        assert_eq!(m.live_replica_errors(), 0);
+        assert_eq!(m.dead_replica_errors(), 1);
+        assert_eq!(m.fleet.completed, 1);
+        assert_eq!(m.live_replicas(), 1);
+    }
+
+    /// The snapshot carries the gated fleet names plus the router tier's
+    /// own counters, and prefix-aware placement actually produces pool
+    /// hits: identical prompts colocate, so later sessions reuse the
+    /// first session's full blocks.
+    #[test]
+    fn router_metrics_snapshot_names() {
+        let mut router = micro_router(2, RouterConfig::default());
+        // One full 16-token block plus a partial tail: colocated repeats
+        // must hit the shared block.
+        let shared: Vec<usize> = (0..18).map(|t| 1 + t % 13).collect();
+        let mut handles = Vec::new();
+        for i in 0..4u64 {
+            handles.push(router.submit(GenRequest::new(i, shared.clone(), 2)).unwrap());
+        }
+        for h in &handles {
+            h.collect_timeout(EVENT_TIMEOUT).unwrap();
+        }
+        let m = router.shutdown().unwrap();
+        let snap = m.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(k, _)| k.as_str()).collect();
+        for required in [
+            "global_prefix_hit_rate",
+            "router_placements",
+            "router_prefix_routed",
+            "router_spilled",
+            "router_unplaceable",
+            "router_live_replica_errors",
+            "replicas_live",
+            "ttft_p50_ms",
+        ] {
+            assert!(names.contains(&required), "snapshot lost {required}");
+        }
+        let get = |k: &str| snap.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap();
+        assert_eq!(get("router_placements"), 4.0);
+        assert_eq!(get("replicas_live"), 2.0);
+        assert_eq!(get("router_live_replica_errors"), 0.0);
+        let hit = get("global_prefix_hit_rate");
+        assert!((0.0..=1.0).contains(&hit), "hit rate must be a ratio, got {hit}");
+        assert!(hit > 0.0, "colocated identical prompts must hit the prefix cache");
+    }
+}

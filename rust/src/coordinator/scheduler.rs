@@ -283,6 +283,17 @@ impl Scheduler {
         self.queue.len()
     }
 
+    /// Occupied lanes (sessions decoding or mid-prefill).
+    pub fn active_len(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Total lanes this scheduler runs (`max_batch`-capped backend
+    /// lanes — the concurrency ceiling load probes report against).
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
     /// Sessions preempted off their lanes, awaiting resume.
     pub fn spilled_len(&self) -> usize {
         self.spilled.len()

@@ -23,7 +23,27 @@ use std::time::Duration;
 enum Msg {
     Submit(GenRequest, mpsc::Sender<Event>),
     Cancel(u64),
+    Probe(mpsc::Sender<ProbeReply>),
     Shutdown(mpsc::Sender<ServeMetrics>),
+}
+
+/// Point-in-time worker-side load snapshot, answered by the scheduling
+/// loop between iterations (see [`Server::probe`]). The router tier
+/// (DESIGN.md §12) turns these into backpressure state; anything else
+/// can use them as a cheap health check.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ProbeReply {
+    /// Requests waiting in the admission queue.
+    pub queued: usize,
+    /// Occupied lanes (sessions decoding or mid-prefill).
+    pub active: usize,
+    /// Lanes the scheduler is running (its concurrency ceiling).
+    pub lanes: usize,
+    /// Sessions preempted into the spill arena, awaiting resume.
+    pub spilled: usize,
+    /// Paged-pool block utilization in [0, 1]; 0.0 for non-paged
+    /// backends (they have no block watermark to pressure).
+    pub block_util: f64,
 }
 
 /// Client-side handle to one in-flight generation stream.
@@ -83,6 +103,19 @@ impl StreamHandle {
                 Event::Error(e) => return Err(e),
             }
         }
+    }
+
+    /// A pre-failed stream: yields exactly one terminal [`Event::Error`]
+    /// and was never placed on a server. The router uses this when no
+    /// replica can accept a request, so clients see the same typed
+    /// stream protocol whether the failure happened before or after
+    /// placement. `cancel()` on such a handle is a no-op.
+    pub(crate) fn failed(id: u64, err: ServeError) -> Self {
+        let (etx, erx) = mpsc::channel();
+        let _ = etx.send(Event::Error(err));
+        // A control sender with no receiver: cancel sends fail silently.
+        let (ctl, _never_served) = mpsc::channel();
+        Self { id, rx: erx, ctl }
     }
 }
 
@@ -150,6 +183,10 @@ impl Server {
                                     events.send(Event::Error(ServeError::engine(msg.clone())));
                             }
                             Msg::Cancel(_) => {}
+                            // Dropping the reply sender makes the probe
+                            // time out — callers read that as "dead",
+                            // which a construction-failed worker is.
+                            Msg::Probe(_) => {}
                             Msg::Shutdown(reply) => {
                                 let mut metrics = ServeMetrics::default();
                                 metrics.finalize();
@@ -218,6 +255,18 @@ impl Server {
                             }
                         }
                         Msg::Cancel(id) => sched.cancel(id, &mut *backend, &mut metrics),
+                        Msg::Probe(reply) => {
+                            let _ = reply.send(ProbeReply {
+                                queued: sched.queue_len(),
+                                active: sched.active_len(),
+                                lanes: sched.lane_count(),
+                                spilled: sched.spilled_len(),
+                                block_util: backend
+                                    .kv_stats()
+                                    .map(|s| s.utilization())
+                                    .unwrap_or(0.0),
+                            });
+                        }
                         Msg::Shutdown(reply) => shutdown_reply = Some(reply),
                     }
                 }
@@ -266,6 +315,17 @@ impl Server {
     /// Cancel by request id (equivalent to [`StreamHandle::cancel`]).
     pub fn cancel(&self, id: u64) {
         let _ = self.tx.send(Msg::Cancel(id));
+    }
+
+    /// Ask the worker for a load snapshot, waiting at most `timeout`
+    /// for the reply. The worker answers between scheduling iterations,
+    /// so a healthy but busy server replies within one decode step.
+    /// `None` means the worker is gone, failed construction, or is too
+    /// wedged to answer — callers should treat the replica as dead.
+    pub fn probe(&self, timeout: Duration) -> Option<ProbeReply> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Probe(tx)).ok()?;
+        rx.recv_timeout(timeout).ok()
     }
 
     /// Drain in-flight work, stop the worker, and return finalized
@@ -695,6 +755,31 @@ mod tests {
         assert!(metrics.has_kv_pool(), "paged-KV stats missing from ServeMetrics");
         assert!(metrics.kv_peak_blocks > 0);
         assert!(metrics.block_util_percentile(1.0) > 0.0);
+    }
+
+    /// Probes answer between scheduling iterations with the worker's
+    /// live load snapshot; a construction-failed worker never answers
+    /// (the router's "dead" signal).
+    #[test]
+    fn probe_reports_load_and_failed_worker_is_silent() {
+        let (server, _model) = native_server(831, 2, SchedulerConfig::default());
+        let h = server.submit(GenRequest::new(1, vec![1, 2, 3], 3)).unwrap();
+        h.collect_timeout(EVENT_TIMEOUT).unwrap();
+        let p = server.probe(EVENT_TIMEOUT).expect("live worker must answer probes");
+        assert!(p.lanes >= 1, "scheduler must report its lane ceiling");
+        assert_eq!((p.queued, p.active, p.spilled), (0, 0, 0), "drained server is idle");
+        assert!((0.0..=1.0).contains(&p.block_util));
+        server.shutdown().unwrap();
+
+        let dead = Server::spawn(
+            || anyhow::bail!("no backend on this machine"),
+            SchedulerConfig::default(),
+        );
+        assert!(
+            dead.probe(Duration::from_millis(250)).is_none(),
+            "a failed factory must not answer probes"
+        );
+        dead.shutdown().unwrap();
     }
 
     /// Speculative serving end to end: an identical-checkpoint draft

@@ -18,6 +18,7 @@
 //!               [--kv-evict fifo|lru|freq] [--kv-spill] [--kv-compress]
 //!               [--kv-rank-frac F]
 //!               [--speculate METHOD] [--draft-k N]
+//!               [--replicas N] [--drain ID]
 //!               (+ the compress stage overrides; falls back to the
 //!               Rust-native backend when PJRT/artifacts are absent).
 //!               --max-batch 0 (default) uses the backend's lane cap —
@@ -45,6 +46,16 @@
 //!               iteration; the dense target verifies all k+1 positions
 //!               and the output stays bitwise-identical to plain greedy
 //!               decode. Acceptance counters print at shutdown.
+//!               Router tier (DESIGN.md §12, native backend only):
+//!               --replicas N serves through N identical replicas behind
+//!               the prefix-aware router — each request routes to the
+//!               replica most likely to hold its prompt's prefix blocks,
+//!               spilling to the least-loaded healthy replica under
+//!               saturation; --drain ID stops new placements to one
+//!               replica mid-run while its active sessions finish (the
+//!               rolling-restart primitive). Per-replica placements and
+//!               the fleet rollup (global prefix-hit rate included)
+//!               print at shutdown.
 //! pifa tables   <fig1|tab2|tab3|...|all>   (same generators as cargo bench)
 //! pifa bench-kernels [--smoke] [--out PATH]
 //!               — decode-path kernel microbench (dense vs low-rank vs
@@ -80,10 +91,11 @@ use pifa::compress::registry::{self, CompressionOutput};
 use pifa::compress::ReconTarget;
 use pifa::coordinator::{
     DecodeBackend, Event, GenRequest, GenerationMode, KvLifeConfig, NativeBackend, PjrtBackend,
-    SamplingParams, SchedulerConfig, Server,
+    Router, RouterConfig, SamplingParams, SchedulerConfig, Server,
 };
 use pifa::data::vocab::Vocab;
 use pifa::model::serialize::{load_checkpoint, load_checkpoint_full, save_checkpoint_with_spec};
+use pifa::model::transformer::Transformer;
 use pifa::pifa::PivotStrategy;
 use pifa::runtime::{DraftEngine, Engine, Manifest, ModelRunner, SpecConfig};
 use std::collections::HashMap;
@@ -333,6 +345,29 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         compress: flags.contains_key("kv-compress"),
         rank_frac,
     };
+    // Router tier knobs (DESIGN.md §12; native backend only).
+    let replicas: usize = flags
+        .get("replicas")
+        .map(String::as_str)
+        .unwrap_or("1")
+        .parse()
+        .context("--replicas must be a positive integer")?;
+    if replicas == 0 {
+        bail!("--replicas must be at least 1");
+    }
+    let drain: Option<usize> = match flags.get("drain") {
+        None => None,
+        Some(s) => {
+            let id: usize = s.parse().context("--drain must be a replica index")?;
+            if id >= replicas {
+                bail!("--drain {id} out of range for --replicas {replicas}");
+            }
+            Some(id)
+        }
+    };
+    if drain.is_some() && replicas < 2 {
+        bail!("--drain needs --replicas >= 2 (someone must keep serving)");
+    }
 
     // Backend selection: PJRT when the runtime + artifacts are usable,
     // otherwise the Rust-native backend (same scheduler, no artifacts).
@@ -405,6 +440,19 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         queue_cap,
         prefill_chunk,
     };
+    if replicas > 1 {
+        if !native {
+            bail!("--replicas needs the native backend (pass --native or drop the artifacts)");
+        }
+        if draft_model.is_some() {
+            println!("--speculate is single-server only; the fleet serves plain");
+        }
+        let native_lanes = if use_kv { kv_lanes } else { kv_lanes.max(max_batch) };
+        return serve_fleet(
+            served, mode, life, scfg, replicas, drain, native_lanes, n_requests, max_new,
+            temperature, top_k,
+        );
+    }
     let server = if native {
         let served = served.clone();
         // KV mode sizes the paged pool from --kv-lanes (the lane cap then
@@ -546,6 +594,102 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// `pifa serve --replicas N`: drive the same mixed traffic through the
+/// multi-replica router tier (DESIGN.md §12) and print the per-replica
+/// placements plus the fleet rollup. `--drain ID` drains one replica
+/// halfway through submissions — the rolling-restart demo.
+#[allow(clippy::too_many_arguments)]
+fn serve_fleet(
+    served: Transformer,
+    mode: GenerationMode,
+    life: KvLifeConfig,
+    scheduler: SchedulerConfig,
+    replicas: usize,
+    drain: Option<usize>,
+    lanes: usize,
+    n_requests: usize,
+    max_new: usize,
+    temperature: f32,
+    top_k: usize,
+) -> Result<()> {
+    let cfg = RouterConfig { replicas, scheduler, ..RouterConfig::default() };
+    let mut router = Router::spawn(cfg, move |_id| {
+        let m = served.clone();
+        move || {
+            Ok(Box::new(NativeBackend::new(m, mode, lanes).with_kvlife(life))
+                as Box<dyn DecodeBackend>)
+        }
+    });
+    let v = Vocab::new();
+    let sampling = SamplingParams { temperature, top_k, seed: 7, ..SamplingParams::default() };
+    let mut handles = Vec::new();
+    for i in 0..n_requests as u64 {
+        // A few recurring prompt families, so prefix-aware placement has
+        // prefixes to route by.
+        let mut prompt = vec![v.id("the"), v.noun((i as usize) % 4, 3, false), v.verb(2, false)];
+        if i % 2 == 0 {
+            prompt.push(v.id("the"));
+        }
+        let req = GenRequest::new(i, prompt, max_new.saturating_sub(i as usize % 2).max(1))
+            .with_sampling(sampling.clone());
+        let h = router.submit(req)?;
+        match h.replica() {
+            Some(r) => println!("req {i} -> replica {r}"),
+            None => println!("req {i} -> unplaceable (all replicas draining or dead)"),
+        }
+        handles.push(h);
+        if let Some(id) = drain {
+            if i + 1 == (n_requests as u64).div_ceil(2) {
+                router.drain(id)?;
+                println!("draining replica {id}: active sessions finish, no new placements");
+            }
+        }
+    }
+    for h in &handles {
+        match h.collect() {
+            Ok(stats) => println!(
+                "req {}: {} ({} tokens, {:.1} ms)",
+                stats.id,
+                v.decode(&stats.tokens),
+                stats.tokens.len(),
+                stats.latency.as_secs_f64() * 1e3
+            ),
+            Err(e) => println!("req {}: error: {e}", h.id()),
+        }
+    }
+    let rm = router.shutdown()?;
+    for (i, (m, s)) in rm.per_replica.iter().zip(&rm.replica_states).enumerate() {
+        println!(
+            "replica {i} [{}]: {} requests, {} completed, {} errors",
+            s.name(),
+            m.requests,
+            m.completed,
+            m.errors
+        );
+    }
+    println!(
+        "fleet: {}/{} completed | placements {} (prefix-routed {}, spilled {}, unplaceable {}) \
+         | global prefix hit rate {:.0}%",
+        rm.fleet.completed,
+        rm.fleet.requests,
+        rm.placements,
+        rm.prefix_routed,
+        rm.spilled,
+        rm.unplaceable,
+        rm.global_prefix_hit_rate() * 100.0,
+    );
+    println!(
+        "fleet latency: ttft p50 {:.1} ms p95 {:.1} ms | itl p50 {:.2} ms p95 {:.2} ms | \
+         throughput {:.1} tok/s",
+        rm.fleet.ttft_percentile_ms(0.5),
+        rm.fleet.ttft_percentile_ms(0.95),
+        rm.fleet.itl_percentile_ms(0.5),
+        rm.fleet.itl_percentile_ms(0.95),
+        rm.fleet.throughput(),
+    );
     Ok(())
 }
 

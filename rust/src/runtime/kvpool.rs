@@ -193,6 +193,33 @@ fn chain(h: u64, token: usize) -> u64 {
     splitmix64(h ^ (token as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93))
 }
 
+/// Chain hash of a whole token prefix, from the pool root. This is the
+/// exact hash the pool's sharing index is keyed by, exposed so
+/// fleet-level placement (the router tier, DESIGN.md §12) can address
+/// block content without touching a pool: equal prefixes hash equal on
+/// every replica.
+pub fn prefix_chain_hash(tokens: &[usize]) -> u64 {
+    tokens.iter().fold(ROOT_HASH, |h, &t| chain(h, t))
+}
+
+/// Chain hashes of `tokens` at every `stride`-token boundary plus the
+/// full length (shortest first, deduped by construction). The router
+/// records these at placement time and looks them up longest-first, so
+/// a new prompt lands on the replica holding its longest already-placed
+/// prefix. Empty prompts yield no points (nothing to colocate on).
+pub fn prefix_chain_points(tokens: &[usize], stride: usize) -> Vec<u64> {
+    let stride = stride.max(1);
+    let mut out = Vec::with_capacity(tokens.len() / stride + 1);
+    let mut h = ROOT_HASH;
+    for (i, &t) in tokens.iter().enumerate() {
+        h = chain(h, t);
+        if (i + 1) % stride == 0 || i + 1 == tokens.len() {
+            out.push(h);
+        }
+    }
+    out
+}
+
 #[derive(Clone, Debug, Default)]
 struct BlockMeta {
     refs: usize,
@@ -736,6 +763,31 @@ mod tests {
             }
         }
         seq
+    }
+
+    /// The public chain-hash helpers agree with each other and with the
+    /// pool's own prefix index: equal prefixes hash equal, divergence at
+    /// any position changes every later point.
+    #[test]
+    fn prefix_chain_helpers_are_consistent() {
+        let toks: Vec<usize> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3];
+        let points = prefix_chain_points(&toks, 4);
+        // Boundaries at 4, 8, and the full length 10.
+        assert_eq!(points.len(), 3);
+        assert_eq!(points[0], prefix_chain_hash(&toks[..4]));
+        assert_eq!(points[1], prefix_chain_hash(&toks[..8]));
+        assert_eq!(points[2], prefix_chain_hash(&toks));
+        // A short prompt still yields its full-length point.
+        assert_eq!(prefix_chain_points(&toks[..2], 4), vec![prefix_chain_hash(&toks[..2])]);
+        assert!(prefix_chain_points(&[], 4).is_empty());
+        // Divergence at position 1 changes every point.
+        let mut forked = toks.clone();
+        forked[1] ^= 1;
+        for (a, b) in points.iter().zip(prefix_chain_points(&forked, 4)) {
+            assert_ne!(*a, b, "diverged prefixes must not collide");
+        }
+        // Stride 0 is clamped to 1 (a point per token).
+        assert_eq!(prefix_chain_points(&toks, 0).len(), toks.len());
     }
 
     #[test]

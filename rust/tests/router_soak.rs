@@ -1,0 +1,533 @@
+//! Randomized router-tier soak suite (DESIGN.md §12).
+//!
+//! Seeded random fleets, prefix groups, drains, and kills drive the
+//! [`Router`] placement state machine against a scripted per-replica
+//! backend and assert the tier's contract:
+//!
+//! * **colocation** — while every replica is healthy and unsaturated,
+//!   sessions sharing a prompt prefix (≥ the placement stride) land on
+//!   one replica, so their KV blocks can actually be shared;
+//! * **spill hygiene** — under saturation the router diverts load, but
+//!   never onto a `Draining` or `Dead` replica; with nothing placeable
+//!   the stream pre-fails typed instead of hanging;
+//! * **drain = zero dropped waiters** — draining a replica with active
+//!   sessions stops new placements there while every already-placed
+//!   session still delivers consecutive tokens and exactly one terminal
+//!   event, and the fleet's in-flight accounting settles to zero;
+//! * **kill isolation** — killing a replica surfaces typed
+//!   [`ServeError::EngineFailure`] (or typed admission rejections) on
+//!   that replica's sessions only; every other replica's sessions
+//!   complete, so the fleet degrades instead of erroring.
+//!
+//! The fleet size rotates by seed; pin it with `PIFA_ROUTER_REPLICAS`
+//! (the CI router legs run 1 and 3). Failures print the seed: rerun one
+//! seed with `PIFA_ROUTER_SEED=<seed> cargo test --test router_soak`.
+
+use pifa::coordinator::{
+    DecodeBackend, Event, GenRequest, GenStats, ReplicaState, Router, RouterConfig,
+    RouterStreamHandle, SchedulerConfig, ServeError, StepInput, StepResult,
+};
+use pifa::linalg::Rng;
+use std::collections::{HashSet, VecDeque};
+use std::time::Duration;
+
+const VOCAB: usize = 8;
+const LANES: usize = 2;
+const MAX_SEQ: usize = 64;
+const EVENT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Deterministic scripted backend, one instance per replica; tracks
+/// lane claim/release balance like the scheduler soak's backend.
+struct FleetBackend {
+    claimed: HashSet<usize>,
+    /// Per-step pacing so drains and kills land while sessions are
+    /// still in flight (0 = instant).
+    step_delay_us: u64,
+}
+
+impl FleetBackend {
+    fn new(step_delay_us: u64) -> Self {
+        Self { claimed: HashSet::new(), step_delay_us }
+    }
+
+    fn next_token(seq: &[usize]) -> usize {
+        (seq.iter().sum::<usize>() + seq.len()) % VOCAB
+    }
+
+    fn logits_for(seq: &[usize]) -> Vec<f32> {
+        let mut row = vec![0f32; VOCAB];
+        row[Self::next_token(seq)] = 1.0;
+        row
+    }
+}
+
+impl DecodeBackend for FleetBackend {
+    fn lanes(&self) -> usize {
+        LANES
+    }
+
+    fn max_seq(&self) -> usize {
+        MAX_SEQ
+    }
+
+    fn prefill(&mut self, lane: usize, prompt: &[usize]) -> anyhow::Result<Vec<f32>> {
+        assert!(lane < LANES, "prefill on out-of-range lane {lane}");
+        assert!(
+            self.claimed.insert(lane),
+            "scheduler double-claimed lane {lane} without a release"
+        );
+        Ok(Self::logits_for(prompt))
+    }
+
+    fn step(&mut self, inputs: &[StepInput<'_>]) -> anyhow::Result<Vec<StepResult>> {
+        if self.step_delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.step_delay_us));
+        }
+        Ok(inputs
+            .iter()
+            .map(|inp| {
+                assert!(self.claimed.contains(&inp.lane), "step on unclaimed lane {}", inp.lane);
+                StepResult::Logits(Self::logits_for(inp.seq))
+            })
+            .collect())
+    }
+
+    fn release(&mut self, lane: usize) {
+        assert!(
+            self.claimed.remove(&lane),
+            "released lane {lane} that was not claimed (double release or leak)"
+        );
+    }
+
+    fn name(&self) -> &'static str {
+        "fleet-soak"
+    }
+}
+
+/// Fleet size for one run: `PIFA_ROUTER_REPLICAS` pins it (the CI
+/// router legs run 1 and 3); otherwise it rotates in `lo..=hi` by seed.
+fn fleet_size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    match std::env::var("PIFA_ROUTER_REPLICAS") {
+        Ok(s) => s.parse::<usize>().expect("PIFA_ROUTER_REPLICAS must be a usize").max(1),
+        Err(_) => lo + rng.below(hi - lo + 1),
+    }
+}
+
+fn spawn_fleet(replicas: usize, probe_every: usize, step_delay_us: u64) -> Router {
+    let cfg = RouterConfig {
+        replicas,
+        probe_every,
+        scheduler: SchedulerConfig {
+            max_batch: 0,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 64,
+            prefill_chunk: 0,
+        },
+        ..RouterConfig::default()
+    };
+    Router::spawn(cfg, move |_id| {
+        move || Ok(Box::new(FleetBackend::new(step_delay_us)) as Box<dyn DecodeBackend>)
+    })
+}
+
+/// Random group prefixes, each at least the default placement stride
+/// (4) long so every group shares a recorded chain point.
+fn group_prefixes(rng: &mut Rng, groups: usize) -> Vec<Vec<usize>> {
+    (0..groups)
+        .map(|_| {
+            let len = 4 + rng.below(5);
+            (0..len).map(|_| rng.below(VOCAB)).collect()
+        })
+        .collect()
+}
+
+fn prompt_from(rng: &mut Rng, prefix: &[usize]) -> Vec<usize> {
+    let mut p = prefix.to_vec();
+    for _ in 0..(1 + rng.below(3)) {
+        p.push(rng.below(VOCAB));
+    }
+    p
+}
+
+#[derive(Debug)]
+enum Terminal {
+    Done(GenStats),
+    /// Typed engine failure (killed replica, or never placed).
+    Engine(String),
+    /// Typed admission rejection (a killed replica refusing its queue).
+    Rejected,
+}
+
+/// Drain a stream via `collect_timeout`, mapping the typed terminals.
+fn finish(h: &RouterStreamHandle, seed: u64) -> Terminal {
+    match h.collect_timeout(EVENT_TIMEOUT) {
+        Ok(stats) => Terminal::Done(stats),
+        Err(ServeError::EngineFailure(f)) => Terminal::Engine(f.msg),
+        Err(ServeError::Overloaded { .. }) => Terminal::Rejected,
+        Err(other) => panic!("seed {seed}: stream {} unexpected terminal {other:?}", h.id()),
+    }
+}
+
+/// Drain a stream event by event, asserting consecutive token indices
+/// and exactly one terminal (`Done` stats agreeing with the stream).
+fn drain_events(h: &RouterStreamHandle, seed: u64) -> Terminal {
+    let mut next_idx = 0usize;
+    loop {
+        match h.next_timeout(EVENT_TIMEOUT) {
+            Ok(Event::Token { index, .. }) => {
+                assert_eq!(
+                    index,
+                    next_idx,
+                    "seed {seed}: stream {} token indices not consecutive",
+                    h.id()
+                );
+                next_idx += 1;
+            }
+            Ok(Event::Done(stats)) => {
+                assert_eq!(
+                    stats.tokens.len(),
+                    next_idx,
+                    "seed {seed}: stream {} Done stats disagree with streamed tokens",
+                    h.id()
+                );
+                return Terminal::Done(stats);
+            }
+            Ok(Event::Error(ServeError::EngineFailure(f))) => return Terminal::Engine(f.msg),
+            Ok(Event::Error(ServeError::Overloaded { .. })) => return Terminal::Rejected,
+            Ok(Event::Error(other)) => {
+                panic!("seed {seed}: stream {} unexpected error {other:?}", h.id())
+            }
+            Err(e) => panic!("seed {seed}: stream {} stalled or closed early ({e:?})", h.id()),
+        }
+    }
+}
+
+/// Seed-sweep harness: every property runs across a seed range (or the
+/// one seed `PIFA_ROUTER_SEED` pins) with a repro line on failure.
+fn sweep(name: &str, run: fn(u64)) {
+    let seeds: Vec<u64> = match std::env::var("PIFA_ROUTER_SEED") {
+        Ok(s) => vec![s.parse().expect("PIFA_ROUTER_SEED must be a u64")],
+        Err(_) => (0..16).collect(),
+    };
+    for seed in seeds {
+        if let Err(payload) = std::panic::catch_unwind(|| run(seed)) {
+            eprintln!(
+                "router_soak::{name} FAILED at seed {seed}; reproduce with \
+                 PIFA_ROUTER_SEED={seed} cargo test --test router_soak {name}"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// While the fleet is healthy and unsaturated (client-side throttle
+/// keeps at most 3 sessions outstanding, under the `lanes +
+/// spill_headroom = 4` saturation bar), every session of a prefix group
+/// lands on the group's home replica.
+fn run_colocation(seed: u64) {
+    let mut rng = Rng::new(seed ^ 0xC010_CA7E);
+    let n = fleet_size(&mut rng, 1, 3);
+    // Probes only at spawn: placement is then a pure function of the
+    // submission sequence, so the colocation property is deterministic.
+    let mut router = spawn_fleet(n, 1_000_000, 0);
+    let groups = 1 + rng.below(3);
+    let prefixes = group_prefixes(&mut rng, groups);
+    let mut homes: Vec<Option<usize>> = vec![None; groups];
+    let total = 12 + rng.below(13);
+    let mut pending: VecDeque<(RouterStreamHandle, usize)> = VecDeque::new();
+    for i in 0..total {
+        let g = rng.below(groups);
+        let prompt = prompt_from(&mut rng, &prefixes[g]);
+        let max_new = 1 + rng.below(4);
+        let h = router.submit(GenRequest::new(i as u64, prompt, max_new)).unwrap();
+        let placed = h.replica().unwrap_or_else(|| {
+            panic!("seed {seed}: healthy unsaturated fleet refused request {i}")
+        });
+        match homes[g] {
+            None => homes[g] = Some(placed),
+            Some(home) => assert_eq!(
+                placed, home,
+                "seed {seed}: group {g} request {i} strayed from its home replica"
+            ),
+        }
+        pending.push_back((h, max_new));
+        if pending.len() == 3 {
+            let (h, cap) = pending.pop_front().unwrap();
+            match finish(&h, seed) {
+                Terminal::Done(stats) => {
+                    assert!(stats.tokens.len() <= cap, "seed {seed}: overshot max_new")
+                }
+                other => panic!("seed {seed}: colocated stream failed: {other:?}"),
+            }
+        }
+    }
+    for (h, cap) in &pending {
+        match finish(h, seed) {
+            Terminal::Done(stats) => {
+                assert!(stats.tokens.len() <= *cap, "seed {seed}: overshot max_new")
+            }
+            other => panic!("seed {seed}: colocated stream failed: {other:?}"),
+        }
+    }
+    for i in 0..n {
+        assert_eq!(router.inflight(i), 0, "seed {seed}: in-flight accounting leaked");
+    }
+    let m = router.shutdown().unwrap();
+    assert_eq!(m.placements, total, "seed {seed}: placements mismatch");
+    assert_eq!(m.unplaceable, 0, "seed {seed}: unplaceable on a healthy fleet");
+    assert_eq!(m.fleet.completed, total, "seed {seed}: fleet completion mismatch");
+    // Only each group's first submission can miss the placement index.
+    assert!(
+        m.prefix_routed + groups >= total,
+        "seed {seed}: only {} of {total} placements were prefix-routed (groups {groups})",
+        m.prefix_routed
+    );
+}
+
+#[test]
+fn same_prefix_sessions_colocate() {
+    sweep("same_prefix_sessions_colocate", run_colocation);
+}
+
+/// A saturating burst (handles never settled, so client-tracked load
+/// only grows) forces load-aware spill — which must never target the
+/// drained or killed replica, while everything placeable still
+/// completes.
+fn run_spill_hygiene(seed: u64) {
+    let mut rng = Rng::new(seed ^ 0x5B11_1AD5);
+    let n = fleet_size(&mut rng, 2, 4);
+    // Probes only at spawn: drain/kill below are the only state edits.
+    let mut router = spawn_fleet(n, 1_000_000, 0);
+    let drained = rng.below(n);
+    let killed = (n >= 3).then(|| (drained + 1 + rng.below(n - 1)) % n);
+    router.drain(drained).unwrap();
+    if let Some(k) = killed {
+        router.kill(k).unwrap();
+    }
+    let placeable = n - 1 - usize::from(killed.is_some());
+    let groups = 1 + rng.below(3);
+    let prefixes = group_prefixes(&mut rng, groups);
+    let total = 24 + rng.below(17);
+    let mut handles = Vec::new();
+    for i in 0..total {
+        let g = rng.below(groups);
+        let prompt = prompt_from(&mut rng, &prefixes[g]);
+        let h = router.submit(GenRequest::new(i as u64, prompt, 2 + rng.below(4))).unwrap();
+        match h.replica() {
+            Some(r) => {
+                assert_ne!(r, drained, "seed {seed}: placement targeted the draining replica");
+                assert_ne!(Some(r), killed, "seed {seed}: placement targeted the dead replica");
+            }
+            None => {
+                assert_eq!(placeable, 0, "seed {seed}: router refused with placeable replicas")
+            }
+        }
+        handles.push(h);
+    }
+    let mut done = 0usize;
+    let mut unplaced = 0usize;
+    for h in &handles {
+        match finish(h, seed) {
+            Terminal::Done(_) => done += 1,
+            Terminal::Engine(msg) => {
+                assert!(
+                    msg.contains("no placeable replica"),
+                    "seed {seed}: unexpected engine failure: {msg}"
+                );
+                unplaced += 1;
+            }
+            Terminal::Rejected => {
+                panic!("seed {seed}: a live replica rejected within its queue bound")
+            }
+        }
+    }
+    for i in 0..n {
+        assert_eq!(router.inflight(i), 0, "seed {seed}: in-flight accounting leaked");
+    }
+    let m = router.shutdown().unwrap();
+    assert_eq!(done + unplaced, total, "seed {seed}: terminals do not cover submissions");
+    assert_eq!(m.unplaceable, unplaced, "seed {seed}: unplaceable count mismatch");
+    assert_eq!(m.fleet.completed, done, "seed {seed}: fleet completion mismatch");
+    assert_eq!(m.live_replica_errors(), 0, "seed {seed}: errors on live replicas");
+    assert_eq!(m.per_replica[drained].requests, 0, "seed {seed}: draining replica was placed on");
+    if let Some(k) = killed {
+        assert_eq!(m.per_replica[k].requests, 0, "seed {seed}: dead replica was placed on");
+    }
+    // With >= 2 placeable replicas, each can take at most `lanes +
+    // spill_headroom` (= 4) prefix-routed placements before saturating,
+    // plus one index-miss per group, so a 24+ burst must spill.
+    if placeable >= 2 {
+        assert!(m.spilled > 0, "seed {seed}: saturation never diverted off a preferred replica");
+    }
+}
+
+#[test]
+fn spill_never_targets_draining_or_dead() {
+    sweep("spill_never_targets_draining_or_dead", run_spill_hygiene);
+}
+
+/// Draining the busiest replica mid-run: no new placements land there,
+/// its active sessions run to completion (consecutive tokens, exactly
+/// one terminal each), and the fleet's accounting closes.
+fn run_drain_drops_no_waiters(seed: u64) {
+    let mut rng = Rng::new(seed ^ 0xD4A1_4A11);
+    let n = fleet_size(&mut rng, 2, 3);
+    // Paced decode so the drain lands while wave-1 is still in flight;
+    // probe_every 3 exercises live probe refreshes around the drain.
+    let mut router = spawn_fleet(n, 3, 500);
+    let groups = 1 + rng.below(2);
+    let prefixes = group_prefixes(&mut rng, groups);
+    let wave1 = 8 + rng.below(9);
+    let mut handles = Vec::new();
+    for i in 0..wave1 {
+        let g = rng.below(groups);
+        let prompt = prompt_from(&mut rng, &prefixes[g]);
+        let h = router.submit(GenRequest::new(i as u64, prompt, 6 + rng.below(7))).unwrap();
+        assert!(h.replica().is_some(), "seed {seed}: healthy fleet refused request {i}");
+        handles.push(h);
+    }
+    let target = (0..n).max_by_key(|&i| router.inflight(i)).unwrap();
+    assert!(router.inflight(target) > 0, "seed {seed}: nothing in flight before the drain");
+    router.drain(target).unwrap();
+    let wave2 = 6 + rng.below(7);
+    for j in 0..wave2 {
+        let g = rng.below(groups);
+        let prompt = prompt_from(&mut rng, &prefixes[g]);
+        let h = router.submit(GenRequest::new((wave1 + j) as u64, prompt, 4)).unwrap();
+        match h.replica() {
+            Some(r) => {
+                assert_ne!(r, target, "seed {seed}: post-drain placement hit the drained replica")
+            }
+            None => assert_eq!(n, 1, "seed {seed}: router refused with undrained replicas"),
+        }
+        handles.push(h);
+    }
+    let mut done = 0usize;
+    let mut unplaced = 0usize;
+    for h in &handles {
+        match drain_events(h, seed) {
+            Terminal::Done(_) => done += 1,
+            Terminal::Engine(msg) => {
+                assert!(
+                    msg.contains("no placeable replica"),
+                    "seed {seed}: unexpected engine failure: {msg}"
+                );
+                unplaced += 1;
+            }
+            Terminal::Rejected => panic!("seed {seed}: rejection while draining"),
+        }
+    }
+    for i in 0..n {
+        assert_eq!(router.inflight(i), 0, "seed {seed}: in-flight accounting leaked");
+    }
+    let target_sessions = handles.iter().filter(|h| h.replica() == Some(target)).count();
+    let m = router.shutdown().unwrap();
+    assert_eq!(m.replica_states[target], ReplicaState::Draining, "seed {seed}: drain not sticky");
+    assert_eq!(done + unplaced, handles.len(), "seed {seed}: a waiter was dropped");
+    assert_eq!(m.fleet.completed, done, "seed {seed}: fleet completion mismatch");
+    assert_eq!(m.unplaceable, unplaced, "seed {seed}: unplaceable count mismatch");
+    assert_eq!(
+        m.per_replica[target].requests, target_sessions,
+        "seed {seed}: drained replica request count drifted"
+    );
+    assert_eq!(
+        m.per_replica[target].completed, target_sessions,
+        "seed {seed}: drain dropped an active session"
+    );
+}
+
+#[test]
+fn drain_drops_no_waiters() {
+    sweep("drain_drops_no_waiters", run_drain_drops_no_waiters);
+}
+
+/// Killing a replica mid-decode fails only that replica's sessions —
+/// typed engine failures for in-flight work, typed rejections for its
+/// queue — while every other replica's sessions complete.
+fn run_kill_isolation(seed: u64) {
+    let mut rng = Rng::new(seed ^ 0xFA01_7150);
+    let n = fleet_size(&mut rng, 2, 3);
+    // Long generations with paced decode keep the victim's sessions in
+    // flight when the switch trips.
+    let mut router = spawn_fleet(n, 4, 800);
+    let groups = 1 + rng.below(2);
+    let prefixes = group_prefixes(&mut rng, groups);
+    let wave = 6 + rng.below(5);
+    let mut handles = Vec::new();
+    for i in 0..wave {
+        let g = rng.below(groups);
+        let prompt = prompt_from(&mut rng, &prefixes[g]);
+        let h = router.submit(GenRequest::new(i as u64, prompt, 32)).unwrap();
+        assert!(h.replica().is_some(), "seed {seed}: healthy fleet refused request {i}");
+        handles.push(h);
+    }
+    let victim = handles[0].replica().unwrap();
+    router.kill(victim).unwrap();
+    let after = 4 + rng.below(3);
+    for j in 0..after {
+        let g = rng.below(groups);
+        let prompt = prompt_from(&mut rng, &prefixes[g]);
+        let h = router.submit(GenRequest::new((wave + j) as u64, prompt, 4)).unwrap();
+        match h.replica() {
+            Some(r) => {
+                assert_ne!(r, victim, "seed {seed}: post-kill placement hit the dead replica")
+            }
+            None => assert_eq!(n, 1, "seed {seed}: router refused with live replicas"),
+        }
+        handles.push(h);
+    }
+    let mut done = 0usize;
+    let mut unplaced = 0usize;
+    let mut victim_failures = 0usize;
+    let mut victim_rejects = 0usize;
+    for h in &handles {
+        match (h.replica(), finish(h, seed)) {
+            // A victim session may legitimately finish before the kill.
+            (Some(_), Terminal::Done(_)) => done += 1,
+            (Some(r), Terminal::Engine(_)) => {
+                assert_eq!(r, victim, "seed {seed}: engine failure on a live replica");
+                victim_failures += 1;
+            }
+            (Some(r), Terminal::Rejected) => {
+                assert_eq!(r, victim, "seed {seed}: a live replica rejected its queue");
+                victim_rejects += 1;
+            }
+            (None, Terminal::Engine(msg)) => {
+                assert!(
+                    msg.contains("no placeable replica"),
+                    "seed {seed}: unexpected engine failure: {msg}"
+                );
+                unplaced += 1;
+            }
+            (None, other) => panic!("seed {seed}: unplaced stream produced {other:?}"),
+        }
+    }
+    for i in 0..n {
+        assert_eq!(router.inflight(i), 0, "seed {seed}: in-flight accounting leaked");
+    }
+    let m = router.shutdown().unwrap();
+    assert_eq!(
+        done + unplaced + victim_failures + victim_rejects,
+        handles.len(),
+        "seed {seed}: terminals do not cover submissions"
+    );
+    assert_eq!(m.replica_states[victim], ReplicaState::Dead, "seed {seed}: kill not sticky");
+    assert_eq!(m.live_replicas(), n - 1, "seed {seed}: live-replica count drifted");
+    assert_eq!(
+        m.live_replica_errors(),
+        0,
+        "seed {seed}: the fault leaked off the killed replica"
+    );
+    assert_eq!(
+        m.per_replica[victim].errors, victim_failures,
+        "seed {seed}: victim error accounting mismatch"
+    );
+    assert_eq!(m.dead_replica_errors(), victim_failures, "seed {seed}: dead-error rollup drifted");
+    assert_eq!(m.fleet.completed, done, "seed {seed}: fleet completion mismatch");
+    assert_eq!(m.fleet.rejected, victim_rejects, "seed {seed}: rejection accounting mismatch");
+}
+
+#[test]
+fn replica_kill_faults_only_the_killed_replica() {
+    sweep("replica_kill_faults_only_the_killed_replica", run_kill_isolation);
+}
